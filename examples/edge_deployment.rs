@@ -1,0 +1,107 @@
+//! Edge deployment scenario (paper §5.3): tuning a constrained device.
+//!
+//! A Raspberry-Pi-class device (Cortex-A72 profile) cannot afford hours
+//! of auto-scheduling; Ansor's remedy — RPC tuning from a host — still
+//! charges every candidate the RPC round-trip + on-device timing. This
+//! example plays out the paper's scenario for MobileNetV2:
+//!
+//! * Ansor over RPC: per-candidate upload + device time (RemoteSession),
+//! * transfer-tuning: sweep pre-tuned EfficientNetB4/MnasNet schedules,
+//!
+//! and prints the search-time gap, which §5.3 shows *widens* on edge
+//! (10.8x vs 6.5x on the server).
+//!
+//! ```bash
+//! cargo run --release --example edge_deployment
+//! ```
+
+use transfer_tuning::autosched::{random_schedule, tune_model, TuneOptions};
+use transfer_tuning::coordinator::RemoteSession;
+use transfer_tuning::device::{untuned_model_time, DeviceProfile};
+use transfer_tuning::models;
+use transfer_tuning::transfer::{transfer_tune_one_to_one, ScheduleStore};
+use transfer_tuning::util::rng::Rng;
+use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
+
+fn main() {
+    let edge = DeviceProfile::cortex_a72();
+    let target = models::mobilenet::mobilenet_v2();
+    let untuned = untuned_model_time(&target, &edge);
+    println!(
+        "target: {} on {} (untuned inference {})\n",
+        target.name,
+        edge.name,
+        fmt_duration(untuned)
+    );
+
+    // --- RPC session: what 200 Ansor candidates cost on-device ----------
+    let mut session = RemoteSession::new(edge.clone(), 9);
+    let mut rng = Rng::new(9);
+    let probe_kernel = &target.kernels[0];
+    for _ in 0..200 {
+        let sched = random_schedule(probe_kernel, &mut rng);
+        let _ = session.measure_remote(probe_kernel, &sched);
+    }
+    println!(
+        "RPC tuning session: {} candidates -> {} device time, {} transport, {} failures",
+        session.requests,
+        fmt_duration(session.device_seconds),
+        fmt_duration(session.transport_seconds),
+        session.failures
+    );
+    println!(
+        "  => {:.2} s per candidate over RPC (server-local would pay no transport)\n",
+        session.total_seconds() / session.requests as f64
+    );
+
+    // --- Full comparison: Ansor vs transfer-tuning on the edge ----------
+    let trials = std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500);
+    println!("tuning source models on-device ({trials} trials each) ...");
+    let opts = TuneOptions { trials, seed: 7, ..Default::default() };
+    let mut store = ScheduleStore::new();
+    for src in [models::efficientnet::b4(), models::mnasnet::mnasnet_1_0()] {
+        let res = tune_model(&src, &edge, &opts);
+        println!("  {}: search {}", src.name, fmt_duration(res.search_time_s));
+        store.add_tuning(&src, &res);
+    }
+
+    let ansor = tune_model(&target, &edge, &opts);
+    let tt = transfer_tune_one_to_one(&target, &store, "EfficientNetB4", &edge, 7);
+
+    let mut t = Table::new(
+        "MobileNetV2 on Cortex-A72: transfer-tuning vs Ansor",
+        &["Approach", "Search time", "Model time", "Speedup"],
+    );
+    t.row(vec![
+        "untuned".into(),
+        "-".into(),
+        fmt_duration(untuned),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "transfer-tuning (EfficientNetB4)".into(),
+        fmt_duration(tt.search_time_s()),
+        fmt_duration(tt.tuned_model_s),
+        fmt_speedup(tt.speedup()),
+    ]);
+    let ansor_time = ansor.final_model_time(&target, &edge);
+    t.row(vec![
+        format!("Ansor ({trials} trials)"),
+        fmt_duration(ansor.search_time_s),
+        fmt_duration(ansor_time),
+        fmt_speedup(untuned / ansor_time),
+    ]);
+    print!("{}", t.render());
+
+    match ansor.time_to_reach(tt.tuned_model_s) {
+        Some(s) => println!(
+            "\nAnsor needed {} to match transfer-tuning's speedup — {:.1}x transfer-tuning's search time.",
+            fmt_duration(s),
+            s / tt.search_time_s()
+        ),
+        None => println!(
+            "\nAnsor did not match transfer-tuning within {trials} trials ({} of search).",
+            fmt_duration(ansor.search_time_s)
+        ),
+    }
+}

@@ -1,0 +1,59 @@
+//! Mixed schedule pool (paper §5.5): more schedules ≠ better end-to-end.
+//!
+//! Makes *every* model's schedules available to each target and compares
+//! against the heuristic's one-to-one choice. The paper's surprising
+//! result — 7 of 11 models get *slower* despite strictly better
+//! standalone kernel times — reproduces here through the inter-kernel
+//! cache-boundary model (`device::interkernel`): standalone selection
+//! cannot see producer→consumer cache residency.
+//!
+//! ```bash
+//! cargo run --release --example schedule_pool
+//! ```
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
+
+fn main() {
+    let trials = std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |line| eprintln!("  {line}"),
+    );
+
+    let mut t = Table::new(
+        "One-to-one vs mixed pool (paper Fig 8)",
+        &["Model", "1:1 speedup", "Pool speedup", "1:1 search", "Pool search", "Pool pairs"],
+    );
+    let mut regressed = 0;
+    let mut total = 0;
+    let mut search_ratio = Vec::new();
+    for m in &zoo.models {
+        let Some(one) = zoo.transfer(m, None) else { continue };
+        let pool = zoo.transfer_pooled(m);
+        total += 1;
+        if pool.speedup() < one.speedup() {
+            regressed += 1;
+        }
+        search_ratio.push(pool.search_time_s() / one.search_time_s());
+        t.row(vec![
+            m.name.clone(),
+            fmt_speedup(one.speedup()),
+            fmt_speedup(pool.speedup()),
+            fmt_duration(one.search_time_s()),
+            fmt_duration(pool.search_time_s()),
+            pool.pairs_evaluated().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\n{regressed}/{total} models regressed under the pool (paper: 7/11); \
+         pool search time is {:.1}x one-to-one on average (paper: ~2x).",
+        transfer_tuning::util::stats::mean(&search_ratio)
+    );
+    println!(
+        "Why: selection is by standalone kernel time; the pool's 'better' kernels\n\
+         can have worse producer->consumer cache interactions (paper §5.5)."
+    );
+}

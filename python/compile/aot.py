@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path. Emits:
+
+* the paper's §4.1 GEMM experiment, executable: 512² and 1024² matmuls
+  under their native Algorithm-1 schedules, the *transferred* schedules
+  (each applied to the other's shape), and the naive baseline;
+* the L2 CNN model under a default and a transfer-tuned schedule;
+* ``manifest.json`` describing each artifact's inputs, so the Rust side
+  can build buffers without re-parsing HLO.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels.gemm import ALG1_1024, ALG1_512, NAIVE, GemmSchedule, tiled_matmul
+from .kernels.softmax import SoftmaxSchedule, row_softmax
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def gemm_artifacts() -> dict[str, tuple]:
+    """name -> (jitted fn, input specs, metadata)."""
+
+    def gemm_fn(schedule: GemmSchedule):
+        def fn(x, w):
+            return (tiled_matmul(x, w, schedule),)
+
+        return fn
+
+    out: dict[str, tuple] = {}
+    for size, native, transferred in (
+        (512, ALG1_512, ALG1_1024),
+        (1024, ALG1_1024, ALG1_512),
+    ):
+        variants = {
+            # Interpret-mode grid steps dominate cost; scale the naive
+            # blocks with the problem so the baseline stays runnable.
+            "naive": NAIVE if size <= 512 else GemmSchedule(bm=64, bn=64, bk=64),
+            "native": native,
+            "xfer": transferred,  # the other shape's schedule, reused
+        }
+        for vname, sched in variants.items():
+            name = f"gemm{size}_{vname}"
+            out[name] = (
+                gemm_fn(sched),
+                [f32(size, size), f32(size, size)],
+                {
+                    "kind": "gemm",
+                    "size": size,
+                    "schedule": {"bm": sched.bm, "bn": sched.bn, "bk": sched.bk},
+                    "vmem_bytes": sched.vmem_bytes(),
+                    "inputs": [[size, size], [size, size]],
+                },
+            )
+    return out
+
+
+def softmax_artifacts() -> dict[str, tuple]:
+    """Class-S kernel (BERT attention softmax), rows = 12 heads x 256."""
+
+    def fn(x):
+        return (row_softmax(x, SoftmaxSchedule(br=64)),)
+
+    rows, cols = 12 * 256, 256
+    return {
+        "softmax_bert": (
+            fn,
+            [f32(rows, cols)],
+            {
+                "kind": "softmax",
+                "schedule": {"br": 64},
+                "inputs": [[rows, cols]],
+            },
+        )
+    }
+
+
+def model_artifacts(batch: int = 1) -> dict[str, tuple]:
+    shapes = model_mod.param_shapes()
+    specs = [f32(batch, model_mod.IN_CH, model_mod.IMG, model_mod.IMG)] + [
+        f32(*s) for s in shapes.values()
+    ]
+    variants = {
+        # Default: tiny blocks (the untuned baseline).
+        "default": GemmSchedule(bm=8, bn=8, bk=9),
+        # Transfer-tuned: a large-M tiling reused from GEMM tuning
+        # (bk/bn clamped by the conv reduction extents 27/72 and widths 8/16).
+        "tuned": GemmSchedule(bm=256, bn=8, bk=9),
+    }
+    out: dict[str, tuple] = {}
+    for vname, sched in variants.items():
+        fn = functools.partial(model_mod.forward, schedule=sched)
+        out[f"model_{vname}"] = (
+            fn,
+            specs,
+            {
+                "kind": "model",
+                "batch": batch,
+                "schedule": {"bm": sched.bm, "bn": sched.bn, "bk": sched.bk},
+                "inputs": [list(s.shape) for s in specs],
+            },
+        )
+    return out
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    parser.add_argument(
+        "--skip-gemm-1024", action="store_true", help="faster builds for smoke tests"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    artifacts = {}
+    artifacts.update(gemm_artifacts())
+    artifacts.update(softmax_artifacts())
+    artifacts.update(model_artifacts())
+
+    manifest = {}
+    for name, (fn, specs, meta) in artifacts.items():
+        if args.skip_gemm_1024 and "1024" in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Convolution through the Pallas GEMM: im2col lowering.
+
+A ``conv2d_bias_relu`` kernel class (the paper's class E) built on the
+same schedule-parameterized GEMM as the standalone matmul experiment —
+so a GEMM schedule transfers to the convolutions of the L2 model, which
+is exactly the cross-kernel reuse the paper exploits.
+
+im2col runs in plain jnp/lax (data movement XLA fuses well); the MAC
+hot-spot is the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gemm import GemmSchedule, tiled_matmul
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """NCHW input -> (N*OH*OW, C*KH*KW) patch matrix.
+
+    Column order matches ``w.reshape(OC, C*KH*KW)``: channel-major, then
+    kh, then kw.
+    """
+    n = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*KH*KW, OH, OW)
+    ckk = patches.shape[1]
+    return patches.transpose(0, 2, 3, 1).reshape(n * patches.shape[2] * patches.shape[3], ckk)
+
+
+def conv2d_bias_relu(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    stride: int,
+    pad: int,
+    schedule: GemmSchedule,
+) -> jax.Array:
+    """Fused conv+bias+relu (kernel class E) via im2col + Pallas GEMM.
+
+    x: (N, C, H, W); w: (OC, C, KH, KW); b: (OC,) -> (N, OC, OH, OW).
+    """
+    n, c, h, wd = x.shape
+    oc, _, kh, kw = w.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    cols = im2col(x, kh, kw, stride, pad)  # (N*OH*OW, C*KH*KW)
+    wmat = w.reshape(oc, c * kh * kw).T  # (C*KH*KW, OC)
+    y = tiled_matmul(cols, wmat, schedule)  # (N*OH*OW, OC)
+    y = y + b[None, :]
+    y = jnp.maximum(y, 0.0)
+    return y.reshape(n, oh, ow, oc).transpose(0, 3, 1, 2)

@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: schedule-parameterized tiled GEMM.
+
+This is the paper's Algorithm-1 experiment made executable: a matmul
+whose *schedule* — the multi-level tiling Ansor searches over — is a
+parameter. On TPU terms (DESIGN.md §2 Hardware-Adaptation):
+
+* the schedule's ``Split`` factors become the ``BlockSpec`` block shapes
+  (the HBM↔VMEM staging plan),
+* ``Parallel`` becomes the Pallas grid,
+* ``Vectorize`` becomes lane-dimension alignment of the innermost block
+  axis.
+
+A schedule is stored *shape-relative* (block sizes only), so the
+schedule tuned for the 512x512 GEMM can be re-applied to the 1024x1024
+one — transfer-tuning. Legality mirrors the Rust engine
+(`sched::apply`): a block larger than the target extent is invalid
+(the paper's "-1" outcomes); a block that does not divide the extent is
+rejected too (Pallas blocks must tile exactly).
+
+Kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the
+Rust runtime loads and runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class ScheduleTransferError(ValueError):
+    """Applying a schedule to a shape it cannot tile (paper: invalid code)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSchedule:
+    """Shape-relative GEMM schedule: VMEM block sizes per axis.
+
+    ``bm``/``bn`` are the output tile (MXU-facing dims: keep multiples of
+    128 for full systolic occupancy on real TPUs); ``bk`` is the
+    reduction staging depth.
+    """
+
+    bm: int
+    bn: int
+    bk: int
+
+    def validate(self, m: int, k: int, n: int) -> None:
+        for name, block, extent in (
+            ("bm", self.bm, m),
+            ("bk", self.bk, k),
+            ("bn", self.bn, n),
+        ):
+            if block <= 0:
+                raise ScheduleTransferError(f"{name}={block} must be positive")
+            if block > extent:
+                # The paper's invalid case: Split factor larger than the loop.
+                raise ScheduleTransferError(
+                    f"{name}={block} exceeds extent {extent} (invalid code)"
+                )
+            if extent % block != 0:
+                raise ScheduleTransferError(
+                    f"{name}={block} does not divide extent {extent}"
+                )
+
+    def vmem_bytes(self, acc_dtype=jnp.float32) -> int:
+        """Per-grid-step VMEM footprint estimate (for DESIGN.md §7)."""
+        elem = 4 if acc_dtype == jnp.float32 else 2
+        return elem * (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn)
+
+
+# The paper's Algorithm-1 schedules, translated to block form
+# (see DESIGN.md §2): the 512-GEMM schedule tiles the output 128x128 and
+# streams the full K; the 1024-GEMM schedule uses a 32x256 cache buffer
+# with K staged in chunks of 256.
+ALG1_512 = GemmSchedule(bm=128, bn=128, bk=512)
+ALG1_1024 = GemmSchedule(bm=32, bn=256, bk=256)
+# "Naive" = smallest practical blocks. (On real hardware the paper's naive
+# baseline is an untiled scalar loop; in interpret mode tiny blocks play
+# that role — every grid step pays the full dispatch overhead.)
+NAIVE = GemmSchedule(bm=32, bn=32, bk=32)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Accumulating block matmul: grid = (M/bm, N/bn, K/bk)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("schedule",))
+def tiled_matmul(x: jax.Array, w: jax.Array, schedule: GemmSchedule) -> jax.Array:
+    """``x @ w`` through the schedule-parameterized Pallas kernel.
+
+    x: (M, K), w: (K, N) -> (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    schedule.validate(m, k, n)
+    grid = (m // schedule.bm, n // schedule.bn, k // schedule.bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((schedule.bm, schedule.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((schedule.bk, schedule.bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((schedule.bm, schedule.bn), lambda i, j, kk: (i, j)),
+        interpret=True,  # CPU-PJRT execution; real TPU would lower Mosaic
+    )(x, w)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None, schedule: GemmSchedule) -> jax.Array:
+    """Dense layer over the Pallas GEMM: ``x @ w.T + b``.
+
+    x: (M, K), w: (N, K) row-major weights (TVM's dense convention).
+    """
+    y = tiled_matmul(x, w.T, schedule)
+    if b is not None:
+        y = y + b[None, :]
+    return y

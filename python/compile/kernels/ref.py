@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+pytest compares every kernel against these references — this is the
+core numerical-correctness signal of the build path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    y = matmul_ref(x, w.T)
+    return y if b is None else y + b[None, :]
+
+
+def conv2d_bias_relu_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, stride: int, pad: int
+) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    y = y + b[None, :, None, None]
+    return jnp.maximum(y, 0.0)
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """(N, C, H, W) -> (N, C)."""
+    return x.mean(axis=(2, 3))

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: row-wise softmax (the transformers' class S).
+
+BERT/MobileBERT attention uses a `softmax` kernel over
+(heads*seq, seq) score matrices — the paper's class S. Schedule
+parameter: the row-block size `br` (how many rows one grid step stages
+through VMEM), the analogue of the Rust side's 2-level spatial split for
+`RowReduce` anchors. Shape-relative legality matches `sched::apply`:
+`br > rows` is invalid, `rows % br != 0` is invalid for Pallas blocks.
+
+Numerical care: the classic max-subtraction stabilization, computed
+per-row inside the block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import ScheduleTransferError
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxSchedule:
+    """Row-block size: rows staged per grid step (full row width always
+    resides in VMEM — softmax is a row reduction)."""
+
+    br: int
+
+    def validate(self, rows: int) -> None:
+        if self.br <= 0:
+            raise ScheduleTransferError(f"br={self.br} must be positive")
+        if self.br > rows:
+            raise ScheduleTransferError(f"br={self.br} exceeds rows {rows} (invalid code)")
+        if rows % self.br != 0:
+            raise ScheduleTransferError(f"br={self.br} does not divide rows {rows}")
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule",))
+def row_softmax(x: jax.Array, schedule: SoftmaxSchedule) -> jax.Array:
+    """Row-wise softmax over (rows, cols) through Pallas."""
+    rows, cols = x.shape
+    schedule.validate(rows)
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // schedule.br,),
+        in_specs=[pl.BlockSpec((schedule.br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((schedule.br, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)

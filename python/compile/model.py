@@ -1,0 +1,83 @@
+"""Layer-2 JAX model: a small CNN classifier whose MAC kernels are the
+schedule-parameterized Pallas GEMM.
+
+This is the end-to-end driver's model (examples/end_to_end.rs): a
+conv2d_bias_relu -> conv2d_bias_relu -> global_avg_pool -> dense_add
+graph — the same kernel classes (E, C, D) as the paper's Table 1 — that
+is AOT-lowered once per schedule variant and then served entirely from
+the Rust runtime.
+
+The whole forward pass is a function of (input, *params) so the Rust
+side can feed synthetic weights; inference *time* is what the paper
+studies and it is weight-value independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d_bias_relu
+from .kernels.gemm import GemmSchedule, dense
+from .kernels.ref import conv2d_bias_relu_ref, dense_ref, global_avg_pool_ref
+
+# Model hyper-parameters (kept small so interpret-mode Pallas is quick).
+IN_CH = 3
+IMG = 32
+C1 = 8
+C2 = 16
+NUM_CLASSES = 10
+
+
+def param_shapes() -> dict[str, tuple[int, ...]]:
+    """Parameter pytree shapes, in argument order after the input."""
+    return {
+        "w1": (C1, IN_CH, 3, 3),
+        "b1": (C1,),
+        "w2": (C2, C1, 3, 3),
+        "b2": (C2,),
+        "wd": (NUM_CLASSES, C2),
+        "bd": (NUM_CLASSES,),
+    }
+
+
+def init_params(seed: int = 0) -> dict[str, jax.Array]:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_shapes().items():
+        key, sub = jax.random.split(key)
+        scale = 0.1 if name.startswith("w") else 0.01
+        params[name] = scale * jax.random.normal(sub, shape, dtype=jnp.float32)
+    return params
+
+
+def forward(x, w1, b1, w2, b2, wd, bd, *, schedule: GemmSchedule):
+    """CNN forward through the Pallas kernels.
+
+    x: (N, 3, 32, 32) -> logits (N, 10). Returns a 1-tuple (the AOT
+    artifact convention: return_tuple=True and to_tuple1 on the Rust
+    side).
+    """
+    y = conv2d_bias_relu(x, w1, b1, stride=1, pad=1, schedule=schedule)  # (N,8,32,32)
+    y = conv2d_bias_relu(y, w2, b2, stride=2, pad=1, schedule=schedule)  # (N,16,16,16)
+    y = y.mean(axis=(2, 3))  # global average pool (class C)
+    y = dense(y, wd, bd, schedule=GemmSchedule(bm=1, bn=NUM_CLASSES, bk=C2))  # class D
+    return (y,)
+
+
+def forward_ref(x, w1, b1, w2, b2, wd, bd):
+    """Oracle forward in pure jnp/lax."""
+    y = conv2d_bias_relu_ref(x, w1, b1, stride=1, pad=1)
+    y = conv2d_bias_relu_ref(y, w2, b2, stride=2, pad=1)
+    y = global_avg_pool_ref(y)
+    y = dense_ref(y, wd, bd)
+    return (y,)
+
+
+def conv_gemm_dims(batch: int = 1) -> list[tuple[int, int, int]]:
+    """(M, K, N) of the two conv-as-GEMM calls — what a schedule must
+    tile. Layer 1: (N*32*32, 3*9, 8); layer 2: (N*16*16, 8*9, 16)."""
+    return [
+        (batch * IMG * IMG, IN_CH * 9, C1),
+        (batch * (IMG // 2) * (IMG // 2), C1 * 9, C2),
+    ]

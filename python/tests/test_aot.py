@@ -1,0 +1,60 @@
+"""AOT path: lowering produces loadable HLO text + a sane manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import f32, gemm_artifacts, model_artifacts, to_hlo_text
+from compile.kernels.gemm import GemmSchedule, tiled_matmul
+
+
+class TestLowering:
+    def test_hlo_text_structure(self):
+        def fn(x, w):
+            return (tiled_matmul(x, w, GemmSchedule(bm=16, bn=16, bk=16)),)
+
+        lowered = jax.jit(fn).lower(f32(32, 32), f32(32, 32))
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "f32[32,32]" in text
+        # return_tuple=True: the root is a tuple.
+        assert "tuple" in text and "->(f32[32,32]{1,0})" in text
+
+    def test_gemm_artifact_catalogue(self):
+        arts = gemm_artifacts()
+        # 2 sizes x 3 variants.
+        assert len(arts) == 6
+        for name in ("gemm512_native", "gemm512_xfer", "gemm1024_naive"):
+            assert name in arts
+        # The transferred schedule for 512 is the 1024-native one.
+        assert arts["gemm512_xfer"][2]["schedule"] == arts["gemm1024_native"][2]["schedule"]
+
+    def test_model_artifact_catalogue(self):
+        arts = model_artifacts()
+        assert set(arts) == {"model_default", "model_tuned"}
+        meta = arts["model_tuned"][2]
+        # Input 0 is the image; 6 parameter tensors follow.
+        assert len(meta["inputs"]) == 7
+        assert meta["inputs"][0] == [1, 3, 32, 32]
+
+    def test_cli_writes_artifacts(self, tmp_path):
+        out = tmp_path / "artifacts"
+        env = dict(os.environ)
+        res = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(out), "--skip-gemm-1024"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=600,
+        )
+        assert res.returncode == 0, res.stderr
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert "gemm512_native" in manifest
+        for name in manifest:
+            hlo = (out / f"{name}.hlo.txt").read_text()
+            assert hlo.startswith("HloModule"), name

@@ -1,0 +1,87 @@
+"""Conv-as-GEMM (im2col + Pallas) vs the lax.conv oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.conv2d import conv2d_bias_relu, im2col
+from compile.kernels.gemm import GemmSchedule
+from compile.kernels.ref import conv2d_bias_relu_ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def full_schedule(m, k, n):
+    """Single-block schedule (always legal for exact shapes)."""
+    return GemmSchedule(bm=m, bn=n, bk=k)
+
+
+class TestIm2col:
+    def test_identity_kernel_1x1(self):
+        x = rand(0, 1, 4, 5, 6)
+        cols = im2col(x, 1, 1, stride=1, pad=0)
+        assert cols.shape == (1 * 5 * 6, 4)
+        # 1x1 im2col is a transpose/reshape of the input.
+        expect = x.transpose(0, 2, 3, 1).reshape(-1, 4)
+        assert_allclose(np.asarray(cols), np.asarray(expect), rtol=1e-6)
+
+    def test_shapes_with_stride_and_pad(self):
+        x = rand(1, 2, 3, 8, 8)
+        cols = im2col(x, 3, 3, stride=2, pad=1)
+        # OH = OW = (8+2-3)/2+1 = 4.
+        assert cols.shape == (2 * 4 * 4, 3 * 9)
+
+
+class TestConvBiasRelu:
+    @pytest.mark.parametrize("stride,pad", [(1, 1), (2, 1), (1, 0)])
+    def test_matches_lax_conv(self, stride, pad):
+        x = rand(2, 1, 3, 16, 16)
+        w = rand(3, 8, 3, 3, 3)
+        b = rand(4, 8)
+        oh = (16 + 2 * pad - 3) // stride + 1
+        m = 1 * oh * oh
+        got = conv2d_bias_relu(x, w, b, stride, pad, full_schedule(m, 3 * 9, 8))
+        ref = conv2d_bias_relu_ref(x, w, b, stride, pad)
+        assert got.shape == ref.shape
+        assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+    def test_relu_clamps_negatives(self):
+        x = rand(5, 1, 2, 8, 8)
+        w = rand(6, 4, 2, 3, 3)
+        b = -10.0 * jnp.ones((4,), jnp.float32)  # drive everything negative
+        got = conv2d_bias_relu(x, w, b, 1, 1, full_schedule(64, 18, 4))
+        assert np.asarray(got).min() >= 0.0
+
+    def test_tiled_schedule_matches_full(self):
+        x = rand(7, 1, 3, 16, 16)
+        w = rand(8, 8, 3, 3, 3)
+        b = rand(9, 8)
+        full = conv2d_bias_relu(x, w, b, 1, 1, full_schedule(256, 27, 8))
+        tiled = conv2d_bias_relu(x, w, b, 1, 1, GemmSchedule(bm=64, bn=8, bk=9))
+        assert_allclose(np.asarray(tiled), np.asarray(full), rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    c=st.sampled_from([1, 2, 4]),
+    oc=st.sampled_from([2, 4, 8]),
+    hw=st.sampled_from([8, 12, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv(c, oc, hw, stride, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (1, c, hw, hw), dtype=jnp.float32)
+    w = jax.random.normal(k2, (oc, c, 3, 3), dtype=jnp.float32)
+    b = jax.random.normal(k3, (oc,), dtype=jnp.float32)
+    oh = (hw + 2 - 3) // stride + 1
+    got = conv2d_bias_relu(x, w, b, stride, 1, GemmSchedule(bm=oh * oh, bn=oc, bk=c * 9))
+    ref = conv2d_bias_relu_ref(x, w, b, stride, 1)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-3, atol=1e-3)

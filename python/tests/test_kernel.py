@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas tiled GEMM vs the pure-jnp oracle.
+
+Includes the paper's §4.1 legality/transfer semantics (native schedules,
+cross-applied schedules, invalid factor-exceeds-extent cases) and a
+hypothesis sweep over shapes/dtypes/block sizes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.gemm import (
+    ALG1_1024,
+    ALG1_512,
+    NAIVE,
+    GemmSchedule,
+    ScheduleTransferError,
+    dense,
+    tiled_matmul,
+)
+from compile.kernels.ref import dense_ref, matmul_ref
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestTiledMatmul:
+    def test_matches_ref_basic(self):
+        x, w = rand(0, 64, 32), rand(1, 32, 48)
+        got = tiled_matmul(x, w, GemmSchedule(bm=16, bn=16, bk=8))
+        assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=1e-4, atol=1e-4)
+
+    def test_single_block(self):
+        x, w = rand(2, 16, 16), rand(3, 16, 16)
+        got = tiled_matmul(x, w, GemmSchedule(bm=16, bn=16, bk=16))
+        assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=1e-4, atol=1e-4)
+
+    def test_alg1_schedules_on_native_shapes(self):
+        x, w = rand(4, 512, 512), rand(5, 512, 512)
+        got = tiled_matmul(x, w, ALG1_512)
+        assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=1e-3, atol=1e-3)
+
+    def test_transfer_512_schedule_to_1024(self):
+        # Paper §4.1: cross-applying the auto-schedules still produces
+        # valid, correct code.
+        x, w = rand(6, 1024, 256), rand(7, 256, 1024)
+        # bk=512 exceeds K=256 here -> adapt shape: use square 1024 for
+        # the real check below; this asserts the error path first.
+        with pytest.raises(ScheduleTransferError):
+            tiled_matmul(x, w, ALG1_512)
+
+    def test_transfer_both_directions_square(self):
+        x, w = rand(8, 1024, 1024), rand(9, 1024, 1024)
+        native = tiled_matmul(x, w, ALG1_1024)
+        transferred = tiled_matmul(x, w, ALG1_512)
+        ref = matmul_ref(x, w)
+        assert_allclose(np.asarray(native), np.asarray(ref), rtol=1e-3, atol=1e-3)
+        assert_allclose(np.asarray(transferred), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+        x2, w2 = rand(10, 512, 512), rand(11, 512, 512)
+        transferred2 = tiled_matmul(x2, w2, ALG1_1024)
+        assert_allclose(np.asarray(transferred2), np.asarray(matmul_ref(x2, w2)), rtol=1e-3, atol=1e-3)
+
+    def test_naive_schedule(self):
+        x, w = rand(12, 64, 64), rand(13, 64, 64)
+        got = tiled_matmul(x, w, NAIVE)
+        assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=1e-4, atol=1e-4)
+
+    def test_bf16_inputs_accumulate_f32(self):
+        x, w = rand(14, 64, 64, dtype=jnp.bfloat16), rand(15, 64, 64, dtype=jnp.bfloat16)
+        got = tiled_matmul(x, w, GemmSchedule(bm=32, bn=32, bk=32))
+        assert got.dtype == jnp.float32
+        assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, w)), rtol=3e-2, atol=1e-1)
+
+
+class TestScheduleLegality:
+    def test_block_exceeds_extent_invalid(self):
+        # The paper's invalid case: Split factor larger than the loop.
+        x, w = rand(16, 56, 56), rand(17, 56, 56)
+        with pytest.raises(ScheduleTransferError, match="exceeds extent"):
+            tiled_matmul(x, w, ALG1_512)
+
+    def test_non_dividing_block_invalid(self):
+        x, w = rand(18, 96, 96), rand(19, 96, 96)
+        with pytest.raises(ScheduleTransferError, match="does not divide"):
+            tiled_matmul(x, w, GemmSchedule(bm=64, bn=32, bk=32))
+
+    def test_zero_block_invalid(self):
+        with pytest.raises(ScheduleTransferError, match="positive"):
+            GemmSchedule(bm=0, bn=8, bk=8).validate(64, 64, 64)
+
+    def test_vmem_estimate(self):
+        # DESIGN.md §7: ALG1 schedules stay well under a 4 MiB VMEM-style
+        # budget per grid step.
+        assert ALG1_512.vmem_bytes() < 4 << 20
+        assert ALG1_1024.vmem_bytes() < 4 << 20
+
+
+class TestDense:
+    def test_dense_with_bias(self):
+        x, w, b = rand(20, 32, 64), rand(21, 16, 64), rand(22, 16)
+        got = dense(x, w, b, GemmSchedule(bm=8, bn=8, bk=16))
+        assert_allclose(np.asarray(got), np.asarray(dense_ref(x, w, b)), rtol=1e-4, atol=1e-4)
+
+    def test_dense_without_bias(self):
+        x, w = rand(23, 32, 64), rand(24, 16, 64)
+        got = dense(x, w, None, GemmSchedule(bm=8, bn=8, bk=16))
+        assert_allclose(np.asarray(got), np.asarray(dense_ref(x, w, None)), rtol=1e-4, atol=1e-4)
+
+
+# Hypothesis sweep: shapes as (multiplier x block) so tilings are legal;
+# blocks and dtypes vary. Deadline disabled: jit compilation on first
+# example can take seconds.
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    bm=st.sampled_from([4, 8, 16]),
+    bn=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    mm=st.integers(1, 4),
+    nm=st.integers(1, 4),
+    km=st.integers(1, 4),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_tiled_matmul(bm, bn, bk, mm, nm, km, dtype, seed):
+    m, n, k = bm * mm, bn * nm, bk * km
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(dtype)
+    x = jax.random.normal(k1, (m, k)).astype(dt)
+    w = jax.random.normal(k2, (k, n)).astype(dt)
+    got = tiled_matmul(x, w, GemmSchedule(bm=bm, bn=bn, bk=bk))
+    ref = matmul_ref(x, w)
+    rtol = 1e-5 if dtype == "float32" else 3e-2
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=rtol, atol=1e-2)

@@ -1,0 +1,68 @@
+"""Class-S Pallas softmax vs jax.nn.softmax, plus schedule-transfer
+semantics for the row-block parameter."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.gemm import ScheduleTransferError
+from compile.kernels.softmax import SoftmaxSchedule, row_softmax, softmax_ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+class TestRowSoftmax:
+    def test_matches_reference(self):
+        x = rand(0, 64, 128)
+        got = row_softmax(x, SoftmaxSchedule(br=8))
+        assert_allclose(np.asarray(got), np.asarray(softmax_ref(x)), rtol=1e-5, atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = rand(1, 32, 77)
+        got = np.asarray(row_softmax(x, SoftmaxSchedule(br=4)))
+        assert_allclose(got.sum(axis=-1), np.ones(32), rtol=1e-5)
+
+    def test_numerically_stable_for_large_logits(self):
+        x = 1e4 * rand(2, 16, 64)
+        got = np.asarray(row_softmax(x, SoftmaxSchedule(br=16)))
+        assert np.isfinite(got).all()
+        assert_allclose(got.sum(axis=-1), np.ones(16), rtol=1e-4)
+
+    def test_transfer_between_row_counts(self):
+        # A schedule tuned for 3072 rows (BERT-256: 12 heads x 256)
+        # transfers to 1536 rows (BERT-128) — the Fig 7 mechanism at L1.
+        sched = SoftmaxSchedule(br=64)
+        for rows in (3072, 1536):
+            x = rand(rows, rows, 128)
+            got = row_softmax(x, sched)
+            assert_allclose(np.asarray(got), np.asarray(softmax_ref(x)), rtol=1e-5, atol=1e-6)
+
+    def test_block_exceeding_rows_invalid(self):
+        x = rand(3, 32, 64)
+        with pytest.raises(ScheduleTransferError, match="exceeds"):
+            row_softmax(x, SoftmaxSchedule(br=64))
+
+    def test_non_dividing_block_invalid(self):
+        x = rand(4, 48, 64)
+        with pytest.raises(ScheduleTransferError, match="divide"):
+            row_softmax(x, SoftmaxSchedule(br=32))
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    br=st.sampled_from([1, 2, 4, 8]),
+    mult=st.integers(1, 6),
+    cols=st.sampled_from([16, 33, 64, 127]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_softmax(br, mult, cols, seed):
+    rows = br * mult
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols), dtype=jnp.float32)
+    got = row_softmax(x, SoftmaxSchedule(br=br))
+    assert_allclose(np.asarray(got), np.asarray(softmax_ref(x)), rtol=1e-5, atol=1e-6)

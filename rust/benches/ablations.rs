@@ -1,0 +1,123 @@
+//! Bench: ablations of the design choices DESIGN.md calls out.
+//!
+//! 1. **Eq. 1 exponents** — the paper squares the class proportion and
+//!    square-roots the schedule count "to avoid models with very high
+//!    numbers of schedules dominating". Compare against linear/linear.
+//! 2. **Pool sampling** (paper §4.4.2/§5.5 extension): full pool vs
+//!    random-k vs source-quality-k — speedup retained vs search time
+//!    saved.
+//! 3. **cache_write** — how much the local accumulation buffer
+//!    (Algorithm 1 line 22) matters for a large GEMM.
+
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::{simulate, untuned_kernel_times, DeviceProfile};
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::sched::{apply, Schedule};
+use transfer_tuning::transfer::{
+    class_proportions, sample_by_source_quality, sample_random, transfer_tune,
+};
+use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let device = DeviceProfile::xeon_e5_2620();
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: device.clone() },
+        |l| eprintln!("  {l}"),
+    );
+
+    // ---- 1. heuristic exponents ----------------------------------------
+    let mut h = Table::new(
+        "Ablation: Eq. 1 exponents (choice-1 per target)",
+        &["Target", "P^2*sqrt(W) (paper)", "P*W (linear)"],
+    );
+    for m in &zoo.models {
+        let props = class_proportions(m, &device);
+        let paper_choice = zoo.choices(m).first().map(|(n, _)| n.clone()).unwrap_or_default();
+        // Linear variant: P * W.
+        let mut linear: Vec<(String, f64)> = zoo
+            .store
+            .source_models()
+            .into_iter()
+            .filter(|s| s != &m.name)
+            .map(|s| {
+                let score: f64 = props
+                    .iter()
+                    .map(|(sig, p)| p * zoo.store.class_count(&s, sig) as f64)
+                    .sum();
+                (s, score)
+            })
+            .collect();
+        linear.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let linear_choice = linear.first().map(|(n, _)| n.clone()).unwrap_or_default();
+        h.row(vec![m.name.clone(), paper_choice, linear_choice]);
+    }
+    print!("{}", h.render());
+    h.write_csv(std::path::Path::new("results"), "ablation_heuristic").ok();
+    println!();
+
+    // ---- 2. pool sampling ------------------------------------------------
+    let mut p = Table::new(
+        "Ablation: mixed-pool sampling (paper §4.4.2 extension)",
+        &["Target", "Strategy", "Pairs", "Speedup", "Search time"],
+    );
+    for name in ["ResNet18", "GoogLeNet", "MobileNetV2"] {
+        let m = &zoo.models[zoo.model_index(name).unwrap()];
+        let full_pool = transfer_tuning::transfer::ScheduleStore {
+            records: zoo
+                .store
+                .records
+                .iter()
+                .filter(|r| r.source_model != m.name)
+                .cloned()
+                .collect(),
+        };
+        let variants: Vec<(&str, transfer_tuning::transfer::ScheduleStore)> = vec![
+            ("full pool", full_pool.clone()),
+            ("random k=8", sample_random(&full_pool, 8, 0xA45)),
+            ("quality k=8", sample_by_source_quality(&full_pool, 8)),
+        ];
+        for (label, store) in variants {
+            let res = transfer_tune(m, &store, &device, label, 0xA45);
+            p.row(vec![
+                m.name.clone(),
+                label.into(),
+                res.pairs_evaluated().to_string(),
+                fmt_speedup(res.speedup()),
+                fmt_duration(res.search_time_s()),
+            ]);
+        }
+    }
+    print!("{}", p.render());
+    p.write_csv(std::path::Path::new("results"), "ablation_sampling").ok();
+    println!();
+
+    // ---- 3. cache_write --------------------------------------------------
+    let mut cw = Table::new(
+        "Ablation: cache-write (Alg. 1 line 22) on a 1024^2 GEMM",
+        &["Variant", "Simulated time", "vs with"],
+    );
+    let mut g = ModelGraph::new("gemm1024");
+    g.push(KernelBuilder::dense(1024, 1024, 1024, &[]));
+    let res = tune_model(&g, &device, &TuneOptions { trials: 600, seed: 3, ..Default::default() });
+    let mut best = res.best[&0].schedule.clone();
+    best.cache_write = true;
+    let with_cw = simulate(&g.kernels[0], &apply(&best, &g.kernels[0]).unwrap(), &device).total_s;
+    best.cache_write = false;
+    let without = simulate(&g.kernels[0], &apply(&best, &g.kernels[0]).unwrap(), &device).total_s;
+    cw.row(vec!["with cache_write".into(), fmt_duration(with_cw), "1.00x".into()]);
+    cw.row(vec![
+        "without".into(),
+        fmt_duration(without),
+        format!("{:.2}x", without / with_cw),
+    ]);
+    print!("{}", cw.render());
+    cw.write_csv(std::path::Path::new("results"), "ablation_cachewrite").ok();
+
+    let _ = untuned_kernel_times(&g, &device);
+    let _ = Schedule::naive(&g.kernels[0]);
+    println!("\n[bench ablations] trials={trials} host_wall={:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,141 @@
+//! Bench: the paper's stated future-work directions, implemented as
+//! first-class features.
+//!
+//! 1. **Cross-device transfer** (§5.3: "explore if transfer-tuning is
+//!    viable between hardware platforms"): schedules tuned on the Xeon
+//!    applied to the Cortex-A72 target, vs natively-edge-tuned sources.
+//! 2. **CNN input-size transfer** (§5.4: fine-tuned models with a new
+//!    input size): ResNet18 at 224 -> ResNet18 at 192/160.
+//! 3. **Cross-class adaptation** (§4.2): E/G schedules adapted onto
+//!    ResNet18's uncovered class-F kernels.
+//! 4. **Pairwise-aware refinement** (§5.5: "evaluating kernels
+//!    pairwise"): in-context re-selection among near-best candidates.
+
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::models;
+use transfer_tuning::transfer::{
+    refine_pairwise, transfer_tune, transfer_tune_with, ScheduleStore, TransferOptions,
+};
+use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500);
+    let seed = 0xA45;
+    let t0 = std::time::Instant::now();
+    let server = DeviceProfile::xeon_e5_2620();
+    let edge = DeviceProfile::cortex_a72();
+    let opts = TuneOptions { trials, seed, ..Default::default() };
+
+    // ---- 1. cross-device transfer --------------------------------------
+    let src = models::resnet::resnet50();
+    eprintln!("tuning ResNet50 on server + edge ({trials} trials each) ...");
+    let mut server_store = ScheduleStore::new();
+    server_store.add_tuning(&src, &tune_model(&src, &server, &opts));
+    let mut edge_store = ScheduleStore::new();
+    edge_store.add_tuning(&src, &tune_model(&src, &edge, &opts));
+
+    let target = models::resnet::resnet18();
+    let cross_dev = transfer_tune(&target, &server_store, &edge, "ResNet50@server", seed);
+    let native_dev = transfer_tune(&target, &edge_store, &edge, "ResNet50@edge", seed);
+    let mut t1 = Table::new(
+        "Ext 1: cross-device transfer (target = ResNet18 on cortex-a72)",
+        &["Schedule source", "Speedup", "Search time"],
+    );
+    t1.row(vec![
+        "tuned on xeon-e5-2620 (cross-device)".into(),
+        fmt_speedup(cross_dev.speedup()),
+        fmt_duration(cross_dev.search_time_s()),
+    ]);
+    t1.row(vec![
+        "tuned on cortex-a72 (native)".into(),
+        fmt_speedup(native_dev.speedup()),
+        fmt_duration(native_dev.search_time_s()),
+    ]);
+    print!("{}", t1.render());
+    t1.write_csv(std::path::Path::new("results"), "ext_cross_device").ok();
+    println!();
+
+    // ---- 2. CNN input-size transfer ------------------------------------
+    eprintln!("tuning ResNet18-224 on server ...");
+    let rn224 = models::resnet::resnet18();
+    let mut store224 = ScheduleStore::new();
+    store224.add_tuning(&rn224, &tune_model(&rn224, &server, &opts));
+    let mut t2 = Table::new(
+        "Ext 2: input-size transfer (ResNet18-224 schedules -> smaller inputs)",
+        &["Target", "Speedup", "Search time", "Invalid pairs"],
+    );
+    for hw in [192u64, 160] {
+        let tgt = models::resnet::resnet18_hw(hw);
+        let res = transfer_tune(&tgt, &store224, &server, "ResNet18-224", seed);
+        t2.row(vec![
+            tgt.name.clone(),
+            fmt_speedup(res.speedup()),
+            fmt_duration(res.search_time_s()),
+            format!("{}/{}", res.invalid_pairs(), res.pairs_evaluated()),
+        ]);
+    }
+    print!("{}", t2.render());
+    t2.write_csv(std::path::Path::new("results"), "ext_input_size").ok();
+    println!();
+
+    // ---- 3. cross-class adaptation --------------------------------------
+    let plain = transfer_tune(&target, &server_store, &server, "ResNet50", seed);
+    let cross = transfer_tune_with(
+        &target,
+        &server_store,
+        &server,
+        "ResNet50",
+        seed,
+        &TransferOptions { cross_class: true },
+    );
+    let f_kernels = target.kernels_of_class("conv2d_bias_add_relu");
+    let covered = |r: &transfer_tuning::transfer::TransferResult| {
+        f_kernels.iter().filter(|&&k| r.sweeps[k].chosen.is_some()).count()
+    };
+    let mut t3 = Table::new(
+        "Ext 3: cross-class adaptation (ResNet18 <- ResNet50, class F uncovered in-paper)",
+        &["Mode", "Class-F kernels covered", "Speedup", "Pairs", "Search time"],
+    );
+    t3.row(vec![
+        "same-class only (paper)".into(),
+        format!("{}/{}", covered(&plain), f_kernels.len()),
+        fmt_speedup(plain.speedup()),
+        plain.pairs_evaluated().to_string(),
+        fmt_duration(plain.search_time_s()),
+    ]);
+    t3.row(vec![
+        "with E/G->F adaptation".into(),
+        format!("{}/{}", covered(&cross), f_kernels.len()),
+        fmt_speedup(cross.speedup()),
+        cross.pairs_evaluated().to_string(),
+        fmt_duration(cross.search_time_s()),
+    ]);
+    print!("{}", t3.render());
+    t3.write_csv(std::path::Path::new("results"), "ext_cross_class").ok();
+    println!();
+
+    // ---- 4. pairwise refinement ------------------------------------------
+    let refined = refine_pairwise(&target, &server_store, &plain, &server, 0.15);
+    let mut t4 = Table::new(
+        "Ext 4: pairwise-aware refinement (ResNet18 <- ResNet50)",
+        &["Stage", "Model time", "Improvement", "Extra measurements"],
+    );
+    t4.row(vec![
+        "standalone selection".into(),
+        fmt_duration(refined.baseline_model_s),
+        "1.00x".into(),
+        "0".into(),
+    ]);
+    t4.row(vec![
+        format!("pairwise refined ({} picks changed)", refined.changed),
+        fmt_duration(refined.refined_model_s),
+        format!("{:.3}x", refined.improvement()),
+        refined.extra_ledger.measurements.to_string(),
+    ]);
+    print!("{}", t4.render());
+    t4.write_csv(std::path::Path::new("results"), "ext_pairwise").ok();
+
+    println!("\n[bench extensions] trials={trials} host_wall={:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig 1 — Ansor max speedup + tuning time per model.
+//!
+//! `TT_TRIALS` scales the Ansor budget (default 2000; the paper's Fig 1
+//! uses 20000 — pass TT_TRIALS=20000 for the full reproduction).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |l| eprintln!("  {l}"),
+    );
+    let table = figures::fig1(&zoo);
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig1").ok();
+    println!(
+        "\n[bench fig1_ansor_full] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

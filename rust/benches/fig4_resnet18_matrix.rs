@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig 4 — ResNet18 kernels x ResNet50 schedules
+//! standalone sweep (including the invalid `-1` entries).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |l| eprintln!("  {l}"),
+    );
+    let table = figures::fig4(&zoo);
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig4").ok();
+    let invalid = table.rows.iter().filter(|r| r[3] == "-1").count();
+    println!(
+        "\n[bench fig4_resnet18_matrix] pairs={} invalid={} host_wall={:.1}s",
+        table.rows.len(),
+        invalid,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 5 — transfer-tuning vs Ansor on the server CPU
+//! (speedup at equal search time; search time for Ansor to match).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |l| eprintln!("  {l}"),
+    );
+    let table = figures::fig5(&zoo);
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig5").ok();
+    println!(
+        "\n[bench fig5_server] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

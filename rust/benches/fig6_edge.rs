@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 6 — transfer-tuning vs Ansor on the edge CPU
+//! (Cortex-A72 profile with RPC-measurement overheads).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::cortex_a72() },
+        |l| eprintln!("  {l}"),
+    );
+    let table = figures::fig5(&zoo); // same emitter; edge device selects Fig 6 framing
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig6").ok();
+    println!(
+        "\n[bench fig6_edge] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 7 — BERT/MobileBERT sequence-length transfer
+//! (128 <-> 256).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let config =
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() };
+    let table = figures::fig7(&config, |l| eprintln!("  {l}"));
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig7").ok();
+    println!(
+        "\n[bench fig7_seqlen] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig 8 — one-to-one vs mixed-pool transfer-tuning.
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |l| eprintln!("  {l}"),
+    );
+    let table = figures::fig8(&zoo);
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "fig8").ok();
+    println!(
+        "\n[bench fig8_pool] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,54 @@
+//! Bench: the §4.1 GEMM experiment on *real* PJRT executions — wall-clock
+//! of the native / transferred / naive schedule artifacts.
+//!
+//! Needs `make artifacts`; prints a skip note otherwise so `cargo bench`
+//! works on a fresh clone.
+
+use transfer_tuning::runtime::{artifacts_dir, Runtime};
+use transfer_tuning::util::rng::Rng;
+use transfer_tuning::util::table::Table;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[bench gemm_pjrt] skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let mut rng = Rng::new(42);
+    let mut table = Table::new(
+        "GEMM schedules on PJRT (real wall-clock)",
+        &["Artifact", "Time/call (ms)", "vs native"],
+    );
+    let t0 = std::time::Instant::now();
+    for size in [512usize, 1024] {
+        let x: Vec<f32> = (0..size * size).map(|_| rng.f64() as f32 - 0.5).collect();
+        let w: Vec<f32> = (0..size * size).map(|_| rng.f64() as f32 - 0.5).collect();
+        let shape = [size as i64, size as i64];
+        let mut native = 0.0f64;
+        for variant in ["native", "xfer", "naive"] {
+            let kernel = rt
+                .load_hlo_text(&dir.join(format!("gemm{size}_{variant}.hlo.txt")))
+                .expect("artifact loads");
+            let (warmup, iters) = match (variant, size) {
+                ("naive", _) => (0, 1),
+                (_, 512) => (2, 9),
+                _ => (1, 3),
+            };
+            let t = kernel
+                .bench_f32(&[(&x, &shape), (&w, &shape)], warmup, iters)
+                .expect("bench runs");
+            if variant == "native" {
+                native = t;
+            }
+            table.row(vec![
+                format!("gemm{size}_{variant}"),
+                format!("{:.2}", t * 1e3),
+                format!("{:+.1}%", (t / native - 1.0) * 100.0),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "gemm_pjrt").ok();
+    println!("\n[bench gemm_pjrt] host_wall={:.1}s", t0.elapsed().as_secs_f64());
+}

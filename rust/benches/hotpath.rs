@@ -1,0 +1,114 @@
+//! Bench: the L3 hot paths — what the performance pass optimizes.
+//!
+//! Times the three inner loops that dominate every experiment:
+//! schedule application, the cost simulator, and the learned cost model
+//! (feature extraction + GBDT train/predict). Prints ops/second so
+//! before/after comparisons in EXPERIMENTS.md §Perf are one-liners.
+
+use std::time::Instant;
+use transfer_tuning::autosched::{features, random_schedule, CostModel, GbdtParams, NUM_FEATURES};
+use transfer_tuning::device::{simulate_with, DeviceProfile, SimScratch};
+use transfer_tuning::ir::KernelBuilder;
+use transfer_tuning::sched::apply;
+use transfer_tuning::util::rng::Rng;
+use transfer_tuning::util::table::Table;
+
+fn rate(n: usize, secs: f64) -> String {
+    format!("{:.2} M/s", n as f64 / secs / 1e6)
+}
+
+fn main() {
+    let profile = DeviceProfile::xeon_e5_2620();
+    let mut rng = Rng::new(7);
+    let kernels = [
+        KernelBuilder::dense(512, 512, 512, &[]),
+        KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[transfer_tuning::ir::OpKind::BiasAdd, transfer_tuning::ir::OpKind::Relu]),
+        KernelBuilder::batch_matmul(12, 256, 64, 256, &[]),
+    ];
+    let scheds: Vec<_> = (0..128)
+        .map(|i| {
+            let k = &kernels[i % kernels.len()];
+            (i % kernels.len(), random_schedule(k, &mut rng))
+        })
+        .collect();
+
+    let mut table = Table::new("L3 hot-path microbenches", &["Path", "Iterations", "Time", "Rate"]);
+
+    // 1. apply()
+    let n = 200_000;
+    let t0 = Instant::now();
+    let mut ok = 0usize;
+    for i in 0..n {
+        let (ki, s) = &scheds[i % scheds.len()];
+        if apply(s, &kernels[*ki]).is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec!["sched::apply".into(), n.to_string(), format!("{dt:.2}s"), rate(n, dt)]);
+    assert!(ok > 0);
+
+    // 2. simulate() with reused scratch (the measurement hot loop)
+    let nests: Vec<_> = scheds
+        .iter()
+        .filter_map(|(ki, s)| apply(s, &kernels[*ki]).ok().map(|nst| (*ki, nst)))
+        .collect();
+    let n = 200_000;
+    let mut scratch = SimScratch::default();
+    let t0 = Instant::now();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let (ki, nest) = &nests[i % nests.len()];
+        acc += simulate_with(&kernels[*ki], nest, &profile, &mut scratch).total_s;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec!["device::simulate".into(), n.to_string(), format!("{dt:.2}s"), rate(n, dt)]);
+    assert!(acc > 0.0);
+
+    // 3. feature extraction
+    let n = 200_000;
+    let t0 = Instant::now();
+    let mut sum = 0.0;
+    for i in 0..n {
+        let (ki, nest) = &nests[i % nests.len()];
+        sum += features(&kernels[*ki], nest, &profile)[0];
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec!["autosched::features".into(), n.to_string(), format!("{dt:.2}s"), rate(n, dt)]);
+    assert!(sum.is_finite());
+
+    // 4. GBDT train + predict
+    let xs: Vec<[f64; NUM_FEATURES]> = (0..512)
+        .map(|i| {
+            let (ki, nest) = &nests[i % nests.len()];
+            features(&kernels[*ki], nest, &profile)
+        })
+        .collect();
+    let ys: Vec<f64> = (0..512).map(|i| (i % 17) as f64).collect();
+    let t0 = Instant::now();
+    let rounds = 50;
+    let mut model = CostModel::default();
+    for _ in 0..rounds {
+        model = CostModel::train(&xs, &ys, &GbdtParams::default());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "gbdt::train(512)".into(),
+        rounds.to_string(),
+        format!("{dt:.2}s"),
+        format!("{:.1} ms/round", dt * 1e3 / rounds as f64),
+    ]);
+
+    let n = 500_000;
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += model.predict(&xs[i % xs.len()]);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    table.row(vec!["gbdt::predict".into(), n.to_string(), format!("{dt:.2}s"), rate(n, dt)]);
+    assert!(acc.is_finite());
+
+    print!("{}", table.render());
+    table.write_csv(std::path::Path::new("results"), "hotpath").ok();
+}

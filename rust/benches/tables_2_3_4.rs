@@ -1,0 +1,29 @@
+//! Bench: regenerate Tables 2, 3 and 4 (kernel classes + heuristic
+//! choices; top-3 choice speedups; TT vs full-Ansor percentages).
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{tables, ExperimentConfig, Zoo};
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let zoo = Zoo::build(
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        |l| eprintln!("  {l}"),
+    );
+    for (table, slug) in [
+        (tables::table2(&zoo), "table2"),
+        (tables::table3(&zoo), "table3"),
+        (tables::table4(&zoo), "table4"),
+    ] {
+        print!("{}", table.render());
+        table.write_csv(std::path::Path::new("results"), slug).ok();
+        println!();
+    }
+    println!(
+        "[bench tables_2_3_4] trials={} host_wall={:.1}s",
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,292 @@
+//! Learned cost model: gradient-boosted regression trees.
+//!
+//! Ansor uses XGBoost over loop-nest features; we implement a compact
+//! GBDT from scratch (offline environment). The model predicts
+//! log-throughput from [`super::features`] vectors and is retrained from
+//! scratch on the measured samples after every measurement batch, just
+//! like Ansor's per-round update. What matters for search quality is
+//! *ranking* fidelity (Spearman), which the tests check.
+
+use super::features::NUM_FEATURES;
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// Split feature, or usize::MAX for a leaf.
+    feature: usize,
+    threshold: f64,
+    /// Children indices (valid when not leaf).
+    left: usize,
+    right: usize,
+    /// Leaf value (valid when leaf).
+    value: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64; NUM_FEATURES]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.feature == usize::MAX {
+                return n.value;
+            }
+            i = if x[n.feature] <= n.threshold { n.left } else { n.right };
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GbdtParams {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f64,
+    pub min_samples_leaf: usize,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams { n_trees: 30, max_depth: 4, learning_rate: 0.3, min_samples_leaf: 4 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CostModel {
+    trees: Vec<Tree>,
+    base: f64,
+    lr: f64,
+    pub n_trained_samples: usize,
+}
+
+impl CostModel {
+    /// Untrained model: predicts the prior (0) for everything. The tuner
+    /// treats an untrained model as "explore randomly".
+    pub fn is_trained(&self) -> bool {
+        !self.trees.is_empty()
+    }
+
+    /// Fit on (features, target) pairs. Targets are log-throughput
+    /// (higher = better schedule).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): feature orders are pre-sorted
+    /// ONCE per training call; tree nodes walk the presorted lists with a
+    /// membership mask instead of re-sorting — O(n·F) per node instead of
+    /// O(n log n · F).
+    pub fn train(xs: &[[f64; NUM_FEATURES]], ys: &[f64], params: &GbdtParams) -> CostModel {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return CostModel::default();
+        }
+        let n = xs.len();
+        let base = ys.iter().sum::<f64>() / n as f64;
+        let mut residuals: Vec<f64> = ys.iter().map(|y| y - base).collect();
+
+        // Presort sample indices along every feature (shared by all trees
+        // and all nodes).
+        let mut orders: Vec<Vec<u32>> = Vec::with_capacity(NUM_FEATURES);
+        for f in 0..NUM_FEATURES {
+            let mut ord: Vec<u32> = (0..n as u32).collect();
+            ord.sort_by(|&a, &b| {
+                xs[a as usize][f].partial_cmp(&xs[b as usize][f]).unwrap()
+            });
+            orders.push(ord);
+        }
+
+        let mut trees = Vec::with_capacity(params.n_trees);
+        let mut member = vec![true; n];
+        for _ in 0..params.n_trees {
+            let mut tree = Tree::default();
+            member.fill(true);
+            build_node(
+                &mut tree,
+                xs,
+                &residuals,
+                &orders,
+                &mut member,
+                n,
+                params.max_depth,
+                params.min_samples_leaf,
+            );
+            // Update residuals.
+            for (i, x) in xs.iter().enumerate() {
+                residuals[i] -= params.learning_rate * tree.predict(x);
+            }
+            trees.push(tree);
+        }
+        CostModel { trees, base, lr: params.learning_rate, n_trained_samples: n }
+    }
+
+    pub fn predict(&self, x: &[f64; NUM_FEATURES]) -> f64 {
+        let mut y = self.base;
+        for t in &self.trees {
+            y += self.lr * t.predict(x);
+        }
+        y
+    }
+}
+
+/// Greedy exact split search over presorted feature orders, squared-error
+/// criterion. `member[i]` marks which samples belong to this node; the
+/// function restores `member` to its entry state before returning (so the
+/// caller's sibling recursion sees the right mask).
+#[allow(clippy::too_many_arguments)]
+fn build_node(
+    tree: &mut Tree,
+    xs: &[[f64; NUM_FEATURES]],
+    residuals: &[f64],
+    orders: &[Vec<u32>],
+    member: &mut [bool],
+    count: usize,
+    depth: usize,
+    min_leaf: usize,
+) -> usize {
+    let sum: f64 = orders[0]
+        .iter()
+        .filter(|&&i| member[i as usize])
+        .map(|&i| residuals[i as usize])
+        .sum();
+    let mean = sum / count.max(1) as f64;
+    if depth == 0 || count < 2 * min_leaf {
+        tree.nodes.push(Node { feature: usize::MAX, threshold: 0.0, left: 0, right: 0, value: mean });
+        return tree.nodes.len() - 1;
+    }
+
+    // Find best (feature, threshold) by walking each presorted order.
+    let n = count as f64;
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, gain)
+    for (feat, order) in orders.iter().enumerate() {
+        let mut left_sum = 0.0;
+        let mut nl = 0usize;
+        let mut prev: Option<u32> = None;
+        for &i in order {
+            if !member[i as usize] {
+                continue;
+            }
+            // A split boundary sits between `prev` and `i`.
+            if let Some(p) = prev {
+                let (pv, iv) = (xs[p as usize][feat], xs[i as usize][feat]);
+                if pv < iv && nl >= min_leaf && count - nl >= min_leaf {
+                    let right_sum = sum - left_sum;
+                    let nr = n - nl as f64;
+                    let gain = left_sum * left_sum / nl as f64 + right_sum * right_sum / nr
+                        - sum * sum / n;
+                    if best.map(|(_, _, g)| gain > g).unwrap_or(gain > 1e-12) {
+                        best = Some((feat, 0.5 * (pv + iv), gain));
+                    }
+                }
+            }
+            left_sum += residuals[i as usize];
+            nl += 1;
+            prev = Some(i);
+        }
+    }
+
+    let Some((feature, threshold, _)) = best else {
+        tree.nodes.push(Node { feature: usize::MAX, threshold: 0.0, left: 0, right: 0, value: mean });
+        return tree.nodes.len() - 1;
+    };
+
+    // Reserve our slot first so children indices are stable.
+    tree.nodes.push(Node { feature, threshold, left: 0, right: 0, value: 0.0 });
+    let me = tree.nodes.len() - 1;
+
+    // Partition by masking: left recursion sees only left members, then
+    // the mask flips to the right side, and is finally restored.
+    let node_members: Vec<u32> = orders[0]
+        .iter()
+        .copied()
+        .filter(|&i| member[i as usize])
+        .collect();
+    let mut left_count = 0usize;
+    for &i in &node_members {
+        if xs[i as usize][feature] <= threshold {
+            left_count += 1;
+        } else {
+            member[i as usize] = false;
+        }
+    }
+    let l = build_node(tree, xs, residuals, orders, member, left_count, depth - 1, min_leaf);
+    for &i in &node_members {
+        member[i as usize] = xs[i as usize][feature] > threshold;
+    }
+    let r = build_node(
+        tree,
+        xs,
+        residuals,
+        orders,
+        member,
+        count - left_count,
+        depth - 1,
+        min_leaf,
+    );
+    // Restore the full node membership for the caller.
+    for &i in &node_members {
+        member[i as usize] = true;
+    }
+    tree.nodes[me].left = l;
+    tree.nodes[me].right = r;
+    me
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::spearman;
+
+    fn synth(n: usize, seed: u64) -> (Vec<[f64; NUM_FEATURES]>, Vec<f64>) {
+        // Nonlinear synthetic target over a few features + noise.
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut x = [0.0; NUM_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.f64() * 10.0;
+            }
+            let y = 3.0 * x[2] + (x[6] - 5.0).abs() * -2.0 + x[4] * x[2] * 0.3 + rng.normal() * 0.5;
+            xs.push(x);
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_nonlinear_ranking() {
+        let (xs, ys) = synth(400, 1);
+        let model = CostModel::train(&xs, &ys, &GbdtParams::default());
+        let (xt, yt) = synth(200, 2);
+        let preds: Vec<f64> = xt.iter().map(|x| model.predict(x)).collect();
+        let rho = spearman(&preds, &yt);
+        assert!(rho > 0.8, "spearman {rho}");
+    }
+
+    #[test]
+    fn empty_training_is_safe() {
+        let m = CostModel::train(&[], &[], &GbdtParams::default());
+        assert!(!m.is_trained());
+        assert_eq!(m.predict(&[0.0; NUM_FEATURES]), 0.0);
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let xs: Vec<[f64; NUM_FEATURES]> = (0..50).map(|i| [i as f64; NUM_FEATURES]).collect();
+        let ys = vec![7.0; 50];
+        let m = CostModel::train(&xs, &ys, &GbdtParams::default());
+        assert!((m.predict(&[25.0; NUM_FEATURES]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improves_with_more_trees() {
+        let (xs, ys) = synth(300, 3);
+        let weak = CostModel::train(&xs, &ys, &GbdtParams { n_trees: 2, ..Default::default() });
+        let strong = CostModel::train(&xs, &ys, &GbdtParams { n_trees: 40, ..Default::default() });
+        let mse = |m: &CostModel| -> f64 {
+            xs.iter().zip(&ys).map(|(x, y)| (m.predict(x) - y).powi(2)).sum::<f64>() / ys.len() as f64
+        };
+        assert!(mse(&strong) < mse(&weak));
+    }
+}

@@ -1,0 +1,142 @@
+//! Structural feature extraction for the learned cost model.
+//!
+//! Ansor featurizes the lowered loop nest per innermost statement
+//! (touched bytes per cache level, vectorization, parallelism, ...). We
+//! extract the analogous quantities from the scheduled nest. Everything
+//! here is *structural* — the cost model never sees the simulator's
+//! traffic analysis, it must learn the mapping from these features to
+//! measured time, imperfectly, like a real learned cost model.
+
+use crate::device::DeviceProfile;
+use crate::ir::Kernel;
+use crate::sched::{Ann, ScheduledNest};
+
+pub const NUM_FEATURES: usize = 18;
+
+fn log2p(x: f64) -> f64 {
+    (x.max(1e-12)).log2()
+}
+
+/// Extract the feature vector for one scheduled kernel.
+pub fn features(kernel: &Kernel, nest: &ScheduledNest, profile: &DeviceProfile) -> [f64; NUM_FEATURES] {
+    let ln = &kernel.nest;
+    let mut f = [0.0f64; NUM_FEATURES];
+
+    let flops = ln.flops();
+    f[0] = log2p(flops);
+    f[1] = log2p(ln.output_points());
+
+    // Vector / parallel structure.
+    let lanes = profile.simd_lanes_f32() as f64;
+    let ve = nest.vector_extent() as f64;
+    f[2] = if ve > 1.0 { ve / ((ve / lanes).ceil() * lanes) } else { 0.0 };
+    f[3] = log2p(ve);
+    let pe = nest.parallel_extent() as f64;
+    f[4] = log2p(pe / profile.cores as f64);
+    f[5] = if pe > 1.0 {
+        pe / ((pe / profile.cores as f64).ceil() * profile.cores as f64)
+    } else {
+        0.0
+    };
+
+    // Tile working sets at two inner scopes vs the cache sizes.
+    // Reconstruct per-axis inner extents from the innermost `take` loops.
+    let mut tile = vec![1u64; ln.axes.len()];
+    let mut ws_inner = 0.0; // working set inside the innermost 3 loops
+    let mut ws_mid = 0.0; // inside the innermost 6 loops
+    for (i, l) in nest.loops.iter().rev().enumerate() {
+        tile[l.axis] = tile[l.axis].saturating_mul(l.extent.max(1));
+        if i + 1 == 3.min(nest.loops.len()) {
+            ws_inner = ln.buffers.iter().map(|b| b.footprint_bytes(&tile) as f64).sum();
+        }
+        if i + 1 == 6.min(nest.loops.len()) {
+            ws_mid = ln.buffers.iter().map(|b| b.footprint_bytes(&tile) as f64).sum();
+        }
+    }
+    let full_ws: f64 = ln.total_data_bytes() as f64;
+    if ws_inner == 0.0 {
+        ws_inner = full_ws;
+    }
+    if ws_mid == 0.0 {
+        ws_mid = full_ws;
+    }
+    let l1 = profile.caches.first().map(|c| c.bytes as f64).unwrap_or(32e3);
+    let llc = profile.caches.last().map(|c| c.bytes as f64).unwrap_or(1e6);
+    f[6] = log2p(ws_inner / l1);
+    f[7] = log2p(ws_mid / llc);
+    f[8] = log2p(full_ws);
+
+    // Arithmetic intensity (flops per byte touched once).
+    f[9] = log2p(flops / full_ws.max(1.0));
+
+    // Unroll volume.
+    let unrolled: f64 = nest
+        .loops
+        .iter()
+        .filter(|l| l.ann == Ann::Unroll)
+        .map(|l| l.extent.max(1) as f64)
+        .product();
+    f[10] = log2p(unrolled);
+    f[11] = if nest.cache_write { 1.0 } else { 0.0 };
+    f[12] = nest.waste;
+    f[13] = nest.loops.len() as f64;
+
+    // Innermost contiguity of each non-output buffer's last dim (mean of
+    // logs) — proxy for cache-line utilization.
+    let mut contig_sum = 0.0;
+    let mut nb = 0.0;
+    for b in &ln.buffers {
+        if let Some(d) = b.dims.last() {
+            contig_sum += log2p(d.range_size(&tile) as f64);
+            nb += 1.0;
+        }
+    }
+    f[14] = if nb > 0.0 { contig_sum / nb } else { 0.0 };
+
+    // Reduction structure: extent of reduction work inside the innermost
+    // spatial tile, and whether reductions sit outside the vector loop.
+    let red_inner: f64 = kernel
+        .nest
+        .reduction_axes()
+        .map(|(i, _)| tile[i] as f64)
+        .product();
+    f[15] = log2p(red_inner);
+    f[16] = nest
+        .loops
+        .iter()
+        .position(|l| l.ann == Ann::Vectorize)
+        .map(|p| (nest.loops.len() - 1 - p) as f64)
+        .unwrap_or(-1.0);
+    f[17] = log2p(ln.epilogue_ops + 1.0);
+
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+    use crate::sched::{apply, Schedule};
+
+    #[test]
+    fn features_finite_and_distinct() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let naive = apply(&Schedule::naive(&k), &k).unwrap();
+        let tuned = apply(&Schedule::untuned_default(&k), &k).unwrap();
+        let fa = features(&k, &naive, &prof);
+        let fb = features(&k, &tuned, &prof);
+        assert!(fa.iter().all(|x| x.is_finite()));
+        assert!(fb.iter().all(|x| x.is_finite()));
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn vector_feature_tracks_annotation() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let tuned = apply(&Schedule::untuned_default(&k), &k).unwrap();
+        let f = features(&k, &tuned, &prof);
+        assert!(f[2] > 0.9, "vector utilization feature {}", f[2]);
+    }
+}

@@ -1,0 +1,19 @@
+//! The Ansor-like auto-scheduler baseline (Zheng et al., OSDI 2020).
+//!
+//! This is the system the paper *compares against* (and the producer of
+//! the auto-schedules that transfer-tuning reuses): sketch generation
+//! over the CPU multi-level tiling space, evolutionary search guided by
+//! a learned (GBDT) cost model, and a gradient task scheduler slicing
+//! the trial budget across kernels. Every measurement charges simulated
+//! tuning seconds to a ledger, which is what all the paper's
+//! search-time comparisons consume.
+
+pub mod costmodel;
+pub mod features;
+pub mod sketch;
+pub mod tuner;
+
+pub use costmodel::{CostModel, GbdtParams};
+pub use features::{features, NUM_FEATURES};
+pub use sketch::{crossover, mutate, random_schedule, sketch_shape};
+pub use tuner::{tune_model, HistoryPoint, KernelBest, TuneOptions, TuningResult};

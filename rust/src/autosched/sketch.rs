@@ -1,0 +1,213 @@
+//! Sketch generation + mutation/crossover operators: Ansor's search space.
+//!
+//! Ansor derives a small set of structural *sketches* per kernel (on CPU,
+//! the multi-level "SSRSRS" tile structure, optional cache-write stage)
+//! and then samples/evolves the numeric decisions: split factors,
+//! annotation choices, unroll budgets. We mirror that: the sketch level
+//! count is fixed per anchor kind, everything numeric is sampled.
+
+use crate::ir::{AnchorKind, Kernel};
+use crate::sched::{AxisTiling, Schedule};
+use crate::util::rng::Rng;
+
+/// (spatial inner-factor count, reduction inner-factor count) per anchor.
+/// Heavy MAC kernels get the full 4-level spatial / 2-level reduction
+/// structure of the paper's Algorithm 1; cheap kernels get a 2-level
+/// spatial split (parallel outer + vector inner).
+pub fn sketch_shape(anchor: AnchorKind) -> (usize, usize) {
+    match anchor {
+        AnchorKind::Conv2d | AnchorKind::Depthwise | AnchorKind::Dense | AnchorKind::BatchMatMul => (3, 1),
+        AnchorKind::Pool2d | AnchorKind::GlobalPool | AnchorKind::RowReduce => (1, 0),
+        AnchorKind::Eltwise => (1, 0),
+    }
+}
+
+const UNROLL_CHOICES: &[u64] = &[0, 16, 64, 512];
+
+/// Candidate tile factors: powers of two (transfer well across the
+/// power-of-two channel counts of real DNNs) plus true divisors of the
+/// extent (fit perfectly but may not transfer).
+fn sample_factor(extent: u64, max: u64, rng: &mut Rng) -> u64 {
+    let cap = extent.min(max).max(1);
+    if rng.bool(0.7) {
+        // Power of two <= cap.
+        let max_pow = 63 - cap.leading_zeros() as u64;
+        1u64 << rng.range(0, max_pow as usize)
+    } else {
+        // Random divisor of the extent <= cap.
+        let divs: Vec<u64> = (1..=cap).filter(|d| extent % d == 0).collect();
+        *rng.choose(&divs)
+    }
+}
+
+fn sample_tiling(extent: u64, n_factors: usize, rng: &mut Rng) -> AxisTiling {
+    let mut factors = Vec::with_capacity(n_factors);
+    let mut budget = extent.max(1);
+    for i in 0..n_factors {
+        // Innermost factor (sampled last) gets the biggest range; outer
+        // inner-factors stay small (they become register/L1 tile shape).
+        let max = if i + 1 == n_factors { 64 } else { 4 };
+        let f = sample_factor(budget, max, rng).min(budget);
+        factors.push(f);
+        budget = (budget / f).max(1);
+    }
+    AxisTiling { factors }
+}
+
+/// Sample a random complete schedule for `kernel`.
+pub fn random_schedule(kernel: &Kernel, rng: &mut Rng) -> Schedule {
+    let (ns, nr) = sketch_shape(kernel.anchor);
+    let spatial = kernel
+        .nest
+        .spatial_axes()
+        .map(|(_, a)| sample_tiling(a.extent, ns, rng))
+        .collect();
+    let reduction = kernel
+        .nest
+        .reduction_axes()
+        .map(|(_, a)| sample_tiling(a.extent, nr, rng))
+        .collect();
+    Schedule {
+        class_sig: kernel.class_signature(),
+        skeleton: kernel.nest.skeleton(),
+        spatial,
+        reduction,
+        parallel_levels: if rng.bool(0.25) && ns >= 2 { 2 } else { 1 },
+        vectorize: rng.bool(0.85),
+        unroll_max: *rng.choose(UNROLL_CHOICES),
+        cache_write: rng.bool(0.4),
+    }
+}
+
+/// Mutate one decision of a schedule (Ansor's evolutionary mutation).
+pub fn mutate(sched: &Schedule, kernel: &Kernel, rng: &mut Rng) -> Schedule {
+    let mut s = sched.clone();
+    let n_spatial = s.spatial.len();
+    let n_red = s.reduction.len();
+    match rng.usize(6) {
+        0 if n_spatial > 0 => {
+            // Resample one spatial tile factor.
+            let ai = rng.usize(n_spatial);
+            let extent = kernel.nest.spatial_axes().nth(ai).map(|(_, a)| a.extent).unwrap_or(1);
+            if !s.spatial[ai].factors.is_empty() {
+                let fi = rng.usize(s.spatial[ai].factors.len());
+                let max = if fi + 1 == s.spatial[ai].factors.len() { 64 } else { 4 };
+                s.spatial[ai].factors[fi] = sample_factor(extent, max, rng);
+            }
+        }
+        1 if n_red > 0 => {
+            let ai = rng.usize(n_red);
+            let extent = kernel.nest.reduction_axes().nth(ai).map(|(_, a)| a.extent).unwrap_or(1);
+            if !s.reduction[ai].factors.is_empty() {
+                let fi = rng.usize(s.reduction[ai].factors.len());
+                s.reduction[ai].factors[fi] = sample_factor(extent, 64, rng);
+            }
+        }
+        2 => s.vectorize = !s.vectorize,
+        3 => s.unroll_max = *rng.choose(UNROLL_CHOICES),
+        4 => s.cache_write = !s.cache_write,
+        _ => {
+            let (ns, _) = sketch_shape(kernel.anchor);
+            s.parallel_levels = if s.parallel_levels == 1 && ns >= 2 { 2 } else { 1 };
+        }
+    }
+    s
+}
+
+/// Uniform per-axis crossover of two schedules of the same sketch.
+pub fn crossover(a: &Schedule, b: &Schedule, rng: &mut Rng) -> Schedule {
+    let mut s = a.clone();
+    for (i, t) in s.spatial.iter_mut().enumerate() {
+        if rng.bool(0.5) {
+            *t = b.spatial[i].clone();
+        }
+    }
+    for (i, t) in s.reduction.iter_mut().enumerate() {
+        if rng.bool(0.5) {
+            *t = b.reduction[i].clone();
+        }
+    }
+    if rng.bool(0.5) {
+        s.vectorize = b.vectorize;
+    }
+    if rng.bool(0.5) {
+        s.unroll_max = b.unroll_max;
+    }
+    if rng.bool(0.5) {
+        s.cache_write = b.cache_write;
+    }
+    if rng.bool(0.5) {
+        s.parallel_levels = b.parallel_levels;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+    use crate::sched::apply;
+
+    #[test]
+    fn random_schedules_mostly_apply() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let mut rng = Rng::new(42);
+        let ok = (0..200)
+            .filter(|_| apply(&random_schedule(&k, &mut rng), &k).is_ok())
+            .count();
+        // Factors are sampled within the extent budget, so nearly all
+        // sketches must be valid on their own kernel.
+        assert!(ok >= 195, "only {ok}/200 valid");
+    }
+
+    #[test]
+    fn conv_kernels_get_full_tile_structure() {
+        let k = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[]);
+        let mut rng = Rng::new(1);
+        let s = random_schedule(&k, &mut rng);
+        assert_eq!(s.spatial_levels(), 4);
+        assert_eq!(s.reduction_levels(), 2);
+    }
+
+    #[test]
+    fn pool_kernels_get_light_structure() {
+        let k = KernelBuilder::pool2d(crate::ir::OpKind::MaxPool2d, 1, 64, 56, 56, 2, 2, 2);
+        let mut rng = Rng::new(1);
+        let s = random_schedule(&k, &mut rng);
+        assert_eq!(s.spatial_levels(), 2);
+        assert_eq!(s.reduction_levels(), 1);
+    }
+
+    #[test]
+    fn mutation_changes_exactly_some_field() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let mut rng = Rng::new(7);
+        let s = random_schedule(&k, &mut rng);
+        let mut changed = 0;
+        for _ in 0..50 {
+            if mutate(&s, &k, &mut rng) != s {
+                changed += 1;
+            }
+        }
+        assert!(changed > 30, "mutation too often a no-op: {changed}/50");
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let mut rng = Rng::new(9);
+        let a = random_schedule(&k, &mut rng);
+        let b = random_schedule(&k, &mut rng);
+        let c = crossover(&a, &b, &mut rng);
+        assert_eq!(c.class_sig, a.class_sig);
+        assert_eq!(c.spatial.len(), a.spatial.len());
+    }
+
+    #[test]
+    fn factors_deterministic_per_seed() {
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let s1 = random_schedule(&k, &mut Rng::new(3));
+        let s2 = random_schedule(&k, &mut Rng::new(3));
+        assert_eq!(s1, s2);
+    }
+}

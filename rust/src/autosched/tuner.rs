@@ -1,0 +1,470 @@
+//! The Ansor-like auto-scheduling loop.
+//!
+//! Per Zheng et al. (OSDI 2020), mirrored here:
+//!
+//! 1. A **task scheduler** slices the trial budget across the model's
+//!    unique kernels, allocating each measurement batch to the task with
+//!    the highest expected end-to-end gain (use-count × current cost ×
+//!    recent improvement rate).
+//! 2. Per task, **evolutionary search** over the sketch space proposes
+//!    candidates: a population seeded with the best measured schedules
+//!    plus random sketches, evolved by mutation/crossover under the
+//!    learned cost model, with an ε fraction of pure exploration.
+//! 3. Candidates are **measured** (noisy simulator timings) and the
+//!    **cost model retrained** after every batch.
+//!
+//! Every measurement charges real tuning seconds to the search-time
+//! ledger: candidate compile/codegen overhead + repeats × kernel runtime
+//! (+ RPC overhead when tuning an edge device remotely) — this ledger is
+//! what all of the paper's search-time plots are built from.
+
+use super::costmodel::{CostModel, GbdtParams};
+use super::features::{features, NUM_FEATURES};
+use super::sketch::{crossover, mutate, random_schedule};
+use crate::device::{measure, model_time, untuned_kernel_times, DeviceProfile};
+use crate::ir::ModelGraph;
+use crate::sched::{apply, serialize, Schedule};
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Total measurement trials across all kernels (Ansor recommends
+    /// 20 000 for a full DNN; paper Fig 1 uses that).
+    pub trials: usize,
+    /// Measurements per round (Ansor default 64).
+    pub batch_size: usize,
+    /// Evolutionary population size.
+    pub population: usize,
+    /// Evolution generations per round.
+    pub generations: usize,
+    /// Fraction of each batch reserved for random exploration.
+    pub eps_random: f64,
+    pub seed: u64,
+    /// Cost-model training window (most recent samples per task).
+    pub train_window: usize,
+    /// Simulated seconds charged per cost-model retrain round.
+    pub train_cost_s: f64,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            trials: 20_000,
+            batch_size: 64,
+            population: 128,
+            generations: 4,
+            eps_random: 0.1,
+            seed: 0xA45,
+            train_window: 512,
+            train_cost_s: 1.5,
+        }
+    }
+}
+
+/// Best schedule found for one kernel.
+#[derive(Clone, Debug)]
+pub struct KernelBest {
+    pub schedule: Schedule,
+    /// Deterministic (noise-free) standalone cost in seconds.
+    pub cost_s: f64,
+}
+
+/// One point of the tuning trajectory (after each measurement round).
+#[derive(Clone, Debug)]
+pub struct HistoryPoint {
+    pub trials: usize,
+    pub search_time_s: f64,
+    /// End-to-end model time using the best schedules found so far
+    /// (untuned default for not-yet-tuned kernels).
+    pub model_time_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TuningResult {
+    pub model: String,
+    /// Per unique-kernel index of the graph.
+    pub best: HashMap<usize, KernelBest>,
+    pub search_time_s: f64,
+    pub trials_used: usize,
+    pub history: Vec<HistoryPoint>,
+}
+
+impl TuningResult {
+    /// Model time achievable within a search-time budget (the paper's
+    /// "Ansor given the same search time", Fig 5a): the best end-to-end
+    /// time of any history point whose ledger fits the budget.
+    pub fn model_time_at_budget(&self, budget_s: f64, untuned_s: f64) -> f64 {
+        self.history
+            .iter()
+            .filter(|h| h.search_time_s <= budget_s)
+            .map(|h| h.model_time_s)
+            .fold(untuned_s, f64::min)
+    }
+
+    /// Search time Ansor needs to reach a target model time (Fig 5b);
+    /// `None` if it never got there within its budget.
+    pub fn time_to_reach(&self, target_model_time_s: f64) -> Option<f64> {
+        self.history
+            .iter()
+            .find(|h| h.model_time_s <= target_model_time_s)
+            .map(|h| h.search_time_s)
+    }
+
+    pub fn final_model_time(&self, graph: &ModelGraph, profile: &DeviceProfile) -> f64 {
+        model_time(graph, profile, |k| {
+            self.best
+                .get(&k)
+                .map(|b| b.schedule.clone())
+                .unwrap_or_else(|| Schedule::untuned_default(&graph.kernels[k]))
+        })
+    }
+}
+
+struct TaskState {
+    kernel: usize,
+    weight: f64, // use count
+    rng: Rng,
+    xs: Vec<[f64; NUM_FEATURES]>,
+    ys: Vec<f64>, // -ln(measured cost): "log throughput"
+    measured: HashSet<String>,
+    top: Vec<(f64, Schedule)>, // best (cost, schedule) seeds, ascending cost
+    model: CostModel,
+    best_cost: f64,
+    untuned_cost: f64,
+    slope: f64,
+    rounds: usize,
+    /// Set when the kernel's (finite) schedule space is fully measured —
+    /// cheap kernels like softmax/pool exhaust their sketch space long
+    /// before the trial budget does.
+    exhausted: bool,
+}
+
+impl TaskState {
+    fn record_top(&mut self, cost: f64, sched: Schedule) {
+        self.top.push((cost, sched));
+        self.top.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        self.top.truncate(16);
+    }
+}
+
+/// Run the auto-scheduler over a whole model graph.
+pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOptions) -> TuningResult {
+    let mut root_rng = Rng::new(opts.seed ^ crate::ir::workload::fnv1a(graph.name.as_bytes()));
+    let untuned = untuned_kernel_times(graph, profile);
+
+    let mut tasks: Vec<TaskState> = graph
+        .kernels
+        .iter()
+        .enumerate()
+        .map(|(i, _)| TaskState {
+            kernel: i,
+            weight: graph.use_count(i) as f64,
+            rng: root_rng.fork(i as u64),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            measured: HashSet::new(),
+            top: Vec::new(),
+            model: CostModel::default(),
+            best_cost: f64::INFINITY,
+            untuned_cost: untuned[i] / graph.use_count(i).max(1) as f64,
+            slope: 1.0,
+            rounds: 0,
+            exhausted: false,
+        })
+        .collect();
+
+    let mut ledger = 0.0f64;
+    let mut trials_used = 0usize;
+    let mut history: Vec<HistoryPoint> = Vec::new();
+    let gbdt = GbdtParams::default();
+
+    let model_time_now = |tasks: &[TaskState]| -> f64 {
+        model_time(graph, profile, |k| {
+            let t = &tasks[k];
+            if t.best_cost.is_finite() {
+                t.top[0].1.clone()
+            } else {
+                Schedule::untuned_default(&graph.kernels[k])
+            }
+        })
+    };
+
+    let mut round_robin = 0usize;
+    while trials_used < opts.trials {
+        // ---- task selection (gradient allocation with warmup) ----------
+        if tasks.iter().all(|t| t.exhausted) {
+            break; // every kernel's schedule space fully measured
+        }
+        let ti = loop {
+            if round_robin < tasks.len() {
+                let t = round_robin;
+                round_robin += 1;
+                if tasks[t].exhausted {
+                    continue;
+                }
+                break t;
+            }
+            let mut best_t = None;
+            let mut best_gain = f64::NEG_INFINITY;
+            for (i, t) in tasks.iter().enumerate() {
+                if t.exhausted {
+                    continue;
+                }
+                let cost = if t.best_cost.is_finite() { t.best_cost } else { t.untuned_cost };
+                let gain = t.weight * cost * t.slope.max(0.02);
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_t = Some(i);
+                }
+            }
+            break best_t.expect("checked above: some task not exhausted");
+        };
+
+        let n = opts.batch_size.min(opts.trials - trials_used);
+        let task = &mut tasks[ti];
+        let kernel = &graph.kernels[task.kernel];
+
+        // ---- candidate proposal: evolutionary search -------------------
+        let mut population: Vec<Schedule> = task.top.iter().map(|(_, s)| s.clone()).collect();
+        while population.len() < opts.population {
+            population.push(random_schedule(kernel, &mut task.rng));
+        }
+        let score = |model: &CostModel, s: &Schedule, rng: &mut Rng| -> f64 {
+            match apply(s, kernel) {
+                Err(_) => f64::NEG_INFINITY,
+                Ok(nest) => {
+                    if model.is_trained() {
+                        model.predict(&features(kernel, &nest, profile))
+                    } else {
+                        rng.f64()
+                    }
+                }
+            }
+        };
+        for _gen in 0..opts.generations {
+            let mut scored: Vec<(f64, Schedule)> = population
+                .drain(..)
+                .map(|s| (score(&task.model, &s, &mut task.rng), s))
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            scored.truncate(opts.population / 2);
+            let elites: Vec<Schedule> = scored.into_iter().map(|(_, s)| s).collect();
+            population = elites.clone();
+            while population.len() < opts.population {
+                let a = task.rng.choose(&elites).clone();
+                let child = if task.rng.bool(0.3) && elites.len() > 1 {
+                    let b = task.rng.choose(&elites);
+                    crossover(&a, b, &mut task.rng)
+                } else {
+                    a
+                };
+                population.push(mutate(&child, kernel, &mut task.rng));
+            }
+        }
+
+        // ---- batch selection: top-predicted + eps random, unmeasured ---
+        let mut scored: Vec<(f64, Schedule)> = population
+            .drain(..)
+            .map(|s| (score(&task.model, &s, &mut task.rng), s))
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let n_random = ((n as f64) * opts.eps_random).ceil() as usize;
+        let mut batch: Vec<Schedule> = Vec::with_capacity(n);
+        for (_, s) in scored {
+            if batch.len() + n_random >= n {
+                break;
+            }
+            let key = serialize::to_string(&s);
+            if task.measured.insert(key) {
+                batch.push(s);
+            }
+        }
+        // Top up with random exploration — bounded attempts: cheap
+        // kernels (pool/softmax) have finite sketch spaces that a big
+        // trial budget exhausts completely.
+        let mut attempts = 0usize;
+        while batch.len() < n && attempts < 200 * n {
+            attempts += 1;
+            let s = random_schedule(kernel, &mut task.rng);
+            let key = serialize::to_string(&s);
+            if task.measured.insert(key) {
+                batch.push(s);
+            }
+        }
+        if batch.is_empty() {
+            task.exhausted = true;
+            continue;
+        }
+
+        // ---- measurement + ledger --------------------------------------
+        let prev_best = if task.best_cost.is_finite() { task.best_cost } else { task.untuned_cost };
+        for s in batch {
+            trials_used += 1;
+            match apply(&s, kernel) {
+                Err(_) => {
+                    // Invalid candidates still cost codegen time before
+                    // the compiler rejects them.
+                    ledger += 0.3 * profile.measure_overhead_s + profile.rpc_overhead_s * 0.3;
+                }
+                Ok(nest) => {
+                    let cost = measure(kernel, &nest, profile, &mut task.rng);
+                    ledger += profile.measure_overhead_s
+                        + profile.rpc_overhead_s
+                        + profile.measure_repeats as f64 * cost;
+                    task.xs.push(features(kernel, &nest, profile));
+                    task.ys.push(-(cost.max(1e-12)).ln());
+                    if cost < task.best_cost {
+                        task.best_cost = cost;
+                    }
+                    task.record_top(cost, s);
+                }
+            }
+        }
+
+        // ---- retrain cost model ----------------------------------------
+        let lo = task.xs.len().saturating_sub(opts.train_window);
+        task.model = CostModel::train(&task.xs[lo..], &task.ys[lo..], &gbdt);
+        ledger += opts.train_cost_s;
+        task.rounds += 1;
+
+        // Improvement slope (EMA of relative gain per round).
+        let new_best = if task.best_cost.is_finite() { task.best_cost } else { prev_best };
+        let rel_gain = ((prev_best - new_best) / prev_best).max(0.0);
+        task.slope = 0.5 * task.slope + 0.5 * rel_gain;
+
+        history.push(HistoryPoint {
+            trials: trials_used,
+            search_time_s: ledger,
+            model_time_s: model_time_now(&tasks),
+        });
+    }
+
+    let best: HashMap<usize, KernelBest> = tasks
+        .iter()
+        .filter(|t| !t.top.is_empty())
+        .map(|t| {
+            // Re-evaluate the best schedule deterministically.
+            let sched = t.top[0].1.clone();
+            let nest = apply(&sched, &graph.kernels[t.kernel]).expect("best schedule must apply");
+            let cost = crate::device::simulate(&graph.kernels[t.kernel], &nest, profile).total_s;
+            (t.kernel, KernelBest { schedule: sched, cost_s: cost })
+        })
+        .collect();
+
+    TuningResult {
+        model: graph.name.clone(),
+        best,
+        search_time_s: ledger,
+        trials_used,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::untuned_model_time;
+    use crate::ir::KernelBuilder;
+
+    fn tiny_opts(trials: usize) -> TuneOptions {
+        TuneOptions {
+            trials,
+            batch_size: 16,
+            population: 32,
+            generations: 2,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    fn gemm_graph() -> ModelGraph {
+        let mut g = ModelGraph::new("gemm-bench");
+        g.push(KernelBuilder::dense(512, 512, 512, &[]));
+        g
+    }
+
+    #[test]
+    fn tuning_improves_over_untuned() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let untuned = untuned_model_time(&g, &prof);
+        let res = tune_model(&g, &prof, &tiny_opts(128));
+        let tuned = res.final_model_time(&g, &prof);
+        assert!(
+            tuned < untuned,
+            "tuning failed to improve: {tuned} vs untuned {untuned}"
+        );
+    }
+
+    #[test]
+    fn more_trials_do_not_hurt() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let small = tune_model(&g, &prof, &tiny_opts(32));
+        let large = tune_model(&g, &prof, &tiny_opts(256));
+        assert!(
+            large.final_model_time(&g, &prof) <= small.final_model_time(&g, &prof) * 1.05,
+            "best-so-far must be monotone-ish"
+        );
+    }
+
+    #[test]
+    fn ledger_is_positive_and_monotone() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let res = tune_model(&g, &prof, &tiny_opts(64));
+        assert!(res.search_time_s > 0.0);
+        let mut prev = 0.0;
+        for h in &res.history {
+            assert!(h.search_time_s >= prev);
+            prev = h.search_time_s;
+        }
+        assert_eq!(res.trials_used, 64);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let a = tune_model(&g, &prof, &tiny_opts(48));
+        let b = tune_model(&g, &prof, &tiny_opts(48));
+        assert_eq!(a.search_time_s, b.search_time_s);
+        assert_eq!(
+            a.final_model_time(&g, &prof),
+            b.final_model_time(&g, &prof)
+        );
+    }
+
+    #[test]
+    fn budget_lookup_matches_history() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let res = tune_model(&g, &prof, &tiny_opts(64));
+        let untuned = untuned_model_time(&g, &prof);
+        // Zero budget -> untuned.
+        assert_eq!(res.model_time_at_budget(0.0, untuned), untuned);
+        // Full budget -> best history point.
+        let best_hist = res.history.iter().map(|h| h.model_time_s).fold(f64::INFINITY, f64::min);
+        assert_eq!(res.model_time_at_budget(f64::INFINITY, untuned), best_hist.min(untuned));
+    }
+
+    #[test]
+    fn rpc_overhead_inflates_edge_search_time() {
+        let g = gemm_graph();
+        let xeon = tune_model(&g, &DeviceProfile::xeon_e5_2620(), &tiny_opts(32));
+        let edge = tune_model(&g, &DeviceProfile::cortex_a72(), &tiny_opts(32));
+        assert!(edge.search_time_s > xeon.search_time_s);
+    }
+
+    #[test]
+    fn multi_kernel_graph_allocates_to_expensive_tasks() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut g = ModelGraph::new("mixed");
+        g.push(KernelBuilder::dense(512, 512, 512, &[]));
+        g.push(KernelBuilder::pool2d(crate::ir::OpKind::MaxPool2d, 1, 64, 56, 56, 2, 2, 2));
+        let res = tune_model(&g, &prof, &tiny_opts(160));
+        // The dense kernel must end up tuned (it dominates cost).
+        assert!(res.best.contains_key(&0));
+    }
+}

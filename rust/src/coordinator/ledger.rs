@@ -1,0 +1,94 @@
+//! Search-time accounting.
+//!
+//! Every search-time number in the paper (Fig 1, 5b, 6b, 8b, Table 4) is
+//! tuning wall-clock on the target device. Our measurements are
+//! simulated, so the ledger charges what the real process would cost:
+//! candidate codegen+compile overhead, timed repeats × kernel runtime,
+//! RPC round-trips for remote (edge) tuning, and cost-model training.
+//! The ledger is *sequential device time* — the host pipeline may
+//! parallelize, but the device runs one candidate at a time, exactly
+//! like Ansor's measurer.
+
+use crate::device::DeviceProfile;
+
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub seconds: f64,
+    pub measurements: usize,
+    pub compile_failures: usize,
+    pub train_rounds: usize,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one successful candidate measurement.
+    pub fn charge_measure(&mut self, profile: &DeviceProfile, runtime_s: f64) {
+        self.seconds +=
+            profile.measure_overhead_s + profile.rpc_overhead_s + profile.measure_repeats as f64 * runtime_s;
+        self.measurements += 1;
+    }
+
+    /// Charge a candidate the compiler rejected (invalid transferred
+    /// schedule / invalid mutation): codegen time is still spent.
+    pub fn charge_compile_fail(&mut self, profile: &DeviceProfile) {
+        self.seconds += 0.3 * (profile.measure_overhead_s + profile.rpc_overhead_s);
+        self.compile_failures += 1;
+    }
+
+    /// Charge a cost-model training round.
+    pub fn charge_train(&mut self, seconds: f64) {
+        self.seconds += seconds;
+        self.train_rounds += 1;
+    }
+
+    pub fn merge(&mut self, other: &Ledger) {
+        self.seconds += other.seconds;
+        self.measurements += other.measurements;
+        self.compile_failures += other.compile_failures;
+        self.train_rounds += other.train_rounds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut l = Ledger::new();
+        l.charge_measure(&prof, 0.01);
+        l.charge_measure(&prof, 0.02);
+        l.charge_compile_fail(&prof);
+        l.charge_train(1.5);
+        assert_eq!(l.measurements, 2);
+        assert_eq!(l.compile_failures, 1);
+        let expect = 2.0 * prof.measure_overhead_s + 3.0 * 0.03 + 0.3 * prof.measure_overhead_s + 1.5;
+        assert!((l.seconds - expect).abs() < 1e-9, "{} vs {expect}", l.seconds);
+    }
+
+    #[test]
+    fn rpc_makes_edge_measurements_dearer() {
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let edge = DeviceProfile::cortex_a72();
+        let mut a = Ledger::new();
+        let mut b = Ledger::new();
+        a.charge_measure(&xeon, 0.01);
+        b.charge_measure(&edge, 0.01);
+        assert!(b.seconds > a.seconds);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut a = Ledger::new();
+        a.charge_measure(&prof, 0.01);
+        let mut b = Ledger::new();
+        b.charge_measure(&prof, 0.02);
+        b.merge(&a);
+        assert_eq!(b.measurements, 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Serving metrics: latency histogram + throughput accounting for the
+//! request loop (`repro serve`).
+
+/// Log-bucketed latency histogram (microseconds to seconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds (ascending); the last is +inf.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+    pub total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. 10s, 1-2-5 sequence.
+        let mut bounds = Vec::new();
+        for exp in -6..1 {
+            for m in [1.0, 2.0, 5.0] {
+                bounds.push(m * 10f64.powi(exp));
+            }
+        }
+        let n = bounds.len();
+        LatencyHistogram { bounds, counts: vec![0; n + 1], samples: Vec::new(), total: 0 }
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| latency_s <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.samples.push(latency_s);
+        self.total += 1;
+    }
+
+    /// Exact percentile from retained samples (serving runs are small
+    /// enough to keep all samples; a production system would switch to
+    /// the buckets beyond some size).
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Non-empty (bound, count) pairs for display.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+            .filter(|&(_, c)| c > 0)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert!(h.percentile(50.0) <= h.percentile(95.0));
+        assert!(h.percentile(95.0) <= h.percentile(99.0));
+        assert!((h.percentile(50.0) - 0.050).abs() < 2e-3);
+        assert_eq!(h.total, 100);
+    }
+
+    #[test]
+    fn buckets_cover_all_samples() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e-7); // below first bound
+        h.record(0.5);
+        h.record(100.0); // beyond last bound -> overflow bucket
+        let total: u64 = h.buckets().iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

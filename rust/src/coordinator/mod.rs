@@ -1,0 +1,20 @@
+//! L3 coordination: measurement fan-out, search-time accounting, and
+//! remote-device emulation.
+//!
+//! The paper's system is a *tuning pipeline*: candidates are generated,
+//! compiled, and timed on a target device, with the total device
+//! wall-clock being the quantity every experiment reports. This module
+//! owns that machinery: a deterministic multi-threaded measurement pool
+//! (host-side parallelism never leaks into device-time accounting), the
+//! search-time [`Ledger`], and the RPC session model used for the
+//! Raspberry-Pi experiments.
+
+pub mod ledger;
+pub mod metrics;
+pub mod pool;
+pub mod rpc;
+
+pub use ledger::Ledger;
+pub use metrics::LatencyHistogram;
+pub use pool::{measure_pairs, PairOutcome};
+pub use rpc::RemoteSession;

@@ -1,0 +1,101 @@
+//! Measurement worker pool.
+//!
+//! The transfer-tuning engine sweeps hundreds of kernel/schedule pairs
+//! (764 for EfficientNetB0, §5.2); the pool fans the sweep across OS
+//! threads. Determinism is preserved by forking a per-job RNG from the
+//! job index, so results are identical at any thread count — the ledger
+//! (sequential *device* seconds) is charged by the caller from the
+//! returned runtimes, not from host wall-clock.
+
+use crate::device::{measure, DeviceProfile};
+use crate::ir::Kernel;
+use crate::sched::{apply, ApplyError, Schedule};
+use crate::util::rng::Rng;
+
+/// Outcome of evaluating one kernel/schedule pair standalone.
+#[derive(Clone, Debug)]
+pub enum PairOutcome {
+    /// Measured standalone runtime (noisy), seconds.
+    Measured(f64),
+    /// The schedule could not be applied (Fig 4's `-1` entries).
+    Invalid(ApplyError),
+}
+
+impl PairOutcome {
+    pub fn runtime(&self) -> Option<f64> {
+        match self {
+            PairOutcome::Measured(t) => Some(*t),
+            PairOutcome::Invalid(_) => None,
+        }
+    }
+}
+
+/// Evaluate every (kernel, schedule) job standalone, in parallel.
+/// `seed` fixes all measurement noise.
+pub fn measure_pairs(
+    jobs: &[(&Kernel, &Schedule)],
+    profile: &DeviceProfile,
+    seed: u64,
+) -> Vec<PairOutcome> {
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let chunk = jobs.len().div_ceil(n_threads.max(1)).max(1);
+    let mut results: Vec<Option<PairOutcome>> = vec![None; jobs.len()];
+
+    std::thread::scope(|scope| {
+        for (ci, (job_chunk, res_chunk)) in
+            jobs.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+        {
+            scope.spawn(move || {
+                for (ji, ((kernel, sched), slot)) in
+                    job_chunk.iter().zip(res_chunk.iter_mut()).enumerate()
+                {
+                    let job_index = (ci * chunk + ji) as u64;
+                    let mut rng = Rng::new(seed ^ job_index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    *slot = Some(match apply(sched, kernel) {
+                        Err(e) => PairOutcome::Invalid(e),
+                        Ok(nest) => PairOutcome::Measured(measure(kernel, &nest, profile, &mut rng)),
+                    });
+                }
+            });
+        }
+    });
+
+    results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn parallel_results_are_deterministic() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let s = Schedule::untuned_default(&k);
+        let jobs: Vec<(&Kernel, &Schedule)> = (0..50).map(|_| (&k, &s)).collect();
+        let a = measure_pairs(&jobs, &prof, 11);
+        let b = measure_pairs(&jobs, &prof, 11);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.runtime(), y.runtime());
+        }
+    }
+
+    #[test]
+    fn invalid_pairs_reported() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let small = KernelBuilder::dense(8, 8, 8, &[]);
+        let mut s = Schedule::untuned_default(&k);
+        s.spatial[1] = crate::sched::AxisTiling::of(&[64]); // 64 > 8
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&small, &s)];
+        let out = measure_pairs(&jobs, &prof, 1);
+        assert!(matches!(out[0], PairOutcome::Invalid(_)));
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        assert!(measure_pairs(&[], &prof, 0).is_empty());
+    }
+}

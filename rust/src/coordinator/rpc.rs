@@ -1,0 +1,98 @@
+//! RPC-device emulation for remote (edge) tuning.
+//!
+//! Ansor tunes constrained devices by connecting them to a host over RPC
+//! (paper §5.3): candidates are compiled on the host, shipped to the
+//! device, timed there, and reported back. The emulation models the
+//! request lifecycle — serialize/upload, remote execution, report — so
+//! edge search-time experiments charge the right costs, and exposes
+//! queue statistics like a real tracker would.
+
+use crate::device::{measure, DeviceProfile};
+use crate::ir::Kernel;
+use crate::sched::{apply, Schedule};
+use crate::util::rng::Rng;
+
+/// Simulated remote measurement session against one device.
+pub struct RemoteSession {
+    pub profile: DeviceProfile,
+    rng: Rng,
+    /// Upload bandwidth host→device for compiled artifacts, bytes/s.
+    pub upload_bps: f64,
+    /// Compiled artifact size per candidate (bytes).
+    pub artifact_bytes: f64,
+    pub requests: usize,
+    pub failures: usize,
+    /// Total device-side seconds consumed (the edge ledger component).
+    pub device_seconds: f64,
+    /// Total transport seconds (upload + RTT).
+    pub transport_seconds: f64,
+}
+
+impl RemoteSession {
+    pub fn new(profile: DeviceProfile, seed: u64) -> Self {
+        RemoteSession {
+            profile,
+            rng: Rng::new(seed),
+            upload_bps: 10e6,        // 10 MB/s: Wi-Fi/100Mb ethernet class
+            artifact_bytes: 1.5e6,   // shared object + params
+            requests: 0,
+            failures: 0,
+            device_seconds: 0.0,
+            transport_seconds: 0.0,
+        }
+    }
+
+    /// Measure one candidate remotely. Returns the measured runtime, or
+    /// `None` when codegen failed (still costs host time; no upload).
+    pub fn measure_remote(&mut self, kernel: &Kernel, sched: &Schedule) -> Option<f64> {
+        self.requests += 1;
+        match apply(sched, kernel) {
+            Err(_) => {
+                self.failures += 1;
+                None
+            }
+            Ok(nest) => {
+                let runtime = measure(kernel, &nest, &self.profile, &mut self.rng);
+                self.transport_seconds += self.artifact_bytes / self.upload_bps + 0.05; // RTT
+                self.device_seconds += self.profile.measure_repeats as f64 * runtime;
+                Some(runtime)
+            }
+        }
+    }
+
+    /// Total tuning seconds this session consumed (what the paper's edge
+    /// search-time axis shows).
+    pub fn total_seconds(&self) -> f64 {
+        self.device_seconds
+            + self.transport_seconds
+            + self.requests as f64 * self.profile.measure_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn remote_measurement_accumulates_costs() {
+        let mut sess = RemoteSession::new(DeviceProfile::cortex_a72(), 3);
+        let k = KernelBuilder::dense(128, 128, 128, &[]);
+        let s = Schedule::untuned_default(&k);
+        let t = sess.measure_remote(&k, &s).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(sess.requests, 1);
+        assert!(sess.total_seconds() > sess.device_seconds);
+    }
+
+    #[test]
+    fn failures_counted_without_upload() {
+        let mut sess = RemoteSession::new(DeviceProfile::cortex_a72(), 3);
+        let k = KernelBuilder::dense(8, 8, 8, &[]);
+        let mut s = Schedule::untuned_default(&k);
+        s.spatial[1] = crate::sched::AxisTiling::of(&[64]);
+        assert!(sess.measure_remote(&k, &s).is_none());
+        assert_eq!(sess.failures, 1);
+        assert_eq!(sess.transport_seconds, 0.0);
+    }
+}

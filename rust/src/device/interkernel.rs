@@ -1,0 +1,161 @@
+//! Inter-kernel cache interactions (paper §5.5, Fig 8 mechanism).
+//!
+//! Standalone kernel timing assumes cold inputs: every input byte comes
+//! from DRAM. In a full model, a kernel's input is the previous kernel's
+//! output, and some of it is still cache-resident — *how much benefit
+//! that yields depends on both schedules*: the producer's write order
+//! dictates cache placement, the consumer's first-touch order determines
+//! whether the resident lines are hit before eviction ("The data access
+//! patterns of the first kernel will dictate the cache placement of the
+//! output data, which will impact the read times ... in the second
+//! kernel").
+//!
+//! Because the transfer-tuning engine selects schedules by *standalone*
+//! time (as the paper's implementation does, and as Ansor itself does),
+//! it cannot see this term — which is exactly why the mixed-pool
+//! experiment (Fig 8) can pick standalone-faster schedules that are
+//! *slower* end-to-end.
+
+use super::profile::DeviceProfile;
+use crate::ir::Kernel;
+use crate::sched::Schedule;
+
+/// Layout-affinity score in (0, 1]: how well the consumer's first-touch
+/// order matches the producer's write order. Derived from the innermost
+/// tile granularities of the two schedules — equal streaming granularity
+/// scores 1.0, badly mismatched granularity approaches 0.
+pub fn layout_affinity(producer: &Schedule, consumer: &Schedule) -> f64 {
+    // Producer streams its output in chunks of its innermost spatial tile
+    // (the contiguous-dim write granularity).
+    let p_tile = producer
+        .spatial
+        .last()
+        .map(|t| t.inner_product())
+        .unwrap_or(1)
+        .max(1) as f64;
+    // Consumer first-touch granularity along the contiguous input dim:
+    // the innermost spatial tile (it walks the input window with the
+    // output tile) times the innermost reduction tile (the reduction
+    // stride through the input). Both vary widely across auto-schedules,
+    // which is what makes the interaction schedule-*choice* dependent.
+    let c_spatial = consumer.spatial.last().map(|t| t.inner_product()).unwrap_or(1);
+    let c_red = consumer.reduction.last().map(|t| t.inner_product()).unwrap_or(1);
+    let c_tile = (c_spatial * c_red).max(1) as f64;
+    let ratio = p_tile.min(c_tile) / p_tile.max(c_tile);
+    // Even a perfect granularity mismatch retains some affinity (hardware
+    // prefetchers), and identical granularity is not a perfect guarantee.
+    0.15 + 0.85 * ratio.sqrt()
+}
+
+/// Signed boundary adjustment in seconds relative to the cold-input
+/// standalone estimate. Negative = the consumer runs *faster* than its
+/// standalone time (good layout affinity, producer output still cache
+/// resident); positive = *slower* (the producer's write pattern defeats
+/// the consumer's prefetch/access pattern — partially-resident data in
+/// the wrong layout costs more than a clean cold stream).
+///
+/// The magnitude scales with the consumer's *memory-bound share* of its
+/// standalone time (`consumer_mem_s`): a compute-bound kernel barely
+/// notices its input layout, a bandwidth-bound one lives or dies by it.
+pub fn boundary_delta(
+    producer_kernel: &Kernel,
+    producer_sched: &Schedule,
+    consumer_sched: &Schedule,
+    consumer_mem_s: f64,
+    consumer_total_s: f64,
+    profile: &DeviceProfile,
+) -> f64 {
+    let out_bytes = producer_kernel
+        .nest
+        .output_buffer()
+        .total_bytes(&producer_kernel.nest.axes) as f64;
+    // Fraction of the output still resident in the last-level cache when
+    // the consumer starts (other tensors competed for it: use half the
+    // LLC as the effective budget).
+    let llc = profile.caches.last().map(|c| c.bytes as f64).unwrap_or(0.0) * 0.5;
+    let resident = (llc / out_bytes).min(1.0);
+    let affinity = layout_affinity(producer_sched, consumer_sched);
+    // Matched layouts (affinity -> 1) convert part of the consumer's
+    // memory time into cache hits; mismatched layouts (affinity -> 0.15)
+    // inflate it by fighting the producer's placement. Centered near the
+    // expected affinity so the term perturbs rather than dominates.
+    const AFF_REF: f64 = 0.6;
+    const STRENGTH: f64 = 0.45;
+    let mem_share = consumer_mem_s.min(consumer_total_s * 0.8);
+    mem_share * resident * STRENGTH * (AFF_REF - affinity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+    use crate::sched::schedule::AxisTiling;
+
+    /// Schedule with given innermost spatial / reduction tiles.
+    fn sched_with_inner(k: &Kernel, spatial: u64, red: u64) -> Schedule {
+        let mut s = Schedule::untuned_default(k);
+        let last = s.spatial.len() - 1;
+        s.spatial[last] = AxisTiling::of(&[spatial]);
+        if let Some(r) = s.reduction.last_mut() {
+            *r = AxisTiling::of(&[red]);
+        }
+        s
+    }
+
+    #[test]
+    fn matched_granularity_has_higher_affinity() {
+        let k = KernelBuilder::dense(256, 512, 512, &[]);
+        // Producer writes in 64-wide chunks; consumer A first-touches at
+        // 8 (spatial) x 8 (reduction) = 64 -> perfect match; consumer C
+        // at 1x1 = 1 -> poor match.
+        let p = sched_with_inner(&k, 64, 1);
+        let a = sched_with_inner(&k, 8, 8);
+        let c = sched_with_inner(&k, 1, 1);
+        assert!(layout_affinity(&p, &a) > layout_affinity(&p, &c));
+        assert!((layout_affinity(&p, &a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matched_layouts_save_time() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(256, 512, 512, &[]);
+        let p = sched_with_inner(&k, 64, 1);
+        let cons = sched_with_inner(&k, 8, 8); // affinity 1.0 > AFF_REF
+        let d = boundary_delta(&k, &p, &cons, 1e-3, 2e-3, &prof);
+        assert!(d < 0.0, "delta {d}");
+        // Bounded by half the memory share.
+        assert!(d.abs() <= 0.5 * 1e-3 + 1e-15);
+    }
+
+    #[test]
+    fn mismatched_layouts_cost_time() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(64, 64, 64, &[]); // small -> fully resident
+        let a = sched_with_inner(&k, 64, 1);
+        let b = sched_with_inner(&k, 1, 1);
+        let d = boundary_delta(&k, &a, &b, 1e-3, 2e-3, &prof);
+        assert!(d > 0.0, "mismatch should penalize: {d}");
+    }
+
+    #[test]
+    fn large_outputs_are_less_resident() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let small = KernelBuilder::dense(64, 64, 64, &[]);
+        let big = KernelBuilder::dense(2048, 2048, 2048, &[]);
+        let ss = sched_with_inner(&small, 8, 1);
+        let sb = sched_with_inner(&big, 8, 1);
+        let d_small = boundary_delta(&small, &ss, &ss, 1e-3, 2e-3, &prof).abs();
+        let d_big = boundary_delta(&big, &sb, &sb, 1e-3, 2e-3, &prof).abs();
+        assert!(d_small > d_big, "{d_small} vs {d_big}");
+    }
+
+    #[test]
+    fn compute_bound_consumers_barely_care() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(64, 64, 64, &[]);
+        let s = sched_with_inner(&k, 8, 1);
+        let d_membound = boundary_delta(&k, &s, &s, 1.9e-3, 2e-3, &prof).abs();
+        let d_computebound = boundary_delta(&k, &s, &s, 1e-5, 2e-3, &prof).abs();
+        assert!(d_membound > 10.0 * d_computebound);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware cost simulation: the measurement substrate.
+//!
+//! The paper measures real kernels on a Xeon E5-2620 and a Raspberry
+//! Pi 4. This repo replaces those testbeds with an analytic CPU model
+//! (see DESIGN.md §1 for why the substitution preserves the paper's
+//! *relative* claims), and grounds the model against real execution of
+//! the AOT-compiled Pallas GEMM artifacts through `crate::runtime`.
+
+pub mod interkernel;
+pub mod modeltime;
+pub mod profile;
+pub mod simulator;
+
+pub use interkernel::{boundary_delta, layout_affinity};
+pub use modeltime::{model_time, untuned_kernel_times, untuned_model_time};
+pub use profile::{CacheLevel, DeviceProfile};
+pub use simulator::{measure, simulate, simulate_with, SimBreakdown, SimScratch};

@@ -1,0 +1,148 @@
+//! End-to-end model inference time under a schedule assignment.
+//!
+//! Used by every experiment: full-model time = sum of per-instance kernel
+//! times minus the producer→consumer boundary savings (§5.5). Kernel
+//! selection (both Ansor's and transfer-tuning's) *cannot see* the
+//! boundary term — they optimize standalone times, exactly like the
+//! paper — but final model timings include it.
+
+use super::interkernel::boundary_delta;
+use super::profile::DeviceProfile;
+use super::simulator::{simulate, SimBreakdown};
+use crate::ir::ModelGraph;
+use crate::sched::{apply, Schedule};
+
+/// Full-model inference time given a per-unique-kernel schedule lookup.
+/// The lookup must return an applicable schedule for every kernel
+/// (callers fall back to `Schedule::untuned_default`).
+pub fn model_time(
+    graph: &ModelGraph,
+    profile: &DeviceProfile,
+    sched_for: impl Fn(usize) -> Schedule,
+) -> f64 {
+    let scheds: Vec<Schedule> = (0..graph.kernels.len()).map(&sched_for).collect();
+    let breakdowns: Vec<SimBreakdown> = graph
+        .kernels
+        .iter()
+        .zip(&scheds)
+        .map(|(k, s)| {
+            let nest = apply(s, k).unwrap_or_else(|e| {
+                panic!("schedule assignment invalid for `{}`: {e}", k.class_signature())
+            });
+            simulate(k, &nest, profile)
+        })
+        .collect();
+
+    let mut total: f64 = graph
+        .instances
+        .iter()
+        .map(|i| breakdowns[i.kernel].total_s)
+        .sum();
+    // Signed producer→consumer boundary adjustments (§5.5): neither the
+    // tuner nor the transfer engine sees this term — they select by
+    // standalone time, exactly like the paper's implementation.
+    for inst in &graph.instances {
+        if let Some(pi) = inst.producer {
+            let prod = &graph.instances[pi];
+            let cons = &breakdowns[inst.kernel];
+            let delta = boundary_delta(
+                &graph.kernels[prod.kernel],
+                &scheds[prod.kernel],
+                &scheds[inst.kernel],
+                cons.mem_s,
+                cons.total_s,
+                profile,
+            );
+            // Clamp: a boundary cannot erase (or more than double) the
+            // consumer's own cost.
+            total += delta.clamp(-0.9 * cons.total_s, cons.total_s);
+        }
+    }
+    total.max(0.0)
+}
+
+/// Model time with every kernel on its untuned default schedule — the
+/// paper's baseline ("compiled using TVM's standard untuned schedules").
+pub fn untuned_model_time(graph: &ModelGraph, profile: &DeviceProfile) -> f64 {
+    model_time(graph, profile, |k| Schedule::untuned_default(&graph.kernels[k]))
+}
+
+/// Untuned time attributed to each unique kernel (standalone, weighted by
+/// use count) — the `P_c` proportions of the paper's Eq. 1 derive from
+/// this.
+pub fn untuned_kernel_times(graph: &ModelGraph, profile: &DeviceProfile) -> Vec<f64> {
+    graph
+        .kernels
+        .iter()
+        .enumerate()
+        .map(|(i, k)| {
+            let s = Schedule::untuned_default(k);
+            let nest = apply(&s, k).expect("default schedule must apply");
+            simulate(k, &nest, profile).total_s * graph.use_count(i) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn untuned_times_are_sane() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::resnet::resnet18();
+        let t = untuned_model_time(&g, &prof);
+        // ResNet-18 untuned on an 8-core Xeon: tens of ms to a few s.
+        assert!(t > 5e-3 && t < 5.0, "untuned resnet18 = {t}");
+    }
+
+    #[test]
+    fn boundary_adjustments_are_bounded() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::resnet::resnet18();
+        let standalone_sum: f64 = g
+            .instances
+            .iter()
+            .map(|i| {
+                let k = &g.kernels[i.kernel];
+                let s = Schedule::untuned_default(k);
+                simulate(k, &apply(&s, k).unwrap(), &prof).total_s
+            })
+            .sum();
+        let with_boundaries = untuned_model_time(&g, &prof);
+        // Inter-kernel effects adjust, not dominate: within +-40% of the
+        // standalone sum.
+        assert!(with_boundaries > 0.6 * standalone_sum, "{with_boundaries} vs {standalone_sum}");
+        assert!(with_boundaries < 1.4 * standalone_sum, "{with_boundaries} vs {standalone_sum}");
+        // And identical defaults have identical granularities -> affinity
+        // 1.0 everywhere -> the default assignment should actually save.
+        assert!(with_boundaries <= standalone_sum);
+    }
+
+    #[test]
+    fn kernel_times_weighted_by_use_count() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::resnet::resnet18();
+        let times = untuned_kernel_times(&g, &prof);
+        assert_eq!(times.len(), g.kernels.len());
+        assert!(times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn bert_untuned_dominated_by_dense() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::bert::bert(256);
+        let times = untuned_kernel_times(&g, &prof);
+        let dense: f64 = g
+            .kernels
+            .iter()
+            .zip(&times)
+            .filter(|(k, _)| k.class_signature() == "dense")
+            .map(|(_, t)| t)
+            .sum();
+        let frac = dense / times.iter().sum::<f64>();
+        // Paper Table 2: class Q is 98% of BERT's untuned time.
+        assert!(frac > 0.85, "dense fraction {frac}");
+    }
+}

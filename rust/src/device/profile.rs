@@ -1,0 +1,165 @@
+//! Device profiles: the analytic stand-ins for the paper's two testbeds.
+//!
+//! The paper measures on an Intel Xeon E5-2620 (server, §5.1) and a
+//! Raspberry Pi 4's Arm Cortex-A72 (edge, §5.3). We cannot measure on
+//! that hardware here, so each platform is described by the parameters
+//! the cost simulator needs: core count, frequency, SIMD width, cache
+//! hierarchy, bandwidths, and — critically for the paper's search-time
+//! results — the *per-measurement* costs of auto-tuning (candidate
+//! compile time, run repeats, RPC overhead for remote edge tuning).
+
+/// One level of the cache hierarchy.
+#[derive(Clone, Debug)]
+pub struct CacheLevel {
+    pub name: &'static str,
+    pub bytes: u64,
+    /// Sustained load bandwidth *from* this level, GB/s. Per-core unless
+    /// `shared`.
+    pub gbps: f64,
+    pub shared: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub cores: u64,
+    pub freq_ghz: f64,
+    /// SIMD register width in bits (AVX = 256, NEON = 128).
+    pub simd_bits: u64,
+    /// FMA/vector-ALU issue width per cycle per core.
+    pub fma_per_cycle: f64,
+    /// Cache levels, innermost first; DRAM is implicit after the last.
+    pub caches: Vec<CacheLevel>,
+    /// DRAM bandwidth, GB/s, shared across cores.
+    pub dram_gbps: f64,
+    /// Cache line size in bytes.
+    pub line_bytes: u64,
+    /// Cycles charged per dynamic loop back-edge.
+    pub branch_cost_cycles: f64,
+    /// Fixed cost per kernel invocation (dispatch, argument setup).
+    pub launch_overhead_s: f64,
+    /// Fork/join cost when a kernel uses the thread pool.
+    pub parallel_overhead_s: f64,
+    /// Unrolled-body instruction budget before i-cache pressure penalty.
+    pub icache_unroll_budget: f64,
+    // ---- tuning-time accounting (search-time ledger) -------------------
+    /// Per-candidate cost of codegen + compile + load during tuning.
+    pub measure_overhead_s: f64,
+    /// Timed repeats per candidate measurement.
+    pub measure_repeats: u64,
+    /// Extra per-candidate cost when measuring over RPC (edge tuning;
+    /// zero for local tuning).
+    pub rpc_overhead_s: f64,
+    /// Lognormal sigma of measurement noise.
+    pub noise_sigma: f64,
+}
+
+impl DeviceProfile {
+    pub fn simd_lanes_f32(&self) -> u64 {
+        self.simd_bits / 32
+    }
+
+    /// Peak f32 FLOP/s of one core (FMA counts 2).
+    pub fn peak_flops_core(&self) -> f64 {
+        self.freq_ghz * 1e9 * self.fma_per_cycle * self.simd_lanes_f32() as f64 * 2.0
+    }
+
+    /// Peak f32 FLOP/s of the whole chip.
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_flops_core() * self.cores as f64
+    }
+
+    /// The paper's server platform: 8-core Intel Xeon E5-2620 @ 2.1 GHz,
+    /// AVX (8 f32 lanes), 32 KiB L1d / 256 KiB L2 per core, 20 MiB shared
+    /// L3, ~42 GB/s DDR3.
+    pub fn xeon_e5_2620() -> Self {
+        DeviceProfile {
+            name: "xeon-e5-2620",
+            cores: 8,
+            freq_ghz: 2.1,
+            simd_bits: 256,
+            fma_per_cycle: 1.0,
+            caches: vec![
+                CacheLevel { name: "L1", bytes: 32 << 10, gbps: 100.0, shared: false },
+                CacheLevel { name: "L2", bytes: 256 << 10, gbps: 45.0, shared: false },
+                CacheLevel { name: "L3", bytes: 20 << 20, gbps: 120.0, shared: true },
+            ],
+            dram_gbps: 42.0,
+            line_bytes: 64,
+            branch_cost_cycles: 1.0,
+            launch_overhead_s: 2e-6,
+            parallel_overhead_s: 8e-6,
+            icache_unroll_budget: 4096.0,
+            measure_overhead_s: 0.9,
+            measure_repeats: 3,
+            rpc_overhead_s: 0.0,
+            noise_sigma: 0.04,
+        }
+    }
+
+    /// The paper's edge platform: Raspberry Pi 4 (Arm Cortex-A72, 4 cores
+    /// @ 1.5 GHz, NEON 128-bit, 32 KiB L1d, 1 MiB shared L2, LPDDR4).
+    /// Tuning happens over RPC from a host (paper §5.3), so every
+    /// measurement carries RPC + upload overhead; kernels also simply run
+    /// slower, which multiplies the measured-seconds part of search time.
+    /// Both effects exacerbate Ansor's time-to-match (10.8x vs 6.5x).
+    pub fn cortex_a72() -> Self {
+        DeviceProfile {
+            name: "cortex-a72",
+            cores: 4,
+            freq_ghz: 1.5,
+            simd_bits: 128,
+            fma_per_cycle: 1.0,
+            caches: vec![
+                CacheLevel { name: "L1", bytes: 32 << 10, gbps: 24.0, shared: false },
+                CacheLevel { name: "L2", bytes: 1 << 20, gbps: 16.0, shared: true },
+            ],
+            dram_gbps: 6.0,
+            line_bytes: 64,
+            branch_cost_cycles: 1.4,
+            launch_overhead_s: 6e-6,
+            parallel_overhead_s: 20e-6,
+            icache_unroll_budget: 2048.0,
+            measure_overhead_s: 1.1,
+            measure_repeats: 3,
+            rpc_overhead_s: 1.4,
+            noise_sigma: 0.05,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "xeon-e5-2620" | "server" | "x86" => Some(Self::xeon_e5_2620()),
+            "cortex-a72" | "edge" | "arm" => Some(Self::cortex_a72()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xeon_peak_is_sandy_bridge_scale() {
+        let p = DeviceProfile::xeon_e5_2620();
+        // 2.1 GHz * 8 lanes * 2 flops = 33.6 GF/core, ~269 GF chip.
+        assert!((p.peak_flops_core() - 33.6e9).abs() < 1e6);
+        assert!((p.peak_flops() - 268.8e9).abs() < 1e7);
+    }
+
+    #[test]
+    fn edge_is_much_weaker() {
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let pi = DeviceProfile::cortex_a72();
+        assert!(xeon.peak_flops() / pi.peak_flops() > 5.0);
+        assert!(pi.rpc_overhead_s > 0.0);
+    }
+
+    #[test]
+    fn lookup_aliases() {
+        assert_eq!(DeviceProfile::by_name("server").unwrap().name, "xeon-e5-2620");
+        assert_eq!(DeviceProfile::by_name("edge").unwrap().name, "cortex-a72");
+        assert!(DeviceProfile::by_name("gpu").is_none());
+    }
+}

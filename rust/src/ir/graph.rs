@@ -1,0 +1,128 @@
+//! Model graphs: sequences of kernel instances with use-counts.
+//!
+//! The paper's Table 1 shows ResNet18 as 18 *unique* kernels, some used
+//! more than once ("Use Count"). We keep the deduplicated kernel list plus
+//! the full instance sequence (needed for the inter-kernel cache effects
+//! of §5.5 / Fig 8, where producer→consumer adjacency matters).
+
+use super::kernel::Kernel;
+use std::collections::HashMap;
+
+/// One occurrence of a kernel in the model's execution order.
+#[derive(Clone, Debug)]
+pub struct KernelInstance {
+    /// Index into [`ModelGraph::kernels`].
+    pub kernel: usize,
+    /// Index (into `instances`) of the producer whose output this instance
+    /// consumes; `None` for the first kernel. The zoo builds models as
+    /// execution-ordered chains, which is what the boundary cost model
+    /// needs (it only looks at adjacent pairs).
+    pub producer: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    /// Unique kernels (deduplicated by workload id).
+    pub kernels: Vec<Kernel>,
+    /// Execution order over unique-kernel indices.
+    pub instances: Vec<KernelInstance>,
+}
+
+impl ModelGraph {
+    pub fn new(name: &str) -> Self {
+        ModelGraph { name: name.to_string(), kernels: Vec::new(), instances: Vec::new() }
+    }
+
+    /// Append a kernel occurrence; dedupes by workload id like Ansor
+    /// ("repeated kernels are only tuned once", §4.2).
+    pub fn push(&mut self, kernel: Kernel) -> usize {
+        let idx = match self
+            .kernels
+            .iter()
+            .position(|k| k.workload_id == kernel.workload_id)
+        {
+            Some(i) => i,
+            None => {
+                self.kernels.push(kernel);
+                self.kernels.len() - 1
+            }
+        };
+        let producer = if self.instances.is_empty() { None } else { Some(self.instances.len() - 1) };
+        self.instances.push(KernelInstance { kernel: idx, producer });
+        idx
+    }
+
+    /// How many times unique kernel `k` appears (Table 1 "Use Count").
+    pub fn use_count(&self, k: usize) -> usize {
+        self.instances.iter().filter(|i| i.kernel == k).count()
+    }
+
+    /// Unique class signatures in deterministic (first-appearance) order.
+    pub fn class_signatures(&self) -> Vec<String> {
+        let mut seen = HashMap::new();
+        let mut out = Vec::new();
+        for k in &self.kernels {
+            let sig = k.class_signature();
+            if seen.insert(sig.clone(), ()).is_none() {
+                out.push(sig);
+            }
+        }
+        out
+    }
+
+    /// Unique kernel indices belonging to a class.
+    pub fn kernels_of_class(&self, sig: &str) -> Vec<usize> {
+        self.kernels
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.class_signature() == sig)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.instances.iter().map(|i| self.kernels[i.kernel].flops()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::kernel::KernelBuilder;
+    use crate::ir::ops::OpKind;
+
+    fn tiny_model() -> ModelGraph {
+        let mut g = ModelGraph::new("tiny");
+        let conv = KernelBuilder::conv2d(1, 16, 32, 32, 16, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+        g.push(conv.clone());
+        g.push(conv); // repeated -> same unique kernel
+        g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 16, 32, 32, 2, 2, 2));
+        g.push(KernelBuilder::dense(1, 16 * 16 * 16, 10, &[OpKind::Add]));
+        g
+    }
+
+    #[test]
+    fn dedupes_repeated_kernels() {
+        let g = tiny_model();
+        assert_eq!(g.kernels.len(), 3);
+        assert_eq!(g.instances.len(), 4);
+        assert_eq!(g.use_count(0), 2);
+        assert_eq!(g.use_count(1), 1);
+    }
+
+    #[test]
+    fn producers_form_chain() {
+        let g = tiny_model();
+        assert_eq!(g.instances[0].producer, None);
+        assert_eq!(g.instances[3].producer, Some(2));
+    }
+
+    #[test]
+    fn class_listing() {
+        let g = tiny_model();
+        let sigs = g.class_signatures();
+        assert_eq!(sigs, vec!["conv2d_bias_relu", "max_pool2d", "dense_add"]);
+        assert_eq!(g.kernels_of_class("conv2d_bias_relu"), vec![0]);
+    }
+}

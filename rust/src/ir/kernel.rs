@@ -1,0 +1,478 @@
+//! Kernel construction: fused op sequences → canonical loop nests.
+//!
+//! These builders mirror the fusion conventions the paper inherits from
+//! TVM's Relay partitioner (§4.2): anchor op + fused epilogue
+//! (bias/activation/residual-add), pooling kernels, dense kernels, and the
+//! transformer kernels BERT/MobileBERT need.
+
+use super::loopnest::{AffineDim, Axis, AxisKind, BufferAccess, LoopNest};
+use super::ops::{AnchorKind, OpKind};
+use super::workload;
+
+pub const F32: u64 = 4;
+
+/// A fused kernel: the unit of auto-scheduling and transfer-tuning.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    /// Fused op sequence, anchor first.
+    pub ops: Vec<OpKind>,
+    pub anchor: AnchorKind,
+    pub nest: LoopNest,
+    /// Display shapes for Table-1-style inventories.
+    pub input_shape: Vec<u64>,
+    pub weight_shape: Vec<u64>,
+    /// Hash of (class signature, axis extents): identical kernels share
+    /// auto-schedules for free, exactly like Ansor workload ids (§2).
+    pub workload_id: u64,
+}
+
+impl Kernel {
+    /// `conv2d_bias_relu`-style signature string (paper "TVM Ops" column).
+    pub fn class_signature(&self) -> String {
+        workload::class_signature(&self.ops)
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.nest.flops()
+    }
+}
+
+fn finish(
+    ops: Vec<OpKind>,
+    nest: LoopNest,
+    input_shape: Vec<u64>,
+    weight_shape: Vec<u64>,
+) -> Kernel {
+    let anchor = AnchorKind::from_op(ops[0]);
+    // Hash loop extents AND raw input/weight shapes: two convs with the
+    // same output extents but different strides (56x56/2 vs 28x28/1) are
+    // different computations and must not share a workload id.
+    let mut key: Vec<u64> = nest.axes.iter().map(|a| a.extent).collect();
+    key.extend_from_slice(&input_shape);
+    key.extend_from_slice(&weight_shape);
+    let workload_id = workload::workload_id(&workload::class_signature(&ops), &key);
+    let epilogue: f64 = ops.iter().skip(1).map(|o| o.pointwise_cost()).sum();
+    let nest = LoopNest { epilogue_ops: epilogue, ..nest };
+    Kernel { ops, anchor, nest, input_shape, weight_shape, workload_id }
+}
+
+/// Builder for every kernel shape the model zoo uses.
+pub struct KernelBuilder;
+
+impl KernelBuilder {
+    /// 2D convolution, NCHW. `fused` is the epilogue (BiasAdd/Relu/Add...).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        n: u64,
+        ic: u64,
+        h: u64,
+        w: u64,
+        oc: u64,
+        kh: u64,
+        kw: u64,
+        stride: u64,
+        pad: u64,
+        fused: &[OpKind],
+    ) -> Kernel {
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        // axes: 0:n 1:oc 2:oh 3:ow | 4:ic 5:kh 6:kw
+        let axes = vec![
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "oc", extent: oc, kind: AxisKind::Spatial },
+            Axis { name: "oh", extent: oh, kind: AxisKind::Spatial },
+            Axis { name: "ow", extent: ow, kind: AxisKind::Spatial },
+            Axis { name: "ic", extent: ic, kind: AxisKind::Reduction },
+            Axis { name: "kh", extent: kh, kind: AxisKind::Reduction },
+            Axis { name: "kw", extent: kw, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(4),
+                    AffineDim::window(2, stride, 5),
+                    AffineDim::window(3, stride, 6),
+                ],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "W",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(1),
+                    AffineDim::axis(4),
+                    AffineDim::axis(5),
+                    AffineDim::axis(6),
+                ],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::axis(2),
+                    AffineDim::axis(3),
+                ],
+                is_output: true,
+            },
+        ];
+        let mut ops = vec![OpKind::Conv2d];
+        ops.extend_from_slice(fused);
+        finish(
+            ops,
+            LoopNest { axes, buffers, flops_per_point: 2.0, epilogue_ops: 0.0 },
+            vec![n, ic, h, w],
+            vec![oc, ic, kh, kw],
+        )
+    }
+
+    /// Depthwise 2D convolution (per-channel filter), NCHW.
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise_conv2d(
+        n: u64,
+        c: u64,
+        h: u64,
+        w: u64,
+        kh: u64,
+        kw: u64,
+        stride: u64,
+        pad: u64,
+        fused: &[OpKind],
+    ) -> Kernel {
+        let oh = (h + 2 * pad - kh) / stride + 1;
+        let ow = (w + 2 * pad - kw) / stride + 1;
+        // axes: 0:n 1:c 2:oh 3:ow | 4:kh 5:kw
+        let axes = vec![
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "c", extent: c, kind: AxisKind::Spatial },
+            Axis { name: "oh", extent: oh, kind: AxisKind::Spatial },
+            Axis { name: "ow", extent: ow, kind: AxisKind::Spatial },
+            Axis { name: "kh", extent: kh, kind: AxisKind::Reduction },
+            Axis { name: "kw", extent: kw, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::window(2, stride, 4),
+                    AffineDim::window(3, stride, 5),
+                ],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "W",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(1), AffineDim::axis(4), AffineDim::axis(5)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::axis(2),
+                    AffineDim::axis(3),
+                ],
+                is_output: true,
+            },
+        ];
+        let mut ops = vec![OpKind::DepthwiseConv2d];
+        ops.extend_from_slice(fused);
+        finish(
+            ops,
+            LoopNest { axes, buffers, flops_per_point: 2.0, epilogue_ops: 0.0 },
+            vec![n, c, h, w],
+            vec![c, 1, kh, kw],
+        )
+    }
+
+    /// Fully-connected layer: `Y[m,n] = X[m,k] * W[n,k]`.
+    pub fn dense(m: u64, k: u64, n: u64, fused: &[OpKind]) -> Kernel {
+        // axes: 0:m 1:n | 2:k
+        let axes = vec![
+            Axis { name: "m", extent: m, kind: AxisKind::Spatial },
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "k", extent: k, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(2)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "W",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(1), AffineDim::axis(2)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1)],
+                is_output: true,
+            },
+        ];
+        let mut ops = vec![OpKind::Dense];
+        ops.extend_from_slice(fused);
+        finish(
+            ops,
+            LoopNest { axes, buffers, flops_per_point: 2.0, epilogue_ops: 0.0 },
+            vec![m, k],
+            vec![n, k],
+        )
+    }
+
+    /// Batched matmul (attention): `Y[b,m,n] = sum_k A[b,m,k] B[b,k,n]`.
+    pub fn batch_matmul(b: u64, m: u64, k: u64, n: u64, fused: &[OpKind]) -> Kernel {
+        // axes: 0:b 1:m 2:n | 3:k
+        let axes = vec![
+            Axis { name: "b", extent: b, kind: AxisKind::Spatial },
+            Axis { name: "m", extent: m, kind: AxisKind::Spatial },
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "k", extent: k, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "A",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1), AffineDim::axis(3)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "B",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(3), AffineDim::axis(2)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1), AffineDim::axis(2)],
+                is_output: true,
+            },
+        ];
+        let mut ops = vec![OpKind::BatchMatMul];
+        ops.extend_from_slice(fused);
+        finish(
+            ops,
+            LoopNest { axes, buffers, flops_per_point: 2.0, epilogue_ops: 0.0 },
+            vec![b, m, k],
+            vec![b, k, n],
+        )
+    }
+
+    /// Max/avg pooling with window `(ph, pw)` and equal stride.
+    pub fn pool2d(op: OpKind, n: u64, c: u64, h: u64, w: u64, ph: u64, pw: u64, stride: u64) -> Kernel {
+        assert!(matches!(op, OpKind::MaxPool2d | OpKind::AvgPool2d));
+        let oh = (h - ph) / stride + 1;
+        let ow = (w - pw) / stride + 1;
+        // axes: 0:n 1:c 2:oh 3:ow | 4:ph 5:pw
+        let axes = vec![
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "c", extent: c, kind: AxisKind::Spatial },
+            Axis { name: "oh", extent: oh, kind: AxisKind::Spatial },
+            Axis { name: "ow", extent: ow, kind: AxisKind::Spatial },
+            Axis { name: "ph", extent: ph, kind: AxisKind::Reduction },
+            Axis { name: "pw", extent: pw, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::window(2, stride, 4),
+                    AffineDim::window(3, stride, 5),
+                ],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::axis(2),
+                    AffineDim::axis(3),
+                ],
+                is_output: true,
+            },
+        ];
+        finish(
+            vec![op],
+            LoopNest { axes, buffers, flops_per_point: 1.0, epilogue_ops: 0.0 },
+            vec![n, c, h, w],
+            vec![ph, pw],
+        )
+    }
+
+    /// Global average pool: NCHW → NC.
+    pub fn global_avg_pool(n: u64, c: u64, h: u64, w: u64) -> Kernel {
+        // axes: 0:n 1:c | 2:h 3:w
+        let axes = vec![
+            Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+            Axis { name: "c", extent: c, kind: AxisKind::Spatial },
+            Axis { name: "h", extent: h, kind: AxisKind::Reduction },
+            Axis { name: "w", extent: w, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![
+                    AffineDim::axis(0),
+                    AffineDim::axis(1),
+                    AffineDim::axis(2),
+                    AffineDim::axis(3),
+                ],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1)],
+                is_output: true,
+            },
+        ];
+        finish(
+            vec![OpKind::GlobalAvgPool2d],
+            LoopNest { axes, buffers, flops_per_point: 1.0, epilogue_ops: 0.0 },
+            vec![n, c, h, w],
+            vec![h, w],
+        )
+    }
+
+    /// Row-wise reduction kernels (softmax / layer-norm) over `[rows, cols]`.
+    pub fn row_reduce(op: OpKind, rows: u64, cols: u64, fused: &[OpKind]) -> Kernel {
+        assert!(matches!(op, OpKind::Softmax | OpKind::LayerNorm));
+        // axes: 0:rows | 1:cols
+        let axes = vec![
+            Axis { name: "rows", extent: rows, kind: AxisKind::Spatial },
+            Axis { name: "cols", extent: cols, kind: AxisKind::Reduction },
+        ];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0), AffineDim::axis(1)],
+                is_output: true,
+            },
+        ];
+        let mut ops = vec![op];
+        ops.extend_from_slice(fused);
+        // Softmax/LN do several passes: exp + sum + div ≈ 8 ops/point.
+        finish(
+            ops,
+            LoopNest { axes, buffers, flops_per_point: 8.0, epilogue_ops: 0.0 },
+            vec![rows, cols],
+            vec![],
+        )
+    }
+
+    /// Pure element-wise kernel over `points` elements (residual adds that
+    /// could not fuse, embedding lookups, transposes...).
+    pub fn eltwise(ops_seq: &[OpKind], points: u64) -> Kernel {
+        let axes = vec![Axis { name: "i", extent: points, kind: AxisKind::Spatial }];
+        let buffers = vec![
+            BufferAccess {
+                name: "X",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0)],
+                is_output: false,
+            },
+            BufferAccess {
+                name: "Y",
+                elem_bytes: F32,
+                dims: vec![AffineDim::axis(0)],
+                is_output: true,
+            },
+        ];
+        let cost: f64 = ops_seq.iter().map(|o| o.pointwise_cost().max(1.0)).sum();
+        finish(
+            ops_seq.to_vec(),
+            LoopNest { axes, buffers, flops_per_point: cost, epilogue_ops: 0.0 },
+            vec![points],
+            vec![],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shape_and_flops() {
+        // ResNet18 first layer: 224x224x3 -> 64 filters 7x7 stride 2 pad 3.
+        let k = KernelBuilder::conv2d(1, 3, 224, 224, 64, 7, 7, 2, 3, &[OpKind::BiasAdd, OpKind::Relu]);
+        let oh = k.nest.axes[2].extent;
+        assert_eq!(oh, 112);
+        assert_eq!(k.class_signature(), "conv2d_bias_relu");
+        // 2 * N*OC*OH*OW*IC*KH*KW MACs (+ epilogue)
+        let macs = 2.0 * (64 * 112 * 112 * 3 * 7 * 7) as f64;
+        assert!(k.flops() >= macs && k.flops() < macs * 1.01);
+    }
+
+    #[test]
+    fn identical_kernels_share_workload_id() {
+        let a = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+        let b = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+        assert_eq!(a.workload_id, b.workload_id);
+    }
+
+    #[test]
+    fn different_shape_different_id_same_class() {
+        let a = KernelBuilder::dense(256, 1024, 1024, &[]);
+        let b = KernelBuilder::dense(128, 1024, 1024, &[]);
+        assert_ne!(a.workload_id, b.workload_id);
+        assert_eq!(a.class_signature(), b.class_signature());
+    }
+
+    #[test]
+    fn different_fusion_different_class() {
+        let a = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+        let b = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Add, OpKind::Relu]);
+        assert_eq!(a.class_signature(), "conv2d_bias_relu");
+        assert_eq!(b.class_signature(), "conv2d_bias_add_relu");
+        assert_ne!(a.workload_id, b.workload_id);
+    }
+
+    #[test]
+    fn dense_input_footprint() {
+        let k = KernelBuilder::dense(256, 768, 3072, &[]);
+        let x = &k.nest.buffers[0];
+        assert_eq!(x.total_bytes(&k.nest.axes), 256 * 768 * 4);
+    }
+
+    #[test]
+    fn pool_flops_small() {
+        let k = KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 64, 112, 112, 2, 2, 2);
+        assert_eq!(k.nest.axes[2].extent, 56);
+        assert_eq!(k.class_signature(), "max_pool2d");
+    }
+
+    #[test]
+    fn depthwise_has_no_channel_reduction() {
+        let k = KernelBuilder::depthwise_conv2d(1, 32, 112, 112, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu6]);
+        assert_eq!(k.nest.reduction_axes().count(), 2);
+        assert_eq!(k.class_signature(), "dwconv2d_bias_relu6");
+    }
+}

@@ -1,0 +1,237 @@
+//! Canonical loop nests with affine buffer-access functions.
+//!
+//! A [`LoopNest`] is the analytic core of a kernel: an ordered list of
+//! axes (spatial then reduction) plus, for every buffer the kernel
+//! touches, an affine map from axes to buffer dimensions. The affine maps
+//! are what let the cost simulator compute *tile footprints* exactly —
+//! including convolution sliding windows, where the input footprint along
+//! a spatial dim is `stride*(oh_tile-1) + kh_tile` elements.
+
+/// Whether an axis is a data-parallel (spatial) or reduction axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AxisKind {
+    Spatial,
+    Reduction,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    pub name: &'static str,
+    pub extent: u64,
+    pub kind: AxisKind,
+}
+
+/// One buffer dimension as an affine combination of loop axes:
+/// `index = sum(coeff_i * axis_i) (+ const)`. The *range size* of the
+/// dimension under a tile assigning `t_i` iterations to axis `i` is
+/// `sum(coeff_i * (t_i - 1)) + 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AffineDim {
+    /// (axis index, stride coefficient) terms.
+    pub terms: Vec<(usize, u64)>,
+}
+
+impl AffineDim {
+    pub fn axis(a: usize) -> Self {
+        AffineDim { terms: vec![(a, 1)] }
+    }
+    pub fn strided(a: usize, stride: u64) -> Self {
+        AffineDim { terms: vec![(a, stride)] }
+    }
+    /// Conv-style window: `stride*oh + kh`.
+    pub fn window(spatial: usize, stride: u64, kernel: usize) -> Self {
+        AffineDim {
+            terms: vec![(spatial, stride), (kernel, 1)],
+        }
+    }
+
+    /// Number of distinct elements touched along this dim when axis `i`
+    /// runs for `tile[i]` iterations.
+    pub fn range_size(&self, tile: &[u64]) -> u64 {
+        let mut span = 0u64;
+        for &(axis, coeff) in &self.terms {
+            span += coeff * tile[axis].saturating_sub(1);
+        }
+        span + 1
+    }
+
+    /// Does this dim depend on `axis` at all?
+    pub fn uses_axis(&self, axis: usize) -> bool {
+        self.terms.iter().any(|&(a, _)| a == axis)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferAccess {
+    pub name: &'static str,
+    pub elem_bytes: u64,
+    pub dims: Vec<AffineDim>,
+    pub is_output: bool,
+}
+
+impl BufferAccess {
+    /// Bytes touched by a tile (per-axis iteration counts in canonical
+    /// axis order).
+    pub fn footprint_bytes(&self, tile: &[u64]) -> u64 {
+        self.dims
+            .iter()
+            .map(|d| d.range_size(tile))
+            .product::<u64>()
+            * self.elem_bytes
+    }
+
+    pub fn uses_axis(&self, axis: usize) -> bool {
+        self.dims.iter().any(|d| d.uses_axis(axis))
+    }
+
+    /// Total bytes of the buffer region the whole kernel touches.
+    pub fn total_bytes(&self, axes: &[Axis]) -> u64 {
+        let full: Vec<u64> = axes.iter().map(|a| a.extent).collect();
+        self.footprint_bytes(&full)
+    }
+}
+
+/// Canonical loop nest: spatial axes first (outer→inner by convention),
+/// then reduction axes. Schedules index axes by position in this list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoopNest {
+    pub axes: Vec<Axis>,
+    pub buffers: Vec<BufferAccess>,
+    /// FLOPs executed per innermost iteration point of the *full* domain
+    /// (2.0 for multiply-accumulate kernels, 1.0 for pooling, ...).
+    pub flops_per_point: f64,
+    /// Extra scalar ops applied per *output* point (fused epilogue:
+    /// bias/relu/swish...), used for body-cost and unroll/icache modeling.
+    pub epilogue_ops: f64,
+}
+
+impl LoopNest {
+    pub fn total_points(&self) -> f64 {
+        self.axes.iter().map(|a| a.extent as f64).product()
+    }
+
+    pub fn output_points(&self) -> f64 {
+        self.axes
+            .iter()
+            .filter(|a| a.kind == AxisKind::Spatial)
+            .map(|a| a.extent as f64)
+            .product()
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.total_points() * self.flops_per_point + self.output_points() * self.epilogue_ops
+    }
+
+    pub fn spatial_axes(&self) -> impl Iterator<Item = (usize, &Axis)> {
+        self.axes
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.kind == AxisKind::Spatial)
+    }
+
+    pub fn reduction_axes(&self) -> impl Iterator<Item = (usize, &Axis)> {
+        self.axes
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.kind == AxisKind::Reduction)
+    }
+
+    pub fn output_buffer(&self) -> &BufferAccess {
+        self.buffers
+            .iter()
+            .find(|b| b.is_output)
+            .expect("loop nest has no output buffer")
+    }
+
+    /// Bytes of every buffer the kernel touches once (compulsory traffic).
+    pub fn total_data_bytes(&self) -> u64 {
+        self.buffers.iter().map(|b| b.total_bytes(&self.axes)).sum()
+    }
+
+    /// Structural fingerprint: (axis kinds, buffer arity) — two nests with
+    /// different structure can never exchange schedules even if the class
+    /// signature collided.
+    pub fn skeleton(&self) -> Vec<AxisKind> {
+        self.axes.iter().map(|a| a.kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm(n: u64, m: u64, k: u64) -> LoopNest {
+        LoopNest {
+            axes: vec![
+                Axis { name: "n", extent: n, kind: AxisKind::Spatial },
+                Axis { name: "m", extent: m, kind: AxisKind::Spatial },
+                Axis { name: "k", extent: k, kind: AxisKind::Reduction },
+            ],
+            buffers: vec![
+                BufferAccess {
+                    name: "A",
+                    elem_bytes: 4,
+                    dims: vec![AffineDim::axis(0), AffineDim::axis(2)],
+                    is_output: false,
+                },
+                BufferAccess {
+                    name: "B",
+                    elem_bytes: 4,
+                    dims: vec![AffineDim::axis(2), AffineDim::axis(1)],
+                    is_output: false,
+                },
+                BufferAccess {
+                    name: "C",
+                    elem_bytes: 4,
+                    dims: vec![AffineDim::axis(0), AffineDim::axis(1)],
+                    is_output: true,
+                },
+            ],
+            flops_per_point: 2.0,
+            epilogue_ops: 0.0,
+        }
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let nest = gemm(512, 512, 512);
+        assert_eq!(nest.flops(), 2.0 * 512.0 * 512.0 * 512.0);
+    }
+
+    #[test]
+    fn tile_footprints() {
+        let nest = gemm(512, 512, 512);
+        // Tile: 8x8 output tile over full K.
+        let tile = [8, 8, 512];
+        let a = &nest.buffers[0];
+        let b = &nest.buffers[1];
+        let c = &nest.buffers[2];
+        assert_eq!(a.footprint_bytes(&tile), 8 * 512 * 4);
+        assert_eq!(b.footprint_bytes(&tile), 512 * 8 * 4);
+        assert_eq!(c.footprint_bytes(&tile), 8 * 8 * 4);
+    }
+
+    #[test]
+    fn window_range_size() {
+        // conv input dim: stride 2, oh tile 4, kh tile 3 -> 2*(4-1)+1*(3-1)+1 = 9
+        let d = AffineDim::window(0, 2, 1);
+        assert_eq!(d.range_size(&[4, 3]), 9);
+        // degenerate tile of 1x1 touches exactly 1 element
+        assert_eq!(d.range_size(&[1, 1]), 1);
+    }
+
+    #[test]
+    fn uses_axis() {
+        let d = AffineDim::window(0, 2, 1);
+        assert!(d.uses_axis(0));
+        assert!(d.uses_axis(1));
+        assert!(!d.uses_axis(2));
+    }
+
+    #[test]
+    fn total_data_bytes_gemm() {
+        let nest = gemm(64, 64, 64);
+        // 3 buffers of 64*64 f32
+        assert_eq!(nest.total_data_bytes(), 3 * 64 * 64 * 4);
+    }
+}

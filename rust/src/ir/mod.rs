@@ -1,0 +1,24 @@
+//! Tensor-program intermediate representation.
+//!
+//! This is the substrate the paper assumes from TVM: a tensor program
+//! (e.g. a DNN) is partitioned into *kernels* — fused loop nests such as
+//! `conv2d_bias_relu` — which are optimized independently (paper §2).
+//!
+//! The IR is deliberately analytic rather than executable: a kernel
+//! carries its canonical loop-nest structure (axes, buffer access
+//! functions, per-point cost), which is what the schedule primitives
+//! transform and what the device cost simulator consumes. *Executable*
+//! kernels live in the Python/Pallas layer and are exercised through the
+//! PJRT runtime (`crate::runtime`).
+
+pub mod graph;
+pub mod kernel;
+pub mod loopnest;
+pub mod ops;
+pub mod workload;
+
+pub use graph::{KernelInstance, ModelGraph};
+pub use kernel::{Kernel, KernelBuilder};
+pub use loopnest::{AffineDim, Axis, AxisKind, BufferAccess, LoopNest};
+pub use ops::{AnchorKind, OpKind};
+pub use workload::{class_signature, workload_id};

@@ -1,0 +1,150 @@
+//! Operation vocabulary.
+//!
+//! A kernel is a fused sequence of [`OpKind`]s; the sequence is the kernel's
+//! *class signature* (paper §4.2: "a kernel class is a set of kernels that
+//! share the same sequence of operations, regardless of their data sizes").
+//! The first "heavy" op in the sequence is the *anchor*: it determines the
+//! canonical loop-nest skeleton, and therefore which schedules can be
+//! structurally applied at all.
+
+/// All operations our model zoo needs (superset of the paper's Table 1/2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    // Anchors (define the loop nest).
+    Conv2d,
+    DepthwiseConv2d,
+    Dense,
+    BatchMatMul,
+    MaxPool2d,
+    AvgPool2d,
+    GlobalAvgPool2d,
+    Softmax,
+    LayerNorm,
+    // Fused element-wise / epilogue ops.
+    Add,     // residual / skip-connection addition
+    BiasAdd, // per-channel bias
+    Relu,
+    Relu6,
+    Swish,
+    Sigmoid,
+    Gelu,
+    Tanh,
+    Mul, // squeeze-and-excite channel scale
+    Flatten,
+    Embedding,
+    Transpose,
+}
+
+impl OpKind {
+    /// Lower-case token used in class signatures; matches the paper's
+    /// "TVM Ops" column (e.g. `conv2d_bias_relu`).
+    pub fn token(self) -> &'static str {
+        match self {
+            OpKind::Conv2d => "conv2d",
+            OpKind::DepthwiseConv2d => "dwconv2d",
+            OpKind::Dense => "dense",
+            OpKind::BatchMatMul => "batch_matmul",
+            OpKind::MaxPool2d => "max_pool2d",
+            OpKind::AvgPool2d => "avg_pool2d",
+            OpKind::GlobalAvgPool2d => "global_avg_pool2d",
+            OpKind::Softmax => "softmax",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::Add => "add",
+            OpKind::BiasAdd => "bias",
+            OpKind::Relu => "relu",
+            OpKind::Relu6 => "relu6",
+            OpKind::Swish => "swish",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::Gelu => "gelu",
+            OpKind::Tanh => "tanh",
+            OpKind::Mul => "mul",
+            OpKind::Flatten => "flatten",
+            OpKind::Embedding => "embedding",
+            OpKind::Transpose => "transpose",
+        }
+    }
+
+    /// Approximate scalar-op cost of applying this op once to one output
+    /// point (used for the fused-epilogue part of the body cost).
+    pub fn pointwise_cost(self) -> f64 {
+        match self {
+            OpKind::Add | OpKind::BiasAdd | OpKind::Relu | OpKind::Relu6 | OpKind::Mul => 1.0,
+            OpKind::Sigmoid | OpKind::Tanh => 8.0,
+            OpKind::Swish | OpKind::Gelu => 10.0,
+            _ => 0.0,
+        }
+    }
+
+    pub fn is_anchor(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d
+                | OpKind::DepthwiseConv2d
+                | OpKind::Dense
+                | OpKind::BatchMatMul
+                | OpKind::MaxPool2d
+                | OpKind::AvgPool2d
+                | OpKind::GlobalAvgPool2d
+                | OpKind::Softmax
+                | OpKind::LayerNorm
+        )
+    }
+}
+
+/// Loop-nest skeleton family. Two kernels can only share a schedule if
+/// their class signatures match, which implies equal anchors; the anchor is
+/// also what the sketch generator keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AnchorKind {
+    Conv2d,     // axes: n, oc, oh, ow | red: ic, kh, kw
+    Depthwise,  // axes: n, c, oh, ow  | red: kh, kw
+    Dense,      // axes: m, n          | red: k
+    BatchMatMul, // axes: b, m, n      | red: k
+    Pool2d,     // axes: n, c, oh, ow  | red: kh, kw
+    GlobalPool, // axes: n, c          | red: h, w
+    Eltwise,    // axes: flattened points | no reduction
+    RowReduce,  // axes: rows          | red: cols (softmax / layernorm)
+}
+
+impl AnchorKind {
+    pub fn from_op(op: OpKind) -> AnchorKind {
+        match op {
+            OpKind::Conv2d => AnchorKind::Conv2d,
+            OpKind::DepthwiseConv2d => AnchorKind::Depthwise,
+            OpKind::Dense => AnchorKind::Dense,
+            OpKind::BatchMatMul => AnchorKind::BatchMatMul,
+            OpKind::MaxPool2d | OpKind::AvgPool2d => AnchorKind::Pool2d,
+            OpKind::GlobalAvgPool2d => AnchorKind::GlobalPool,
+            OpKind::Softmax | OpKind::LayerNorm => AnchorKind::RowReduce,
+            _ => AnchorKind::Eltwise,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_stable() {
+        // Class signatures are persisted in schedule stores; tokens must
+        // not change silently.
+        assert_eq!(OpKind::Conv2d.token(), "conv2d");
+        assert_eq!(OpKind::BiasAdd.token(), "bias");
+        assert_eq!(OpKind::GlobalAvgPool2d.token(), "global_avg_pool2d");
+    }
+
+    #[test]
+    fn anchors_map() {
+        assert_eq!(AnchorKind::from_op(OpKind::Conv2d), AnchorKind::Conv2d);
+        assert_eq!(AnchorKind::from_op(OpKind::MaxPool2d), AnchorKind::Pool2d);
+        assert_eq!(AnchorKind::from_op(OpKind::Softmax), AnchorKind::RowReduce);
+        assert_eq!(AnchorKind::from_op(OpKind::Relu), AnchorKind::Eltwise);
+    }
+
+    #[test]
+    fn anchor_ops_flagged() {
+        assert!(OpKind::Dense.is_anchor());
+        assert!(!OpKind::Relu.is_anchor());
+    }
+}

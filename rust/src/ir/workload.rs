@@ -1,0 +1,62 @@
+//! Workload identity: class signatures and workload ids.
+//!
+//! Ansor gives every kernel a workload id — "the hash of its key
+//! parameters (e.g., operation type, input data sizes)" (paper §2) — so
+//! identical kernels reuse schedules for free. Transfer-tuning relaxes the
+//! identity to the *class signature* (op sequence only, shapes ignored),
+//! which is the paper's central idea (§4.2).
+
+use super::ops::OpKind;
+
+/// FNV-1a, 64-bit. Stable across runs/platforms; used for workload ids.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// `conv2d_bias_relu`-style signature for a fused op sequence.
+pub fn class_signature(ops: &[OpKind]) -> String {
+    ops.iter().map(|o| o.token()).collect::<Vec<_>>().join("_")
+}
+
+/// Workload id = hash(class signature, all axis extents).
+pub fn workload_id(class_sig: &str, extents: &[u64]) -> u64 {
+    let mut bytes = Vec::with_capacity(class_sig.len() + extents.len() * 8);
+    bytes.extend_from_slice(class_sig.as_bytes());
+    for e in extents {
+        bytes.extend_from_slice(&e.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_joins_tokens() {
+        let sig = class_signature(&[OpKind::Conv2d, OpKind::BiasAdd, OpKind::Add, OpKind::Relu]);
+        assert_eq!(sig, "conv2d_bias_add_relu");
+    }
+
+    #[test]
+    fn workload_id_sensitive_to_extents() {
+        assert_ne!(workload_id("dense", &[256, 768, 768]), workload_id("dense", &[128, 768, 768]));
+        assert_eq!(workload_id("dense", &[256, 768, 768]), workload_id("dense", &[256, 768, 768]));
+    }
+
+    #[test]
+    fn workload_id_sensitive_to_class() {
+        assert_ne!(workload_id("dense", &[64]), workload_id("conv2d", &[64]));
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("") = offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+    }
+}

@@ -1,0 +1,41 @@
+//! # transfer-tuning
+//!
+//! A from-scratch reproduction of *Transfer-Tuning: Reusing
+//! Auto-Schedules for Efficient Tensor Program Code Generation*
+//! (Gibson & Cano, 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains the paper's complete system and every substrate it
+//! depends on:
+//!
+//! * [`ir`] — tensor-program IR: kernels as canonical loop nests with
+//!   affine buffer accesses, model graphs with use counts.
+//! * [`models`] — the 11-model DNN zoo of the paper's evaluation
+//!   (ResNet18/50, AlexNet, VGG-16, MobileNetV2, EfficientNetB0/B4,
+//!   GoogLeNet, MnasNet1.0, BERT, MobileBERT).
+//! * [`sched`] — the schedule language (Split/Reorder/Fuse/Parallel/
+//!   Unroll/Vectorize/ComputeAt/cache-write) in shape-relative form,
+//!   with application + transfer legality checking.
+//! * [`device`] — analytic CPU cost simulator with Xeon-E5-2620 and
+//!   Cortex-A72 profiles (the measurement substrate).
+//! * [`autosched`] — the Ansor-like auto-scheduler baseline: sketch
+//!   generation, evolutionary search, learned cost model, gradient task
+//!   scheduler.
+//! * [`transfer`] — the paper's contribution: kernel classes, the
+//!   schedule store, the model-selection heuristic (Eq. 1), and the
+//!   one-to-one / mixed-pool transfer-tuning engines.
+//! * [`coordinator`] — measurement worker pool, search-time ledger, and
+//!   RPC-device emulation for edge tuning.
+//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas/JAX
+//!   artifacts (the *real* hot path; Python is never on it).
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod autosched;
+pub mod coordinator;
+pub mod device;
+pub mod ir;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod transfer;
+pub mod util;

@@ -1,0 +1,457 @@
+//! `repro` — the launcher for the transfer-tuning system.
+//!
+//! Every table and figure of the paper is a subcommand (see DESIGN.md §4
+//! for the experiment index). Results print as aligned tables and are
+//! also written as CSV under `results/`.
+//!
+//! ```text
+//! repro models                         # model zoo inventory
+//! repro table t1|t2|t3|t4              # paper tables
+//! repro figure fig1|fig4|fig5|fig6|fig7|fig8
+//! repro gemm-transfer                  # §4.1 GEMM example (simulated)
+//! repro tune --model ResNet18          # Ansor-tune one model
+//! repro transfer --model ResNet18 --source ResNet50
+//! repro show-schedule --model ResNet18 --kernel 6
+//! repro all                            # everything (one zoo per device)
+//! ```
+//!
+//! Common flags: `--trials N` (Ansor budget; paper uses 20000),
+//! `--seed S`, `--device server|edge`, `--out DIR` (CSV directory).
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::{untuned_model_time, DeviceProfile};
+use transfer_tuning::models;
+use transfer_tuning::report::{figures, tables, ExperimentConfig, Zoo};
+use transfer_tuning::sched::trace;
+use transfer_tuning::transfer::{transfer_tune_one_to_one, ScheduleStore};
+use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
+
+#[derive(Clone, Debug)]
+struct Cli {
+    command: String,
+    target: Option<String>, // positional after command (table/figure name)
+    model: Option<String>,
+    source: Option<String>,
+    kernel: Option<usize>,
+    trials: usize,
+    seed: u64,
+    device: DeviceProfile,
+    out: PathBuf,
+    store_path: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Cli> {
+    let mut args = std::env::args().skip(1).peekable();
+    let command = args.next().unwrap_or_else(|| "help".into());
+    let mut cli = Cli {
+        command,
+        target: None,
+        model: None,
+        source: None,
+        kernel: None,
+        trials: 2000,
+        seed: 0xA45,
+        device: DeviceProfile::xeon_e5_2620(),
+        out: PathBuf::from("results"),
+        store_path: None,
+    };
+    while let Some(arg) = args.next() {
+        let mut value = |name: &str| -> Result<String> {
+            args.next().with_context(|| format!("flag {name} needs a value"))
+        };
+        match arg.as_str() {
+            "--model" => cli.model = Some(value("--model")?),
+            "--source" => cli.source = Some(value("--source")?),
+            "--kernel" => cli.kernel = Some(value("--kernel")?.parse()?),
+            "--trials" => cli.trials = value("--trials")?.parse()?,
+            "--seed" => cli.seed = value("--seed")?.parse()?,
+            "--device" => {
+                let name = value("--device")?;
+                cli.device = DeviceProfile::by_name(&name)
+                    .with_context(|| format!("unknown device `{name}` (server|edge)"))?;
+            }
+            "--out" => cli.out = PathBuf::from(value("--out")?),
+            "--store" => cli.store_path = Some(PathBuf::from(value("--store")?)),
+            other if !other.starts_with("--") && cli.target.is_none() => {
+                cli.target = Some(other.to_string())
+            }
+            other => bail!("unknown flag `{other}` (see `repro help`)"),
+        }
+    }
+    Ok(cli)
+}
+
+fn emit(table: &Table, out_dir: &PathBuf, slug: &str) -> Result<()> {
+    print!("{}", table.render());
+    let path = table.write_csv(out_dir, slug)?;
+    println!("[csv] {}\n", path.display());
+    Ok(())
+}
+
+fn build_zoo(cli: &Cli) -> Zoo {
+    eprintln!(
+        "building zoo: device={} trials={} seed={} (deterministic)",
+        cli.device.name, cli.trials, cli.seed
+    );
+    Zoo::build(
+        ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() },
+        |line| eprintln!("  {line}"),
+    )
+}
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(
+        "Model zoo",
+        &["Model", "Unique kernels", "Instances", "Classes", "GFLOPs"],
+    );
+    for m in models::all_models() {
+        t.row(vec![
+            m.name.clone(),
+            m.kernels.len().to_string(),
+            m.instances.len().to_string(),
+            m.class_signatures().len().to_string(),
+            format!("{:.2}", m.total_flops() / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    let mut t = Table::new(
+        "Device profiles",
+        &["Name", "Cores", "Freq", "SIMD", "Peak GFLOP/s", "DRAM GB/s", "RPC/meas"],
+    );
+    for p in [DeviceProfile::xeon_e5_2620(), DeviceProfile::cortex_a72()] {
+        t.row(vec![
+            p.name.to_string(),
+            p.cores.to_string(),
+            format!("{:.1} GHz", p.freq_ghz),
+            format!("{}-bit", p.simd_bits),
+            format!("{:.0}", p.peak_flops() / 1e9),
+            format!("{:.0}", p.dram_gbps),
+            format!("{:.1}s", p.rpc_overhead_s),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table(cli: &Cli) -> Result<()> {
+    let which = cli.target.clone().unwrap_or_default();
+    match which.as_str() {
+        "t1" | "table1" | "1" => emit(&tables::table1(), &cli.out, "table1")?,
+        "t2" | "table2" | "2" => {
+            let zoo = build_zoo(cli);
+            emit(&tables::table2(&zoo), &cli.out, "table2")?;
+        }
+        "t3" | "table3" | "3" => {
+            let zoo = build_zoo(cli);
+            emit(&tables::table3(&zoo), &cli.out, "table3")?;
+        }
+        "t4" | "table4" | "4" => {
+            let zoo = build_zoo(cli);
+            emit(&tables::table4(&zoo), &cli.out, "table4")?;
+        }
+        other => bail!("unknown table `{other}` (t1|t2|t3|t4)"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(cli: &Cli) -> Result<()> {
+    let which = cli.target.clone().unwrap_or_default();
+    match which.as_str() {
+        "fig1" | "1" => {
+            let zoo = build_zoo(cli);
+            emit(&figures::fig1(&zoo), &cli.out, "fig1")?;
+        }
+        "fig4" | "4" => {
+            let zoo = build_zoo(cli);
+            emit(&figures::fig4(&zoo), &cli.out, "fig4")?;
+        }
+        "fig5" | "5" => {
+            let zoo = build_zoo(cli);
+            emit(&figures::fig5(&zoo), &cli.out, "fig5")?;
+        }
+        "fig6" | "6" => {
+            // Fig 6 is Fig 5 on the edge device.
+            let mut edge_cli = cli.clone();
+            edge_cli.device = DeviceProfile::cortex_a72();
+            let zoo = build_zoo(&edge_cli);
+            emit(&figures::fig5(&zoo), &cli.out, "fig6")?;
+        }
+        "fig7" | "7" => {
+            let config =
+                ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+            let t = figures::fig7(&config, |l| eprintln!("  {l}"));
+            emit(&t, &cli.out, "fig7")?;
+        }
+        "fig8" | "8" => {
+            let zoo = build_zoo(cli);
+            emit(&figures::fig8(&zoo), &cli.out, "fig8")?;
+        }
+        other => bail!("unknown figure `{other}` (fig1|fig4|fig5|fig6|fig7|fig8)"),
+    }
+    Ok(())
+}
+
+fn cmd_tune(cli: &Cli) -> Result<()> {
+    let name = cli.model.clone().context("--model required")?;
+    let graph = models::by_name(&name).with_context(|| format!("unknown model `{name}`"))?;
+    let opts = TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() };
+    eprintln!("tuning {name} ({} unique kernels) ...", graph.kernels.len());
+    let res = tune_model(&graph, &cli.device, &opts);
+    let untuned = untuned_model_time(&graph, &cli.device);
+    let tuned = res.final_model_time(&graph, &cli.device);
+    let mut t = Table::new(
+        &format!("Ansor tuning of {name} on {}", cli.device.name),
+        &["Trials", "Search time", "Untuned", "Tuned", "Speedup"],
+    );
+    t.row(vec![
+        res.trials_used.to_string(),
+        fmt_duration(res.search_time_s),
+        fmt_duration(untuned),
+        fmt_duration(tuned),
+        fmt_speedup(untuned / tuned),
+    ]);
+    emit(&t, &cli.out, &format!("tune_{}", name.to_lowercase()))?;
+
+    if let Some(path) = &cli.store_path {
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&graph, &res);
+        store.save(path)?;
+        println!("[store] {} records -> {}", store.records.len(), path.display());
+    }
+    Ok(())
+}
+
+fn cmd_transfer(cli: &Cli) -> Result<()> {
+    let target_name = cli.model.clone().context("--model required")?;
+    let target =
+        models::by_name(&target_name).with_context(|| format!("unknown model `{target_name}`"))?;
+
+    // Load a store from disk, or tune the source model on the fly.
+    let (store, source) = match (&cli.store_path, &cli.source) {
+        (Some(path), src) => {
+            let store = ScheduleStore::load(path)?;
+            let source = src
+                .clone()
+                .or_else(|| store.source_models().first().cloned())
+                .context("store is empty")?;
+            (store, source)
+        }
+        (None, Some(src)) => {
+            let sg = models::by_name(src).with_context(|| format!("unknown model `{src}`"))?;
+            eprintln!("tuning source {src} first ({} trials) ...", cli.trials);
+            let res = tune_model(&sg, &cli.device, &TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() });
+            let mut store = ScheduleStore::new();
+            store.add_tuning(&sg, &res);
+            (store, src.clone())
+        }
+        (None, None) => bail!("need --source MODEL or --store FILE"),
+    };
+
+    let res = transfer_tune_one_to_one(&target, &store, &source, &cli.device, cli.seed);
+    let mut t = Table::new(
+        &format!("Transfer-tuning {target_name} from {source} ({})", cli.device.name),
+        &["Pairs", "Invalid", "Search time", "Untuned", "Transfer-tuned", "Speedup"],
+    );
+    t.row(vec![
+        res.pairs_evaluated().to_string(),
+        res.invalid_pairs().to_string(),
+        fmt_duration(res.search_time_s()),
+        fmt_duration(res.untuned_model_s),
+        fmt_duration(res.tuned_model_s),
+        fmt_speedup(res.speedup()),
+    ]);
+    emit(&t, &cli.out, &format!("transfer_{}", target_name.to_lowercase()))?;
+    Ok(())
+}
+
+fn cmd_show_schedule(cli: &Cli) -> Result<()> {
+    let name = cli.model.clone().context("--model required")?;
+    let graph = models::by_name(&name).with_context(|| format!("unknown model `{name}`"))?;
+    let kidx = cli.kernel.unwrap_or(0);
+    let kernel = graph.kernels.get(kidx).with_context(|| {
+        format!("kernel {kidx} out of range (model has {})", graph.kernels.len())
+    })?;
+    let opts = TuneOptions { trials: cli.trials.min(512), seed: cli.seed, ..Default::default() };
+    let mut solo = transfer_tuning::ir::ModelGraph::new("solo");
+    solo.push(kernel.clone());
+    let res = tune_model(&solo, &cli.device, &opts);
+    let best = res.best.get(&0).context("no schedule found")?;
+    println!(
+        "# {} kernel {} ({}), input {:?}",
+        name,
+        kidx,
+        kernel.class_signature(),
+        kernel.input_shape
+    );
+    println!("# best cost {:.4} ms — Algorithm-1 style trace:\n", best.cost_s * 1e3);
+    print!("{}", trace::trace(&best.schedule, kernel));
+    Ok(())
+}
+
+fn cmd_all(cli: &Cli) -> Result<()> {
+    emit(&tables::table1(), &cli.out, "table1")?;
+    emit(&tables::gemm_transfer(&cli.device, cli.seed), &cli.out, "gemm_transfer")?;
+
+    let zoo = build_zoo(cli);
+    emit(&figures::fig1(&zoo), &cli.out, "fig1")?;
+    emit(&figures::fig4(&zoo), &cli.out, "fig4")?;
+    emit(&figures::fig5(&zoo), &cli.out, "fig5")?;
+    emit(&tables::table2(&zoo), &cli.out, "table2")?;
+    emit(&tables::table3(&zoo), &cli.out, "table3")?;
+    emit(&tables::table4(&zoo), &cli.out, "table4")?;
+    emit(&figures::fig8(&zoo), &cli.out, "fig8")?;
+
+    let config = ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+    emit(&figures::fig7(&config, |l| eprintln!("  {l}")), &cli.out, "fig7")?;
+
+    let mut edge_cli = cli.clone();
+    edge_cli.device = DeviceProfile::cortex_a72();
+    let edge_zoo = build_zoo(&edge_cli);
+    emit(&figures::fig5(&edge_zoo), &cli.out, "fig6")?;
+    Ok(())
+}
+
+/// `repro serve`: a real serving loop over the AOT-compiled CNN
+/// artifacts — Poisson request arrivals, FIFO queue, PJRT execution,
+/// latency percentiles. Demonstrates the L3 request path end to end
+/// (Python nowhere in sight).
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use transfer_tuning::coordinator::LatencyHistogram;
+    use transfer_tuning::runtime::{artifacts_dir, Runtime};
+    use transfer_tuning::util::rng::Rng;
+
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        bail!("artifacts not found in {} — run `make artifacts` first", dir.display());
+    }
+    let n_requests = cli.trials.min(2000); // reuse --trials as request count
+    let variant = cli.source.clone().unwrap_or_else(|| "tuned".into());
+    let rt = Runtime::cpu()?;
+    let kernel = rt.load_hlo_text(&dir.join(format!("model_{variant}.hlo.txt")))?;
+
+    // Inputs: synthetic image + weights (weight-value independent timing).
+    let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let manifest = transfer_tuning::util::json::parse(&manifest)?;
+    let shapes: Vec<Vec<i64>> = manifest
+        .req(&format!("model_{variant}"))?
+        .req("inputs")?
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_arr().unwrap().iter().map(|d| d.as_f64().unwrap() as i64).collect())
+        .collect();
+    let mut rng = Rng::new(cli.seed);
+    let buffers: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|s| {
+            (0..s.iter().product::<i64>() as usize)
+                .map(|_| rng.f64() as f32 - 0.5)
+                .collect()
+        })
+        .collect();
+    let inputs: Vec<(&[f32], &[i64])> =
+        buffers.iter().zip(&shapes).map(|(b, s)| (b.as_slice(), s.as_slice())).collect();
+
+    // Warm up, then estimate service rate to set a 70%-utilization
+    // arrival rate (stable queue).
+    let service_s = kernel.bench_f32(&inputs, 3, 10)?;
+    let arrival_rate = 0.7 / service_s;
+    eprintln!(
+        "serving model_{variant}: service time {:.3} ms -> offered load {:.0} req/s (70% util), {n_requests} requests",
+        service_s * 1e3,
+        arrival_rate
+    );
+
+    // Poisson arrivals; FIFO queue; sequential device (one executable).
+    let mut hist = LatencyHistogram::new();
+    let mut queue_free_at = 0.0f64; // when the device becomes free (virtual clock)
+    let mut arrival = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_requests {
+        arrival += -arrival_rate.recip() * (1.0 - rng.f64()).ln();
+        // Execute for real; use measured time as this request's service time.
+        let s0 = std::time::Instant::now();
+        let out = kernel.run_f32(&inputs)?;
+        anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite logits");
+        let service = s0.elapsed().as_secs_f64();
+        let start = queue_free_at.max(arrival);
+        let done = start + service;
+        queue_free_at = done;
+        hist.record(done - arrival);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("Serving report: model_{variant} (PJRT CPU, Poisson open loop @70% util)"),
+        &["Requests", "Throughput", "p50", "p95", "p99", "Mean"],
+    );
+    t.row(vec![
+        hist.total.to_string(),
+        format!("{:.0} req/s", n_requests as f64 / wall),
+        format!("{:.3} ms", hist.percentile(50.0) * 1e3),
+        format!("{:.3} ms", hist.percentile(95.0) * 1e3),
+        format!("{:.3} ms", hist.percentile(99.0) * 1e3),
+        format!("{:.3} ms", hist.mean() * 1e3),
+    ]);
+    emit(&t, &cli.out, &format!("serve_{variant}"))?;
+    Ok(())
+}
+
+const HELP: &str = "\
+repro — Transfer-Tuning reproduction (Gibson & Cano, 2022)
+
+USAGE: repro <command> [args] [flags]
+
+COMMANDS
+  models                      list the 11-model zoo
+  devices                     list device profiles
+  table t1|t2|t3|t4           reproduce a paper table
+  figure fig1|fig4|fig5|fig6|fig7|fig8
+                              reproduce a paper figure (as data table + CSV)
+  gemm-transfer               the §4.1 GEMM cross-application example
+  tune --model M              Ansor-tune one model (--store F saves schedules)
+  transfer --model M --source S | --store F
+                              transfer-tune M from S's schedules
+  show-schedule --model M --kernel I
+                              print a tuned schedule as an Algorithm-1 trace
+  serve [--source default|tuned] [--trials N]
+                              serve the AOT CNN artifact: Poisson open loop,
+                              latency percentiles (real PJRT execution)
+  all                         every table + figure (server zoo + edge zoo)
+
+FLAGS
+  --trials N    Ansor trial budget (default 2000; paper uses 20000)
+  --seed S      RNG seed (default 0xA45)
+  --device D    server | edge (default server)
+  --out DIR     CSV output directory (default results/)
+  --store FILE  schedule-store path (JSONL)
+";
+
+fn main() -> Result<()> {
+    let cli = parse_args()?;
+    match cli.command.as_str() {
+        "models" => cmd_models(),
+        "devices" => cmd_devices(),
+        "table" => cmd_table(&cli),
+        "figure" => cmd_figure(&cli),
+        "gemm-transfer" => {
+            emit(&tables::gemm_transfer(&cli.device, cli.seed), &cli.out, "gemm_transfer")
+        }
+        "tune" => cmd_tune(&cli),
+        "transfer" => cmd_transfer(&cli),
+        "serve" => cmd_serve(&cli),
+        "show-schedule" => cmd_show_schedule(&cli),
+        "all" => cmd_all(&cli),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{HELP}"),
+    }
+}

@@ -1,0 +1,66 @@
+//! AlexNet (Krizhevsky et al., 2012) and VGG-style helpers.
+//!
+//! Table 2 row M2: classes B(3) max-pool, D(1) final classifier,
+//! E(5) conv+bias+relu, H(2) dense+bias+relu (the two giant FC layers
+//! that dominate 80% of untuned inference time), I(1) flatten.
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu];
+
+pub fn alexnet() -> ModelGraph {
+    let mut g = ModelGraph::new("AlexNet");
+    // conv1: 96 filters 11x11/4.
+    g.push(KernelBuilder::conv2d(1, 3, 224, 224, 96, 11, 11, 4, 2, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 96, 55, 55, 3, 3, 2));
+    // conv2: 256 filters 5x5.
+    g.push(KernelBuilder::conv2d(1, 96, 27, 27, 256, 5, 5, 1, 2, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 256, 27, 27, 3, 3, 2));
+    // conv3-5: 3x3.
+    g.push(KernelBuilder::conv2d(1, 256, 13, 13, 384, 3, 3, 1, 1, BIAS_RELU));
+    g.push(KernelBuilder::conv2d(1, 384, 13, 13, 384, 3, 3, 1, 1, BIAS_RELU));
+    g.push(KernelBuilder::conv2d(1, 384, 13, 13, 256, 3, 3, 1, 1, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 256, 13, 13, 3, 3, 2));
+    // Flatten 256*6*6 -> 9216.
+    g.push(KernelBuilder::eltwise(&[OpKind::Flatten], 256 * 6 * 6));
+    // The two huge FC layers (class H, 80% of untuned time).
+    g.push(KernelBuilder::dense(1, 9216, 4096, BIAS_RELU));
+    g.push(KernelBuilder::dense(1, 4096, 4096, BIAS_RELU));
+    // Classifier (class D).
+    g.push(KernelBuilder::dense(1, 4096, 1000, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn matches_table2_row_m2() {
+        let g = alexnet();
+        let mut c: BTreeMap<String, usize> = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        assert_eq!(c["max_pool2d"], 3); // B
+        assert_eq!(c["dense_add"], 1); // D
+        assert_eq!(c["conv2d_bias_relu"], 5); // E
+        assert_eq!(c["dense_bias_relu"], 2); // H
+        assert_eq!(c["flatten"], 1); // I
+        assert_eq!(g.kernels.len(), 12);
+    }
+
+    #[test]
+    fn fc_layers_dominate_weights() {
+        // fc6 alone is 9216*4096 ≈ 37.7M weights — the paper's note that
+        // H is 80% of untuned inference time rests on this.
+        let g = alexnet();
+        let fc6 = g
+            .kernels
+            .iter()
+            .find(|k| k.class_signature() == "dense_bias_relu" && k.input_shape[1] == 9216)
+            .unwrap();
+        assert_eq!(fc6.weight_shape, vec![4096, 9216]);
+    }
+}

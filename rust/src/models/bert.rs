@@ -1,0 +1,166 @@
+//! BERT-base and MobileBERT for sequence classification (paper §5.1),
+//! parameterized by sequence length (§5.4 varies it: 128 vs 256).
+//!
+//! Table 2 rows M9/M10: the models are utterly dominated by class Q
+//! (`dense`, 98%/97% of untuned time). BERT-base deduplicates to exactly
+//! 3 unique dense kernels — QKV/attention-output projections share the
+//! (S,768)x(768,768) shape; the FFN contributes (S,768)x(768,3072) and
+//! (S,3072)x(3072,768). Class R is the pair of attention batch-matmuls,
+//! S softmax, T layer-norm, U GELU, V the embedding add; D is the final
+//! classifier head. This is why the paper's BERT numbers are extreme:
+//! transfer a good dense schedule and you have transferred 98% of the
+//! model.
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+/// BERT-base: 12 layers, hidden 768, 12 heads, FFN 3072.
+pub fn bert(seq: u64) -> ModelGraph {
+    let name = if seq == super::DEFAULT_SEQ_LEN {
+        "BERT".to_string()
+    } else {
+        format!("BERT-{seq}")
+    };
+    let mut g = ModelGraph::new(&name);
+    let hidden = 768u64;
+    let heads = 12u64;
+    let head_dim = hidden / heads;
+    let ffn = 3072u64;
+
+    // Embedding lookup + position/segment adds (class V).
+    g.push(KernelBuilder::eltwise(&[OpKind::Embedding, OpKind::Add], seq * hidden));
+
+    for _ in 0..12 {
+        // Q, K, V projections — identical shapes, dedupe to one workload.
+        for _ in 0..3 {
+            g.push(KernelBuilder::dense(seq, hidden, hidden, &[]));
+        }
+        // Attention scores QK^T (class R) + softmax (class S).
+        g.push(KernelBuilder::batch_matmul(heads, seq, head_dim, seq, &[]));
+        g.push(KernelBuilder::row_reduce(OpKind::Softmax, heads * seq, seq, &[]));
+        // Attention-weighted values (class R, second unique shape).
+        g.push(KernelBuilder::batch_matmul(heads, seq, seq, head_dim, &[]));
+        // Output projection (dedupes with QKV).
+        g.push(KernelBuilder::dense(seq, hidden, hidden, &[]));
+        // LayerNorm (class T).
+        g.push(KernelBuilder::row_reduce(OpKind::LayerNorm, seq, hidden, &[]));
+        // FFN: up (with GELU as separate class-U kernel) and down.
+        g.push(KernelBuilder::dense(seq, hidden, ffn, &[]));
+        g.push(KernelBuilder::eltwise(&[OpKind::Gelu], seq * ffn));
+        g.push(KernelBuilder::dense(seq, ffn, hidden, &[]));
+        g.push(KernelBuilder::row_reduce(OpKind::LayerNorm, seq, hidden, &[]));
+    }
+
+    // Pooler/classifier head (class D).
+    g.push(KernelBuilder::dense(1, hidden, 2, &[OpKind::Add]));
+    g
+}
+
+/// MobileBERT: 24 thin layers (hidden 512, intra-block bottleneck 128,
+/// 4 heads); uses NoNorm (folded into adjacent dense kernels), so —
+/// matching Table 2 row M10 — the class set is only D, Q, R, S.
+pub fn mobilebert(seq: u64) -> ModelGraph {
+    let name = if seq == super::DEFAULT_SEQ_LEN {
+        "MobileBERT".to_string()
+    } else {
+        format!("MobileBERT-{seq}")
+    };
+    let mut g = ModelGraph::new(&name);
+    let hidden = 512u64;
+    let intra = 128u64;
+    let heads = 4u64;
+    let head_dim = intra / heads;
+
+    for _ in 0..24 {
+        // Bottleneck input projection: hidden -> intra.
+        g.push(KernelBuilder::dense(seq, hidden, intra, &[]));
+        // QKV + output projections in the intra space (dedupe to 1).
+        for _ in 0..4 {
+            g.push(KernelBuilder::dense(seq, intra, intra, &[]));
+        }
+        g.push(KernelBuilder::batch_matmul(heads, seq, head_dim, seq, &[]));
+        g.push(KernelBuilder::row_reduce(OpKind::Softmax, heads * seq, seq, &[]));
+        g.push(KernelBuilder::batch_matmul(heads, seq, seq, head_dim, &[]));
+        // Stacked FFNs intra->hidden (the MobileBERT "stacked FFN" block)
+        // and output projection back up.
+        g.push(KernelBuilder::dense(seq, intra, hidden, &[]));
+        g.push(KernelBuilder::dense(seq, hidden, hidden, &[]));
+    }
+
+    g.push(KernelBuilder::dense(1, hidden, 2, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn counts(g: &ModelGraph) -> BTreeMap<String, usize> {
+        let mut c = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn bert_matches_table2_row_m9() {
+        let g = bert(256);
+        let c = counts(&g);
+        // Paper M9: D(1) Q(3) R(2) S(1) T(1) U(1) V(1).
+        assert_eq!(c["dense_add"], 1);
+        assert_eq!(c["dense"], 3);
+        assert_eq!(c["batch_matmul"], 2);
+        assert_eq!(c["softmax"], 1);
+        assert_eq!(c["layer_norm"], 1);
+        assert_eq!(c["gelu"], 1);
+        assert_eq!(c["embedding_add"], 1);
+        assert_eq!(g.kernels.len(), 10);
+    }
+
+    #[test]
+    fn mobilebert_matches_table2_row_m10() {
+        let g = mobilebert(256);
+        let c = counts(&g);
+        // Paper M10: D(1) Q(4) R(2) S(1).
+        assert_eq!(c["dense_add"], 1);
+        assert_eq!(c["dense"], 4);
+        assert_eq!(c["batch_matmul"], 2);
+        assert_eq!(c["softmax"], 1);
+        assert_eq!(c.len(), 4, "{c:?}");
+    }
+
+    #[test]
+    fn dense_dominates_flops() {
+        // Paper: class Q is 98% of BERT's untuned inference time.
+        let g = bert(256);
+        let dense_flops: f64 = g
+            .instances
+            .iter()
+            .map(|i| &g.kernels[i.kernel])
+            .filter(|k| k.class_signature() == "dense")
+            .map(|k| k.flops())
+            .sum();
+        assert!(dense_flops / g.total_flops() > 0.75, "{}", dense_flops / g.total_flops());
+    }
+
+    #[test]
+    fn seq_len_changes_every_dense_workload() {
+        // §5.4: "varying the input size means the whole model is
+        // different, since every single kernel has different data sizes".
+        let g256 = bert(256);
+        let g128 = bert(128);
+        for k256 in g256.kernels_of_class("dense") {
+            let id = g256.kernels[k256].workload_id;
+            assert!(g128.kernels.iter().all(|k| k.workload_id != id));
+        }
+        // But the class signatures are unchanged -> transfer-tuning works.
+        assert_eq!(g256.class_signatures(), g128.class_signatures());
+    }
+
+    #[test]
+    fn named_with_seq_suffix() {
+        assert_eq!(bert(128).name, "BERT-128");
+        assert_eq!(bert(256).name, "BERT");
+    }
+}

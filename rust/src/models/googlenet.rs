@@ -1,0 +1,116 @@
+//! GoogLeNet / Inception-V1 (Szegedy et al., CVPR 2015).
+//!
+//! Table 2 row M7: B(10) max-pools, C(1) global pool, D(1) classifier,
+//! E(49) conv kernels — 95% of untuned inference time. The 9 inception
+//! modules each contribute six conv kernels (1x1, 3x3-reduce, 3x3,
+//! 5x5-reduce, 5x5, pool-proj) plus a 3x3/1 max-pool; dedup brings the
+//! conv count to ~49 unique.
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu];
+
+struct Inception {
+    hw: u64,
+    in_c: u64,
+    c1: u64,
+    c3r: u64,
+    c3: u64,
+    c5r: u64,
+    c5: u64,
+    pp: u64,
+}
+
+fn inception(g: &mut ModelGraph, m: &Inception) {
+    // Branch 1: 1x1.
+    g.push(KernelBuilder::conv2d(1, m.in_c, m.hw, m.hw, m.c1, 1, 1, 1, 0, BIAS_RELU));
+    // Branch 2: 1x1 reduce + 3x3.
+    g.push(KernelBuilder::conv2d(1, m.in_c, m.hw, m.hw, m.c3r, 1, 1, 1, 0, BIAS_RELU));
+    g.push(KernelBuilder::conv2d(1, m.c3r, m.hw, m.hw, m.c3, 3, 3, 1, 1, BIAS_RELU));
+    // Branch 3: 1x1 reduce + 5x5.
+    g.push(KernelBuilder::conv2d(1, m.in_c, m.hw, m.hw, m.c5r, 1, 1, 1, 0, BIAS_RELU));
+    g.push(KernelBuilder::conv2d(1, m.c5r, m.hw, m.hw, m.c5, 5, 5, 1, 2, BIAS_RELU));
+    // Branch 4: 3x3/1 max-pool + 1x1 projection.
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, m.in_c, m.hw + 2, m.hw + 2, 3, 3, 1));
+    g.push(KernelBuilder::conv2d(1, m.in_c, m.hw, m.hw, m.pp, 1, 1, 1, 0, BIAS_RELU));
+}
+
+pub fn googlenet() -> ModelGraph {
+    let mut g = ModelGraph::new("GoogLeNet");
+    // Stem.
+    g.push(KernelBuilder::conv2d(1, 3, 224, 224, 64, 7, 7, 2, 3, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 64, 112, 112, 3, 3, 2));
+    g.push(KernelBuilder::conv2d(1, 64, 56, 56, 64, 1, 1, 1, 0, BIAS_RELU));
+    g.push(KernelBuilder::conv2d(1, 64, 56, 56, 192, 3, 3, 1, 1, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 192, 56, 56, 3, 3, 2));
+
+    // Inception 3a/3b @28, 4a-4e @14, 5a/5b @7 (channel configs from the
+    // paper's Table 1 of GoogLeNet).
+    let modules = [
+        Inception { hw: 28, in_c: 192, c1: 64, c3r: 96, c3: 128, c5r: 16, c5: 32, pp: 32 },
+        Inception { hw: 28, in_c: 256, c1: 128, c3r: 128, c3: 192, c5r: 32, c5: 96, pp: 64 },
+    ];
+    for m in &modules {
+        inception(&mut g, m);
+    }
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 480, 28, 28, 3, 3, 2));
+    let modules4 = [
+        Inception { hw: 14, in_c: 480, c1: 192, c3r: 96, c3: 208, c5r: 16, c5: 48, pp: 64 },
+        Inception { hw: 14, in_c: 512, c1: 160, c3r: 112, c3: 224, c5r: 24, c5: 64, pp: 64 },
+        Inception { hw: 14, in_c: 512, c1: 128, c3r: 128, c3: 256, c5r: 24, c5: 64, pp: 64 },
+        Inception { hw: 14, in_c: 512, c1: 112, c3r: 144, c3: 288, c5r: 32, c5: 64, pp: 64 },
+        Inception { hw: 14, in_c: 528, c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 },
+    ];
+    for m in &modules4 {
+        inception(&mut g, m);
+    }
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 832, 14, 14, 3, 3, 2));
+    let modules5 = [
+        Inception { hw: 7, in_c: 832, c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pp: 128 },
+        Inception { hw: 7, in_c: 832, c1: 384, c3r: 192, c3: 384, c5r: 48, c5: 128, pp: 128 },
+    ];
+    for m in &modules5 {
+        inception(&mut g, m);
+    }
+
+    g.push(KernelBuilder::global_avg_pool(1, 1024, 7, 7));
+    g.push(KernelBuilder::dense(1, 1024, 1000, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn matches_table2_row_m7() {
+        let g = googlenet();
+        let mut c: BTreeMap<String, usize> = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        // Paper: B(10), C(1), D(1), E(49).
+        assert_eq!(c["global_avg_pool2d"], 1);
+        assert_eq!(c["dense_add"], 1);
+        let pools = c["max_pool2d"];
+        assert!((8..=12).contains(&pools), "max pools {pools}");
+        let convs = c["conv2d_bias_relu"];
+        assert!((45..=56).contains(&convs), "conv kernels {convs} (paper: 49)");
+    }
+
+    #[test]
+    fn conv_time_dominates() {
+        // Class E is 95% of untuned time in the paper; structurally the
+        // conv kernels must carry nearly all FLOPs.
+        let g = googlenet();
+        let conv_flops: f64 = g
+            .instances
+            .iter()
+            .map(|i| &g.kernels[i.kernel])
+            .filter(|k| k.class_signature() == "conv2d_bias_relu")
+            .map(|k| k.flops())
+            .sum();
+        assert!(conv_flops / g.total_flops() > 0.9);
+    }
+}

@@ -1,0 +1,88 @@
+//! Kernel-class letters matching the paper's Tables 1 and 2.
+//!
+//! The paper labels kernel classes with letters (A–V). Letters are only a
+//! presentation device — the real identity is the op-sequence signature —
+//! but reports use them so our tables read like the paper's.
+
+/// Static signature → letter mapping reconstructed from the paper's
+/// tables; signatures outside the mapping get fresh letters (W, X, ...)
+/// assigned deterministically by first appearance.
+pub const LETTER_MAP: &[(&str, &str)] = &[
+    ("conv2d_add", "A"),
+    ("max_pool2d", "B"),
+    ("global_avg_pool2d", "C"),
+    ("dense_add", "D"),
+    ("conv2d_bias_relu", "E"),
+    ("conv2d_bias_add_relu", "F"),
+    ("conv2d_bias_add", "G"),
+    ("dense_bias_relu", "H"),
+    ("flatten", "I"),
+    ("conv2d_bias_relu6", "J"),
+    ("dwconv2d_bias_relu6", "K"),
+    ("conv2d", "L"),
+    ("conv2d_bias_swish", "M"),
+    ("dwconv2d_bias_swish", "N"),
+    ("conv2d_sigmoid_mul", "O"),
+    ("dwconv2d_bias_relu", "P"),
+    ("dense", "Q"),
+    ("batch_matmul", "R"),
+    ("softmax", "S"),
+    ("layer_norm", "T"),
+    ("gelu", "U"),
+    ("embedding_add", "V"),
+];
+
+const EXTRA: &[&str] = &["W", "X", "Y", "Z", "AA", "AB", "AC", "AD", "AE", "AF"];
+
+/// Assigns letters to signatures, preferring the paper's mapping.
+#[derive(Default)]
+pub struct LetterBook {
+    assigned: Vec<(String, String)>,
+    next_extra: usize,
+}
+
+impl LetterBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn letter(&mut self, sig: &str) -> String {
+        if let Some((_, l)) = self.assigned.iter().find(|(s, _)| s == sig) {
+            return l.clone();
+        }
+        let letter = LETTER_MAP
+            .iter()
+            .find(|(s, _)| *s == sig)
+            .map(|(_, l)| l.to_string())
+            .unwrap_or_else(|| {
+                let l = EXTRA[self.next_extra.min(EXTRA.len() - 1)].to_string();
+                self.next_extra += 1;
+                l
+            });
+        self.assigned.push((sig.to_string(), letter.clone()));
+        letter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_letters() {
+        let mut b = LetterBook::new();
+        assert_eq!(b.letter("conv2d_bias_relu"), "E");
+        assert_eq!(b.letter("dense"), "Q");
+        assert_eq!(b.letter("conv2d_bias_add_relu"), "F");
+    }
+
+    #[test]
+    fn unknown_signatures_get_fresh_letters_stably() {
+        let mut b = LetterBook::new();
+        let w1 = b.letter("something_custom");
+        let w2 = b.letter("something_else");
+        assert_eq!(w1, "W");
+        assert_eq!(w2, "X");
+        assert_eq!(b.letter("something_custom"), "W");
+    }
+}

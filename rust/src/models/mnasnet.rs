@@ -1,0 +1,87 @@
+//! MnasNet-1.0 (Tan et al., CVPR 2019) — NAS-designed mobile model.
+//!
+//! Table 2 row M8 classes: A projection convs with residual, D
+//! classifier, E `conv2d_bias_relu` (expansion + stem convs; MnasNet
+//! uses plain ReLU), K `dwconv2d_bias_relu6` (the NAS picks some
+//! relu6-capped depthwise stages), P `dwconv2d_bias_relu`.
+//! Crucially, MnasNet *shares class E with the ResNet/VGG/GoogLeNet
+//! family*, which is why the paper's heuristic sends GoogLeNet's 49
+//! class-E schedules its way (Table 3: M7 gives the best speedup).
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu];
+const BIAS_RELU6: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu6];
+
+/// (expansion, out_c, repeats, stride, kernel, use_relu6_depthwise)
+const BLOCKS: &[(u64, u64, u64, u64, u64, bool)] = &[
+    (1, 16, 1, 1, 3, false),
+    (6, 24, 3, 2, 3, false),
+    (3, 40, 3, 2, 5, true),
+    (6, 80, 3, 2, 5, false),
+    (6, 96, 2, 1, 3, true),
+    (6, 192, 4, 2, 5, false),
+    (6, 320, 1, 1, 3, true),
+];
+
+pub fn mnasnet_1_0() -> ModelGraph {
+    let mut g = ModelGraph::new("MnasNet1.0");
+    g.push(KernelBuilder::conv2d(1, 3, 224, 224, 32, 3, 3, 2, 1, BIAS_RELU));
+
+    let mut in_c = 32u64;
+    let mut hw = 112u64;
+    for &(t, c, n, s, k, relu6_dw) in BLOCKS {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let exp_c = in_c * t;
+            if t != 1 {
+                // Expansion conv (class E — plain ReLU in MnasNet).
+                g.push(KernelBuilder::conv2d(1, in_c, hw, hw, exp_c, 1, 1, 1, 0, BIAS_RELU));
+            }
+            let pad = k / 2;
+            // Depthwise: class P (relu) or K (relu6) depending on stage.
+            let fused: &[OpKind] = if relu6_dw { BIAS_RELU6 } else { BIAS_RELU };
+            g.push(KernelBuilder::depthwise_conv2d(1, exp_c, hw, hw, k, k, stride, pad, fused));
+            let out_hw = hw / stride;
+            // Projection: class A with residual, plain conv2d without.
+            if stride == 1 && in_c == c {
+                g.push(KernelBuilder::conv2d(1, exp_c, out_hw, out_hw, c, 1, 1, 1, 0, &[OpKind::Add]));
+            } else {
+                g.push(KernelBuilder::conv2d(1, exp_c, out_hw, out_hw, c, 1, 1, 1, 0, &[]));
+            }
+            in_c = c;
+            hw = out_hw;
+        }
+    }
+    g.push(KernelBuilder::conv2d(1, 320, 7, 7, 1280, 1, 1, 1, 0, BIAS_RELU));
+    g.push(KernelBuilder::global_avg_pool(1, 1280, 7, 7));
+    g.push(KernelBuilder::dense(1, 1280, 1000, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn class_structure_matches_m8() {
+        let g = mnasnet_1_0();
+        let mut c: BTreeMap<String, usize> = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        // Paper M8: A(7) D(1) E(9) K(5) P(12).
+        assert_eq!(c["dense_add"], 1);
+        assert!((5..=9).contains(&c["conv2d_add"]), "A = {}", c["conv2d_add"]);
+        assert!((7..=12).contains(&c["conv2d_bias_relu"]), "E = {}", c["conv2d_bias_relu"]);
+        assert!(c.contains_key("dwconv2d_bias_relu6"), "K missing");
+        assert!(c.contains_key("dwconv2d_bias_relu"), "P missing");
+    }
+
+    #[test]
+    fn shares_class_e_with_googlenet() {
+        let g = mnasnet_1_0();
+        assert!(!g.kernels_of_class("conv2d_bias_relu").is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! MobileNetV2 (Sandler et al., CVPR 2018).
+//!
+//! Table 2 row M4 classes: A `conv2d_add` (linear-bottleneck projections
+//! fused with the residual add), C global pool, D classifier,
+//! J `conv2d_bias_relu6` (expansion 1x1 convs + stem), K
+//! `dwconv2d_bias_relu6` (depthwise), L plain `conv2d` (projections
+//! without residual). Roughly half of the untuned time sits in classes
+//! J/L that EfficientNet lacks, which the paper calls out in §5.2.
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU6: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu6];
+
+/// Inverted-residual block config: (expansion t, out channels c,
+/// repeats n, stride s) — Table 2 of the MobileNetV2 paper.
+const BLOCKS: &[(u64, u64, u64, u64)] = &[
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn mobilenet_v2() -> ModelGraph {
+    let mut g = ModelGraph::new("MobileNetV2");
+    // Stem: 32 filters 3x3/2 + relu6.
+    g.push(KernelBuilder::conv2d(1, 3, 224, 224, 32, 3, 3, 2, 1, BIAS_RELU6));
+
+    let mut in_c = 32u64;
+    let mut hw = 112u64;
+    for &(t, c, n, s) in BLOCKS {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let exp_c = in_c * t;
+            if t != 1 {
+                // Expansion 1x1 (class J).
+                g.push(KernelBuilder::conv2d(1, in_c, hw, hw, exp_c, 1, 1, 1, 0, BIAS_RELU6));
+            }
+            // Depthwise 3x3 (class K).
+            g.push(KernelBuilder::depthwise_conv2d(1, exp_c, hw, hw, 3, 3, stride, 1, BIAS_RELU6));
+            let out_hw = hw / stride;
+            // Linear projection 1x1: residual add fuses in when the block
+            // has a shortcut (stride 1, same channels) -> class A; else a
+            // plain conv2d -> class L.
+            if stride == 1 && in_c == c {
+                g.push(KernelBuilder::conv2d(1, exp_c, out_hw, out_hw, c, 1, 1, 1, 0, &[OpKind::Add]));
+            } else {
+                g.push(KernelBuilder::conv2d(1, exp_c, out_hw, out_hw, c, 1, 1, 1, 0, &[]));
+            }
+            in_c = c;
+            hw = out_hw;
+        }
+    }
+    // Head: 1x1 to 1280 (class J), pool, classifier.
+    g.push(KernelBuilder::conv2d(1, 320, 7, 7, 1280, 1, 1, 1, 0, BIAS_RELU6));
+    g.push(KernelBuilder::global_avg_pool(1, 1280, 7, 7));
+    g.push(KernelBuilder::dense(1, 1280, 1000, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn class_structure_matches_m4() {
+        let g = mobilenet_v2();
+        let mut c: BTreeMap<String, usize> = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        // Paper M4: A(7) C(1) D(1) J(8) K(5) L(10) — we accept small
+        // deviations from TVM's exact partitioning.
+        assert_eq!(c["global_avg_pool2d"], 1);
+        assert_eq!(c["dense_add"], 1);
+        assert!((5..=9).contains(&c["conv2d_add"]), "A = {}", c["conv2d_add"]);
+        assert!((6..=10).contains(&c["conv2d_bias_relu6"]), "J = {}", c["conv2d_bias_relu6"]);
+        assert!((4..=12).contains(&c["dwconv2d_bias_relu6"]), "K = {}", c["dwconv2d_bias_relu6"]);
+        assert!((6..=12).contains(&c["conv2d"]), "L = {}", c["conv2d"]);
+    }
+
+    #[test]
+    fn lightweight_model() {
+        // ~0.3 GMACs -> well under 1.5 GFLOPs.
+        let f = mobilenet_v2().total_flops();
+        assert!(f > 3e8 && f < 1.5e9, "flops {f:.3e}");
+    }
+
+    #[test]
+    fn no_class_e_or_h() {
+        // MobileNetV2 shares no conv2d_bias_relu class with ResNet —
+        // the paper's heuristic must look at J/K/L availability instead.
+        let g = mobilenet_v2();
+        assert!(g.kernels_of_class("conv2d_bias_relu").is_empty());
+        assert!(g.kernels_of_class("dense_bias_relu").is_empty());
+    }
+}

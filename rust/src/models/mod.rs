@@ -1,0 +1,126 @@
+//! The paper's 11-model DNN zoo, defined as kernel graphs.
+//!
+//! Models follow the fusion conventions the paper inherits from TVM's
+//! Relay partitioner: convolutions fuse their bias and activation (and
+//! residual add when the block ends in one), pooling and dense layers are
+//! their own kernels, transformer layers decompose into dense /
+//! batch-matmul / softmax / layer-norm kernels. Repeated kernels dedupe
+//! by workload id (Table 1 "Use Count").
+//!
+//! The class *letters* (A–V) follow the paper's Tables 1/2 via the static
+//! mapping in [`letters`]; unmapped signatures get fresh letters.
+
+pub mod alexnet;
+pub mod bert;
+pub mod efficientnet;
+pub mod googlenet;
+pub mod letters;
+pub mod mnasnet;
+pub mod mobilenet;
+pub mod resnet;
+pub mod vgg;
+
+use crate::ir::ModelGraph;
+
+/// Default sequence length for the BERT-family models (paper §5.1).
+pub const DEFAULT_SEQ_LEN: u64 = 256;
+
+/// The 10 models of Table 2 (M1–M10), in paper order.
+pub fn table2_models() -> Vec<ModelGraph> {
+    vec![
+        resnet::resnet50(),          // M1
+        alexnet::alexnet(),          // M2
+        vgg::vgg16(),                // M3
+        mobilenet::mobilenet_v2(),   // M4
+        efficientnet::b0(),          // M5
+        efficientnet::b4(),          // M6
+        googlenet::googlenet(),      // M7
+        mnasnet::mnasnet_1_0(),      // M8
+        bert::bert(DEFAULT_SEQ_LEN), // M9
+        bert::mobilebert(DEFAULT_SEQ_LEN), // M10
+    ]
+}
+
+/// All 11 evaluated models (ResNet18 + Table 2).
+pub fn all_models() -> Vec<ModelGraph> {
+    let mut v = vec![resnet::resnet18()];
+    v.extend(table2_models());
+    v
+}
+
+/// Look a model up by name (case-insensitive); BERT models accept an
+/// optional `-<seqlen>` suffix (e.g. `bert-128`).
+pub fn by_name(name: &str) -> Option<ModelGraph> {
+    let lower = name.to_lowercase();
+    if let Some(seq) = lower.strip_prefix("bert-") {
+        return seq.parse().ok().map(bert::bert);
+    }
+    if let Some(seq) = lower.strip_prefix("mobilebert-") {
+        return seq.parse().ok().map(bert::mobilebert);
+    }
+    match lower.as_str() {
+        "resnet18" => Some(resnet::resnet18()),
+        "resnet50" => Some(resnet::resnet50()),
+        "alexnet" => Some(alexnet::alexnet()),
+        "vgg16" | "vgg-16" => Some(vgg::vgg16()),
+        "mobilenetv2" | "mobilenet_v2" => Some(mobilenet::mobilenet_v2()),
+        "efficientnetb0" => Some(efficientnet::b0()),
+        "efficientnetb4" => Some(efficientnet::b4()),
+        "googlenet" => Some(googlenet::googlenet()),
+        "mnasnet1.0" | "mnasnet" => Some(mnasnet::mnasnet_1_0()),
+        "bert" => Some(bert::bert(DEFAULT_SEQ_LEN)),
+        "mobilebert" => Some(bert::mobilebert(DEFAULT_SEQ_LEN)),
+        _ => None,
+    }
+}
+
+/// Paper table ids M1..M10 (Table 2 rows).
+pub fn paper_id(name: &str) -> Option<&'static str> {
+    match name {
+        "ResNet50" => Some("M1"),
+        "AlexNet" => Some("M2"),
+        "VGG-16" => Some("M3"),
+        "MobileNetV2" => Some("M4"),
+        "EfficientNetB0" => Some("M5"),
+        "EfficientNetB4" => Some("M6"),
+        "GoogLeNet" => Some("M7"),
+        "MnasNet1.0" => Some("M8"),
+        "BERT" => Some("M9"),
+        "MobileBERT" => Some("M10"),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_eleven_models() {
+        assert_eq!(all_models().len(), 11);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("ResNet18").is_some());
+        assert!(by_name("bert-128").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn every_model_has_kernels_and_flops() {
+        for m in all_models() {
+            assert!(!m.kernels.is_empty(), "{} is empty", m.name);
+            assert!(m.total_flops() > 1e6, "{} has implausibly few flops", m.name);
+        }
+    }
+
+    #[test]
+    fn model_names_are_unique() {
+        let models = all_models();
+        let mut names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 11);
+    }
+}

@@ -1,0 +1,205 @@
+//! ResNet-18 and ResNet-50 (He et al., CVPR 2016), ImageNet definitions.
+//!
+//! ResNet-18 reproduces the paper's Table 1 kernel inventory exactly:
+//! 18 unique kernels across 6 classes —
+//! A `conv2d_add` (downsample projections), B `max_pool2d`,
+//! C `global_avg_pool2d`, D `dense_add`, E `conv2d_bias_relu`,
+//! F `conv2d_bias_add_relu` (block-final convs whose residual add and
+//! ReLU fuse in).
+//!
+//! ResNet-50 matches Table 2 row M1: classes A(4), B(1), C(1), D(1),
+//! E(16), G(4) — in the bottleneck blocks, TVM fuses the expanding 1x1
+//! conv with the residual add but *not* a ReLU (class G `conv2d_bias_add`),
+//! which is why §4.3 finds "no schedules for class F in ResNet50".
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu];
+const BIAS_ADD_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Add, OpKind::Relu];
+const BIAS_ADD: &[OpKind] = &[OpKind::BiasAdd, OpKind::Add];
+const ADD: &[OpKind] = &[OpKind::Add];
+
+/// ResNet-18: 2 basic blocks per stage, stages at 64/128/256/512 channels.
+pub fn resnet18() -> ModelGraph {
+    resnet18_hw(224)
+}
+
+/// ResNet-18 at a non-standard input resolution (must be a multiple of
+/// 32). Used by the §5.4-style *input-size transfer* experiment: the
+/// paper notes ImageNet models fine-tuned on new datasets often change
+/// input size, making every kernel a new workload — another
+/// transfer-tuning use-case ("we leave [it] for future work").
+pub fn resnet18_hw(input: u64) -> ModelGraph {
+    assert!(input % 32 == 0, "input must be a multiple of 32");
+    let name = if input == 224 {
+        "ResNet18".to_string()
+    } else {
+        format!("ResNet18-{input}")
+    };
+    let mut g = ModelGraph::new(&name);
+    // Stem: 7x7/2 conv + 2x2 max-pool (pool size per paper Table 1).
+    g.push(KernelBuilder::conv2d(1, 3, input, input, 64, 7, 7, 2, 3, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 64, input / 2, input / 2, 2, 2, 2));
+
+    let s1 = input / 4;
+    let stages: &[(u64, u64, u64)] = &[(64, s1, 1), (128, s1, 2), (256, s1 / 2, 2), (512, s1 / 4, 2)];
+    let mut in_c = 64u64;
+    for &(planes, in_hw, stride) in stages {
+        let out_hw = in_hw / stride;
+        // Block 1 (possibly downsampling).
+        g.push(KernelBuilder::conv2d(1, in_c, in_hw, in_hw, planes, 3, 3, stride, 1, BIAS_RELU));
+        g.push(KernelBuilder::conv2d(1, planes, out_hw, out_hw, planes, 3, 3, 1, 1, BIAS_ADD_RELU));
+        if stride != 1 || in_c != planes {
+            // Projection shortcut: 1x1 conv fused with the residual add.
+            g.push(KernelBuilder::conv2d(1, in_c, in_hw, in_hw, planes, 1, 1, stride, 0, ADD));
+        }
+        // Block 2 (identity shortcut).
+        g.push(KernelBuilder::conv2d(1, planes, out_hw, out_hw, planes, 3, 3, 1, 1, BIAS_RELU));
+        g.push(KernelBuilder::conv2d(1, planes, out_hw, out_hw, planes, 3, 3, 1, 1, BIAS_ADD_RELU));
+        in_c = planes;
+    }
+
+    let final_hw = input / 32;
+    g.push(KernelBuilder::global_avg_pool(1, 512, final_hw, final_hw));
+    g.push(KernelBuilder::dense(1, 512, 1000, ADD));
+    g
+}
+
+/// ResNet-50: bottleneck blocks [3, 4, 6, 3].
+pub fn resnet50() -> ModelGraph {
+    let mut g = ModelGraph::new("ResNet50");
+    g.push(KernelBuilder::conv2d(1, 3, 224, 224, 64, 7, 7, 2, 3, BIAS_RELU));
+    g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, 64, 112, 112, 2, 2, 2));
+
+    let stages: &[(u64, u64, u64, u64)] = &[
+        // (planes, blocks, input hw, stride)
+        (64, 3, 56, 1),
+        (128, 4, 56, 2),
+        (256, 6, 28, 2),
+        (512, 3, 14, 2),
+    ];
+    let mut in_c = 64u64; // channels after the stem
+    for &(planes, blocks, in_hw, stride) in stages {
+        let out_c = planes * 4;
+        let out_hw = in_hw / stride;
+        for b in 0..blocks {
+            let (block_in_c, block_in_hw, s) = if b == 0 { (in_c, in_hw, stride) } else { (out_c, out_hw, 1) };
+            // 1x1 reduce.
+            g.push(KernelBuilder::conv2d(1, block_in_c, block_in_hw, block_in_hw, planes, 1, 1, 1, 0, BIAS_RELU));
+            // 3x3 (carries the stride).
+            g.push(KernelBuilder::conv2d(1, planes, block_in_hw, block_in_hw, planes, 3, 3, s, 1, BIAS_RELU));
+            // 1x1 expand, fused with the residual add (class G).
+            g.push(KernelBuilder::conv2d(1, planes, out_hw, out_hw, out_c, 1, 1, 1, 0, BIAS_ADD));
+            if b == 0 {
+                // Projection shortcut (class A).
+                g.push(KernelBuilder::conv2d(1, block_in_c, block_in_hw, block_in_hw, out_c, 1, 1, s, 0, ADD));
+            }
+        }
+        in_c = out_c;
+    }
+
+    g.push(KernelBuilder::global_avg_pool(1, 2048, 7, 7));
+    g.push(KernelBuilder::dense(1, 2048, 1000, ADD));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn class_counts(g: &ModelGraph) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for k in &g.kernels {
+            *m.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    #[test]
+    fn resnet18_matches_table1() {
+        let g = resnet18();
+        // Paper Table 1: 18 unique kernels, 6 classes.
+        assert_eq!(g.kernels.len(), 18, "{:?}", class_counts(&g));
+        let c = class_counts(&g);
+        assert_eq!(c["conv2d_add"], 3); // class A (rows 1-3)
+        assert_eq!(c["max_pool2d"], 1); // B
+        assert_eq!(c["global_avg_pool2d"], 1); // C
+        assert_eq!(c["dense_add"], 1); // D
+        assert_eq!(c["conv2d_bias_relu"], 8); // E (rows 4,6,8,9,11,12,14,15)
+        assert_eq!(c["conv2d_bias_add_relu"], 4); // F (rows 7,10,13,16)
+    }
+
+    #[test]
+    fn resnet18_use_counts() {
+        let g = resnet18();
+        // Rows 6/7/10/13/16 of Table 1 have use count 2.
+        let total_instances = g.instances.len();
+        let total_unique = g.kernels.len();
+        assert!(total_instances > total_unique);
+        // The final-stage F kernel (512 ch) is used twice.
+        let f512 = g
+            .kernels
+            .iter()
+            .position(|k| k.class_signature() == "conv2d_bias_add_relu" && k.input_shape[1] == 512)
+            .unwrap();
+        assert_eq!(g.use_count(f512), 2);
+    }
+
+    #[test]
+    fn resnet50_matches_table2_row() {
+        let g = resnet50();
+        let c = class_counts(&g);
+        // Paper M1: A(4) B(1) C(1) D(1) E(16) G(4).
+        assert_eq!(c["conv2d_add"], 4);
+        assert_eq!(c["max_pool2d"], 1);
+        assert_eq!(c["global_avg_pool2d"], 1);
+        assert_eq!(c["dense_add"], 1);
+        assert_eq!(c["conv2d_bias_relu"], 16);
+        assert_eq!(c["conv2d_bias_add"], 4);
+        assert_eq!(g.kernels.len(), 27, "paper: 27 unique kernels");
+    }
+
+    #[test]
+    fn resnet50_has_no_class_f() {
+        // §4.3: "no schedules for classes F found in ResNet50".
+        let g = resnet50();
+        assert!(g.kernels_of_class("conv2d_bias_add_relu").is_empty());
+    }
+
+    #[test]
+    fn flops_scale_is_right() {
+        // ResNet-18 ~ 1.8 GFLOPs, ResNet-50 ~ 4 GFLOPs (x2 for MACs).
+        let f18 = resnet18().total_flops();
+        let f50 = resnet50().total_flops();
+        assert!(f18 > 2.5e9 && f18 < 5.5e9, "resnet18 flops {f18:.3e}");
+        assert!(f50 > 6e9 && f50 < 12e9, "resnet50 flops {f50:.3e}");
+        assert!(f50 > f18);
+    }
+}
+
+#[cfg(test)]
+mod input_size_tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_192_has_same_classes_different_workloads() {
+        let a = resnet18();
+        let b = resnet18_hw(192);
+        assert_eq!(b.name, "ResNet18-192");
+        // Same class taxonomy (paper §5.4: "every single kernel has
+        // different data sizes" but classes are unchanged).
+        assert_eq!(a.class_signatures(), b.class_signatures());
+        // Conv workload ids all differ (spatial extents changed).
+        for &k in &a.kernels_of_class("conv2d_bias_relu") {
+            let id = a.kernels[k].workload_id;
+            assert!(b.kernels.iter().all(|bk| bk.workload_id != id));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 32")]
+    fn rejects_bad_resolution() {
+        resnet18_hw(200);
+    }
+}

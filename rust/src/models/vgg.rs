@@ -1,0 +1,71 @@
+//! VGG-16 (Simonyan & Zisserman, ICLR 2015).
+//!
+//! Table 2 row M3: B(5) max-pools, D(1) classifier, E(9) unique conv
+//! kernels (13 conv layers dedupe to 9: repeated same-shape 3x3 convs
+//! within a stage share a workload id), H(2) FC+ReLU, I(1) flatten.
+
+use crate::ir::{KernelBuilder, ModelGraph, OpKind};
+
+const BIAS_RELU: &[OpKind] = &[OpKind::BiasAdd, OpKind::Relu];
+
+pub fn vgg16() -> ModelGraph {
+    let mut g = ModelGraph::new("VGG-16");
+    // (in_c, out_c, hw, convs in stage)
+    let stages: &[(u64, u64, u64, usize)] = &[
+        (3, 64, 224, 2),
+        (64, 128, 112, 2),
+        (128, 256, 56, 3),
+        (256, 512, 28, 3),
+        (512, 512, 14, 3),
+    ];
+    for &(in_c, out_c, hw, convs) in stages {
+        g.push(KernelBuilder::conv2d(1, in_c, hw, hw, out_c, 3, 3, 1, 1, BIAS_RELU));
+        for _ in 1..convs {
+            g.push(KernelBuilder::conv2d(1, out_c, hw, hw, out_c, 3, 3, 1, 1, BIAS_RELU));
+        }
+        g.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, out_c, hw, hw, 2, 2, 2));
+    }
+    g.push(KernelBuilder::eltwise(&[OpKind::Flatten], 512 * 7 * 7));
+    g.push(KernelBuilder::dense(1, 25088, 4096, BIAS_RELU));
+    g.push(KernelBuilder::dense(1, 4096, 4096, BIAS_RELU));
+    g.push(KernelBuilder::dense(1, 4096, 1000, &[OpKind::Add]));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn matches_table2_row_m3() {
+        let g = vgg16();
+        let mut c: BTreeMap<String, usize> = BTreeMap::new();
+        for k in &g.kernels {
+            *c.entry(k.class_signature()).or_insert(0) += 1;
+        }
+        assert_eq!(c["max_pool2d"], 5); // B
+        assert_eq!(c["dense_add"], 1); // D
+        assert_eq!(c["conv2d_bias_relu"], 9); // E: 13 convs, 9 unique
+        assert_eq!(c["dense_bias_relu"], 2); // H
+        assert_eq!(c["flatten"], 1); // I
+    }
+
+    #[test]
+    fn thirteen_conv_instances() {
+        let g = vgg16();
+        let conv_instances = g
+            .instances
+            .iter()
+            .filter(|i| g.kernels[i.kernel].class_signature() == "conv2d_bias_relu")
+            .count();
+        assert_eq!(conv_instances, 13);
+    }
+
+    #[test]
+    fn vgg_is_heavy() {
+        // ~15.5 GMACs -> ~31 GFLOPs.
+        let f = vgg16().total_flops();
+        assert!(f > 25e9 && f < 40e9, "flops {f:.3e}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared experiment pipeline: tune the zoo once, reuse everywhere.
+//!
+//! Almost every figure consumes the same expensive artifacts — the
+//! Ansor tuning trajectory of each model and the schedule store built
+//! from all of them — so they are computed once per (device, trials,
+//! seed) and shared. All results are deterministic in the seed.
+
+use crate::autosched::{tune_model, TuneOptions, TuningResult};
+use crate::device::{untuned_model_time, DeviceProfile};
+use crate::ir::ModelGraph;
+use crate::models;
+use crate::transfer::{rank_tuning_models, transfer_tune_one_to_one, ScheduleStore, TransferResult};
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Ansor trials per model (paper/Fig 1: 20 000; CLI default is lower
+    /// for interactive runs — pass `--trials 20000` for the full paper).
+    pub trials: usize,
+    pub seed: u64,
+    pub device: DeviceProfile,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig { trials: 2000, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() }
+    }
+}
+
+/// The tuned zoo: all 11 models, their Ansor trajectories, untuned
+/// baselines, and the cross-model schedule store.
+pub struct Zoo {
+    pub config: ExperimentConfig,
+    pub models: Vec<ModelGraph>,
+    pub tunings: Vec<TuningResult>,
+    pub untuned_s: Vec<f64>,
+    pub store: ScheduleStore,
+}
+
+impl Zoo {
+    /// Tune every model in the zoo. `progress` receives one line per
+    /// model (the CLI prints it; tests pass a sink).
+    pub fn build(config: ExperimentConfig, mut progress: impl FnMut(&str)) -> Zoo {
+        let models = models::all_models();
+        let opts = TuneOptions { trials: config.trials, seed: config.seed, ..Default::default() };
+        let mut tunings = Vec::with_capacity(models.len());
+        let mut untuned_s = Vec::with_capacity(models.len());
+        let mut store = ScheduleStore::new();
+        for m in &models {
+            let t0 = std::time::Instant::now();
+            let res = tune_model(m, &config.device, &opts);
+            let untuned = untuned_model_time(m, &config.device);
+            progress(&format!(
+                "tuned {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
+                m.name,
+                res.trials_used,
+                res.search_time_s,
+                res.final_model_time(m, &config.device) * 1e3,
+                untuned * 1e3,
+                t0.elapsed().as_secs_f64(),
+            ));
+            store.add_tuning(m, &res);
+            tunings.push(res);
+            untuned_s.push(untuned);
+        }
+        Zoo { config, models, tunings, untuned_s, store }
+    }
+
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    /// The heuristic's ranked tuning-model choices for a target.
+    pub fn choices(&self, target: &ModelGraph) -> Vec<(String, f64)> {
+        rank_tuning_models(target, &self.store, &self.config.device)
+    }
+
+    /// Run one-to-one transfer-tuning onto `target` using the
+    /// heuristic's first choice (or a named source).
+    pub fn transfer(&self, target: &ModelGraph, source: Option<&str>) -> Option<TransferResult> {
+        let src = match source {
+            Some(s) => s.to_string(),
+            None => self.choices(target).first()?.0.clone(),
+        };
+        Some(transfer_tune_one_to_one(
+            target,
+            &self.store,
+            &src,
+            &self.config.device,
+            self.config.seed,
+        ))
+    }
+
+    /// Mixed-pool transfer (§5.5): all models' schedules except the
+    /// target's own.
+    pub fn transfer_pooled(&self, target: &ModelGraph) -> TransferResult {
+        let pool = ScheduleStore {
+            records: self
+                .store
+                .records
+                .iter()
+                .filter(|r| r.source_model != target.name)
+                .cloned()
+                .collect(),
+        };
+        crate::transfer::transfer_tune(target, &pool, &self.config.device, "mixed", self.config.seed)
+    }
+
+    /// Ansor speedup achievable within a given search-time budget
+    /// (Fig 5a's second bar).
+    pub fn ansor_speedup_at(&self, model_idx: usize, budget_s: f64) -> f64 {
+        let t = self.tunings[model_idx].model_time_at_budget(budget_s, self.untuned_s[model_idx]);
+        self.untuned_s[model_idx] / t
+    }
+
+    /// Search time Ansor needs to reach a target end-to-end time
+    /// (Fig 5b's second bar); `None` = not reached within its budget.
+    pub fn ansor_time_to_match(&self, model_idx: usize, target_time_s: f64) -> Option<f64> {
+        self.tunings[model_idx].time_to_reach(target_time_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_zoo() -> Zoo {
+        // Small-trial zoo: fast enough for unit tests, still end-to-end.
+        Zoo::build(
+            ExperimentConfig { trials: 120, seed: 11, device: DeviceProfile::xeon_e5_2620() },
+            |_| {},
+        )
+    }
+
+    #[test]
+    fn zoo_builds_all_models_and_store() {
+        let zoo = tiny_zoo();
+        assert_eq!(zoo.models.len(), 11);
+        assert_eq!(zoo.tunings.len(), 11);
+        assert!(!zoo.store.records.is_empty());
+        assert!(zoo.store.source_models().len() >= 10);
+    }
+
+    #[test]
+    fn heuristic_choices_exclude_target() {
+        let zoo = tiny_zoo();
+        let target = &zoo.models[0]; // ResNet18
+        let choices = zoo.choices(target);
+        assert!(!choices.is_empty());
+        assert!(choices.iter().all(|(m, _)| m != "ResNet18"));
+    }
+
+    #[test]
+    fn transfer_runs_end_to_end() {
+        let zoo = tiny_zoo();
+        let target = zoo.models[zoo.model_index("ResNet18").unwrap()].clone();
+        let res = zoo.transfer(&target, Some("ResNet50")).unwrap();
+        assert_eq!(res.source, "ResNet50");
+        assert!(res.pairs_evaluated() > 0);
+        assert!(res.speedup() >= 0.95, "speedup {}", res.speedup());
+    }
+
+    #[test]
+    fn pooled_transfer_evaluates_more_pairs() {
+        let zoo = tiny_zoo();
+        let target = zoo.models[zoo.model_index("ResNet18").unwrap()].clone();
+        let one = zoo.transfer(&target, Some("ResNet50")).unwrap();
+        let pooled = zoo.transfer_pooled(&target);
+        assert!(pooled.pairs_evaluated() >= one.pairs_evaluated());
+    }
+}

@@ -1,0 +1,276 @@
+//! Reproductions of the paper's Figures 1, 4, 5, 6, 7 and 8 as data
+//! tables (same rows/series the paper plots; CSV output re-plots them).
+
+use super::experiments::{ExperimentConfig, Zoo};
+use crate::autosched::{tune_model, TuneOptions};
+use crate::models::{self, letters::LetterBook};
+use crate::transfer::{transfer_tune_one_to_one, ScheduleStore};
+use crate::util::table::{fmt_duration, fmt_speedup, Table};
+
+/// Fig 1: Ansor's maximum speedup and the search time it took, per model.
+pub fn fig1(zoo: &Zoo) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Fig 1: Ansor speedup & search time ({} trials, {})",
+            zoo.config.trials, zoo.config.device.name
+        ),
+        &["Model", "Untuned", "Tuned", "Max speedup", "Search time"],
+    );
+    for (mi, m) in zoo.models.iter().enumerate() {
+        let tuned = zoo.tunings[mi].final_model_time(m, &zoo.config.device);
+        t.row(vec![
+            m.name.clone(),
+            fmt_duration(zoo.untuned_s[mi]),
+            fmt_duration(tuned),
+            fmt_speedup(zoo.untuned_s[mi] / tuned),
+            fmt_duration(zoo.tunings[mi].search_time_s),
+        ]);
+    }
+    t
+}
+
+/// Fig 4: inference time of every ResNet18 kernel under every compatible
+/// ResNet50 schedule (long format; `-1` = invalid, matching the paper's
+/// convention).
+pub fn fig4(zoo: &Zoo) -> Table {
+    let target = zoo.models[zoo.model_index("ResNet18").expect("zoo has ResNet18")].clone();
+    let res = zoo
+        .transfer(&target, Some("ResNet50"))
+        .expect("ResNet50 must be in the store");
+    let slice = zoo.store.of_model("ResNet50");
+
+    let mut letters = LetterBook::new();
+    let mut t = Table::new(
+        "Fig 4: ResNet18 kernels x ResNet50 schedules (standalone times)",
+        &["Kernel", "Class", "Schedule", "Time (ms)", "Chosen"],
+    );
+    for sweep in &res.sweeps {
+        let k = &target.kernels[sweep.kernel];
+        let letter = letters.letter(&k.class_signature());
+        let kname = format!("{}", sweep.kernel + 1);
+        t.row(vec![
+            kname.clone(),
+            letter.clone(),
+            "untuned".into(),
+            format!("{:.4}", sweep.untuned_s * 1e3),
+            if sweep.chosen.is_none() { "*".into() } else { "".into() },
+        ]);
+        for (slot, (ri, outcome)) in sweep.outcomes.iter().enumerate() {
+            let rec = &slice.records[*ri];
+            let label = rec.label(&letter, slot + 1);
+            t.row(vec![
+                kname.clone(),
+                letter.clone(),
+                label,
+                match outcome {
+                    Some(ts) => format!("{:.4}", ts * 1e3),
+                    None => "-1".into(), // invalid code, paper convention
+                },
+                if sweep.chosen == Some(*ri) { "*".into() } else { "".into() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 5 (server) / Fig 6 (edge): per model, transfer-tuning speedup vs
+/// Ansor-at-equal-search-time, and TT search time vs the time Ansor
+/// needs to match TT's speedup. The device comes from the zoo's config.
+pub fn fig5(zoo: &Zoo) -> Table {
+    let is_edge = zoo.config.device.name != "xeon-e5-2620";
+    let title = if is_edge {
+        format!("Fig 6: transfer-tuning vs Ansor on edge CPU ({})", zoo.config.device.name)
+    } else {
+        format!("Fig 5: transfer-tuning vs Ansor on server CPU ({})", zoo.config.device.name)
+    };
+    let mut t = Table::new(
+        &title,
+        &[
+            "Model",
+            "Source",
+            "TT speedup",
+            "Ansor speedup (same time)",
+            "TT search",
+            "Ansor to match",
+            "Ratio",
+        ],
+    );
+    let mut ratios = Vec::new();
+    for (mi, m) in zoo.models.iter().enumerate() {
+        let Some(tt) = zoo.transfer(m, None) else { continue };
+        let ansor_same = zoo.ansor_speedup_at(mi, tt.search_time_s());
+        let to_match = zoo.ansor_time_to_match(mi, tt.tuned_model_s);
+        let (match_str, ratio_str) = match to_match {
+            Some(s) => {
+                let r = s / tt.search_time_s();
+                ratios.push(r);
+                (fmt_duration(s), format!("{r:.1}x"))
+            }
+            None => {
+                let r = zoo.tunings[mi].search_time_s / tt.search_time_s();
+                ratios.push(r);
+                (format!("> {}", fmt_duration(zoo.tunings[mi].search_time_s)), format!("> {r:.1}x"))
+            }
+        };
+        t.row(vec![
+            m.name.clone(),
+            tt.source.clone(),
+            fmt_speedup(tt.speedup()),
+            fmt_speedup(ansor_same),
+            fmt_duration(tt.search_time_s()),
+            match_str,
+            ratio_str,
+        ]);
+    }
+    if !ratios.is_empty() {
+        // Two summaries (the paper reports an average of 6.5x server /
+        // 10.8x edge): geometric mean (ratios are multiplicative;
+        // censored "> x" entries enter at their lower bound) and median
+        // (robust to the censoring).
+        for (label, value) in [
+            ("Geo-mean", crate::util::stats::geomean(&ratios)),
+            ("Median", crate::util::stats::median(&ratios)),
+        ] {
+            t.row(vec![
+                label.into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                format!("{value:.1}x"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 7: transfer-tuning across sequence lengths for BERT/MobileBERT
+/// (128 <-> 256). Tunes the four variants, then transfers both ways.
+pub fn fig7(config: &ExperimentConfig, mut progress: impl FnMut(&str)) -> Table {
+    let variants = [
+        models::bert::bert(128),
+        models::bert::bert(256),
+        models::bert::mobilebert(128),
+        models::bert::mobilebert(256),
+    ];
+    let opts = TuneOptions { trials: config.trials, seed: config.seed, ..Default::default() };
+    let mut store = ScheduleStore::new();
+    for v in &variants {
+        progress(&format!("tuning {} ...", v.name));
+        let res = tune_model(v, &config.device, &opts);
+        store.add_tuning(v, &res);
+    }
+
+    let mut t = Table::new(
+        "Fig 7: transfer-tuning across sequence lengths (BERT family)",
+        &["Target", "Source", "Speedup", "Search time"],
+    );
+    let pairs = [
+        ("BERT-128", "BERT"),        // 256 -> 128
+        ("BERT", "BERT-128"),        // 128 -> 256
+        ("MobileBERT-128", "MobileBERT"),
+        ("MobileBERT", "MobileBERT-128"),
+    ];
+    for (target_name, source_name) in pairs {
+        let target = variants.iter().find(|v| v.name == target_name).unwrap();
+        let res = transfer_tune_one_to_one(target, &store, source_name, &config.device, config.seed);
+        t.row(vec![
+            target_name.into(),
+            source_name.into(),
+            fmt_speedup(res.speedup()),
+            fmt_duration(res.search_time_s()),
+        ]);
+    }
+    t
+}
+
+/// Fig 8: one-to-one vs mixed-pool transfer-tuning (speedup + search
+/// time per model).
+pub fn fig8(zoo: &Zoo) -> Table {
+    let mut t = Table::new(
+        "Fig 8: one-to-one vs mixed schedule pool",
+        &[
+            "Model",
+            "One-to-one speedup",
+            "Mixed speedup",
+            "One-to-one search",
+            "Mixed search",
+            "Mixed regressed?",
+        ],
+    );
+    let mut regressions = 0usize;
+    let mut rows = 0usize;
+    for m in &zoo.models {
+        let Some(one) = zoo.transfer(m, None) else { continue };
+        let pooled = zoo.transfer_pooled(m);
+        let regressed = pooled.speedup() < one.speedup() - 1e-9;
+        if regressed {
+            regressions += 1;
+        }
+        rows += 1;
+        t.row(vec![
+            m.name.clone(),
+            fmt_speedup(one.speedup()),
+            fmt_speedup(pooled.speedup()),
+            fmt_duration(one.search_time_s()),
+            fmt_duration(pooled.search_time_s()),
+            if regressed { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.row(vec![
+        "Summary".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{regressions}/{rows} regressed"),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceProfile;
+
+    fn tiny_zoo() -> Zoo {
+        Zoo::build(
+            ExperimentConfig { trials: 120, seed: 11, device: DeviceProfile::xeon_e5_2620() },
+            |_| {},
+        )
+    }
+
+    #[test]
+    fn fig1_lists_all_models() {
+        let zoo = tiny_zoo();
+        let t = fig1(&zoo);
+        assert_eq!(t.rows.len(), 11);
+    }
+
+    #[test]
+    fn fig4_contains_untuned_rows_and_choices() {
+        let zoo = tiny_zoo();
+        let t = fig4(&zoo);
+        // 18 kernels -> at least 18 untuned rows.
+        let untuned_rows = t.rows.iter().filter(|r| r[2] == "untuned").count();
+        assert_eq!(untuned_rows, 18);
+        // At least one schedule chosen somewhere.
+        assert!(t.rows.iter().any(|r| r[4] == "*"));
+    }
+
+    #[test]
+    fn fig5_has_mean_row() {
+        let zoo = tiny_zoo();
+        let t = fig5(&zoo);
+        assert_eq!(t.rows.last().unwrap()[0], "Median");
+        assert_eq!(t.rows.len(), 13);
+    }
+
+    #[test]
+    fn fig8_counts_regressions() {
+        let zoo = tiny_zoo();
+        let t = fig8(&zoo);
+        assert!(t.rows.last().unwrap()[5].contains("regressed"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §4 for the experiment index). Each emitter
+//! returns a [`crate::util::table::Table`], which the CLI prints and
+//! also writes as CSV under `results/`.
+
+pub mod experiments;
+pub mod figures;
+pub mod tables;
+
+pub use experiments::{ExperimentConfig, Zoo};

@@ -1,0 +1,101 @@
+//! Cross-class schedule adaptation (paper §4.2, explicitly left as
+//! future work):
+//!
+//! > "In principle, for kernel classes which share some of the
+//! > operations (e.g., classes E and F), their schedules could be
+//! > adapted to allow a form of across-class transfer-tuning."
+//!
+//! Two classes are *adaptation-compatible* when they share the anchor
+//! operation (hence the loop-nest skeleton): `conv2d_bias_relu` (E) and
+//! `conv2d_bias_add_relu` (F) differ only in the fused epilogue, which
+//! lives inside the innermost loop body and does not constrain the
+//! tiling. Adapting a schedule = re-basing its class signature onto the
+//! target class; every Split/annotation carries over unchanged, and
+//! normal shape-relative legality still applies at `apply` time.
+
+use super::schedule::Schedule;
+use crate::ir::Kernel;
+
+/// Anchor token of a class signature (`conv2d` of `conv2d_bias_relu`).
+pub fn anchor_token(class_sig: &str) -> &str {
+    class_sig.split('_').next().unwrap_or(class_sig)
+}
+
+/// Can `sched` be adapted onto `target`'s class? Requires the same
+/// anchor op *and* the same loop skeleton (e.g. `conv2d` vs `dwconv2d`
+/// share neither; `conv2d_bias_relu` vs `conv2d_add` share both).
+pub fn is_adaptable(sched: &Schedule, target: &Kernel) -> bool {
+    anchor_token(&sched.class_sig) == anchor_token(&target.class_signature())
+        && sched.skeleton == target.nest.skeleton()
+}
+
+/// Adapt `sched` onto `target`'s class; returns `None` when the classes
+/// are not adaptation-compatible. The returned schedule may still fail
+/// `apply` on factor-vs-extent grounds, like any transfer.
+pub fn adapt_cross_class(sched: &Schedule, target: &Kernel) -> Option<Schedule> {
+    if !is_adaptable(sched, target) {
+        return None;
+    }
+    let mut adapted = sched.clone();
+    adapted.class_sig = target.class_signature();
+    Some(adapted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{KernelBuilder, OpKind};
+    use crate::sched::apply;
+
+    fn conv_e() -> Kernel {
+        KernelBuilder::conv2d(1, 64, 28, 28, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu])
+    }
+    fn conv_f() -> Kernel {
+        KernelBuilder::conv2d(1, 64, 28, 28, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Add, OpKind::Relu])
+    }
+
+    #[test]
+    fn e_to_f_adapts_and_applies() {
+        // The paper's concrete example: classes E and F share conv2d.
+        let e = conv_e();
+        let f = conv_f();
+        let sched = Schedule::untuned_default(&e);
+        // Direct application across classes is invalid (paper §4.2)...
+        assert!(apply(&sched, &f).is_err());
+        // ...but the adapted schedule is valid.
+        let adapted = adapt_cross_class(&sched, &f).expect("E~F share conv2d");
+        assert_eq!(adapted.class_sig, "conv2d_bias_add_relu");
+        assert!(apply(&adapted, &f).is_ok());
+        // Tiling decisions carried over unchanged.
+        assert_eq!(adapted.spatial, sched.spatial);
+        assert_eq!(adapted.reduction, sched.reduction);
+    }
+
+    #[test]
+    fn different_anchor_does_not_adapt() {
+        let e = conv_e();
+        let dense = KernelBuilder::dense(256, 512, 512, &[]);
+        let dw = KernelBuilder::depthwise_conv2d(1, 64, 28, 28, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu6]);
+        let sched = Schedule::untuned_default(&e);
+        assert!(adapt_cross_class(&sched, &dense).is_none());
+        assert!(adapt_cross_class(&sched, &dw).is_none());
+    }
+
+    #[test]
+    fn adapted_schedule_still_checks_factors() {
+        // Adaptation does not bypass the factor-vs-extent legality.
+        let e = conv_e();
+        let tiny_f = KernelBuilder::conv2d(1, 4, 4, 4, 4, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Add, OpKind::Relu]);
+        let mut sched = Schedule::untuned_default(&e);
+        sched.spatial[1] = crate::sched::AxisTiling::of(&[64]); // oc=4 < 64
+        let adapted = adapt_cross_class(&sched, &tiny_f).unwrap();
+        assert!(apply(&adapted, &tiny_f).is_err());
+    }
+
+    #[test]
+    fn anchor_tokens() {
+        assert_eq!(anchor_token("conv2d_bias_relu"), "conv2d");
+        assert_eq!(anchor_token("dense"), "dense");
+        assert_eq!(anchor_token("dwconv2d_bias_relu6"), "dwconv2d");
+    }
+}

@@ -1,0 +1,354 @@
+//! Schedule application: (schedule, kernel) → concrete annotated loop nest.
+//!
+//! This is where transfer legality is decided (paper §4.1/§4.2):
+//!
+//! * a schedule can only be applied to a kernel whose loop skeleton
+//!   matches (cross-class transfers "would always be invalid");
+//! * a split whose inner-factor product exceeds the target extent
+//!   produces invalid code ("if the schedule defines a loop splitting
+//!   factor which is larger than the loop itself") — these are Fig 4's
+//!   `-1` entries;
+//! * a split that does not divide evenly is *valid* but pays a padding
+//!   penalty (the reformulated `Split(N, ceil(N/8), 8)` covers the space
+//!   with a partial tail tile).
+
+use super::schedule::Schedule;
+use crate::ir::Kernel;
+
+/// Loop annotation, in increasing priority.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ann {
+    None,
+    Parallel,
+    Unroll,
+    Vectorize,
+}
+
+/// One loop of the scheduled nest, outer→inner order.
+#[derive(Clone, Copy, Debug)]
+pub struct SLoop {
+    /// Canonical axis this loop is a part of.
+    pub axis: usize,
+    /// Trip count of this part.
+    pub extent: u64,
+    pub ann: Ann,
+    /// Tile level within its axis (0 = outermost/derived part).
+    pub level: usize,
+}
+
+/// The result of applying a schedule: what the cost simulator consumes.
+#[derive(Clone, Debug)]
+pub struct ScheduledNest {
+    pub loops: Vec<SLoop>,
+    pub cache_write: bool,
+    /// Padding overhead from imperfect splits: ratio of padded iteration
+    /// domain to the true domain (>= 1.0).
+    pub waste: f64,
+}
+
+impl ScheduledNest {
+    /// Product of extents of loops annotated Parallel.
+    pub fn parallel_extent(&self) -> u64 {
+        self.loops
+            .iter()
+            .filter(|l| l.ann == Ann::Parallel)
+            .map(|l| l.extent)
+            .product::<u64>()
+            .max(1)
+    }
+
+    /// Extent of the vectorized loop (1 if none).
+    pub fn vector_extent(&self) -> u64 {
+        self.loops
+            .iter()
+            .find(|l| l.ann == Ann::Vectorize)
+            .map(|l| l.extent)
+            .unwrap_or(1)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ApplyError {
+    /// Op sequences differ — schedule references computations the target
+    /// does not have.
+    ClassMismatch { expected: String, got: String },
+    /// Axis-kind skeletons differ (defensive; implied by class today).
+    SkeletonMismatch,
+    /// Inner-factor product exceeds the target axis extent → invalid code.
+    FactorExceedsExtent { axis: usize, product: u64, extent: u64 },
+    /// A zero split factor can never generate valid code.
+    ZeroFactor { axis: usize },
+}
+
+impl std::fmt::Display for ApplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApplyError::ClassMismatch { expected, got } => {
+                write!(f, "class mismatch: schedule for `{expected}`, kernel is `{got}`")
+            }
+            ApplyError::SkeletonMismatch => write!(f, "loop skeleton mismatch"),
+            ApplyError::FactorExceedsExtent { axis, product, extent } => write!(
+                f,
+                "split factors (product {product}) exceed extent {extent} on axis {axis}"
+            ),
+            ApplyError::ZeroFactor { axis } => write!(f, "zero split factor on axis {axis}"),
+        }
+    }
+}
+
+impl std::error::Error for ApplyError {}
+
+/// Apply `sched` to `kernel`. `strict_class` gates the class-signature
+/// check; the transfer engine always uses strict mode, matching the paper
+/// (schedules are only reused within a kernel class).
+pub fn apply(sched: &Schedule, kernel: &Kernel) -> Result<ScheduledNest, ApplyError> {
+    if sched.class_sig != kernel.class_signature() {
+        return Err(ApplyError::ClassMismatch {
+            expected: sched.class_sig.clone(),
+            got: kernel.class_signature(),
+        });
+    }
+    if sched.skeleton != kernel.nest.skeleton() {
+        return Err(ApplyError::SkeletonMismatch);
+    }
+
+    let spatial_axes: Vec<usize> = kernel.nest.spatial_axes().map(|(i, _)| i).collect();
+    let reduction_axes: Vec<usize> = kernel.nest.reduction_axes().map(|(i, _)| i).collect();
+    debug_assert_eq!(spatial_axes.len(), sched.spatial.len());
+    debug_assert_eq!(reduction_axes.len(), sched.reduction.len());
+
+    // Per-axis part extents: [derived outer, inner factors...]. Outer is
+    // ceil(extent / prod) — the shape-relative reformulation; waste is the
+    // padding this introduces.
+    let mut waste = 1.0f64;
+    let mut parts_of = |axis: usize, factors: &[u64]| -> Result<Vec<u64>, ApplyError> {
+        let extent = kernel.nest.axes[axis].extent;
+        if factors.iter().any(|&f| f == 0) {
+            return Err(ApplyError::ZeroFactor { axis });
+        }
+        let prod: u64 = factors.iter().product::<u64>().max(1);
+        if prod > extent {
+            return Err(ApplyError::FactorExceedsExtent { axis, product: prod, extent });
+        }
+        let outer = extent.div_ceil(prod);
+        waste *= (outer * prod) as f64 / extent as f64;
+        let mut parts = Vec::with_capacity(factors.len() + 1);
+        parts.push(outer);
+        parts.extend_from_slice(factors);
+        Ok(parts)
+    };
+
+    let mut spatial_parts: Vec<Vec<u64>> = Vec::with_capacity(spatial_axes.len());
+    for (i, &axis) in spatial_axes.iter().enumerate() {
+        spatial_parts.push(parts_of(axis, &sched.spatial[i].factors)?);
+    }
+    let mut reduction_parts: Vec<Vec<u64>> = Vec::with_capacity(reduction_axes.len());
+    for (i, &axis) in reduction_axes.iter().enumerate() {
+        reduction_parts.push(parts_of(axis, &sched.reduction[i].factors)?);
+    }
+
+    let ls = sched.spatial_levels();
+    let lr = sched.reduction_levels();
+
+    // Interleave levels in the standard CPU sketch order (paper Alg. 1
+    // line 13/30): reduction level rl sits just above spatial level
+    // `ls - lr + rl`; reduction levels whose slot falls at or below 0 go
+    // innermost (classic untiled reduction).
+    let mut loops: Vec<SLoop> = Vec::with_capacity(spatial_axes.len() * ls + reduction_axes.len() * lr);
+    let parallel_levels = sched.parallel_levels.min(ls.saturating_sub(1));
+    let emit_spatial = |loops: &mut Vec<SLoop>, level: usize| {
+        for (i, &axis) in spatial_axes.iter().enumerate() {
+            let ann = if level < parallel_levels { Ann::Parallel } else { Ann::None };
+            loops.push(SLoop { axis, extent: spatial_parts[i][level], ann, level });
+        }
+    };
+    let emit_reduction = |loops: &mut Vec<SLoop>, level: usize| {
+        for (i, &axis) in reduction_axes.iter().enumerate() {
+            loops.push(SLoop { axis, extent: reduction_parts[i][level], ann: Ann::None, level });
+        }
+    };
+
+    // Parallel block first (fused outer spatial levels are hoisted above
+    // any reduction loop, as Fuse+Parallel does in Alg. 1 lines 14-15).
+    for level in 0..parallel_levels {
+        emit_spatial(&mut loops, level);
+    }
+    let mut emitted_r = 0usize;
+    for level in parallel_levels..ls {
+        // Reductions slotted above this spatial level (slots < 1 go
+        // innermost instead — the classic untiled reduction).
+        while emitted_r < lr
+            && level >= 1
+            && (ls as i64 - lr as i64 + emitted_r as i64) == level as i64
+        {
+            emit_reduction(&mut loops, emitted_r);
+            emitted_r += 1;
+        }
+        emit_spatial(&mut loops, level);
+    }
+    // Remaining reduction levels (slot <= 0 or beyond): innermost.
+    while emitted_r < lr {
+        emit_reduction(&mut loops, emitted_r);
+        emitted_r += 1;
+    }
+
+    // Vectorize: innermost part of the last spatial axis.
+    if sched.vectorize {
+        if let Some(&last_sp) = spatial_axes.last() {
+            if let Some(l) = loops
+                .iter_mut()
+                .rev()
+                .find(|l| l.axis == last_sp && l.level == ls - 1)
+            {
+                if l.extent > 1 {
+                    l.ann = Ann::Vectorize;
+                }
+            }
+        }
+    }
+
+    // Unroll: innermost non-vectorized loops whose cumulative trip product
+    // stays within the unroll budget.
+    if sched.unroll_max > 0 {
+        let mut budget = sched.unroll_max;
+        for l in loops.iter_mut().rev() {
+            if l.ann == Ann::Vectorize {
+                continue;
+            }
+            if l.ann != Ann::None || l.extent > budget {
+                break;
+            }
+            l.ann = Ann::Unroll;
+            budget /= l.extent.max(1);
+            if budget <= 1 {
+                break;
+            }
+        }
+    }
+
+    Ok(ScheduledNest { loops, cache_write: sched.cache_write, waste })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{KernelBuilder, OpKind};
+    use crate::sched::schedule::AxisTiling;
+
+    fn gemm(n: u64) -> Kernel {
+        KernelBuilder::dense(n, n, n, &[])
+    }
+
+    /// The paper's Algorithm 1 schedule for the 512 GEMM: N/M tiled
+    /// (outer, 16, 1, 8), K tiled (outer, 1), fuse+parallel outer,
+    /// unroll 512, vectorize M_i.
+    fn alg1_512() -> Schedule {
+        let k = gemm(512);
+        Schedule {
+            class_sig: k.class_signature(),
+            skeleton: k.nest.skeleton(),
+            spatial: vec![AxisTiling::of(&[16, 1, 8]), AxisTiling::of(&[16, 1, 8])],
+            reduction: vec![AxisTiling::of(&[1])],
+            parallel_levels: 1,
+            vectorize: true,
+            unroll_max: 512,
+            cache_write: false,
+        }
+    }
+
+    #[test]
+    fn alg1_loop_structure() {
+        let nest = apply(&alg1_512(), &gemm(512)).unwrap();
+        // 2 spatial axes x 4 levels + 1 reduction x 2 levels = 10 loops
+        // (paper line 13 reorder has exactly 10 ranges).
+        assert_eq!(nest.loops.len(), 10);
+        // Outer parallel pair: derived outer = 512/128 = 4 each.
+        assert_eq!(nest.loops[0].extent, 4);
+        assert_eq!(nest.loops[0].ann, Ann::Parallel);
+        assert_eq!(nest.loops[1].extent, 4);
+        assert_eq!(nest.parallel_extent(), 16);
+        // Innermost loop is the vectorized M_i = 8.
+        assert_eq!(nest.vector_extent(), 8);
+        assert_eq!(nest.loops.last().unwrap().ann, Ann::Vectorize);
+        assert!((nest.waste - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_512_schedule_to_1024_is_valid() {
+        // The paper's §4.1 experiment: cross-applying the two GEMM
+        // schedules still produces valid code.
+        let nest = apply(&alg1_512(), &gemm(1024)).unwrap();
+        // Derived outer becomes 1024/128 = 8.
+        assert_eq!(nest.loops[0].extent, 8);
+        assert!((nest.waste - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_exceeding_extent_is_invalid() {
+        // Applying the same schedule to a 56-extent kernel: 16*1*8 = 128 > 56.
+        let err = apply(&alg1_512(), &gemm(56)).unwrap_err();
+        assert!(matches!(err, ApplyError::FactorExceedsExtent { product: 128, extent: 56, .. }));
+    }
+
+    #[test]
+    fn imperfect_split_pays_waste() {
+        let k = gemm(96);
+        let mut s = alg1_512();
+        s.spatial = vec![AxisTiling::of(&[8]), AxisTiling::of(&[8])];
+        s.reduction = vec![AxisTiling::flat()];
+        // 96 % 8 == 0 -> no waste.
+        assert!((apply(&s, &k).unwrap().waste - 1.0).abs() < 1e-12);
+        // Extent 100 with factor 8: outer = 13, padded = 104, waste = 1.04 per axis.
+        let k2 = gemm(100);
+        let w = apply(&s, &k2).unwrap().waste;
+        assert!((w - (104.0f64 / 100.0).powi(2)).abs() < 1e-9, "waste {w}");
+    }
+
+    #[test]
+    fn cross_class_is_rejected() {
+        let conv = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+        let err = apply(&alg1_512(), &conv).unwrap_err();
+        assert!(matches!(err, ApplyError::ClassMismatch { .. }));
+    }
+
+    #[test]
+    fn naive_schedule_is_canonical_order() {
+        let k = gemm(64);
+        let nest = apply(&Schedule::naive(&k), &k).unwrap();
+        // n, m, k single loops; reduction innermost.
+        assert_eq!(nest.loops.len(), 3);
+        assert_eq!(nest.loops[2].axis, 2);
+        assert!(nest.loops.iter().all(|l| l.ann == Ann::None));
+    }
+
+    #[test]
+    fn untuned_default_annotations() {
+        let k = gemm(512);
+        let nest = apply(&Schedule::untuned_default(&k), &k).unwrap();
+        // Fused outer parallel loop: m (512) x n_outer (512/8 = 64).
+        assert_eq!(nest.parallel_extent(), 512 * 64);
+        assert_eq!(nest.vector_extent(), 8);
+    }
+
+    #[test]
+    fn unroll_marks_inner_loops() {
+        let k = gemm(512);
+        let mut s = alg1_512();
+        s.vectorize = false;
+        let nest = apply(&s, &k).unwrap();
+        let unrolled: Vec<_> = nest.loops.iter().filter(|l| l.ann == Ann::Unroll).collect();
+        // Budget 512 covers the inner (8, 1, 8, ...) loops.
+        assert!(!unrolled.is_empty());
+        // Unrolled loops are a contiguous innermost suffix.
+        let first = nest.loops.iter().position(|l| l.ann == Ann::Unroll).unwrap();
+        assert!(nest.loops[first..].iter().all(|l| l.ann == Ann::Unroll));
+    }
+
+    #[test]
+    fn zero_factor_rejected() {
+        let k = gemm(64);
+        let mut s = Schedule::naive(&k);
+        s.spatial[0] = AxisTiling::of(&[0]);
+        assert!(matches!(apply(&s, &k).unwrap_err(), ApplyError::ZeroFactor { .. }));
+    }
+}

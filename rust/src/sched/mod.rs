@@ -1,0 +1,27 @@
+//! Compute schedules: the transformation language of the paper.
+//!
+//! A [`Schedule`] is a structured, *shape-relative* record of the
+//! transformations Ansor's CPU search space applies to a kernel's
+//! canonical loop nest: multi-level tiling of every axis (the classic
+//! "SSRSRS" structure), outer-loop fusion + parallelization,
+//! vectorization of the innermost spatial part, unrolling, and an
+//! optional local cache (accumulation) buffer — exactly the primitive
+//! vocabulary of the paper's Algorithm 1 (Split / Reorder / Fuse /
+//! Parallel / Unroll / Vectorize / ComputeAt + cache buffer).
+//!
+//! Shape-relative means split factors store only the *inner* tile sizes;
+//! the outermost part is derived from the target extent
+//! (`Split(N, N/8, 8)` in the paper's notation, §4.1). This is what makes
+//! a schedule transferable to a kernel it was not tuned for — and what
+//! makes some transfers fail (factor product exceeding the new extent),
+//! producing the "-1 / invalid" entries of Fig 4.
+
+pub mod adapt;
+pub mod apply;
+pub mod schedule;
+pub mod serialize;
+pub mod trace;
+
+pub use adapt::{adapt_cross_class, is_adaptable};
+pub use apply::{apply, ApplyError, Ann, SLoop, ScheduledNest};
+pub use schedule::{AxisTiling, Schedule};

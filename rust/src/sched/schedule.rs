@@ -1,0 +1,193 @@
+//! The structured schedule record and its canonical constructors.
+
+use crate::ir::{AxisKind, Kernel};
+
+/// Multi-level tiling of one axis. `factors` are the *inner* part sizes,
+/// ordered outer→inner; the outermost part is derived from the target
+/// extent at application time (shape-relative form, paper §4.1).
+///
+/// An axis with `factors = [16, 1, 8]` and extent 512 becomes the 4-level
+/// loop (4, 16, 1, 8) — the exact N-axis tiling of the paper's
+/// Algorithm 1 (lines 6–8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AxisTiling {
+    pub factors: Vec<u64>,
+}
+
+impl AxisTiling {
+    pub fn flat() -> Self {
+        AxisTiling { factors: vec![] }
+    }
+    pub fn of(factors: &[u64]) -> Self {
+        AxisTiling { factors: factors.to_vec() }
+    }
+    pub fn inner_product(&self) -> u64 {
+        self.factors.iter().product::<u64>().max(1)
+    }
+    pub fn levels(&self) -> usize {
+        self.factors.len() + 1
+    }
+}
+
+/// A complete schedule for one kernel-class loop skeleton.
+///
+/// Invariants: every spatial axis has the same number of tile levels
+/// (`spatial_levels`), every reduction axis has `reduction_levels`; the
+/// loop order is the standard CPU sketch interleaving (S…S R S R S…),
+/// reproduced in [`super::apply`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Class signature this schedule was *tuned* for (provenance; transfer
+    /// legality is checked against the target's signature).
+    pub class_sig: String,
+    /// Axis-kind skeleton of the nest it applies to (structural check).
+    pub skeleton: Vec<AxisKind>,
+    /// Per-spatial-axis tilings, canonical axis order.
+    pub spatial: Vec<AxisTiling>,
+    /// Per-reduction-axis tilings, canonical axis order.
+    pub reduction: Vec<AxisTiling>,
+    /// Number of outermost spatial levels fused into the parallel loop
+    /// (0 = single-threaded).
+    pub parallel_levels: usize,
+    /// Vectorize the innermost part of the last spatial axis.
+    pub vectorize: bool,
+    /// `pragma auto_unroll_max_step`-style unroll budget (0 = off).
+    pub unroll_max: u64,
+    /// Stage the output in a local accumulation buffer (Algorithm 1,
+    /// line 22: "Create Local Cache Buffer").
+    pub cache_write: bool,
+}
+
+impl Schedule {
+    pub fn spatial_levels(&self) -> usize {
+        self.spatial.first().map(|t| t.levels()).unwrap_or(1)
+    }
+    pub fn reduction_levels(&self) -> usize {
+        self.reduction.first().map(|t| t.levels()).unwrap_or(1)
+    }
+
+    /// The completely unoptimized schedule: one loop per axis, no
+    /// annotations. This is the paper's "unmodified computation" baseline
+    /// from §4.1 (the one auto-schedules beat by ~250x on GEMM).
+    pub fn naive(kernel: &Kernel) -> Schedule {
+        let spatial = kernel.nest.spatial_axes().map(|_| AxisTiling::flat()).collect();
+        let reduction = kernel.nest.reduction_axes().map(|_| AxisTiling::flat()).collect();
+        Schedule {
+            class_sig: kernel.class_signature(),
+            skeleton: kernel.nest.skeleton(),
+            spatial,
+            reduction,
+            parallel_levels: 0,
+            vectorize: false,
+            unroll_max: 0,
+            cache_write: false,
+        }
+    }
+
+    /// TVM-fallback-style default schedule: parallel over the outer
+    /// spatial loop, vectorize the innermost spatial axis, small unroll —
+    /// but *no* multi-level cache tiling and no cache write. This is the
+    /// paper's "untuned" baseline (compiled "using TVM's standard untuned
+    /// schedules", §5.1): decent for convolutions, poor for the large
+    /// dense kernels that dominate BERT — which is why the paper's BERT
+    /// max speedup is 59x while CNNs sit near 1.1–1.6x.
+    pub fn untuned_default(kernel: &Kernel) -> Schedule {
+        let n_spatial = kernel.nest.spatial_axes().count();
+        let mut spatial: Vec<AxisTiling> = Vec::with_capacity(n_spatial);
+        for (i, (_, axis)) in kernel.nest.spatial_axes().enumerate() {
+            if i + 1 == n_spatial {
+                // Innermost spatial axis: peel a vector-width tile if it
+                // divides cleanly; 8 = f32 lanes of 256-bit SIMD.
+                let f = if axis.extent % 8 == 0 { 8 } else { 1 };
+                spatial.push(AxisTiling::of(&[f]));
+            } else {
+                spatial.push(AxisTiling::of(&[1]));
+            }
+        }
+        let reduction = kernel.nest.reduction_axes().map(|_| AxisTiling::flat()).collect();
+        Schedule {
+            class_sig: kernel.class_signature(),
+            skeleton: kernel.nest.skeleton(),
+            spatial,
+            reduction,
+            parallel_levels: 1,
+            vectorize: true,
+            unroll_max: 16,
+            cache_write: false,
+        }
+    }
+
+    /// Human-readable one-line summary (used in Fig 4 row labels).
+    pub fn summary(&self) -> String {
+        let tiles: Vec<String> = self
+            .spatial
+            .iter()
+            .map(|t| {
+                format!(
+                    "[{}]",
+                    t.factors.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+                )
+            })
+            .collect();
+        let red: Vec<String> = self
+            .reduction
+            .iter()
+            .map(|t| {
+                format!(
+                    "[{}]",
+                    t.factors.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",")
+                )
+            })
+            .collect();
+        format!(
+            "S{} R{} par{}{}{} u{}",
+            tiles.join(""),
+            red.join(""),
+            self.parallel_levels,
+            if self.vectorize { " vec" } else { "" },
+            if self.cache_write { " cw" } else { "" },
+            self.unroll_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{KernelBuilder, OpKind};
+
+    #[test]
+    fn naive_has_flat_tilings() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let s = Schedule::naive(&k);
+        assert_eq!(s.spatial.len(), 2);
+        assert_eq!(s.reduction.len(), 1);
+        assert_eq!(s.spatial_levels(), 1);
+        assert!(!s.vectorize && s.parallel_levels == 0);
+    }
+
+    #[test]
+    fn default_vectorizes_when_divisible() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let s = Schedule::untuned_default(&k);
+        assert_eq!(s.spatial[1].factors, vec![8]);
+        assert!(s.vectorize);
+    }
+
+    #[test]
+    fn default_skips_vector_tile_when_indivisible() {
+        let k = KernelBuilder::dense(1, 512, 63, &[OpKind::Add]);
+        let s = Schedule::untuned_default(&k);
+        assert_eq!(s.spatial[1].factors, vec![1]);
+    }
+
+    #[test]
+    fn algorithm1_tiling_roundtrip() {
+        // Paper Algorithm 1, N axis of the 512 GEMM: parts (4,16,1,8).
+        let t = AxisTiling::of(&[16, 1, 8]);
+        assert_eq!(t.inner_product(), 128);
+        assert_eq!(t.levels(), 4);
+        // Derived outer for extent 512 = 4.
+        assert_eq!(512 / t.inner_product(), 4);
+    }
+}

@@ -1,0 +1,133 @@
+//! Schedule (de)serialization: Ansor-log-like JSON records.
+//!
+//! The schedule store persists one JSON object per line; the format keeps
+//! the shape-relative factors, so stored schedules transfer to new shapes
+//! on load without modification.
+
+use super::schedule::{AxisTiling, Schedule};
+use crate::ir::AxisKind;
+use crate::util::json::{self, Json};
+
+fn kind_token(k: AxisKind) -> &'static str {
+    match k {
+        AxisKind::Spatial => "S",
+        AxisKind::Reduction => "R",
+    }
+}
+
+fn kind_from(tok: &str) -> anyhow::Result<AxisKind> {
+    match tok {
+        "S" => Ok(AxisKind::Spatial),
+        "R" => Ok(AxisKind::Reduction),
+        other => anyhow::bail!("bad axis kind `{other}`"),
+    }
+}
+
+fn tiling_to_json(t: &AxisTiling) -> Json {
+    Json::arr(t.factors.iter().map(|&f| Json::num(f as f64)))
+}
+
+fn tiling_from_json(j: &Json) -> anyhow::Result<AxisTiling> {
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("tiling must be an array"))?;
+    let factors = arr
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow::anyhow!("tiling factor must be a number"))
+        })
+        .collect::<anyhow::Result<Vec<u64>>>()?;
+    Ok(AxisTiling { factors })
+}
+
+pub fn to_json(s: &Schedule) -> Json {
+    Json::obj(vec![
+        ("class", Json::str(&s.class_sig)),
+        (
+            "skeleton",
+            Json::str(s.skeleton.iter().map(|&k| kind_token(k)).collect::<String>()),
+        ),
+        ("spatial", Json::arr(s.spatial.iter().map(tiling_to_json))),
+        ("reduction", Json::arr(s.reduction.iter().map(tiling_to_json))),
+        ("parallel_levels", Json::num(s.parallel_levels as f64)),
+        ("vectorize", Json::Bool(s.vectorize)),
+        ("unroll_max", Json::num(s.unroll_max as f64)),
+        ("cache_write", Json::Bool(s.cache_write)),
+    ])
+}
+
+pub fn from_json(j: &Json) -> anyhow::Result<Schedule> {
+    let class_sig = j.req("class")?.as_str().unwrap_or_default().to_string();
+    let skeleton = j
+        .req("skeleton")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("skeleton must be a string"))?
+        .chars()
+        .map(|c| kind_from(&c.to_string()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let spatial = j
+        .req("spatial")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("spatial must be an array"))?
+        .iter()
+        .map(tiling_from_json)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let reduction = j
+        .req("reduction")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("reduction must be an array"))?
+        .iter()
+        .map(tiling_from_json)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(Schedule {
+        class_sig,
+        skeleton,
+        spatial,
+        reduction,
+        parallel_levels: j.req("parallel_levels")?.as_usize().unwrap_or(0),
+        vectorize: j.req("vectorize")?.as_bool().unwrap_or(false),
+        unroll_max: j.req("unroll_max")?.as_f64().unwrap_or(0.0) as u64,
+        cache_write: j.req("cache_write")?.as_bool().unwrap_or(false),
+    })
+}
+
+pub fn to_string(s: &Schedule) -> String {
+    to_json(s).to_compact()
+}
+
+pub fn from_str(s: &str) -> anyhow::Result<Schedule> {
+    from_json(&json::parse(s)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn roundtrip() {
+        let k = KernelBuilder::dense(512, 768, 3072, &[]);
+        let mut s = Schedule::untuned_default(&k);
+        s.spatial[0] = AxisTiling::of(&[4, 2, 8]);
+        s.cache_write = true;
+        s.unroll_max = 64;
+        let text = to_string(&s);
+        let back = from_str(&text).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn skeleton_string_roundtrips() {
+        let k = KernelBuilder::conv2d(1, 3, 224, 224, 64, 7, 7, 2, 3, &[]);
+        let s = Schedule::naive(&k);
+        let j = to_json(&s);
+        assert_eq!(j.get("skeleton").unwrap().as_str(), Some("SSSSRRR"));
+        assert_eq!(from_json(&j).unwrap().skeleton, s.skeleton);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_str("{}").is_err());
+        assert!(from_str("{\"class\":\"x\",\"skeleton\":\"Q\"}").is_err());
+    }
+}

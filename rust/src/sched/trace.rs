@@ -1,0 +1,157 @@
+//! Render a schedule as the primitive trace of the paper's Algorithm 1:
+//! Split / Reorder / Fuse / Parallel / Unroll / Vectorize / CacheWrite.
+//!
+//! Purely for humans (CLI `repro show-schedule`, EXPERIMENTS.md listings);
+//! the machine representation stays the structured [`Schedule`].
+
+use super::schedule::Schedule;
+use crate::ir::Kernel;
+use std::fmt::Write as _;
+
+/// Subscript suffix for a tile level, innermost = `i`, then `o`, `oo`, ...
+fn part_name(axis: &str, level: usize, levels: usize) -> String {
+    if levels == 1 {
+        return axis.to_string();
+    }
+    if level == levels - 1 {
+        format!("{axis}_i")
+    } else {
+        format!("{axis}_{}", "o".repeat(levels - 1 - level))
+    }
+}
+
+/// Produce the human-readable primitive trace of applying `sched` to
+/// `kernel` (Algorithm-1 style pseudo-schedule).
+pub fn trace(sched: &Schedule, kernel: &Kernel) -> String {
+    let mut out = String::new();
+    let spatial: Vec<(usize, &str, u64)> = kernel
+        .nest
+        .spatial_axes()
+        .map(|(i, a)| (i, a.name, a.extent))
+        .collect();
+    let reduction: Vec<(usize, &str, u64)> = kernel
+        .nest
+        .reduction_axes()
+        .map(|(i, a)| (i, a.name, a.extent))
+        .collect();
+
+    let ls = sched.spatial_levels();
+    let lr = sched.reduction_levels();
+
+    // Split lines: innermost factor first, like Alg. 1 lines 6-12.
+    for (ti, &(_, name, extent)) in spatial.iter().enumerate() {
+        let t = &sched.spatial[ti];
+        let mut remaining = format!("{name}");
+        for (rev, &f) in t.factors.iter().rev().enumerate() {
+            let level = ls - 1 - rev; // level of the part being peeled
+            let outer = part_name(name, level - 1, ls);
+            let inner = part_name(name, level, ls);
+            let _ = writeln!(out, "{outer}, {inner} <- Split({remaining}, {f})");
+            remaining = outer;
+        }
+        if t.factors.is_empty() {
+            let _ = writeln!(out, "# {name} left unsplit (extent {extent})");
+        }
+    }
+    for (ti, &(_, name, extent)) in reduction.iter().enumerate() {
+        let t = &sched.reduction[ti];
+        let mut remaining = format!("{name}");
+        for (rev, &f) in t.factors.iter().rev().enumerate() {
+            let level = lr - 1 - rev;
+            let outer = part_name(name, level - 1, lr);
+            let inner = part_name(name, level, lr);
+            let _ = writeln!(out, "{outer}, {inner} <- Split({remaining}, {f})");
+            remaining = outer;
+        }
+        if t.factors.is_empty() {
+            let _ = writeln!(out, "# {name} left unsplit (extent {extent})");
+        }
+    }
+
+    if sched.cache_write {
+        let _ = writeln!(out, "D <- CacheWrite({})", kernel.nest.output_buffer().name);
+    }
+
+    // Reorder line: the SSRSRS interleave.
+    let mut order: Vec<String> = Vec::new();
+    for level in 0..ls {
+        for rl in 0..lr {
+            if level >= 1 && ls as i64 - lr as i64 + rl as i64 == level as i64 {
+                for &(_, name, _) in &reduction {
+                    order.push(part_name(name, rl, lr));
+                }
+            }
+        }
+        for &(_, name, _) in &spatial {
+            order.push(part_name(name, level, ls));
+        }
+    }
+    for rl in 0..lr {
+        if ls as i64 - lr as i64 + rl as i64 <= 0 {
+            for &(_, name, _) in &reduction {
+                order.push(part_name(name, rl, lr));
+            }
+        }
+    }
+    let _ = writeln!(out, "Reorder({})", order.join(", "));
+
+    if sched.parallel_levels > 0 && ls > 1 {
+        let fused: Vec<String> = spatial
+            .iter()
+            .flat_map(|&(_, name, _)| {
+                (0..sched.parallel_levels.min(ls - 1)).map(move |l| part_name(name, l, ls))
+            })
+            .collect();
+        let _ = writeln!(out, "F <- Fuse({})", fused.join(", "));
+        let _ = writeln!(out, "Parallel(F)");
+        if sched.unroll_max > 0 {
+            let _ = writeln!(out, "Unroll(F, {})", sched.unroll_max);
+        }
+    } else if sched.unroll_max > 0 {
+        let _ = writeln!(out, "Unroll(body, {})", sched.unroll_max);
+    }
+
+    if sched.vectorize {
+        if let Some(&(_, name, _)) = spatial.last() {
+            let _ = writeln!(out, "Vectorize({})", part_name(name, ls - 1, ls));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+    use crate::sched::schedule::AxisTiling;
+
+    #[test]
+    fn alg1_trace_mentions_all_primitives() {
+        let k = KernelBuilder::dense(512, 512, 512, &[]);
+        let s = Schedule {
+            class_sig: k.class_signature(),
+            skeleton: k.nest.skeleton(),
+            spatial: vec![AxisTiling::of(&[16, 1, 8]), AxisTiling::of(&[16, 1, 8])],
+            reduction: vec![AxisTiling::of(&[1])],
+            parallel_levels: 1,
+            vectorize: true,
+            unroll_max: 512,
+            cache_write: true,
+        };
+        let t = trace(&s, &k);
+        for needle in ["Split", "Reorder", "Fuse", "Parallel", "Unroll", "Vectorize", "CacheWrite"] {
+            assert!(t.contains(needle), "trace missing {needle}:\n{t}");
+        }
+        // Split of m by 8 appears (innermost factor first).
+        assert!(t.contains("Split(m, 8)"), "{t}");
+    }
+
+    #[test]
+    fn naive_trace_is_reorder_only() {
+        let k = KernelBuilder::dense(64, 64, 64, &[]);
+        let s = Schedule::naive(&k);
+        let t = trace(&s, &k);
+        assert!(t.contains("Reorder(m, n, k)"), "{t}");
+        assert!(!t.contains("Parallel"));
+    }
+}

@@ -1,0 +1,395 @@
+//! The transfer-tuning engine (paper §4.3, §5).
+//!
+//! Given a target model and a schedule store, evaluate every compatible
+//! kernel/schedule pair *standalone* (in parallel on the host, with
+//! sequential device seconds charged to the ledger), pick the best
+//! schedule per kernel, and compile the full model with the winners.
+//! Kernels whose class has no schedules in the store keep the untuned
+//! default (the paper's class-F-in-ResNet18 case).
+//!
+//! The returned result carries everything the paper's figures need: the
+//! full pair matrix (Fig 4), the search-time ledger (Fig 5b/6b/8b), and
+//! the end-to-end times (Fig 5a/6a/8a).
+
+use super::store::ScheduleStore;
+use crate::coordinator::{measure_pairs, Ledger};
+use crate::device::{model_time, untuned_model_time, DeviceProfile};
+use crate::ir::ModelGraph;
+use crate::sched::{adapt_cross_class, Schedule};
+
+/// Engine options. The defaults reproduce the paper's implementation;
+/// `cross_class` enables the §4.2 future-work extension (adapting
+/// schedules between classes that share an anchor, e.g. E→F).
+#[derive(Clone, Debug, Default)]
+pub struct TransferOptions {
+    pub cross_class: bool,
+}
+
+/// Evaluation of one kernel against every compatible store record.
+#[derive(Clone, Debug)]
+pub struct KernelSweep {
+    /// Unique-kernel index in the target graph.
+    pub kernel: usize,
+    /// (store record index, outcome) for each compatible-class record;
+    /// `None` runtime = invalid (Fig 4's -1).
+    pub outcomes: Vec<(usize, Option<f64>)>,
+    /// Untuned-default standalone time (the black bars of Fig 4).
+    pub untuned_s: f64,
+    /// Chosen store record (None = kept the default schedule).
+    pub chosen: Option<usize>,
+    /// Standalone time of the chosen schedule.
+    pub chosen_s: f64,
+    /// The schedule actually chosen (may be a cross-class adaptation of
+    /// the record; `None` = untuned default).
+    pub chosen_schedule: Option<Schedule>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TransferResult {
+    pub target: String,
+    /// Which store slice was used (model name for one-to-one, "mixed"
+    /// for the pooled mode).
+    pub source: String,
+    pub sweeps: Vec<KernelSweep>,
+    pub ledger: Ledger,
+    /// End-to-end untuned baseline.
+    pub untuned_model_s: f64,
+    /// End-to-end time with the chosen schedules.
+    pub tuned_model_s: f64,
+}
+
+impl TransferResult {
+    pub fn speedup(&self) -> f64 {
+        self.untuned_model_s / self.tuned_model_s
+    }
+    pub fn search_time_s(&self) -> f64 {
+        self.ledger.seconds
+    }
+    pub fn pairs_evaluated(&self) -> usize {
+        self.sweeps.iter().map(|s| s.outcomes.len()).sum()
+    }
+    pub fn invalid_pairs(&self) -> usize {
+        self.sweeps
+            .iter()
+            .flat_map(|s| &s.outcomes)
+            .filter(|(_, o)| o.is_none())
+            .count()
+    }
+}
+
+/// Run transfer-tuning of `store` onto `target`.
+///
+/// `source_label` is carried into the result for reporting; pass the
+/// tuning-model name (one-to-one) or "mixed" (pool mode, §5.5).
+pub fn transfer_tune(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    profile: &DeviceProfile,
+    source_label: &str,
+    seed: u64,
+) -> TransferResult {
+    transfer_tune_with(target, store, profile, source_label, seed, &TransferOptions::default())
+}
+
+/// Full-control entry point (see [`TransferOptions`]).
+pub fn transfer_tune_with(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    profile: &DeviceProfile,
+    source_label: &str,
+    seed: u64,
+    options: &TransferOptions,
+) -> TransferResult {
+    let mut ledger = Ledger::new();
+
+    // Build the full pair list: every kernel x every same-class record
+    // (plus, in cross-class mode, anchor-compatible records adapted onto
+    // the target class).
+    let mut adapted_pool: Vec<Schedule> = Vec::new(); // owns adapted schedules
+    let mut job_specs: Vec<(usize, usize, bool)> = Vec::new(); // (kernel, record, adapted)
+    let mut job_spans: Vec<(usize, Vec<usize>)> = Vec::new(); // kernel -> record indices
+    for (ki, kernel) in target.kernels.iter().enumerate() {
+        let sig = kernel.class_signature();
+        let mut record_idxs: Vec<usize> = Vec::new();
+        for (ri, r) in store.records.iter().enumerate() {
+            if r.class_sig == sig {
+                record_idxs.push(ri);
+                job_specs.push((ki, ri, false));
+            } else if options.cross_class {
+                if let Some(adapted) = adapt_cross_class(&r.schedule, kernel) {
+                    record_idxs.push(ri);
+                    adapted_pool.push(adapted);
+                    job_specs.push((ki, ri, true));
+                }
+            }
+        }
+        job_spans.push((ki, record_idxs));
+    }
+    // Second pass to borrow stable schedule refs.
+    let mut jobs: Vec<(&crate::ir::Kernel, &Schedule)> = Vec::with_capacity(job_specs.len());
+    let mut adapted_cursor = 0usize;
+    for &(ki, ri, is_adapted) in &job_specs {
+        let sched: &Schedule = if is_adapted {
+            let s = &adapted_pool[adapted_cursor];
+            adapted_cursor += 1;
+            s
+        } else {
+            &store.records[ri].schedule
+        };
+        jobs.push((&target.kernels[ki], sched));
+    }
+
+    // Standalone baseline (untuned default) per kernel — measured too,
+    // as the paper does for its Fig 4 "untuned" bars.
+    let defaults: Vec<Schedule> = target.kernels.iter().map(Schedule::untuned_default).collect();
+    let default_jobs: Vec<(&crate::ir::Kernel, &Schedule)> =
+        target.kernels.iter().zip(&defaults).collect();
+
+    let outcomes = measure_pairs(&jobs, profile, seed);
+    let default_outcomes = measure_pairs(&default_jobs, profile, seed ^ 0xDEF0);
+
+    // Charge device time in job order (sequential device semantics).
+    for o in outcomes.iter().chain(default_outcomes.iter()) {
+        match o.runtime() {
+            Some(t) => ledger.charge_measure(profile, t),
+            None => ledger.charge_compile_fail(profile),
+        }
+    }
+
+    // Per-kernel selection.
+    let mut sweeps: Vec<KernelSweep> = Vec::with_capacity(target.kernels.len());
+    let mut cursor = 0usize;
+    for (ki, record_idxs) in job_spans {
+        let untuned_s = default_outcomes[ki]
+            .runtime()
+            .expect("default schedule always applies");
+        let mut sweep = KernelSweep {
+            kernel: ki,
+            outcomes: Vec::with_capacity(record_idxs.len()),
+            untuned_s,
+            chosen: None,
+            chosen_s: untuned_s,
+            chosen_schedule: None,
+        };
+        for ri in record_idxs {
+            let rt = outcomes[cursor].runtime();
+            let sched = jobs[cursor].1;
+            cursor += 1;
+            sweep.outcomes.push((ri, rt));
+            if let Some(t) = rt {
+                // Selection is by *standalone* time (paper §5.5 explains
+                // both TT and Ansor assume kernel independence here).
+                if t < sweep.chosen_s {
+                    sweep.chosen_s = t;
+                    sweep.chosen = Some(ri);
+                    // Keep the schedule actually measured (which may be a
+                    // cross-class *adapted* variant of the record).
+                    sweep.chosen_schedule = Some(sched.clone());
+                }
+            }
+        }
+        sweeps.push(sweep);
+    }
+
+    // Compile the full model with the winners and time it end-to-end
+    // (deterministic, with inter-kernel boundary effects).
+    let tuned_model_s = model_time(target, profile, |k| match &sweeps[k].chosen_schedule {
+        Some(s) => s.clone(),
+        None => defaults[k].clone(),
+    });
+    let untuned_model_s = untuned_model_time(target, profile);
+
+    TransferResult {
+        target: target.name.clone(),
+        source: source_label.to_string(),
+        sweeps,
+        ledger,
+        untuned_model_s,
+        tuned_model_s,
+    }
+}
+
+/// Convenience: one-to-one transfer from a single source model's
+/// schedules (the paper's default mode).
+pub fn transfer_tune_one_to_one(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    source_model: &str,
+    profile: &DeviceProfile,
+    seed: u64,
+) -> TransferResult {
+    let slice = store.of_model(source_model);
+    transfer_tune(target, &slice, profile, source_model, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::ir::KernelBuilder;
+
+    fn quick_opts() -> TuneOptions {
+        TuneOptions { trials: 96, batch_size: 16, population: 32, generations: 2, ..Default::default() }
+    }
+
+    /// Source: two well-tuned dense kernels; target: a different-size
+    /// dense kernel of the same class.
+    fn dense_setup() -> (ModelGraph, ModelGraph, ScheduleStore) {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut src = ModelGraph::new("Source");
+        src.push(KernelBuilder::dense(512, 512, 512, &[]));
+        src.push(KernelBuilder::dense(1024, 1024, 1024, &[]));
+        let res = tune_model(&src, &prof, &quick_opts());
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&src, &res);
+
+        let mut tgt = ModelGraph::new("Target");
+        tgt.push(KernelBuilder::dense(768, 768, 768, &[]));
+        tgt.push(KernelBuilder::dense(256, 256, 256, &[]));
+        (src, tgt, store)
+    }
+
+    #[test]
+    fn transfer_improves_target() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let res = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        assert!(
+            res.speedup() > 1.0,
+            "transfer should beat untuned default: {}",
+            res.speedup()
+        );
+        assert!(res.search_time_s() > 0.0);
+        assert_eq!(res.pairs_evaluated(), 4); // 2 kernels x 2 schedules
+    }
+
+    #[test]
+    fn no_compatible_class_keeps_default() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, _, store) = dense_setup();
+        let mut tgt = ModelGraph::new("ConvOnly");
+        tgt.push(KernelBuilder::conv2d(1, 32, 28, 28, 32, 3, 3, 1, 1, &[]));
+        let res = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        assert!(res.sweeps[0].outcomes.is_empty());
+        assert!(res.sweeps[0].chosen.is_none());
+        assert!((res.speedup() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn search_time_scales_with_pairs() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let small = transfer_tune(&tgt, &store.of_model("Source"), &prof, "Source", 3);
+        let mut doubled = store.clone();
+        doubled.merge(&store);
+        let large = transfer_tune(&tgt, &doubled, &prof, "mixed", 3);
+        assert!(large.pairs_evaluated() > small.pairs_evaluated());
+        assert!(large.search_time_s() > small.search_time_s());
+    }
+
+    #[test]
+    fn selection_never_worse_than_default_standalone() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let res = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        for s in &res.sweeps {
+            assert!(s.chosen_s <= s.untuned_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let a = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        let b = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        assert_eq!(a.tuned_model_s, b.tuned_model_s);
+        assert_eq!(a.ledger.seconds, b.ledger.seconds);
+    }
+
+    #[test]
+    fn invalid_pairs_show_up_when_factors_exceed_extents() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, _, store) = dense_setup();
+        // Tiny target: schedules tuned on 512/1024 with inner products
+        // beyond 8 cannot apply.
+        let mut tgt = ModelGraph::new("Tiny");
+        tgt.push(KernelBuilder::dense(8, 8, 8, &[]));
+        let res = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        assert!(res.invalid_pairs() > 0, "expected some -1 entries");
+    }
+}
+
+#[cfg(test)]
+mod cross_class_tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::ir::{KernelBuilder, OpKind};
+
+    /// ResNet18's class-F kernels have no same-class schedules in a
+    /// ResNet50 store (paper §4.3); cross-class adaptation (the §4.2
+    /// future-work extension) lets class-E/G schedules cover them.
+    #[test]
+    fn cross_class_covers_resnet18_class_f() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let src = crate::models::resnet::resnet50();
+        let tgt = crate::models::resnet::resnet18();
+        let res = tune_model(
+            &src,
+            &prof,
+            &TuneOptions { trials: 300, batch_size: 16, population: 32, generations: 2, seed: 5, ..Default::default() },
+        );
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&src, &res);
+
+        let plain = transfer_tune(&tgt, &store, &prof, "ResNet50", 5);
+        let cross = transfer_tune_with(
+            &tgt,
+            &store,
+            &prof,
+            "ResNet50",
+            5,
+            &TransferOptions { cross_class: true },
+        );
+        // Class-F kernels get candidates only in cross-class mode.
+        let f = tgt.kernels_of_class("conv2d_bias_add_relu");
+        assert!(!f.is_empty());
+        for &fk in &f {
+            assert!(plain.sweeps[fk].outcomes.is_empty());
+            assert!(!cross.sweeps[fk].outcomes.is_empty(), "F kernel {fk} uncovered");
+        }
+        // More candidates means search costs more; per-kernel picks stay
+        // comparable (exact equality is broken by per-job measurement
+        // noise, so allow the noise envelope).
+        assert!(cross.pairs_evaluated() > plain.pairs_evaluated());
+        for (a, b) in cross.sweeps.iter().zip(&plain.sweeps) {
+            assert!(a.chosen_s <= b.chosen_s * 1.2 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn cross_class_never_crosses_anchors() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut src = crate::ir::ModelGraph::new("DenseSrc");
+        src.push(KernelBuilder::dense(512, 512, 512, &[]));
+        let res = tune_model(
+            &src,
+            &prof,
+            &TuneOptions { trials: 48, batch_size: 16, population: 32, generations: 2, seed: 5, ..Default::default() },
+        );
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&src, &res);
+
+        let mut tgt = crate::ir::ModelGraph::new("ConvTgt");
+        tgt.push(KernelBuilder::conv2d(1, 32, 28, 28, 32, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]));
+        let cross = transfer_tune_with(
+            &tgt,
+            &store,
+            &prof,
+            "DenseSrc",
+            5,
+            &TransferOptions { cross_class: true },
+        );
+        assert!(cross.sweeps[0].outcomes.is_empty(), "dense must not adapt onto conv");
+    }
+}

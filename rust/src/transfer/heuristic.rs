@@ -1,0 +1,160 @@
+//! Model-selection heuristic (paper §4.4.1, Eq. 1).
+//!
+//! For a target model M with kernel classes C, choose the tuning model T
+//! maximizing
+//!
+//! ```text
+//!     sum_{c in C}  P_c^2 * sqrt(|W_Tc|)
+//! ```
+//!
+//! where `P_c` is class c's proportion of M's *untuned* inference time
+//! and `W_Tc` the set of class-c schedules available from T. Squaring
+//! the proportion and square-rooting the count are the paper's damping
+//! against schedule-rich models dominating.
+
+use super::store::ScheduleStore;
+use crate::device::{untuned_kernel_times, DeviceProfile};
+use crate::ir::ModelGraph;
+
+/// Per-class proportions of untuned inference time (the `P_c`).
+pub fn class_proportions(graph: &ModelGraph, profile: &DeviceProfile) -> Vec<(String, f64)> {
+    let times = untuned_kernel_times(graph, profile);
+    let total: f64 = times.iter().sum();
+    graph
+        .class_signatures()
+        .into_iter()
+        .map(|sig| {
+            let t: f64 = graph.kernels_of_class(&sig).iter().map(|&i| times[i]).sum();
+            (sig, t / total)
+        })
+        .collect()
+}
+
+/// Eq. 1 score of tuning-model candidate `t_model` for `target`.
+pub fn eq1_score(
+    target: &ModelGraph,
+    proportions: &[(String, f64)],
+    store: &ScheduleStore,
+    t_model: &str,
+) -> f64 {
+    let _ = target;
+    proportions
+        .iter()
+        .map(|(sig, p)| {
+            let w = store.class_count(t_model, sig) as f64;
+            p * p * w.sqrt()
+        })
+        .sum()
+}
+
+/// Rank candidate tuning models for `target`, best first. The target
+/// itself is excluded (transferring a model onto itself is native
+/// tuning, not transfer-tuning).
+pub fn rank_tuning_models(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    profile: &DeviceProfile,
+) -> Vec<(String, f64)> {
+    let props = class_proportions(target, profile);
+    let mut scored: Vec<(String, f64)> = store
+        .source_models()
+        .into_iter()
+        .filter(|m| *m != target.name)
+        .map(|m| {
+            let s = eq1_score(target, &props, store, &m);
+            (m, s)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Schedule;
+    use crate::transfer::store::StoreRecord;
+    use crate::{ir::KernelBuilder, models};
+
+    fn fake_record(model: &str, sig: &str, kernel_like: &crate::ir::Kernel) -> StoreRecord {
+        StoreRecord {
+            source_model: model.into(),
+            class_sig: sig.into(),
+            source_input_shape: vec![1],
+            source_cost_s: 1e-3,
+            schedule: Schedule::untuned_default(kernel_like),
+        }
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::resnet::resnet18();
+        let p = class_proportions(&g, &prof);
+        let total: f64 = p.iter().map(|(_, x)| x).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert_eq!(p.len(), 6);
+    }
+
+    #[test]
+    fn conv_classes_dominate_resnet() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = models::resnet::resnet18();
+        let p = class_proportions(&g, &prof);
+        let conv: f64 = p
+            .iter()
+            .filter(|(s, _)| s.starts_with("conv2d"))
+            .map(|(_, x)| x)
+            .sum();
+        assert!(conv > 0.7, "conv proportion {conv}");
+    }
+
+    #[test]
+    fn eq1_prefers_matching_classes() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let target = models::resnet::resnet18();
+        let conv = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[crate::ir::OpKind::BiasAdd, crate::ir::OpKind::Relu]);
+        let dense = KernelBuilder::dense(256, 768, 768, &[]);
+        let mut store = ScheduleStore::new();
+        // "ConvModel" offers 9 class-E schedules; "DenseModel" offers 9
+        // class-Q schedules irrelevant to ResNet.
+        for _ in 0..9 {
+            store.records.push(fake_record("ConvModel", "conv2d_bias_relu", &conv));
+            store.records.push(fake_record("DenseModel", "dense", &dense));
+        }
+        let ranked = rank_tuning_models(&target, &store, &prof);
+        assert_eq!(ranked[0].0, "ConvModel");
+        assert!(ranked[0].1 > ranked[1].1);
+    }
+
+    #[test]
+    fn sqrt_damps_schedule_count() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let target = models::resnet::resnet18();
+        let conv = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[crate::ir::OpKind::BiasAdd, crate::ir::OpKind::Relu]);
+        let mut store = ScheduleStore::new();
+        for _ in 0..4 {
+            store.records.push(fake_record("A", "conv2d_bias_relu", &conv));
+        }
+        for _ in 0..16 {
+            store.records.push(fake_record("B", "conv2d_bias_relu", &conv));
+        }
+        let props = class_proportions(&target, &prof);
+        let sa = eq1_score(&target, &props, &store, "A");
+        let sb = eq1_score(&target, &props, &store, "B");
+        // 4x the schedules only doubles the score (sqrt damping).
+        assert!((sb / sa - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn target_excluded_from_ranking() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let target = models::resnet::resnet18();
+        let conv = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[crate::ir::OpKind::BiasAdd, crate::ir::OpKind::Relu]);
+        let mut store = ScheduleStore::new();
+        store.records.push(fake_record("ResNet18", "conv2d_bias_relu", &conv));
+        store.records.push(fake_record("Other", "conv2d_bias_relu", &conv));
+        let ranked = rank_tuning_models(&target, &store, &prof);
+        assert!(ranked.iter().all(|(m, _)| m != "ResNet18"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Transfer-tuning: the paper's contribution.
+//!
+//! Reuse auto-schedules across kernels of the same *class* (same fused
+//! op sequence, any data shape): build a [`ScheduleStore`] from pre-tuned
+//! models, pick a tuning model with the Eq. 1 [`heuristic`], sweep every
+//! compatible kernel/schedule pair standalone, and compile the target
+//! with the per-kernel winners — minutes of search instead of hours of
+//! auto-scheduling.
+
+pub mod engine;
+pub mod heuristic;
+pub mod pairwise;
+pub mod sampling;
+pub mod store;
+
+pub use engine::{transfer_tune, transfer_tune_one_to_one, transfer_tune_with, KernelSweep, TransferOptions, TransferResult};
+pub use heuristic::{class_proportions, eq1_score, rank_tuning_models};
+pub use pairwise::{refine_pairwise, RefinedResult};
+pub use sampling::{sample_by_source_quality, sample_random};
+pub use store::{ScheduleStore, StoreRecord};

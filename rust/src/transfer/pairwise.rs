@@ -1,0 +1,183 @@
+//! Pairwise-aware selection refinement (paper §5.5, proposed as future
+//! work):
+//!
+//! > "awareness and exploitation of this [inter-kernel] dynamic may
+//! > enable further optimizations ... approaches could include
+//! > per-kernel profiling when running the full program, and evaluating
+//! > kernels pairwise."
+//!
+//! After the standalone sweep picks per-kernel winners, this pass walks
+//! the model in execution order and, at each producer→consumer boundary,
+//! re-evaluates the consumer's *near-best* candidates (within a
+//! tolerance of the standalone winner) **in context** — standalone time
+//! plus the boundary interaction with the producer's already-fixed
+//! schedule. Each in-context evaluation is charged to the ledger as a
+//! pairwise measurement, as the paper's proposal would require on real
+//! hardware.
+
+use super::engine::TransferResult;
+use super::store::ScheduleStore;
+use crate::coordinator::Ledger;
+use crate::device::{boundary_delta, model_time, simulate, DeviceProfile};
+use crate::ir::ModelGraph;
+use crate::sched::{apply, Schedule};
+
+/// Result of a pairwise refinement pass.
+#[derive(Clone, Debug)]
+pub struct RefinedResult {
+    /// Final per-unique-kernel schedules (None = untuned default).
+    pub schedules: Vec<Option<Schedule>>,
+    /// End-to-end time after refinement.
+    pub refined_model_s: f64,
+    /// End-to-end time before refinement (the standalone selection).
+    pub baseline_model_s: f64,
+    /// Number of kernels whose pick changed.
+    pub changed: usize,
+    /// Additional search-time cost of the pairwise evaluations.
+    pub extra_ledger: Ledger,
+}
+
+impl RefinedResult {
+    pub fn improvement(&self) -> f64 {
+        self.baseline_model_s / self.refined_model_s
+    }
+}
+
+/// Refine a standalone-selected [`TransferResult`].
+///
+/// `tolerance` bounds which candidates are reconsidered: those whose
+/// standalone time is within `(1 + tolerance)` of the kernel's best
+/// (default 0.15 — the paper observes the standalone ranking is a good
+/// proxy, so only near-ties are worth re-examining).
+pub fn refine_pairwise(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    result: &TransferResult,
+    profile: &DeviceProfile,
+    tolerance: f64,
+) -> RefinedResult {
+    let mut extra_ledger = Ledger::new();
+
+    // Current per-kernel assignment from the standalone selection.
+    let mut chosen: Vec<Option<Schedule>> = result
+        .sweeps
+        .iter()
+        .map(|s| s.chosen_schedule.clone())
+        .collect();
+    let defaults: Vec<Schedule> = target.kernels.iter().map(Schedule::untuned_default).collect();
+    let sched_of = |chosen: &[Option<Schedule>], k: usize| -> Schedule {
+        chosen[k].clone().unwrap_or_else(|| defaults[k].clone())
+    };
+
+    let baseline_model_s = model_time(target, profile, |k| sched_of(&chosen, k));
+
+    // Walk instances in execution order, refining each consumer against
+    // its (already fixed) producer.
+    let mut changed = 0usize;
+    for inst in &target.instances {
+        let Some(pi) = inst.producer else { continue };
+        let prod_inst = &target.instances[pi];
+        let ck = inst.kernel;
+        let kernel = &target.kernels[ck];
+        let sweep = &result.sweeps[ck];
+
+        // Candidate set: near-best standalone outcomes + the default.
+        let best_s = sweep.chosen_s;
+        let mut candidates: Vec<(f64, Schedule)> = vec![(sweep.untuned_s, defaults[ck].clone())];
+        for (ri, outcome) in &sweep.outcomes {
+            if let Some(t) = outcome {
+                if *t <= best_s * (1.0 + tolerance) {
+                    candidates.push((*t, store.records[*ri].schedule.clone()));
+                }
+            }
+        }
+        if let Some(s) = &chosen[ck] {
+            candidates.push((best_s, s.clone()));
+        }
+
+        // Score each candidate in context: deterministic standalone time
+        // + boundary delta against the producer's schedule. Each scoring
+        // is a pairwise measurement on the device.
+        let prod_kernel = &target.kernels[prod_inst.kernel];
+        let prod_sched = sched_of(&chosen, prod_inst.kernel);
+        let mut best: Option<(f64, Schedule)> = None;
+        for (_, cand) in candidates {
+            let Ok(nest) = apply(&cand, kernel) else { continue };
+            let b = simulate(kernel, &nest, profile);
+            let delta = boundary_delta(prod_kernel, &prod_sched, &cand, b.mem_s, b.total_s, profile);
+            let in_context = b.total_s + delta.clamp(-0.9 * b.total_s, b.total_s);
+            extra_ledger.charge_measure(profile, b.total_s);
+            if best.as_ref().map(|(t, _)| in_context < *t).unwrap_or(true) {
+                best = Some((in_context, cand));
+            }
+        }
+        if let Some((_, winner)) = best {
+            let winner_is_default = winner == defaults[ck];
+            let new = if winner_is_default { None } else { Some(winner) };
+            if new != chosen[ck] {
+                changed += 1;
+            }
+            chosen[ck] = new;
+        }
+    }
+
+    let refined_model_s = model_time(target, profile, |k| sched_of(&chosen, k));
+    RefinedResult {
+        schedules: chosen,
+        refined_model_s,
+        baseline_model_s,
+        changed,
+        extra_ledger,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::transfer::transfer_tune;
+
+    fn setup() -> (ModelGraph, ScheduleStore, TransferResult, DeviceProfile) {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let src = crate::models::resnet::resnet50();
+        let tgt = crate::models::resnet::resnet18();
+        let res = tune_model(
+            &src,
+            &prof,
+            &TuneOptions { trials: 400, batch_size: 16, population: 32, generations: 2, seed: 9, ..Default::default() },
+        );
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&src, &res);
+        let tt = transfer_tune(&tgt, &store, &prof, "ResNet50", 9);
+        (tgt, store, tt, prof)
+    }
+
+    #[test]
+    fn refinement_never_hurts_end_to_end() {
+        let (tgt, store, tt, prof) = setup();
+        let refined = refine_pairwise(&tgt, &store, &tt, &prof, 0.15);
+        assert!(
+            refined.refined_model_s <= refined.baseline_model_s * 1.001,
+            "refinement regressed: {} -> {}",
+            refined.baseline_model_s,
+            refined.refined_model_s
+        );
+        assert!(refined.extra_ledger.measurements > 0);
+    }
+
+    #[test]
+    fn zero_tolerance_still_considers_default_and_winner() {
+        let (tgt, store, tt, prof) = setup();
+        let refined = refine_pairwise(&tgt, &store, &tt, &prof, 0.0);
+        assert!(refined.refined_model_s > 0.0);
+        assert_eq!(refined.schedules.len(), tgt.kernels.len());
+    }
+
+    #[test]
+    fn wider_tolerance_evaluates_more_pairs() {
+        let (tgt, store, tt, prof) = setup();
+        let narrow = refine_pairwise(&tgt, &store, &tt, &prof, 0.05);
+        let wide = refine_pairwise(&tgt, &store, &tt, &prof, 0.5);
+        assert!(wide.extra_ledger.measurements >= narrow.extra_ledger.measurements);
+    }
+}

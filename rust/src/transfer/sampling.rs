@@ -1,0 +1,130 @@
+//! Schedule-pool sampling — the paper's §4.4.2/§5.5 proposed extension.
+//!
+//! "In situations with many kernel/schedule pairs, we could reduce the
+//! search time by sampling a subset of schedules, either randomly or
+//! using some other selection heuristic."
+//!
+//! Two strategies are implemented:
+//!
+//! * [`sample_random`]: uniform subset per class (the paper's baseline
+//!   suggestion);
+//! * [`sample_by_source_quality`]: keep each class's k records whose
+//!   *source* kernels saw the largest improvement during tuning — the
+//!   "schedules that are less likely to improve performance" filter.
+
+use super::store::ScheduleStore;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Uniformly sample at most `k` schedules per kernel class.
+pub fn sample_random(store: &ScheduleStore, k: usize, seed: u64) -> ScheduleStore {
+    let mut rng = Rng::new(seed);
+    let mut by_class: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, r) in store.records.iter().enumerate() {
+        by_class.entry(r.class_sig.as_str()).or_default().push(i);
+    }
+    let mut keep: Vec<usize> = Vec::new();
+    let mut classes: Vec<&&str> = by_class.keys().collect::<Vec<_>>();
+    classes.sort(); // deterministic iteration order
+    for class in classes {
+        let mut idxs = by_class[*class].clone();
+        rng.shuffle(&mut idxs);
+        idxs.truncate(k);
+        keep.extend(idxs);
+    }
+    keep.sort_unstable();
+    ScheduleStore { records: keep.into_iter().map(|i| store.records[i].clone()).collect() }
+}
+
+/// Keep the `k` records per class with the *fastest source-side cost per
+/// flop-scale* — a proxy for schedule quality that needs no new
+/// measurements (source cost is already in the store).
+pub fn sample_by_source_quality(store: &ScheduleStore, k: usize) -> ScheduleStore {
+    let mut by_class: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, r) in store.records.iter().enumerate() {
+        by_class.entry(r.class_sig.as_str()).or_default().push(i);
+    }
+    let mut keep: Vec<usize> = Vec::new();
+    for idxs in by_class.values() {
+        let mut scored: Vec<(f64, usize)> = idxs
+            .iter()
+            .map(|&i| {
+                let r = &store.records[i];
+                // Normalize source cost by the source kernel's data scale
+                // so big kernels are not unfairly "slow".
+                let scale: f64 = r.source_input_shape.iter().map(|&x| x as f64).product::<f64>().max(1.0);
+                (r.source_cost_s / scale, i)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        keep.extend(scored.into_iter().take(k).map(|(_, i)| i));
+    }
+    keep.sort_unstable();
+    ScheduleStore { records: keep.into_iter().map(|i| store.records[i].clone()).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Schedule;
+    use crate::transfer::store::StoreRecord;
+
+    fn store_with(n_per_class: usize) -> ScheduleStore {
+        let k = crate::ir::KernelBuilder::dense(64, 64, 64, &[]);
+        let conv = crate::ir::KernelBuilder::conv2d(1, 8, 8, 8, 8, 3, 3, 1, 1, &[]);
+        let mut s = ScheduleStore::new();
+        for i in 0..n_per_class {
+            s.records.push(StoreRecord {
+                source_model: format!("M{i}"),
+                class_sig: "dense".into(),
+                source_input_shape: vec![64, 64],
+                source_cost_s: 1e-3 * (i + 1) as f64,
+                schedule: Schedule::untuned_default(&k),
+            });
+            s.records.push(StoreRecord {
+                source_model: format!("M{i}"),
+                class_sig: "conv2d".into(),
+                source_input_shape: vec![1, 8, 8, 8],
+                source_cost_s: 1e-3 * (n_per_class - i) as f64,
+                schedule: Schedule::untuned_default(&conv),
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn random_sampling_caps_per_class() {
+        let s = store_with(10);
+        let sub = sample_random(&s, 3, 42);
+        assert_eq!(sub.of_class("dense").len(), 3);
+        assert_eq!(sub.of_class("conv2d").len(), 3);
+    }
+
+    #[test]
+    fn random_sampling_is_deterministic() {
+        let s = store_with(10);
+        let a = sample_random(&s, 3, 42);
+        let b = sample_random(&s, 3, 42);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.source_model, y.source_model);
+        }
+    }
+
+    #[test]
+    fn quality_sampling_keeps_fastest_sources() {
+        let s = store_with(10);
+        let sub = sample_by_source_quality(&s, 2);
+        let dense: Vec<_> = sub.of_class("dense").iter().map(|r| r.source_cost_s).collect();
+        assert_eq!(dense.len(), 2);
+        // Fastest two dense sources are 1ms and 2ms.
+        assert!(dense.iter().all(|&c| c <= 2e-3 + 1e-12));
+    }
+
+    #[test]
+    fn sampling_more_than_available_keeps_all() {
+        let s = store_with(2);
+        assert_eq!(sample_random(&s, 10, 1).records.len(), s.records.len());
+        assert_eq!(sample_by_source_quality(&s, 10).records.len(), s.records.len());
+    }
+}

@@ -1,0 +1,206 @@
+//! The schedule store: persisted auto-schedules indexed by kernel class.
+//!
+//! An Ansor tuning log keyed by workload id only helps *identical*
+//! kernels. The store relaxes the key to the class signature (paper
+//! §4.2) and keeps schedules in shape-relative form, so any record of a
+//! class can be tried on any kernel of that class. Records remember
+//! their provenance (source model + source kernel shapes + measured
+//! cost) for reporting and for the mixed-pool experiments.
+
+use crate::autosched::TuningResult;
+use crate::ir::ModelGraph;
+use crate::sched::{serialize, Schedule};
+use crate::util::json::{self, Json};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct StoreRecord {
+    /// Model the schedule was tuned on (e.g. "ResNet50").
+    pub source_model: String,
+    /// Class signature (e.g. "conv2d_bias_relu").
+    pub class_sig: String,
+    /// Source kernel's display shapes (provenance / Fig 4 labels).
+    pub source_input_shape: Vec<u64>,
+    /// Measured standalone cost on the source kernel, seconds.
+    pub source_cost_s: f64,
+    pub schedule: Schedule,
+}
+
+impl StoreRecord {
+    /// Short label like "E3 (ResNet50)" used in Fig 4.
+    pub fn label(&self, letter: &str, ordinal: usize) -> String {
+        format!("{letter}{ordinal} ({})", self.source_model)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleStore {
+    pub records: Vec<StoreRecord>,
+}
+
+impl ScheduleStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest the best schedules of a tuning run.
+    pub fn add_tuning(&mut self, graph: &ModelGraph, result: &TuningResult) {
+        for (&kidx, best) in &result.best {
+            let k = &graph.kernels[kidx];
+            self.records.push(StoreRecord {
+                source_model: graph.name.clone(),
+                class_sig: k.class_signature(),
+                source_input_shape: k.input_shape.clone(),
+                source_cost_s: best.cost_s,
+                schedule: best.schedule.clone(),
+            });
+        }
+        // Deterministic order regardless of HashMap iteration.
+        self.records.sort_by(|a, b| {
+            (&a.source_model, &a.class_sig, &a.source_input_shape, &a.source_cost_s)
+                .partial_cmp(&(&b.source_model, &b.class_sig, &b.source_input_shape, &b.source_cost_s))
+                .unwrap()
+        });
+    }
+
+    /// Records of one class (transfer candidates for a kernel).
+    pub fn of_class(&self, sig: &str) -> Vec<&StoreRecord> {
+        self.records.iter().filter(|r| r.class_sig == sig).collect()
+    }
+
+    /// Records restricted to one source model ("one-to-one" mode).
+    pub fn of_model(&self, model: &str) -> ScheduleStore {
+        ScheduleStore {
+            records: self.records.iter().filter(|r| r.source_model == model).cloned().collect(),
+        }
+    }
+
+    /// Number of schedules available for a class from a given model —
+    /// the |W_Tc| of the paper's Eq. 1.
+    pub fn class_count(&self, model: &str, sig: &str) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.source_model == model && r.class_sig == sig)
+            .count()
+    }
+
+    pub fn source_models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.records.iter().map(|r| r.source_model.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn merge(&mut self, other: &ScheduleStore) {
+        self.records.extend(other.records.iter().cloned());
+    }
+
+    // ---- persistence (JSON lines, Ansor-log style) ----------------------
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::new();
+        for r in &self.records {
+            let j = Json::obj(vec![
+                ("model", Json::str(&r.source_model)),
+                ("class", Json::str(&r.class_sig)),
+                (
+                    "input_shape",
+                    Json::arr(r.source_input_shape.iter().map(|&x| Json::num(x as f64))),
+                ),
+                ("cost_s", Json::num(r.source_cost_s)),
+                ("schedule", serialize::to_json(&r.schedule)),
+            ]);
+            out.push_str(&j.to_compact());
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ScheduleStore> {
+        let text = std::fs::read_to_string(path)?;
+        let mut records = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+            records.push(StoreRecord {
+                source_model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+                class_sig: j.req("class")?.as_str().unwrap_or_default().to_string(),
+                source_input_shape: j
+                    .req("input_shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|x| x as u64))
+                    .collect(),
+                source_cost_s: j.req("cost_s")?.as_f64().unwrap_or(0.0),
+                schedule: serialize::from_json(j.req("schedule")?)?,
+            });
+        }
+        Ok(ScheduleStore { records })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::device::DeviceProfile;
+    use crate::ir::KernelBuilder;
+
+    fn small_store() -> (ModelGraph, ScheduleStore) {
+        let mut g = ModelGraph::new("SrcModel");
+        g.push(KernelBuilder::dense(256, 256, 256, &[]));
+        g.push(KernelBuilder::dense(512, 512, 512, &[]));
+        let prof = DeviceProfile::xeon_e5_2620();
+        let res = tune_model(
+            &g,
+            &prof,
+            &TuneOptions { trials: 48, batch_size: 16, population: 32, generations: 2, ..Default::default() },
+        );
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&g, &res);
+        (g, store)
+    }
+
+    #[test]
+    fn ingests_tuning_results_by_class() {
+        let (_, store) = small_store();
+        assert_eq!(store.of_class("dense").len(), 2);
+        assert!(store.of_class("conv2d").is_empty());
+        assert_eq!(store.class_count("SrcModel", "dense"), 2);
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let (_, store) = small_store();
+        let path = std::env::temp_dir().join("tt_store_test.jsonl");
+        store.save(&path).unwrap();
+        let back = ScheduleStore::load(&path).unwrap();
+        assert_eq!(back.records.len(), store.records.len());
+        for (a, b) in back.records.iter().zip(&store.records) {
+            assert_eq!(a.schedule, b.schedule);
+            assert_eq!(a.class_sig, b.class_sig);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn merge_and_filter_by_model() {
+        let (_, a) = small_store();
+        let mut b = a.clone();
+        for r in &mut b.records {
+            r.source_model = "Other".into();
+        }
+        let mut pool = a.clone();
+        pool.merge(&b);
+        assert_eq!(pool.source_models(), vec!["Other".to_string(), "SrcModel".to_string()]);
+        assert_eq!(pool.of_model("Other").records.len(), a.records.len());
+    }
+}

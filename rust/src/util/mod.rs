@@ -1,0 +1,7 @@
+//! Dependency-free utilities (the build environment is offline): JSON,
+//! seeded PRNG, statistics, and table/CSV rendering.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,214 @@
+//! Seeded, dependency-free PRNG (xoshiro256**) plus the distributions the
+//! simulator and the evolutionary search need.
+//!
+//! Determinism is a hard requirement: the paper's search is stochastic
+//! (genetic mutation + noisy measurements), and every experiment in
+//! EXPERIMENTS.md must be regenerable bit-for-bit from a `--seed`.
+
+/// xoshiro256** by Blackman & Vigna — small, fast, high quality.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// splitmix64, used to expand a single u64 seed into the xoshiro state.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-kernel / per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn usize(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free approximation is fine here; modulo
+        // bias is negligible for the small `n` we use.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.usize(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.f64() < p_true
+    }
+
+    /// Pick a reference to a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(xs.len())]
+    }
+
+    /// Standard normal via Box–Muller (one value per call; we do not
+    /// bother caching the second — clarity over the last nanosecond).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal multiplicative noise centred on 1.0: exp(N(0, sigma)).
+    /// This is how the simulator models run-to-run measurement jitter.
+    pub fn lognormal_noise(&mut self, sigma: f64) -> f64 {
+        (self.normal() * sigma).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index proportionally to non-negative weights. Returns 0 if
+    /// all weights are zero.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return 0;
+        }
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_noise_centred() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        // Median of exp(N(0, s)) is 1.0.
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal_noise(0.02)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 1.0).abs() < 0.005, "median {med}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(17);
+        let w = [0.0, 1.0, 9.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[2] > counts[1] * 5);
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(19);
+        for _ in 0..1000 {
+            let v = r.range(3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,175 @@
+//! Plain-text aligned table renderer + CSV writer for the report harness.
+//!
+//! Every paper table/figure is emitted both as an aligned console table
+//! (the "same rows the paper reports") and as CSV under `results/` so the
+//! series can be re-plotted.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                let _ = write!(line, " {}{} ", cell, " ".repeat(pad));
+                if i + 1 < ncols {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write CSV under `dir/<slug>.csv`, creating the directory.
+    pub fn write_csv(&self, dir: &Path, slug: &str) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{slug}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format seconds human-readably (matches the paper's "minutes" framing).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1.0 {
+        format!("{:.0} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.1} s")
+    } else if secs < 2.0 * 3600.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.2} h", secs / 3600.0)
+    }
+}
+
+/// Format a speedup like the paper ("1.16x", "59x").
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["model", "speedup"]);
+        t.row(vec!["ResNet18".into(), "1.20x".into()]);
+        t.row(vec!["BERT".into(), "59.0x".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("ResNet18"));
+        // Header and rows aligned: all lines after the separator have equal
+        // display width.
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w || l.is_empty()));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(0.5), "500 ms");
+        assert_eq!(fmt_duration(72.0), "72.0 s");
+        assert_eq!(fmt_duration(432.0), "7.2 min");
+        assert_eq!(fmt_duration(10_000.0), "2.78 h");
+    }
+
+    #[test]
+    fn speedups() {
+        assert_eq!(fmt_speedup(1.158), "1.16x");
+        assert_eq!(fmt_speedup(59.4), "59.4x");
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration tests: the full transfer-tuning pipeline end to end
+//! (models -> tuner -> store -> engine -> reports), small trial budgets.
+
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::{untuned_model_time, DeviceProfile};
+use transfer_tuning::models;
+use transfer_tuning::report::{figures, tables, ExperimentConfig, Zoo};
+use transfer_tuning::transfer::{
+    class_proportions, rank_tuning_models, transfer_tune_one_to_one, ScheduleStore,
+};
+
+fn quick_opts(trials: usize) -> TuneOptions {
+    TuneOptions { trials, batch_size: 16, population: 32, generations: 2, seed: 5, ..Default::default() }
+}
+
+#[test]
+fn resnet18_from_resnet50_full_pipeline() {
+    // The paper's §4.3 experiment, miniaturized.
+    let device = DeviceProfile::xeon_e5_2620();
+    let src = models::resnet::resnet50();
+    let tgt = models::resnet::resnet18();
+
+    let tuning = tune_model(&src, &device, &quick_opts(400));
+    let mut store = ScheduleStore::new();
+    store.add_tuning(&src, &tuning);
+    assert!(!store.of_class("conv2d_bias_relu").is_empty(), "E schedules must exist");
+
+    let res = transfer_tune_one_to_one(&tgt, &store, "ResNet50", &device, 5);
+    // Class F exists in ResNet18 but not ResNet50: those kernels keep the
+    // default schedule (paper §4.3).
+    let f_kernels = tgt.kernels_of_class("conv2d_bias_add_relu");
+    assert!(!f_kernels.is_empty());
+    for &fk in &f_kernels {
+        let sweep = &res.sweeps[fk];
+        assert!(sweep.outcomes.is_empty(), "no ResNet50 schedule can cover class F");
+        assert!(sweep.chosen.is_none());
+    }
+    // Overall the transfer should help (paper: 1.2x).
+    assert!(res.speedup() > 1.0, "speedup {}", res.speedup());
+    // Search time is minutes-scale, not hours (paper: 1.2 min).
+    assert!(res.search_time_s() < 1800.0, "search {}", res.search_time_s());
+}
+
+#[test]
+fn heuristic_pairs_match_paper_for_bert_family() {
+    // BERT and MobileBERT must pick each other (Table 2, M9/M10): class Q
+    // is ~98% of their time and only they have it.
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 5, device }, |_| {});
+    let bert = &zoo.models[zoo.model_index("BERT").unwrap()];
+    let mbert = &zoo.models[zoo.model_index("MobileBERT").unwrap()];
+    assert_eq!(zoo.choices(bert)[0].0, "MobileBERT");
+    assert_eq!(zoo.choices(mbert)[0].0, "BERT");
+}
+
+#[test]
+fn efficientnets_choose_each_other() {
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 6, device }, |_| {});
+    let b0 = &zoo.models[zoo.model_index("EfficientNetB0").unwrap()];
+    let b4 = &zoo.models[zoo.model_index("EfficientNetB4").unwrap()];
+    assert_eq!(zoo.choices(b0)[0].0, "EfficientNetB4");
+    assert_eq!(zoo.choices(b4)[0].0, "EfficientNetB0");
+}
+
+#[test]
+fn bert_transfer_dominates_cnn_transfers() {
+    // Fig 5's strongest effect: the dense-dominated transformers gain far
+    // more from transfer-tuning than the CNNs.
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 400, seed: 7, device }, |_| {});
+    let bert = &zoo.models[zoo.model_index("BERT").unwrap()];
+    let resnet50 = &zoo.models[zoo.model_index("ResNet50").unwrap()];
+    let bert_tt = zoo.transfer(bert, None).unwrap();
+    let rn_tt = zoo.transfer(resnet50, None).unwrap();
+    assert!(
+        bert_tt.speedup() > rn_tt.speedup(),
+        "BERT {} vs ResNet50 {}",
+        bert_tt.speedup(),
+        rn_tt.speedup()
+    );
+}
+
+#[test]
+fn transfer_is_far_cheaper_than_ansor() {
+    // Table 4's search-time column: TT needs a small fraction of the
+    // tuning budget's search time.
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 400, seed: 8, device }, |_| {});
+    for (mi, m) in zoo.models.iter().enumerate() {
+        let Some(tt) = zoo.transfer(m, None) else { continue };
+        let frac = tt.search_time_s() / zoo.tunings[mi].search_time_s;
+        assert!(frac < 0.6, "{}: TT search is {:.0}% of Ansor's", m.name, frac * 100.0);
+    }
+}
+
+#[test]
+fn proportions_consistent_with_untuned_time() {
+    let device = DeviceProfile::xeon_e5_2620();
+    for m in models::all_models() {
+        let props = class_proportions(&m, &device);
+        let total: f64 = props.iter().map(|(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-6, "{}: proportions sum {}", m.name, total);
+        let _ = untuned_model_time(&m, &device);
+    }
+}
+
+#[test]
+fn ranking_is_deterministic_and_complete() {
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 9, device: device.clone() }, |_| {});
+    for m in &zoo.models {
+        let a = rank_tuning_models(m, &zoo.store, &device);
+        let b = rank_tuning_models(m, &zoo.store, &device);
+        assert_eq!(a, b, "{}", m.name);
+        assert_eq!(a.len(), 10, "{}: every other model is ranked", m.name);
+    }
+}
+
+#[test]
+fn report_tables_are_well_formed() {
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 10, device }, |_| {});
+
+    let t1 = tables::table1();
+    assert_eq!(t1.rows.len(), 18);
+
+    let t2 = tables::table2(&zoo);
+    assert_eq!(t2.rows.len(), 10); // M1..M10
+
+    let t4 = tables::table4(&zoo);
+    assert_eq!(t4.rows.last().unwrap()[0], "Mean");
+
+    let f1 = figures::fig1(&zoo);
+    assert_eq!(f1.rows.len(), 11);
+
+    let f4 = figures::fig4(&zoo);
+    // Long format: >= one row per kernel.
+    assert!(f4.rows.len() >= 18);
+
+    // CSV writing round-trips through the filesystem.
+    let dir = std::env::temp_dir().join("tt_csv_test");
+    let path = f1.write_csv(&dir, "fig1").unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    assert!(text.lines().count() == 12); // header + 11 rows
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn edge_zoo_search_times_exceed_server() {
+    // §5.3: measurement on the edge device is slower (RPC + slow device),
+    // so the same trial budget costs more search time.
+    let trials = 150;
+    let server = Zoo::build(
+        ExperimentConfig { trials, seed: 12, device: DeviceProfile::xeon_e5_2620() },
+        |_| {},
+    );
+    let edge = Zoo::build(
+        ExperimentConfig { trials, seed: 12, device: DeviceProfile::cortex_a72() },
+        |_| {},
+    );
+    let mut edge_higher = 0;
+    for i in 0..server.models.len() {
+        if edge.tunings[i].search_time_s > server.tunings[i].search_time_s {
+            edge_higher += 1;
+        }
+    }
+    assert!(edge_higher >= 10, "edge search dearer for {edge_higher}/11 models");
+}
+
+// ---- failure injection ------------------------------------------------
+
+#[test]
+fn corrupted_store_lines_are_rejected_with_location() {
+    let dir = std::env::temp_dir().join("tt_corrupt_store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("store.jsonl");
+    std::fs::write(
+        &path,
+        "{\"model\":\"X\",\"class\":\"dense\",\"input_shape\":[1],\"cost_s\":0.001,\"schedule\":{\"class\":\"dense\",\"skeleton\":\"SSR\",\"spatial\":[[],[]],\"reduction\":[[]],\"parallel_levels\":1,\"vectorize\":true,\"unroll_max\":0,\"cache_write\":false}}\nthis is not json\n",
+    )
+    .unwrap();
+    let err = ScheduleStore::load(&path).unwrap_err().to_string();
+    assert!(err.contains(":2"), "error should point at line 2: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn store_with_unknown_skeleton_token_fails() {
+    let dir = std::env::temp_dir().join("tt_bad_skel");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("store.jsonl");
+    std::fs::write(
+        &path,
+        "{\"model\":\"X\",\"class\":\"dense\",\"input_shape\":[1],\"cost_s\":0.001,\"schedule\":{\"class\":\"dense\",\"skeleton\":\"SQR\",\"spatial\":[[],[]],\"reduction\":[[]],\"parallel_levels\":1,\"vectorize\":true,\"unroll_max\":0,\"cache_write\":false}}\n",
+    )
+    .unwrap();
+    assert!(ScheduleStore::load(&path).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn empty_store_transfer_is_a_clean_noop() {
+    let device = DeviceProfile::xeon_e5_2620();
+    let target = models::resnet::resnet18();
+    let res = transfer_tune_one_to_one(&target, &ScheduleStore::new(), "Nothing", &device, 1);
+    assert_eq!(res.pairs_evaluated(), 0);
+    assert!((res.speedup() - 1.0).abs() < 0.05, "no schedules -> ~no change");
+}

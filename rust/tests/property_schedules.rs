@@ -1,0 +1,190 @@
+//! Property-based tests (hand-rolled; the offline environment has no
+//! proptest): randomized invariants over schedules, application,
+//! serialization, the simulator, and the transfer engine.
+
+use transfer_tuning::autosched::{mutate, random_schedule};
+use transfer_tuning::device::{simulate, DeviceProfile};
+use transfer_tuning::ir::{Kernel, KernelBuilder, OpKind};
+use transfer_tuning::sched::{apply, serialize, Ann, Schedule};
+use transfer_tuning::util::rng::Rng;
+
+const CASES: usize = 300;
+
+/// A pool of kernels spanning every anchor kind and a range of shapes.
+fn kernel_pool(rng: &mut Rng) -> Vec<Kernel> {
+    let mut pool = Vec::new();
+    for _ in 0..8 {
+        let c = 1u64 << rng.range(4, 9); // 16..512
+        let hw = *rng.choose(&[7u64, 14, 28, 56]);
+        pool.push(KernelBuilder::conv2d(1, c.min(256), hw * 2, hw * 2, c, 3, 3, 2, 1, &[OpKind::BiasAdd, OpKind::Relu]));
+        pool.push(KernelBuilder::dense(1 << rng.range(5, 11), 1 << rng.range(6, 11), 1 << rng.range(6, 11), &[]));
+        pool.push(KernelBuilder::depthwise_conv2d(1, c, hw, hw, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu6]));
+        pool.push(KernelBuilder::pool2d(OpKind::MaxPool2d, 1, c, hw, hw, 2, 2, 2));
+        pool.push(KernelBuilder::batch_matmul(12, 256, 64, 256, &[]));
+    }
+    pool
+}
+
+#[test]
+fn prop_apply_never_panics_and_waste_ge_one() {
+    let mut rng = Rng::new(0xBEEF);
+    let pool = kernel_pool(&mut rng);
+    for i in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        if let Ok(nest) = apply(&s, k) {
+            assert!(nest.waste >= 1.0 - 1e-12, "case {i}: waste {}", nest.waste);
+            assert!(!nest.loops.is_empty());
+            // Loop extents cover (at least) the padded iteration domain.
+            let mut per_axis = vec![1u64; k.nest.axes.len()];
+            for l in &nest.loops {
+                per_axis[l.axis] = per_axis[l.axis].saturating_mul(l.extent);
+            }
+            for (ai, axis) in k.nest.axes.iter().enumerate() {
+                assert!(per_axis[ai] >= axis.extent, "case {i}: axis {ai} under-covered");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_serialization_roundtrips() {
+    let mut rng = Rng::new(0xCAFE);
+    let pool = kernel_pool(&mut rng);
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let text = serialize::to_string(&s);
+        let back = serialize::from_str(&text).expect("roundtrip parse");
+        assert_eq!(s, back);
+    }
+}
+
+#[test]
+fn prop_simulated_time_positive_and_finite() {
+    let mut rng = Rng::new(0xD00D);
+    let pool = kernel_pool(&mut rng);
+    let profiles = [DeviceProfile::xeon_e5_2620(), DeviceProfile::cortex_a72()];
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let Ok(nest) = apply(&s, k) else { continue };
+        for p in &profiles {
+            let b = simulate(k, &nest, p);
+            assert!(b.total_s.is_finite() && b.total_s > 0.0, "{b:?}");
+            assert!(b.total_s < 3600.0, "single kernel slower than an hour? {b:?}");
+            assert!(b.compute_s >= 0.0 && b.mem_s >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_simulator_is_deterministic() {
+    let mut rng = Rng::new(0xF00);
+    let pool = kernel_pool(&mut rng);
+    for _ in 0..100 {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let Ok(nest) = apply(&s, k) else { continue };
+        let p = DeviceProfile::xeon_e5_2620();
+        assert_eq!(simulate(k, &nest, &p).total_s, simulate(k, &nest, &p).total_s);
+    }
+}
+
+#[test]
+fn prop_mutation_preserves_applicability_class() {
+    // A mutated schedule stays inside the kernel's class/skeleton: it may
+    // become invalid by factor growth, but never by class mismatch.
+    let mut rng = Rng::new(0xAB);
+    let pool = kernel_pool(&mut rng);
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let m = mutate(&s, k, &mut rng);
+        assert_eq!(m.class_sig, s.class_sig);
+        assert_eq!(m.skeleton, s.skeleton);
+        if let Err(e) = apply(&m, k) {
+            let msg = e.to_string();
+            assert!(
+                msg.contains("exceed") || msg.contains("zero"),
+                "unexpected invalidity: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_transfer_within_class_same_shape_is_identity_cost() {
+    // Applying a schedule to the exact kernel it was built for gives the
+    // same nest (hence identical deterministic cost) every time.
+    let mut rng = Rng::new(0x77);
+    let pool = kernel_pool(&mut rng);
+    let p = DeviceProfile::xeon_e5_2620();
+    for _ in 0..100 {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let (Ok(a), Ok(b)) = (apply(&s, k), apply(&s, k)) else { continue };
+        assert_eq!(simulate(k, &a, &p).total_s, simulate(k, &b, &p).total_s);
+    }
+}
+
+#[test]
+fn prop_cross_class_transfer_always_invalid() {
+    // Paper §4.2: applying a schedule across classes is always invalid.
+    let mut rng = Rng::new(0x99);
+    let conv = KernelBuilder::conv2d(1, 64, 28, 28, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]);
+    let dense = KernelBuilder::dense(256, 512, 512, &[]);
+    let pools = [conv, dense];
+    for _ in 0..CASES {
+        let a = rng.choose(&pools);
+        let b = pools.iter().find(|k| k.class_signature() != a.class_signature()).unwrap();
+        let s = random_schedule(a, &mut rng);
+        assert!(apply(&s, b).is_err());
+    }
+}
+
+#[test]
+fn prop_unrolled_loops_form_innermost_suffix() {
+    let mut rng = Rng::new(0x1234);
+    let pool = kernel_pool(&mut rng);
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let Ok(nest) = apply(&s, k) else { continue };
+        if let Some(first) = nest.loops.iter().position(|l| l.ann == Ann::Unroll) {
+            assert!(nest.loops[first..]
+                .iter()
+                .all(|l| matches!(l.ann, Ann::Unroll | Ann::Vectorize)));
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_loops_are_outermost_prefix() {
+    let mut rng = Rng::new(0x4321);
+    let pool = kernel_pool(&mut rng);
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let Ok(nest) = apply(&s, k) else { continue };
+        if let Some(last_par) = nest.loops.iter().rposition(|l| l.ann == Ann::Parallel) {
+            assert!(nest.loops[..=last_par].iter().all(|l| l.ann == Ann::Parallel));
+        }
+    }
+}
+
+#[test]
+fn prop_naive_is_never_faster_than_best_random() {
+    // Sanity direction check: among 60 random schedules of a big GEMM,
+    // the best must beat the naive schedule (the search space contains
+    // real improvements).
+    let mut rng = Rng::new(0x555);
+    let k = KernelBuilder::dense(512, 512, 512, &[]);
+    let p = DeviceProfile::xeon_e5_2620();
+    let naive = simulate(&k, &apply(&Schedule::naive(&k), &k).unwrap(), &p).total_s;
+    let best = (0..60)
+        .filter_map(|_| apply(&random_schedule(&k, &mut rng), &k).ok())
+        .map(|n| simulate(&k, &n, &p).total_s)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best < naive, "best random {best} vs naive {naive}");
+}

@@ -1,0 +1,152 @@
+//! Runtime integration: load AOT artifacts on PJRT, check numerics.
+//!
+//! These tests need `make artifacts`; when the artifacts are missing
+//! they skip (print + pass) so `cargo test` works on a fresh clone.
+
+use transfer_tuning::runtime::{artifacts_dir, Runtime};
+use transfer_tuning::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn random_buf(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() as f32) * 2.0 - 1.0).collect()
+}
+
+fn matmul_oracle(x: &[f32], w: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let a = x[i * n + k];
+            for j in 0..n {
+                out[i * n + j] += a * w[k * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm512_artifacts_match_oracle() {
+    if !have_artifacts() {
+        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut rng = Rng::new(1);
+    let n = 512usize;
+    let x = random_buf(&mut rng, n * n);
+    let w = random_buf(&mut rng, n * n);
+    let shape = [n as i64, n as i64];
+    let oracle = matmul_oracle(&x, &w, n);
+
+    for variant in ["naive", "native", "xfer"] {
+        let kernel = rt
+            .load_hlo_text(&artifacts_dir().join(format!("gemm512_{variant}.hlo.txt")))
+            .unwrap();
+        let out = kernel.run_f32(&[(&x, &shape), (&w, &shape)]).unwrap();
+        assert_eq!(out.len(), n * n);
+        let max_err = out
+            .iter()
+            .zip(&oracle)
+            .map(|(g, o)| ((g - o).abs() / (o.abs() + 1e-3)) as f64)
+            .fold(0.0, f64::max);
+        assert!(max_err < 1e-2, "gemm512_{variant}: max rel err {max_err}");
+    }
+}
+
+#[test]
+fn schedule_variants_compute_identical_results() {
+    // The paper's core premise (§2): schedules change performance, never
+    // semantics. native vs transferred artifacts must agree bitwise-ish.
+    if !have_artifacts() {
+        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut rng = Rng::new(2);
+    let n = 512usize;
+    let x = random_buf(&mut rng, n * n);
+    let w = random_buf(&mut rng, n * n);
+    let shape = [n as i64, n as i64];
+
+    let native = rt
+        .load_hlo_text(&artifacts_dir().join("gemm512_native.hlo.txt"))
+        .unwrap()
+        .run_f32(&[(&x, &shape), (&w, &shape)])
+        .unwrap();
+    let xfer = rt
+        .load_hlo_text(&artifacts_dir().join("gemm512_xfer.hlo.txt"))
+        .unwrap()
+        .run_f32(&[(&x, &shape), (&w, &shape)])
+        .unwrap();
+    let max_d = native
+        .iter()
+        .zip(&xfer)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    // Different reduction blockings -> tiny fp reassociation differences.
+    assert!(max_d < 1e-2, "native vs transferred diverge: {max_d}");
+}
+
+#[test]
+fn model_artifacts_serve_requests() {
+    if !have_artifacts() {
+        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = std::fs::read_to_string(artifacts_dir().join("manifest.json")).unwrap();
+    let manifest = transfer_tuning::util::json::parse(&manifest).unwrap();
+    let meta = manifest.req("model_tuned").unwrap();
+    let shapes: Vec<Vec<i64>> = meta
+        .req("inputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_arr().unwrap().iter().map(|d| d.as_f64().unwrap() as i64).collect())
+        .collect();
+    let mut rng = Rng::new(3);
+    let bufs: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|s| random_buf(&mut rng, s.iter().product::<i64>() as usize))
+        .collect();
+    let inputs: Vec<(&[f32], &[i64])> =
+        bufs.iter().zip(&shapes).map(|(b, s)| (b.as_slice(), s.as_slice())).collect();
+
+    let kernel = rt.load_hlo_text(&artifacts_dir().join("model_tuned.hlo.txt")).unwrap();
+    let logits = kernel.run_f32(&inputs).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // Determinism across calls.
+    let again = kernel.run_f32(&inputs).unwrap();
+    assert_eq!(logits, again);
+}
+
+#[test]
+fn softmax_artifact_rows_sum_to_one() {
+    if !have_artifacts() {
+        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+        return;
+    }
+    let path = artifacts_dir().join("softmax_bert.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipped: softmax artifact not built yet (re-run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let kernel = rt.load_hlo_text(&path).unwrap();
+    let rows = 12 * 256usize;
+    let cols = 256usize;
+    let mut rng = Rng::new(9);
+    let x = random_buf(&mut rng, rows * cols);
+    let out = kernel.run_f32(&[(&x, &[rows as i64, cols as i64])]).unwrap();
+    assert_eq!(out.len(), rows * cols);
+    for r in (0..rows).step_by(173) {
+        let s: f32 = out[r * cols..(r + 1) * cols].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        assert!(out[r * cols..(r + 1) * cols].iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}
