@@ -16,9 +16,11 @@
 //! ```
 
 use transfer_tuning::autosched::{random_schedule, tune_model, TuneOptions};
-use transfer_tuning::coordinator::RemoteSession;
+use transfer_tuning::coordinator::{MeasureCache, RemoteSession};
 use transfer_tuning::device::{untuned_model_time, DeviceProfile};
+use transfer_tuning::ir::Kernel;
 use transfer_tuning::models;
+use transfer_tuning::sched::Schedule;
 use transfer_tuning::transfer::{transfer_tune_one_to_one, ScheduleStore};
 use transfer_tuning::util::rng::Rng;
 use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
@@ -35,12 +37,14 @@ fn main() {
     );
 
     // --- RPC session: what 200 Ansor candidates cost on-device ----------
-    let mut session = RemoteSession::new(edge.clone(), 9);
     let mut rng = Rng::new(9);
     let probe_kernel = &target.kernels[0];
-    for _ in 0..200 {
-        let sched = random_schedule(probe_kernel, &mut rng);
-        let _ = session.measure_remote(probe_kernel, &sched);
+    let candidates: Vec<Schedule> =
+        (0..200).map(|_| random_schedule(probe_kernel, &mut rng)).collect();
+
+    let mut session = RemoteSession::new(edge.clone(), 9);
+    for sched in &candidates {
+        let _ = session.measure_remote(probe_kernel, sched);
     }
     println!(
         "RPC tuning session: {} candidates -> {} device time, {} transport, {} failures",
@@ -50,8 +54,31 @@ fn main() {
         session.failures
     );
     println!(
-        "  => {:.2} s per candidate over RPC (server-local would pay no transport)\n",
+        "  => {:.2} s per candidate over RPC (server-local would pay no transport)",
         session.total_seconds() / session.requests as f64
+    );
+
+    // Same 200 candidates through the batched executor + measurement
+    // cache: one RTT per batch, duplicates and cached pairs never ship.
+    // A second (re-tuning) session over the same candidates is free.
+    let mut cache = MeasureCache::new();
+    let jobs: Vec<(&Kernel, &Schedule)> =
+        candidates.iter().map(|s| (probe_kernel, s)).collect();
+    let mut batched = RemoteSession::new(edge.clone(), 9);
+    let _ = batched.measure_batch(&jobs, &mut cache);
+    let first_total = batched.total_seconds();
+    cache.reset_stats(); // meter the warm re-sweep alone
+    let _ = batched.measure_batch(&jobs, &mut cache);
+    println!(
+        "batched + cached:   {} requests -> {} transport ({} saved); warm re-sweep added {}",
+        batched.requests,
+        fmt_duration(batched.transport_seconds),
+        fmt_duration(session.transport_seconds - batched.transport_seconds),
+        fmt_duration(batched.total_seconds() - first_total),
+    );
+    println!(
+        "  => cache: {:.0}% hit rate on the re-sweep\n",
+        cache.stats.hit_rate() * 100.0
     );
 
     // --- Full comparison: Ansor vs transfer-tuning on the edge ----------

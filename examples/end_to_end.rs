@@ -52,6 +52,9 @@ fn max_rel_err(got: &[f32], want: &[f32]) -> f64 {
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
+    if !transfer_tuning::runtime::AVAILABLE {
+        bail!("PJRT runtime not compiled in — build with `--features pjrt` (needs the xla crate)");
+    }
     if !dir.join("manifest.json").exists() {
         bail!(
             "artifacts not found in {} — run `make artifacts` first",

@@ -1,0 +1,91 @@
+//! Bench: the content-addressed measurement cache on pooled-store
+//! sweeps (the Fig 8 shape — where the cache pays off hardest).
+//!
+//! Builds a two-model schedule store, then times three regimes of the
+//! same pooled `transfer_tune` sweep:
+//!
+//!   cold    — empty cache: every unique pair is measured;
+//!   rerun   — same sweep again, warm cache: every pair is a hit;
+//!   overlap — pool sweep after a one-to-one sweep warmed a subset.
+//!
+//! Reported per regime: simulated device seconds charged to the ledger
+//! (the paper's search-time axis), cache hit rate, and host wall-clock.
+//! Offline-friendly plain-main harness, like the other benches here
+//! (the environment has no criterion).
+
+use std::time::Instant;
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::coordinator::{MeasureCache, SweepMetrics};
+use transfer_tuning::models;
+use transfer_tuning::transfer::{transfer_tune_cached, ScheduleStore, TransferOptions};
+use transfer_tuning::util::table::Table;
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let device = transfer_tuning::device::DeviceProfile::xeon_e5_2620();
+    let opts = TransferOptions::default();
+    let seed = 0xA45;
+
+    let t0 = Instant::now();
+    let tgt = models::resnet::resnet18();
+    let mut store = ScheduleStore::new();
+    for src in [models::resnet::resnet50(), models::googlenet::googlenet()] {
+        let tuning = tune_model(
+            &src,
+            &device,
+            &TuneOptions { trials, batch_size: 16, population: 32, generations: 2, seed, ..Default::default() },
+        );
+        store.add_tuning(&src, &tuning);
+    }
+    eprintln!(
+        "[bench cache_sweep] store: {} records from 2 models ({} trials each, host {:.1}s)",
+        store.records.len(),
+        trials,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut table = Table::new(
+        "Pooled-store sweep: measurement cache amortization",
+        &["Regime", "Pairs", "Measured", "Device s", "Hit rate", "Host ms", "Speedup"],
+    );
+    let mut row = |regime: &str, cache: &mut MeasureCache| {
+        cache.reset_stats();
+        let t = Instant::now();
+        let res = transfer_tune_cached(&tgt, &store, &device, "mixed", seed, &opts, cache);
+        let host_ms = t.elapsed().as_secs_f64() * 1e3;
+        let m = SweepMetrics::from_parts(&res.ledger, &cache.stats);
+        eprintln!("[bench cache_sweep] {regime}: {}", m.summary());
+        table.row(vec![
+            regime.to_string(),
+            res.pairs_evaluated().to_string(),
+            m.measurements.to_string(),
+            format!("{:.2}", m.device_seconds),
+            format!("{:.1}%", m.cache.hit_rate() * 100.0),
+            format!("{host_ms:.1}"),
+            format!("{:.2}x", res.speedup()),
+        ]);
+        m.device_seconds
+    };
+
+    let mut cache = MeasureCache::new();
+    let cold_s = row("cold", &mut cache);
+    let rerun_s = row("rerun (warm)", &mut cache);
+
+    let mut overlap_cache = MeasureCache::new();
+    {
+        // Warm only the ResNet50 slice, as a one-to-one sweep would.
+        let slice = store.of_model("ResNet50");
+        let _ = transfer_tune_cached(&tgt, &slice, &device, "ResNet50", seed, &opts, &mut overlap_cache);
+    }
+    let overlap_s = row("overlap (1:1 warmed)", &mut overlap_cache);
+
+    print!("{}", table.render());
+    println!(
+        "[bench cache_sweep] device-second savings: rerun {:.0}% overlap {:.0}%",
+        (1.0 - rerun_s / cold_s) * 100.0,
+        (1.0 - overlap_s / cold_s) * 100.0,
+    );
+    assert!(rerun_s == 0.0, "warm rerun must be free (got {rerun_s})");
+    assert!(overlap_s < cold_s, "overlap must be cheaper than cold");
+}

@@ -10,6 +10,10 @@ use transfer_tuning::util::table::Table;
 
 fn main() {
     let dir = artifacts_dir();
+    if !transfer_tuning::runtime::AVAILABLE {
+        println!("[bench gemm_pjrt] skipped: build with --features pjrt for real PJRT execution");
+        return;
+    }
     if !dir.join("manifest.json").exists() {
         println!("[bench gemm_pjrt] skipped: run `make artifacts` first");
         return;

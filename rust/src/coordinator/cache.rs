@@ -1,0 +1,503 @@
+//! Content-addressed measurement cache.
+//!
+//! The paper's thesis is that *reusing* prior tuning work beats
+//! re-searching (§4.3, §5: Ansor needs ~6.5x more search time to match
+//! transfer-tuning), yet a naive engine re-measures every
+//! (kernel, schedule) pair on every `transfer_tune` call — pooled-store
+//! runs (Fig 8) and report sweeps re-pay identical device seconds dozens
+//! of times. This module memoizes standalone pair measurements so a
+//! deployment amortizes tuning cost: a cached pair costs **zero** device
+//! seconds on the search-time ledger.
+//!
+//! ## Addressing
+//!
+//! Entries are addressed by content, never by position:
+//!
+//! * the **kernel** contributes its [`workload id`](crate::ir::workload)
+//!   — FNV-1a of (class signature, axis extents, input/weight shapes) —
+//!   so identical kernels hit regardless of which model or graph slot
+//!   they appear in;
+//! * the **schedule** contributes its
+//!   [`canonical hash`](crate::sched::serialize::canonical_hash) — FNV-1a
+//!   of the canonical (sorted-key, compact) JSON serialization — so a
+//!   schedule hits after any store save/load round-trip;
+//! * the **device profile** contributes its name hash: a runtime is a
+//!   property of (pair, device), and a shared cache must never serve a
+//!   Xeon measurement to a Cortex-A72 sweep;
+//! * the **measurement seed** is folded in last: simulated measurements
+//!   are seeded-noisy, and a cache entry records *the measurement that
+//!   seed would produce*. Including the seed keeps the headline
+//!   invariant exact instead of approximate.
+//!
+//! ## Invariants
+//!
+//! 1. **Transparency**: for a fixed seed, a sweep served from the cache
+//!    returns bit-identical outcomes (and therefore a bit-identical
+//!    `TransferResult::tuned_model_s`) to the same sweep with the cache
+//!    disabled. This holds because the parallel executor derives each
+//!    pair's measurement noise from the same content key the cache is
+//!    addressed by (see [`super::pool`]), not from job order.
+//! 2. **Zero-cost hits**: the ledger is charged only on misses; a warm
+//!    sweep charges exactly 0.0 device seconds.
+//! 3. **Stability**: keys are built exclusively from FNV-1a over
+//!    canonical byte strings — identical across processes, platforms,
+//!    and persistence round-trips (guarded by golden-file tests).
+//! 4. **Bounded mode**: with a capacity, eviction is exact LRU on
+//!    lookup/insert order; unbounded mode never evicts.
+//!
+//! Persistence is JSON via [`crate::util::json`] (the environment is
+//! offline — no serde): keys serialize as 16-digit hex strings because
+//! JSON numbers (f64) cannot carry 64-bit hashes losslessly.
+
+use crate::device::DeviceProfile;
+use crate::ir::workload::fnv1a;
+use crate::ir::Kernel;
+use crate::sched::{serialize, Schedule};
+use crate::util::json::{self, Json};
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+
+/// Content key of a (kernel, schedule) pair, independent of the
+/// measurement seed and device. Stable across processes (FNV-1a over
+/// FNV-1a).
+pub fn content_key(kernel: &Kernel, sched: &Schedule) -> u64 {
+    content_from_parts(kernel.workload_id, serialize::canonical_hash(sched))
+}
+
+/// [`content_key`] from already-computed parts. Sweep planners hash
+/// each store record's schedule once and reuse it across every kernel
+/// it is tried on, instead of re-serializing the schedule per pair.
+pub fn content_from_parts(workload_id: u64, sched_hash: u64) -> u64 {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&workload_id.to_le_bytes());
+    bytes[8..].copy_from_slice(&sched_hash.to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// Identity hash of a device profile. Profiles are a closed set named
+/// by construction (`xeon-e5-2620`, `cortex-a72`), so the name is the
+/// stable identity.
+pub fn profile_key(profile: &DeviceProfile) -> u64 {
+    fnv1a(profile.name.as_bytes())
+}
+
+/// Full cache key: content key + measurement-noise seed + device.
+pub fn sweep_key(content: u64, seed: u64, profile: &DeviceProfile) -> u64 {
+    let mut bytes = [0u8; 24];
+    bytes[..8].copy_from_slice(&content.to_le_bytes());
+    bytes[8..16].copy_from_slice(&seed.to_le_bytes());
+    bytes[16..].copy_from_slice(&profile_key(profile).to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// Convenience: the cache key of one pair under one seed and device.
+pub fn pair_key(kernel: &Kernel, sched: &Schedule, seed: u64, profile: &DeviceProfile) -> u64 {
+    sweep_key(content_key(kernel, sched), seed, profile)
+}
+
+/// Hit/miss/eviction counters. `hits` are lookups served from the map;
+/// `dedup_hits` are duplicates collapsed within a single batch by the
+/// executor before any measurement happened (same amortization, tracked
+/// separately because the entry was not yet resident).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub dedup_hits: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups that avoided device time (resident + dedup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.dedup_hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.hits + self.dedup_hits) as f64 / total as f64
+        }
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.dedup_hits + self.misses
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.dedup_hits += other.dedup_hits;
+        self.inserts += other.inserts;
+        self.evictions += other.evictions;
+    }
+}
+
+/// Outcome of [`MeasureCache::resolve_with`].
+pub enum Resolution<E> {
+    /// Resident measured runtime.
+    Hit(f64),
+    /// Resident invalid pair, re-validated; carries the fresh error.
+    HitInvalid(E),
+    /// Resident entry disagreed with validation (corrupt/stale); it was
+    /// reclassified as a miss — re-measure and overwrite.
+    Corrupt,
+    /// Not resident.
+    Miss,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    /// Measured standalone runtime; `None` = the schedule does not apply
+    /// to the kernel (Fig 4's `-1` entries are cacheable too).
+    runtime: Option<f64>,
+    /// Monotonic touch tick for exact LRU with lazy queue cleanup.
+    tick: u64,
+}
+
+/// The content-addressed measurement cache. See the module doc for the
+/// key derivation and invariants.
+#[derive(Clone, Debug, Default)]
+pub struct MeasureCache {
+    map: HashMap<u64, Entry>,
+    /// (key, tick) in touch order; stale pairs (tick != map tick) are
+    /// skipped lazily during eviction.
+    order: VecDeque<(u64, u64)>,
+    capacity: Option<usize>,
+    next_tick: u64,
+    pub stats: CacheStats,
+}
+
+impl MeasureCache {
+    /// Unbounded cache (never evicts).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bounded LRU cache holding at most `capacity` entries.
+    pub fn with_capacity(capacity: usize) -> Self {
+        MeasureCache { capacity: Some(capacity.max(1)), ..Self::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Forget the counters (entries stay). Useful to meter one phase.
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Reclassify one recorded hit as a miss. Executors call this when
+    /// a looked-up entry turns out to be corrupt/stale and they
+    /// re-measure honestly — otherwise a poisoned cache could report a
+    /// 100% hit rate on a run that charged device seconds.
+    pub fn reclassify_hit_as_miss(&mut self) {
+        debug_assert!(self.stats.hits > 0, "no hit to reclassify");
+        self.stats.hits = self.stats.hits.saturating_sub(1);
+        self.stats.misses += 1;
+    }
+
+    /// Resolve one lookup with cached-invalid re-validation — the
+    /// shared front half of every executor (host pool and RPC batch),
+    /// so hit/validate/corrupt semantics cannot drift between them.
+    ///
+    /// `validate` is consulted only for cached invalids: it re-checks
+    /// whether the pair really fails to apply, returning the real error
+    /// (served as [`Resolution::HitInvalid`]) or `Ok(())` — in which
+    /// case the entry is corrupt/stale, the lookup is reclassified as a
+    /// miss, and the caller must re-measure honestly
+    /// ([`Resolution::Corrupt`]).
+    pub fn resolve_with<E>(
+        &mut self,
+        key: u64,
+        validate: impl FnOnce() -> Result<(), E>,
+    ) -> Resolution<E> {
+        match self.get(key) {
+            Some(Some(t)) => Resolution::Hit(t),
+            Some(None) => match validate() {
+                Err(e) => Resolution::HitInvalid(e),
+                Ok(()) => {
+                    self.reclassify_hit_as_miss();
+                    Resolution::Corrupt
+                }
+            },
+            None => Resolution::Miss,
+        }
+    }
+
+    fn touch(&mut self, key: u64) {
+        self.next_tick += 1;
+        let tick = self.next_tick;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.tick = tick;
+        }
+        // The queue exists only to find eviction victims; unbounded
+        // caches never evict, so recording touches there would just
+        // grow memory O(lookups) for the cache's lifetime (LRU-order
+        // persistence reads map ticks via keys_lru_order, not the
+        // queue).
+        if self.capacity.is_some() {
+            self.order.push_back((key, tick));
+            // Hit-heavy workloads retire stale queue entries only one
+            // per eviction; compact before the lazy queue outgrows the
+            // map it shadows.
+            if self.order.len() > 8 * self.map.len().max(1) {
+                self.order = self
+                    .keys_lru_order()
+                    .into_iter()
+                    .map(|k| (k, self.map[&k].tick))
+                    .collect();
+            }
+        }
+    }
+
+    /// Look up a pair measurement. `Some(runtime)` is a hit (runtime is
+    /// `None` for a cached invalid pair); `None` is a miss. Both are
+    /// counted and hits refresh LRU recency.
+    pub fn get(&mut self, key: u64) -> Option<Option<f64>> {
+        match self.map.get(&key).map(|e| e.runtime) {
+            Some(rt) => {
+                self.stats.hits += 1;
+                self.touch(key);
+                Some(rt)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching the LRU order or counters.
+    pub fn peek(&self, key: u64) -> Option<Option<f64>> {
+        self.map.get(&key).map(|e| e.runtime)
+    }
+
+    /// Insert (or overwrite) a measurement, evicting LRU entries while
+    /// over capacity.
+    pub fn insert(&mut self, key: u64, runtime: Option<f64>) {
+        let fresh = !self.map.contains_key(&key);
+        self.map.insert(key, Entry { runtime, tick: 0 });
+        self.touch(key);
+        if fresh {
+            self.stats.inserts += 1;
+        }
+        if let Some(cap) = self.capacity {
+            while self.map.len() > cap {
+                match self.order.pop_front() {
+                    Some((k, t)) => {
+                        // Skip stale queue entries from later touches.
+                        if self.map.get(&k).map(|e| e.tick) == Some(t) {
+                            self.map.remove(&k);
+                            self.stats.evictions += 1;
+                        }
+                    }
+                    None => break, // defensive; queue covers the map
+                }
+            }
+        }
+    }
+
+    /// Keys in least-recently-used-first order (exact, stale-free).
+    fn keys_lru_order(&self) -> Vec<u64> {
+        let mut keys: Vec<(u64, u64)> =
+            self.map.iter().map(|(&k, e)| (e.tick, k)).collect();
+        keys.sort_unstable();
+        keys.into_iter().map(|(_, k)| k).collect()
+    }
+
+    // ---- persistence -----------------------------------------------------
+
+    /// Serialize to a single canonical JSON object. Entries are listed
+    /// least-recently-used first so a load/save round-trip preserves both
+    /// contents and eviction order.
+    pub fn to_json(&self) -> Json {
+        let entries = self.keys_lru_order().into_iter().map(|k| {
+            let rt = self.map[&k].runtime;
+            Json::arr([
+                Json::str(format!("{k:016x}")),
+                match rt {
+                    Some(t) => Json::num(t),
+                    None => Json::Null,
+                },
+            ])
+        });
+        Json::obj(vec![
+            ("capacity", match self.capacity {
+                Some(c) => Json::num(c as f64),
+                None => Json::Null,
+            }),
+            ("entries", Json::arr(entries)),
+            ("version", Json::num(1.0)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MeasureCache> {
+        let version = j.req("version")?.as_f64().unwrap_or(0.0) as u64;
+        anyhow::ensure!(version == 1, "unsupported cache version {version}");
+        let capacity = match j.req("capacity")? {
+            Json::Null => None,
+            v => Some(
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("capacity must be a number or null"))?,
+            ),
+        };
+        let mut cache = match capacity {
+            Some(c) => MeasureCache::with_capacity(c),
+            None => MeasureCache::new(),
+        };
+        for (i, e) in j.req("entries")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let pair = e
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("entry {i}: expected [key, runtime]"))?;
+            let key = pair[0]
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| anyhow::anyhow!("entry {i}: bad hex key"))?;
+            let runtime = match &pair[1] {
+                Json::Null => None,
+                v => Some(
+                    v.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("entry {i}: runtime must be a number"))?,
+                ),
+            };
+            cache.insert(key, runtime);
+        }
+        cache.reset_stats(); // loading must not look like activity
+        Ok(cache)
+    }
+
+    /// Persist to disk (single-line canonical JSON + trailing newline).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = self.to_json().to_compact();
+        text.push('\n');
+        std::fs::write(path, text)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<MeasureCache> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(text.trim_end())?)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn keys_are_content_addressed_not_positional() {
+        let a = KernelBuilder::dense(256, 256, 256, &[]);
+        let b = KernelBuilder::dense(256, 256, 256, &[]); // identical content
+        let c = KernelBuilder::dense(512, 256, 256, &[]);
+        let s = Schedule::untuned_default(&a);
+        assert_eq!(content_key(&a, &s), content_key(&b, &s));
+        assert_ne!(content_key(&a, &s), content_key(&c, &s));
+
+        let mut s2 = s.clone();
+        s2.unroll_max += 8;
+        assert_ne!(content_key(&a, &s), content_key(&a, &s2));
+
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let edge = DeviceProfile::cortex_a72();
+        assert_ne!(
+            pair_key(&a, &s, 1, &xeon),
+            pair_key(&a, &s, 2, &xeon),
+            "seed is part of the key"
+        );
+        assert_ne!(
+            pair_key(&a, &s, 1, &xeon),
+            pair_key(&a, &s, 1, &edge),
+            "a runtime is a property of the device too"
+        );
+    }
+
+    #[test]
+    fn hit_miss_and_stats() {
+        let mut c = MeasureCache::new();
+        assert_eq!(c.get(42), None);
+        c.insert(42, Some(1e-3));
+        assert_eq!(c.get(42), Some(Some(1e-3)));
+        c.insert(43, None); // invalid pairs cache too
+        assert_eq!(c.get(43), Some(None));
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.inserts, 2);
+        assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = MeasureCache::with_capacity(2);
+        c.insert(1, Some(0.1));
+        c.insert(2, Some(0.2));
+        assert_eq!(c.get(1), Some(Some(0.1))); // refresh 1; LRU is now 2
+        c.insert(3, Some(0.3));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.peek(2), None, "2 was least recently used");
+        assert_eq!(c.peek(1), Some(Some(0.1)));
+        assert_eq!(c.peek(3), Some(Some(0.3)));
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn overwrite_does_not_grow_or_double_count() {
+        let mut c = MeasureCache::with_capacity(4);
+        c.insert(7, Some(0.1));
+        c.insert(7, Some(0.2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.inserts, 1);
+        assert_eq!(c.peek(7), Some(Some(0.2)));
+    }
+
+    #[test]
+    fn roundtrips_through_disk_preserving_lru_order() {
+        let mut c = MeasureCache::with_capacity(3);
+        c.insert(10, Some(0.001));
+        c.insert(11, None);
+        c.insert(12, Some(0.25));
+        assert_eq!(c.get(10), Some(Some(0.001))); // 11 becomes LRU
+
+        let path = std::env::temp_dir().join("tt_measure_cache_test.json");
+        c.save(&path).unwrap();
+        let mut back = MeasureCache::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.capacity(), Some(3));
+        assert_eq!(back.peek(10), Some(Some(0.001)));
+        assert_eq!(back.peek(11), Some(None));
+        assert_eq!(back.stats, CacheStats::default(), "load resets stats");
+        // Eviction order survived: inserting a 4th entry evicts 11.
+        back.insert(13, Some(0.5));
+        assert_eq!(back.peek(11), None);
+        assert_eq!(back.peek(10), Some(Some(0.001)));
+    }
+
+    #[test]
+    fn rejects_malformed_files() {
+        assert!(MeasureCache::from_json(&json::parse("{}").unwrap()).is_err());
+        assert!(MeasureCache::from_json(
+            &json::parse(r#"{"capacity":null,"entries":[["zzz",1]],"version":1}"#).unwrap()
+        )
+        .is_err());
+        assert!(MeasureCache::from_json(
+            &json::parse(r#"{"capacity":null,"entries":[],"version":9}"#).unwrap()
+        )
+        .is_err());
+    }
+}

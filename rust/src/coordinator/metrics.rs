@@ -1,5 +1,51 @@
-//! Serving metrics: latency histogram + throughput accounting for the
-//! request loop (`repro serve`).
+//! Serving + sweep metrics: latency histogram and throughput accounting
+//! for the request loop (`repro serve`), and the sweep-side rollup of
+//! ledger cost vs measurement-cache amortization.
+
+use super::cache::CacheStats;
+use super::ledger::Ledger;
+
+/// One sweep's cost picture: what the device actually ran vs what the
+/// content-addressed cache absorbed. Built from the engine's [`Ledger`]
+/// and the cache's [`CacheStats`]; rendered as the one-line summary the
+/// CLI and benches print after a sweep.
+#[derive(Clone, Debug, Default)]
+pub struct SweepMetrics {
+    /// Sequential device seconds charged (misses only).
+    pub device_seconds: f64,
+    /// Candidates actually measured on the device.
+    pub measurements: usize,
+    /// Candidates the compiler rejected (still cost codegen time).
+    pub compile_failures: usize,
+    pub cache: CacheStats,
+}
+
+impl SweepMetrics {
+    pub fn from_parts(ledger: &Ledger, cache: &CacheStats) -> SweepMetrics {
+        SweepMetrics {
+            device_seconds: ledger.seconds,
+            measurements: ledger.measurements,
+            compile_failures: ledger.compile_failures,
+            cache: cache.clone(),
+        }
+    }
+
+    /// `pairs=… measured=… device=…s hit-rate=…%` one-liner.
+    pub fn summary(&self) -> String {
+        format!(
+            "pairs={} measured={} failed={} device={:.2}s hit-rate={:.1}% (hits={} dedup={} miss={} evict={})",
+            self.cache.lookups(),
+            self.measurements,
+            self.compile_failures,
+            self.device_seconds,
+            self.cache.hit_rate() * 100.0,
+            self.cache.hits,
+            self.cache.dedup_hits,
+            self.cache.misses,
+            self.cache.evictions,
+        )
+    }
+}
 
 /// Log-bucketed latency histogram (microseconds to seconds).
 #[derive(Clone, Debug)]
@@ -105,5 +151,21 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.percentile(99.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn sweep_metrics_rollup_and_summary() {
+        let prof = crate::device::DeviceProfile::xeon_e5_2620();
+        let mut ledger = Ledger::new();
+        ledger.charge_measure(&prof, 0.01);
+        let mut stats = CacheStats::default();
+        stats.misses = 1;
+        stats.hits = 9;
+        let m = SweepMetrics::from_parts(&ledger, &stats);
+        assert_eq!(m.measurements, 1);
+        assert!(m.device_seconds > 0.0);
+        let s = m.summary();
+        assert!(s.contains("hit-rate=90.0%"), "{s}");
+        assert!(s.contains("measured=1"), "{s}");
     }
 }

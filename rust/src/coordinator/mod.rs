@@ -1,20 +1,30 @@
-//! L3 coordination: measurement fan-out, search-time accounting, and
-//! remote-device emulation.
+//! L3 coordination: measurement fan-out, caching, search-time
+//! accounting, and remote-device emulation.
 //!
 //! The paper's system is a *tuning pipeline*: candidates are generated,
 //! compiled, and timed on a target device, with the total device
 //! wall-clock being the quantity every experiment reports. This module
 //! owns that machinery: a deterministic multi-threaded measurement pool
 //! (host-side parallelism never leaks into device-time accounting), the
-//! search-time [`Ledger`], and the RPC session model used for the
-//! Raspberry-Pi experiments.
+//! content-addressed [`MeasureCache`] that lets repeated sweeps pay for
+//! a pair once, the search-time [`Ledger`], and the RPC session model
+//! used for the Raspberry-Pi experiments (with a batched executor that
+//! amortizes round-trips).
 
+pub mod cache;
 pub mod ledger;
 pub mod metrics;
 pub mod pool;
 pub mod rpc;
 
+pub use cache::{
+    content_from_parts, content_key, pair_key, profile_key, sweep_key, CacheStats, MeasureCache,
+    Resolution,
+};
 pub use ledger::Ledger;
-pub use metrics::LatencyHistogram;
-pub use pool::{measure_pairs, PairOutcome};
+pub use metrics::{LatencyHistogram, SweepMetrics};
+pub use pool::{
+    measure_pairs, measure_pairs_cached, measure_pairs_cached_precomputed, CachedBatch,
+    PairOutcome,
+};
 pub use rpc::RemoteSession;

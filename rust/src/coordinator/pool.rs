@@ -2,15 +2,21 @@
 //!
 //! The transfer-tuning engine sweeps hundreds of kernel/schedule pairs
 //! (764 for EfficientNetB0, §5.2); the pool fans the sweep across OS
-//! threads. Determinism is preserved by forking a per-job RNG from the
-//! job index, so results are identical at any thread count — the ledger
-//! (sequential *device* seconds) is charged by the caller from the
-//! returned runtimes, not from host wall-clock.
+//! threads. Determinism is preserved by deriving each pair's measurement
+//! noise from its *content key* (see [`super::cache`]) and the sweep
+//! seed — never from job order or thread count — so results are
+//! identical at any parallelism, identical pairs measure identically
+//! within a sweep, and a cache hit returns exactly what a fresh
+//! measurement would have produced. The ledger (sequential *device*
+//! seconds) is charged per unique measured pair, not per host thread.
 
+use super::cache::{content_key, sweep_key, MeasureCache, Resolution};
+use super::ledger::Ledger;
 use crate::device::{measure, DeviceProfile};
 use crate::ir::Kernel;
 use crate::sched::{apply, ApplyError, Schedule};
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 
 /// Outcome of evaluating one kernel/schedule pair standalone.
 #[derive(Clone, Debug)]
@@ -30,37 +36,180 @@ impl PairOutcome {
     }
 }
 
-/// Evaluate every (kernel, schedule) job standalone, in parallel.
-/// `seed` fixes all measurement noise.
-pub fn measure_pairs(
+/// RNG seed for one pair's measurement noise: a function of the sweep
+/// seed and the pair's content only. Shared with the batched RPC
+/// executor so host- and edge-measured cache entries interoperate.
+pub(crate) fn noise_seed(sweep_seed: u64, content: u64) -> u64 {
+    sweep_seed ^ content.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Measure one pair with a precomputed noise seed (so callers that
+/// already hashed the pair's content don't serialize it twice).
+fn measure_one_seeded(
+    kernel: &Kernel,
+    sched: &Schedule,
+    profile: &DeviceProfile,
+    noise: u64,
+) -> PairOutcome {
+    match apply(sched, kernel) {
+        Err(e) => PairOutcome::Invalid(e),
+        Ok(nest) => {
+            let mut rng = Rng::new(noise);
+            PairOutcome::Measured(measure(kernel, &nest, profile, &mut rng))
+        }
+    }
+}
+
+/// Parallel fan-out with one precomputed noise seed per job.
+fn measure_with_noise(
     jobs: &[(&Kernel, &Schedule)],
     profile: &DeviceProfile,
-    seed: u64,
+    noise: &[u64],
 ) -> Vec<PairOutcome> {
+    debug_assert_eq!(jobs.len(), noise.len());
     let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let chunk = jobs.len().div_ceil(n_threads.max(1)).max(1);
     let mut results: Vec<Option<PairOutcome>> = vec![None; jobs.len()];
 
     std::thread::scope(|scope| {
-        for (ci, (job_chunk, res_chunk)) in
-            jobs.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+        for ((job_chunk, noise_chunk), res_chunk) in
+            jobs.chunks(chunk).zip(noise.chunks(chunk)).zip(results.chunks_mut(chunk))
         {
             scope.spawn(move || {
-                for (ji, ((kernel, sched), slot)) in
-                    job_chunk.iter().zip(res_chunk.iter_mut()).enumerate()
+                for (((kernel, sched), &n), slot) in
+                    job_chunk.iter().zip(noise_chunk.iter()).zip(res_chunk.iter_mut())
                 {
-                    let job_index = (ci * chunk + ji) as u64;
-                    let mut rng = Rng::new(seed ^ job_index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                    *slot = Some(match apply(sched, kernel) {
-                        Err(e) => PairOutcome::Invalid(e),
-                        Ok(nest) => PairOutcome::Measured(measure(kernel, &nest, profile, &mut rng)),
-                    });
+                    *slot = Some(measure_one_seeded(kernel, sched, profile, n));
                 }
             });
         }
     });
 
     results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+/// Evaluate every (kernel, schedule) job standalone, in parallel.
+/// `seed` fixes all measurement noise; identical jobs yield identical
+/// outcomes regardless of their position in the batch.
+pub fn measure_pairs(
+    jobs: &[(&Kernel, &Schedule)],
+    profile: &DeviceProfile,
+    seed: u64,
+) -> Vec<PairOutcome> {
+    let noise: Vec<u64> =
+        jobs.iter().map(|&(k, s)| noise_seed(seed, content_key(k, s))).collect();
+    measure_with_noise(jobs, profile, &noise)
+}
+
+/// A cached batch evaluation: outcomes in job order plus each job's
+/// cache key (the engine uses the keys for cold-equivalent search-time
+/// accounting without re-hashing every pair).
+pub struct CachedBatch {
+    pub outcomes: Vec<PairOutcome>,
+    pub keys: Vec<u64>,
+}
+
+/// Evaluate a batch through the measurement cache.
+///
+/// The pipeline: duplicate pairs within the batch are collapsed first
+/// (`dedup_hits`), resident pairs are served from `cache` (`hits`), and
+/// only the remaining unique misses go to the parallel pool. The ledger
+/// is charged **per unique miss** — cached pairs cost zero device
+/// seconds, mirroring how a real deployment amortizes tuning — while the
+/// returned outcomes are positionally identical to [`measure_pairs`] on
+/// the same batch (the cache-transparency invariant of
+/// [`super::cache`]).
+pub fn measure_pairs_cached(
+    jobs: &[(&Kernel, &Schedule)],
+    profile: &DeviceProfile,
+    seed: u64,
+    cache: &mut MeasureCache,
+    ledger: &mut Ledger,
+) -> Vec<PairOutcome> {
+    let contents: Vec<u64> = jobs.iter().map(|&(k, s)| content_key(k, s)).collect();
+    measure_pairs_cached_precomputed(jobs, &contents, profile, seed, cache, ledger).outcomes
+}
+
+/// [`measure_pairs_cached`] with caller-supplied content keys:
+/// `contents[i]` must equal `content_key(jobs[i].0, jobs[i].1)`. Sweep
+/// planners that hash each store record once (see
+/// `transfer::SweepPlan`) use this to avoid re-serializing the same
+/// schedule for every kernel it is tried on.
+pub fn measure_pairs_cached_precomputed(
+    jobs: &[(&Kernel, &Schedule)],
+    contents: &[u64],
+    profile: &DeviceProfile,
+    seed: u64,
+    cache: &mut MeasureCache,
+    ledger: &mut Ledger,
+) -> CachedBatch {
+    assert_eq!(jobs.len(), contents.len());
+
+    /// Where job `i`'s outcome comes from.
+    #[derive(Clone)]
+    enum Slot {
+        /// Cache hit with a measured runtime.
+        Hit(f64),
+        /// Cache hit on an invalid pair, re-validated against `apply`
+        /// (so the error payload is real, and corrupt entries never
+        /// reach here — they are reclassified as misses).
+        HitInvalid(ApplyError),
+        /// Index into the unique-miss list.
+        Miss(usize),
+    }
+
+    let keys: Vec<u64> = contents.iter().map(|&c| sweep_key(c, seed, profile)).collect();
+
+    // Batch-local dedup of every resolution (hits included): work is
+    // proportional to unique pairs even on fully warm sweeps.
+    let mut slot_of_key: HashMap<u64, usize> = HashMap::new();
+    let mut unique_jobs: Vec<(&Kernel, &Schedule)> = Vec::new();
+    let mut unique_keys: Vec<u64> = Vec::new();
+    let mut unique_noise: Vec<u64> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
+    for (ji, &key) in keys.iter().enumerate() {
+        if let Some(&si) = slot_of_key.get(&key) {
+            cache.stats.dedup_hits += 1;
+            let dup = slots[si].clone();
+            slots.push(dup);
+            continue;
+        }
+        let (kernel, sched) = jobs[ji];
+        let slot = match cache.resolve_with(key, || apply(sched, kernel).map(|_| ())) {
+            Resolution::Hit(t) => Slot::Hit(t),
+            Resolution::HitInvalid(e) => Slot::HitInvalid(e),
+            Resolution::Corrupt | Resolution::Miss => {
+                let u = unique_jobs.len();
+                unique_jobs.push(jobs[ji]);
+                unique_keys.push(key);
+                unique_noise.push(noise_seed(seed, contents[ji]));
+                Slot::Miss(u)
+            }
+        };
+        slot_of_key.insert(key, slots.len());
+        slots.push(slot);
+    }
+
+    // Fan the unique misses across the pool; charge sequential device
+    // seconds per measured candidate, exactly as Ansor's measurer would.
+    let measured = measure_with_noise(&unique_jobs, profile, &unique_noise);
+    for (key, outcome) in unique_keys.iter().zip(&measured) {
+        match outcome.runtime() {
+            Some(t) => ledger.charge_measure(profile, t),
+            None => ledger.charge_compile_fail(profile),
+        }
+        cache.insert(*key, outcome.runtime());
+    }
+
+    let outcomes: Vec<PairOutcome> = slots
+        .into_iter()
+        .map(|slot| match slot {
+            Slot::Miss(u) => measured[u].clone(),
+            Slot::Hit(t) => PairOutcome::Measured(t),
+            Slot::HitInvalid(e) => PairOutcome::Invalid(e),
+        })
+        .collect();
+    CachedBatch { outcomes, keys }
 }
 
 #[cfg(test)]
@@ -82,6 +231,23 @@ mod tests {
     }
 
     #[test]
+    fn noise_is_content_derived_not_positional() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let s = Schedule::untuned_default(&k);
+        let mut s2 = s.clone();
+        s2.unroll_max += 16;
+        // Same pair at different positions: identical measurement.
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k, &s), (&k, &s2), (&k, &s)];
+        let out = measure_pairs(&jobs, &prof, 11);
+        assert_eq!(out[0].runtime(), out[2].runtime());
+        // Distinct content draws independent noise (and different seeds
+        // re-draw).
+        let other = measure_pairs(&jobs, &prof, 12);
+        assert_ne!(out[0].runtime(), other[0].runtime());
+    }
+
+    #[test]
     fn invalid_pairs_reported() {
         let prof = DeviceProfile::xeon_e5_2620();
         let k = KernelBuilder::dense(256, 256, 256, &[]);
@@ -97,5 +263,114 @@ mod tests {
     fn empty_jobs_ok() {
         let prof = DeviceProfile::xeon_e5_2620();
         assert!(measure_pairs(&[], &prof, 0).is_empty());
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        assert!(measure_pairs_cached(&[], &prof, 0, &mut cache, &mut ledger).is_empty());
+        assert_eq!(ledger.seconds, 0.0);
+    }
+
+    #[test]
+    fn cached_batch_matches_uncached_and_charges_misses_only() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k1 = KernelBuilder::dense(256, 256, 256, &[]);
+        let k2 = KernelBuilder::dense(512, 512, 512, &[]);
+        let s1 = Schedule::untuned_default(&k1);
+        let s2 = Schedule::untuned_default(&k2);
+        // k1/s1 appears twice: one unique measurement, one dedup hit.
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k1, &s1), (&k2, &s2), (&k1, &s1)];
+
+        let plain = measure_pairs(&jobs, &prof, 7);
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        let cached = measure_pairs_cached(&jobs, &prof, 7, &mut cache, &mut ledger);
+        for (a, b) in plain.iter().zip(&cached) {
+            assert_eq!(a.runtime(), b.runtime(), "cache must be transparent");
+        }
+        assert_eq!(ledger.measurements, 2, "duplicate pair measured once");
+        assert_eq!(cache.stats.dedup_hits, 1);
+        assert_eq!(cache.stats.misses, 2);
+
+        // Second sweep: fully warm, zero device seconds.
+        let mut ledger2 = Ledger::new();
+        let warm = measure_pairs_cached(&jobs, &prof, 7, &mut cache, &mut ledger2);
+        assert_eq!(ledger2.seconds, 0.0);
+        assert_eq!(ledger2.measurements, 0);
+        for (a, b) in plain.iter().zip(&warm) {
+            assert_eq!(a.runtime(), b.runtime());
+        }
+
+        // Different seed: different keys, so it misses and re-charges.
+        let mut ledger3 = Ledger::new();
+        let _ = measure_pairs_cached(&jobs, &prof, 8, &mut cache, &mut ledger3);
+        assert!(ledger3.seconds > 0.0);
+    }
+
+    #[test]
+    fn caches_are_device_scoped() {
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let edge = DeviceProfile::cortex_a72();
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let s = Schedule::untuned_default(&k);
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k, &s)];
+
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        let server = measure_pairs_cached(&jobs, &xeon, 3, &mut cache, &mut ledger);
+
+        // The same pair on a different device must re-measure, not be
+        // served the server runtime.
+        let mut edge_ledger = Ledger::new();
+        let remote = measure_pairs_cached(&jobs, &edge, 3, &mut cache, &mut edge_ledger);
+        assert!(edge_ledger.seconds > 0.0, "edge sweep must not hit the Xeon entry");
+        assert_ne!(server[0].runtime(), remote[0].runtime());
+    }
+
+    #[test]
+    fn cached_invalids_cost_zero_and_keep_their_error() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let small = KernelBuilder::dense(8, 8, 8, &[]);
+        let big = KernelBuilder::dense(256, 256, 256, &[]);
+        let mut s = Schedule::untuned_default(&big);
+        s.spatial[1] = crate::sched::AxisTiling::of(&[64]);
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&small, &s)];
+
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        let cold = measure_pairs_cached(&jobs, &prof, 3, &mut cache, &mut ledger);
+        assert!(matches!(cold[0], PairOutcome::Invalid(_)));
+        assert_eq!(ledger.compile_failures, 1);
+
+        let mut ledger2 = Ledger::new();
+        let warm = measure_pairs_cached(&jobs, &prof, 3, &mut cache, &mut ledger2);
+        assert!(matches!(warm[0], PairOutcome::Invalid(_)), "error payload reconstructed");
+        assert_eq!(ledger2.seconds, 0.0);
+        assert_eq!(ledger2.compile_failures, 0);
+    }
+
+    #[test]
+    fn corrupt_cache_entry_recovers_with_one_measurement_for_duplicates() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k = KernelBuilder::dense(256, 256, 256, &[]);
+        let s = Schedule::untuned_default(&k);
+        // Poison the cache: claim a perfectly valid pair is invalid.
+        let key = crate::coordinator::cache::pair_key(&k, &s, 3, &prof);
+        let mut cache = MeasureCache::new();
+        cache.insert(key, None);
+
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k, &s), (&k, &s), (&k, &s)];
+        let mut ledger = Ledger::new();
+        let out = measure_pairs_cached(&jobs, &prof, 3, &mut cache, &mut ledger);
+        // Recovered with exactly ONE honest measurement shared by all
+        // three duplicates, and the poisoned entry is fixed in place.
+        assert_eq!(ledger.measurements, 1);
+        assert!(out.iter().all(|o| o.runtime() == out[0].runtime()));
+        assert!(out[0].runtime().is_some());
+        assert_eq!(cache.peek(key), Some(out[0].runtime()));
+        // Stats reconcile with the ledger: the recovered lookup counts
+        // as a miss, not a free hit, and the duplicates dedup against
+        // the recovery measurement.
+        assert_eq!(cache.stats.misses, 1);
+        assert_eq!(cache.stats.hits, 0);
+        assert_eq!(cache.stats.dedup_hits, 2);
     }
 }

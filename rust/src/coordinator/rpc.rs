@@ -6,7 +6,15 @@
 //! request lifecycle — serialize/upload, remote execution, report — so
 //! edge search-time experiments charge the right costs, and exposes
 //! queue statistics like a real tracker would.
+//!
+//! [`RemoteSession::measure_batch`] is the batched executor: unique
+//! cache-missing candidates are bundled into one upload (a single RTT
+//! instead of one per candidate) and cached pairs never leave the host —
+//! the two costs that dominate edge sweeps (paper Fig 6's search times
+//! are RPC-bound).
 
+use super::cache::{content_key, sweep_key, MeasureCache, Resolution};
+use super::pool::noise_seed;
 use crate::device::{measure, DeviceProfile};
 use crate::ir::Kernel;
 use crate::sched::{apply, Schedule};
@@ -15,11 +23,16 @@ use crate::util::rng::Rng;
 /// Simulated remote measurement session against one device.
 pub struct RemoteSession {
     pub profile: DeviceProfile,
-    rng: Rng,
+    /// Session seed; pair noise derives from (seed, pair content), the
+    /// same stream the host pool uses, so the per-candidate and batched
+    /// entry points agree on every measurement.
+    seed: u64,
     /// Upload bandwidth host→device for compiled artifacts, bytes/s.
     pub upload_bps: f64,
     /// Compiled artifact size per candidate (bytes).
     pub artifact_bytes: f64,
+    /// Candidates actually executed on the device (cache/dedup hits in
+    /// batched mode never become requests).
     pub requests: usize,
     pub failures: usize,
     /// Total device-side seconds consumed (the edge ledger component).
@@ -32,7 +45,7 @@ impl RemoteSession {
     pub fn new(profile: DeviceProfile, seed: u64) -> Self {
         RemoteSession {
             profile,
-            rng: Rng::new(seed),
+            seed,
             upload_bps: 10e6,        // 10 MB/s: Wi-Fi/100Mb ethernet class
             artifact_bytes: 1.5e6,   // shared object + params
             requests: 0,
@@ -44,6 +57,9 @@ impl RemoteSession {
 
     /// Measure one candidate remotely. Returns the measured runtime, or
     /// `None` when codegen failed (still costs host time; no upload).
+    /// Always ships and re-measures — use [`measure_batch`](Self::measure_batch)
+    /// to go through the cache; both return identical runtimes for the
+    /// same candidate.
     pub fn measure_remote(&mut self, kernel: &Kernel, sched: &Schedule) -> Option<f64> {
         self.requests += 1;
         match apply(sched, kernel) {
@@ -52,7 +68,8 @@ impl RemoteSession {
                 None
             }
             Ok(nest) => {
-                let runtime = measure(kernel, &nest, &self.profile, &mut self.rng);
+                let mut rng = Rng::new(noise_seed(self.seed, content_key(kernel, sched)));
+                let runtime = measure(kernel, &nest, &self.profile, &mut rng);
                 self.transport_seconds += self.artifact_bytes / self.upload_bps + 0.05; // RTT
                 self.device_seconds += self.profile.measure_repeats as f64 * runtime;
                 Some(runtime)
@@ -66,6 +83,86 @@ impl RemoteSession {
         self.device_seconds
             + self.transport_seconds
             + self.requests as f64 * self.profile.measure_overhead_s
+    }
+
+    /// Batched remote measurement through the content-addressed cache.
+    ///
+    /// Compared to calling [`measure_remote`](Self::measure_remote) per
+    /// candidate:
+    ///
+    /// * duplicate candidates in the batch and cache-resident candidates
+    ///   are served host-side — no upload, no device seconds;
+    /// * the remaining unique misses ship as **one** artifact bundle:
+    ///   upload bytes scale with the miss count but the RTT is paid once
+    ///   per batch instead of once per candidate;
+    /// * measurement noise is derived from (seed, pair content), exactly
+    ///   like the host pool, so cached entries interoperate between the
+    ///   local and remote executors (for the same device profile — keys
+    ///   are device-scoped).
+    ///
+    /// The hit/validate/corrupt-recovery semantics are shared with the
+    /// host pool through [`MeasureCache::resolve_with`]; only the cost
+    /// model (transport + per-request overhead instead of a ledger)
+    /// lives here.
+    ///
+    /// Returns per-candidate runtimes in batch order (`None` = the
+    /// schedule does not apply). Noise comes from the session seed and
+    /// the pair content, so this agrees with both
+    /// [`measure_remote`](Self::measure_remote) and host-pool sweeps at
+    /// the same seed.
+    pub fn measure_batch(
+        &mut self,
+        jobs: &[(&Kernel, &Schedule)],
+        cache: &mut MeasureCache,
+    ) -> Vec<Option<f64>> {
+        let mut out: Vec<Option<f64>> = Vec::with_capacity(jobs.len());
+        let mut miss_count = 0usize;
+        let mut seen_in_batch: std::collections::HashMap<u64, Option<f64>> =
+            std::collections::HashMap::new();
+        for &(kernel, sched) in jobs {
+            let content = content_key(kernel, sched);
+            let key = sweep_key(content, self.seed, &self.profile);
+            if let Some(&rt) = seen_in_batch.get(&key) {
+                cache.stats.dedup_hits += 1;
+                out.push(rt);
+                continue;
+            }
+            // Shared resolution front half (same semantics as the host
+            // pool — see MeasureCache::resolve_with); only the cost
+            // model below differs.
+            let rt = match cache.resolve_with(key, || apply(sched, kernel).map(|_| ())) {
+                Resolution::Hit(t) => Some(t),
+                Resolution::HitInvalid(_) => None,
+                Resolution::Corrupt | Resolution::Miss => match apply(sched, kernel) {
+                    Err(_) => {
+                        // New codegen failure: host work, nothing shipped.
+                        self.requests += 1;
+                        self.failures += 1;
+                        cache.insert(key, None);
+                        None
+                    }
+                    Ok(nest) => {
+                        // A real tuning request (cache and dedup hits
+                        // never become one, so total_seconds() charges
+                        // no per-measurement overhead for them).
+                        self.requests += 1;
+                        let mut rng = Rng::new(noise_seed(self.seed, content));
+                        let runtime = measure(kernel, &nest, &self.profile, &mut rng);
+                        self.transport_seconds += self.artifact_bytes / self.upload_bps;
+                        self.device_seconds += self.profile.measure_repeats as f64 * runtime;
+                        miss_count += 1;
+                        cache.insert(key, Some(runtime));
+                        Some(runtime)
+                    }
+                },
+            };
+            seen_in_batch.insert(key, rt);
+            out.push(rt);
+        }
+        if miss_count > 0 {
+            self.transport_seconds += 0.05; // one RTT for the whole bundle
+        }
+        out
     }
 }
 
@@ -94,5 +191,78 @@ mod tests {
         assert!(sess.measure_remote(&k, &s).is_none());
         assert_eq!(sess.failures, 1);
         assert_eq!(sess.transport_seconds, 0.0);
+    }
+
+    #[test]
+    fn batch_amortizes_rtt_and_dedups() {
+        let prof = DeviceProfile::cortex_a72();
+        let k1 = KernelBuilder::dense(128, 128, 128, &[]);
+        let k2 = KernelBuilder::dense(256, 256, 256, &[]);
+        let s1 = Schedule::untuned_default(&k1);
+        let s2 = Schedule::untuned_default(&k2);
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k1, &s1), (&k2, &s2), (&k1, &s1)];
+
+        // Per-candidate path: three RTTs, three uploads.
+        let mut solo = RemoteSession::new(prof.clone(), 3);
+        let mut solo_times = Vec::new();
+        for &(k, s) in &jobs {
+            solo_times.push(solo.measure_remote(k, s).unwrap());
+        }
+
+        // Batched path: duplicate collapsed, one RTT, two uploads —
+        // same runtimes (both entry points draw content-derived noise).
+        let mut sess = RemoteSession::new(prof.clone(), 3);
+        let mut cache = MeasureCache::new();
+        let out = sess.measure_batch(&jobs, &mut cache);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[2], "identical candidates measure identically");
+        for (a, b) in solo_times.iter().zip(&out) {
+            assert_eq!(Some(*a), *b, "per-candidate and batched APIs must agree");
+        }
+        assert!(sess.transport_seconds < solo.transport_seconds);
+        let expected = 2.0 * sess.artifact_bytes / sess.upload_bps + 0.05;
+        assert!((sess.transport_seconds - expected).abs() < 1e-9);
+
+        // Warm batch: nothing ships, device idle, and no requests are
+        // issued — the edge search-time axis (total_seconds) must not
+        // grow for cached pairs.
+        let before_device = sess.device_seconds;
+        let before_transport = sess.transport_seconds;
+        let before_requests = sess.requests;
+        let before_total = sess.total_seconds();
+        let warm = sess.measure_batch(&jobs, &mut cache);
+        assert_eq!(warm, out);
+        assert_eq!(sess.device_seconds, before_device);
+        assert_eq!(sess.transport_seconds, before_transport);
+        assert_eq!(sess.requests, before_requests);
+        assert_eq!(sess.total_seconds(), before_total);
+    }
+
+    #[test]
+    fn batch_interoperates_with_host_pool_cache() {
+        use crate::coordinator::{measure_pairs_cached, Ledger};
+        let prof = DeviceProfile::cortex_a72();
+        let k = KernelBuilder::dense(128, 128, 128, &[]);
+        let s = Schedule::untuned_default(&k);
+        let jobs: Vec<(&Kernel, &Schedule)> = vec![(&k, &s)];
+
+        // Warm the cache via the host pool...
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        let host = measure_pairs_cached(&jobs, &prof, 3, &mut cache, &mut ledger);
+
+        // ...then the remote batch on the SAME device hits it and
+        // returns the same value.
+        let mut sess = RemoteSession::new(prof, 3);
+        let remote = sess.measure_batch(&jobs, &mut cache);
+        assert_eq!(remote[0], host[0].runtime());
+        assert_eq!(sess.device_seconds, 0.0);
+
+        // A session against a different device must not be served the
+        // other profile's entries.
+        let mut other = RemoteSession::new(DeviceProfile::xeon_e5_2620(), 3);
+        let cross = other.measure_batch(&jobs, &mut cache);
+        assert!(other.device_seconds > 0.0, "cross-device lookups must miss");
+        assert_ne!(cross[0], remote[0]);
     }
 }

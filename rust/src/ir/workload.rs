@@ -23,7 +23,11 @@ pub fn class_signature(ops: &[OpKind]) -> String {
     ops.iter().map(|o| o.token()).collect::<Vec<_>>().join("_")
 }
 
-/// Workload id = hash(class signature, all axis extents).
+/// Workload id = hash(class signature, key extents). Kernel builders
+/// pass every loop-axis extent *plus* the raw input/weight shapes (see
+/// `finish` in `ir::kernel`), so same-output kernels with different
+/// strides get distinct ids — and the measurement cache inherits that
+/// exactness.
 pub fn workload_id(class_sig: &str, extents: &[u64]) -> u64 {
     let mut bytes = Vec::with_capacity(class_sig.len() + extents.len() * 8);
     bytes.extend_from_slice(class_sig.as_bytes());

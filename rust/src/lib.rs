@@ -23,8 +23,9 @@
 //! * [`transfer`] — the paper's contribution: kernel classes, the
 //!   schedule store, the model-selection heuristic (Eq. 1), and the
 //!   one-to-one / mixed-pool transfer-tuning engines.
-//! * [`coordinator`] — measurement worker pool, search-time ledger, and
-//!   RPC-device emulation for edge tuning.
+//! * [`coordinator`] — measurement worker pool, the content-addressed
+//!   measurement cache (repeated sweeps pay for a pair once), search-time
+//!   ledger, and RPC-device emulation for edge tuning.
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas/JAX
 //!   artifacts (the *real* hot path; Python is never on it).
 //! * [`report`] — regenerates every table and figure of the paper.

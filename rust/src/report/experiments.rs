@@ -6,10 +6,14 @@
 //! seed) and shared. All results are deterministic in the seed.
 
 use crate::autosched::{tune_model, TuneOptions, TuningResult};
+use crate::coordinator::{CacheStats, MeasureCache};
 use crate::device::{untuned_model_time, DeviceProfile};
 use crate::ir::ModelGraph;
 use crate::models;
-use crate::transfer::{rank_tuning_models, transfer_tune_one_to_one, ScheduleStore, TransferResult};
+use crate::transfer::{
+    rank_tuning_models, transfer_tune_cached, ScheduleStore, TransferOptions, TransferResult,
+};
+use std::cell::RefCell;
 
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -28,12 +32,21 @@ impl Default for ExperimentConfig {
 
 /// The tuned zoo: all 11 models, their Ansor trajectories, untuned
 /// baselines, and the cross-model schedule store.
+///
+/// All transfer sweeps launched from one zoo share one content-addressed
+/// [`MeasureCache`]: the pool-mode sweep of Fig 8 re-evaluates exactly
+/// the pairs the one-to-one sweeps already measured (plus the rest of
+/// the pool), so sharing the cache removes the duplicate device seconds
+/// without changing any result (cache transparency — see
+/// `crate::coordinator::cache`). Interior mutability keeps the public
+/// `&self` API; report generation is single-threaded.
 pub struct Zoo {
     pub config: ExperimentConfig,
     pub models: Vec<ModelGraph>,
     pub tunings: Vec<TuningResult>,
     pub untuned_s: Vec<f64>,
     pub store: ScheduleStore,
+    pub cache: RefCell<MeasureCache>,
 }
 
 impl Zoo {
@@ -62,7 +75,7 @@ impl Zoo {
             tunings.push(res);
             untuned_s.push(untuned);
         }
-        Zoo { config, models, tunings, untuned_s, store }
+        Zoo { config, models, tunings, untuned_s, store, cache: RefCell::new(MeasureCache::new()) }
     }
 
     pub fn model_index(&self, name: &str) -> Option<usize> {
@@ -75,23 +88,29 @@ impl Zoo {
     }
 
     /// Run one-to-one transfer-tuning onto `target` using the
-    /// heuristic's first choice (or a named source).
+    /// heuristic's first choice (or a named source). Measurements go
+    /// through the zoo's shared cache.
     pub fn transfer(&self, target: &ModelGraph, source: Option<&str>) -> Option<TransferResult> {
         let src = match source {
             Some(s) => s.to_string(),
             None => self.choices(target).first()?.0.clone(),
         };
-        Some(transfer_tune_one_to_one(
+        let slice = self.store.of_model(&src);
+        Some(transfer_tune_cached(
             target,
-            &self.store,
-            &src,
+            &slice,
             &self.config.device,
+            &src,
             self.config.seed,
+            &TransferOptions::default(),
+            &mut self.cache.borrow_mut(),
         ))
     }
 
     /// Mixed-pool transfer (§5.5): all models' schedules except the
-    /// target's own.
+    /// target's own. Shares the cache with the one-to-one sweeps, so in
+    /// a full Fig 8 run the pool mode only pays for pairs no one-to-one
+    /// sweep already measured.
     pub fn transfer_pooled(&self, target: &ModelGraph) -> TransferResult {
         let pool = ScheduleStore {
             records: self
@@ -102,7 +121,20 @@ impl Zoo {
                 .cloned()
                 .collect(),
         };
-        crate::transfer::transfer_tune(target, &pool, &self.config.device, "mixed", self.config.seed)
+        transfer_tune_cached(
+            target,
+            &pool,
+            &self.config.device,
+            "mixed",
+            self.config.seed,
+            &TransferOptions::default(),
+            &mut self.cache.borrow_mut(),
+        )
+    }
+
+    /// Snapshot of the shared cache's counters (hit rate, evictions...).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.borrow().stats.clone()
     }
 
     /// Ansor speedup achievable within a given search-time budget
@@ -166,5 +198,27 @@ mod tests {
         let one = zoo.transfer(&target, Some("ResNet50")).unwrap();
         let pooled = zoo.transfer_pooled(&target);
         assert!(pooled.pairs_evaluated() >= one.pairs_evaluated());
+    }
+
+    #[test]
+    fn shared_cache_amortizes_repeated_sweeps_without_changing_results() {
+        let zoo = tiny_zoo();
+        let target = zoo.models[zoo.model_index("ResNet18").unwrap()].clone();
+
+        let cold = zoo.transfer_pooled(&target);
+        assert!(cold.search_time_s() > 0.0);
+
+        // Identical sweep, warm cache: same answer, zero device seconds.
+        let warm = zoo.transfer_pooled(&target);
+        assert_eq!(warm.tuned_model_s, cold.tuned_model_s);
+        assert_eq!(warm.search_time_s(), 0.0);
+
+        // A different mode over overlapping pairs pays only the delta.
+        let one = zoo.transfer(&target, Some("ResNet50")).unwrap();
+        assert_eq!(one.search_time_s(), 0.0, "one-to-one pairs are a subset of the pool");
+
+        let stats = zoo.cache_stats();
+        assert!(stats.hits + stats.dedup_hits > 0);
+        assert!(stats.hit_rate() > 0.5, "hit rate {}", stats.hit_rate());
     }
 }

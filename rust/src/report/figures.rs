@@ -98,16 +98,20 @@ pub fn fig5(zoo: &Zoo) -> Table {
     let mut ratios = Vec::new();
     for (mi, m) in zoo.models.iter().enumerate() {
         let Some(tt) = zoo.transfer(m, None) else { continue };
-        let ansor_same = zoo.ansor_speedup_at(mi, tt.search_time_s());
+        // Report standalone (cold-equivalent) search times: they are
+        // deterministic in the seed no matter which earlier figures
+        // warmed the zoo's shared measurement cache.
+        let tt_search = tt.standalone_search_time_s();
+        let ansor_same = zoo.ansor_speedup_at(mi, tt_search);
         let to_match = zoo.ansor_time_to_match(mi, tt.tuned_model_s);
         let (match_str, ratio_str) = match to_match {
             Some(s) => {
-                let r = s / tt.search_time_s();
+                let r = s / tt_search;
                 ratios.push(r);
                 (fmt_duration(s), format!("{r:.1}x"))
             }
             None => {
-                let r = zoo.tunings[mi].search_time_s / tt.search_time_s();
+                let r = zoo.tunings[mi].search_time_s / tt_search;
                 ratios.push(r);
                 (format!("> {}", fmt_duration(zoo.tunings[mi].search_time_s)), format!("> {r:.1}x"))
             }
@@ -117,7 +121,7 @@ pub fn fig5(zoo: &Zoo) -> Table {
             tt.source.clone(),
             fmt_speedup(tt.speedup()),
             fmt_speedup(ansor_same),
-            fmt_duration(tt.search_time_s()),
+            fmt_duration(tt_search),
             match_str,
             ratio_str,
         ]);
@@ -186,7 +190,10 @@ pub fn fig7(config: &ExperimentConfig, mut progress: impl FnMut(&str)) -> Table 
 }
 
 /// Fig 8: one-to-one vs mixed-pool transfer-tuning (speedup + search
-/// time per model).
+/// time per model). Search columns are standalone (cold-equivalent)
+/// costs — the paper's quantity; "Mixed amortized" is what the pooled
+/// sweep actually charged after the zoo's shared cache absorbed the
+/// pairs the one-to-one sweep already measured.
 pub fn fig8(zoo: &Zoo) -> Table {
     let mut t = Table::new(
         "Fig 8: one-to-one vs mixed schedule pool",
@@ -196,6 +203,7 @@ pub fn fig8(zoo: &Zoo) -> Table {
             "Mixed speedup",
             "One-to-one search",
             "Mixed search",
+            "Mixed amortized",
             "Mixed regressed?",
         ],
     );
@@ -213,13 +221,15 @@ pub fn fig8(zoo: &Zoo) -> Table {
             m.name.clone(),
             fmt_speedup(one.speedup()),
             fmt_speedup(pooled.speedup()),
-            fmt_duration(one.search_time_s()),
+            fmt_duration(one.standalone_search_time_s()),
+            fmt_duration(pooled.standalone_search_time_s()),
             fmt_duration(pooled.search_time_s()),
             if regressed { "yes".into() } else { "no".into() },
         ]);
     }
     t.row(vec![
         "Summary".into(),
+        "".into(),
         "".into(),
         "".into(),
         "".into(),
@@ -271,6 +281,20 @@ mod tests {
     fn fig8_counts_regressions() {
         let zoo = tiny_zoo();
         let t = fig8(&zoo);
-        assert!(t.rows.last().unwrap()[5].contains("regressed"));
+        assert!(t.rows.last().unwrap()[6].contains("regressed"));
+    }
+
+    #[test]
+    fn fig8_search_columns_are_order_independent() {
+        // The shared zoo cache must change only the amortized column:
+        // running fig8 twice on one zoo (second run fully warm) yields
+        // identical standalone search columns.
+        let zoo = tiny_zoo();
+        let a = fig8(&zoo);
+        let b = fig8(&zoo);
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra[3], rb[3], "one-to-one search must not drift");
+            assert_eq!(ra[4], rb[4], "mixed search must not drift");
+        }
     }
 }

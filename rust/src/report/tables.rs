@@ -114,7 +114,9 @@ pub fn table4(zoo: &Zoo) -> Table {
         } else {
             100.0
         };
-        let time_pct = 100.0 * tt.search_time_s() / zoo.tunings[mi].search_time_s;
+        // Standalone (cold-equivalent) cost: stable no matter which
+        // earlier tables/figures warmed the zoo's shared cache.
+        let time_pct = 100.0 * tt.standalone_search_time_s() / zoo.tunings[mi].search_time_s;
         sp.push(speedup_pct);
         st.push(time_pct);
         t.row(vec![m.name.clone(), format!("{speedup_pct:.2}"), format!("{time_pct:.2}")]);

@@ -9,96 +9,26 @@
 //! Interchange is HLO text rather than serialized `HloModuleProto`
 //! because jax >= 0.5 emits 64-bit instruction ids that the pinned
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! ## Feature gating
+//!
+//! Real execution needs the external `xla` bindings crate, which the
+//! offline build environment does not carry. The implementation is
+//! therefore gated behind the non-default `pjrt` cargo feature; the
+//! default build gets an API-identical stub whose constructors return an
+//! error, so every caller (`repro serve`, the e2e tests, the PJRT bench)
+//! compiles and degrades to a clean "runtime unavailable" path. To run
+//! for real: add the `xla` dependency to Cargo.toml and build with
+//! `--features pjrt`.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::Path;
-use std::time::Instant;
 
-/// A compiled artifact ready to execute.
-pub struct LoadedKernel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// PJRT CPU client wrapper owning every loaded executable.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load one `*.hlo.txt` artifact and compile it.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedKernel> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let name = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("kernel")
-            .trim_end_matches(".hlo")
-            .to_string();
-        Ok(LoadedKernel { name, exe })
-    }
-}
-
-impl LoadedKernel {
-    /// Execute with f32 inputs of the given shapes; returns the first
-    /// output (artifacts are lowered with `return_tuple=True`, so the
-    /// result is unwrapped from a 1-tuple).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                xla::Literal::vec1(data)
-                    .reshape(shape)
-                    .context("reshaping input literal")
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Time `iters` executions (after `warmup` ones); returns per-call
-    /// seconds (median-of-means over 3 chunks).
-    pub fn bench_f32(&self, inputs: &[(&[f32], &[i64])], warmup: usize, iters: usize) -> Result<f64> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| Ok(xla::Literal::vec1(data).reshape(shape)?))
-            .collect::<Result<_>>()?;
-        for _ in 0..warmup {
-            let bufs = self.exe.execute::<xla::Literal>(&lits)?;
-            let _ = bufs[0][0].to_literal_sync()?;
-        }
-        let chunks = 3usize;
-        let per_chunk = iters.div_ceil(chunks).max(1);
-        let mut means = Vec::with_capacity(chunks);
-        for _ in 0..chunks {
-            let t0 = Instant::now();
-            for _ in 0..per_chunk {
-                let bufs = self.exe.execute::<xla::Literal>(&lits)?;
-                let _ = bufs[0][0].to_literal_sync()?;
-            }
-            means.push(t0.elapsed().as_secs_f64() / per_chunk as f64);
-        }
-        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Ok(means[chunks / 2])
-    }
-}
+/// Whether real PJRT execution is compiled in. The default (offline)
+/// build gets the stub, whose constructors always error — artifact-
+/// gated tests and benches must check this too, or they panic instead
+/// of skipping when artifacts happen to exist.
+pub const AVAILABLE: bool = cfg!(feature = "pjrt");
 
 /// Locate the artifacts directory (env override, then repo default).
 pub fn artifacts_dir() -> std::path::PathBuf {
@@ -107,23 +37,187 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
 }
 
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{Context, Result};
+    use std::path::Path;
+    use std::time::Instant;
+
+    /// A compiled artifact ready to execute.
+    pub struct LoadedKernel {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// PJRT CPU client wrapper owning every loaded executable.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load one `*.hlo.txt` artifact and compile it.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedKernel> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let name = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("kernel")
+                .trim_end_matches(".hlo")
+                .to_string();
+            Ok(LoadedKernel { name, exe })
+        }
+    }
+
+    impl LoadedKernel {
+        /// Execute with f32 inputs of the given shapes; returns the first
+        /// output (artifacts are lowered with `return_tuple=True`, so the
+        /// result is unwrapped from a 1-tuple).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    xla::Literal::vec1(data)
+                        .reshape(shape)
+                        .context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// Time `iters` executions (after `warmup` ones); returns per-call
+        /// seconds (median-of-means over 3 chunks).
+        pub fn bench_f32(
+            &self,
+            inputs: &[(&[f32], &[i64])],
+            warmup: usize,
+            iters: usize,
+        ) -> Result<f64> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| Ok(xla::Literal::vec1(data).reshape(shape)?))
+                .collect::<Result<_>>()?;
+            for _ in 0..warmup {
+                let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+                let _ = bufs[0][0].to_literal_sync()?;
+            }
+            let chunks = 3usize;
+            let per_chunk = iters.div_ceil(chunks).max(1);
+            let mut means = Vec::with_capacity(chunks);
+            for _ in 0..chunks {
+                let t0 = Instant::now();
+                for _ in 0..per_chunk {
+                    let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+                    let _ = bufs[0][0].to_literal_sync()?;
+                }
+                means.push(t0.elapsed().as_secs_f64() / per_chunk as f64);
+            }
+            means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Ok(means[chunks / 2])
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
+        // (they are skipped when `make artifacts` has not run). Here we only
+        // check client creation, which needs no artifacts.
+        #[test]
+        fn cpu_client_comes_up() {
+            let rt = Runtime::cpu().expect("PJRT CPU client");
+            assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{LoadedKernel, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: build with `--features pjrt` (requires the `xla` crate)";
+
+    /// Stub of the compiled-artifact handle; never constructed.
+    pub struct LoadedKernel {
+        pub name: String,
+    }
+
+    /// Stub PJRT client: constructors fail with a clear message so the
+    /// CLI/bench/test callers degrade gracefully in offline builds.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<LoadedKernel> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+    }
+
+    impl LoadedKernel {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+
+        pub fn bench_f32(
+            &self,
+            _inputs: &[(&[f32], &[i64])],
+            _warmup: usize,
+            _iters: usize,
+        ) -> Result<f64> {
+            Err(anyhow::anyhow!(UNAVAILABLE))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedKernel, Runtime};
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
-    // (they are skipped when `make artifacts` has not run). Here we only
-    // check client creation, which needs no artifacts.
     #[test]
-    fn cpu_client_comes_up() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-    }
-
-    #[test]
-    fn artifacts_dir_env_override() {
+    fn artifacts_dir_is_never_empty() {
         // Note: test processes share env; use a unique var read.
         let d = artifacts_dir();
         assert!(!d.as_os_str().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
     }
 }

@@ -99,6 +99,19 @@ pub fn from_str(s: &str) -> anyhow::Result<Schedule> {
     from_json(&json::parse(s)?)
 }
 
+/// Canonical content hash of a schedule, used by the measurement cache
+/// (`crate::coordinator::cache`) to address (kernel, schedule) pairs.
+///
+/// Defined as FNV-1a over the canonical JSON serialization: the writer
+/// emits object keys in sorted order (`Json::Obj` is a `BTreeMap`) and
+/// integral numbers without a fractional part, so the byte string — and
+/// therefore the hash — is identical across processes, platforms, and
+/// save/load round-trips. Two schedules hash equal iff they are equal as
+/// structured records.
+pub fn canonical_hash(s: &Schedule) -> u64 {
+    crate::ir::workload::fnv1a(to_string(s).as_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +142,19 @@ mod tests {
     fn rejects_malformed() {
         assert!(from_str("{}").is_err());
         assert!(from_str("{\"class\":\"x\",\"skeleton\":\"Q\"}").is_err());
+    }
+
+    #[test]
+    fn canonical_hash_survives_roundtrip_and_separates_schedules() {
+        let k = KernelBuilder::dense(512, 768, 3072, &[]);
+        let mut s = Schedule::untuned_default(&k);
+        s.spatial[0] = AxisTiling::of(&[4, 2, 8]);
+        let h = canonical_hash(&s);
+        let back = from_str(&to_string(&s)).unwrap();
+        assert_eq!(h, canonical_hash(&back), "hash must survive JSON roundtrip");
+
+        let mut t = s.clone();
+        t.unroll_max += 1;
+        assert_ne!(h, canonical_hash(&t), "any field change must change the hash");
     }
 }

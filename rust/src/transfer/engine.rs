@@ -7,15 +7,28 @@
 //! Kernels whose class has no schedules in the store keep the untuned
 //! default (the paper's class-F-in-ResNet18 case).
 //!
+//! The sweep is organized by a [`SweepPlan`]: an owned, kernel-major job
+//! list built up front (no borrow juggling between candidate discovery
+//! and measurement), dispatched through the content-addressed
+//! measurement cache (`crate::coordinator::cache`). Identical pairs —
+//! the same schedule transferred onto same-class kernels of equal shape,
+//! ubiquitous in pooled stores — are measured **once**, and pairs
+//! resident in a caller-provided [`MeasureCache`] cost zero device
+//! seconds, so repeated sweeps amortize tuning the way the paper argues
+//! deployments should.
+//!
 //! The returned result carries everything the paper's figures need: the
 //! full pair matrix (Fig 4), the search-time ledger (Fig 5b/6b/8b), and
 //! the end-to-end times (Fig 5a/6a/8a).
 
 use super::store::ScheduleStore;
-use crate::coordinator::{measure_pairs, Ledger};
+use crate::coordinator::{
+    content_from_parts, content_key, measure_pairs_cached_precomputed, Ledger, MeasureCache,
+};
 use crate::device::{model_time, untuned_model_time, DeviceProfile};
-use crate::ir::ModelGraph;
-use crate::sched::{adapt_cross_class, Schedule};
+use crate::ir::{Kernel, ModelGraph};
+use crate::sched::{adapt_cross_class, serialize, Schedule};
+use std::collections::HashSet;
 
 /// Engine options. The defaults reproduce the paper's implementation;
 /// `cross_class` enables the §4.2 future-work extension (adapting
@@ -23,6 +36,90 @@ use crate::sched::{adapt_cross_class, Schedule};
 #[derive(Clone, Debug, Default)]
 pub struct TransferOptions {
     pub cross_class: bool,
+}
+
+/// One candidate evaluation: a store record's schedule (possibly
+/// cross-class adapted) applied to one target kernel. The schedule is
+/// owned, which is what lets the plan be built in a single pass.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    /// Unique-kernel index in the target graph.
+    pub kernel: usize,
+    /// Store record the schedule came from.
+    pub record: usize,
+    /// Whether the schedule is a cross-class adaptation of the record.
+    pub adapted: bool,
+    /// The exact schedule to measure.
+    pub schedule: Schedule,
+    /// Content key of (kernel, schedule) — each record's schedule is
+    /// hashed once at plan time and reused across every kernel it is
+    /// tried on.
+    pub content: u64,
+}
+
+/// The full standalone sweep for one transfer run: candidate jobs in
+/// kernel-major order plus the per-kernel untuned baselines. Built once,
+/// then dispatched through the cached executor, which dedups identical
+/// pairs before any device time is spent.
+#[derive(Clone, Debug, Default)]
+pub struct SweepPlan {
+    pub jobs: Vec<SweepJob>,
+    /// Per kernel: the half-open range of `jobs` belonging to it.
+    pub spans: Vec<std::ops::Range<usize>>,
+    /// Per kernel: the untuned default (measured too, for Fig 4's
+    /// baseline bars).
+    pub defaults: Vec<Schedule>,
+}
+
+impl SweepPlan {
+    /// Enumerate every compatible (kernel, record) pair — same-class
+    /// records always, anchor-compatible adaptations when `cross_class`
+    /// is on.
+    pub fn build(target: &ModelGraph, store: &ScheduleStore, options: &TransferOptions) -> SweepPlan {
+        let mut plan = SweepPlan::default();
+        // Canonical schedule hashes, computed once per store record no
+        // matter how many kernels each record is tried on.
+        let mut record_hash: Vec<Option<u64>> = vec![None; store.records.len()];
+        for (ki, kernel) in target.kernels.iter().enumerate() {
+            let sig = kernel.class_signature();
+            let start = plan.jobs.len();
+            for (ri, r) in store.records.iter().enumerate() {
+                if r.class_sig == sig {
+                    let sched_hash = *record_hash[ri]
+                        .get_or_insert_with(|| serialize::canonical_hash(&r.schedule));
+                    plan.jobs.push(SweepJob {
+                        kernel: ki,
+                        record: ri,
+                        adapted: false,
+                        schedule: r.schedule.clone(),
+                        content: content_from_parts(kernel.workload_id, sched_hash),
+                    });
+                } else if options.cross_class {
+                    if let Some(adapted) = adapt_cross_class(&r.schedule, kernel) {
+                        // Adapted schedules are kernel-specific; hash
+                        // each one directly.
+                        let content = content_key(kernel, &adapted);
+                        plan.jobs.push(SweepJob {
+                            kernel: ki,
+                            record: ri,
+                            adapted: true,
+                            schedule: adapted,
+                            content,
+                        });
+                    }
+                }
+            }
+            plan.spans.push(start..plan.jobs.len());
+            plan.defaults.push(Schedule::untuned_default(kernel));
+        }
+        plan
+    }
+
+    /// Total candidate pairs (the paper's "pairs evaluated" count; the
+    /// executor may measure fewer after dedup).
+    pub fn candidate_pairs(&self) -> usize {
+        self.jobs.len()
+    }
 }
 
 /// Evaluation of one kernel against every compatible store record.
@@ -51,7 +148,14 @@ pub struct TransferResult {
     /// for the pooled mode).
     pub source: String,
     pub sweeps: Vec<KernelSweep>,
+    /// Device seconds actually charged: cache hits are free, so with a
+    /// warm cache this can be far below `cold_ledger` (or exactly zero).
     pub ledger: Ledger,
+    /// Device seconds a standalone (cold-cache) run of this exact sweep
+    /// would charge. Independent of what ran before on a shared cache —
+    /// this is what the paper's search-time figures report, keeping
+    /// them deterministic in the seed regardless of sweep order.
+    pub cold_ledger: Ledger,
     /// End-to-end untuned baseline.
     pub untuned_model_s: f64,
     /// End-to-end time with the chosen schedules.
@@ -62,8 +166,18 @@ impl TransferResult {
     pub fn speedup(&self) -> f64 {
         self.untuned_model_s / self.tuned_model_s
     }
+    /// Amortized search time: what this run actually charged.
     pub fn search_time_s(&self) -> f64 {
         self.ledger.seconds
+    }
+    /// Standalone search time: what a cold run would have charged (the
+    /// reporting-stable quantity).
+    pub fn standalone_search_time_s(&self) -> f64 {
+        self.cold_ledger.seconds
+    }
+    /// Device seconds the measurement cache saved on this run.
+    pub fn amortized_saved_s(&self) -> f64 {
+        self.cold_ledger.seconds - self.ledger.seconds
     }
     pub fn pairs_evaluated(&self) -> usize {
         self.sweeps.iter().map(|s| s.outcomes.len()).sum()
@@ -91,7 +205,9 @@ pub fn transfer_tune(
     transfer_tune_with(target, store, profile, source_label, seed, &TransferOptions::default())
 }
 
-/// Full-control entry point (see [`TransferOptions`]).
+/// Full-control entry point (see [`TransferOptions`]). Uses a private
+/// per-call cache: identical pairs within the sweep are still measured
+/// once, but nothing persists across calls.
 pub fn transfer_tune_with(
     target: &ModelGraph,
     store: &ScheduleStore,
@@ -100,91 +216,105 @@ pub fn transfer_tune_with(
     seed: u64,
     options: &TransferOptions,
 ) -> TransferResult {
-    let mut ledger = Ledger::new();
+    transfer_tune_cached(target, store, profile, source_label, seed, options, &mut MeasureCache::new())
+}
 
-    // Build the full pair list: every kernel x every same-class record
-    // (plus, in cross-class mode, anchor-compatible records adapted onto
-    // the target class).
-    let mut adapted_pool: Vec<Schedule> = Vec::new(); // owns adapted schedules
-    let mut job_specs: Vec<(usize, usize, bool)> = Vec::new(); // (kernel, record, adapted)
-    let mut job_spans: Vec<(usize, Vec<usize>)> = Vec::new(); // kernel -> record indices
-    for (ki, kernel) in target.kernels.iter().enumerate() {
-        let sig = kernel.class_signature();
-        let mut record_idxs: Vec<usize> = Vec::new();
-        for (ri, r) in store.records.iter().enumerate() {
-            if r.class_sig == sig {
-                record_idxs.push(ri);
-                job_specs.push((ki, ri, false));
-            } else if options.cross_class {
-                if let Some(adapted) = adapt_cross_class(&r.schedule, kernel) {
-                    record_idxs.push(ri);
-                    adapted_pool.push(adapted);
-                    job_specs.push((ki, ri, true));
-                }
+/// Transfer-tune through a caller-owned [`MeasureCache`].
+///
+/// Pairs resident in the cache are served for zero ledger seconds, and
+/// outcomes are bit-identical to a cache-off run at the same seed (the
+/// cache-transparency invariant — see `crate::coordinator::cache`), so
+/// sharing one cache across pooled-store and pairwise sweeps changes
+/// only what the search costs, never what it finds.
+pub fn transfer_tune_cached(
+    target: &ModelGraph,
+    store: &ScheduleStore,
+    profile: &DeviceProfile,
+    source_label: &str,
+    seed: u64,
+    options: &TransferOptions,
+    cache: &mut MeasureCache,
+) -> TransferResult {
+    let mut ledger = Ledger::new();
+    let plan = SweepPlan::build(target, store, options);
+
+    // Dispatch the candidate sweep and the untuned baselines through the
+    // cached executor: dedup first, then parallel measurement of unique
+    // misses, ledger charged per miss (sequential device semantics).
+    let candidate_jobs: Vec<(&Kernel, &Schedule)> =
+        plan.jobs.iter().map(|j| (&target.kernels[j.kernel], &j.schedule)).collect();
+    let candidate_contents: Vec<u64> = plan.jobs.iter().map(|j| j.content).collect();
+    let candidates = measure_pairs_cached_precomputed(
+        &candidate_jobs,
+        &candidate_contents,
+        profile,
+        seed,
+        cache,
+        &mut ledger,
+    );
+
+    let default_jobs: Vec<(&Kernel, &Schedule)> =
+        target.kernels.iter().zip(&plan.defaults).collect();
+    let default_contents: Vec<u64> =
+        default_jobs.iter().map(|&(k, d)| content_key(k, d)).collect();
+    let defaults_batch = measure_pairs_cached_precomputed(
+        &default_jobs,
+        &default_contents,
+        profile,
+        seed,
+        cache,
+        &mut ledger,
+    );
+
+    // Cold-equivalent accounting: charge the first occurrence of every
+    // unique pair, in the order a fresh-cache run would have measured
+    // them. This reproduces a standalone run's ledger exactly (same
+    // charges, same f64 summation order), so reported search times do
+    // not depend on what previously warmed a shared cache.
+    let mut cold_ledger = Ledger::new();
+    let mut cold_seen: HashSet<u64> = HashSet::new();
+    let charged_pairs = candidates
+        .keys
+        .iter()
+        .zip(&candidates.outcomes)
+        .chain(defaults_batch.keys.iter().zip(&defaults_batch.outcomes));
+    for (key, outcome) in charged_pairs {
+        if cold_seen.insert(*key) {
+            match outcome.runtime() {
+                Some(t) => cold_ledger.charge_measure(profile, t),
+                None => cold_ledger.charge_compile_fail(profile),
             }
         }
-        job_spans.push((ki, record_idxs));
     }
-    // Second pass to borrow stable schedule refs.
-    let mut jobs: Vec<(&crate::ir::Kernel, &Schedule)> = Vec::with_capacity(job_specs.len());
-    let mut adapted_cursor = 0usize;
-    for &(ki, ri, is_adapted) in &job_specs {
-        let sched: &Schedule = if is_adapted {
-            let s = &adapted_pool[adapted_cursor];
-            adapted_cursor += 1;
-            s
-        } else {
-            &store.records[ri].schedule
-        };
-        jobs.push((&target.kernels[ki], sched));
-    }
+    let outcomes = candidates.outcomes;
+    let default_outcomes = defaults_batch.outcomes;
 
-    // Standalone baseline (untuned default) per kernel — measured too,
-    // as the paper does for its Fig 4 "untuned" bars.
-    let defaults: Vec<Schedule> = target.kernels.iter().map(Schedule::untuned_default).collect();
-    let default_jobs: Vec<(&crate::ir::Kernel, &Schedule)> =
-        target.kernels.iter().zip(&defaults).collect();
-
-    let outcomes = measure_pairs(&jobs, profile, seed);
-    let default_outcomes = measure_pairs(&default_jobs, profile, seed ^ 0xDEF0);
-
-    // Charge device time in job order (sequential device semantics).
-    for o in outcomes.iter().chain(default_outcomes.iter()) {
-        match o.runtime() {
-            Some(t) => ledger.charge_measure(profile, t),
-            None => ledger.charge_compile_fail(profile),
-        }
-    }
-
-    // Per-kernel selection.
+    // Per-kernel selection by *standalone* time (paper §5.5 explains
+    // both TT and Ansor assume kernel independence here).
     let mut sweeps: Vec<KernelSweep> = Vec::with_capacity(target.kernels.len());
-    let mut cursor = 0usize;
-    for (ki, record_idxs) in job_spans {
+    for (ki, span) in plan.spans.iter().enumerate() {
         let untuned_s = default_outcomes[ki]
             .runtime()
             .expect("default schedule always applies");
         let mut sweep = KernelSweep {
             kernel: ki,
-            outcomes: Vec::with_capacity(record_idxs.len()),
+            outcomes: Vec::with_capacity(span.len()),
             untuned_s,
             chosen: None,
             chosen_s: untuned_s,
             chosen_schedule: None,
         };
-        for ri in record_idxs {
-            let rt = outcomes[cursor].runtime();
-            let sched = jobs[cursor].1;
-            cursor += 1;
-            sweep.outcomes.push((ri, rt));
+        for ji in span.clone() {
+            let job = &plan.jobs[ji];
+            let rt = outcomes[ji].runtime();
+            sweep.outcomes.push((job.record, rt));
             if let Some(t) = rt {
-                // Selection is by *standalone* time (paper §5.5 explains
-                // both TT and Ansor assume kernel independence here).
                 if t < sweep.chosen_s {
                     sweep.chosen_s = t;
-                    sweep.chosen = Some(ri);
+                    sweep.chosen = Some(job.record);
                     // Keep the schedule actually measured (which may be a
                     // cross-class *adapted* variant of the record).
-                    sweep.chosen_schedule = Some(sched.clone());
+                    sweep.chosen_schedule = Some(job.schedule.clone());
                 }
             }
         }
@@ -195,7 +325,7 @@ pub fn transfer_tune_with(
     // (deterministic, with inter-kernel boundary effects).
     let tuned_model_s = model_time(target, profile, |k| match &sweeps[k].chosen_schedule {
         Some(s) => s.clone(),
-        None => defaults[k].clone(),
+        None => plan.defaults[k].clone(),
     });
     let untuned_model_s = untuned_model_time(target, profile);
 
@@ -204,6 +334,7 @@ pub fn transfer_tune_with(
         source: source_label.to_string(),
         sweeps,
         ledger,
+        cold_ledger,
         untuned_model_s,
         tuned_model_s,
     }
@@ -264,6 +395,30 @@ mod tests {
     }
 
     #[test]
+    fn sweep_plan_enumerates_kernel_major_spans() {
+        let (_, tgt, store) = dense_setup();
+        let plan = SweepPlan::build(&tgt, &store, &TransferOptions::default());
+        assert_eq!(plan.candidate_pairs(), 4);
+        assert_eq!(plan.spans, vec![0..2, 2..4]);
+        assert_eq!(plan.defaults.len(), 2);
+        for (ki, span) in plan.spans.iter().enumerate() {
+            for ji in span.clone() {
+                assert_eq!(plan.jobs[ji].kernel, ki);
+                assert!(!plan.jobs[ji].adapted);
+            }
+        }
+        // The per-record hash memoization must agree with hashing each
+        // pair from scratch.
+        for job in &plan.jobs {
+            assert_eq!(
+                job.content,
+                content_key(&tgt.kernels[job.kernel], &job.schedule),
+                "memoized content key drifted"
+            );
+        }
+    }
+
+    #[test]
     fn no_compatible_class_keeps_default() {
         let prof = DeviceProfile::xeon_e5_2620();
         let (_, _, store) = dense_setup();
@@ -275,14 +430,42 @@ mod tests {
         assert!((res.speedup() - 1.0).abs() < 0.05);
     }
 
+    /// Duplicated records are the common case in pooled stores (Fig 8).
+    /// The plan dedups them before dispatch: the pair matrix doubles but
+    /// the device pays nothing extra. (This replaces the pre-cache
+    /// assertion that more records always cost more search time — that
+    /// is exactly the waste the measurement cache exists to remove.)
     #[test]
-    fn search_time_scales_with_pairs() {
+    fn duplicate_records_cost_no_extra_search_time() {
         let prof = DeviceProfile::xeon_e5_2620();
         let (_, tgt, store) = dense_setup();
-        let small = transfer_tune(&tgt, &store.of_model("Source"), &prof, "Source", 3);
+        let single = transfer_tune(&tgt, &store, &prof, "Source", 3);
         let mut doubled = store.clone();
         doubled.merge(&store);
-        let large = transfer_tune(&tgt, &doubled, &prof, "mixed", 3);
+        let merged = transfer_tune(&tgt, &doubled, &prof, "mixed", 3);
+        assert_eq!(merged.pairs_evaluated(), 2 * single.pairs_evaluated());
+        assert_eq!(
+            merged.search_time_s(),
+            single.search_time_s(),
+            "identical pairs must be measured once"
+        );
+        assert_eq!(merged.tuned_model_s, single.tuned_model_s);
+    }
+
+    #[test]
+    fn search_time_scales_with_distinct_pairs() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let small = transfer_tune(&tgt, &store, &prof, "Source", 3);
+        // Grow the store with *distinct* schedules (different unroll
+        // budgets keep them applicable but content-distinct).
+        let mut grown = store.clone();
+        let mut extra = store.clone();
+        for r in &mut extra.records {
+            r.schedule.unroll_max = r.schedule.unroll_max.wrapping_add(3);
+        }
+        grown.merge(&extra);
+        let large = transfer_tune(&tgt, &grown, &prof, "mixed", 3);
         assert!(large.pairs_evaluated() > small.pairs_evaluated());
         assert!(large.search_time_s() > small.search_time_s());
     }
@@ -305,6 +488,32 @@ mod tests {
         let b = transfer_tune(&tgt, &store, &prof, "Source", 3);
         assert_eq!(a.tuned_model_s, b.tuned_model_s);
         assert_eq!(a.ledger.seconds, b.ledger.seconds);
+    }
+
+    #[test]
+    fn warm_cache_is_transparent_and_free() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let off = transfer_tune(&tgt, &store, &prof, "Source", 3);
+
+        let mut cache = crate::coordinator::MeasureCache::new();
+        let opts = TransferOptions::default();
+        let cold =
+            transfer_tune_cached(&tgt, &store, &prof, "Source", 3, &opts, &mut cache);
+        assert_eq!(cold.tuned_model_s, off.tuned_model_s, "cache-on == cache-off");
+        assert_eq!(cold.ledger.seconds, off.ledger.seconds);
+
+        let warm =
+            transfer_tune_cached(&tgt, &store, &prof, "Source", 3, &opts, &mut cache);
+        assert_eq!(warm.tuned_model_s, off.tuned_model_s, "warm == cold bit-for-bit");
+        assert_eq!(warm.ledger.seconds, 0.0, "every pair is a hit");
+        assert_eq!(warm.ledger.measurements, 0);
+        // The standalone (cold-equivalent) search time is reporting-
+        // stable: identical whether the cache was warm or cold, and
+        // equal to what the run actually charged when cold.
+        assert_eq!(warm.standalone_search_time_s(), cold.standalone_search_time_s());
+        assert_eq!(cold.standalone_search_time_s(), cold.search_time_s());
+        assert_eq!(warm.amortized_saved_s(), warm.standalone_search_time_s());
     }
 
     #[test]
@@ -358,12 +567,13 @@ mod cross_class_tests {
             assert!(plain.sweeps[fk].outcomes.is_empty());
             assert!(!cross.sweeps[fk].outcomes.is_empty(), "F kernel {fk} uncovered");
         }
-        // More candidates means search costs more; per-kernel picks stay
-        // comparable (exact equality is broken by per-job measurement
-        // noise, so allow the noise envelope).
+        // More candidates means search costs more; and because pair
+        // noise is content-derived, the shared same-class candidates
+        // measure identically in both runs, so a superset of candidates
+        // can only improve (or tie) each kernel's pick.
         assert!(cross.pairs_evaluated() > plain.pairs_evaluated());
         for (a, b) in cross.sweeps.iter().zip(&plain.sweeps) {
-            assert!(a.chosen_s <= b.chosen_s * 1.2 + 1e-12);
+            assert!(a.chosen_s <= b.chosen_s + 1e-12);
         }
     }
 

@@ -1,0 +1,109 @@
+//! Golden-file tests for the serialization formats the measurement
+//! cache depends on.
+//!
+//! The cache addresses entries by FNV-1a over canonical byte strings
+//! (schedule JSON with sorted keys; workload ids), so *any* drift in the
+//! serialization format silently invalidates every persisted cache and
+//! breaks cross-process key determinism. The fixtures under
+//! `rust/tests/golden/` pin the exact bytes and hashes; if an
+//! intentional format change lands, regenerate the fixtures and bump the
+//! cache's `version` field in the same commit.
+
+use std::path::PathBuf;
+use transfer_tuning::coordinator::{content_key, profile_key, sweep_key, MeasureCache};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::KernelBuilder;
+use transfer_tuning::sched::serialize;
+use transfer_tuning::util::json;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+#[test]
+fn schedule_canonical_hashes_match_golden() {
+    let text = std::fs::read_to_string(golden_dir().join("schedule_cache.jsonl")).unwrap();
+    let kernel = KernelBuilder::dense(512, 512, 512, &[]);
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let mut checked = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = json::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", lineno + 1));
+        assert_eq!(j.get("kernel").and_then(|v| v.as_str()), Some("dense512"));
+        let sched = serialize::from_json(j.get("schedule").expect("schedule field"))
+            .unwrap_or_else(|e| panic!("line {}: {e}", lineno + 1));
+
+        // Schedule -> JSON -> Schedule preserves the canonical hash...
+        let reparsed = serialize::from_str(&serialize::to_string(&sched)).unwrap();
+        assert_eq!(serialize::canonical_hash(&sched), serialize::canonical_hash(&reparsed));
+
+        // ...and every hash matches the pinned cross-process value.
+        assert_eq!(
+            hex(serialize::canonical_hash(&sched)),
+            j.get("canonical_hash").and_then(|v| v.as_str()).unwrap(),
+            "line {}: canonical schedule serialization drifted",
+            lineno + 1
+        );
+        let content = content_key(&kernel, &sched);
+        assert_eq!(
+            hex(content),
+            j.get("content_key").and_then(|v| v.as_str()).unwrap(),
+            "line {}: pair content key drifted",
+            lineno + 1
+        );
+        assert_eq!(
+            hex(sweep_key(content, 0xA45, &xeon)),
+            j.get("sweep_key_a45_xeon").and_then(|v| v.as_str()).unwrap(),
+            "line {}: seeded+device cache key drifted",
+            lineno + 1
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 2, "fixture should pin two schedules");
+    // The device identity hash itself is part of the stable format.
+    assert_eq!(hex(profile_key(&xeon)), "94e520b6b464750d");
+}
+
+#[test]
+fn measure_cache_disk_format_is_stable() {
+    let path = golden_dir().join("measure_cache.json");
+    let fixture = std::fs::read_to_string(&path).unwrap();
+    let cache = MeasureCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 3);
+    assert_eq!(cache.peek(0x009dffc4c6fbcf4c), Some(Some(0.001)));
+    assert_eq!(cache.peek(0x1f5d9854e947d823), Some(None), "invalid pairs persist as null");
+    assert_eq!(cache.peek(0x939f0194fb6a2586), Some(Some(0.25)));
+
+    // Load -> save round-trip is byte-identical (keys, order, numbers).
+    let tmp = std::env::temp_dir().join("tt_golden_cache_roundtrip.json");
+    cache.save(&tmp).unwrap();
+    let saved = std::fs::read_to_string(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    assert_eq!(saved, fixture, "cache disk format drifted");
+}
+
+#[test]
+fn cache_roundtrip_preserves_canonical_pair_keys() {
+    // End to end: key a real (kernel, schedule) pair, persist the cache,
+    // reload, and look the pair up again through freshly recomputed keys.
+    let kernel = KernelBuilder::dense(512, 512, 512, &[]);
+    let sched = transfer_tuning::sched::Schedule::untuned_default(&kernel);
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let key = sweep_key(content_key(&kernel, &sched), 7, &xeon);
+
+    let mut cache = MeasureCache::new();
+    cache.insert(key, Some(4.25e-3));
+    let tmp = std::env::temp_dir().join("tt_golden_cache_keys.json");
+    cache.save(&tmp).unwrap();
+    let back = MeasureCache::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+
+    let rekeyed = sweep_key(content_key(&kernel, &sched), 7, &xeon);
+    assert_eq!(back.peek(rekeyed), Some(Some(4.25e-3)));
+}

@@ -1,0 +1,193 @@
+//! Property tests for the content-addressed measurement cache
+//! (hand-rolled; the offline environment has no proptest): key
+//! determinism across serialization round-trips and independently
+//! constructed values, collision-freeness over a randomized schedule
+//! corpus, and the cache-transparency invariant — cache-on and
+//! cache-off sweeps produce bit-identical results.
+
+use std::collections::HashSet;
+use transfer_tuning::autosched::random_schedule;
+use transfer_tuning::coordinator::{content_key, pair_key, sweep_key, MeasureCache};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{Kernel, KernelBuilder, OpKind};
+use transfer_tuning::sched::serialize;
+use transfer_tuning::transfer::{
+    transfer_tune, transfer_tune_cached, ScheduleStore, StoreRecord, TransferOptions,
+};
+use transfer_tuning::util::rng::Rng;
+
+const CASES: usize = 300;
+
+/// Kernels spanning every anchor kind and a range of shapes.
+fn kernel_pool(rng: &mut Rng) -> Vec<Kernel> {
+    let mut pool = Vec::new();
+    for _ in 0..6 {
+        let c = 1u64 << rng.range(4, 8); // 16..256
+        let hw = *rng.choose(&[14u64, 28, 56]);
+        pool.push(KernelBuilder::conv2d(1, c, hw, hw, c, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]));
+        pool.push(KernelBuilder::dense(1 << rng.range(5, 10), 1 << rng.range(6, 10), 1 << rng.range(6, 10), &[]));
+        pool.push(KernelBuilder::depthwise_conv2d(1, c, hw, hw, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu6]));
+        pool.push(KernelBuilder::batch_matmul(12, 256, 64, 256, &[]));
+    }
+    pool
+}
+
+#[test]
+fn prop_keys_deterministic_across_roundtrip_and_reconstruction() {
+    let mut rng = Rng::new(0xCAC4E);
+    let pool = kernel_pool(&mut rng);
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let edge = DeviceProfile::cortex_a72();
+    for i in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        // Same key after a JSON round-trip of the schedule...
+        let back = serialize::from_str(&serialize::to_string(&s)).unwrap();
+        assert_eq!(content_key(k, &s), content_key(k, &back), "case {i}");
+        // ...and for an independently reconstructed identical kernel
+        // (content addressing, never identity/position).
+        let k2 = k.clone();
+        assert_eq!(content_key(k, &s), content_key(&k2, &s), "case {i}");
+        // Seeds and devices fan out into distinct key spaces.
+        assert_ne!(pair_key(k, &s, 1, &xeon), pair_key(k, &s, 2, &xeon), "case {i}");
+        assert_ne!(pair_key(k, &s, 1, &xeon), pair_key(k, &s, 1, &edge), "case {i}");
+    }
+}
+
+#[test]
+fn prop_no_collisions_across_distinct_schedule_corpus() {
+    let mut rng = Rng::new(0x5EED5);
+    let pool = kernel_pool(&mut rng);
+    // Distinct canonical serializations must map to distinct hashes; a
+    // collision anywhere in a ~1.5k corpus would make the cache silently
+    // return the wrong measurement.
+    let mut canon: HashSet<String> = HashSet::new();
+    let mut hashes: HashSet<u64> = HashSet::new();
+    let mut contents: HashSet<(u64, u64)> = HashSet::new(); // (workload, content)
+    for _ in 0..(5 * CASES) {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        canon.insert(serialize::to_string(&s));
+        hashes.insert(serialize::canonical_hash(&s));
+        contents.insert((k.workload_id, content_key(k, &s)));
+    }
+    assert!(canon.len() > CASES, "corpus too degenerate to be meaningful");
+    assert_eq!(canon.len(), hashes.len(), "canonical-hash collision");
+    // Every distinct (kernel, schedule-hash) combination must also get a
+    // distinct pair content key.
+    let distinct_pairs: HashSet<(u64, u64)> = contents.iter().copied().collect();
+    let distinct_content: HashSet<u64> = contents.iter().map(|&(_, c)| c).collect();
+    assert_eq!(distinct_pairs.len(), distinct_content.len(), "content-key collision");
+}
+
+#[test]
+fn prop_seeded_keys_do_not_collide_across_seeds_or_devices() {
+    let mut rng = Rng::new(0xABCDE);
+    let pool = kernel_pool(&mut rng);
+    let profiles = [DeviceProfile::xeon_e5_2620(), DeviceProfile::cortex_a72()];
+    let mut keys: HashSet<u64> = HashSet::new();
+    let mut n = 0usize;
+    for _ in 0..CASES {
+        let k = rng.choose(&pool);
+        let s = random_schedule(k, &mut rng);
+        let c = content_key(k, &s);
+        for seed in [0u64, 1, 0xA45, u64::MAX] {
+            for p in &profiles {
+                keys.insert(sweep_key(c, seed, p));
+                n += 1;
+            }
+        }
+    }
+    assert_eq!(keys.len(), n, "seeded/device cache-key collision");
+}
+
+/// A schedule store built from random same-class schedules — no tuning
+/// run needed, and some records will be invalid on some targets, which
+/// exercises the invalid-pair caching path too.
+fn random_dense_store(rng: &mut Rng, n: usize) -> ScheduleStore {
+    let sources = [
+        KernelBuilder::dense(512, 512, 512, &[]),
+        KernelBuilder::dense(1024, 768, 512, &[]),
+        KernelBuilder::dense(256, 1024, 2048, &[]),
+    ];
+    let mut store = ScheduleStore::new();
+    for i in 0..n {
+        let k = &sources[i % sources.len()];
+        store.records.push(StoreRecord {
+            source_model: format!("Src{}", i % 2),
+            class_sig: k.class_signature(),
+            source_input_shape: k.input_shape.clone(),
+            source_cost_s: 1e-3,
+            schedule: random_schedule(k, rng),
+        });
+    }
+    store
+}
+
+#[test]
+fn prop_cache_on_and_off_produce_bit_identical_results() {
+    let prof = DeviceProfile::xeon_e5_2620();
+    let mut rng = Rng::new(0x1DE17);
+    let mut tgt = transfer_tuning::ir::ModelGraph::new("Target");
+    tgt.push(KernelBuilder::dense(768, 768, 768, &[]));
+    tgt.push(KernelBuilder::dense(256, 256, 256, &[]));
+    tgt.push(KernelBuilder::dense(64, 64, 64, &[])); // small: provokes invalids
+    let opts = TransferOptions::default();
+
+    for round in 0..8 {
+        let store = random_dense_store(&mut rng, 12);
+        let seed = 100 + round as u64;
+
+        let off = transfer_tune(&tgt, &store, &prof, "mixed", seed);
+
+        let mut cache = MeasureCache::new();
+        let cold = transfer_tune_cached(&tgt, &store, &prof, "mixed", seed, &opts, &mut cache);
+        let warm = transfer_tune_cached(&tgt, &store, &prof, "mixed", seed, &opts, &mut cache);
+
+        // Bit-identical end-to-end times (f64::to_bits, not approx).
+        assert_eq!(
+            off.tuned_model_s.to_bits(),
+            cold.tuned_model_s.to_bits(),
+            "round {round}: cold cache changed the result"
+        );
+        assert_eq!(
+            off.tuned_model_s.to_bits(),
+            warm.tuned_model_s.to_bits(),
+            "round {round}: warm cache changed the result"
+        );
+        // Identical pair matrices, entry by entry.
+        for (a, b) in off.sweeps.iter().zip(&warm.sweeps) {
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for ((ra, ta), (rb, tb)) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(ra, rb, "round {round}");
+                assert_eq!(ta.map(f64::to_bits), tb.map(f64::to_bits), "round {round}");
+            }
+            assert_eq!(a.chosen, b.chosen, "round {round}");
+        }
+        // And the warm run was free.
+        assert_eq!(warm.ledger.seconds, 0.0, "round {round}");
+        assert!(cold.ledger.seconds > 0.0, "round {round}");
+    }
+}
+
+#[test]
+fn prop_bounded_cache_stays_within_capacity_and_correct() {
+    let prof = DeviceProfile::xeon_e5_2620();
+    let mut rng = Rng::new(0xB0B);
+    let mut tgt = transfer_tuning::ir::ModelGraph::new("Target");
+    tgt.push(KernelBuilder::dense(768, 768, 768, &[]));
+    tgt.push(KernelBuilder::dense(256, 256, 256, &[]));
+    let store = random_dense_store(&mut rng, 16);
+    let opts = TransferOptions::default();
+
+    let off = transfer_tune(&tgt, &store, &prof, "mixed", 9);
+    // Capacity far below the sweep's working set: constant churn, but
+    // transparency must hold regardless.
+    let mut cache = MeasureCache::with_capacity(4);
+    let a = transfer_tune_cached(&tgt, &store, &prof, "mixed", 9, &opts, &mut cache);
+    let b = transfer_tune_cached(&tgt, &store, &prof, "mixed", 9, &opts, &mut cache);
+    assert!(cache.len() <= 4);
+    assert!(cache.stats.evictions > 0, "capacity 4 must evict on this sweep");
+    assert_eq!(off.tuned_model_s.to_bits(), a.tuned_model_s.to_bits());
+    assert_eq!(off.tuned_model_s.to_bits(), b.tuned_model_s.to_bits());
+}

@@ -6,8 +6,10 @@
 use transfer_tuning::runtime::{artifacts_dir, Runtime};
 use transfer_tuning::util::rng::Rng;
 
-fn have_artifacts() -> bool {
-    artifacts_dir().join("manifest.json").exists()
+fn runtime_ready() -> bool {
+    // Both conditions matter: without the `pjrt` feature the stub
+    // Runtime errors on construction even when artifacts exist.
+    transfer_tuning::runtime::AVAILABLE && artifacts_dir().join("manifest.json").exists()
 }
 
 fn random_buf(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -29,8 +31,8 @@ fn matmul_oracle(x: &[f32], w: &[f32], n: usize) -> Vec<f32> {
 
 #[test]
 fn gemm512_artifacts_match_oracle() {
-    if !have_artifacts() {
-        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+    if !runtime_ready() {
+        eprintln!("skipped: build with --features pjrt and run `make artifacts` to enable runtime tests");
         return;
     }
     let rt = Runtime::cpu().unwrap();
@@ -60,8 +62,8 @@ fn gemm512_artifacts_match_oracle() {
 fn schedule_variants_compute_identical_results() {
     // The paper's core premise (§2): schedules change performance, never
     // semantics. native vs transferred artifacts must agree bitwise-ish.
-    if !have_artifacts() {
-        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+    if !runtime_ready() {
+        eprintln!("skipped: build with --features pjrt and run `make artifacts` to enable runtime tests");
         return;
     }
     let rt = Runtime::cpu().unwrap();
@@ -92,8 +94,8 @@ fn schedule_variants_compute_identical_results() {
 
 #[test]
 fn model_artifacts_serve_requests() {
-    if !have_artifacts() {
-        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+    if !runtime_ready() {
+        eprintln!("skipped: build with --features pjrt and run `make artifacts` to enable runtime tests");
         return;
     }
     let rt = Runtime::cpu().unwrap();
@@ -127,8 +129,8 @@ fn model_artifacts_serve_requests() {
 
 #[test]
 fn softmax_artifact_rows_sum_to_one() {
-    if !have_artifacts() {
-        eprintln!("skipped: run `make artifacts` to enable runtime tests");
+    if !runtime_ready() {
+        eprintln!("skipped: build with --features pjrt and run `make artifacts` to enable runtime tests");
         return;
     }
     let path = artifacts_dir().join("softmax_bert.hlo.txt");

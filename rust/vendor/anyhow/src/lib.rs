@@ -1,0 +1,178 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! implements exactly the subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, and the [`Context`] extension trait for `Result` and
+//! `Option`. Semantics match anyhow where it matters here: any
+//! `std::error::Error` converts into [`Error`] via `?`, and `context`
+//! prepends a message (`"context: cause"` in `Display`).
+
+use std::fmt;
+
+/// A string-backed error value. Unlike real anyhow there is no backtrace
+/// capture and no downcasting — nothing in this workspace uses either.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what keeps the blanket conversion below coherent (same design
+// as real anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error { msg: err.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`: attach context to the error of a `Result`, or turn
+/// an `Option::None` into an error.
+///
+/// The `Result` impl is bounded by `E: Into<Error>`, which covers both
+/// real `std::error::Error` values (via the blanket `From` above) and
+/// `Error` itself (via the reflexive `From<T> for T`) with one impl.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/real/path")?)
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let err = io_fail().context("loading config").unwrap_err();
+        assert!(err.to_string().starts_with("loading config: "));
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(err.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn context_chains_on_error_results() {
+        let base: Result<()> = Err(anyhow!("inner {}", 7));
+        let err = base.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}
