@@ -1,0 +1,104 @@
+//! Bench: cold vs warm `Zoo::build` through the persistent artifact
+//! store — the end-to-end payoff of `--cache-dir`.
+//!
+//! Three regimes of the same zoo build (one zoo = 11 Ansor tunings):
+//!
+//!   cold     — empty artifact dir: every model is tuned, artifacts
+//!              written;
+//!   warm     — same dir, fresh store handle (process-equivalent
+//!              restart): every tuning is loaded, zero trials run;
+//!   warm+rep — warm build plus a pooled report sweep served entirely
+//!              from the persisted measurement cache.
+//!
+//! Reported per regime: host wall-clock, trials run, simulated tuning
+//! device-seconds charged, and artifact hits/misses — printed next to
+//! the `cache_sweep` numbers (same plain-main harness; the environment
+//! has no criterion).
+
+use std::time::Instant;
+use transfer_tuning::artifact::ArtifactStore;
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::util::table::Table;
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let config =
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() };
+    let dir = std::env::temp_dir().join("tt_bench_zoo_warm_start");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut table = Table::new(
+        "Zoo build: cold vs warm through the artifact store",
+        &["Regime", "Host s", "Models tuned", "Trials run", "Tuning device s", "Artifact hits"],
+    );
+
+    // ---- cold ----------------------------------------------------------
+    let mut artifacts = ArtifactStore::open(&dir).expect("open artifact dir");
+    let t0 = Instant::now();
+    let cold_zoo = Zoo::build_incremental(config.clone(), Some(&mut artifacts), |_| {});
+    let cold_host = t0.elapsed().as_secs_f64();
+    // Warm the measurement cache with a pooled sweep, then persist.
+    let target = cold_zoo.models[cold_zoo.model_index("ResNet18").expect("ResNet18")].clone();
+    let cold_sweep = cold_zoo.transfer_pooled(&target);
+    cold_zoo.persist(&mut artifacts).expect("persist zoo artifacts");
+    table.row(vec![
+        "cold".into(),
+        format!("{cold_host:.2}"),
+        cold_zoo.build_stats.models_tuned.to_string(),
+        cold_zoo.build_stats.trials_run.to_string(),
+        format!("{:.1}", cold_zoo.build_stats.tuning_seconds_charged),
+        artifacts.stats.hits.to_string(),
+    ]);
+    drop(cold_zoo);
+    drop(artifacts);
+
+    // ---- warm (fresh handle = process restart) -------------------------
+    let mut artifacts = ArtifactStore::open(&dir).expect("reopen artifact dir");
+    let t1 = Instant::now();
+    let warm_zoo = Zoo::build_incremental(config, Some(&mut artifacts), |_| {});
+    let warm_host = t1.elapsed().as_secs_f64();
+    table.row(vec![
+        "warm".into(),
+        format!("{warm_host:.2}"),
+        warm_zoo.build_stats.models_tuned.to_string(),
+        warm_zoo.build_stats.trials_run.to_string(),
+        format!("{:.1}", warm_zoo.build_stats.tuning_seconds_charged),
+        artifacts.stats.hits.to_string(),
+    ]);
+
+    // ---- warm + report sweep off the persisted measurement cache ------
+    let t2 = Instant::now();
+    let warm_sweep = warm_zoo.transfer_pooled(&target);
+    let sweep_host = t2.elapsed().as_secs_f64();
+    table.row(vec![
+        "warm+rep".into(),
+        format!("{:.2}", warm_host + sweep_host),
+        "0".into(),
+        "0".into(),
+        format!("{:.1}", warm_sweep.search_time_s()),
+        artifacts.stats.hits.to_string(),
+    ]);
+
+    print!("{}", table.render());
+    println!(
+        "[bench zoo_warm_start] host speedup: {:.1}x (cold {:.2}s -> warm {:.2}s); \
+         warm sweep charged {:.1}s vs cold {:.1}s",
+        cold_host / warm_host.max(1e-9),
+        cold_host,
+        warm_host,
+        warm_sweep.search_time_s(),
+        cold_sweep.search_time_s(),
+    );
+
+    assert_eq!(warm_zoo.build_stats.trials_run, 0, "warm build must run zero trials");
+    assert_eq!(warm_zoo.build_stats.models_tuned, 0);
+    assert_eq!(warm_sweep.search_time_s(), 0.0, "warm sweep must be free");
+    assert_eq!(
+        warm_sweep.tuned_model_s.to_bits(),
+        cold_sweep.tuned_model_s.to_bits(),
+        "warm results must be bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

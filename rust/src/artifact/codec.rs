@@ -1,0 +1,171 @@
+//! JSON codec for [`TuningResult`] — the per-model tuning artifact.
+//!
+//! Ansor's own workflow persists tuning *logs* and replays them to skip
+//! re-search; the artifact store persists the distilled result instead
+//! (best schedule + deterministic cost per kernel, plus the search
+//! trajectory the paper's Fig 1/5 comparisons need). Every f64 is
+//! written with Rust's shortest-round-trip formatting and every
+//! schedule through the canonical serializer, so a load returns a
+//! result whose downstream numbers are **bit-identical** to the run
+//! that produced it — the warm-start invariant of `crate::artifact`.
+
+use crate::autosched::{HistoryPoint, KernelBest, TuningResult};
+use crate::sched::serialize;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Codec version of the tuning-artifact JSON (independent of the
+/// store-level manifest version; bump on any schema change here).
+pub const TUNING_CODEC_VERSION: u64 = 1;
+
+pub fn tuning_to_json(res: &TuningResult) -> Json {
+    // HashMap iteration order is process-random; emit kernels sorted so
+    // the artifact bytes are canonical.
+    let mut kernels: Vec<usize> = res.best.keys().copied().collect();
+    kernels.sort_unstable();
+    let best = kernels.into_iter().map(|k| {
+        let b = &res.best[&k];
+        Json::obj(vec![
+            ("kernel", Json::num(k as f64)),
+            ("cost_s", Json::num(b.cost_s)),
+            ("schedule", serialize::to_json(&b.schedule)),
+        ])
+    });
+    let history = res.history.iter().map(|h| {
+        Json::obj(vec![
+            ("trials", Json::num(h.trials as f64)),
+            ("search_time_s", Json::num(h.search_time_s)),
+            ("model_time_s", Json::num(h.model_time_s)),
+        ])
+    });
+    Json::obj(vec![
+        ("version", Json::num(TUNING_CODEC_VERSION as f64)),
+        ("model", Json::str(&res.model)),
+        ("trials_used", Json::num(res.trials_used as f64)),
+        ("search_time_s", Json::num(res.search_time_s)),
+        ("best", Json::arr(best)),
+        ("history", Json::arr(history)),
+    ])
+}
+
+pub fn tuning_from_json(j: &Json) -> anyhow::Result<TuningResult> {
+    let version = j.req("version")?.as_f64().unwrap_or(0.0) as u64;
+    anyhow::ensure!(
+        version == TUNING_CODEC_VERSION,
+        "unsupported tuning-artifact version {version}"
+    );
+    let mut best: HashMap<usize, KernelBest> = HashMap::new();
+    for (i, e) in j.req("best")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+        let kernel = e
+            .req("kernel")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("best[{i}]: kernel must be a number"))?;
+        let cost_s = e
+            .req("cost_s")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("best[{i}]: cost_s must be a number"))?;
+        let schedule = serialize::from_json(e.req("schedule")?)?;
+        best.insert(kernel, KernelBest { schedule, cost_s });
+    }
+    let mut history = Vec::new();
+    for (i, e) in j.req("history")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+        history.push(HistoryPoint {
+            trials: e
+                .req("trials")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("history[{i}]: trials must be a number"))?,
+            search_time_s: e
+                .req("search_time_s")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("history[{i}]: bad search_time_s"))?,
+            model_time_s: e
+                .req("model_time_s")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("history[{i}]: bad model_time_s"))?,
+        });
+    }
+    Ok(TuningResult {
+        model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+        best,
+        search_time_s: j
+            .req("search_time_s")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("search_time_s must be a number"))?,
+        trials_used: j
+            .req("trials_used")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("trials_used must be a number"))?,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::device::DeviceProfile;
+    use crate::ir::{KernelBuilder, ModelGraph};
+    use crate::util::json;
+
+    fn small_tuning() -> (ModelGraph, TuningResult) {
+        let mut g = ModelGraph::new("CodecModel");
+        g.push(KernelBuilder::dense(256, 256, 256, &[]));
+        g.push(KernelBuilder::dense(512, 512, 512, &[]));
+        let prof = DeviceProfile::xeon_e5_2620();
+        let opts = TuneOptions {
+            trials: 48,
+            batch_size: 16,
+            population: 32,
+            generations: 2,
+            ..Default::default()
+        };
+        let res = tune_model(&g, &prof, &opts);
+        (g, res)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let (g, res) = small_tuning();
+        let text = tuning_to_json(&res).to_compact();
+        let back = tuning_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, res.model);
+        assert_eq!(back.trials_used, res.trials_used);
+        assert_eq!(back.search_time_s.to_bits(), res.search_time_s.to_bits());
+        assert_eq!(back.best.len(), res.best.len());
+        for (k, b) in &res.best {
+            let rb = &back.best[k];
+            assert_eq!(rb.schedule, b.schedule);
+            assert_eq!(rb.cost_s.to_bits(), b.cost_s.to_bits());
+        }
+        assert_eq!(back.history.len(), res.history.len());
+        for (a, b) in back.history.iter().zip(&res.history) {
+            assert_eq!(a.trials, b.trials);
+            assert_eq!(a.search_time_s.to_bits(), b.search_time_s.to_bits());
+            assert_eq!(a.model_time_s.to_bits(), b.model_time_s.to_bits());
+        }
+        // The downstream quantity the reports consume is bit-identical.
+        let prof = DeviceProfile::xeon_e5_2620();
+        assert_eq!(
+            back.final_model_time(&g, &prof).to_bits(),
+            res.final_model_time(&g, &prof).to_bits()
+        );
+    }
+
+    #[test]
+    fn serialization_is_canonical_across_equal_results() {
+        // Two structurally equal results (independently computed, so the
+        // HashMap iteration order may differ) serialize to equal bytes.
+        let (_, a) = small_tuning();
+        let (_, b) = small_tuning();
+        assert_eq!(tuning_to_json(&a).to_compact(), tuning_to_json(&b).to_compact());
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_malformed() {
+        assert!(tuning_from_json(&json::parse("{}").unwrap()).is_err());
+        let (_, res) = small_tuning();
+        let mut text = tuning_to_json(&res).to_compact();
+        text = text.replace("\"version\":1", "\"version\":99");
+        assert!(tuning_from_json(&json::parse(&text).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! Persistent, content-addressed artifact store for tuned state.
+//!
+//! PR 1's [`MeasureCache`] proved content-addressed reuse inside one
+//! process; this module extends the same discipline across processes:
+//! everything expensive a `repro` run produces — per-model
+//! [`TuningResult`]s, the merged [`ScheduleStore`], and the measurement
+//! cache — becomes a durable, shareable artifact under a `--cache-dir`.
+//! A warm run rebuilds a full zoo with **zero tuning trials and zero
+//! charged device-seconds** while every reported (standalone) number
+//! stays bit-identical to the cold run at the same seed.
+//!
+//! ## Addressing
+//!
+//! Artifacts are keyed by FNV-1a over length-prefixed canonical byte
+//! strings (the same discipline as `coordinator/cache.rs`): artifact
+//! kind, model name(s), device-profile name, trial budget, seed, and
+//! the store-format version. Any input that could change the artifact's
+//! bytes is part of the key, so a stale artifact can never be served
+//! for a different configuration — it simply misses.
+//!
+//! ## Layout and integrity
+//!
+//! ```text
+//! <cache-dir>/
+//!   manifest.json            # version + {key -> kind, file, checksum}
+//!   tuning_<key>.json        # one TuningResult (codec.rs)
+//!   store_<key>.jsonl        # merged ScheduleStore (canonical JSONL)
+//!   mcache_<key>.json        # MeasureCache snapshot (cache.rs format)
+//! ```
+//!
+//! Loads are integrity-checked: the manifest records the FNV-1a
+//! checksum of each artifact's bytes, and a mismatch (truncated file,
+//! hand edit, torn write) rejects the entry — the caller re-tunes and
+//! overwrites. A manifest whose `version` differs from
+//! [`ARTIFACT_FORMAT_VERSION`] is discarded wholesale (stale-version
+//! invalidation): version bumps accompany any change to the canonical
+//! serialization formats the checksums and keys are built from.
+
+pub mod codec;
+
+pub use codec::{tuning_from_json, tuning_to_json, TUNING_CODEC_VERSION};
+
+use crate::autosched::TuningResult;
+use crate::coordinator::MeasureCache;
+use crate::device::DeviceProfile;
+use crate::ir::workload::fnv1a;
+use crate::transfer::ScheduleStore;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Version of the on-disk artifact layout. Bump whenever the manifest
+/// schema, file naming, key derivation, or any persisted canonical
+/// format changes; old directories then read as empty and are rebuilt.
+pub const ARTIFACT_FORMAT_VERSION: u64 = 1;
+
+/// FNV-1a over length-prefixed parts: unambiguous concatenation, same
+/// canonical-bytes discipline as the measurement-cache keys.
+fn keyed(parts: &[&[u8]]) -> u64 {
+    let mut bytes = Vec::new();
+    for p in parts {
+        bytes.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(p);
+    }
+    fnv1a(&bytes)
+}
+
+/// Key of one model's tuning artifact.
+pub fn tuning_key(model: &str, device: &DeviceProfile, trials: usize, seed: u64) -> u64 {
+    keyed(&[
+        b"tuning",
+        model.as_bytes(),
+        device.name.as_bytes(),
+        &(trials as u64).to_le_bytes(),
+        &seed.to_le_bytes(),
+        &ARTIFACT_FORMAT_VERSION.to_le_bytes(),
+    ])
+}
+
+/// Key of zoo-level artifacts (merged schedule store, measurement
+/// cache): the sorted model-name set plus the shared configuration.
+pub fn zoo_key(model_names: &[String], device: &DeviceProfile, trials: usize, seed: u64) -> u64 {
+    let mut names: Vec<&str> = model_names.iter().map(|s| s.as_str()).collect();
+    names.sort_unstable();
+    let joined = names.join("\u{1f}");
+    keyed(&[
+        b"zoo",
+        joined.as_bytes(),
+        device.name.as_bytes(),
+        &(trials as u64).to_le_bytes(),
+        &seed.to_le_bytes(),
+        &ARTIFACT_FORMAT_VERSION.to_le_bytes(),
+    ])
+}
+
+/// Load/save counters — the artifact-level analogue of `CacheStats`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArtifactStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Entries present in the manifest but rejected on load (checksum
+    /// mismatch, unreadable file, undecodable payload).
+    pub rejected: u64,
+    pub writes: u64,
+}
+
+#[derive(Clone, Debug)]
+struct ManifestEntry {
+    kind: String,
+    file: String,
+    checksum: u64,
+}
+
+/// The on-disk artifact store rooted at a `--cache-dir`.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    root: PathBuf,
+    entries: BTreeMap<u64, ManifestEntry>,
+    pub stats: ArtifactStats,
+}
+
+impl ArtifactStore {
+    /// Open (or initialize) a store. An unreadable, malformed, or
+    /// stale-versioned manifest yields an *empty* store over the same
+    /// directory: artifacts are a cache, so the failure mode is
+    /// re-computation, never an error the caller must handle twice.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<ArtifactStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        let mut store = ArtifactStore { root, entries: BTreeMap::new(), stats: ArtifactStats::default() };
+        let manifest = store.manifest_path();
+        if let Ok(text) = std::fs::read_to_string(&manifest) {
+            if let Ok(j) = json::parse(text.trim_end()) {
+                let version = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                if version == ARTIFACT_FORMAT_VERSION {
+                    if let Some(Json::Obj(map)) = j.get("entries") {
+                        for (hex_key, e) in map {
+                            let (Ok(key), Some(kind), Some(file), Some(checksum)) = (
+                                u64::from_str_radix(hex_key, 16),
+                                e.get("kind").and_then(|v| v.as_str()),
+                                e.get("file").and_then(|v| v.as_str()),
+                                e.get("checksum")
+                                    .and_then(|v| v.as_str())
+                                    .and_then(|s| u64::from_str_radix(s, 16).ok()),
+                            ) else {
+                                continue; // skip malformed rows, keep the rest
+                            };
+                            store.entries.insert(
+                                key,
+                                ManifestEntry {
+                                    kind: kind.to_string(),
+                                    file: file.to_string(),
+                                    checksum,
+                                },
+                            );
+                        }
+                    }
+                }
+                // version mismatch: stale-version invalidation — start
+                // empty; the next save rewrites the manifest at the
+                // current version and overwrites artifacts in place.
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    fn write_manifest(&self) -> anyhow::Result<()> {
+        let entries: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                (
+                    format!("{k:016x}"),
+                    Json::obj(vec![
+                        ("kind", Json::str(&e.kind)),
+                        ("file", Json::str(&e.file)),
+                        ("checksum", Json::str(format!("{:016x}", e.checksum))),
+                    ]),
+                )
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("version", Json::num(ARTIFACT_FORMAT_VERSION as f64)),
+            ("entries", Json::Obj(entries)),
+        ]);
+        let mut text = j.to_compact();
+        text.push('\n');
+        std::fs::write(self.manifest_path(), text)?;
+        Ok(())
+    }
+
+    /// Read one artifact's text, integrity-checked against the
+    /// manifest. `None` = miss (absent, wrong kind, checksum mismatch,
+    /// or unreadable — the latter two also count as `rejected`).
+    fn read_checked(&mut self, key: u64, kind: &str) -> Option<String> {
+        let (file, checksum) = match self.entries.get(&key) {
+            Some(entry) if entry.kind == kind => (entry.file.clone(), entry.checksum),
+            _ => {
+                self.stats.misses += 1;
+                return None;
+            }
+        };
+        let path = self.root.join(&file);
+        match std::fs::read_to_string(&path) {
+            Ok(text) if fnv1a(text.as_bytes()) == checksum => {
+                self.stats.hits += 1;
+                Some(text)
+            }
+            _ => {
+                // Corrupt or vanished: drop the entry so it re-saves.
+                self.entries.remove(&key);
+                self.stats.rejected += 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Write one artifact + manifest entry. The payload is written
+    /// before the manifest, so a torn write leaves at worst an orphaned
+    /// file (never a manifest entry whose checksum cannot verify).
+    fn put(&mut self, key: u64, kind: &str, text: &str) -> anyhow::Result<()> {
+        let ext = if kind == "store" { "jsonl" } else { "json" };
+        let file = format!("{kind}_{key:016x}.{ext}");
+        std::fs::write(self.root.join(&file), text)?;
+        self.entries.insert(
+            key,
+            ManifestEntry { kind: kind.to_string(), file, checksum: fnv1a(text.as_bytes()) },
+        );
+        self.write_manifest()?;
+        self.stats.writes += 1;
+        Ok(())
+    }
+
+    // ---- typed artifacts -------------------------------------------------
+
+    pub fn load_tuning(&mut self, key: u64) -> Option<TuningResult> {
+        let text = self.read_checked(key, "tuning")?;
+        match json::parse(text.trim_end()).and_then(|j| codec::tuning_from_json(&j)) {
+            Ok(res) => Some(res),
+            Err(_) => {
+                // Decodes are part of integrity: an undecodable payload
+                // (e.g. older codec) is a rejection, not an error.
+                self.entries.remove(&key);
+                self.stats.rejected += 1;
+                self.stats.hits -= 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn save_tuning(&mut self, key: u64, res: &TuningResult) -> anyhow::Result<()> {
+        let mut text = codec::tuning_to_json(res).to_compact();
+        text.push('\n');
+        self.put(key, "tuning", &text)
+    }
+
+    /// Zoo-level artifacts (merged store, measurement cache) share one
+    /// zoo key; fold the kind in so they occupy distinct manifest rows.
+    fn kind_scoped(kind: &str, key: u64) -> u64 {
+        keyed(&[kind.as_bytes(), &key.to_le_bytes()])
+    }
+
+    pub fn load_schedule_store(&mut self, key: u64) -> Option<ScheduleStore> {
+        let key = Self::kind_scoped("store", key);
+        let text = self.read_checked(key, "store")?;
+        match ScheduleStore::from_jsonl(&text, "schedule-store artifact") {
+            Ok(store) => Some(store),
+            Err(_) => {
+                self.entries.remove(&key);
+                self.stats.rejected += 1;
+                self.stats.hits -= 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn save_schedule_store(&mut self, key: u64, store: &ScheduleStore) -> anyhow::Result<()> {
+        self.put(Self::kind_scoped("store", key), "store", &store.to_jsonl())
+    }
+
+    pub fn load_measure_cache(&mut self, key: u64) -> Option<MeasureCache> {
+        let key = Self::kind_scoped("mcache", key);
+        let text = self.read_checked(key, "mcache")?;
+        match json::parse(text.trim_end()).and_then(|j| MeasureCache::from_json(&j)) {
+            Ok(cache) => Some(cache),
+            Err(_) => {
+                self.entries.remove(&key);
+                self.stats.rejected += 1;
+                self.stats.hits -= 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn save_measure_cache(&mut self, key: u64, cache: &MeasureCache) -> anyhow::Result<()> {
+        let mut text = cache.to_json().to_compact();
+        text.push('\n');
+        self.put(Self::kind_scoped("mcache", key), "mcache", &text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::ir::{KernelBuilder, ModelGraph};
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tt_artifact_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_tuning() -> (ModelGraph, TuningResult) {
+        let mut g = ModelGraph::new("ArtModel");
+        g.push(KernelBuilder::dense(256, 256, 256, &[]));
+        let prof = DeviceProfile::xeon_e5_2620();
+        let opts = TuneOptions {
+            trials: 32,
+            batch_size: 16,
+            population: 32,
+            generations: 2,
+            ..Default::default()
+        };
+        let res = tune_model(&g, &prof, &opts);
+        (g, res)
+    }
+
+    #[test]
+    fn keys_separate_every_configuration_axis() {
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let edge = DeviceProfile::cortex_a72();
+        let base = tuning_key("ResNet18", &xeon, 2000, 7);
+        assert_eq!(base, tuning_key("ResNet18", &xeon, 2000, 7), "deterministic");
+        assert_ne!(base, tuning_key("ResNet50", &xeon, 2000, 7));
+        assert_ne!(base, tuning_key("ResNet18", &edge, 2000, 7));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2001, 7));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2000, 8));
+        // Zoo keys are order-independent in the model set.
+        let a = zoo_key(&["B".into(), "A".into()], &xeon, 100, 1);
+        let b = zoo_key(&["A".into(), "B".into()], &xeon, 100, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, zoo_key(&["A".into()], &xeon, 100, 1));
+    }
+
+    #[test]
+    fn tuning_roundtrips_through_reopened_store() {
+        let root = tmp_root("roundtrip");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+
+        let mut store = ArtifactStore::open(&root).unwrap();
+        assert!(store.load_tuning(key).is_none());
+        assert_eq!(store.stats.misses, 1);
+        store.save_tuning(key, &res).unwrap();
+
+        // "New process": reopen from disk.
+        let mut store2 = ArtifactStore::open(&root).unwrap();
+        assert_eq!(store2.len(), 1);
+        let back = store2.load_tuning(key).unwrap();
+        assert_eq!(store2.stats.hits, 1);
+        assert_eq!(back.search_time_s.to_bits(), res.search_time_s.to_bits());
+        assert_eq!(back.best[&0].schedule, res.best[&0].schedule);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_artifact_is_rejected_and_resaveable() {
+        let root = tmp_root("corrupt");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.save_tuning(key, &res).unwrap();
+
+        // Flip bytes in the payload: checksum must catch it.
+        let file = root.join(format!("tuning_{key:016x}.json"));
+        std::fs::write(&file, "{\"definitely\":\"not it\"}\n").unwrap();
+        let mut store2 = ArtifactStore::open(&root).unwrap();
+        assert!(store2.load_tuning(key).is_none());
+        assert_eq!(store2.stats.rejected, 1);
+        // Re-save repairs in place.
+        store2.save_tuning(key, &res).unwrap();
+        assert!(store2.load_tuning(key).is_some());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn stale_manifest_version_reads_as_empty() {
+        let root = tmp_root("stale");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.save_tuning(key, &res).unwrap();
+
+        // Rewrite the manifest claiming a future format version.
+        let manifest = std::fs::read_to_string(root.join("manifest.json")).unwrap();
+        std::fs::write(root.join("manifest.json"), manifest.replace("\"version\":1", "\"version\":999"))
+            .unwrap();
+        let store2 = ArtifactStore::open(&root).unwrap();
+        assert!(store2.is_empty(), "stale version must invalidate all entries");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn garbage_manifest_reads_as_empty() {
+        let root = tmp_root("garbage");
+        std::fs::create_dir_all(&root).unwrap();
+        std::fs::write(root.join("manifest.json"), "not json at all").unwrap();
+        let store = ArtifactStore::open(&root).unwrap();
+        assert!(store.is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn schedule_store_and_measure_cache_artifacts_roundtrip() {
+        let root = tmp_root("zoo_level");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let mut sched_store = ScheduleStore::new();
+        sched_store.add_tuning(&g, &res);
+        let mut mcache = MeasureCache::new();
+        mcache.insert(42, Some(1e-3));
+        mcache.insert(43, None);
+
+        let zk = zoo_key(&[g.name.clone()], &xeon, 32, 0xA45);
+        let mut store = ArtifactStore::open(&root).unwrap();
+        // Both zoo-level artifacts live under the same zoo key (the
+        // store derives kind-scoped manifest rows internally).
+        store.save_schedule_store(zk, &sched_store).unwrap();
+        store.save_measure_cache(zk, &mcache).unwrap();
+
+        let mut store2 = ArtifactStore::open(&root).unwrap();
+        let back = store2.load_schedule_store(zk).unwrap();
+        assert_eq!(back.records.len(), sched_store.records.len());
+        for (a, b) in back.records.iter().zip(&sched_store.records) {
+            assert_eq!(a.schedule, b.schedule);
+            assert_eq!(a.source_cost_s.to_bits(), b.source_cost_s.to_bits());
+        }
+        let mc = store2.load_measure_cache(zk).unwrap();
+        assert_eq!(mc.peek(42), Some(Some(1e-3)));
+        assert_eq!(mc.peek(43), Some(None));
+        // Kind confusion is a miss, not a wrong payload.
+        assert!(store2.load_tuning(zk).is_none());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

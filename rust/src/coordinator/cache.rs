@@ -306,6 +306,16 @@ impl MeasureCache {
         }
     }
 
+    /// Entries in least-recently-used-first order, for callers that
+    /// redistribute the cache (the service layer shards a flat snapshot
+    /// across per-shard locks and merges shards back for persistence).
+    pub fn entries_lru(&self) -> Vec<(u64, Option<f64>)> {
+        self.keys_lru_order()
+            .into_iter()
+            .map(|k| (k, self.map[&k].runtime))
+            .collect()
+    }
+
     /// Keys in least-recently-used-first order (exact, stale-free).
     fn keys_lru_order(&self) -> Vec<u64> {
         let mut keys: Vec<(u64, u64)> =

@@ -158,9 +158,7 @@ mod tests {
         let prof = crate::device::DeviceProfile::xeon_e5_2620();
         let mut ledger = Ledger::new();
         ledger.charge_measure(&prof, 0.01);
-        let mut stats = CacheStats::default();
-        stats.misses = 1;
-        stats.hits = 9;
+        let stats = CacheStats { misses: 1, hits: 9, ..Default::default() };
         let m = SweepMetrics::from_parts(&ledger, &stats);
         assert_eq!(m.measurements, 1);
         assert!(m.device_seconds > 0.0);

@@ -60,8 +60,9 @@ fn measure_one_seeded(
     }
 }
 
-/// Parallel fan-out with one precomputed noise seed per job.
-fn measure_with_noise(
+/// Parallel fan-out with one precomputed noise seed per job. Shared
+/// with the service layer's sharded executor (`crate::service::shard`).
+pub(crate) fn measure_with_noise(
     jobs: &[(&Kernel, &Schedule)],
     profile: &DeviceProfile,
     noise: &[u64],
@@ -143,6 +144,9 @@ pub fn measure_pairs_cached_precomputed(
     cache: &mut MeasureCache,
     ledger: &mut Ledger,
 ) -> CachedBatch {
+    // KEEP IN SYNC with `crate::service::shard::measure_pairs_sharded`,
+    // the per-shard-locked copy of this pipeline; a semantic change
+    // here must land there too.
     assert_eq!(jobs.len(), contents.len());
 
     /// Where job `i`'s outcome comes from.

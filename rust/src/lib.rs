@@ -26,10 +26,18 @@
 //! * [`coordinator`] — measurement worker pool, the content-addressed
 //!   measurement cache (repeated sweeps pay for a pair once), search-time
 //!   ledger, and RPC-device emulation for edge tuning.
+//! * [`artifact`] — the persistent artifact store: tuning results, the
+//!   merged schedule store, and the measurement cache as durable,
+//!   integrity-checked files under a `--cache-dir`, so tuned state
+//!   survives the process and warm runs re-tune nothing.
+//! * [`service`] — multi-tenant serving: one shared zoo behind an
+//!   `Arc`, a sharded measurement cache, and a deterministic session
+//!   API (`open_session`) answering concurrent schedule requests.
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas/JAX
 //!   artifacts (the *real* hot path; Python is never on it).
 //! * [`report`] — regenerates every table and figure of the paper.
 
+pub mod artifact;
 pub mod autosched;
 pub mod coordinator;
 pub mod device;
@@ -38,5 +46,6 @@ pub mod models;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod transfer;
 pub mod util;

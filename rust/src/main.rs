@@ -12,14 +12,25 @@
 //! repro tune --model ResNet18          # Ansor-tune one model
 //! repro transfer --model ResNet18 --source ResNet50
 //! repro show-schedule --model ResNet18 --kernel 6
+//! repro serve --requests FILE          # ScheduleService session loop
 //! repro all                            # everything (one zoo per device)
 //! ```
 //!
 //! Common flags: `--trials N` (Ansor budget; paper uses 20000),
-//! `--seed S`, `--device server|edge`, `--out DIR` (CSV directory).
+//! `--seed S`, `--device server|edge`, `--out DIR` (CSV directory),
+//! and `--cache-dir DIR` — the persistent artifact store
+//! (`transfer_tuning::artifact`). With `--cache-dir`, tunings, the
+//! merged schedule store, and the measurement cache survive the
+//! process: the first `repro table t2 --cache-dir .tt-cache` tunes the
+//! zoo and persists it; every later table/figure/tune/transfer/all at
+//! the same (device, trials, seed) re-tunes **nothing** and charges
+//! **zero** device-seconds, with bit-identical output. `repro serve
+//! --requests FILE` drives the multi-tenant `ScheduleService` (sharded
+//! measurement cache, `--shards N`) from a JSONL request file.
 
 use anyhow::{bail, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use transfer_tuning::artifact::{self, ArtifactStore};
 use transfer_tuning::autosched::{tune_model, TuneOptions};
 use transfer_tuning::device::{untuned_model_time, DeviceProfile};
 use transfer_tuning::models;
@@ -40,6 +51,13 @@ struct Cli {
     device: DeviceProfile,
     out: PathBuf,
     store_path: Option<PathBuf>,
+    /// Persistent artifact store (None = everything dies with the
+    /// process, the pre-artifact behavior).
+    cache_dir: Option<PathBuf>,
+    /// JSONL session-request file for `serve`.
+    requests: Option<PathBuf>,
+    /// Measurement-cache shards for the serving path.
+    shards: usize,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -56,6 +74,9 @@ fn parse_args() -> Result<Cli> {
         device: DeviceProfile::xeon_e5_2620(),
         out: PathBuf::from("results"),
         store_path: None,
+        cache_dir: None,
+        requests: None,
+        shards: 8,
     };
     while let Some(arg) = args.next() {
         let mut value = |name: &str| -> Result<String> {
@@ -74,6 +95,9 @@ fn parse_args() -> Result<Cli> {
             }
             "--out" => cli.out = PathBuf::from(value("--out")?),
             "--store" => cli.store_path = Some(PathBuf::from(value("--store")?)),
+            "--cache-dir" => cli.cache_dir = Some(PathBuf::from(value("--cache-dir")?)),
+            "--requests" => cli.requests = Some(PathBuf::from(value("--requests")?)),
+            "--shards" => cli.shards = value("--shards")?.parse()?,
             other if !other.starts_with("--") && cli.target.is_none() => {
                 cli.target = Some(other.to_string())
             }
@@ -83,22 +107,62 @@ fn parse_args() -> Result<Cli> {
     Ok(cli)
 }
 
-fn emit(table: &Table, out_dir: &PathBuf, slug: &str) -> Result<()> {
+fn emit(table: &Table, out_dir: &Path, slug: &str) -> Result<()> {
     print!("{}", table.render());
     let path = table.write_csv(out_dir, slug)?;
     println!("[csv] {}\n", path.display());
     Ok(())
 }
 
-fn build_zoo(cli: &Cli) -> Zoo {
+fn open_artifacts(cli: &Cli) -> Result<Option<ArtifactStore>> {
+    match &cli.cache_dir {
+        None => Ok(None),
+        Some(dir) => {
+            let store = ArtifactStore::open(dir)
+                .with_context(|| format!("opening artifact store at {}", dir.display()))?;
+            eprintln!(
+                "[artifacts] {} entries at {}",
+                store.len(),
+                store.root().display()
+            );
+            Ok(Some(store))
+        }
+    }
+}
+
+fn build_zoo_with(cli: &Cli, artifacts: Option<&mut ArtifactStore>) -> Zoo {
     eprintln!(
-        "building zoo: device={} trials={} seed={} (deterministic)",
-        cli.device.name, cli.trials, cli.seed
+        "building zoo: device={} trials={} seed={} (deterministic{})",
+        cli.device.name,
+        cli.trials,
+        cli.seed,
+        if artifacts.is_some() { ", artifact-backed" } else { "" },
     );
-    Zoo::build(
+    let zoo = Zoo::build_incremental(
         ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() },
+        artifacts,
         |line| eprintln!("  {line}"),
-    )
+    );
+    let s = &zoo.build_stats;
+    eprintln!(
+        "  zoo ready: {} tuned / {} from artifacts ({} trials, {:.1}s tuning charged)",
+        s.models_tuned, s.models_from_artifacts, s.trials_run, s.tuning_seconds_charged
+    );
+    zoo
+}
+
+/// Build a zoo (artifact-backed when `--cache-dir` is set), run `f`
+/// over it, then persist the zoo-level artifacts — including the
+/// measurement cache as warmed by whatever sweeps `f` ran.
+fn with_zoo(cli: &Cli, f: impl FnOnce(&Zoo) -> Result<()>) -> Result<()> {
+    let mut artifacts = open_artifacts(cli)?;
+    let zoo = build_zoo_with(cli, artifacts.as_mut());
+    f(&zoo)?;
+    if let Some(a) = artifacts.as_mut() {
+        zoo.persist(a)?;
+        eprintln!("[artifacts] persisted zoo store + measurement cache to {}", a.root().display());
+    }
+    Ok(())
 }
 
 fn cmd_models() -> Result<()> {
@@ -144,16 +208,13 @@ fn cmd_table(cli: &Cli) -> Result<()> {
     match which.as_str() {
         "t1" | "table1" | "1" => emit(&tables::table1(), &cli.out, "table1")?,
         "t2" | "table2" | "2" => {
-            let zoo = build_zoo(cli);
-            emit(&tables::table2(&zoo), &cli.out, "table2")?;
+            with_zoo(cli, |zoo| emit(&tables::table2(zoo), &cli.out, "table2"))?;
         }
         "t3" | "table3" | "3" => {
-            let zoo = build_zoo(cli);
-            emit(&tables::table3(&zoo), &cli.out, "table3")?;
+            with_zoo(cli, |zoo| emit(&tables::table3(zoo), &cli.out, "table3"))?;
         }
         "t4" | "table4" | "4" => {
-            let zoo = build_zoo(cli);
-            emit(&tables::table4(&zoo), &cli.out, "table4")?;
+            with_zoo(cli, |zoo| emit(&tables::table4(zoo), &cli.out, "table4"))?;
         }
         other => bail!("unknown table `{other}` (t1|t2|t3|t4)"),
     }
@@ -164,23 +225,20 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
     let which = cli.target.clone().unwrap_or_default();
     match which.as_str() {
         "fig1" | "1" => {
-            let zoo = build_zoo(cli);
-            emit(&figures::fig1(&zoo), &cli.out, "fig1")?;
+            with_zoo(cli, |zoo| emit(&figures::fig1(zoo), &cli.out, "fig1"))?;
         }
         "fig4" | "4" => {
-            let zoo = build_zoo(cli);
-            emit(&figures::fig4(&zoo), &cli.out, "fig4")?;
+            with_zoo(cli, |zoo| emit(&figures::fig4(zoo), &cli.out, "fig4"))?;
         }
         "fig5" | "5" => {
-            let zoo = build_zoo(cli);
-            emit(&figures::fig5(&zoo), &cli.out, "fig5")?;
+            with_zoo(cli, |zoo| emit(&figures::fig5(zoo), &cli.out, "fig5"))?;
         }
         "fig6" | "6" => {
-            // Fig 6 is Fig 5 on the edge device.
+            // Fig 6 is Fig 5 on the edge device (its own zoo + its own
+            // artifact keys; both zoos share one --cache-dir safely).
             let mut edge_cli = cli.clone();
             edge_cli.device = DeviceProfile::cortex_a72();
-            let zoo = build_zoo(&edge_cli);
-            emit(&figures::fig5(&zoo), &cli.out, "fig6")?;
+            with_zoo(&edge_cli, |zoo| emit(&figures::fig5(zoo), &cli.out, "fig6"))?;
         }
         "fig7" | "7" => {
             let config =
@@ -189,20 +247,42 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
             emit(&t, &cli.out, "fig7")?;
         }
         "fig8" | "8" => {
-            let zoo = build_zoo(cli);
-            emit(&figures::fig8(&zoo), &cli.out, "fig8")?;
+            with_zoo(cli, |zoo| emit(&figures::fig8(zoo), &cli.out, "fig8"))?;
         }
         other => bail!("unknown figure `{other}` (fig1|fig4|fig5|fig6|fig7|fig8)"),
     }
     Ok(())
 }
 
+/// Tune one model, going through the artifact store when `--cache-dir`
+/// is set: a matching artifact (same model, device, trials, seed) is
+/// loaded instead of tuned, and a fresh tuning is persisted — the same
+/// artifacts `Zoo::build_incremental` reads and writes, so `repro tune`
+/// pre-warms `repro table/figure/all` and vice versa.
+fn tune_cached(
+    cli: &Cli,
+    graph: &transfer_tuning::ir::ModelGraph,
+    artifacts: &mut Option<ArtifactStore>,
+) -> Result<transfer_tuning::autosched::TuningResult> {
+    let key = artifact::tuning_key(&graph.name, &cli.device, cli.trials, cli.seed);
+    if let Some(res) = artifacts.as_mut().and_then(|a| a.load_tuning(key)) {
+        eprintln!("loaded {} from artifacts (0 trials run)", graph.name);
+        return Ok(res);
+    }
+    let opts = TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() };
+    eprintln!("tuning {} ({} unique kernels) ...", graph.name, graph.kernels.len());
+    let res = tune_model(graph, &cli.device, &opts);
+    if let Some(a) = artifacts.as_mut() {
+        a.save_tuning(key, &res)?;
+    }
+    Ok(res)
+}
+
 fn cmd_tune(cli: &Cli) -> Result<()> {
     let name = cli.model.clone().context("--model required")?;
     let graph = models::by_name(&name).with_context(|| format!("unknown model `{name}`"))?;
-    let opts = TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() };
-    eprintln!("tuning {name} ({} unique kernels) ...", graph.kernels.len());
-    let res = tune_model(&graph, &cli.device, &opts);
+    let mut artifacts = open_artifacts(cli)?;
+    let res = tune_cached(cli, &graph, &mut artifacts)?;
     let untuned = untuned_model_time(&graph, &cli.device);
     let tuned = res.final_model_time(&graph, &cli.device);
     let mut t = Table::new(
@@ -244,8 +324,8 @@ fn cmd_transfer(cli: &Cli) -> Result<()> {
         }
         (None, Some(src)) => {
             let sg = models::by_name(src).with_context(|| format!("unknown model `{src}`"))?;
-            eprintln!("tuning source {src} first ({} trials) ...", cli.trials);
-            let res = tune_model(&sg, &cli.device, &TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() });
+            let mut artifacts = open_artifacts(cli)?;
+            let res = tune_cached(cli, &sg, &mut artifacts)?;
             let mut store = ScheduleStore::new();
             store.add_tuning(&sg, &res);
             (store, src.clone())
@@ -298,30 +378,166 @@ fn cmd_all(cli: &Cli) -> Result<()> {
     emit(&tables::table1(), &cli.out, "table1")?;
     emit(&tables::gemm_transfer(&cli.device, cli.seed), &cli.out, "gemm_transfer")?;
 
-    let zoo = build_zoo(cli);
-    emit(&figures::fig1(&zoo), &cli.out, "fig1")?;
-    emit(&figures::fig4(&zoo), &cli.out, "fig4")?;
-    emit(&figures::fig5(&zoo), &cli.out, "fig5")?;
-    emit(&tables::table2(&zoo), &cli.out, "table2")?;
-    emit(&tables::table3(&zoo), &cli.out, "table3")?;
-    emit(&tables::table4(&zoo), &cli.out, "table4")?;
-    emit(&figures::fig8(&zoo), &cli.out, "fig8")?;
+    with_zoo(cli, |zoo| {
+        emit(&figures::fig1(zoo), &cli.out, "fig1")?;
+        emit(&figures::fig4(zoo), &cli.out, "fig4")?;
+        emit(&figures::fig5(zoo), &cli.out, "fig5")?;
+        emit(&tables::table2(zoo), &cli.out, "table2")?;
+        emit(&tables::table3(zoo), &cli.out, "table3")?;
+        emit(&tables::table4(zoo), &cli.out, "table4")?;
+        emit(&figures::fig8(zoo), &cli.out, "fig8")?;
+        Ok(())
+    })?;
 
     let config = ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
     emit(&figures::fig7(&config, |l| eprintln!("  {l}")), &cli.out, "fig7")?;
 
     let mut edge_cli = cli.clone();
     edge_cli.device = DeviceProfile::cortex_a72();
-    let edge_zoo = build_zoo(&edge_cli);
-    emit(&figures::fig5(&edge_zoo), &cli.out, "fig6")?;
+    with_zoo(&edge_cli, |zoo| emit(&figures::fig5(zoo), &cli.out, "fig6"))?;
     Ok(())
 }
 
-/// `repro serve`: a real serving loop over the AOT-compiled CNN
-/// artifacts — Poisson request arrivals, FIFO queue, PJRT execution,
-/// latency percentiles. Demonstrates the L3 request path end to end
-/// (Python nowhere in sight).
+/// `repro serve --requests FILE`: drive the multi-tenant
+/// [`ScheduleService`](transfer_tuning::service::ScheduleService) from
+/// a JSONL request file. Each line is one tenant session:
+///
+/// ```text
+/// {"model":"ResNet18"}
+/// {"model":"BERT","device":"edge","budget_s":600,"seed":7}
+/// ```
+///
+/// `device`/`seed` default to the CLI flags; omitting `budget_s` sweeps
+/// the full mixed pool. Sessions are served concurrently against one
+/// shared sharded measurement cache (`--shards`), and every reply is
+/// deterministic in its request line alone. With `--cache-dir`, the
+/// zoo behind the service is artifact-backed and the cache the sessions
+/// warmed is persisted back.
+fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
+    use transfer_tuning::service::{ScheduleService, SessionReply, SessionRequest};
+
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading request file {}", path.display()))?;
+    let mut requests: Vec<SessionRequest> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = transfer_tuning::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        let model = j
+            .req("model")?
+            .as_str()
+            .with_context(|| format!("{}:{}: model must be a string", path.display(), lineno + 1))?
+            .to_string();
+        let device = match j.get("device").and_then(|v| v.as_str()) {
+            Some(name) => DeviceProfile::by_name(name)
+                .with_context(|| format!("unknown device `{name}` (server|edge)"))?,
+            None => cli.device.clone(),
+        };
+        let budget_s = j.get("budget_s").and_then(|v| v.as_f64());
+        let seed = j.get("seed").and_then(|v| v.as_f64()).map(|x| x as u64).unwrap_or(cli.seed);
+        requests.push(SessionRequest { model, device, budget_s, seed });
+    }
+    anyhow::ensure!(!requests.is_empty(), "{}: no requests", path.display());
+
+    let mut artifacts = open_artifacts(cli)?;
+    let zoo = build_zoo_with(cli, artifacts.as_mut());
+    let zoo_key = zoo.artifact_key();
+    let service = ScheduleService::from_zoo(zoo, cli.shards);
+
+    // Fan sessions across workers; replies land in request order.
+    // Worker count is a host-parallelism concern, deliberately
+    // independent of --shards (a cache-contention knob).
+    let n_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, requests.len());
+    let mut slots: Vec<Option<Result<SessionReply>>> = (0..requests.len()).map(|_| None).collect();
+    let chunk = requests.len().div_ceil(n_workers).max(1);
+    std::thread::scope(|scope| {
+        for (req_chunk, slot_chunk) in requests.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+            let svc = service.clone();
+            scope.spawn(move || {
+                for (req, slot) in req_chunk.iter().zip(slot_chunk.iter_mut()) {
+                    *slot = Some(svc.open_session(req));
+                }
+            });
+        }
+    });
+
+    let mut t = Table::new(
+        &format!(
+            "ScheduleService: {} sessions, {} workers, {}-shard cache",
+            requests.len(),
+            n_workers,
+            cli.shards.max(1)
+        ),
+        &["#", "Target", "Device", "Budget", "Sources", "Speedup", "Standalone", "Charged"],
+    );
+    for (i, (req, slot)) in requests.iter().zip(&slots).enumerate() {
+        let budget = match req.budget_s {
+            Some(b) => fmt_duration(b),
+            None => "-".into(),
+        };
+        match slot.as_ref().expect("worker filled every slot") {
+            Ok(reply) => {
+                let sources = match reply.sources.len() {
+                    0 => "-".to_string(),
+                    1 => reply.sources[0].clone(),
+                    n => format!("mixed({n})"),
+                };
+                t.row(vec![
+                    (i + 1).to_string(),
+                    reply.target.clone(),
+                    reply.device.to_string(),
+                    budget,
+                    sources,
+                    fmt_speedup(reply.predicted_speedup()),
+                    fmt_duration(reply.standalone_search_time_s),
+                    fmt_duration(reply.charged_search_time_s),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    (i + 1).to_string(),
+                    req.model.clone(),
+                    req.device.name.to_string(),
+                    budget,
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("error: {e}"),
+                ]);
+            }
+        }
+    }
+    emit(&t, &cli.out, "serve_sessions")?;
+    let stats = service.cache_stats();
+    eprintln!(
+        "[service] shared cache: hit-rate={:.1}% (hits={} dedup={} miss={})",
+        stats.hit_rate() * 100.0,
+        stats.hits,
+        stats.dedup_hits,
+        stats.misses,
+    );
+    if let Some(a) = artifacts.as_mut() {
+        a.save_schedule_store(zoo_key, service.store())?;
+        a.save_measure_cache(zoo_key, &service.snapshot_cache())?;
+        eprintln!("[artifacts] persisted session-warmed cache to {}", a.root().display());
+    }
+    Ok(())
+}
+
+/// `repro serve` (without `--requests`): a real serving loop over the
+/// AOT-compiled CNN artifacts — Poisson request arrivals, FIFO queue,
+/// PJRT execution, latency percentiles. Demonstrates the L3 request
+/// path end to end (Python nowhere in sight).
 fn cmd_serve(cli: &Cli) -> Result<()> {
+    if let Some(path) = &cli.requests {
+        return cmd_serve_requests(cli, path);
+    }
     use transfer_tuning::coordinator::LatencyHistogram;
     use transfer_tuning::runtime::{artifacts_dir, Runtime};
     use transfer_tuning::util::rng::Rng;
@@ -420,17 +636,28 @@ COMMANDS
                               transfer-tune M from S's schedules
   show-schedule --model M --kernel I
                               print a tuned schedule as an Algorithm-1 trace
+  serve --requests FILE       multi-tenant ScheduleService: one JSONL line
+                              per session ({\"model\":..,\"device\":..,
+                              \"budget_s\":..,\"seed\":..}), served concurrently
+                              against a sharded measurement cache
   serve [--source default|tuned] [--trials N]
                               serve the AOT CNN artifact: Poisson open loop,
                               latency percentiles (real PJRT execution)
   all                         every table + figure (server zoo + edge zoo)
 
 FLAGS
-  --trials N    Ansor trial budget (default 2000; paper uses 20000)
-  --seed S      RNG seed (default 0xA45)
-  --device D    server | edge (default server)
-  --out DIR     CSV output directory (default results/)
-  --store FILE  schedule-store path (JSONL)
+  --trials N      Ansor trial budget (default 2000; paper uses 20000)
+  --seed S        RNG seed (default 0xA45)
+  --device D      server | edge (default server)
+  --out DIR       CSV output directory (default results/)
+  --store FILE    schedule-store path (JSONL)
+  --cache-dir DIR persistent artifact store: tunings, the merged schedule
+                  store, and the measurement cache survive the process, so
+                  repeated table/figure/tune/transfer/all runs at the same
+                  (device, trials, seed) re-tune nothing, charge zero
+                  device-seconds, and print bit-identical results
+  --requests FILE session-request JSONL for `serve`
+  --shards N      measurement-cache shards for `serve` (default 8)
 ";
 
 fn main() -> Result<()> {

@@ -5,6 +5,7 @@
 //! from all of them — so they are computed once per (device, trials,
 //! seed) and shared. All results are deterministic in the seed.
 
+use crate::artifact::{self, ArtifactStore};
 use crate::autosched::{tune_model, TuneOptions, TuningResult};
 use crate::coordinator::{CacheStats, MeasureCache};
 use crate::device::{untuned_model_time, DeviceProfile};
@@ -47,23 +48,76 @@ pub struct Zoo {
     pub untuned_s: Vec<f64>,
     pub store: ScheduleStore,
     pub cache: RefCell<MeasureCache>,
+    /// What this build cost (the warm-start proof inspects it).
+    pub build_stats: ZooBuildStats,
+}
+
+/// Cost accounting of one [`Zoo::build_incremental`] run: how many
+/// models were actually tuned vs served from the artifact store, and
+/// what the tuned ones charged. A fully warm build has
+/// `models_tuned == 0`, `trials_run == 0`, and
+/// `tuning_seconds_charged == 0.0`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ZooBuildStats {
+    pub models_tuned: usize,
+    pub models_from_artifacts: usize,
+    pub trials_run: usize,
+    pub tuning_seconds_charged: f64,
 }
 
 impl Zoo {
-    /// Tune every model in the zoo. `progress` receives one line per
-    /// model (the CLI prints it; tests pass a sink).
-    pub fn build(config: ExperimentConfig, mut progress: impl FnMut(&str)) -> Zoo {
+    /// Tune every model in the zoo from scratch (no artifact store).
+    /// `progress` receives one line per model (the CLI prints it; tests
+    /// pass a sink).
+    pub fn build(config: ExperimentConfig, progress: impl FnMut(&str)) -> Zoo {
+        Self::build_incremental(config, None, progress)
+    }
+
+    /// Build the zoo as an incremental pipeline over an artifact store:
+    /// each model's tuning is loaded when a matching artifact exists
+    /// (same model, device, trials, seed, format version — see
+    /// [`artifact::tuning_key`]) and tuned-then-persisted otherwise; the
+    /// zoo's shared measurement cache is likewise rehydrated. A warm run
+    /// re-tunes nothing and re-measures nothing, yet every derived
+    /// number is bit-identical to the cold run (the codec round-trips
+    /// schedules and costs exactly). Call [`Zoo::persist`] after the
+    /// experiments to write back the merged store + warmed cache.
+    pub fn build_incremental(
+        config: ExperimentConfig,
+        mut artifacts: Option<&mut ArtifactStore>,
+        mut progress: impl FnMut(&str),
+    ) -> Zoo {
         let models = models::all_models();
         let opts = TuneOptions { trials: config.trials, seed: config.seed, ..Default::default() };
         let mut tunings = Vec::with_capacity(models.len());
         let mut untuned_s = Vec::with_capacity(models.len());
         let mut store = ScheduleStore::new();
+        let mut build_stats = ZooBuildStats::default();
         for m in &models {
             let t0 = std::time::Instant::now();
-            let res = tune_model(m, &config.device, &opts);
+            let key = artifact::tuning_key(&m.name, &config.device, config.trials, config.seed);
+            let cached = artifacts.as_deref_mut().and_then(|a| a.load_tuning(key));
+            let (res, origin) = match cached {
+                Some(res) => {
+                    build_stats.models_from_artifacts += 1;
+                    (res, "artifact")
+                }
+                None => {
+                    let res = tune_model(m, &config.device, &opts);
+                    build_stats.models_tuned += 1;
+                    build_stats.trials_run += res.trials_used;
+                    build_stats.tuning_seconds_charged += res.search_time_s;
+                    if let Some(a) = artifacts.as_deref_mut() {
+                        if let Err(e) = a.save_tuning(key, &res) {
+                            progress(&format!("warn: could not persist tuning of {}: {e}", m.name));
+                        }
+                    }
+                    (res, "tuned")
+                }
+            };
             let untuned = untuned_model_time(m, &config.device);
             progress(&format!(
-                "tuned {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
+                "{origin:<8} {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
                 m.name,
                 res.trials_used,
                 res.search_time_s,
@@ -75,7 +129,42 @@ impl Zoo {
             tunings.push(res);
             untuned_s.push(untuned);
         }
-        Zoo { config, models, tunings, untuned_s, store, cache: RefCell::new(MeasureCache::new()) }
+        // Rehydrate the shared measurement cache so warm transfer
+        // sweeps charge zero device seconds too.
+        let zoo_key = artifact::zoo_key(
+            &models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
+            &config.device,
+            config.trials,
+            config.seed,
+        );
+        let cache = artifacts
+            .as_deref_mut()
+            .and_then(|a| a.load_measure_cache(zoo_key))
+            .unwrap_or_default();
+        Zoo { config, models, tunings, untuned_s, store, cache: RefCell::new(cache), build_stats }
+    }
+
+    /// Key under which this zoo's merged store + measurement cache are
+    /// persisted.
+    pub fn artifact_key(&self) -> u64 {
+        artifact::zoo_key(
+            &self.models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
+            &self.config.device,
+            self.config.trials,
+            self.config.seed,
+        )
+    }
+
+    /// Persist the zoo-level artifacts: the merged schedule store
+    /// (shareable by the serving layer without the tunings) and the
+    /// measurement cache as warmed by whatever experiments ran since
+    /// the build. Per-model tunings were already persisted during
+    /// [`Zoo::build_incremental`].
+    pub fn persist(&self, artifacts: &mut ArtifactStore) -> anyhow::Result<()> {
+        let key = self.artifact_key();
+        artifacts.save_schedule_store(key, &self.store)?;
+        artifacts.save_measure_cache(key, &self.cache.borrow())?;
+        Ok(())
     }
 
     pub fn model_index(&self, name: &str) -> Option<usize> {

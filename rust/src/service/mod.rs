@@ -1,0 +1,382 @@
+//! Multi-tenant schedule serving.
+//!
+//! The ROADMAP's north star is serving tuned state to many concurrent
+//! clients, not re-deriving it per process. A [`ScheduleService`] owns
+//! one shared zoo of tuned schedules behind an `Arc` — the merged
+//! [`ScheduleStore`] plus a sharded measurement cache
+//! ([`ShardedMeasureCache`]) — and answers *sessions*: a tenant names a
+//! target model, a device, and an optional device-seconds budget, and
+//! receives the best transferable schedules, the predicted speedup, and
+//! full per-kernel provenance.
+//!
+//! Session semantics are deterministic in the request alone: the Eq. 1
+//! heuristic ranks tuning models, the session sweeps them best-first,
+//! and the budget bounds how many sources are swept using the
+//! order-independent *standalone* cost (never the charged cost, which
+//! depends on what other tenants already warmed). Two tenants issuing
+//! the same request therefore always receive bit-identical replies,
+//! regardless of interleaving — the concurrency proof lives in
+//! `rust/tests/service_stress.rs`.
+
+pub mod shard;
+
+pub use shard::{measure_pairs_sharded, ShardedMeasureCache};
+
+use crate::coordinator::{CacheStats, Ledger, MeasureCache};
+use crate::device::{model_time, DeviceProfile};
+use crate::ir::ModelGraph;
+use crate::report::Zoo;
+use crate::sched::Schedule;
+use crate::transfer::engine::assemble_transfer_result;
+use crate::transfer::{
+    rank_tuning_models, ScheduleStore, SweepPlan, TransferOptions, TransferResult,
+};
+use std::sync::Arc;
+
+/// One tenant's request.
+#[derive(Clone, Debug)]
+pub struct SessionRequest {
+    /// Target model name (any name `models::by_name` accepts).
+    pub model: String,
+    pub device: DeviceProfile,
+    /// Standalone device-seconds the tenant will spend on transfer
+    /// sweeps. `None` = unbounded: sweep the full mixed pool (§5.5).
+    /// `Some(b)` = sweep ranked tuning models best-first, stopping
+    /// before the sweep that would start beyond `b` (the first source
+    /// is always swept, so every session returns usable schedules).
+    pub budget_s: Option<f64>,
+    /// Measurement seed (part of every cache key).
+    pub seed: u64,
+}
+
+/// Per-kernel outcome + provenance in a [`SessionReply`].
+#[derive(Clone, Debug)]
+pub struct KernelChoice {
+    /// Unique-kernel index in the target graph.
+    pub kernel: usize,
+    pub class_sig: String,
+    /// Tuning model the winning schedule came from (`None` = no
+    /// compatible schedule beat the untuned default).
+    pub source_model: Option<String>,
+    /// Source kernel's shapes (provenance, Fig 4-style labels).
+    pub source_input_shape: Vec<u64>,
+    /// Standalone time of the selected schedule, seconds.
+    pub standalone_s: f64,
+    /// The schedule to compile with (untuned default when
+    /// `source_model` is `None`).
+    pub schedule: Schedule,
+}
+
+#[derive(Clone, Debug)]
+pub struct SessionReply {
+    pub target: String,
+    pub device: &'static str,
+    pub seed: u64,
+    /// Tuning models swept, in heuristic rank order ("mixed" pool =
+    /// every ranked source).
+    pub sources: Vec<String>,
+    pub choices: Vec<KernelChoice>,
+    pub untuned_model_s: f64,
+    pub tuned_model_s: f64,
+    /// Order-independent standalone cost of everything this session
+    /// swept (what the session would have cost on a cold cache).
+    pub standalone_search_time_s: f64,
+    /// Device-seconds this session actually charged (0 when fully
+    /// served from the shared cache).
+    pub charged_search_time_s: f64,
+}
+
+impl SessionReply {
+    /// Predicted end-to-end speedup over the untuned target.
+    pub fn predicted_speedup(&self) -> f64 {
+        self.untuned_model_s / self.tuned_model_s
+    }
+}
+
+struct Inner {
+    models: Vec<ModelGraph>,
+    store: ScheduleStore,
+    cache: ShardedMeasureCache,
+}
+
+/// A shareable handle to the serving state (cheap to clone; all clones
+/// serve the same store and sharded cache).
+#[derive(Clone)]
+pub struct ScheduleService {
+    inner: Arc<Inner>,
+}
+
+impl ScheduleService {
+    /// Build a service from a schedule store + the model graphs it can
+    /// serve, with a fresh cache split into `shards`.
+    pub fn new(store: ScheduleStore, models: Vec<ModelGraph>, shards: usize) -> ScheduleService {
+        ScheduleService {
+            inner: Arc::new(Inner { models, store, cache: ShardedMeasureCache::new(shards) }),
+        }
+    }
+
+    /// Promote a built zoo into a service: the zoo's store and models
+    /// move in, and its (possibly artifact-warmed) measurement cache is
+    /// redistributed across `shards`.
+    pub fn from_zoo(zoo: Zoo, shards: usize) -> ScheduleService {
+        let cache = ShardedMeasureCache::from_cache(&zoo.cache.borrow(), shards);
+        ScheduleService {
+            inner: Arc::new(Inner { models: zoo.models, store: zoo.store, cache }),
+        }
+    }
+
+    pub fn store(&self) -> &ScheduleStore {
+        &self.inner.store
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.inner.cache.stats()
+    }
+
+    /// Flat snapshot of the shared cache (for artifact persistence).
+    pub fn snapshot_cache(&self) -> MeasureCache {
+        self.inner.cache.to_cache()
+    }
+
+    fn target_graph(&self, name: &str) -> anyhow::Result<ModelGraph> {
+        if let Some(m) = self.inner.models.iter().find(|m| m.name == name) {
+            return Ok(m.clone());
+        }
+        crate::models::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model `{name}`"))
+    }
+
+    /// Store slice holding the records of `sources` (in store order —
+    /// deterministic sweep plans).
+    fn slice_of(&self, sources: &[String]) -> ScheduleStore {
+        ScheduleStore {
+            records: self
+                .inner
+                .store
+                .records
+                .iter()
+                .filter(|r| sources.iter().any(|s| *s == r.source_model))
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// One standalone sweep of `slice` onto `target` through the shared
+    /// sharded cache.
+    fn sweep(
+        &self,
+        target: &ModelGraph,
+        slice: &ScheduleStore,
+        label: &str,
+        device: &DeviceProfile,
+        seed: u64,
+    ) -> TransferResult {
+        let mut ledger = Ledger::new();
+        let plan = SweepPlan::build(target, slice, &TransferOptions::default());
+        let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
+        let candidates = measure_pairs_sharded(
+            &candidate_jobs,
+            &candidate_contents,
+            device,
+            seed,
+            &self.inner.cache,
+            &mut ledger,
+        );
+        let (default_jobs, default_contents) = plan.default_jobs(target);
+        let defaults = measure_pairs_sharded(
+            &default_jobs,
+            &default_contents,
+            device,
+            seed,
+            &self.inner.cache,
+            &mut ledger,
+        );
+        assemble_transfer_result(target, &plan, candidates, defaults, ledger, device, label)
+    }
+
+    /// Serve one session. See [`SessionRequest`] for the budget
+    /// semantics; the reply is a pure function of the request.
+    pub fn open_session(&self, req: &SessionRequest) -> anyhow::Result<SessionReply> {
+        let target = self.target_graph(&req.model)?;
+        let ranked = rank_tuning_models(&target, &self.inner.store, &req.device);
+        let ranked_names: Vec<String> = ranked.into_iter().map(|(name, _)| name).collect();
+
+        // Which sources to sweep, and the per-sweep results.
+        let mut swept: Vec<String> = Vec::new();
+        let mut results: Vec<(TransferResult, ScheduleStore)> = Vec::new();
+        match req.budget_s {
+            None => {
+                // Unbounded: one mixed-pool sweep over every source.
+                let slice = self.slice_of(&ranked_names);
+                let res = self.sweep(&target, &slice, "mixed", &req.device, req.seed);
+                swept = ranked_names;
+                results.push((res, slice));
+            }
+            Some(budget) => {
+                let mut spent = 0.0f64;
+                for name in &ranked_names {
+                    if !swept.is_empty() && spent >= budget {
+                        break;
+                    }
+                    let slice = self.slice_of(std::slice::from_ref(name));
+                    let res = self.sweep(&target, &slice, name, &req.device, req.seed);
+                    spent += res.standalone_search_time_s();
+                    swept.push(name.clone());
+                    results.push((res, slice));
+                }
+            }
+        }
+
+        // Merge per-kernel winners across the swept sources (best
+        // standalone time; earlier-ranked source wins exact ties).
+        let mut choices: Vec<KernelChoice> = Vec::with_capacity(target.kernels.len());
+        for (ki, kernel) in target.kernels.iter().enumerate() {
+            let untuned_s = results
+                .first()
+                .map(|(r, _)| r.sweeps[ki].untuned_s)
+                .unwrap_or_else(|| {
+                    // Empty store (no sources at all): measure nothing,
+                    // report the deterministic untuned time.
+                    crate::device::untuned_kernel_times(&target, &req.device)[ki]
+                });
+            let mut choice = KernelChoice {
+                kernel: ki,
+                class_sig: kernel.class_signature(),
+                source_model: None,
+                source_input_shape: kernel.input_shape.clone(),
+                standalone_s: untuned_s,
+                schedule: Schedule::untuned_default(kernel),
+            };
+            for (res, slice) in &results {
+                let sweep = &res.sweeps[ki];
+                if let (Some(ri), Some(sched)) = (sweep.chosen, &sweep.chosen_schedule) {
+                    if sweep.chosen_s < choice.standalone_s {
+                        let rec = &slice.records[ri];
+                        choice.source_model = Some(rec.source_model.clone());
+                        choice.source_input_shape = rec.source_input_shape.clone();
+                        choice.standalone_s = sweep.chosen_s;
+                        choice.schedule = sched.clone();
+                    }
+                }
+            }
+            choices.push(choice);
+        }
+
+        let tuned_model_s = if results.len() == 1 {
+            // Single sweep: identical to the engine's own compile.
+            results[0].0.tuned_model_s
+        } else {
+            model_time(&target, &req.device, |k| choices[k].schedule.clone())
+        };
+        let untuned_model_s = results
+            .first()
+            .map(|(r, _)| r.untuned_model_s)
+            .unwrap_or_else(|| crate::device::untuned_model_time(&target, &req.device));
+
+        Ok(SessionReply {
+            target: target.name.clone(),
+            device: req.device.name,
+            seed: req.seed,
+            sources: swept,
+            choices,
+            untuned_model_s,
+            tuned_model_s,
+            standalone_search_time_s: results
+                .iter()
+                .map(|(r, _)| r.standalone_search_time_s())
+                .sum(),
+            charged_search_time_s: results.iter().map(|(r, _)| r.search_time_s()).sum(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autosched::{tune_model, TuneOptions};
+    use crate::ir::KernelBuilder;
+
+    fn dense_service() -> ScheduleService {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let opts = TuneOptions {
+            trials: 96,
+            batch_size: 16,
+            population: 32,
+            generations: 2,
+            ..Default::default()
+        };
+        let mut store = ScheduleStore::new();
+        let mut models = Vec::new();
+        for (name, n) in [("SrcA", 512u64), ("SrcB", 1024u64)] {
+            let mut g = ModelGraph::new(name);
+            g.push(KernelBuilder::dense(n, n, n, &[]));
+            let res = tune_model(&g, &prof, &opts);
+            store.add_tuning(&g, &res);
+            models.push(g);
+        }
+        let mut target = ModelGraph::new("TargetDense");
+        target.push(KernelBuilder::dense(768, 768, 768, &[]));
+        models.push(target);
+        ScheduleService::new(store, models, 4)
+    }
+
+    fn request(budget: Option<f64>) -> SessionRequest {
+        SessionRequest {
+            model: "TargetDense".into(),
+            device: DeviceProfile::xeon_e5_2620(),
+            budget_s: budget,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn session_returns_schedules_with_provenance() {
+        let svc = dense_service();
+        let reply = svc.open_session(&request(None)).unwrap();
+        assert_eq!(reply.target, "TargetDense");
+        assert_eq!(reply.sources.len(), 2, "mixed pool sweeps every source");
+        assert_eq!(reply.choices.len(), 1);
+        let c = &reply.choices[0];
+        assert!(c.source_model.is_some(), "dense schedules must transfer");
+        assert!(reply.predicted_speedup() > 1.0);
+        assert!(reply.standalone_search_time_s > 0.0);
+    }
+
+    #[test]
+    fn zero_budget_sweeps_exactly_the_first_choice() {
+        let svc = dense_service();
+        let reply = svc.open_session(&request(Some(0.0))).unwrap();
+        assert_eq!(reply.sources.len(), 1, "always sweep the first source, never more");
+        let unbounded = svc.open_session(&request(None)).unwrap();
+        assert!(reply.standalone_search_time_s <= unbounded.standalone_search_time_s);
+        // More budget can only improve (or tie) each kernel's
+        // standalone pick (end-to-end comparisons would be confounded
+        // by inter-kernel boundary effects).
+        for (u, m) in unbounded.choices.iter().zip(&reply.choices) {
+            assert!(u.standalone_s <= m.standalone_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn warm_cache_never_changes_a_reply() {
+        let svc = dense_service();
+        let first = svc.open_session(&request(None)).unwrap();
+        let second = svc.open_session(&request(None)).unwrap();
+        assert_eq!(first.tuned_model_s.to_bits(), second.tuned_model_s.to_bits());
+        assert_eq!(
+            first.standalone_search_time_s.to_bits(),
+            second.standalone_search_time_s.to_bits(),
+            "standalone cost is order-independent"
+        );
+        assert_eq!(second.charged_search_time_s, 0.0, "second tenant rides the cache");
+        assert!(first.charged_search_time_s > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let svc = dense_service();
+        let mut req = request(None);
+        req.model = "NoSuchModel".into();
+        assert!(svc.open_session(&req).is_err());
+    }
+}

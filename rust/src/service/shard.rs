@@ -1,0 +1,265 @@
+//! Sharded measurement cache + concurrent sweep executor.
+//!
+//! The single-tenant engine owns a `&mut MeasureCache`; a serving
+//! deployment has many tenants sweeping against one shared cache. One
+//! global lock would serialize them, so the cache is split into N
+//! shards (selected by cache-key hash), each behind its own mutex —
+//! lookups and inserts take one short per-key lock, and tenants whose
+//! working sets land on different shards never contend.
+//!
+//! Correctness under concurrency comes from the same property that
+//! makes the flat cache transparent: a pair's measurement is a pure
+//! function of (content, seed, device) — noise is content-derived, not
+//! order-derived — so when two tenants race on the same missing pair,
+//! both measure the *same* value and the double insert is idempotent.
+//! Results are therefore bit-identical to a single-threaded run; only
+//! the per-tenant *charged* ledgers (who paid for a shared miss) can
+//! vary with interleaving, which is why reported numbers always use the
+//! order-independent cold ledger (see `transfer::engine`).
+
+use crate::coordinator::cache::{sweep_key, CacheStats, MeasureCache, Resolution};
+use crate::coordinator::pool::{measure_with_noise, noise_seed, CachedBatch, PairOutcome};
+use crate::coordinator::Ledger;
+use crate::device::DeviceProfile;
+use crate::ir::Kernel;
+use crate::sched::{apply, ApplyError, Schedule};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A [`MeasureCache`] split across `n` independently locked shards.
+/// Shards are unbounded (serving caches persist via the artifact store
+/// rather than evict).
+#[derive(Debug)]
+pub struct ShardedMeasureCache {
+    shards: Vec<Mutex<MeasureCache>>,
+}
+
+impl ShardedMeasureCache {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        ShardedMeasureCache {
+            shards: (0..n).map(|_| Mutex::new(MeasureCache::new())).collect(),
+        }
+    }
+
+    /// Distribute a flat snapshot (e.g. a zoo's cache, or one loaded
+    /// from the artifact store) across shards.
+    pub fn from_cache(cache: &MeasureCache, n_shards: usize) -> Self {
+        let sharded = Self::new(n_shards);
+        for (key, runtime) in cache.entries_lru() {
+            sharded.shard(key).lock().unwrap().insert(key, runtime);
+        }
+        sharded.reset_stats(); // seeding must not look like activity
+        sharded
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<MeasureCache> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn insert(&self, key: u64, runtime: Option<f64>) {
+        self.shard(key).lock().unwrap().insert(key, runtime);
+    }
+
+    pub fn peek(&self, key: u64) -> Option<Option<f64>> {
+        self.shard(key).lock().unwrap().peek(key)
+    }
+
+    /// Merged counters across shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for s in &self.shards {
+            total.merge(&s.lock().unwrap().stats);
+        }
+        total
+    }
+
+    pub fn reset_stats(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().reset_stats();
+        }
+    }
+
+    /// Flatten into one [`MeasureCache`] (for artifact persistence).
+    /// Counters are reset on the snapshot — contents, not activity.
+    pub fn to_cache(&self) -> MeasureCache {
+        let mut flat = MeasureCache::new();
+        for s in &self.shards {
+            for (key, runtime) in s.lock().unwrap().entries_lru() {
+                flat.insert(key, runtime);
+            }
+        }
+        flat.reset_stats();
+        flat
+    }
+}
+
+/// The sharded counterpart of
+/// [`measure_pairs_cached_precomputed`](crate::coordinator::measure_pairs_cached_precomputed):
+/// same dedup-then-resolve-then-measure pipeline and the same
+/// transparency invariant, but each resolution locks only the key's
+/// shard, so concurrent tenants interleave freely. The ledger charges
+/// this caller's unique misses (sequential device semantics per
+/// tenant); racing tenants may both pay for the same pair once — an
+/// honest account of what each tenant's device ran.
+pub fn measure_pairs_sharded(
+    jobs: &[(&Kernel, &Schedule)],
+    contents: &[u64],
+    profile: &DeviceProfile,
+    seed: u64,
+    cache: &ShardedMeasureCache,
+    ledger: &mut Ledger,
+) -> CachedBatch {
+    // KEEP IN SYNC with `pool::measure_pairs_cached_precomputed`: same
+    // dedup/resolve/measure/charge pipeline, differing only in cache
+    // acquisition (per-key shard lock vs `&mut`). Both copies are held
+    // to the transparency invariant by `sharded_matches_unsharded...`
+    // below and the property tests; a semantic change to either
+    // pipeline must land in both.
+    assert_eq!(jobs.len(), contents.len());
+
+    /// Where job `i`'s outcome comes from (mirrors the flat executor).
+    #[derive(Clone)]
+    enum Slot {
+        Hit(f64),
+        HitInvalid(ApplyError),
+        Miss(usize),
+    }
+
+    let keys: Vec<u64> = contents.iter().map(|&c| sweep_key(c, seed, profile)).collect();
+
+    let mut slot_of_key: HashMap<u64, usize> = HashMap::new();
+    let mut unique_jobs: Vec<(&Kernel, &Schedule)> = Vec::new();
+    let mut unique_keys: Vec<u64> = Vec::new();
+    let mut unique_noise: Vec<u64> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
+    for (ji, &key) in keys.iter().enumerate() {
+        if let Some(&si) = slot_of_key.get(&key) {
+            cache.shard(key).lock().unwrap().stats.dedup_hits += 1;
+            let dup = slots[si].clone();
+            slots.push(dup);
+            continue;
+        }
+        let (kernel, sched) = jobs[ji];
+        let resolution = {
+            // One short per-key critical section; measurement happens
+            // outside every lock.
+            let mut shard = cache.shard(key).lock().unwrap();
+            shard.resolve_with(key, || apply(sched, kernel).map(|_| ()))
+        };
+        let slot = match resolution {
+            Resolution::Hit(t) => Slot::Hit(t),
+            Resolution::HitInvalid(e) => Slot::HitInvalid(e),
+            Resolution::Corrupt | Resolution::Miss => {
+                let u = unique_jobs.len();
+                unique_jobs.push(jobs[ji]);
+                unique_keys.push(key);
+                unique_noise.push(noise_seed(seed, contents[ji]));
+                Slot::Miss(u)
+            }
+        };
+        slot_of_key.insert(key, slots.len());
+        slots.push(slot);
+    }
+
+    let measured = measure_with_noise(&unique_jobs, profile, &unique_noise);
+    for (key, outcome) in unique_keys.iter().zip(&measured) {
+        match outcome.runtime() {
+            Some(t) => ledger.charge_measure(profile, t),
+            None => ledger.charge_compile_fail(profile),
+        }
+        cache.shard(*key).lock().unwrap().insert(*key, outcome.runtime());
+    }
+
+    let outcomes: Vec<PairOutcome> = slots
+        .into_iter()
+        .map(|slot| match slot {
+            Slot::Miss(u) => measured[u].clone(),
+            Slot::Hit(t) => PairOutcome::Measured(t),
+            Slot::HitInvalid(e) => PairOutcome::Invalid(e),
+        })
+        .collect();
+    CachedBatch { outcomes, keys }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{content_key, measure_pairs};
+    use crate::ir::KernelBuilder;
+
+    fn jobs_and_contents<'a>(
+        pairs: &'a [(&'a Kernel, &'a Schedule)],
+    ) -> (Vec<(&'a Kernel, &'a Schedule)>, Vec<u64>) {
+        let contents = pairs.iter().map(|&(k, s)| content_key(k, s)).collect();
+        (pairs.to_vec(), contents)
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_and_warm_is_free() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k1 = KernelBuilder::dense(256, 256, 256, &[]);
+        let k2 = KernelBuilder::dense(512, 512, 512, &[]);
+        let s1 = Schedule::untuned_default(&k1);
+        let s2 = Schedule::untuned_default(&k2);
+        let pairs: Vec<(&Kernel, &Schedule)> = vec![(&k1, &s1), (&k2, &s2), (&k1, &s1)];
+        let (jobs, contents) = jobs_and_contents(&pairs);
+
+        let plain = measure_pairs(&jobs, &prof, 7);
+        let cache = ShardedMeasureCache::new(4);
+        let mut ledger = Ledger::new();
+        let cold = measure_pairs_sharded(&jobs, &contents, &prof, 7, &cache, &mut ledger);
+        for (a, b) in plain.iter().zip(&cold.outcomes) {
+            assert_eq!(a.runtime(), b.runtime(), "sharding must be transparent");
+        }
+        assert_eq!(ledger.measurements, 2, "duplicate pair measured once");
+        assert_eq!(cache.stats().dedup_hits, 1);
+
+        let mut warm_ledger = Ledger::new();
+        let warm = measure_pairs_sharded(&jobs, &contents, &prof, 7, &cache, &mut warm_ledger);
+        assert_eq!(warm_ledger.seconds, 0.0);
+        for (a, b) in plain.iter().zip(&warm.outcomes) {
+            assert_eq!(a.runtime(), b.runtime());
+        }
+    }
+
+    #[test]
+    fn from_cache_seeds_shards_and_to_cache_flattens_back() {
+        let mut flat = MeasureCache::new();
+        for key in 0..64u64 {
+            flat.insert(key, if key % 5 == 0 { None } else { Some(key as f64 * 1e-4) });
+        }
+        let sharded = ShardedMeasureCache::from_cache(&flat, 8);
+        assert_eq!(sharded.n_shards(), 8);
+        assert_eq!(sharded.len(), 64);
+        assert_eq!(sharded.stats(), CacheStats::default(), "seeding is not activity");
+        for key in 0..64u64 {
+            assert_eq!(sharded.peek(key), flat.peek(key));
+        }
+        let back = sharded.to_cache();
+        assert_eq!(back.len(), 64);
+        for key in 0..64u64 {
+            assert_eq!(back.peek(key), flat.peek(key));
+        }
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_global_lock() {
+        let cache = ShardedMeasureCache::new(0); // clamped to 1
+        assert_eq!(cache.n_shards(), 1);
+        cache.insert(9, Some(0.5));
+        assert_eq!(cache.peek(9), Some(Some(0.5)));
+    }
+}

@@ -23,7 +23,8 @@
 
 use super::store::ScheduleStore;
 use crate::coordinator::{
-    content_from_parts, content_key, measure_pairs_cached_precomputed, Ledger, MeasureCache,
+    content_from_parts, content_key, measure_pairs_cached_precomputed, CachedBatch, Ledger,
+    MeasureCache,
 };
 use crate::device::{model_time, untuned_model_time, DeviceProfile};
 use crate::ir::{Kernel, ModelGraph};
@@ -119,6 +120,30 @@ impl SweepPlan {
     /// executor may measure fewer after dedup).
     pub fn candidate_pairs(&self) -> usize {
         self.jobs.len()
+    }
+
+    /// The candidate sweep as (kernel, schedule) jobs plus their
+    /// precomputed content keys, ready for a cached executor.
+    pub fn candidate_jobs<'a>(
+        &'a self,
+        target: &'a ModelGraph,
+    ) -> (Vec<(&'a Kernel, &'a Schedule)>, Vec<u64>) {
+        let jobs: Vec<(&Kernel, &Schedule)> =
+            self.jobs.iter().map(|j| (&target.kernels[j.kernel], &j.schedule)).collect();
+        let contents: Vec<u64> = self.jobs.iter().map(|j| j.content).collect();
+        (jobs, contents)
+    }
+
+    /// The per-kernel untuned-default measurements as jobs + content
+    /// keys (Fig 4's baseline bars; also the fallback selection).
+    pub fn default_jobs<'a>(
+        &'a self,
+        target: &'a ModelGraph,
+    ) -> (Vec<(&'a Kernel, &'a Schedule)>, Vec<u64>) {
+        let jobs: Vec<(&Kernel, &Schedule)> =
+            target.kernels.iter().zip(&self.defaults).collect();
+        let contents: Vec<u64> = jobs.iter().map(|&(k, d)| content_key(k, d)).collect();
+        (jobs, contents)
     }
 }
 
@@ -241,9 +266,7 @@ pub fn transfer_tune_cached(
     // Dispatch the candidate sweep and the untuned baselines through the
     // cached executor: dedup first, then parallel measurement of unique
     // misses, ledger charged per miss (sequential device semantics).
-    let candidate_jobs: Vec<(&Kernel, &Schedule)> =
-        plan.jobs.iter().map(|j| (&target.kernels[j.kernel], &j.schedule)).collect();
-    let candidate_contents: Vec<u64> = plan.jobs.iter().map(|j| j.content).collect();
+    let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
     let candidates = measure_pairs_cached_precomputed(
         &candidate_jobs,
         &candidate_contents,
@@ -253,10 +276,7 @@ pub fn transfer_tune_cached(
         &mut ledger,
     );
 
-    let default_jobs: Vec<(&Kernel, &Schedule)> =
-        target.kernels.iter().zip(&plan.defaults).collect();
-    let default_contents: Vec<u64> =
-        default_jobs.iter().map(|&(k, d)| content_key(k, d)).collect();
+    let (default_jobs, default_contents) = plan.default_jobs(target);
     let defaults_batch = measure_pairs_cached_precomputed(
         &default_jobs,
         &default_contents,
@@ -266,6 +286,22 @@ pub fn transfer_tune_cached(
         &mut ledger,
     );
 
+    assemble_transfer_result(target, &plan, candidates, defaults_batch, ledger, profile, source_label)
+}
+
+/// Assemble a [`TransferResult`] from the measured candidate/default
+/// batches — the shared back half of every sweep executor (the
+/// single-cache engine above and the service layer's sharded executor),
+/// so selection and cold-ledger semantics cannot drift between them.
+pub fn assemble_transfer_result(
+    target: &ModelGraph,
+    plan: &SweepPlan,
+    candidates: CachedBatch,
+    defaults_batch: CachedBatch,
+    ledger: Ledger,
+    profile: &DeviceProfile,
+    source_label: &str,
+) -> TransferResult {
     // Cold-equivalent accounting: charge the first occurrence of every
     // unique pair, in the order a fresh-cache run would have measured
     // them. This reproduces a standalone run's ledger exactly (same

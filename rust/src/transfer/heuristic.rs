@@ -30,14 +30,15 @@ pub fn class_proportions(graph: &ModelGraph, profile: &DeviceProfile) -> Vec<(St
         .collect()
 }
 
-/// Eq. 1 score of tuning-model candidate `t_model` for `target`.
+/// Eq. 1 score of tuning-model candidate `t_model` for a target whose
+/// per-class untuned-time proportions are `proportions` (from
+/// [`class_proportions`]). The target graph itself does not appear in
+/// Eq. 1 — only its class proportions do — so it is not a parameter.
 pub fn eq1_score(
-    target: &ModelGraph,
     proportions: &[(String, f64)],
     store: &ScheduleStore,
     t_model: &str,
 ) -> f64 {
-    let _ = target;
     proportions
         .iter()
         .map(|(sig, p)| {
@@ -61,7 +62,7 @@ pub fn rank_tuning_models(
         .into_iter()
         .filter(|m| *m != target.name)
         .map(|m| {
-            let s = eq1_score(target, &props, store, &m);
+            let s = eq1_score(&props, store, &m);
             (m, s)
         })
         .collect();
@@ -140,8 +141,8 @@ mod tests {
             store.records.push(fake_record("B", "conv2d_bias_relu", &conv));
         }
         let props = class_proportions(&target, &prof);
-        let sa = eq1_score(&target, &props, &store, "A");
-        let sb = eq1_score(&target, &props, &store, "B");
+        let sa = eq1_score(&props, &store, "A");
+        let sb = eq1_score(&props, &store, "B");
         // 4x the schedules only doubles the score (sqrt damping).
         assert!((sb / sa - 2.0).abs() < 1e-9);
     }

@@ -14,8 +14,8 @@ pub mod sampling;
 pub mod store;
 
 pub use engine::{
-    transfer_tune, transfer_tune_cached, transfer_tune_one_to_one, transfer_tune_with,
-    KernelSweep, SweepJob, SweepPlan, TransferOptions, TransferResult,
+    assemble_transfer_result, transfer_tune, transfer_tune_cached, transfer_tune_one_to_one,
+    transfer_tune_with, KernelSweep, SweepJob, SweepPlan, TransferOptions, TransferResult,
 };
 pub use heuristic::{class_proportions, eq1_score, rank_tuning_models};
 pub use pairwise::{refine_pairwise, RefinedResult};

@@ -55,11 +55,18 @@ impl ScheduleStore {
                 schedule: best.schedule.clone(),
             });
         }
-        // Deterministic order regardless of HashMap iteration.
+        // Deterministic order regardless of HashMap iteration. The
+        // canonical schedule serialization breaks exact (model, class,
+        // shape, cost) ties so the order is total — a warm-started zoo
+        // rebuilding this store from persisted tunings must reproduce
+        // it byte-for-byte in any process.
         self.records.sort_by(|a, b| {
-            (&a.source_model, &a.class_sig, &a.source_input_shape, &a.source_cost_s)
-                .partial_cmp(&(&b.source_model, &b.class_sig, &b.source_input_shape, &b.source_cost_s))
-                .unwrap()
+            (&a.source_model, &a.class_sig, &a.source_input_shape)
+                .cmp(&(&b.source_model, &b.class_sig, &b.source_input_shape))
+                .then_with(|| a.source_cost_s.total_cmp(&b.source_cost_s))
+                .then_with(|| {
+                    serialize::to_string(&a.schedule).cmp(&serialize::to_string(&b.schedule))
+                })
         });
     }
 
@@ -97,10 +104,12 @@ impl ScheduleStore {
 
     // ---- persistence (JSON lines, Ansor-log style) ----------------------
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
+    /// Serialize to the canonical JSONL text (one record per line,
+    /// sorted-key compact JSON). This exact byte format is pinned by the
+    /// golden fixture `rust/tests/golden/schedule_store.jsonl` — a
+    /// deliberate change must regenerate the fixture and bump the
+    /// artifact-store format version (`crate::artifact`).
+    pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for r in &self.records {
             let j = Json::obj(vec![
@@ -116,19 +125,20 @@ impl ScheduleStore {
             out.push_str(&j.to_compact());
             out.push('\n');
         }
-        std::fs::write(path, out)?;
-        Ok(())
+        out
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<ScheduleStore> {
-        let text = std::fs::read_to_string(path)?;
+    /// Parse the JSONL text produced by [`ScheduleStore::to_jsonl`].
+    /// Errors carry the 1-based line number (prefixed with `context` —
+    /// a path or artifact label) because store files are hand-editable.
+    pub fn from_jsonl(text: &str, context: &str) -> anyhow::Result<ScheduleStore> {
         let mut records = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
             let j = json::parse(line)
-                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+                .map_err(|e| anyhow::anyhow!("{context}:{}: {e}", lineno + 1))?;
             records.push(StoreRecord {
                 source_model: j.req("model")?.as_str().unwrap_or_default().to_string(),
                 class_sig: j.req("class")?.as_str().unwrap_or_default().to_string(),
@@ -144,6 +154,19 @@ impl ScheduleStore {
             });
         }
         Ok(ScheduleStore { records })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ScheduleStore> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_jsonl(&text, &path.display().to_string())
     }
 }
 

@@ -1,0 +1,137 @@
+//! Integration tests for the persistent artifact store: a zoo built
+//! against a `--cache-dir` can be rebuilt by a fresh process-equivalent
+//! with **zero tuning trials**, **zero charged device-seconds**, and
+//! **bit-identical** table/figure output — the warm-start proof of the
+//! artifact subsystem.
+
+use std::path::PathBuf;
+use transfer_tuning::artifact::{self, ArtifactStore};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{figures, tables, ExperimentConfig, Zoo};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_warmstart_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn config() -> ExperimentConfig {
+    ExperimentConfig { trials: 100, seed: 21, device: DeviceProfile::xeon_e5_2620() }
+}
+
+/// The report surface used for the bit-identity comparison: tables and
+/// figures that exercise tunings, the heuristic, one-to-one sweeps and
+/// pooled sweeps (fig8 warms the widest pair set).
+fn render_reports(zoo: &Zoo) -> Vec<String> {
+    vec![
+        tables::table2(zoo).render(),
+        tables::table4(zoo).render(),
+        figures::fig1(zoo).render(),
+        figures::fig5(zoo).render(),
+        figures::fig8(zoo).render(),
+    ]
+}
+
+#[test]
+fn warm_rebuild_runs_zero_trials_zero_device_seconds_bit_identical() {
+    let dir = tmp_dir("full");
+
+    // ---- cold run ("process 1"): tune everything, persist ----------
+    let mut cold_artifacts = ArtifactStore::open(&dir).unwrap();
+    let cold_zoo = Zoo::build_incremental(config(), Some(&mut cold_artifacts), |_| {});
+    assert_eq!(cold_zoo.build_stats.models_tuned, 11);
+    assert_eq!(cold_zoo.build_stats.models_from_artifacts, 0);
+    assert!(cold_zoo.build_stats.trials_run > 0);
+    assert!(cold_zoo.build_stats.tuning_seconds_charged > 0.0);
+    let cold_reports = render_reports(&cold_zoo);
+    cold_zoo.persist(&mut cold_artifacts).unwrap();
+    drop(cold_zoo);
+    drop(cold_artifacts);
+
+    // ---- warm run ("process 2"): fresh store handle over the dir ---
+    let mut warm_artifacts = ArtifactStore::open(&dir).unwrap();
+    assert!(!warm_artifacts.is_empty(), "artifacts persisted to disk");
+    let warm_zoo = Zoo::build_incremental(config(), Some(&mut warm_artifacts), |_| {});
+
+    // Zero tuning trials, zero tuning device-seconds.
+    assert_eq!(warm_zoo.build_stats.models_tuned, 0, "warm build must not tune");
+    assert_eq!(warm_zoo.build_stats.models_from_artifacts, 11);
+    assert_eq!(warm_zoo.build_stats.trials_run, 0);
+    assert_eq!(warm_zoo.build_stats.tuning_seconds_charged, 0.0);
+
+    // The rehydrated measurement cache serves every sweep the reports
+    // re-run: zero charged device-seconds anywhere in the warm pass.
+    let warm_reports = render_reports(&warm_zoo);
+    let stats = warm_zoo.cache_stats();
+    assert_eq!(stats.misses, 0, "warm reports must not re-measure any pair");
+    assert!(stats.hits + stats.dedup_hits > 0);
+    let target = warm_zoo.models[warm_zoo.model_index("ResNet18").unwrap()].clone();
+    let pooled = warm_zoo.transfer_pooled(&target);
+    assert_eq!(pooled.search_time_s(), 0.0, "warm pooled sweep is free");
+    assert_eq!(pooled.ledger.measurements, 0);
+    assert!(pooled.standalone_search_time_s() > 0.0, "reported cost stays standalone");
+
+    // Bit-identical output, table for table.
+    assert_eq!(cold_reports.len(), warm_reports.len());
+    for (i, (cold, warm)) in cold_reports.iter().zip(&warm_reports).enumerate() {
+        assert_eq!(cold, warm, "report {i} drifted between cold and warm builds");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn incremental_rebuild_tunes_only_the_missing_model() {
+    let dir = tmp_dir("partial");
+    let cfg = config();
+
+    let mut artifacts = ArtifactStore::open(&dir).unwrap();
+    let zoo = Zoo::build_incremental(cfg.clone(), Some(&mut artifacts), |_| {});
+    let resnet18_tuning = zoo.tunings[zoo.model_index("ResNet18").unwrap()].clone();
+    drop(zoo);
+    drop(artifacts);
+
+    // Corrupt exactly one model's tuning artifact on disk.
+    let key = artifact::tuning_key("ResNet18", &cfg.device, cfg.trials, cfg.seed);
+    let file = dir.join(format!("tuning_{key:016x}.json"));
+    assert!(file.exists(), "per-model tuning artifact file layout changed?");
+    std::fs::write(&file, "garbage").unwrap();
+
+    let mut artifacts = ArtifactStore::open(&dir).unwrap();
+    let rebuilt = Zoo::build_incremental(cfg, Some(&mut artifacts), |_| {});
+    assert_eq!(rebuilt.build_stats.models_tuned, 1, "only the corrupted model re-tunes");
+    assert_eq!(rebuilt.build_stats.models_from_artifacts, 10);
+    assert_eq!(artifacts.stats.rejected, 1);
+
+    // Deterministic tuner: the re-tuned result equals the original.
+    let back = &rebuilt.tunings[rebuilt.model_index("ResNet18").unwrap()];
+    assert_eq!(back.search_time_s.to_bits(), resnet18_tuning.search_time_s.to_bits());
+    assert_eq!(back.trials_used, resnet18_tuning.trials_used);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn artifact_keys_isolate_configurations() {
+    // Same directory, different (trials | seed | device): nothing is
+    // shared, everything re-tunes — stale state can never leak across
+    // configurations because it is keyed out, not versioned out.
+    let dir = tmp_dir("isolation");
+    let mut artifacts = ArtifactStore::open(&dir).unwrap();
+    let base = ExperimentConfig { trials: 60, seed: 3, device: DeviceProfile::xeon_e5_2620() };
+    let zoo = Zoo::build_incremental(base.clone(), Some(&mut artifacts), |_| {});
+    assert_eq!(zoo.build_stats.models_tuned, 11);
+    drop(zoo);
+
+    let other_seed = ExperimentConfig { seed: 4, ..base.clone() };
+    let zoo2 = Zoo::build_incremental(other_seed, Some(&mut artifacts), |_| {});
+    assert_eq!(zoo2.build_stats.models_from_artifacts, 0, "seed is part of the key");
+    drop(zoo2);
+
+    // The original configuration still warm-starts afterwards.
+    let zoo3 = Zoo::build_incremental(base, Some(&mut artifacts), |_| {});
+    assert_eq!(zoo3.build_stats.models_tuned, 0);
+    assert_eq!(zoo3.build_stats.models_from_artifacts, 11);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,166 @@
+//! Property + golden tests for the schedule store's persistence.
+//!
+//! The store is now a first-class artifact (`crate::artifact`): its
+//! JSONL bytes travel between processes and tenants, so (a) random
+//! stores must round-trip save -> load to full field equality, and
+//! (b) the exact on-disk format is pinned by
+//! `rust/tests/golden/schedule_store.jsonl` — drift there silently
+//! invalidates every persisted artifact checksum. A deliberate format
+//! change must regenerate the fixture and bump
+//! `artifact::ARTIFACT_FORMAT_VERSION` in the same commit.
+
+use std::path::PathBuf;
+use transfer_tuning::autosched::random_schedule;
+use transfer_tuning::ir::{AxisKind, Kernel, KernelBuilder, OpKind};
+use transfer_tuning::sched::{AxisTiling, Schedule};
+use transfer_tuning::transfer::{ScheduleStore, StoreRecord};
+use transfer_tuning::util::rng::Rng;
+
+fn kernel_pool() -> Vec<Kernel> {
+    vec![
+        KernelBuilder::dense(512, 512, 512, &[]),
+        KernelBuilder::dense(1024, 768, 512, &[]),
+        KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]),
+        KernelBuilder::depthwise_conv2d(1, 96, 28, 28, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu6]),
+        KernelBuilder::batch_matmul(12, 256, 64, 256, &[]),
+    ]
+}
+
+fn random_store(rng: &mut Rng, n: usize) -> ScheduleStore {
+    let pool = kernel_pool();
+    let mut store = ScheduleStore::new();
+    for i in 0..n {
+        let k = rng.choose(&pool);
+        store.records.push(StoreRecord {
+            source_model: format!("Model{}", i % 4),
+            class_sig: k.class_signature(),
+            source_input_shape: k.input_shape.clone(),
+            source_cost_s: rng.f64() * 1e-2,
+            schedule: random_schedule(k, rng),
+        });
+    }
+    store
+}
+
+#[test]
+fn prop_random_stores_roundtrip_to_equality() {
+    let mut rng = Rng::new(0x57073);
+    let path = std::env::temp_dir().join("tt_property_store.jsonl");
+    for round in 0..25 {
+        let store = random_store(&mut rng, 1 + (round % 20));
+        store.save(&path).unwrap();
+        let back = ScheduleStore::load(&path).unwrap();
+        assert_eq!(back.records.len(), store.records.len(), "round {round}");
+        for (a, b) in back.records.iter().zip(&store.records) {
+            assert_eq!(a.source_model, b.source_model, "round {round}");
+            assert_eq!(a.class_sig, b.class_sig, "round {round}");
+            assert_eq!(a.source_input_shape, b.source_input_shape, "round {round}");
+            // Bit-equal costs: the writer uses shortest-round-trip f64
+            // formatting, so persistence cannot perturb reported numbers.
+            assert_eq!(
+                a.source_cost_s.to_bits(),
+                b.source_cost_s.to_bits(),
+                "round {round}: cost drifted through disk"
+            );
+            assert_eq!(a.schedule, b.schedule, "round {round}");
+        }
+        // A second save of the loaded store is byte-identical (the
+        // format is canonical, not merely parseable).
+        assert_eq!(back.to_jsonl(), store.to_jsonl(), "round {round}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn prop_string_codec_matches_file_codec() {
+    let mut rng = Rng::new(0xFEED);
+    let store = random_store(&mut rng, 17);
+    let text = store.to_jsonl();
+    let back = ScheduleStore::from_jsonl(&text, "in-memory").unwrap();
+    assert_eq!(back.records.len(), 17);
+    let path = std::env::temp_dir().join("tt_property_store_codec.jsonl");
+    store.save(&path).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), text, "save == to_jsonl");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- golden fixture ---------------------------------------------------
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// Hand-constructed records covering both bool states, flat and deep
+/// tilings, integral and fractional costs.
+fn golden_store() -> ScheduleStore {
+    let mut store = ScheduleStore::new();
+    store.records.push(StoreRecord {
+        source_model: "GoldenSrc".into(),
+        class_sig: "dense".into(),
+        source_input_shape: vec![512, 512],
+        source_cost_s: 0.001,
+        schedule: Schedule {
+            class_sig: "dense".into(),
+            skeleton: vec![AxisKind::Spatial, AxisKind::Spatial, AxisKind::Reduction],
+            spatial: vec![AxisTiling::of(&[4, 8]), AxisTiling::of(&[16])],
+            reduction: vec![AxisTiling::of(&[8])],
+            parallel_levels: 1,
+            vectorize: true,
+            unroll_max: 16,
+            cache_write: false,
+        },
+    });
+    store.records.push(StoreRecord {
+        source_model: "GoldenSrc".into(),
+        class_sig: "conv2d_bias_relu".into(),
+        source_input_shape: vec![1, 64, 56, 56],
+        source_cost_s: 0.25,
+        schedule: Schedule {
+            class_sig: "conv2d_bias_relu".into(),
+            skeleton: vec![
+                AxisKind::Spatial,
+                AxisKind::Spatial,
+                AxisKind::Spatial,
+                AxisKind::Spatial,
+                AxisKind::Reduction,
+                AxisKind::Reduction,
+                AxisKind::Reduction,
+            ],
+            spatial: vec![
+                AxisTiling::flat(),
+                AxisTiling::flat(),
+                AxisTiling::of(&[2]),
+                AxisTiling::of(&[4, 2]),
+            ],
+            reduction: vec![AxisTiling::flat(), AxisTiling::of(&[2]), AxisTiling::of(&[4])],
+            parallel_levels: 2,
+            vectorize: false,
+            unroll_max: 0,
+            cache_write: true,
+        },
+    });
+    store
+}
+
+#[test]
+fn schedule_store_disk_format_is_stable() {
+    let fixture = std::fs::read_to_string(golden_dir().join("schedule_store.jsonl")).unwrap();
+    let store = golden_store();
+    assert_eq!(
+        store.to_jsonl(),
+        fixture,
+        "schedule-store JSONL format drifted; regenerate the fixture and bump \
+         artifact::ARTIFACT_FORMAT_VERSION if the change is deliberate"
+    );
+
+    // The fixture also loads back to exactly the constructed records.
+    let back = ScheduleStore::from_jsonl(&fixture, "golden").unwrap();
+    assert_eq!(back.records.len(), store.records.len());
+    for (a, b) in back.records.iter().zip(&store.records) {
+        assert_eq!(a.source_model, b.source_model);
+        assert_eq!(a.class_sig, b.class_sig);
+        assert_eq!(a.source_input_shape, b.source_input_shape);
+        assert_eq!(a.source_cost_s.to_bits(), b.source_cost_s.to_bits());
+        assert_eq!(a.schedule, b.schedule);
+    }
+}

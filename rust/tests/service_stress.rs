@@ -1,0 +1,132 @@
+//! Many-tenant stress test for the [`ScheduleService`]: >= 8 concurrent
+//! sessions against one shared sharded measurement cache must each
+//! receive a reply bit-identical to the single-threaded answer for the
+//! same (target, device, budget, seed) — the concurrency proof of the
+//! service layer. Determinism holds because pair noise is
+//! content-derived and budget decisions use the order-independent
+//! standalone ledger, so neither thread interleaving nor cache warmth
+//! can steer a session.
+
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::service::{ScheduleService, SessionReply, SessionRequest};
+
+fn requests() -> Vec<SessionRequest> {
+    let server = DeviceProfile::xeon_e5_2620();
+    let edge = DeviceProfile::cortex_a72();
+    vec![
+        SessionRequest { model: "ResNet18".into(), device: server.clone(), budget_s: None, seed: 21 },
+        SessionRequest { model: "ResNet50".into(), device: server.clone(), budget_s: Some(0.0), seed: 21 },
+        SessionRequest { model: "BERT".into(), device: server.clone(), budget_s: None, seed: 21 },
+        SessionRequest { model: "MobileNetV2".into(), device: server.clone(), budget_s: Some(1e7), seed: 21 },
+        SessionRequest { model: "GoogLeNet".into(), device: edge.clone(), budget_s: Some(0.0), seed: 21 },
+        SessionRequest { model: "ResNet18".into(), device: server, budget_s: None, seed: 22 },
+    ]
+}
+
+fn assert_replies_equal(a: &SessionReply, b: &SessionReply, ctx: &str) {
+    assert_eq!(a.target, b.target, "{ctx}: target");
+    assert_eq!(a.device, b.device, "{ctx}: device");
+    assert_eq!(a.seed, b.seed, "{ctx}: seed");
+    assert_eq!(a.sources, b.sources, "{ctx}: swept sources");
+    assert_eq!(a.untuned_model_s.to_bits(), b.untuned_model_s.to_bits(), "{ctx}: untuned");
+    assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits(), "{ctx}: tuned");
+    assert_eq!(
+        a.standalone_search_time_s.to_bits(),
+        b.standalone_search_time_s.to_bits(),
+        "{ctx}: standalone search time"
+    );
+    assert_eq!(a.choices.len(), b.choices.len(), "{ctx}: choice count");
+    for (ca, cb) in a.choices.iter().zip(&b.choices) {
+        assert_eq!(ca.kernel, cb.kernel, "{ctx}: kernel index");
+        assert_eq!(ca.class_sig, cb.class_sig, "{ctx}: class");
+        assert_eq!(ca.source_model, cb.source_model, "{ctx}: provenance");
+        assert_eq!(ca.source_input_shape, cb.source_input_shape, "{ctx}: shapes");
+        assert_eq!(ca.standalone_s.to_bits(), cb.standalone_s.to_bits(), "{ctx}: standalone");
+        assert_eq!(ca.schedule, cb.schedule, "{ctx}: schedule");
+    }
+    // NOT compared: charged_search_time_s — who pays for a shared miss
+    // legitimately depends on interleaving; the reply contents may not.
+}
+
+#[test]
+fn concurrent_sessions_match_single_threaded_replies() {
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 120, seed: 21, device: DeviceProfile::xeon_e5_2620() },
+        |_| {},
+    );
+    // Two service instances over identical tuned state: a fresh
+    // single-threaded reference, and the shared sharded one under test.
+    let reference = ScheduleService::new(zoo.store.clone(), zoo.models.clone(), 1);
+    let service = ScheduleService::from_zoo(zoo, 8);
+
+    let distinct = requests();
+    let expected: Vec<SessionReply> = distinct
+        .iter()
+        .map(|req| reference.open_session(req).expect("reference session"))
+        .collect();
+
+    // 12 tenants at once (each distinct request twice): every reply
+    // must match its single-threaded answer, first *and* second time —
+    // i.e. neither concurrency nor cache warmth changes anything.
+    let tenants: Vec<&SessionRequest> = distinct.iter().chain(distinct.iter()).collect();
+    assert!(tenants.len() >= 8, "stress test must run at least 8 concurrent sessions");
+    let replies: Vec<SessionReply> = std::thread::scope(|scope| {
+        let handles: Vec<_> = tenants
+            .iter()
+            .map(|req| {
+                let svc = service.clone();
+                scope.spawn(move || svc.open_session(req).expect("session"))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("no panics")).collect()
+    });
+
+    for (i, reply) in replies.iter().enumerate() {
+        let expect = &expected[i % distinct.len()];
+        assert_replies_equal(reply, expect, &format!("tenant {i} ({})", reply.target));
+    }
+
+    // The shared cache did real work: concurrent duplicate sessions hit
+    // entries their peers (or the zoo itself) measured.
+    let stats = service.cache_stats();
+    assert!(stats.hits + stats.dedup_hits > 0, "no sharing happened: {stats:?}");
+    assert!(stats.hit_rate() > 0.3, "hit rate {:.2} implausibly low", stats.hit_rate());
+}
+
+#[test]
+fn budget_monotonicity_and_seed_isolation() {
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 120, seed: 5, device: DeviceProfile::xeon_e5_2620() },
+        |_| {},
+    );
+    let service = ScheduleService::from_zoo(zoo, 4);
+    let base = SessionRequest {
+        model: "ResNet18".into(),
+        device: DeviceProfile::xeon_e5_2620(),
+        budget_s: Some(0.0),
+        seed: 5,
+    };
+    let minimal = service.open_session(&base).unwrap();
+    assert_eq!(minimal.sources.len(), 1, "zero budget sweeps exactly the first choice");
+
+    let unbounded =
+        service.open_session(&SessionRequest { budget_s: None, ..base.clone() }).unwrap();
+    assert!(unbounded.sources.len() > 1);
+    // A superset of candidate schedules can only improve (or tie) every
+    // kernel's *standalone* pick — measurements are content-derived, so
+    // the shared candidates score identically in both sessions. (End-
+    // to-end time is not compared: inter-kernel boundary effects can
+    // legitimately regress it, which is Fig 8's "mixed regressed?"
+    // phenomenon.)
+    for (u, m) in unbounded.choices.iter().zip(&minimal.choices) {
+        assert!(u.standalone_s <= m.standalone_s + 1e-12, "kernel {} regressed", u.kernel);
+    }
+    assert!(unbounded.standalone_search_time_s >= minimal.standalone_search_time_s);
+
+    // A different seed addresses a different measurement stream.
+    let other_seed =
+        service.open_session(&SessionRequest { seed: 6, ..base }).unwrap();
+    assert_eq!(other_seed.sources, minimal.sources);
+    assert!(other_seed.charged_search_time_s > 0.0, "seed 6 pairs are not cached yet");
+}
