@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Golden-fixture drift guard (CI job `format-drift`).
+#
+# The repo's persisted formats — schedule JSON (rust/src/sched/
+# serialize.rs), store JSONL (rust/src/transfer/store.rs), measure-cache
+# JSON (rust/src/coordinator/cache.rs), and the tuning codec
+# (rust/src/artifact/codec.rs) — are pinned by golden fixtures under
+# rust/tests/golden/ and versioned by ARTIFACT_FORMAT_VERSION
+# (rust/src/artifact/mod.rs). The invariant (see ROADMAP.md): any change
+# to a canonical format must, IN THE SAME CHANGE, bump the version and
+# regenerate the fixtures — otherwise old artifact dirs are served
+# across a silent format change.
+#
+# This script fails a commit range that touches a canonical-format file
+# without both (a) a diff to the ARTIFACT_FORMAT_VERSION constant and
+# (b) a diff under rust/tests/golden/.
+#
+# Escape hatch: edits that demonstrably do not change persisted bytes
+# (comments, non-format helpers living in the same file) may carry a
+#     Format-Drift: none
+# trailer in the commit message. Use it honestly; the golden-fixture
+# tests still catch an actual byte change that sneaks through.
+#
+# Usage: ci/check-format-drift.sh [BASE_COMMIT]
+set -euo pipefail
+
+BASE="${1:-}"
+# Push events on new branches hand us the zero SHA; PRs hand us a real
+# base. Fall back to the parent commit, then give up gracefully.
+if [ -z "$BASE" ] || ! git rev-parse --verify --quiet "${BASE}^{commit}" >/dev/null 2>&1; then
+  BASE="$(git rev-parse --verify --quiet HEAD~1 2>/dev/null || true)"
+fi
+if [ -z "$BASE" ]; then
+  echo "format-drift: no base commit to diff against (initial commit?); skipping"
+  exit 0
+fi
+
+CHANGED="$(git diff --name-only "$BASE" HEAD)"
+
+FORMAT_FILES="
+rust/src/sched/serialize.rs
+rust/src/artifact/codec.rs
+rust/src/coordinator/cache.rs
+rust/src/transfer/store.rs
+"
+
+touched=""
+for f in $FORMAT_FILES; do
+  if printf '%s\n' "$CHANGED" | grep -qx "$f"; then
+    touched="$touched $f"
+  fi
+done
+
+if [ -z "$touched" ]; then
+  echo "format-drift: OK — no canonical-format files touched in $BASE..HEAD"
+  exit 0
+fi
+
+echo "format-drift: canonical-format files touched:$touched"
+
+if git log --format=%B "$BASE..HEAD" | grep -qiE '^Format-Drift:[[:space:]]*none[[:space:]]*$'; then
+  echo "format-drift: OK — 'Format-Drift: none' trailer present (no persisted bytes change)"
+  exit 0
+fi
+
+bumped=no
+if git diff "$BASE" HEAD -- rust/src/artifact/mod.rs \
+    | grep -qE '^[+-]pub const ARTIFACT_FORMAT_VERSION'; then
+  bumped=yes
+fi
+
+fixtures=no
+if printf '%s\n' "$CHANGED" | grep -q '^rust/tests/golden/'; then
+  fixtures=yes
+fi
+
+if [ "$bumped" = yes ] && [ "$fixtures" = yes ]; then
+  echo "format-drift: OK — ARTIFACT_FORMAT_VERSION bumped and golden fixtures regenerated"
+  exit 0
+fi
+
+echo "format-drift: FAIL"
+echo "  A canonical-format file changed without the paired safety rails:"
+echo "    ARTIFACT_FORMAT_VERSION bump (rust/src/artifact/mod.rs): $bumped"
+echo "    regenerated fixtures under rust/tests/golden/:           $fixtures"
+echo "  Either do both in this change, or — only if no persisted byte"
+echo "  changes — add a 'Format-Drift: none' trailer to the commit message."
+exit 1

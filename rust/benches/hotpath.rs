@@ -1,15 +1,24 @@
 //! Bench: the L3 hot paths — what the performance pass optimizes.
 //!
-//! Times the three inner loops that dominate every experiment:
-//! schedule application, the cost simulator, and the learned cost model
-//! (feature extraction + GBDT train/predict). Prints ops/second so
-//! before/after comparisons in EXPERIMENTS.md §Perf are one-liners.
+//! Times the inner loops that dominate every experiment — schedule
+//! application, the cost simulator, the learned cost model (feature
+//! extraction + GBDT train/predict) — plus the serving hot path
+//! (`ScheduleService::open_session` on a warm cache), and **proves the
+//! serving path is zero-copy**: the `StoreRecord` clone counter must
+//! not move across sessions (PR 2 cloned a store slice per session;
+//! the per-source `Arc` sub-stores + `StoreView` sweeps removed that).
+//! Prints ops/second so before/after comparisons in EXPERIMENTS.md
+//! §Perf are one-liners.
 
 use std::time::Instant;
-use transfer_tuning::autosched::{features, random_schedule, CostModel, GbdtParams, NUM_FEATURES};
+use transfer_tuning::autosched::{
+    features, random_schedule, tune_model, CostModel, GbdtParams, NUM_FEATURES, TuneOptions,
+};
 use transfer_tuning::device::{simulate_with, DeviceProfile, SimScratch};
-use transfer_tuning::ir::KernelBuilder;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
 use transfer_tuning::sched::apply;
+use transfer_tuning::service::{ScheduleService, SessionRequest};
+use transfer_tuning::transfer::{store_record_clones, ScheduleStore};
 use transfer_tuning::util::rng::Rng;
 use transfer_tuning::util::table::Table;
 
@@ -108,6 +117,60 @@ fn main() {
     let dt = t0.elapsed().as_secs_f64();
     table.row(vec!["gbdt::predict".into(), n.to_string(), format!("{dt:.2}s"), rate(n, dt)]);
     assert!(acc.is_finite());
+
+    // 5. ScheduleService::open_session (the zero-copy serving hot path).
+    // Two tuned sources + one target; the first session warms the
+    // sharded cache, then sessions are pure cache-hit sweeps — the
+    // regime a long-lived service spends its life in.
+    let tune_opts = TuneOptions {
+        trials: 96,
+        batch_size: 16,
+        population: 32,
+        generations: 2,
+        ..Default::default()
+    };
+    let mut store = ScheduleStore::new();
+    let mut models = Vec::new();
+    for (name, dim) in [("SrcA", 512u64), ("SrcB", 1024u64)] {
+        let mut g = ModelGraph::new(name);
+        g.push(KernelBuilder::dense(dim, dim, dim, &[]));
+        let res = tune_model(&g, &profile, &tune_opts);
+        store.add_tuning(&g, &res);
+        models.push(g);
+    }
+    let mut target = ModelGraph::new("TargetDense");
+    target.push(KernelBuilder::dense(768, 768, 768, &[]));
+    models.push(target);
+    let service = ScheduleService::new(store, models, 8);
+    let request = SessionRequest {
+        model: "TargetDense".into(),
+        device: profile.clone(),
+        budget_s: None,
+        seed: 7,
+    };
+    let warm = service.open_session(&request).expect("warm-up session");
+    assert!(warm.predicted_speedup() > 1.0);
+
+    let clones_before = store_record_clones();
+    let n = 2_000;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let reply = service.open_session(&request).expect("session");
+        assert_eq!(reply.tuned_model_s.to_bits(), warm.tuned_model_s.to_bits());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let cloned = store_record_clones() - clones_before;
+    table.row(vec![
+        "service::open_session".into(),
+        n.to_string(),
+        format!("{dt:.2}s"),
+        format!("{:.1} k sessions/s", n as f64 / dt / 1e3),
+    ]);
+    assert_eq!(
+        cloned, 0,
+        "serving hot path must clone zero StoreRecords ({cloned} cloned across {n} sessions)"
+    );
+    println!("[bench hotpath] {n} warm sessions cloned {cloned} StoreRecords (must be 0)");
 
     print!("{}", table.render());
     table.write_csv(std::path::Path::new("results"), "hotpath").ok();

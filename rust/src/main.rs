@@ -12,7 +12,8 @@
 //! repro tune --model ResNet18          # Ansor-tune one model
 //! repro transfer --model ResNet18 --source ResNet50
 //! repro show-schedule --model ResNet18 --kernel 6
-//! repro serve --requests FILE          # ScheduleService session loop
+//! repro serve --listen 127.0.0.1:7461  # RPC server, streaming zoo build
+//! repro serve --requests FILE          # ScheduleService session replay
 //! repro all                            # everything (one zoo per device)
 //! ```
 //!
@@ -56,6 +57,8 @@ struct Cli {
     cache_dir: Option<PathBuf>,
     /// JSONL session-request file for `serve`.
     requests: Option<PathBuf>,
+    /// TCP bind address for `serve --listen` (the RPC front end).
+    listen: Option<String>,
     /// Measurement-cache shards for the serving path.
     shards: usize,
 }
@@ -76,6 +79,7 @@ fn parse_args() -> Result<Cli> {
         store_path: None,
         cache_dir: None,
         requests: None,
+        listen: None,
         shards: 8,
     };
     while let Some(arg) = args.next() {
@@ -97,6 +101,7 @@ fn parse_args() -> Result<Cli> {
             "--store" => cli.store_path = Some(PathBuf::from(value("--store")?)),
             "--cache-dir" => cli.cache_dir = Some(PathBuf::from(value("--cache-dir")?)),
             "--requests" => cli.requests = Some(PathBuf::from(value("--requests")?)),
+            "--listen" => cli.listen = Some(value("--listen")?),
             "--shards" => cli.shards = value("--shards")?.parse()?,
             other if !other.starts_with("--") && cli.target.is_none() => {
                 cli.target = Some(other.to_string())
@@ -414,31 +419,24 @@ fn cmd_all(cli: &Cli) -> Result<()> {
 /// zoo behind the service is artifact-backed and the cache the sessions
 /// warmed is persisted back.
 fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
+    use transfer_tuning::service::rpc::{parse_request, RpcDefaults};
     use transfer_tuning::service::{ScheduleService, SessionReply, SessionRequest};
 
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading request file {}", path.display()))?;
+    // Same request schema + validation as the RPC front end — one
+    // parser (rpc::parse_request) so the two transports cannot drift.
+    let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
     let mut requests: Vec<SessionRequest> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let j = transfer_tuning::util::json::parse(line)
-            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
-        let model = j
-            .req("model")?
-            .as_str()
-            .with_context(|| format!("{}:{}: model must be a string", path.display(), lineno + 1))?
-            .to_string();
-        let device = match j.get("device").and_then(|v| v.as_str()) {
-            Some(name) => DeviceProfile::by_name(name)
-                .with_context(|| format!("unknown device `{name}` (server|edge)"))?,
-            None => cli.device.clone(),
-        };
-        let budget_s = j.get("budget_s").and_then(|v| v.as_f64());
-        let seed = j.get("seed").and_then(|v| v.as_f64()).map(|x| x as u64).unwrap_or(cli.seed);
-        requests.push(SessionRequest { model, device, budget_s, seed });
+        let req = parse_request(line, &defaults).map_err(|e| {
+            anyhow::anyhow!("{}:{}: {} ({})", path.display(), lineno + 1, e.message, e.code)
+        })?;
+        requests.push(req);
     }
     anyhow::ensure!(!requests.is_empty(), "{}: no requests", path.display());
 
@@ -474,7 +472,10 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
             n_workers,
             cli.shards.max(1)
         ),
-        &["#", "Target", "Device", "Budget", "Sources", "Speedup", "Standalone", "Charged"],
+        &[
+            "#", "Target", "Device", "Budget", "Epoch", "Sources", "Speedup", "Standalone",
+            "Charged",
+        ],
     );
     for (i, (req, slot)) in requests.iter().zip(&slots).enumerate() {
         let budget = match req.budget_s {
@@ -493,6 +494,7 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
                     reply.target.clone(),
                     reply.device.to_string(),
                     budget,
+                    reply.epoch.to_string(),
                     sources,
                     fmt_speedup(reply.predicted_speedup()),
                     fmt_duration(reply.standalone_search_time_s),
@@ -505,6 +507,7 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
                     req.model.clone(),
                     req.device.name.to_string(),
                     budget,
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -523,11 +526,74 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
         stats.misses,
     );
     if let Some(a) = artifacts.as_mut() {
-        a.save_schedule_store(zoo_key, service.store())?;
+        a.save_schedule_store(zoo_key, &service.store())?;
         a.save_measure_cache(zoo_key, &service.snapshot_cache())?;
         eprintln!("[artifacts] persisted session-warmed cache to {}", a.root().display());
     }
     Ok(())
+}
+
+/// `repro serve --listen ADDR`: the real RPC front end — a
+/// multi-threaded TCP server speaking length-prefixed JSONL (see
+/// `transfer_tuning::service::rpc` for the frame format and README
+/// §Wire protocol for schemas) over a **streaming** zoo build. The
+/// server binds and answers sessions immediately; the zoo's models are
+/// tuned (or loaded from `--cache-dir` artifacts) on the main thread
+/// and published into the service one by one, each publish bumping the
+/// store epoch that replies carry. Tenants connecting early are served
+/// from whatever sources exist at that moment — the overlap of tuning
+/// and serving the paper's economics argue for — instead of waiting for
+/// all 11 models.
+fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
+    use transfer_tuning::report::ZooProducer;
+    use transfer_tuning::service::rpc::{RpcDefaults, RpcServer};
+    use transfer_tuning::service::ScheduleService;
+
+    let mut artifacts = open_artifacts(cli)?;
+    let config =
+        ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+    // Seed the serving cache from the persisted zoo-level measurement
+    // cache (if any) BEFORE serving: a warm --cache-dir keeps serving
+    // for free, and the save-on-completion below writes back a
+    // superset of what was loaded, never a clobbered subset.
+    let zoo_names: Vec<String> = models::all_models().iter().map(|m| m.name.clone()).collect();
+    let zoo_key = artifact::zoo_key(&zoo_names, &config.device, config.trials, config.seed);
+    let warm_cache = artifacts
+        .as_mut()
+        .and_then(|a| a.load_measure_cache(zoo_key))
+        .unwrap_or_default();
+    let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards);
+    let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
+    let server = RpcServer::start(bind, service.clone(), defaults)?;
+    eprintln!(
+        "[rpc] listening on {} (epoch 0; sources stream in as tunings land)",
+        server.local_addr()
+    );
+
+    let mut producer = ZooProducer::new(config, artifacts.as_mut());
+    let total = producer.models().len();
+    debug_assert_eq!(producer.zoo_key(), zoo_key, "seed/save keys must agree");
+    while let Some(epoch) = producer.publish_next(&service, &mut |line| eprintln!("  {line}")) {
+        eprintln!("[rpc] store epoch {epoch}: {epoch}/{total} sources live");
+    }
+    let stats = producer.stats.clone();
+    drop(producer);
+    eprintln!(
+        "[rpc] zoo complete: {} tuned / {} from artifacts ({} trials, {:.1}s tuning charged)",
+        stats.models_tuned,
+        stats.models_from_artifacts,
+        stats.trials_run,
+        stats.tuning_seconds_charged
+    );
+    if let Some(a) = artifacts.as_mut() {
+        a.save_schedule_store(zoo_key, &service.store())?;
+        a.save_measure_cache(zoo_key, &service.snapshot_cache())?;
+        eprintln!("[artifacts] persisted zoo store + measurement cache to {}", a.root().display());
+    }
+    eprintln!("[rpc] serving until killed (Ctrl-C)");
+    loop {
+        std::thread::park();
+    }
 }
 
 /// `repro serve` (without `--requests`): a real serving loop over the
@@ -537,6 +603,9 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
 fn cmd_serve(cli: &Cli) -> Result<()> {
     if let Some(path) = &cli.requests {
         return cmd_serve_requests(cli, path);
+    }
+    if let Some(bind) = cli.listen.clone() {
+        return cmd_serve_rpc(cli, &bind);
     }
     use transfer_tuning::coordinator::LatencyHistogram;
     use transfer_tuning::runtime::{artifacts_dir, Runtime};
@@ -636,8 +705,13 @@ COMMANDS
                               transfer-tune M from S's schedules
   show-schedule --model M --kernel I
                               print a tuned schedule as an Algorithm-1 trace
-  serve --requests FILE       multi-tenant ScheduleService: one JSONL line
-                              per session ({\"model\":..,\"device\":..,
+  serve --listen ADDR         RPC front end: multi-threaded TCP server
+                              (length-prefixed JSONL frames; see README
+                              \"Wire protocol\") over a STREAMING zoo build —
+                              sessions are answered from whatever sources
+                              have landed; replies carry the store epoch
+  serve --requests FILE       replayable client mode: one JSONL line per
+                              session ({\"model\":..,\"device\":..,
                               \"budget_s\":..,\"seed\":..}), served concurrently
                               against a sharded measurement cache
   serve [--source default|tuned] [--trials N]
@@ -657,6 +731,8 @@ FLAGS
                   (device, trials, seed) re-tune nothing, charge zero
                   device-seconds, and print bit-identical results
   --requests FILE session-request JSONL for `serve`
+  --listen ADDR   TCP bind address for the `serve` RPC front end
+                  (e.g. 127.0.0.1:7461; port 0 picks one)
   --shards N      measurement-cache shards for `serve` (default 8)
 ";
 

@@ -65,6 +65,137 @@ pub struct ZooBuildStats {
     pub tuning_seconds_charged: f64,
 }
 
+/// The streaming front half of a zoo build: tune-or-load one model at a
+/// time, persisting each tuning artifact the moment it lands.
+///
+/// [`Zoo::build_incremental`] drains a producer to completion before
+/// anything is served; a streaming deployment instead interleaves
+/// [`ZooProducer::publish_next`] with live traffic — each landed model
+/// is published into a [`ScheduleService`](crate::service::ScheduleService)
+/// as a new store epoch, so sessions are answered with whatever sources
+/// exist *now* instead of blocking on the full zoo (`repro serve
+/// --listen` runs exactly this loop; `rust/tests/streaming_service.rs`
+/// proves partial-zoo replies are bit-identical to a static service
+/// over the same sources).
+pub struct ZooProducer<'a> {
+    config: ExperimentConfig,
+    models: Vec<ModelGraph>,
+    next: usize,
+    artifacts: Option<&'a mut ArtifactStore>,
+    /// Cost accounting so far (exactly [`Zoo::build_stats`]'s semantics;
+    /// a fully warm producer finishes with 0 trials / 0.0 charged).
+    pub stats: ZooBuildStats,
+}
+
+impl<'a> ZooProducer<'a> {
+    /// Producer over the paper's full 11-model zoo.
+    pub fn new(config: ExperimentConfig, artifacts: Option<&'a mut ArtifactStore>) -> Self {
+        Self::for_models(models::all_models(), config, artifacts)
+    }
+
+    /// Producer over an explicit model list (tests; partial zoos).
+    pub fn for_models(
+        models: Vec<ModelGraph>,
+        config: ExperimentConfig,
+        artifacts: Option<&'a mut ArtifactStore>,
+    ) -> Self {
+        ZooProducer { config, models, next: 0, artifacts, stats: ZooBuildStats::default() }
+    }
+
+    pub fn models(&self) -> &[ModelGraph] {
+        &self.models
+    }
+
+    /// Models not yet produced.
+    pub fn remaining(&self) -> usize {
+        self.models.len() - self.next
+    }
+
+    /// Key under which this producer's zoo-level artifacts (merged
+    /// store, measurement cache) live — same derivation as
+    /// [`Zoo::artifact_key`].
+    pub fn zoo_key(&self) -> u64 {
+        artifact::zoo_key(
+            &self.models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
+            &self.config.device,
+            self.config.trials,
+            self.config.seed,
+        )
+    }
+
+    /// Tune-or-load the next model and persist its artifact. Returns
+    /// the model's index, its tuning, and its untuned baseline time
+    /// (computed once, here — the progress line and the consumer both
+    /// need it); `None` once every model has landed.
+    pub fn step(
+        &mut self,
+        progress: &mut impl FnMut(&str),
+    ) -> Option<(usize, TuningResult, f64)> {
+        if self.next >= self.models.len() {
+            return None;
+        }
+        let index = self.next;
+        self.next += 1;
+        let m = &self.models[index];
+        let t0 = std::time::Instant::now();
+        let cfg = &self.config;
+        let key = artifact::tuning_key(&m.name, &cfg.device, cfg.trials, cfg.seed);
+        let cached = self.artifacts.as_deref_mut().and_then(|a| a.load_tuning(key));
+        let opts = TuneOptions {
+            trials: self.config.trials,
+            seed: self.config.seed,
+            ..Default::default()
+        };
+        let (res, origin) = match cached {
+            Some(res) => {
+                self.stats.models_from_artifacts += 1;
+                (res, "artifact")
+            }
+            None => {
+                let res = tune_model(m, &self.config.device, &opts);
+                self.stats.models_tuned += 1;
+                self.stats.trials_run += res.trials_used;
+                self.stats.tuning_seconds_charged += res.search_time_s;
+                if let Some(a) = self.artifacts.as_deref_mut() {
+                    if let Err(e) = a.save_tuning(key, &res) {
+                        progress(&format!("warn: could not persist tuning of {}: {e}", m.name));
+                    }
+                }
+                (res, "tuned")
+            }
+        };
+        let untuned = untuned_model_time(m, &self.config.device);
+        progress(&format!(
+            "{origin:<8} {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
+            m.name,
+            res.trials_used,
+            res.search_time_s,
+            res.final_model_time(m, &self.config.device) * 1e3,
+            untuned * 1e3,
+            t0.elapsed().as_secs_f64(),
+        ));
+        Some((index, res, untuned))
+    }
+
+    /// [`ZooProducer::step`] + publish into a live service: the model's
+    /// tuning becomes a new store epoch the moment it lands. Returns
+    /// the epoch, or `None` when the zoo is complete.
+    pub fn publish_next(
+        &mut self,
+        service: &crate::service::ScheduleService,
+        progress: &mut impl FnMut(&str),
+    ) -> Option<u64> {
+        let (index, res, _untuned) = self.step(progress)?;
+        Some(service.publish_model(&self.models[index], &res))
+    }
+
+    /// Tear down into (models, stats, artifact-store borrow) once all
+    /// steps ran — what [`Zoo::build_incremental`] needs to finish.
+    pub fn finish(self) -> (Vec<ModelGraph>, ZooBuildStats, Option<&'a mut ArtifactStore>) {
+        (self.models, self.stats, self.artifacts)
+    }
+}
+
 impl Zoo {
     /// Tune every model in the zoo from scratch (no artifact store).
     /// `progress` receives one line per model (the CLI prints it; tests
@@ -82,61 +213,30 @@ impl Zoo {
     /// number is bit-identical to the cold run (the codec round-trips
     /// schedules and costs exactly). Call [`Zoo::persist`] after the
     /// experiments to write back the merged store + warmed cache.
+    ///
+    /// This is the blocking consumer of a [`ZooProducer`]: it drains
+    /// every model before returning. A serving process that wants to
+    /// answer sessions *while* the zoo tunes drives the producer
+    /// directly (see [`ZooProducer::publish_next`]).
     pub fn build_incremental(
         config: ExperimentConfig,
-        mut artifacts: Option<&mut ArtifactStore>,
+        artifacts: Option<&mut ArtifactStore>,
         mut progress: impl FnMut(&str),
     ) -> Zoo {
-        let models = models::all_models();
-        let opts = TuneOptions { trials: config.trials, seed: config.seed, ..Default::default() };
-        let mut tunings = Vec::with_capacity(models.len());
-        let mut untuned_s = Vec::with_capacity(models.len());
+        let mut producer = ZooProducer::new(config.clone(), artifacts);
+        let mut tunings = Vec::with_capacity(producer.models().len());
+        let mut untuned_s = Vec::with_capacity(producer.models().len());
         let mut store = ScheduleStore::new();
-        let mut build_stats = ZooBuildStats::default();
-        for m in &models {
-            let t0 = std::time::Instant::now();
-            let key = artifact::tuning_key(&m.name, &config.device, config.trials, config.seed);
-            let cached = artifacts.as_deref_mut().and_then(|a| a.load_tuning(key));
-            let (res, origin) = match cached {
-                Some(res) => {
-                    build_stats.models_from_artifacts += 1;
-                    (res, "artifact")
-                }
-                None => {
-                    let res = tune_model(m, &config.device, &opts);
-                    build_stats.models_tuned += 1;
-                    build_stats.trials_run += res.trials_used;
-                    build_stats.tuning_seconds_charged += res.search_time_s;
-                    if let Some(a) = artifacts.as_deref_mut() {
-                        if let Err(e) = a.save_tuning(key, &res) {
-                            progress(&format!("warn: could not persist tuning of {}: {e}", m.name));
-                        }
-                    }
-                    (res, "tuned")
-                }
-            };
-            let untuned = untuned_model_time(m, &config.device);
-            progress(&format!(
-                "{origin:<8} {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
-                m.name,
-                res.trials_used,
-                res.search_time_s,
-                res.final_model_time(m, &config.device) * 1e3,
-                untuned * 1e3,
-                t0.elapsed().as_secs_f64(),
-            ));
+        while let Some((index, res, untuned)) = producer.step(&mut progress) {
+            let m = &producer.models()[index];
+            untuned_s.push(untuned);
             store.add_tuning(m, &res);
             tunings.push(res);
-            untuned_s.push(untuned);
         }
         // Rehydrate the shared measurement cache so warm transfer
         // sweeps charge zero device seconds too.
-        let zoo_key = artifact::zoo_key(
-            &models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
-            &config.device,
-            config.trials,
-            config.seed,
-        );
+        let zoo_key = producer.zoo_key();
+        let (models, build_stats, mut artifacts) = producer.finish();
         let cache = artifacts
             .as_deref_mut()
             .and_then(|a| a.load_measure_cache(zoo_key))

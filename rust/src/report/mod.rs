@@ -7,4 +7,4 @@ pub mod experiments;
 pub mod figures;
 pub mod tables;
 
-pub use experiments::{ExperimentConfig, Zoo};
+pub use experiments::{ExperimentConfig, Zoo, ZooBuildStats, ZooProducer};

@@ -2,26 +2,43 @@
 //!
 //! The ROADMAP's north star is serving tuned state to many concurrent
 //! clients, not re-deriving it per process. A [`ScheduleService`] owns
-//! one shared zoo of tuned schedules behind an `Arc` — the merged
-//! [`ScheduleStore`] plus a sharded measurement cache
-//! ([`ShardedMeasureCache`]) — and answers *sessions*: a tenant names a
-//! target model, a device, and an optional device-seconds budget, and
-//! receives the best transferable schedules, the predicted speedup, and
-//! full per-kernel provenance.
+//! the serving state — an epoch-versioned snapshot of the tuned zoo
+//! plus a sharded measurement cache ([`ShardedMeasureCache`]) — and
+//! answers *sessions*: a tenant names a target model, a device, and an
+//! optional device-seconds budget, and receives the best transferable
+//! schedules, the predicted speedup, and full per-kernel provenance.
 //!
-//! Session semantics are deterministic in the request alone: the Eq. 1
-//! heuristic ranks tuning models, the session sweeps them best-first,
-//! and the budget bounds how many sources are swept using the
-//! order-independent *standalone* cost (never the charged cost, which
-//! depends on what other tenants already warmed). Two tenants issuing
-//! the same request therefore always receive bit-identical replies,
-//! regardless of interleaving — the concurrency proof lives in
-//! `rust/tests/service_stress.rs`.
+//! **Zero-copy sessions.** The snapshot precomputes one `Arc`'d
+//! sub-store per tuning model; a session composes them into borrowed
+//! [`StoreView`]s, so the serving hot path clones **zero**
+//! [`StoreRecord`](crate::transfer::StoreRecord)s (counter-guarded by
+//! `benches/hotpath.rs` — PR 2 cloned a store slice per session).
+//!
+//! **Streaming builds.** [`ScheduleService::publish_model`] swaps in a
+//! new snapshot with `epoch + 1` the moment one model's tuning lands
+//! (see [`ZooProducer`](crate::report::ZooProducer)), so a service can
+//! answer sessions while the rest of the zoo is still tuning — the
+//! operating point Ansor-style systems aim for. In-flight sessions
+//! keep the snapshot `Arc` they started with; they are never torn.
+//!
+//! Session semantics are deterministic in (request, epoch): the Eq. 1
+//! heuristic ranks the snapshot's tuning models, the session sweeps
+//! them best-first, and the budget bounds how many sources are swept
+//! using the order-independent *standalone* cost (never the charged
+//! cost, which depends on what other tenants already warmed). Two
+//! tenants issuing the same request against the same epoch therefore
+//! always receive bit-identical replies, regardless of interleaving —
+//! and a reply at epoch *e* of a streaming build is bit-identical to
+//! the reply of a service built statically over the same *e* sources.
+//! Proofs live in `rust/tests/service_stress.rs` and
+//! `rust/tests/streaming_service.rs`.
 
+pub mod rpc;
 pub mod shard;
 
 pub use shard::{measure_pairs_sharded, ShardedMeasureCache};
 
+use crate::autosched::TuningResult;
 use crate::coordinator::{CacheStats, Ledger, MeasureCache};
 use crate::device::{model_time, DeviceProfile};
 use crate::ir::ModelGraph;
@@ -29,9 +46,10 @@ use crate::report::Zoo;
 use crate::sched::Schedule;
 use crate::transfer::engine::assemble_transfer_result;
 use crate::transfer::{
-    rank_tuning_models, ScheduleStore, SweepPlan, TransferOptions, TransferResult,
+    rank_tuning_models, ScheduleStore, StoreView, SweepPlan, TransferOptions, TransferResult,
 };
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
 
 /// One tenant's request.
 #[derive(Clone, Debug)]
@@ -72,6 +90,11 @@ pub struct SessionReply {
     pub target: String,
     pub device: &'static str,
     pub seed: u64,
+    /// Store epoch this session was answered from: the number of
+    /// snapshot publishes (streaming builds bump it per landed model).
+    /// Replies are a pure function of (target, device, budget, seed,
+    /// epoch) — provenance for clients of a still-tuning zoo.
+    pub epoch: u64,
     /// Tuning models swept, in heuristic rank order ("mixed" pool =
     /// every ranked source).
     pub sources: Vec<String>,
@@ -93,14 +116,89 @@ impl SessionReply {
     }
 }
 
-struct Inner {
+/// One immutable, epoch-versioned view of the tuned zoo. Sessions grab
+/// the current snapshot's `Arc` once and serve entirely from it, so a
+/// concurrent publish can never tear a reply.
+struct Snapshot {
+    /// Publish count (0 = empty service; static constructors set it to
+    /// the number of distinct sources, which equals what a streaming
+    /// build would have reached after publishing the same set).
+    epoch: u64,
+    /// Graphs of published models (targets resolve here first, then
+    /// fall back to the built-in zoo).
     models: Vec<ModelGraph>,
-    store: ScheduleStore,
+    /// Precomputed per-source sub-stores. Sessions sweep borrowed
+    /// [`StoreView`]s over these `Arc`s — the records are cloned once
+    /// here, at publish/construction time, and never again.
+    sources: BTreeMap<String, Arc<ScheduleStore>>,
+    /// The merged store (source-name-major order, identical to a
+    /// [`ScheduleStore::add_tuning`] build over the same models) — what
+    /// ranking and persistence consume.
+    merged: Arc<ScheduleStore>,
+}
+
+impl Snapshot {
+    fn empty() -> Snapshot {
+        Snapshot {
+            epoch: 0,
+            models: Vec::new(),
+            sources: BTreeMap::new(),
+            merged: Arc::new(ScheduleStore::new()),
+        }
+    }
+
+    /// Snapshot a fully-built store (static constructors). Records are
+    /// cloned exactly once (into the merged store); the per-source
+    /// sub-stores take the input records by move.
+    fn from_store(store: ScheduleStore, models: Vec<ModelGraph>) -> Snapshot {
+        // Stable partition by source, preserving within-source order.
+        let mut groups: BTreeMap<String, ScheduleStore> = BTreeMap::new();
+        for r in store.records {
+            groups.entry(r.source_model.clone()).or_default().records.push(r);
+        }
+        // Derive the merged store FROM the partition (source-name-major
+        // order) instead of trusting the input to be globally sorted:
+        // `view_of` concatenation order and merged order then agree by
+        // construction, even for stores assembled with
+        // [`ScheduleStore::merge`] (which appends without re-sorting).
+        // For an [`ScheduleStore::add_tuning`]-built store this is
+        // byte-identical to the input order — and it is exactly how
+        // [`ScheduleService::publish_model`] derives its merged store,
+        // so static and streaming builds cannot diverge.
+        let mut merged = ScheduleStore::new();
+        for s in groups.values() {
+            merged.records.extend(s.records.iter().cloned());
+        }
+        let sources: BTreeMap<String, Arc<ScheduleStore>> =
+            groups.into_iter().map(|(name, s)| (name, Arc::new(s))).collect();
+        Snapshot {
+            epoch: sources.len() as u64,
+            models,
+            sources,
+            merged: Arc::new(merged),
+        }
+    }
+
+    /// View over the records of `names`, in merged-store order (the
+    /// `BTreeMap` iterates sources by name — the leading sort key of
+    /// the merged store). Zero records are cloned.
+    fn view_of<'a>(&'a self, names: &[String]) -> StoreView<'a> {
+        StoreView::concat(
+            self.sources
+                .iter()
+                .filter(|(name, _)| names.iter().any(|n| n == *name))
+                .map(|(_, s)| s.as_ref()),
+        )
+    }
+}
+
+struct Inner {
+    snapshot: RwLock<Arc<Snapshot>>,
     cache: ShardedMeasureCache,
 }
 
 /// A shareable handle to the serving state (cheap to clone; all clones
-/// serve the same store and sharded cache).
+/// serve the same snapshot and sharded cache).
 #[derive(Clone)]
 pub struct ScheduleService {
     inner: Arc<Inner>,
@@ -111,7 +209,29 @@ impl ScheduleService {
     /// serve, with a fresh cache split into `shards`.
     pub fn new(store: ScheduleStore, models: Vec<ModelGraph>, shards: usize) -> ScheduleService {
         ScheduleService {
-            inner: Arc::new(Inner { models, store, cache: ShardedMeasureCache::new(shards) }),
+            inner: Arc::new(Inner {
+                snapshot: RwLock::new(Arc::new(Snapshot::from_store(store, models))),
+                cache: ShardedMeasureCache::new(shards),
+            }),
+        }
+    }
+
+    /// An empty service (epoch 0, no sources): the starting point of a
+    /// streaming build — [`ScheduleService::publish_model`] feeds it.
+    pub fn empty(shards: usize) -> ScheduleService {
+        Self::empty_with_cache(&MeasureCache::new(), shards)
+    }
+
+    /// [`ScheduleService::empty`], but with the sharded cache seeded
+    /// from a flat snapshot (e.g. the measurement cache persisted under
+    /// the zoo's artifact key) — a warm `--cache-dir` keeps paying off
+    /// across streaming-serve restarts.
+    pub fn empty_with_cache(cache: &MeasureCache, shards: usize) -> ScheduleService {
+        ScheduleService {
+            inner: Arc::new(Inner {
+                snapshot: RwLock::new(Arc::new(Snapshot::empty())),
+                cache: ShardedMeasureCache::from_cache(cache, shards),
+            }),
         }
     }
 
@@ -121,12 +241,68 @@ impl ScheduleService {
     pub fn from_zoo(zoo: Zoo, shards: usize) -> ScheduleService {
         let cache = ShardedMeasureCache::from_cache(&zoo.cache.borrow(), shards);
         ScheduleService {
-            inner: Arc::new(Inner { models: zoo.models, store: zoo.store, cache }),
+            inner: Arc::new(Inner {
+                snapshot: RwLock::new(Arc::new(Snapshot::from_store(zoo.store, zoo.models))),
+                cache,
+            }),
         }
     }
 
-    pub fn store(&self) -> &ScheduleStore {
-        &self.inner.store
+    fn snapshot(&self) -> Arc<Snapshot> {
+        self.inner.snapshot.read().expect("snapshot lock poisoned").clone()
+    }
+
+    /// Publish one model's tuning into the serving state and return the
+    /// new epoch. This is the streaming-build write path: the model's
+    /// sub-store is built once, a fresh snapshot (epoch + 1) is swapped
+    /// in, and every session opened from now on sees the new source.
+    /// Sessions already in flight keep their snapshot — replies are
+    /// never torn across epochs.
+    pub fn publish_model(&self, graph: &ModelGraph, tuning: &TuningResult) -> u64 {
+        let mut sub = ScheduleStore::new();
+        sub.add_tuning(graph, tuning);
+        let mut guard = self.inner.snapshot.write().expect("snapshot lock poisoned");
+        let old = guard.as_ref();
+        let mut sources = old.sources.clone(); // Arc clones, not record clones
+        sources.insert(graph.name.clone(), Arc::new(sub));
+        // Re-merge in source-name order: byte-identical to a
+        // `ScheduleStore::add_tuning` build over the same models
+        // (source_model is the leading key of its total sort).
+        let mut merged = ScheduleStore::new();
+        for s in sources.values() {
+            merged.records.extend(s.records.iter().cloned());
+        }
+        let mut models = old.models.clone();
+        if !models.iter().any(|m| m.name == graph.name) {
+            models.push(graph.clone());
+        }
+        let epoch = old.epoch + 1;
+        *guard = Arc::new(Snapshot { epoch, models, sources, merged: Arc::new(merged) });
+        epoch
+    }
+
+    /// The current store epoch (publish count).
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// The current merged-store snapshot (for ranking inspection and
+    /// artifact persistence). Cheap: clones an `Arc`, not the store.
+    pub fn store(&self) -> Arc<ScheduleStore> {
+        self.snapshot().merged.clone()
+    }
+
+    /// Names of the sources live in the current snapshot.
+    pub fn live_sources(&self) -> Vec<String> {
+        self.snapshot().sources.keys().cloned().collect()
+    }
+
+    /// Whether `name` currently resolves to a servable target (a
+    /// published graph or a built-in zoo model) — the same lookup
+    /// [`ScheduleService::open_session`] performs, exposed so the RPC
+    /// layer can classify `unknown_model` without sniffing error text.
+    pub fn can_resolve(&self, name: &str) -> bool {
+        Self::target_graph(&self.snapshot(), name).is_ok()
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -138,41 +314,26 @@ impl ScheduleService {
         self.inner.cache.to_cache()
     }
 
-    fn target_graph(&self, name: &str) -> anyhow::Result<ModelGraph> {
-        if let Some(m) = self.inner.models.iter().find(|m| m.name == name) {
+    fn target_graph(snapshot: &Snapshot, name: &str) -> anyhow::Result<ModelGraph> {
+        if let Some(m) = snapshot.models.iter().find(|m| m.name == name) {
             return Ok(m.clone());
         }
         crate::models::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown model `{name}`"))
     }
 
-    /// Store slice holding the records of `sources` (in store order —
-    /// deterministic sweep plans).
-    fn slice_of(&self, sources: &[String]) -> ScheduleStore {
-        ScheduleStore {
-            records: self
-                .inner
-                .store
-                .records
-                .iter()
-                .filter(|r| sources.iter().any(|s| *s == r.source_model))
-                .cloned()
-                .collect(),
-        }
-    }
-
-    /// One standalone sweep of `slice` onto `target` through the shared
+    /// One standalone sweep of `view` onto `target` through the shared
     /// sharded cache.
     fn sweep(
         &self,
         target: &ModelGraph,
-        slice: &ScheduleStore,
+        view: &StoreView<'_>,
         label: &str,
         device: &DeviceProfile,
         seed: u64,
     ) -> TransferResult {
         let mut ledger = Ledger::new();
-        let plan = SweepPlan::build(target, slice, &TransferOptions::default());
+        let plan = SweepPlan::build_view(target, view, &TransferOptions::default());
         let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
         let candidates = measure_pairs_sharded(
             &candidate_jobs,
@@ -195,22 +356,26 @@ impl ScheduleService {
     }
 
     /// Serve one session. See [`SessionRequest`] for the budget
-    /// semantics; the reply is a pure function of the request.
+    /// semantics; the reply is a pure function of (request, epoch). The
+    /// whole session runs against one snapshot `Arc` — publishes that
+    /// land mid-session do not affect it — and sweeps borrowed
+    /// [`StoreView`]s, never cloning a store record.
     pub fn open_session(&self, req: &SessionRequest) -> anyhow::Result<SessionReply> {
-        let target = self.target_graph(&req.model)?;
-        let ranked = rank_tuning_models(&target, &self.inner.store, &req.device);
+        let snapshot = self.snapshot();
+        let target = Self::target_graph(&snapshot, &req.model)?;
+        let ranked = rank_tuning_models(&target, &snapshot.merged, &req.device);
         let ranked_names: Vec<String> = ranked.into_iter().map(|(name, _)| name).collect();
 
         // Which sources to sweep, and the per-sweep results.
         let mut swept: Vec<String> = Vec::new();
-        let mut results: Vec<(TransferResult, ScheduleStore)> = Vec::new();
+        let mut results: Vec<(TransferResult, StoreView<'_>)> = Vec::new();
         match req.budget_s {
             None => {
                 // Unbounded: one mixed-pool sweep over every source.
-                let slice = self.slice_of(&ranked_names);
-                let res = self.sweep(&target, &slice, "mixed", &req.device, req.seed);
+                let view = snapshot.view_of(&ranked_names);
+                let res = self.sweep(&target, &view, "mixed", &req.device, req.seed);
                 swept = ranked_names;
-                results.push((res, slice));
+                results.push((res, view));
             }
             Some(budget) => {
                 let mut spent = 0.0f64;
@@ -218,11 +383,11 @@ impl ScheduleService {
                     if !swept.is_empty() && spent >= budget {
                         break;
                     }
-                    let slice = self.slice_of(std::slice::from_ref(name));
-                    let res = self.sweep(&target, &slice, name, &req.device, req.seed);
+                    let view = snapshot.view_of(std::slice::from_ref(name));
+                    let res = self.sweep(&target, &view, name, &req.device, req.seed);
                     spent += res.standalone_search_time_s();
                     swept.push(name.clone());
-                    results.push((res, slice));
+                    results.push((res, view));
                 }
             }
         }
@@ -247,11 +412,11 @@ impl ScheduleService {
                 standalone_s: untuned_s,
                 schedule: Schedule::untuned_default(kernel),
             };
-            for (res, slice) in &results {
+            for (res, view) in &results {
                 let sweep = &res.sweeps[ki];
                 if let (Some(ri), Some(sched)) = (sweep.chosen, &sweep.chosen_schedule) {
                     if sweep.chosen_s < choice.standalone_s {
-                        let rec = &slice.records[ri];
+                        let rec = view.records[ri];
                         choice.source_model = Some(rec.source_model.clone());
                         choice.source_input_shape = rec.source_input_shape.clone();
                         choice.standalone_s = sweep.chosen_s;
@@ -277,6 +442,7 @@ impl ScheduleService {
             target: target.name.clone(),
             device: req.device.name,
             seed: req.seed,
+            epoch: snapshot.epoch,
             sources: swept,
             choices,
             untuned_model_s,
@@ -378,5 +544,72 @@ mod tests {
         let mut req = request(None);
         req.model = "NoSuchModel".into();
         assert!(svc.open_session(&req).is_err());
+    }
+
+    #[test]
+    fn static_service_epoch_counts_sources() {
+        let svc = dense_service();
+        assert_eq!(svc.epoch(), 2, "one epoch per distinct source");
+        let reply = svc.open_session(&request(None)).unwrap();
+        assert_eq!(reply.epoch, 2);
+        assert_eq!(svc.live_sources(), vec!["SrcA".to_string(), "SrcB".to_string()]);
+    }
+
+    #[test]
+    fn publishing_streams_sources_in() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let opts = TuneOptions {
+            trials: 96,
+            batch_size: 16,
+            population: 32,
+            generations: 2,
+            ..Default::default()
+        };
+        let svc = ScheduleService::empty(2);
+        assert_eq!(svc.epoch(), 0);
+
+        // Target published first: resolvable, but no foreign sources
+        // yet — the session falls back to untuned defaults at epoch 1.
+        let mut target = ModelGraph::new("StreamTarget");
+        target.push(KernelBuilder::dense(768, 768, 768, &[]));
+        let target_tuning = tune_model(&target, &prof, &opts);
+        assert_eq!(svc.publish_model(&target, &target_tuning), 1);
+        let req = SessionRequest {
+            model: "StreamTarget".into(),
+            device: prof.clone(),
+            budget_s: None,
+            seed: 9,
+        };
+        let bare = svc.open_session(&req).unwrap();
+        assert_eq!(bare.epoch, 1);
+        assert!(bare.sources.is_empty(), "no foreign sources at epoch 1");
+        assert!(bare.choices[0].source_model.is_none());
+
+        // One source lands: the same request now sweeps it.
+        let mut src = ModelGraph::new("StreamSrc");
+        src.push(KernelBuilder::dense(512, 512, 512, &[]));
+        let src_tuning = tune_model(&src, &prof, &opts);
+        assert_eq!(svc.publish_model(&src, &src_tuning), 2);
+        let served = svc.open_session(&req).unwrap();
+        assert_eq!(served.epoch, 2);
+        assert_eq!(served.sources, vec!["StreamSrc".to_string()]);
+        assert!(served.choices[0].source_model.is_some());
+
+        // Streaming vs static at the same source set: bit-identical
+        // replies with the same epoch.
+        let mut store = ScheduleStore::new();
+        store.add_tuning(&target, &target_tuning);
+        store.add_tuning(&src, &src_tuning);
+        let static_svc =
+            ScheduleService::new(store, vec![target.clone(), src.clone()], 2);
+        let static_reply = static_svc.open_session(&req).unwrap();
+        assert_eq!(static_reply.epoch, served.epoch);
+        assert_eq!(static_reply.sources, served.sources);
+        assert_eq!(static_reply.tuned_model_s.to_bits(), served.tuned_model_s.to_bits());
+        assert_eq!(
+            static_reply.standalone_search_time_s.to_bits(),
+            served.standalone_search_time_s.to_bits()
+        );
+        assert_eq!(static_reply.choices[0].schedule, served.choices[0].schedule);
     }
 }

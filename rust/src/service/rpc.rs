@@ -1,0 +1,463 @@
+//! The RPC front end: length-prefixed JSONL over TCP.
+//!
+//! `repro serve --listen ADDR` promotes the [`ScheduleService`] from a
+//! one-shot request-file loop to a real multi-threaded server. The wire
+//! protocol is deliberately minimal and dependency-free:
+//!
+//! ```text
+//! frame    := u32_be(length) payload
+//! payload  := one UTF-8 JSON object, length bytes, no trailing newline
+//! ```
+//!
+//! Each request frame holds one session request (same schema as the
+//! `--requests` JSONL file: `{"model":..,"device":..,"budget_s":..,
+//! "seed":..}`); each response frame holds either
+//! `{"ok":true,"reply":{..}}` or `{"ok":false,"error":{"code":..,
+//! "message":..}}`. A connection is a session loop: frames are
+//! answered in order until the client closes. Malformed *JSON* gets a
+//! structured `bad_json` error and the loop continues; malformed
+//! *framing* (truncated, oversized, non-UTF-8) gets a best-effort
+//! structured error and the connection closes, because resynchronizing
+//! a byte stream after a broken length prefix is guesswork. The codec
+//! never panics on hostile input — `rust/tests/rpc_codec.rs` proves it.
+//!
+//! Replies carry the store `epoch` (see [`SessionReply::epoch`]): with
+//! a streaming zoo build publishing sources while the server runs, a
+//! reply is a pure function of (target, device, budget, seed, epoch).
+
+use super::{ScheduleService, SessionReply, SessionRequest};
+use crate::device::DeviceProfile;
+use crate::sched::serialize;
+use crate::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Hard cap on one frame's payload, both directions. Replies are a few
+/// hundred KiB at worst (one schedule per target kernel); 16 MiB keeps
+/// a hostile length prefix from allocating the machine away.
+pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
+
+/// Framing-layer failure. Everything above the byte stream (bad JSON,
+/// bad request fields) is reported in-band as an [`RpcError`] instead.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end of stream *between* frames (normal client hang-up).
+    Closed,
+    /// Stream ended inside a header or payload.
+    Truncated,
+    /// Declared payload length exceeds [`MAX_FRAME_LEN`].
+    Oversized(u32),
+    /// Payload bytes are not UTF-8.
+    Utf8,
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "stream ended mid-frame"),
+            FrameError::Oversized(n) => {
+                write!(f, "frame of {n} bytes exceeds the {MAX_FRAME_LEN}-byte limit")
+            }
+            FrameError::Utf8 => write!(f, "frame payload is not UTF-8"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+/// Frame a payload: 4-byte big-endian length, then the bytes.
+pub fn encode_frame(payload: &str) -> Result<Vec<u8>, FrameError> {
+    if payload.len() as u64 > MAX_FRAME_LEN as u64 {
+        return Err(FrameError::Oversized(payload.len() as u32));
+    }
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload.as_bytes());
+    Ok(buf)
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], on_eof: FrameError) -> Result<(), FrameError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(on_eof),
+        Err(e) => Err(FrameError::Io(e)),
+    }
+}
+
+/// Read one frame's payload. Distinguishes a clean close (EOF before
+/// any header byte → [`FrameError::Closed`]) from a truncation (EOF
+/// anywhere inside a frame). An oversized declared length is rejected
+/// *before* any payload allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<String, FrameError> {
+    let mut header = [0u8; 4];
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    header[0] = first[0];
+    read_exact_or(r, &mut header[1..], FrameError::Truncated)?;
+    let len = u32::from_be_bytes(header);
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, FrameError::Truncated)?;
+    String::from_utf8(payload).map_err(|_| FrameError::Utf8)
+}
+
+/// Server-side defaults for optional request fields (`device`, `seed`),
+/// mirroring the `--requests` file mode's CLI-flag defaults.
+#[derive(Clone, Debug)]
+pub struct RpcDefaults {
+    pub device: DeviceProfile,
+    pub seed: u64,
+}
+
+/// A structured in-band error (`{"ok":false,"error":{..}}`). Codes:
+///
+/// | code              | meaning                                        |
+/// |-------------------|------------------------------------------------|
+/// | `bad_json`        | request payload is not valid JSON              |
+/// | `bad_request`     | missing/ill-typed request field                |
+/// | `unknown_device`  | `device` names no profile (server\|edge)       |
+/// | `unknown_model`   | `model` names no servable graph                |
+/// | `bad_frame`       | truncated or non-UTF-8 frame (connection ends) |
+/// | `oversized_frame` | length prefix above [`MAX_FRAME_LEN`] (ends)   |
+/// | `internal`        | session failed for another reason              |
+#[derive(Clone, Debug, PartialEq)]
+pub struct RpcError {
+    pub code: String,
+    pub message: String,
+}
+
+impl RpcError {
+    pub fn new(code: &str, message: impl Into<String>) -> RpcError {
+        RpcError { code: code.to_string(), message: message.into() }
+    }
+}
+
+fn bad_request(message: impl Into<String>) -> RpcError {
+    RpcError::new("bad_request", message)
+}
+
+/// Parse one request payload into a [`SessionRequest`]. Pure, so the
+/// TCP loop and the `--requests` replay mode cannot drift.
+pub fn parse_request(line: &str, defaults: &RpcDefaults) -> Result<SessionRequest, RpcError> {
+    let j = json::parse(line).map_err(|e| RpcError::new("bad_json", e.to_string()))?;
+    let model = match j.get("model") {
+        Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+        Some(_) => return Err(bad_request("`model` must be a non-empty string")),
+        None => return Err(bad_request("missing `model`")),
+    };
+    let device = match j.get("device") {
+        None | Some(Json::Null) => defaults.device.clone(),
+        Some(v) => {
+            let name = v.as_str().ok_or_else(|| bad_request("`device` must be a string"))?;
+            DeviceProfile::by_name(name).ok_or_else(|| {
+                RpcError::new("unknown_device", format!("unknown device `{name}` (server|edge)"))
+            })?
+        }
+    };
+    let budget_s = match j.get("budget_s") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let b = v
+                .as_f64()
+                .filter(|b| b.is_finite() && *b >= 0.0)
+                .ok_or_else(|| bad_request("`budget_s` must be a finite number >= 0"))?;
+            Some(b)
+        }
+    };
+    let seed = match j.get("seed") {
+        None | Some(Json::Null) => defaults.seed,
+        Some(v) => v
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= 2f64.powi(53))
+            .map(|x| x as u64)
+            .ok_or_else(|| bad_request("`seed` must be a non-negative integer (< 2^53)"))?,
+    };
+    Ok(SessionRequest { model, device, budget_s, seed })
+}
+
+/// Encode a successful reply as the full response object.
+pub fn response_json(reply: &SessionReply) -> Json {
+    let choices = reply.choices.iter().map(|c| {
+        Json::obj(vec![
+            ("kernel", Json::num(c.kernel as f64)),
+            ("class", Json::str(c.class_sig.as_str())),
+            (
+                "source_model",
+                match &c.source_model {
+                    Some(s) => Json::str(s.as_str()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "source_input_shape",
+                Json::arr(c.source_input_shape.iter().map(|&x| Json::num(x as f64))),
+            ),
+            ("standalone_s", Json::num(c.standalone_s)),
+            ("schedule", serialize::to_json(&c.schedule)),
+        ])
+    });
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "reply",
+            Json::obj(vec![
+                ("target", Json::str(reply.target.as_str())),
+                ("device", Json::str(reply.device)),
+                ("seed", Json::num(reply.seed as f64)),
+                ("epoch", Json::num(reply.epoch as f64)),
+                ("sources", Json::arr(reply.sources.iter().map(|s| Json::str(s.as_str())))),
+                ("untuned_model_s", Json::num(reply.untuned_model_s)),
+                ("tuned_model_s", Json::num(reply.tuned_model_s)),
+                ("predicted_speedup", Json::num(reply.predicted_speedup())),
+                ("standalone_search_time_s", Json::num(reply.standalone_search_time_s)),
+                ("charged_search_time_s", Json::num(reply.charged_search_time_s)),
+                ("choices", Json::arr(choices)),
+            ]),
+        ),
+    ])
+}
+
+/// Encode a structured error as the full response object.
+pub fn error_json(err: &RpcError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(err.code.as_str())),
+                ("message", Json::str(err.message.as_str())),
+            ]),
+        ),
+    ])
+}
+
+/// A decoded response payload (client side).
+#[derive(Debug)]
+pub enum RpcResponse {
+    /// The `reply` object of an `{"ok":true}` response.
+    Reply(Json),
+    Error(RpcError),
+}
+
+/// Decode a response payload (the client half of the codec).
+pub fn parse_response(line: &str) -> anyhow::Result<RpcResponse> {
+    let j = json::parse(line)?;
+    match j.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => Ok(RpcResponse::Reply(j.req("reply")?.clone())),
+        Some(false) => {
+            let e = j.req("error")?;
+            Ok(RpcResponse::Error(RpcError {
+                code: e.req("code")?.as_str().unwrap_or_default().to_string(),
+                message: e.req("message")?.as_str().unwrap_or_default().to_string(),
+            }))
+        }
+        None => anyhow::bail!("response missing boolean `ok`"),
+    }
+}
+
+/// Serve one request payload end to end: parse, open the session,
+/// encode. Never fails — every failure becomes a structured error
+/// response.
+pub fn handle_request(service: &ScheduleService, defaults: &RpcDefaults, line: &str) -> Json {
+    match parse_request(line, defaults) {
+        Err(e) => error_json(&e),
+        Ok(req) => match service.open_session(&req) {
+            Ok(reply) => response_json(&reply),
+            Err(e) => {
+                // Classify by re-probing the service, not by sniffing
+                // the anyhow message (whose wording is not a contract).
+                let code =
+                    if service.can_resolve(&req.model) { "internal" } else { "unknown_model" };
+                error_json(&RpcError::new(code, e.to_string()))
+            }
+        },
+    }
+}
+
+/// Live-connection registry: worker id -> read-half handle, used to
+/// unblock readers on shutdown. Entries are removed when their worker
+/// exits, so a long-lived server does not leak one fd per connection.
+type ConnMap = Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>;
+
+/// The multi-threaded TCP server: an accept loop handing each
+/// connection to its own OS thread, all threads sharing one
+/// [`ScheduleService`] handle (sessions contend only on the sharded
+/// measurement cache). [`RpcServer::shutdown`] stops accepting,
+/// unblocks every connection's reader, and joins all workers.
+pub struct RpcServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: ConnMap,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:7461"`, port 0 for ephemeral) and
+    /// start serving `service` in background threads.
+    pub fn start(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+    ) -> anyhow::Result<RpcServer> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| anyhow::anyhow!("binding RPC listener on {bind}: {e}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnMap = Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || accept_loop(listener, service, defaults, stop, conns))
+        };
+        Ok(RpcServer { addr, stop, conns, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, close every live connection,
+    /// join all threads. Both stream halves are shut down — closing
+    /// only the read half would leave a worker stuck in `write_all`
+    /// toward a client that stopped reading, and the join below would
+    /// never return.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection (the flag
+        // is already visible when it wakes). Wildcard binds (0.0.0.0)
+        // may not be dialable as-is; fall back to loopback.
+        if TcpStream::connect(self.addr).is_err() {
+            let _ =
+                TcpStream::connect((std::net::Ipv4Addr::LOCALHOST, self.addr.port()));
+        }
+        for conn in self.conns.lock().expect("conns lock").values() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: ScheduleService,
+    defaults: RpcDefaults,
+    stop: Arc<AtomicBool>,
+    conns: ConnMap,
+) {
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    let mut next_id: u64 = 0;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // Transient accept failure (e.g. fd pressure): back off
+                // instead of spinning the accept thread hot.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                continue;
+            }
+        };
+        let id = next_id;
+        next_id += 1;
+        // Register the read-half BEFORE spawning: every worker must be
+        // unblockable at shutdown. If the handle cannot be duplicated
+        // (fd pressure), refuse the connection rather than spawn a
+        // reader that shutdown() could never wake.
+        let Ok(handle) = stream.try_clone() else { continue };
+        conns.lock().expect("conns lock").insert(id, handle);
+        let service = service.clone();
+        let defaults = defaults.clone();
+        let stop = stop.clone();
+        let conns = conns.clone();
+        workers.push(std::thread::spawn(move || {
+            connection_loop(stream, &service, &defaults, &stop);
+            // Drop this connection's registry entry so a long-lived
+            // server's fd usage tracks *live* connections only.
+            conns.lock().expect("conns lock").remove(&id);
+        }));
+        // Reap finished workers opportunistically so the handle list
+        // does not grow with total connections served.
+        workers.retain(|w| !w.is_finished());
+    }
+    for worker in workers {
+        let _ = worker.join();
+    }
+}
+
+/// One connection's session loop: answer frames in order until the
+/// client closes, the framing breaks, or the server shuts down.
+fn connection_loop(
+    stream: TcpStream,
+    service: &ScheduleService,
+    defaults: &RpcDefaults,
+    stop: &AtomicBool,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match read_frame(&mut reader) {
+            Ok(line) => {
+                let response = handle_request(service, defaults, &line).to_compact();
+                match encode_frame(&response) {
+                    Ok(buf) => {
+                        if writer.write_all(&buf).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            Err(FrameError::Closed) | Err(FrameError::Io(_)) => break,
+            Err(e) => {
+                // Framing violation: best-effort structured error, then
+                // close (the stream cannot be resynchronized).
+                if !stop.load(Ordering::SeqCst) {
+                    let code = match e {
+                        FrameError::Oversized(_) => "oversized_frame",
+                        _ => "bad_frame",
+                    };
+                    let response = error_json(&RpcError::new(code, e.to_string())).to_compact();
+                    if let Ok(buf) = encode_frame(&response) {
+                        let _ = writer.write_all(&buf);
+                    }
+                }
+                break;
+            }
+        }
+    }
+    let _ = writer.shutdown(Shutdown::Both);
+}

@@ -21,7 +21,7 @@
 //! full pair matrix (Fig 4), the search-time ledger (Fig 5b/6b/8b), and
 //! the end-to-end times (Fig 5a/6a/8a).
 
-use super::store::ScheduleStore;
+use super::store::{ScheduleStore, StoreView};
 use crate::coordinator::{
     content_from_parts, content_key, measure_pairs_cached_precomputed, CachedBatch, Ledger,
     MeasureCache,
@@ -77,14 +77,28 @@ impl SweepPlan {
     /// records always, anchor-compatible adaptations when `cross_class`
     /// is on.
     pub fn build(target: &ModelGraph, store: &ScheduleStore, options: &TransferOptions) -> SweepPlan {
+        Self::build_view(target, &StoreView::of_store(store), options)
+    }
+
+    /// [`SweepPlan::build`] over a borrowed [`StoreView`] — the
+    /// zero-copy serving entry point. The plan owns its schedules
+    /// (cloned per *job*, as before), but the records themselves are
+    /// only read through references, so a service can plan sweeps over
+    /// `Arc`'d sub-stores without cloning a single [`super::StoreRecord`].
+    /// Job/record indices refer to positions in `view.records`.
+    pub fn build_view(
+        target: &ModelGraph,
+        view: &StoreView<'_>,
+        options: &TransferOptions,
+    ) -> SweepPlan {
         let mut plan = SweepPlan::default();
         // Canonical schedule hashes, computed once per store record no
         // matter how many kernels each record is tried on.
-        let mut record_hash: Vec<Option<u64>> = vec![None; store.records.len()];
+        let mut record_hash: Vec<Option<u64>> = vec![None; view.records.len()];
         for (ki, kernel) in target.kernels.iter().enumerate() {
             let sig = kernel.class_signature();
             let start = plan.jobs.len();
-            for (ri, r) in store.records.iter().enumerate() {
+            for (ri, r) in view.records.iter().enumerate() {
                 if r.class_sig == sig {
                     let sched_hash = *record_hash[ri]
                         .get_or_insert_with(|| serialize::canonical_hash(&r.schedule));

@@ -20,4 +20,4 @@ pub use engine::{
 pub use heuristic::{class_proportions, eq1_score, rank_tuning_models};
 pub use pairwise::{refine_pairwise, RefinedResult};
 pub use sampling::{sample_by_source_quality, sample_random};
-pub use store::{ScheduleStore, StoreRecord};
+pub use store::{store_record_clones, ScheduleStore, StoreRecord, StoreView};

@@ -28,6 +28,7 @@ fn assert_replies_equal(a: &SessionReply, b: &SessionReply, ctx: &str) {
     assert_eq!(a.target, b.target, "{ctx}: target");
     assert_eq!(a.device, b.device, "{ctx}: device");
     assert_eq!(a.seed, b.seed, "{ctx}: seed");
+    assert_eq!(a.epoch, b.epoch, "{ctx}: store epoch");
     assert_eq!(a.sources, b.sources, "{ctx}: swept sources");
     assert_eq!(a.untuned_model_s.to_bits(), b.untuned_model_s.to_bits(), "{ctx}: untuned");
     assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits(), "{ctx}: tuned");

@@ -1,0 +1,186 @@
+//! Streaming zoo builds (the ISSUE-3 acceptance proof): a session for
+//! model A is answered — with correct epoch provenance — while model
+//! B's tuning has not yet landed, and every reply is bit-identical to
+//! what a *statically* built service over the same source set returns
+//! at the same epoch. Also covers per-model artifact persistence as
+//! tunings land (the producer writes each artifact before the next
+//! model tunes).
+
+use std::path::PathBuf;
+use transfer_tuning::artifact::{self, ArtifactStore};
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
+use transfer_tuning::report::{ExperimentConfig, ZooProducer};
+use transfer_tuning::service::rpc::{handle_request, RpcDefaults};
+use transfer_tuning::service::{ScheduleService, SessionRequest};
+use transfer_tuning::transfer::ScheduleStore;
+
+const TRIALS: usize = 96;
+const SEED: u64 = 13;
+
+fn model(name: &str, dim: u64) -> ModelGraph {
+    let mut g = ModelGraph::new(name);
+    g.push(KernelBuilder::dense(dim, dim, dim, &[]));
+    g
+}
+
+fn zoo_models() -> Vec<ModelGraph> {
+    // Target first so it is resolvable from epoch 1 on; A and B land
+    // after it, one epoch each.
+    vec![model("StreamTarget", 768), model("ModelA", 512), model("ModelB", 1024)]
+}
+
+fn config() -> ExperimentConfig {
+    ExperimentConfig { trials: TRIALS, seed: SEED, device: DeviceProfile::xeon_e5_2620() }
+}
+
+fn request() -> SessionRequest {
+    SessionRequest {
+        model: "StreamTarget".into(),
+        device: DeviceProfile::xeon_e5_2620(),
+        budget_s: None,
+        seed: SEED,
+    }
+}
+
+/// A statically built reference service over the first `n` zoo models
+/// (what `ScheduleService::new` over a fully-built partial zoo yields).
+fn static_reference(n: usize) -> ScheduleService {
+    let opts = TuneOptions { trials: TRIALS, seed: SEED, ..Default::default() };
+    let prof = DeviceProfile::xeon_e5_2620();
+    let mut store = ScheduleStore::new();
+    let mut models = Vec::new();
+    for m in zoo_models().into_iter().take(n) {
+        let res = tune_model(&m, &prof, &opts);
+        store.add_tuning(&m, &res);
+        models.push(m);
+    }
+    ScheduleService::new(store, models, 4)
+}
+
+/// Byte-level reply comparison through the wire codec: if the encoded
+/// response payloads are equal, every field — schedules, provenance,
+/// f64 bits (shortest-round-trip formatting), epoch — agrees. The
+/// request is served twice and the *warm* payload returned, so
+/// `charged_search_time_s` (the one legitimately warmth-dependent
+/// field: deterministically 0 once warm) compares exactly between
+/// services with different cache histories.
+fn wire_reply(service: &ScheduleService, line: &str) -> String {
+    let defaults = RpcDefaults { device: DeviceProfile::xeon_e5_2620(), seed: SEED };
+    handle_request(service, &defaults, line);
+    handle_request(service, &defaults, line).to_compact()
+}
+
+#[test]
+fn sessions_stream_in_with_epoch_provenance() {
+    let service = ScheduleService::empty(4);
+    let mut producer = ZooProducer::for_models(zoo_models(), config(), None);
+    let req = request();
+
+    // Epoch 0: nothing published; the target is not resolvable yet.
+    assert_eq!(service.epoch(), 0);
+    assert!(service.open_session(&req).is_err(), "custom target unknown before it lands");
+
+    // Epoch 1: the target itself landed. Sessions answer immediately —
+    // no foreign sources yet, so untuned fallback with provenance.
+    assert_eq!(producer.publish_next(&service, &mut |_| {}), Some(1));
+    let at1 = service.open_session(&req).expect("served at epoch 1");
+    assert_eq!(at1.epoch, 1);
+    assert!(at1.sources.is_empty());
+
+    // Epoch 2: ModelA landed, ModelB still "tuning". THE acceptance
+    // point: the session is answered from A alone, stamped epoch 2,
+    // and byte-identical to a fully-built zoo over {Target, A}.
+    assert_eq!(producer.publish_next(&service, &mut |_| {}), Some(2));
+    assert_eq!(producer.remaining(), 1, "ModelB has not landed");
+    let at2 = service.open_session(&req).expect("served at epoch 2");
+    assert_eq!(at2.epoch, 2);
+    assert_eq!(at2.sources, vec!["ModelA".to_string()]);
+    if let Some(src) = &at2.choices[0].source_model {
+        assert_eq!(src, "ModelA", "any winning schedule must come from the one landed source");
+    }
+    assert!(!at2.sources.contains(&"ModelB".to_string()), "B must be invisible until it lands");
+
+    let reference2 = static_reference(2);
+    assert_eq!(reference2.epoch(), 2, "static epoch = source count = publish count");
+    for line in [
+        "{\"model\":\"StreamTarget\"}",
+        "{\"model\":\"StreamTarget\",\"budget_s\":0}",
+        "{\"model\":\"StreamTarget\",\"seed\":77}",
+    ] {
+        assert_eq!(
+            wire_reply(&service, line),
+            wire_reply(&reference2, line),
+            "epoch-2 streaming reply must be bit-identical to the static zoo ({line})"
+        );
+    }
+
+    // Epoch 3: the full zoo. Replies now match a fully-built service,
+    // and the mixed pool sweeps both sources.
+    assert_eq!(producer.publish_next(&service, &mut |_| {}), Some(3));
+    assert_eq!(producer.publish_next(&service, &mut |_| {}), None, "zoo complete");
+    let at3 = service.open_session(&req).expect("served at epoch 3");
+    assert_eq!(at3.epoch, 3);
+    assert_eq!(at3.sources.len(), 2);
+    let reference3 = static_reference(3);
+    assert_eq!(reference3.epoch(), 3);
+    assert_eq!(
+        wire_reply(&service, "{\"model\":\"StreamTarget\"}"),
+        wire_reply(&reference3, "{\"model\":\"StreamTarget\"}"),
+        "full-zoo streaming reply must match the static build"
+    );
+
+    // More sources can only improve (or tie) each kernel's standalone
+    // pick — same argument as the budget-monotonicity invariant.
+    for (late, early) in at3.choices.iter().zip(&at2.choices) {
+        assert!(late.standalone_s <= early.standalone_s + 1e-12);
+    }
+}
+
+#[test]
+fn producer_persists_each_artifact_as_it_lands() {
+    let dir: PathBuf = std::env::temp_dir().join("tt_streaming_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = config();
+    let device = cfg.device.clone();
+    let mut artifacts = ArtifactStore::open(&dir).expect("open artifact dir");
+    let service = ScheduleService::empty(2);
+    let mut producer = ZooProducer::for_models(zoo_models(), cfg, Some(&mut artifacts));
+
+    let key_of = |name: &str| artifact::tuning_key(name, &device, TRIALS, SEED);
+
+    // After the first two publishes, Target and A are durable but B —
+    // still unlanded — is not: persistence streams too.
+    producer.publish_next(&service, &mut |_| {}).expect("target");
+    producer.publish_next(&service, &mut |_| {}).expect("model a");
+    let mut observer = ArtifactStore::open(&dir).expect("reopen");
+    assert!(observer.load_tuning(key_of("StreamTarget")).is_some());
+    assert!(observer.load_tuning(key_of("ModelA")).is_some());
+    assert!(observer.load_tuning(key_of("ModelB")).is_none(), "B not landed, not persisted");
+
+    producer.publish_next(&service, &mut |_| {}).expect("model b");
+    assert_eq!(producer.stats.models_tuned, 3);
+    drop(producer);
+
+    let mut observer = ArtifactStore::open(&dir).expect("reopen again");
+    assert!(observer.load_tuning(key_of("ModelB")).is_some());
+
+    // A second, warm producer streams the same zoo from artifacts:
+    // zero trials, and the service it feeds reaches the same epoch.
+    let mut artifacts2 = ArtifactStore::open(&dir).expect("reopen for warm run");
+    let warm_service = ScheduleService::empty(2);
+    let mut warm = ZooProducer::for_models(zoo_models(), config(), Some(&mut artifacts2));
+    while warm.publish_next(&warm_service, &mut |_| {}).is_some() {}
+    assert_eq!(warm.stats.models_tuned, 0, "warm streaming build re-tunes nothing");
+    assert_eq!(warm.stats.trials_run, 0);
+    assert_eq!(warm.stats.models_from_artifacts, 3);
+    assert_eq!(warm_service.epoch(), 3);
+    // And serves bit-identical replies to the cold streaming service.
+    assert_eq!(
+        wire_reply(&warm_service, "{\"model\":\"StreamTarget\"}"),
+        wire_reply(&service, "{\"model\":\"StreamTarget\"}"),
+        "artifact-warmed streaming replies must be bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
