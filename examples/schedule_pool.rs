@@ -18,7 +18,7 @@ use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
 fn main() {
     let trials = std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500);
     let zoo = Zoo::build(
-        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() },
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620(), jobs: 0 },
         |line| eprintln!("  {line}"),
     );
 

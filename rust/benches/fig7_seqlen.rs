@@ -9,7 +9,7 @@ fn main() {
         std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let t0 = std::time::Instant::now();
     let config =
-        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() };
+        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620(), jobs: 0 };
     let table = figures::fig7(&config, |l| eprintln!("  {l}"));
     print!("{}", table.render());
     table.write_csv(std::path::Path::new("results"), "fig7").ok();

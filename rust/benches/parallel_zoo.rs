@@ -1,0 +1,204 @@
+//! Bench: cold zoo builds, serial vs `--jobs 4` — the wall-clock payoff
+//! of the deterministic parallel tuning pipeline, and the proof that it
+//! is *only* a wall-clock knob.
+//!
+//! Two cold builds of the same zoo (`jobs = 1` vs `jobs = 4`) must
+//! produce a byte-identical persisted `ScheduleStore`, identical
+//! `ZooBuildStats` trial counts, and bit-identical standalone search
+//! times — while the parallel build beats the serial one on the clock.
+//! A warm rebuild at `jobs = 4` over the serial build's artifacts must
+//! still run 0 trials and charge 0.0 device-seconds (parallelism can
+//! never turn a warm-start into work).
+//!
+//! Emits `results/BENCH_parallel_zoo.json` — `{wall_s, jobs, trials}`
+//! plus the serial reference — as the repo's perf-trajectory artifact
+//! (the CI bench-smoke job uploads it per commit).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+use transfer_tuning::artifact::ArtifactStore;
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::util::json::Json;
+use transfer_tuning::util::table::Table;
+
+const PARALLEL_JOBS: usize = 4;
+
+fn build(trials: usize, jobs: usize, artifacts: Option<&mut ArtifactStore>) -> (Zoo, f64) {
+    let config = ExperimentConfig {
+        trials,
+        seed: 0xA45,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs,
+    };
+    let t0 = Instant::now();
+    let zoo = Zoo::build_incremental(config, artifacts, |_| {});
+    (zoo, t0.elapsed().as_secs_f64())
+}
+
+/// The one `store_*.jsonl` artifact in a cache dir, as raw bytes.
+fn persisted_store_bytes(dir: &Path) -> Vec<u8> {
+    let mut stores: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read artifact dir")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("store_") && n.ends_with(".jsonl"))
+        })
+        .collect();
+    assert_eq!(stores.len(), 1, "expected exactly one persisted store in {}", dir.display());
+    std::fs::read(stores.remove(0)).expect("read persisted store")
+}
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let dir_serial = std::env::temp_dir().join("tt_bench_parallel_zoo_serial");
+    let dir_parallel = std::env::temp_dir().join("tt_bench_parallel_zoo_parallel");
+    let _ = std::fs::remove_dir_all(&dir_serial);
+    let _ = std::fs::remove_dir_all(&dir_parallel);
+
+    let mut table = Table::new(
+        "Cold zoo build: serial vs parallel (deterministic pipeline)",
+        &["Regime", "Jobs", "Host s", "Models tuned", "Trials run", "Tuning device s"],
+    );
+
+    // ---- cold, serial --------------------------------------------------
+    let (serial_zoo, serial_wall) = build(trials, 1, None);
+    table.row(vec![
+        "cold".into(),
+        "1".into(),
+        format!("{serial_wall:.2}"),
+        serial_zoo.build_stats.models_tuned.to_string(),
+        serial_zoo.build_stats.trials_run.to_string(),
+        format!("{:.1}", serial_zoo.build_stats.tuning_seconds_charged),
+    ]);
+
+    // ---- cold, parallel ------------------------------------------------
+    let (par_zoo, par_wall) = build(trials, PARALLEL_JOBS, None);
+    table.row(vec![
+        "cold".into(),
+        PARALLEL_JOBS.to_string(),
+        format!("{par_wall:.2}"),
+        par_zoo.build_stats.models_tuned.to_string(),
+        par_zoo.build_stats.trials_run.to_string(),
+        format!("{:.1}", par_zoo.build_stats.tuning_seconds_charged),
+    ]);
+
+    // ---- determinism gates --------------------------------------------
+    assert_eq!(
+        serial_zoo.build_stats.trials_run, par_zoo.build_stats.trials_run,
+        "trial counts must not depend on jobs"
+    );
+    assert_eq!(
+        serial_zoo.build_stats.tuning_seconds_charged.to_bits(),
+        par_zoo.build_stats.tuning_seconds_charged.to_bits(),
+        "charged tuning seconds must be bit-identical"
+    );
+    for (a, b) in serial_zoo.tunings.iter().zip(&par_zoo.tunings) {
+        assert_eq!(a.model, b.model, "models must land in submission order");
+        assert_eq!(
+            a.search_time_s.to_bits(),
+            b.search_time_s.to_bits(),
+            "standalone search time of {} drifted across jobs",
+            a.model
+        );
+    }
+    assert_eq!(
+        serial_zoo.store.to_jsonl(),
+        par_zoo.store.to_jsonl(),
+        "merged schedule store must be byte-identical across jobs"
+    );
+
+    // Persisted form too: both zoos written through the artifact store
+    // land byte-identical `store_*.jsonl` files under the same key.
+    let mut artifacts_serial = ArtifactStore::open(&dir_serial).expect("open serial dir");
+    serial_zoo.persist(&mut artifacts_serial).expect("persist serial zoo");
+    let mut artifacts_parallel = ArtifactStore::open(&dir_parallel).expect("open parallel dir");
+    par_zoo.persist(&mut artifacts_parallel).expect("persist parallel zoo");
+    drop(artifacts_serial);
+    drop(artifacts_parallel);
+    assert_eq!(
+        persisted_store_bytes(&dir_serial),
+        persisted_store_bytes(&dir_parallel),
+        "persisted ScheduleStore bytes must be identical across jobs"
+    );
+
+    // ---- warm, parallel, over artifacts from another jobs setting -----
+    // (tuning artifacts were not persisted by the cold in-memory builds,
+    // so seed the dir with a cold artifact-backed build first — itself a
+    // cross-check: artifact-backed, parallel, must reproduce the serial
+    // in-memory store byte for byte)
+    let mut artifacts = ArtifactStore::open(&dir_serial).expect("reopen serial dir");
+    let (seeded_zoo, _) = build(trials, PARALLEL_JOBS, Some(&mut artifacts));
+    assert_eq!(
+        seeded_zoo.store.to_jsonl(),
+        serial_zoo.store.to_jsonl(),
+        "artifact-backed build must reproduce the in-memory store"
+    );
+    drop(seeded_zoo);
+    let (warm_zoo, warm_wall) = build(trials, PARALLEL_JOBS, Some(&mut artifacts));
+    table.row(vec![
+        "warm".into(),
+        PARALLEL_JOBS.to_string(),
+        format!("{warm_wall:.2}"),
+        warm_zoo.build_stats.models_tuned.to_string(),
+        warm_zoo.build_stats.trials_run.to_string(),
+        format!("{:.1}", warm_zoo.build_stats.tuning_seconds_charged),
+    ]);
+    assert_eq!(warm_zoo.build_stats.trials_run, 0, "warm parallel build must run zero trials");
+    assert_eq!(warm_zoo.build_stats.models_tuned, 0);
+    assert_eq!(warm_zoo.build_stats.tuning_seconds_charged, 0.0);
+    assert_eq!(
+        warm_zoo.store.to_jsonl(),
+        serial_zoo.store.to_jsonl(),
+        "warm parallel store must be byte-identical"
+    );
+
+    print!("{}", table.render());
+    println!(
+        "[bench parallel_zoo] cold speedup: {:.2}x (jobs=1 {:.2}s -> jobs={} {:.2}s), \
+         stores byte-identical",
+        serial_wall / par_wall.max(1e-9),
+        serial_wall,
+        PARALLEL_JOBS,
+        par_wall,
+    );
+
+    // The perf-trajectory artifact: one JSON object per run.
+    let report = Json::obj(vec![
+        ("bench", Json::str("parallel_zoo")),
+        ("jobs", Json::num(PARALLEL_JOBS as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("wall_s", Json::num(par_wall)),
+        ("serial_wall_s", Json::num(serial_wall)),
+        ("speedup", Json::num(serial_wall / par_wall.max(1e-9))),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    let out = Path::new("results").join("BENCH_parallel_zoo.json");
+    let mut text = report.to_compact();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_parallel_zoo.json");
+    println!("[bench parallel_zoo] wrote {}", out.display());
+
+    // Hard-gate the speedup only when the serial build did meaningful
+    // work: at tiny TT_TRIALS budgets on a loaded shared runner,
+    // thread overhead can rival the work itself, and a wall-clock
+    // flake must not mask the byte-identity gates above (which always
+    // run). The JSON artifact records the ratio either way.
+    if serial_wall >= 0.5 {
+        assert!(
+            par_wall < serial_wall,
+            "jobs={PARALLEL_JOBS} cold build ({par_wall:.2}s) must beat jobs=1 ({serial_wall:.2}s)"
+        );
+    } else {
+        println!(
+            "[bench parallel_zoo] serial build too fast ({serial_wall:.3}s) for a robust \
+             wall-clock gate; speedup recorded but not asserted"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir_serial).ok();
+    std::fs::remove_dir_all(&dir_parallel).ok();
+}

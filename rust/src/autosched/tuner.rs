@@ -21,8 +21,9 @@
 use super::costmodel::{CostModel, GbdtParams};
 use super::features::{features, NUM_FEATURES};
 use super::sketch::{crossover, mutate, random_schedule};
-use crate::device::{measure, model_time, untuned_kernel_times, DeviceProfile};
-use crate::ir::ModelGraph;
+use crate::coordinator::jobs::par_map_indexed;
+use crate::device::{measure_from_sim, model_time, simulate, untuned_kernel_times, DeviceProfile};
+use crate::ir::{Kernel, ModelGraph};
 use crate::sched::{apply, serialize, Schedule};
 use crate::util::rng::Rng;
 use std::collections::{HashMap, HashSet};
@@ -45,6 +46,13 @@ pub struct TuneOptions {
     pub train_window: usize,
     /// Simulated seconds charged per cost-model retrain round.
     pub train_cost_s: f64,
+    /// Host threads for each round's candidate evaluation (sketch
+    /// application, feature extraction, cost-model prediction, the
+    /// deterministic simulator pass). 0 = inherit the `--jobs`/`TT_JOBS`
+    /// setting, else auto-detect. Wall-clock only: the seeded draws all
+    /// stay serial, so results are bit-identical at any value (see
+    /// `crate::coordinator::jobs`).
+    pub jobs: usize,
 }
 
 impl Default for TuneOptions {
@@ -58,6 +66,7 @@ impl Default for TuneOptions {
             seed: 0xA45,
             train_window: 512,
             train_cost_s: 1.5,
+            jobs: 0,
         }
     }
 }
@@ -148,6 +157,52 @@ impl TaskState {
     }
 }
 
+/// Score one candidate batch for evolutionary selection.
+///
+/// The pure work — sketch application, feature extraction, cost-model
+/// prediction — fans out across the scoped pool into index-ordered
+/// slots; the untrained-model exploration scores then draw from the
+/// task RNG **serially, in batch order**, exactly the draws a fully
+/// serial evaluation makes. That split is what keeps `tune_model`
+/// bit-identical at any `jobs` setting.
+fn score_batch(
+    population: Vec<Schedule>,
+    kernel: &Kernel,
+    profile: &DeviceProfile,
+    model: &CostModel,
+    rng: &mut Rng,
+    jobs: usize,
+) -> Vec<(f64, Schedule)> {
+    let trained = model.is_trained();
+    // Pure phase (parallel): validity, plus the model score when trained.
+    let pure: Vec<Option<f64>> = par_map_indexed(&population, jobs, |_, s| match apply(s, kernel) {
+        Err(_) => None,
+        Ok(nest) => Some(if trained {
+            model.predict(&features(kernel, &nest, profile))
+        } else {
+            0.0
+        }),
+    });
+    // Serial phase (index order): the seeded exploration draws.
+    population
+        .into_iter()
+        .zip(pure)
+        .map(|(s, p)| {
+            let score = match p {
+                None => f64::NEG_INFINITY,
+                Some(predicted) => {
+                    if trained {
+                        predicted
+                    } else {
+                        rng.f64()
+                    }
+                }
+            };
+            (score, s)
+        })
+        .collect()
+}
+
 /// Run the auto-scheduler over a whole model graph.
 pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOptions) -> TuningResult {
     let mut root_rng = Rng::new(opts.seed ^ crate::ir::workload::fnv1a(graph.name.as_bytes()));
@@ -230,23 +285,15 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         while population.len() < opts.population {
             population.push(random_schedule(kernel, &mut task.rng));
         }
-        let score = |model: &CostModel, s: &Schedule, rng: &mut Rng| -> f64 {
-            match apply(s, kernel) {
-                Err(_) => f64::NEG_INFINITY,
-                Ok(nest) => {
-                    if model.is_trained() {
-                        model.predict(&features(kernel, &nest, profile))
-                    } else {
-                        rng.f64()
-                    }
-                }
-            }
-        };
         for _gen in 0..opts.generations {
-            let mut scored: Vec<(f64, Schedule)> = population
-                .drain(..)
-                .map(|s| (score(&task.model, &s, &mut task.rng), s))
-                .collect();
+            let mut scored = score_batch(
+                std::mem::take(&mut population),
+                kernel,
+                profile,
+                &task.model,
+                &mut task.rng,
+                opts.jobs,
+            );
             scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
             scored.truncate(opts.population / 2);
             let elites: Vec<Schedule> = scored.into_iter().map(|(_, s)| s).collect();
@@ -264,10 +311,14 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         }
 
         // ---- batch selection: top-predicted + eps random, unmeasured ---
-        let mut scored: Vec<(f64, Schedule)> = population
-            .drain(..)
-            .map(|s| (score(&task.model, &s, &mut task.rng), s))
-            .collect();
+        let mut scored = score_batch(
+            std::mem::take(&mut population),
+            kernel,
+            profile,
+            &task.model,
+            &mut task.rng,
+            opts.jobs,
+        );
         scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         let n_random = ((n as f64) * opts.eps_random).ceil() as usize;
         let mut batch: Vec<Schedule> = Vec::with_capacity(n);
@@ -298,21 +349,33 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         }
 
         // ---- measurement + ledger --------------------------------------
+        // Parallel phase: sketch application, the deterministic
+        // simulator pass, and feature extraction fan out into
+        // index-ordered slots. Serial phase: the seeded measurement
+        // jitter and every mutable update run in batch order — exactly
+        // the RNG draws a serial loop makes, so the round is
+        // bit-identical at any thread count.
         let prev_best = if task.best_cost.is_finite() { task.best_cost } else { task.untuned_cost };
-        for s in batch {
+        let prepared: Vec<Option<(f64, [f64; NUM_FEATURES])>> =
+            par_map_indexed(&batch, opts.jobs, |_, s| {
+                apply(s, kernel).ok().map(|nest| {
+                    (simulate(kernel, &nest, profile).total_s, features(kernel, &nest, profile))
+                })
+            });
+        for (s, prep) in batch.into_iter().zip(prepared) {
             trials_used += 1;
-            match apply(&s, kernel) {
-                Err(_) => {
+            match prep {
+                None => {
                     // Invalid candidates still cost codegen time before
                     // the compiler rejects them.
                     ledger += 0.3 * profile.measure_overhead_s + profile.rpc_overhead_s * 0.3;
                 }
-                Ok(nest) => {
-                    let cost = measure(kernel, &nest, profile, &mut task.rng);
+                Some((sim_s, feats)) => {
+                    let cost = measure_from_sim(sim_s, profile, &mut task.rng);
                     ledger += profile.measure_overhead_s
                         + profile.rpc_overhead_s
                         + profile.measure_repeats as f64 * cost;
-                    task.xs.push(features(kernel, &nest, profile));
+                    task.xs.push(feats);
                     task.ys.push(-(cost.max(1e-12)).ln());
                     if cost < task.best_cost {
                         task.best_cost = cost;
@@ -434,6 +497,27 @@ mod tests {
             a.final_model_time(&g, &prof),
             b.final_model_time(&g, &prof)
         );
+    }
+
+    #[test]
+    fn bit_identical_at_any_job_count() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let reference = tune_model(&g, &prof, &TuneOptions { jobs: 1, ..tiny_opts(64) });
+        for jobs in [2, 8] {
+            let par = tune_model(&g, &prof, &TuneOptions { jobs, ..tiny_opts(64) });
+            assert_eq!(
+                par.search_time_s.to_bits(),
+                reference.search_time_s.to_bits(),
+                "ledger drifted at jobs={jobs}"
+            );
+            assert_eq!(par.trials_used, reference.trials_used);
+            assert_eq!(
+                par.final_model_time(&g, &prof).to_bits(),
+                reference.final_model_time(&g, &prof).to_bits(),
+                "best schedules drifted at jobs={jobs}"
+            );
+        }
     }
 
     #[test]

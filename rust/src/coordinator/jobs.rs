@@ -1,0 +1,143 @@
+//! The process-wide `--jobs` knob and the deterministic parallel map.
+//!
+//! Every parallel fan-out in the system — the measurement pool, the
+//! tuner's per-round candidate evaluation, the zoo build's model-level
+//! workers — resolves its thread count through [`effective_jobs`], so
+//! one knob governs them all:
+//!
+//! 1. an explicit per-call request (`TuneOptions::jobs`,
+//!    `ExperimentConfig::jobs`) when non-zero;
+//! 2. else the process-global override set by `--jobs`
+//!    ([`set_global_jobs`]);
+//! 3. else the `TT_JOBS` environment variable (how CI pins constrained
+//!    runners to reproducible thread counts);
+//! 4. else [`std::thread::available_parallelism`].
+//!
+//! The knob is a *wall-clock* control only. Results are bit-identical
+//! at any setting: parallel sections compute pure work (no RNG, no
+//! shared mutable state) into index-ordered slots, and every seeded
+//! draw happens serially in submission order — the same discipline as
+//! `pool::measure_with_noise`'s content-derived noise. The property
+//! suite (`rust/tests/property_parallel.rs`) holds `tune_model`, zoo
+//! builds, and `ScheduleService::open_session` to that invariant across
+//! `jobs ∈ {1, 2, 8}`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-global `--jobs` override; 0 = unset (fall through to
+/// `TT_JOBS`, then auto-detection).
+static GLOBAL_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// `TT_JOBS`, parsed once per process (the variable is a launch-time
+/// setting; re-reading it per batch would only add syscalls).
+fn env_jobs() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("TT_JOBS").ok().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0)
+    })
+}
+
+/// Set the process-global jobs override (the CLI's `--jobs`). 0 clears
+/// it. Safe to change at any time: thread counts never affect results.
+pub fn set_global_jobs(n: usize) {
+    GLOBAL_JOBS.store(n, Ordering::Relaxed);
+}
+
+/// The current process-global override (0 = unset).
+pub fn global_jobs() -> usize {
+    GLOBAL_JOBS.load(Ordering::Relaxed)
+}
+
+/// Resolve a worker count: `requested` if non-zero, else the global
+/// `--jobs` override, else `TT_JOBS`, else available parallelism.
+/// Always returns at least 1.
+pub fn effective_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    let global = global_jobs();
+    if global > 0 {
+        return global;
+    }
+    let env = env_jobs();
+    if env > 0 {
+        return env;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Deterministic indexed parallel map: applies `f` to every item on a
+/// scoped thread pool of [`effective_jobs`]`(jobs)` workers and returns
+/// the results **in input order**, regardless of which worker finished
+/// first. `f` must be pure (it runs concurrently and its evaluation
+/// order is unspecified); with that contract the output is bit-identical
+/// at any thread count, which is what lets the tuner fan its candidate
+/// batches out without perturbing a single seeded draw.
+pub(crate) fn par_map_indexed<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n_threads = effective_jobs(jobs).min(items.len().max(1));
+    if n_threads <= 1 || items.len() < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(n_threads).max(1);
+    let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
+    results.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        for (ci, (item_chunk, res_chunk)) in
+            items.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (item, slot)) in item_chunk.iter().zip(res_chunk.iter_mut()).enumerate() {
+                    *slot = Some(f(ci * chunk + j, item));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_request_wins() {
+        assert_eq!(effective_jobs(3), 3);
+        assert_eq!(effective_jobs(1), 1);
+    }
+
+    #[test]
+    fn resolution_always_positive() {
+        assert!(effective_jobs(0) >= 1);
+    }
+
+    #[test]
+    fn par_map_preserves_input_order_at_any_width() {
+        let items: Vec<u64> = (0..97).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for jobs in [1, 2, 3, 8, 64] {
+            let par = par_map_indexed(&items, jobs, |_, &x| x * x + 1);
+            assert_eq!(par, serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn par_map_passes_true_indices() {
+        let items: Vec<u64> = (0..57).collect();
+        let idx = par_map_indexed(&items, 4, |i, _| i);
+        assert_eq!(idx, (0..57).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn par_map_handles_tiny_inputs() {
+        let empty: Vec<u64> = Vec::new();
+        assert!(par_map_indexed(&empty, 8, |_, &x| x).is_empty());
+        assert_eq!(par_map_indexed(&[9u64], 8, |_, &x| x + 1), vec![10]);
+    }
+}

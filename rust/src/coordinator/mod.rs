@@ -12,6 +12,7 @@
 //! amortizes round-trips).
 
 pub mod cache;
+pub mod jobs;
 pub mod ledger;
 pub mod metrics;
 pub mod pool;
@@ -21,6 +22,7 @@ pub use cache::{
     content_from_parts, content_key, pair_key, profile_key, sweep_key, CacheStats, MeasureCache,
     Resolution,
 };
+pub use jobs::{effective_jobs, global_jobs, set_global_jobs};
 pub use ledger::Ledger;
 pub use metrics::{LatencyHistogram, SweepMetrics};
 pub use pool::{

@@ -62,31 +62,21 @@ fn measure_one_seeded(
 
 /// Parallel fan-out with one precomputed noise seed per job. Shared
 /// with the service layer's sharded executor (`crate::service::shard`).
+///
+/// The worker count honors the `--jobs`/`TT_JOBS` override (see
+/// [`super::jobs::effective_jobs`]) instead of unconditionally grabbing
+/// `available_parallelism`, so constrained CI runners and benches get
+/// reproducible thread counts — and because each job's noise seed is
+/// content-derived, the outcomes are bit-identical at every setting.
 pub(crate) fn measure_with_noise(
     jobs: &[(&Kernel, &Schedule)],
     profile: &DeviceProfile,
     noise: &[u64],
 ) -> Vec<PairOutcome> {
     debug_assert_eq!(jobs.len(), noise.len());
-    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let chunk = jobs.len().div_ceil(n_threads.max(1)).max(1);
-    let mut results: Vec<Option<PairOutcome>> = vec![None; jobs.len()];
-
-    std::thread::scope(|scope| {
-        for ((job_chunk, noise_chunk), res_chunk) in
-            jobs.chunks(chunk).zip(noise.chunks(chunk)).zip(results.chunks_mut(chunk))
-        {
-            scope.spawn(move || {
-                for (((kernel, sched), &n), slot) in
-                    job_chunk.iter().zip(noise_chunk.iter()).zip(res_chunk.iter_mut())
-                {
-                    *slot = Some(measure_one_seeded(kernel, sched, profile, n));
-                }
-            });
-        }
-    });
-
-    results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+    super::jobs::par_map_indexed(jobs, 0, |i, &(kernel, sched)| {
+        measure_one_seeded(kernel, sched, profile, noise[i])
+    })
 }
 
 /// Evaluate every (kernel, schedule) job standalone, in parallel.

@@ -14,4 +14,4 @@ pub mod simulator;
 pub use interkernel::{boundary_delta, layout_affinity};
 pub use modeltime::{model_time, untuned_kernel_times, untuned_model_time};
 pub use profile::{CacheLevel, DeviceProfile};
-pub use simulator::{measure, simulate, simulate_with, SimBreakdown, SimScratch};
+pub use simulator::{measure, measure_from_sim, simulate, simulate_with, SimBreakdown, SimScratch};

@@ -271,7 +271,16 @@ pub fn measure(
     profile: &DeviceProfile,
     rng: &mut Rng,
 ) -> f64 {
-    simulate(kernel, nest, profile).total_s * rng.lognormal_noise(profile.noise_sigma)
+    measure_from_sim(simulate(kernel, nest, profile).total_s, profile, rng)
+}
+
+/// The noise half of [`measure`], split out so executors that fan the
+/// deterministic simulation across threads can draw the seeded jitter
+/// serially afterwards (in job order) and still produce bit-identical
+/// measurements — the tuner's parallel candidate evaluation depends on
+/// this staying the single definition of measurement noise.
+pub fn measure_from_sim(sim_total_s: f64, profile: &DeviceProfile, rng: &mut Rng) -> f64 {
+    sim_total_s * rng.lognormal_noise(profile.noise_sigma)
 }
 
 #[cfg(test)]

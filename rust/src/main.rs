@@ -19,7 +19,9 @@
 //!
 //! Common flags: `--trials N` (Ansor budget; paper uses 20000),
 //! `--seed S`, `--device server|edge`, `--out DIR` (CSV directory),
-//! and `--cache-dir DIR` — the persistent artifact store
+//! `--jobs N` (host threads for every parallel fan-out — wall-clock
+//! only, results are bit-identical at any value; defaults to `TT_JOBS`
+//! or all cores), and `--cache-dir DIR` — the persistent artifact store
 //! (`transfer_tuning::artifact`). With `--cache-dir`, tunings, the
 //! merged schedule store, and the measurement cache survive the
 //! process: the first `repro table t2 --cache-dir .tt-cache` tunes the
@@ -61,6 +63,11 @@ struct Cli {
     listen: Option<String>,
     /// Measurement-cache shards for the serving path.
     shards: usize,
+    /// Host worker threads for every parallel fan-out (zoo model
+    /// tuning, tuner candidate batches, measurement pool, session
+    /// replay). 0 = TT_JOBS env, else auto. Wall-clock only: results
+    /// are bit-identical at any value.
+    jobs: usize,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -81,6 +88,7 @@ fn parse_args() -> Result<Cli> {
         requests: None,
         listen: None,
         shards: 8,
+        jobs: 0,
     };
     while let Some(arg) = args.next() {
         let mut value = |name: &str| -> Result<String> {
@@ -103,6 +111,7 @@ fn parse_args() -> Result<Cli> {
             "--requests" => cli.requests = Some(PathBuf::from(value("--requests")?)),
             "--listen" => cli.listen = Some(value("--listen")?),
             "--shards" => cli.shards = value("--shards")?.parse()?,
+            "--jobs" => cli.jobs = value("--jobs")?.parse()?,
             other if !other.starts_with("--") && cli.target.is_none() => {
                 cli.target = Some(other.to_string())
             }
@@ -144,7 +153,12 @@ fn build_zoo_with(cli: &Cli, artifacts: Option<&mut ArtifactStore>) -> Zoo {
         if artifacts.is_some() { ", artifact-backed" } else { "" },
     );
     let zoo = Zoo::build_incremental(
-        ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() },
+        ExperimentConfig {
+            trials: cli.trials,
+            seed: cli.seed,
+            device: cli.device.clone(),
+            jobs: cli.jobs,
+        },
         artifacts,
         |line| eprintln!("  {line}"),
     );
@@ -246,8 +260,12 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
             with_zoo(&edge_cli, |zoo| emit(&figures::fig5(zoo), &cli.out, "fig6"))?;
         }
         "fig7" | "7" => {
-            let config =
-                ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+            let config = ExperimentConfig {
+                trials: cli.trials,
+                seed: cli.seed,
+                device: cli.device.clone(),
+                jobs: cli.jobs,
+            };
             let t = figures::fig7(&config, |l| eprintln!("  {l}"));
             emit(&t, &cli.out, "fig7")?;
         }
@@ -274,7 +292,8 @@ fn tune_cached(
         eprintln!("loaded {} from artifacts (0 trials run)", graph.name);
         return Ok(res);
     }
-    let opts = TuneOptions { trials: cli.trials, seed: cli.seed, ..Default::default() };
+    let opts =
+        TuneOptions { trials: cli.trials, seed: cli.seed, jobs: cli.jobs, ..Default::default() };
     eprintln!("tuning {} ({} unique kernels) ...", graph.name, graph.kernels.len());
     let res = tune_model(graph, &cli.device, &opts);
     if let Some(a) = artifacts.as_mut() {
@@ -362,7 +381,12 @@ fn cmd_show_schedule(cli: &Cli) -> Result<()> {
     let kernel = graph.kernels.get(kidx).with_context(|| {
         format!("kernel {kidx} out of range (model has {})", graph.kernels.len())
     })?;
-    let opts = TuneOptions { trials: cli.trials.min(512), seed: cli.seed, ..Default::default() };
+    let opts = TuneOptions {
+        trials: cli.trials.min(512),
+        seed: cli.seed,
+        jobs: cli.jobs,
+        ..Default::default()
+    };
     let mut solo = transfer_tuning::ir::ModelGraph::new("solo");
     solo.push(kernel.clone());
     let res = tune_model(&solo, &cli.device, &opts);
@@ -394,7 +418,12 @@ fn cmd_all(cli: &Cli) -> Result<()> {
         Ok(())
     })?;
 
-    let config = ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+    let config = ExperimentConfig {
+        trials: cli.trials,
+        seed: cli.seed,
+        device: cli.device.clone(),
+        jobs: cli.jobs,
+    };
     emit(&figures::fig7(&config, |l| eprintln!("  {l}")), &cli.out, "fig7")?;
 
     let mut edge_cli = cli.clone();
@@ -446,12 +475,11 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
     let service = ScheduleService::from_zoo(zoo, cli.shards);
 
     // Fan sessions across workers; replies land in request order.
-    // Worker count is a host-parallelism concern, deliberately
-    // independent of --shards (a cache-contention knob).
-    let n_workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .clamp(1, requests.len());
+    // Worker count follows the --jobs/TT_JOBS knob (host-parallelism
+    // concern, deliberately independent of --shards, which is a
+    // cache-contention knob).
+    let n_workers =
+        transfer_tuning::coordinator::effective_jobs(cli.jobs).clamp(1, requests.len());
     let mut slots: Vec<Option<Result<SessionReply>>> = (0..requests.len()).map(|_| None).collect();
     let chunk = requests.len().div_ceil(n_workers).max(1);
     std::thread::scope(|scope| {
@@ -550,8 +578,12 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     use transfer_tuning::service::ScheduleService;
 
     let mut artifacts = open_artifacts(cli)?;
-    let config =
-        ExperimentConfig { trials: cli.trials, seed: cli.seed, device: cli.device.clone() };
+    let config = ExperimentConfig {
+        trials: cli.trials,
+        seed: cli.seed,
+        device: cli.device.clone(),
+        jobs: cli.jobs,
+    };
     // Seed the serving cache from the persisted zoo-level measurement
     // cache (if any) BEFORE serving: a warm --cache-dir keeps serving
     // for free, and the save-on-completion below writes back a
@@ -734,10 +766,21 @@ FLAGS
   --listen ADDR   TCP bind address for the `serve` RPC front end
                   (e.g. 127.0.0.1:7461; port 0 picks one)
   --shards N      measurement-cache shards for `serve` (default 8)
+  --jobs N        host worker threads for every parallel fan-out: up to
+                  N models tune concurrently during zoo builds, tuner
+                  candidate batches and measurement sweeps fan across N
+                  threads, and `serve --requests` replays sessions on N
+                  workers. Purely a wall-clock knob — results are
+                  bit-identical at any value. Default: TT_JOBS env var,
+                  else all cores
 ";
 
 fn main() -> Result<()> {
     let cli = parse_args()?;
+    // One knob for every fan-out in the process: zoo model workers,
+    // tuner candidate batches, the measurement pool, session replay.
+    // Deterministic — thread counts never change results.
+    transfer_tuning::coordinator::set_global_jobs(cli.jobs);
     match cli.command.as_str() {
         "models" => cmd_models(),
         "devices" => cmd_devices(),

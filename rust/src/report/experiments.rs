@@ -7,6 +7,7 @@
 
 use crate::artifact::{self, ArtifactStore};
 use crate::autosched::{tune_model, TuneOptions, TuningResult};
+use crate::coordinator::jobs::effective_jobs;
 use crate::coordinator::{CacheStats, MeasureCache};
 use crate::device::{untuned_model_time, DeviceProfile};
 use crate::ir::ModelGraph;
@@ -15,6 +16,8 @@ use crate::transfer::{
     rank_tuning_models, transfer_tune_cached, ScheduleStore, TransferOptions, TransferResult,
 };
 use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::mpsc;
 
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -23,11 +26,24 @@ pub struct ExperimentConfig {
     pub trials: usize,
     pub seed: u64,
     pub device: DeviceProfile,
+    /// Host worker threads for the build: up to `jobs` models tune
+    /// concurrently, and every inner fan-out (sweep pool, tuner batch
+    /// evaluation) resolves through the same knob. 0 = inherit the
+    /// `--jobs`/`TT_JOBS` setting, else auto-detect. Purely a
+    /// wall-clock control — results are bit-identical at any value
+    /// (`rust/tests/property_parallel.rs`), which is why it is
+    /// deliberately NOT part of any artifact key.
+    pub jobs: usize,
 }
 
 impl Default for ExperimentConfig {
     fn default() -> Self {
-        ExperimentConfig { trials: 2000, seed: 0xA45, device: DeviceProfile::xeon_e5_2620() }
+        ExperimentConfig {
+            trials: 2000,
+            seed: 0xA45,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs: 0,
+        }
     }
 }
 
@@ -65,6 +81,41 @@ pub struct ZooBuildStats {
     pub tuning_seconds_charged: f64,
 }
 
+/// Where one landed tuning came from (accounting + progress label).
+enum TuneOrigin {
+    Artifact,
+    Tuned,
+}
+
+/// Worker-thread plumbing for the producer's model-level fan-out. Kept
+/// in its own struct so [`ZooProducer::finish`] can destructure the
+/// producer while this drop guard still joins any straggling workers
+/// (their results land in `rx` — still alive during the join — or the
+/// send errors harmlessly once the channel is gone).
+struct Fanout {
+    /// `None` once every model is scheduled: with no producer-held
+    /// sender left, a worker that dies without sending surfaces as a
+    /// clean `recv` error instead of a deadlock.
+    tx: Option<mpsc::Sender<(usize, TuningResult)>>,
+    rx: mpsc::Receiver<(usize, TuningResult)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Fanout {
+    fn new() -> Fanout {
+        let (tx, rx) = mpsc::channel();
+        Fanout { tx: Some(tx), rx, handles: Vec::new() }
+    }
+}
+
+impl Drop for Fanout {
+    fn drop(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// The streaming front half of a zoo build: tune-or-load one model at a
 /// time, persisting each tuning artifact the moment it lands.
 ///
@@ -77,6 +128,15 @@ pub struct ZooBuildStats {
 /// --listen` runs exactly this loop; `rust/tests/streaming_service.rs`
 /// proves partial-zoo replies are bit-identical to a static service
 /// over the same sources).
+///
+/// **Model-level fan-out.** Up to `jobs` models
+/// ([`ExperimentConfig::jobs`]) tune concurrently on background worker
+/// threads, but results *land* strictly in submission order: a model
+/// that finishes early waits in `ready` until every earlier model has
+/// been yielded. Stats accounting, artifact-write order, progress
+/// lines, epoch numbering — everything downstream of [`ZooProducer::step`]
+/// is therefore byte-identical to a serial build; the knob buys
+/// wall-clock only.
 pub struct ZooProducer<'a> {
     config: ExperimentConfig,
     models: Vec<ModelGraph>,
@@ -85,6 +145,13 @@ pub struct ZooProducer<'a> {
     /// Cost accounting so far (exactly [`Zoo::build_stats`]'s semantics;
     /// a fully warm producer finishes with 0 trials / 0.0 charged).
     pub stats: ZooBuildStats,
+    /// Models handed to a worker (or loaded from artifacts) so far.
+    scheduled: usize,
+    /// Tunings currently running on background workers.
+    in_flight: usize,
+    /// Completed-but-not-yet-landed results, keyed by model index.
+    ready: HashMap<usize, (TuningResult, TuneOrigin)>,
+    fanout: Fanout,
 }
 
 impl<'a> ZooProducer<'a> {
@@ -99,7 +166,73 @@ impl<'a> ZooProducer<'a> {
         config: ExperimentConfig,
         artifacts: Option<&'a mut ArtifactStore>,
     ) -> Self {
-        ZooProducer { config, models, next: 0, artifacts, stats: ZooBuildStats::default() }
+        ZooProducer {
+            config,
+            models,
+            next: 0,
+            artifacts,
+            stats: ZooBuildStats::default(),
+            scheduled: 0,
+            in_flight: 0,
+            ready: HashMap::new(),
+            fanout: Fanout::new(),
+        }
+    }
+
+    /// Keep the model-level lookahead full: schedule models in index
+    /// order until `jobs` tunings are in flight or everything is
+    /// scheduled. Artifact-backed models load right here, on the
+    /// consumer thread (deterministic load order, and they never occupy
+    /// a worker slot); cold models tune on background workers. With
+    /// several model workers the tuner's own candidate fan-out is
+    /// pinned to one thread each — the model-level parallelism is the
+    /// better use of the same cores — while a serial (`jobs = 1`) build
+    /// keeps the whole knob for trial-level parallelism.
+    fn pump(&mut self) {
+        let slots = effective_jobs(self.config.jobs);
+        let inner_jobs = if slots > 1 { 1 } else { self.config.jobs };
+        while self.scheduled < self.models.len() && self.in_flight < slots {
+            let index = self.scheduled;
+            self.scheduled += 1;
+            let key = artifact::tuning_key(
+                &self.models[index].name,
+                &self.config.device,
+                self.config.trials,
+                self.config.seed,
+            );
+            if let Some(res) = self.artifacts.as_deref_mut().and_then(|a| a.load_tuning(key)) {
+                self.ready.insert(index, (res, TuneOrigin::Artifact));
+                continue;
+            }
+            let graph = self.models[index].clone();
+            let device = self.config.device.clone();
+            let opts = TuneOptions {
+                trials: self.config.trials,
+                seed: self.config.seed,
+                jobs: inner_jobs,
+                ..Default::default()
+            };
+            let tx = self
+                .fanout
+                .tx
+                .as_ref()
+                .expect("sender lives while models remain unscheduled")
+                .clone();
+            self.in_flight += 1;
+            let handle = std::thread::Builder::new()
+                .name(format!("tt-tune-{}", graph.name))
+                .spawn(move || {
+                    let res = tune_model(&graph, &device, &opts);
+                    let _ = tx.send((index, res));
+                })
+                .expect("spawn tuning worker");
+            self.fanout.handles.push(handle);
+        }
+        if self.scheduled >= self.models.len() {
+            // Everything scheduled: drop our sender so only live
+            // workers keep the channel open.
+            self.fanout.tx = None;
+        }
     }
 
     pub fn models(&self) -> &[ModelGraph] {
@@ -127,6 +260,14 @@ impl<'a> ZooProducer<'a> {
     /// the model's index, its tuning, and its untuned baseline time
     /// (computed once, here — the progress line and the consumer both
     /// need it); `None` once every model has landed.
+    ///
+    /// With `jobs > 1` later models may already be tuning (or finished)
+    /// in the background, but this call lands results strictly in
+    /// submission order — complete out of order, land in order — so
+    /// accounting and persistence cannot depend on worker timing. The
+    /// `[host ..s]` figure in the progress line is the wall-clock this
+    /// landing *waited*, which is how the fan-out shows up: overlapped
+    /// models land in near-zero host time.
     pub fn step(
         &mut self,
         progress: &mut impl FnMut(&str),
@@ -136,37 +277,44 @@ impl<'a> ZooProducer<'a> {
         }
         let index = self.next;
         self.next += 1;
-        let m = &self.models[index];
         let t0 = std::time::Instant::now();
-        let cfg = &self.config;
-        let key = artifact::tuning_key(&m.name, &cfg.device, cfg.trials, cfg.seed);
-        let cached = self.artifacts.as_deref_mut().and_then(|a| a.load_tuning(key));
-        let opts = TuneOptions {
-            trials: self.config.trials,
-            seed: self.config.seed,
-            ..Default::default()
-        };
-        let (res, origin) = match cached {
-            Some(res) => {
-                self.stats.models_from_artifacts += 1;
-                (res, "artifact")
+        self.pump();
+        let (res, origin) = loop {
+            if let Some(hit) = self.ready.remove(&index) {
+                break hit;
             }
-            None => {
-                let res = tune_model(m, &self.config.device, &opts);
+            let (done, res) = self
+                .fanout
+                .rx
+                .recv()
+                .expect("tuning worker died before its result landed");
+            self.in_flight -= 1;
+            self.ready.insert(done, (res, TuneOrigin::Tuned));
+            self.pump(); // a worker slot freed: keep the lookahead full
+        };
+        let m = &self.models[index];
+        let origin_label = match origin {
+            TuneOrigin::Artifact => {
+                self.stats.models_from_artifacts += 1;
+                "artifact"
+            }
+            TuneOrigin::Tuned => {
                 self.stats.models_tuned += 1;
                 self.stats.trials_run += res.trials_used;
                 self.stats.tuning_seconds_charged += res.search_time_s;
+                let cfg = &self.config;
+                let key = artifact::tuning_key(&m.name, &cfg.device, cfg.trials, cfg.seed);
                 if let Some(a) = self.artifacts.as_deref_mut() {
                     if let Err(e) = a.save_tuning(key, &res) {
                         progress(&format!("warn: could not persist tuning of {}: {e}", m.name));
                     }
                 }
-                (res, "tuned")
+                "tuned"
             }
         };
         let untuned = untuned_model_time(m, &self.config.device);
         progress(&format!(
-            "{origin:<8} {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
+            "{origin_label:<8} {:<16} trials={} simulated-search={:>9.1}s best-model-time={:.3}ms (untuned {:.3}ms) [host {:.1}s]",
             m.name,
             res.trials_used,
             res.search_time_s,
@@ -221,9 +369,23 @@ impl Zoo {
     pub fn build_incremental(
         config: ExperimentConfig,
         artifacts: Option<&mut ArtifactStore>,
+        progress: impl FnMut(&str),
+    ) -> Zoo {
+        Self::build_for_models(models::all_models(), config, artifacts, progress)
+    }
+
+    /// [`Zoo::build_incremental`] over an explicit model list (tests,
+    /// benches, partial zoos). Same producer pipeline, same stats and
+    /// artifact semantics; with [`ExperimentConfig::jobs`] > 1, up to
+    /// that many models tune concurrently while everything still lands
+    /// — and persists — in submission order.
+    pub fn build_for_models(
+        models: Vec<ModelGraph>,
+        config: ExperimentConfig,
+        artifacts: Option<&mut ArtifactStore>,
         mut progress: impl FnMut(&str),
     ) -> Zoo {
-        let mut producer = ZooProducer::new(config.clone(), artifacts);
+        let mut producer = ZooProducer::for_models(models, config.clone(), artifacts);
         let mut tunings = Vec::with_capacity(producer.models().len());
         let mut untuned_s = Vec::with_capacity(producer.models().len());
         let mut store = ScheduleStore::new();
@@ -347,7 +509,12 @@ mod tests {
     fn tiny_zoo() -> Zoo {
         // Small-trial zoo: fast enough for unit tests, still end-to-end.
         Zoo::build(
-            ExperimentConfig { trials: 120, seed: 11, device: DeviceProfile::xeon_e5_2620() },
+            ExperimentConfig {
+                trials: 120,
+                seed: 11,
+                device: DeviceProfile::xeon_e5_2620(),
+                ..Default::default()
+            },
             |_| {},
         )
     }

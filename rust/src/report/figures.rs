@@ -158,7 +158,12 @@ pub fn fig7(config: &ExperimentConfig, mut progress: impl FnMut(&str)) -> Table 
         models::bert::mobilebert(128),
         models::bert::mobilebert(256),
     ];
-    let opts = TuneOptions { trials: config.trials, seed: config.seed, ..Default::default() };
+    let opts = TuneOptions {
+        trials: config.trials,
+        seed: config.seed,
+        jobs: config.jobs,
+        ..Default::default()
+    };
     let mut store = ScheduleStore::new();
     for v in &variants {
         progress(&format!("tuning {} ...", v.name));
@@ -246,7 +251,12 @@ mod tests {
 
     fn tiny_zoo() -> Zoo {
         Zoo::build(
-            ExperimentConfig { trials: 120, seed: 11, device: DeviceProfile::xeon_e5_2620() },
+            ExperimentConfig {
+                trials: 120,
+                seed: 11,
+                device: DeviceProfile::xeon_e5_2620(),
+                jobs: 0,
+            },
             |_| {},
         )
     }

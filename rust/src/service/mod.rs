@@ -21,6 +21,16 @@
 //! operating point Ansor-style systems aim for. In-flight sessions
 //! keep the snapshot `Arc` they started with; they are never torn.
 //!
+//! **Pre-indexed snapshots.** Everything `open_session` needs that is a
+//! pure function of the published snapshot is computed at publish time,
+//! not per request: the Eq. 1 class-count tables
+//! ([`SourceClassIndex`](crate::transfer::SourceClassIndex)) make
+//! ranking a lookup + target-side fold, and every record carries its
+//! canonical schedule hash from construction
+//! (`StoreRecord::schedule_hash`), so planning a sweep serializes no
+//! schedules. Replies are bit-identical to the scanning paths — this
+//! moves work, never changes it.
+//!
 //! Session semantics are deterministic in (request, epoch): the Eq. 1
 //! heuristic ranks the snapshot's tuning models, the session sweeps
 //! them best-first, and the budget bounds how many sources are swept
@@ -46,7 +56,8 @@ use crate::report::Zoo;
 use crate::sched::Schedule;
 use crate::transfer::engine::assemble_transfer_result;
 use crate::transfer::{
-    rank_tuning_models, ScheduleStore, StoreView, SweepPlan, TransferOptions, TransferResult,
+    rank_tuning_models_indexed, ScheduleStore, SourceClassIndex, StoreView, SweepPlan,
+    TransferOptions, TransferResult,
 };
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
@@ -133,8 +144,14 @@ struct Snapshot {
     sources: BTreeMap<String, Arc<ScheduleStore>>,
     /// The merged store (source-name-major order, identical to a
     /// [`ScheduleStore::add_tuning`] build over the same models) — what
-    /// ranking and persistence consume.
+    /// persistence consumes.
     merged: Arc<ScheduleStore>,
+    /// Eq. 1's source-side tables, precomputed at publish time so
+    /// `open_session` ranks tuning models with lookups + a target-side
+    /// fold instead of rescanning every record per request. Bit-identical
+    /// ranking to scanning the merged store (`rank_tuning_models`
+    /// delegates to the same fold).
+    class_index: SourceClassIndex,
 }
 
 impl Snapshot {
@@ -144,6 +161,7 @@ impl Snapshot {
             models: Vec::new(),
             sources: BTreeMap::new(),
             merged: Arc::new(ScheduleStore::new()),
+            class_index: SourceClassIndex::default(),
         }
     }
 
@@ -169,6 +187,8 @@ impl Snapshot {
         for s in groups.values() {
             merged.records.extend(s.records.iter().cloned());
         }
+        let class_index =
+            SourceClassIndex::of_sources(groups.iter().map(|(n, s)| (n.as_str(), s)));
         let sources: BTreeMap<String, Arc<ScheduleStore>> =
             groups.into_iter().map(|(name, s)| (name, Arc::new(s))).collect();
         Snapshot {
@@ -176,6 +196,7 @@ impl Snapshot {
             models,
             sources,
             merged: Arc::new(merged),
+            class_index,
         }
     }
 
@@ -272,12 +293,22 @@ impl ScheduleService {
         for s in sources.values() {
             merged.records.extend(s.records.iter().cloned());
         }
+        // Re-derive the Eq. 1 tables here, at publish time — sessions
+        // opened against this snapshot rank with lookups only.
+        let class_index =
+            SourceClassIndex::of_sources(sources.iter().map(|(n, s)| (n.as_str(), s.as_ref())));
         let mut models = old.models.clone();
         if !models.iter().any(|m| m.name == graph.name) {
             models.push(graph.clone());
         }
         let epoch = old.epoch + 1;
-        *guard = Arc::new(Snapshot { epoch, models, sources, merged: Arc::new(merged) });
+        *guard = Arc::new(Snapshot {
+            epoch,
+            models,
+            sources,
+            merged: Arc::new(merged),
+            class_index,
+        });
         epoch
     }
 
@@ -363,7 +394,7 @@ impl ScheduleService {
     pub fn open_session(&self, req: &SessionRequest) -> anyhow::Result<SessionReply> {
         let snapshot = self.snapshot();
         let target = Self::target_graph(&snapshot, &req.model)?;
-        let ranked = rank_tuning_models(&target, &snapshot.merged, &req.device);
+        let ranked = rank_tuning_models_indexed(&target, &snapshot.class_index, &req.device);
         let ranked_names: Vec<String> = ranked.into_iter().map(|(name, _)| name).collect();
 
         // Which sources to sweep, and the per-sweep results.

@@ -92,22 +92,32 @@ impl SweepPlan {
         options: &TransferOptions,
     ) -> SweepPlan {
         let mut plan = SweepPlan::default();
-        // Canonical schedule hashes, computed once per store record no
-        // matter how many kernels each record is tried on.
-        let mut record_hash: Vec<Option<u64>> = vec![None; view.records.len()];
+        // Canonical schedule hashes come memoized from the records
+        // themselves (computed once at record construction — see
+        // `StoreRecord::new`), so planning a sweep serializes nothing.
+        // Debug builds re-verify the memo: the only way it can go stale
+        // is mutating the pub `schedule` field instead of calling
+        // `StoreRecord::set_schedule`.
+        if cfg!(debug_assertions) {
+            for r in &view.records {
+                debug_assert_eq!(
+                    r.schedule_hash(),
+                    serialize::canonical_hash(&r.schedule),
+                    "StoreRecord schedule mutated in place: stale memoized hash"
+                );
+            }
+        }
         for (ki, kernel) in target.kernels.iter().enumerate() {
             let sig = kernel.class_signature();
             let start = plan.jobs.len();
             for (ri, r) in view.records.iter().enumerate() {
                 if r.class_sig == sig {
-                    let sched_hash = *record_hash[ri]
-                        .get_or_insert_with(|| serialize::canonical_hash(&r.schedule));
                     plan.jobs.push(SweepJob {
                         kernel: ki,
                         record: ri,
                         adapted: false,
                         schedule: r.schedule.clone(),
-                        content: content_from_parts(kernel.workload_id, sched_hash),
+                        content: content_from_parts(kernel.workload_id, r.schedule_hash()),
                     });
                 } else if options.cross_class {
                     if let Some(adapted) = adapt_cross_class(&r.schedule, kernel) {
@@ -512,7 +522,9 @@ mod tests {
         let mut grown = store.clone();
         let mut extra = store.clone();
         for r in &mut extra.records {
-            r.schedule.unroll_max = r.schedule.unroll_max.wrapping_add(3);
+            let mut s = r.schedule.clone();
+            s.unroll_max = s.unroll_max.wrapping_add(3);
+            r.set_schedule(s);
         }
         grown.merge(&extra);
         let large = transfer_tune(&tgt, &grown, &prof, "mixed", 3);

@@ -15,6 +15,85 @@
 use super::store::ScheduleStore;
 use crate::device::{untuned_kernel_times, DeviceProfile};
 use crate::ir::ModelGraph;
+use std::collections::{BTreeMap, HashMap};
+
+/// Eq. 1's source-side inputs, pre-aggregated: per tuning model, the
+/// class-signature → |W_Tc| table. Building it is one pass over the
+/// records; scoring a target against it is a lookup + fold over the
+/// *target's* classes — no per-candidate scan of the whole store. The
+/// serving layer precomputes one of these per snapshot at publish time
+/// ([`crate::service::ScheduleService`]), which is what turns
+/// `open_session`'s ranking from O(sources × classes × records) into
+/// O(sources × target classes).
+#[derive(Clone, Debug, Default)]
+pub struct SourceClassIndex {
+    /// Source model → (class signature → schedule count). `BTreeMap`
+    /// so sources iterate in name order — the same order
+    /// [`ScheduleStore::source_models`] produces, keeping indexed
+    /// ranking bit-identical to the store-scanning path.
+    counts: BTreeMap<String, HashMap<String, usize>>,
+}
+
+impl SourceClassIndex {
+    /// Index a merged store (one pass).
+    pub fn of_store(store: &ScheduleStore) -> SourceClassIndex {
+        let mut counts: BTreeMap<String, HashMap<String, usize>> = BTreeMap::new();
+        for r in &store.records {
+            *counts
+                .entry(r.source_model.clone())
+                .or_default()
+                .entry(r.class_sig.clone())
+                .or_insert(0) += 1;
+        }
+        SourceClassIndex { counts }
+    }
+
+    /// Index a set of per-source sub-stores (the serving layer's
+    /// snapshot shape). Equivalent to [`SourceClassIndex::of_store`]
+    /// over the merged store when each sub-store holds exactly one
+    /// source's records — including the edge that keeps them
+    /// equivalent: a sub-store with **zero** records is not indexed at
+    /// all, because a record-less source is invisible to the scanning
+    /// path (`source_models` only sees records).
+    pub fn of_sources<'a, I>(sources: I) -> SourceClassIndex
+    where
+        I: IntoIterator<Item = (&'a str, &'a ScheduleStore)>,
+    {
+        let mut counts: BTreeMap<String, HashMap<String, usize>> = BTreeMap::new();
+        for (name, store) in sources {
+            if store.records.is_empty() {
+                continue;
+            }
+            let entry = counts.entry(name.to_string()).or_default();
+            for r in &store.records {
+                *entry.entry(r.class_sig.clone()).or_insert(0) += 1;
+            }
+        }
+        SourceClassIndex { counts }
+    }
+
+    /// |W_Tc|: schedules of class `sig` available from `model`.
+    pub fn class_count(&self, model: &str, sig: &str) -> usize {
+        self.counts
+            .get(model)
+            .and_then(|c| c.get(sig))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Indexed source-model names, in name order.
+    pub fn sources(&self) -> impl Iterator<Item = &str> {
+        self.counts.keys().map(|s| s.as_str())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+}
 
 /// Per-class proportions of untuned inference time (the `P_c`).
 pub fn class_proportions(graph: &ModelGraph, profile: &DeviceProfile) -> Vec<(String, f64)> {
@@ -30,6 +109,19 @@ pub fn class_proportions(graph: &ModelGraph, profile: &DeviceProfile) -> Vec<(St
         .collect()
 }
 
+/// The Eq. 1 fold shared by the scanning and indexed scoring paths:
+/// one implementation, one f64 summation order, so the two paths are
+/// bit-identical by construction.
+fn eq1_fold(proportions: &[(String, f64)], count_of: impl Fn(&str) -> usize) -> f64 {
+    proportions
+        .iter()
+        .map(|(sig, p)| {
+            let w = count_of(sig) as f64;
+            p * p * w.sqrt()
+        })
+        .sum()
+}
+
 /// Eq. 1 score of tuning-model candidate `t_model` for a target whose
 /// per-class untuned-time proportions are `proportions` (from
 /// [`class_proportions`]). The target graph itself does not appear in
@@ -39,31 +131,45 @@ pub fn eq1_score(
     store: &ScheduleStore,
     t_model: &str,
 ) -> f64 {
-    proportions
-        .iter()
-        .map(|(sig, p)| {
-            let w = store.class_count(t_model, sig) as f64;
-            p * p * w.sqrt()
-        })
-        .sum()
+    eq1_fold(proportions, |sig| store.class_count(t_model, sig))
 }
 
 /// Rank candidate tuning models for `target`, best first. The target
 /// itself is excluded (transferring a model onto itself is native
 /// tuning, not transfer-tuning).
+///
+/// Delegates to [`rank_tuning_models_indexed`] over a throwaway
+/// [`SourceClassIndex`] so the scanning and pre-indexed paths share one
+/// scoring implementation and cannot drift. Callers that rank
+/// repeatedly against the same store (the serving layer) hold a
+/// persistent index instead.
 pub fn rank_tuning_models(
     target: &ModelGraph,
     store: &ScheduleStore,
     profile: &DeviceProfile,
 ) -> Vec<(String, f64)> {
+    rank_tuning_models_indexed(target, &SourceClassIndex::of_store(store), profile)
+}
+
+/// [`rank_tuning_models`] against a prebuilt [`SourceClassIndex`]: the
+/// target-side class proportions are computed here; everything
+/// source-side is a table lookup. Bit-identical output to the scanning
+/// path — same candidate order (sorted source names), same f64
+/// summation order over the target's class proportions, same
+/// tie-breaking comparator.
+pub fn rank_tuning_models_indexed(
+    target: &ModelGraph,
+    index: &SourceClassIndex,
+    profile: &DeviceProfile,
+) -> Vec<(String, f64)> {
     let props = class_proportions(target, profile);
-    let mut scored: Vec<(String, f64)> = store
-        .source_models()
-        .into_iter()
-        .filter(|m| *m != target.name)
-        .map(|m| {
-            let s = eq1_score(&props, store, &m);
-            (m, s)
+    let mut scored: Vec<(String, f64)> = index
+        .counts
+        .iter()
+        .filter(|(m, _)| m.as_str() != target.name)
+        .map(|(m, counts)| {
+            let s = eq1_fold(&props, |sig| counts.get(sig).copied().unwrap_or(0));
+            (m.clone(), s)
         })
         .collect();
     scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
@@ -78,13 +184,7 @@ mod tests {
     use crate::{ir::KernelBuilder, models};
 
     fn fake_record(model: &str, sig: &str, kernel_like: &crate::ir::Kernel) -> StoreRecord {
-        StoreRecord {
-            source_model: model.into(),
-            class_sig: sig.into(),
-            source_input_shape: vec![1],
-            source_cost_s: 1e-3,
-            schedule: Schedule::untuned_default(kernel_like),
-        }
+        StoreRecord::new(model, sig, vec![1], 1e-3, Schedule::untuned_default(kernel_like))
     }
 
     #[test]
@@ -145,6 +245,39 @@ mod tests {
         let sb = eq1_score(&props, &store, "B");
         // 4x the schedules only doubles the score (sqrt damping).
         assert!((sb / sa - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn indexed_ranking_is_bit_identical_to_scanning() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let target = models::resnet::resnet18();
+        let conv = KernelBuilder::conv2d(1, 64, 56, 56, 64, 3, 3, 1, 1, &[crate::ir::OpKind::BiasAdd, crate::ir::OpKind::Relu]);
+        let dense = KernelBuilder::dense(256, 768, 768, &[]);
+        let mut store = ScheduleStore::new();
+        for i in 0..7 {
+            store.records.push(fake_record("ConvModel", "conv2d_bias_relu", &conv));
+            if i % 2 == 0 {
+                store.records.push(fake_record("DenseModel", "dense", &dense));
+            }
+            store.records.push(fake_record("MixModel", "conv2d_bias_relu", &conv));
+            store.records.push(fake_record("MixModel", "dense", &dense));
+        }
+        let scanned = rank_tuning_models(&target, &store, &prof);
+        let index = SourceClassIndex::of_store(&store);
+        assert_eq!(index.len(), 3);
+        assert_eq!(index.class_count("MixModel", "dense"), 7);
+        assert_eq!(index.class_count("MixModel", "nope"), 0);
+        let indexed = rank_tuning_models_indexed(&target, &index, &prof);
+        assert_eq!(scanned.len(), indexed.len());
+        for ((ma, sa), (mb, sb)) in scanned.iter().zip(&indexed) {
+            assert_eq!(ma, mb);
+            assert_eq!(sa.to_bits(), sb.to_bits(), "Eq. 1 scores must be bit-identical");
+        }
+        // A record-less sub-store is invisible to the scanning path, so
+        // the index must not register it either.
+        let empty = ScheduleStore::new();
+        let ghost = SourceClassIndex::of_sources([("Ghost", &empty)]);
+        assert!(ghost.is_empty(), "empty sub-stores must not become ranking candidates");
     }
 
     #[test]

@@ -17,7 +17,10 @@ pub use engine::{
     assemble_transfer_result, transfer_tune, transfer_tune_cached, transfer_tune_one_to_one,
     transfer_tune_with, KernelSweep, SweepJob, SweepPlan, TransferOptions, TransferResult,
 };
-pub use heuristic::{class_proportions, eq1_score, rank_tuning_models};
+pub use heuristic::{
+    class_proportions, eq1_score, rank_tuning_models, rank_tuning_models_indexed,
+    SourceClassIndex,
+};
 pub use pairwise::{refine_pairwise, RefinedResult};
 pub use sampling::{sample_by_source_quality, sample_random};
 pub use store::{store_record_clones, ScheduleStore, StoreRecord, StoreView};

@@ -74,20 +74,20 @@ mod tests {
         let conv = crate::ir::KernelBuilder::conv2d(1, 8, 8, 8, 8, 3, 3, 1, 1, &[]);
         let mut s = ScheduleStore::new();
         for i in 0..n_per_class {
-            s.records.push(StoreRecord {
-                source_model: format!("M{i}"),
-                class_sig: "dense".into(),
-                source_input_shape: vec![64, 64],
-                source_cost_s: 1e-3 * (i + 1) as f64,
-                schedule: Schedule::untuned_default(&k),
-            });
-            s.records.push(StoreRecord {
-                source_model: format!("M{i}"),
-                class_sig: "conv2d".into(),
-                source_input_shape: vec![1, 8, 8, 8],
-                source_cost_s: 1e-3 * (n_per_class - i) as f64,
-                schedule: Schedule::untuned_default(&conv),
-            });
+            s.records.push(StoreRecord::new(
+                format!("M{i}"),
+                "dense",
+                vec![64, 64],
+                1e-3 * (i + 1) as f64,
+                Schedule::untuned_default(&k),
+            ));
+            s.records.push(StoreRecord::new(
+                format!("M{i}"),
+                "conv2d",
+                vec![1, 8, 8, 8],
+                1e-3 * (n_per_class - i) as f64,
+                Schedule::untuned_default(&conv),
+            ));
         }
         s
     }

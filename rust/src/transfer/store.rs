@@ -40,6 +40,15 @@ pub struct StoreRecord {
     /// Measured standalone cost on the source kernel, seconds.
     pub source_cost_s: f64,
     pub schedule: Schedule,
+    /// [`serialize::canonical_hash`] of `schedule`, memoized at
+    /// construction: one serialization per record *lifetime* instead of
+    /// one per sweep plan (sessions build a plan per request — this is
+    /// the `open_session` hot path). Private so every construction path
+    /// goes through [`StoreRecord::new`]; replace the schedule via
+    /// [`StoreRecord::set_schedule`] (direct mutation of the pub
+    /// `schedule` field would stale the memo — sweep planners
+    /// debug-assert against that).
+    sched_hash: u64,
 }
 
 impl Clone for StoreRecord {
@@ -53,11 +62,45 @@ impl Clone for StoreRecord {
             source_input_shape: self.source_input_shape.clone(),
             source_cost_s: self.source_cost_s,
             schedule: self.schedule.clone(),
+            sched_hash: self.sched_hash,
         }
     }
 }
 
 impl StoreRecord {
+    /// Construct a record, memoizing the schedule's canonical hash (the
+    /// only place it is ever computed).
+    pub fn new(
+        source_model: impl Into<String>,
+        class_sig: impl Into<String>,
+        source_input_shape: Vec<u64>,
+        source_cost_s: f64,
+        schedule: Schedule,
+    ) -> StoreRecord {
+        let sched_hash = serialize::canonical_hash(&schedule);
+        StoreRecord {
+            source_model: source_model.into(),
+            class_sig: class_sig.into(),
+            source_input_shape,
+            source_cost_s,
+            schedule,
+            sched_hash,
+        }
+    }
+
+    /// The memoized [`serialize::canonical_hash`] of this record's
+    /// schedule — what sweep planners fold into cache content keys
+    /// without re-serializing the schedule per plan.
+    pub fn schedule_hash(&self) -> u64 {
+        self.sched_hash
+    }
+
+    /// Replace the schedule, refreshing the memoized hash.
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        self.sched_hash = serialize::canonical_hash(&schedule);
+        self.schedule = schedule;
+    }
+
     /// Short label like "E3 (ResNet50)" used in Fig 4.
     pub fn label(&self, letter: &str, ordinal: usize) -> String {
         format!("{letter}{ordinal} ({})", self.source_model)
@@ -115,25 +158,44 @@ impl ScheduleStore {
     pub fn add_tuning(&mut self, graph: &ModelGraph, result: &TuningResult) {
         for (&kidx, best) in &result.best {
             let k = &graph.kernels[kidx];
-            self.records.push(StoreRecord {
-                source_model: graph.name.clone(),
-                class_sig: k.class_signature(),
-                source_input_shape: k.input_shape.clone(),
-                source_cost_s: best.cost_s,
-                schedule: best.schedule.clone(),
-            });
+            self.records.push(StoreRecord::new(
+                graph.name.clone(),
+                k.class_signature(),
+                k.input_shape.clone(),
+                best.cost_s,
+                best.schedule.clone(),
+            ));
         }
         // Deterministic order regardless of HashMap iteration. The
         // canonical schedule serialization breaks exact (model, class,
         // shape, cost) ties so the order is total — a warm-started zoo
         // rebuilding this store from persisted tunings must reproduce
-        // it byte-for-byte in any process.
+        // it byte-for-byte in any process. The memoized canonical hash
+        // short-circuits the overwhelmingly common tie (identical
+        // schedules, e.g. duplicated pool records) to Equal without
+        // serializing; distinct schedules still compare by their
+        // serialization, so the order is byte-for-byte the one the
+        // golden JSONL fixture pins.
         self.records.sort_by(|a, b| {
             (&a.source_model, &a.class_sig, &a.source_input_shape)
                 .cmp(&(&b.source_model, &b.class_sig, &b.source_input_shape))
                 .then_with(|| a.source_cost_s.total_cmp(&b.source_cost_s))
                 .then_with(|| {
-                    serialize::to_string(&a.schedule).cmp(&serialize::to_string(&b.schedule))
+                    if a.sched_hash == b.sched_hash {
+                        // Hash equality stands in for serialization
+                        // equality — the same trust the measurement
+                        // cache already places in the canonical hash
+                        // (a collision there serves a wrong runtime).
+                        // Debug builds keep the totality claim honest.
+                        debug_assert_eq!(
+                            serialize::to_string(&a.schedule),
+                            serialize::to_string(&b.schedule),
+                            "canonical-hash collision between distinct schedules"
+                        );
+                        std::cmp::Ordering::Equal
+                    } else {
+                        serialize::to_string(&a.schedule).cmp(&serialize::to_string(&b.schedule))
+                    }
                 })
         });
     }
@@ -207,19 +269,18 @@ impl ScheduleStore {
             }
             let j = json::parse(line)
                 .map_err(|e| anyhow::anyhow!("{context}:{}: {e}", lineno + 1))?;
-            records.push(StoreRecord {
-                source_model: j.req("model")?.as_str().unwrap_or_default().to_string(),
-                class_sig: j.req("class")?.as_str().unwrap_or_default().to_string(),
-                source_input_shape: j
-                    .req("input_shape")?
+            records.push(StoreRecord::new(
+                j.req("model")?.as_str().unwrap_or_default().to_string(),
+                j.req("class")?.as_str().unwrap_or_default().to_string(),
+                j.req("input_shape")?
                     .as_arr()
                     .unwrap_or(&[])
                     .iter()
                     .filter_map(|v| v.as_f64().map(|x| x as u64))
                     .collect(),
-                source_cost_s: j.req("cost_s")?.as_f64().unwrap_or(0.0),
-                schedule: serialize::from_json(j.req("schedule")?)?,
-            });
+                j.req("cost_s")?.as_f64().unwrap_or(0.0),
+                serialize::from_json(j.req("schedule")?)?,
+            ));
         }
         Ok(ScheduleStore { records })
     }
@@ -304,6 +365,28 @@ mod tests {
         let before = store_record_clones();
         let _dup = store.records[0].clone();
         assert!(store_record_clones() >= before + 1, "counter must count real clones");
+    }
+
+    #[test]
+    fn schedule_hash_is_memoized_and_refreshed() {
+        let (_, store) = small_store();
+        for r in &store.records {
+            assert_eq!(
+                r.schedule_hash(),
+                serialize::canonical_hash(&r.schedule),
+                "memoized hash must equal a fresh canonical hash"
+            );
+        }
+        let mut r = store.records[0].clone();
+        let mut s = r.schedule.clone();
+        s.unroll_max = s.unroll_max.wrapping_add(8);
+        r.set_schedule(s);
+        assert_eq!(
+            r.schedule_hash(),
+            serialize::canonical_hash(&r.schedule),
+            "set_schedule must refresh the memo"
+        );
+        assert_ne!(r.schedule_hash(), store.records[0].schedule_hash());
     }
 
     #[test]

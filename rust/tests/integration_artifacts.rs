@@ -16,7 +16,7 @@ fn tmp_dir(tag: &str) -> PathBuf {
 }
 
 fn config() -> ExperimentConfig {
-    ExperimentConfig { trials: 100, seed: 21, device: DeviceProfile::xeon_e5_2620() }
+    ExperimentConfig { trials: 100, seed: 21, device: DeviceProfile::xeon_e5_2620(), jobs: 0 }
 }
 
 /// The report surface used for the bit-identity comparison: tables and
@@ -118,7 +118,12 @@ fn artifact_keys_isolate_configurations() {
     // configurations because it is keyed out, not versioned out.
     let dir = tmp_dir("isolation");
     let mut artifacts = ArtifactStore::open(&dir).unwrap();
-    let base = ExperimentConfig { trials: 60, seed: 3, device: DeviceProfile::xeon_e5_2620() };
+    let base = ExperimentConfig {
+        trials: 60,
+        seed: 3,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+    };
     let zoo = Zoo::build_incremental(base.clone(), Some(&mut artifacts), |_| {});
     assert_eq!(zoo.build_stats.models_tuned, 11);
     drop(zoo);

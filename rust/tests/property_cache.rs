@@ -113,13 +113,13 @@ fn random_dense_store(rng: &mut Rng, n: usize) -> ScheduleStore {
     let mut store = ScheduleStore::new();
     for i in 0..n {
         let k = &sources[i % sources.len()];
-        store.records.push(StoreRecord {
-            source_model: format!("Src{}", i % 2),
-            class_sig: k.class_signature(),
-            source_input_shape: k.input_shape.clone(),
-            source_cost_s: 1e-3,
-            schedule: random_schedule(k, rng),
-        });
+        store.records.push(StoreRecord::new(
+            format!("Src{}", i % 2),
+            k.class_signature(),
+            k.input_shape.clone(),
+            1e-3,
+            random_schedule(k, rng),
+        ));
     }
     store
 }

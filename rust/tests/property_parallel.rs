@@ -1,0 +1,238 @@
+//! Parallel-determinism property suite (the ISSUE-4 invariant): the
+//! `--jobs` knob is wall-clock only. `tune_model`, zoo builds, and
+//! `ScheduleService::open_session` must be **bit-identical** across
+//! `jobs ∈ {1, 2, 8}` — ledgers (charged f64 totals included), stores,
+//! schedules, history, and epoch-stamped streaming replies.
+//!
+//! The global knob (`set_global_jobs`) is process-wide and tests run
+//! concurrently, so a racing test may change the thread count under
+//! us — which is exactly the point: these assertions hold at *any*
+//! setting, so the race is benign by the invariant under test.
+
+use std::path::PathBuf;
+use transfer_tuning::artifact::ArtifactStore;
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::coordinator::set_global_jobs;
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph, OpKind};
+use transfer_tuning::report::{ExperimentConfig, Zoo, ZooProducer};
+use transfer_tuning::service::rpc::{handle_request, RpcDefaults};
+use transfer_tuning::service::{ScheduleService, SessionRequest};
+use transfer_tuning::transfer::ScheduleStore;
+
+const JOBS: [usize; 3] = [1, 2, 8];
+
+fn dense_model(name: &str, dim: u64) -> ModelGraph {
+    let mut g = ModelGraph::new(name);
+    g.push(KernelBuilder::dense(dim, dim, dim, &[]));
+    g
+}
+
+fn mixed_model() -> ModelGraph {
+    let mut g = ModelGraph::new("MixedTarget");
+    g.push(KernelBuilder::dense(512, 512, 512, &[]));
+    g.push(KernelBuilder::conv2d(1, 32, 28, 28, 32, 3, 3, 1, 1, &[OpKind::BiasAdd, OpKind::Relu]));
+    g
+}
+
+fn opts(jobs: usize) -> TuneOptions {
+    TuneOptions {
+        trials: 96,
+        batch_size: 16,
+        population: 32,
+        generations: 2,
+        seed: 23,
+        jobs,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_tune_model_bit_identical_across_jobs() {
+    let prof = DeviceProfile::xeon_e5_2620();
+    let g = mixed_model();
+    let reference = tune_model(&g, &prof, &opts(1));
+    for jobs in JOBS {
+        let t = tune_model(&g, &prof, &opts(jobs));
+        assert_eq!(t.trials_used, reference.trials_used, "jobs={jobs}");
+        assert_eq!(
+            t.search_time_s.to_bits(),
+            reference.search_time_s.to_bits(),
+            "jobs={jobs}: charged ledger drifted"
+        );
+        assert_eq!(t.history.len(), reference.history.len(), "jobs={jobs}");
+        for (a, b) in t.history.iter().zip(&reference.history) {
+            assert_eq!(a.trials, b.trials, "jobs={jobs}");
+            assert_eq!(a.search_time_s.to_bits(), b.search_time_s.to_bits(), "jobs={jobs}");
+            assert_eq!(a.model_time_s.to_bits(), b.model_time_s.to_bits(), "jobs={jobs}");
+        }
+        assert_eq!(t.best.len(), reference.best.len(), "jobs={jobs}");
+        for (k, best) in &reference.best {
+            let other = t.best.get(k).expect("same kernels tuned");
+            assert_eq!(other.schedule, best.schedule, "jobs={jobs}: kernel {k} schedule");
+            assert_eq!(
+                other.cost_s.to_bits(),
+                best.cost_s.to_bits(),
+                "jobs={jobs}: kernel {k} cost"
+            );
+        }
+    }
+}
+
+fn zoo_models() -> Vec<ModelGraph> {
+    vec![
+        dense_model("ParSrcA", 512),
+        dense_model("ParSrcB", 768),
+        dense_model("ParSrcC", 1024),
+    ]
+}
+
+fn build_zoo(jobs: usize, artifacts: Option<&mut ArtifactStore>) -> Zoo {
+    Zoo::build_for_models(
+        zoo_models(),
+        ExperimentConfig {
+            trials: 96,
+            seed: 29,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs,
+        },
+        artifacts,
+        |_| {},
+    )
+}
+
+#[test]
+fn prop_zoo_build_bit_identical_across_jobs() {
+    let reference = build_zoo(1, None);
+    let ref_jsonl = reference.store.to_jsonl();
+    for jobs in JOBS {
+        let zoo = build_zoo(jobs, None);
+        assert_eq!(zoo.build_stats, reference.build_stats, "jobs={jobs}: ZooBuildStats");
+        assert_eq!(
+            zoo.build_stats.tuning_seconds_charged.to_bits(),
+            reference.build_stats.tuning_seconds_charged.to_bits(),
+            "jobs={jobs}: charged f64 total"
+        );
+        assert_eq!(zoo.store.to_jsonl(), ref_jsonl, "jobs={jobs}: store bytes");
+        for (a, b) in zoo.tunings.iter().zip(&reference.tunings) {
+            assert_eq!(a.model, b.model, "jobs={jobs}: landing order");
+            assert_eq!(a.search_time_s.to_bits(), b.search_time_s.to_bits(), "jobs={jobs}");
+        }
+        for (a, b) in zoo.untuned_s.iter().zip(&reference.untuned_s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}: untuned baselines");
+        }
+    }
+}
+
+#[test]
+fn prop_warm_rebuild_across_jobs_is_free_and_identical() {
+    let dir: PathBuf = std::env::temp_dir().join("tt_property_parallel_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Cold at jobs=8, warm at jobs=1 (and vice versa would hold too):
+    // the artifact key has no jobs component, so a parallel build's
+    // artifacts warm-start a serial one bit-for-bit.
+    let mut artifacts = ArtifactStore::open(&dir).expect("open artifact dir");
+    let cold = build_zoo(8, Some(&mut artifacts));
+    assert_eq!(cold.build_stats.models_tuned, 3);
+    drop(cold);
+    drop(artifacts);
+
+    let mut artifacts = ArtifactStore::open(&dir).expect("reopen artifact dir");
+    let warm = build_zoo(1, Some(&mut artifacts));
+    assert_eq!(warm.build_stats.models_tuned, 0, "warm build must not tune");
+    assert_eq!(warm.build_stats.trials_run, 0);
+    assert_eq!(warm.build_stats.tuning_seconds_charged, 0.0);
+    let cold_again = build_zoo(2, None);
+    assert_eq!(warm.store.to_jsonl(), cold_again.store.to_jsonl(), "warm == cold, any jobs");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn session_service() -> (ScheduleService, SessionRequest) {
+    let prof = DeviceProfile::xeon_e5_2620();
+    let mut store = ScheduleStore::new();
+    let mut models = Vec::new();
+    for (name, dim) in [("ParSrcA", 512u64), ("ParSrcB", 1024u64)] {
+        let g = dense_model(name, dim);
+        let res = tune_model(&g, &prof, &opts(0));
+        store.add_tuning(&g, &res);
+        models.push(g);
+    }
+    models.push(dense_model("ParTarget", 768));
+    let service = ScheduleService::new(store, models, 4);
+    let req = SessionRequest {
+        model: "ParTarget".into(),
+        device: prof,
+        budget_s: None,
+        seed: 23,
+    };
+    (service, req)
+}
+
+#[test]
+fn prop_open_session_bit_identical_across_global_jobs() {
+    // Fresh service per jobs value: the *cold* charged ledger is part
+    // of the comparison (who pays, and exactly how much, must not
+    // depend on thread count), then the warm replay must charge 0.
+    let mut reference: Option<(u64, u64, u64)> = None;
+    for jobs in JOBS {
+        set_global_jobs(jobs);
+        let (service, req) = session_service();
+        let cold = service.open_session(&req).expect("cold session");
+        assert!(cold.charged_search_time_s > 0.0, "jobs={jobs}: cold session pays");
+        let warm = service.open_session(&req).expect("warm session");
+        assert_eq!(warm.charged_search_time_s, 0.0, "jobs={jobs}: warm session is free");
+        assert_eq!(
+            warm.tuned_model_s.to_bits(),
+            cold.tuned_model_s.to_bits(),
+            "jobs={jobs}: warm reply drifted"
+        );
+        let bits = (
+            cold.tuned_model_s.to_bits(),
+            cold.standalone_search_time_s.to_bits(),
+            cold.charged_search_time_s.to_bits(),
+        );
+        match reference {
+            None => reference = Some(bits),
+            Some(expected) => assert_eq!(
+                bits, expected,
+                "jobs={jobs}: (tuned, standalone, charged) bits drifted"
+            ),
+        }
+    }
+    set_global_jobs(0);
+}
+
+#[test]
+fn prop_streaming_replies_bit_identical_across_jobs() {
+    // A streaming build at any jobs setting answers with the same
+    // epoch-stamped, byte-identical wire replies.
+    let prof = DeviceProfile::xeon_e5_2620();
+    let defaults = RpcDefaults { device: prof.clone(), seed: 23 };
+    let line = "{\"model\":\"ParSrcC\"}";
+    let mut reference: Option<String> = None;
+    for jobs in JOBS {
+        let service = ScheduleService::empty(2);
+        let mut producer = ZooProducer::for_models(
+            zoo_models(),
+            ExperimentConfig { trials: 96, seed: 29, device: prof.clone(), jobs },
+            None,
+        );
+        let mut epochs = Vec::new();
+        while let Some(epoch) = producer.publish_next(&service, &mut |_| {}) {
+            epochs.push(epoch);
+        }
+        assert_eq!(epochs, vec![1, 2, 3], "jobs={jobs}: one epoch per landed model");
+        // Serve twice so the warm (cache-independent) payload compares.
+        handle_request(&service, &defaults, line);
+        let reply = handle_request(&service, &defaults, line).to_compact();
+        match &reference {
+            None => reference = Some(reply),
+            Some(expected) => assert_eq!(
+                &reply, expected,
+                "jobs={jobs}: epoch-stamped streaming reply drifted"
+            ),
+        }
+    }
+}

@@ -31,13 +31,13 @@ fn random_store(rng: &mut Rng, n: usize) -> ScheduleStore {
     let mut store = ScheduleStore::new();
     for i in 0..n {
         let k = rng.choose(&pool);
-        store.records.push(StoreRecord {
-            source_model: format!("Model{}", i % 4),
-            class_sig: k.class_signature(),
-            source_input_shape: k.input_shape.clone(),
-            source_cost_s: rng.f64() * 1e-2,
-            schedule: random_schedule(k, rng),
-        });
+        store.records.push(StoreRecord::new(
+            format!("Model{}", i % 4),
+            k.class_signature(),
+            k.input_shape.clone(),
+            rng.f64() * 1e-2,
+            random_schedule(k, rng),
+        ));
     }
     store
 }
@@ -94,12 +94,12 @@ fn golden_dir() -> PathBuf {
 /// tilings, integral and fractional costs.
 fn golden_store() -> ScheduleStore {
     let mut store = ScheduleStore::new();
-    store.records.push(StoreRecord {
-        source_model: "GoldenSrc".into(),
-        class_sig: "dense".into(),
-        source_input_shape: vec![512, 512],
-        source_cost_s: 0.001,
-        schedule: Schedule {
+    store.records.push(StoreRecord::new(
+        "GoldenSrc",
+        "dense",
+        vec![512, 512],
+        0.001,
+        Schedule {
             class_sig: "dense".into(),
             skeleton: vec![AxisKind::Spatial, AxisKind::Spatial, AxisKind::Reduction],
             spatial: vec![AxisTiling::of(&[4, 8]), AxisTiling::of(&[16])],
@@ -109,13 +109,13 @@ fn golden_store() -> ScheduleStore {
             unroll_max: 16,
             cache_write: false,
         },
-    });
-    store.records.push(StoreRecord {
-        source_model: "GoldenSrc".into(),
-        class_sig: "conv2d_bias_relu".into(),
-        source_input_shape: vec![1, 64, 56, 56],
-        source_cost_s: 0.25,
-        schedule: Schedule {
+    ));
+    store.records.push(StoreRecord::new(
+        "GoldenSrc",
+        "conv2d_bias_relu",
+        vec![1, 64, 56, 56],
+        0.25,
+        Schedule {
             class_sig: "conv2d_bias_relu".into(),
             skeleton: vec![
                 AxisKind::Spatial,
@@ -138,7 +138,7 @@ fn golden_store() -> ScheduleStore {
             unroll_max: 0,
             cache_write: true,
         },
-    });
+    ));
     store
 }
 

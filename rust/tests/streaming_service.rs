@@ -32,7 +32,7 @@ fn zoo_models() -> Vec<ModelGraph> {
 }
 
 fn config() -> ExperimentConfig {
-    ExperimentConfig { trials: TRIALS, seed: SEED, device: DeviceProfile::xeon_e5_2620() }
+    ExperimentConfig { trials: TRIALS, seed: SEED, device: DeviceProfile::xeon_e5_2620(), jobs: 0 }
 }
 
 fn request() -> SessionRequest {
