@@ -15,6 +15,14 @@
 # without both (a) a diff to the ARTIFACT_FORMAT_VERSION constant and
 # (b) a diff under rust/tests/golden/.
 #
+# It also guards the WIRE protocol (PR 3 invariant): rust/src/service/
+# rpc.rs holds the frame format, the request/response/admin schemas,
+# and WIRE_PROTOCOL_VERSION. Any change to that file must, in the same
+# range, update README.md (the documented schemas) AND both protocol
+# test files (rust/tests/rpc_codec.rs, rust/tests/integration_rpc.rs)
+# — or carry a `Wire-Drift: none` trailer for edits that demonstrably
+# leave the bytes on the wire unchanged.
+#
 # Escape hatch: edits that demonstrably do not change persisted bytes
 # (comments, non-format helpers living in the same file) may carry a
 #     Format-Drift: none
@@ -36,6 +44,34 @@ if [ -z "$BASE" ]; then
 fi
 
 CHANGED="$(git diff --name-only "$BASE" HEAD)"
+
+# ---- wire-protocol drift ---------------------------------------------------
+
+WIRE_FILE="rust/src/service/rpc.rs"
+if printf '%s\n' "$CHANGED" | grep -qx "$WIRE_FILE"; then
+  echo "format-drift: wire-protocol file touched: $WIRE_FILE"
+  if git log --format=%B "$BASE..HEAD" | grep -qiE '^Wire-Drift:[[:space:]]*none[[:space:]]*$'; then
+    echo "format-drift: OK — 'Wire-Drift: none' trailer present (no on-wire bytes change)"
+  else
+    missing=""
+    for req in README.md rust/tests/rpc_codec.rs rust/tests/integration_rpc.rs; do
+      printf '%s\n' "$CHANGED" | grep -qx "$req" || missing="$missing $req"
+    done
+    if [ -n "$missing" ]; then
+      echo "format-drift: FAIL"
+      echo "  $WIRE_FILE changed without updating:$missing"
+      echo "  Protocol changes must update README §Wire protocol and BOTH"
+      echo "  RPC test files in the same change (and bump"
+      echo "  WIRE_PROTOCOL_VERSION when the schema moves), or — only if"
+      echo "  no byte on the wire changes — add a 'Wire-Drift: none'"
+      echo "  trailer to the commit message."
+      exit 1
+    fi
+    echo "format-drift: OK — wire change updates README + both RPC test files"
+  fi
+fi
+
+# ---- persisted-format drift ------------------------------------------------
 
 FORMAT_FILES="
 rust/src/sched/serialize.rs

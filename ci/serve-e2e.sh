@@ -1,0 +1,128 @@
+#!/usr/bin/env bash
+# serve-e2e (CI job `serve-e2e`): drive a REAL `repro serve --listen`
+# process over loopback with the thin client, end to end:
+#
+#   1. cold run — stream the zoo in, open a session (`repro call`),
+#      inspect it (`repro admin stats`), refresh one source
+#      (`repro admin republish` must land at epoch+1 and change only
+#      the epoch stamp of an identical session), then `shutdown`;
+#   2. warm restart — same `--cache-dir`: the rebuilt server must
+#      report 0 models tuned / 0 trials / 0.0 tuning seconds charged,
+#      and the replayed session must charge 0.0 device-seconds (served
+#      entirely from the persisted session-warmed measurement cache).
+#
+# Everything here goes through the public operator surface — no test
+# harness, no library calls — so this is the proof the service is
+# operable, not just correct.
+#
+# Usage: ci/serve-e2e.sh  (expects target/release/repro to exist;
+# TT_TRIALS tunes the budget, default 16)
+set -euo pipefail
+
+BIN="${BIN:-target/release/repro}"
+TRIALS="${TT_TRIALS:-16}"
+SEED=5
+WORK="$(mktemp -d)"
+CACHE="$WORK/cache"
+LOG="$WORK/server.log"
+SERVER_PID=""
+ADDR=""
+
+cleanup() {
+  if [ -n "$SERVER_PID" ] && kill -0 "$SERVER_PID" 2>/dev/null; then
+    kill -9 "$SERVER_PID" 2>/dev/null || true
+  fi
+}
+trap cleanup EXIT
+
+fail() {
+  echo "serve-e2e: FAIL — $1"
+  echo "---- server log ----"
+  cat "$LOG" || true
+  exit 1
+}
+
+# Start the server, wait for the listen line and the completed zoo.
+start_server() {
+  : >"$LOG"
+  "$BIN" serve --listen 127.0.0.1:0 --trials "$TRIALS" --seed "$SEED" \
+    --shards 2 --cache-dir "$CACHE" 2>"$LOG" &
+  SERVER_PID=$!
+  ADDR=""
+  for _ in $(seq 1 150); do
+    ADDR="$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$LOG" | head -n1)"
+    [ -n "$ADDR" ] && break
+    kill -0 "$SERVER_PID" 2>/dev/null || fail "server died before binding"
+    sleep 0.2
+  done
+  [ -n "$ADDR" ] || fail "no listen line within 30s"
+  for _ in $(seq 1 1500); do
+    grep -q "zoo complete" "$LOG" && return 0
+    kill -0 "$SERVER_PID" 2>/dev/null || fail "server died mid-build"
+    sleep 0.2
+  done
+  fail "zoo never completed"
+}
+
+# expect_in "needle" "haystack" "what"
+expect_in() {
+  case "$2" in
+    *"$1"*) ;;
+    *) fail "$3 (missing \`$1\` in: $2)" ;;
+  esac
+}
+
+SESSION='{"model":"ResNet18","budget_s":0}'
+
+echo "== cold run (trials=$TRIALS) =="
+start_server
+echo "server at $ADDR"
+
+COLD_REPLY="$("$BIN" call "$ADDR" "$SESSION")" || fail "session call errored"
+expect_in '"ok":true' "$COLD_REPLY" "cold session must succeed"
+expect_in '"epoch":11' "$COLD_REPLY" "full 11-model zoo must be live"
+# Replay the session: the warm payload (charged 0) is the baseline the
+# post-republish reply is compared against byte-for-byte.
+BASE_REPLY="$("$BIN" call "$ADDR" "$SESSION")" || fail "warm session errored"
+expect_in '"charged_search_time_s":0,' "$BASE_REPLY" "second identical session rides the cache"
+
+STATS="$("$BIN" admin "$ADDR" stats)" || fail "stats errored"
+expect_in '"complete":true' "$STATS" "stats must report a complete zoo"
+expect_in '"models_tuned":11' "$STATS" "cold run tunes all 11 models"
+
+REPUB="$("$BIN" admin "$ADDR" republish ResNet50)" || fail "republish errored"
+expect_in '"ok":true' "$REPUB" "republish must succeed"
+expect_in '"epoch":12' "$REPUB" "republish must land at epoch+1"
+expect_in '"origin":"artifact"' "$REPUB" "fresh artifacts re-load, not re-tune"
+
+POST_REPLY="$("$BIN" call "$ADDR" "$SESSION")" || fail "post-republish session errored"
+EXPECT_POST="$(printf '%s' "$BASE_REPLY" | sed 's/"epoch":11/"epoch":12/')"
+[ "$POST_REPLY" = "$EXPECT_POST" ] \
+  || fail "republish changed more than the epoch stamp of an identical session"
+
+"$BIN" admin "$ADDR" shutdown | grep -q '"ok":true' || fail "shutdown RPC refused"
+wait "$SERVER_PID" || fail "server exited non-zero after shutdown RPC"
+SERVER_PID=""
+grep -q "persisted zoo store + session-warmed measurement cache" "$LOG" \
+  || fail "shutdown did not persist"
+mv "$LOG" "$WORK/cold.log"
+
+echo "== warm restart (same --cache-dir) =="
+start_server
+echo "server at $ADDR"
+
+STATS="$("$BIN" admin "$ADDR" stats)" || fail "warm stats errored"
+expect_in '"models_tuned":0' "$STATS" "warm restart must re-tune nothing"
+expect_in '"trials_run":0' "$STATS" "warm restart must run 0 trials"
+expect_in '"tuning_seconds_charged":0}' "$STATS" "warm restart must charge 0.0s tuning"
+expect_in '"models_from_artifacts":11' "$STATS" "all 11 models from artifacts"
+
+WARM_REPLY="$("$BIN" call "$ADDR" "$SESSION")" || fail "warm session errored"
+expect_in '"charged_search_time_s":0,' "$WARM_REPLY" \
+  "warm session must charge 0.0 device-seconds (persisted cache)"
+
+"$BIN" admin "$ADDR" shutdown | grep -q '"ok":true' || fail "warm shutdown refused"
+wait "$SERVER_PID" || fail "warm server exited non-zero"
+SERVER_PID=""
+
+echo "serve-e2e: OK"

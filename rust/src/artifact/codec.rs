@@ -18,6 +18,47 @@ use std::collections::HashMap;
 /// store-level manifest version; bump on any schema change here).
 pub const TUNING_CODEC_VERSION: u64 = 1;
 
+/// One row of the artifact manifest (format v2): where an artifact
+/// lives, how to verify it, and the lifecycle metadata the GC runs on.
+/// `bytes` is the payload size (so a size budget needs no stat calls);
+/// `last_used` is a store-wide monotonic tick bumped on every verified
+/// load and every write — LRU order, durable across processes, and
+/// deterministic (derived from access order, never from wall time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+    pub checksum: u64,
+    pub bytes: u64,
+    pub last_used: u64,
+}
+
+/// Encode one manifest row. Lives beside the other persisted-schema
+/// codecs so the `format-drift` gate sees every byte-format change in
+/// one place; the golden fixture `rust/tests/golden/
+/// artifact_manifest.json` pins the resulting manifest bytes.
+pub fn manifest_entry_to_json(e: &ManifestEntry) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(&e.kind)),
+        ("file", Json::str(&e.file)),
+        ("checksum", Json::str(format!("{:016x}", e.checksum))),
+        ("bytes", Json::num(e.bytes as f64)),
+        ("last_used", Json::num(e.last_used as f64)),
+    ])
+}
+
+/// Decode one manifest row; `None` skips a malformed row (the store
+/// keeps the rest — artifacts are a cache, not a database).
+pub fn manifest_entry_from_json(j: &Json) -> Option<ManifestEntry> {
+    Some(ManifestEntry {
+        kind: j.get("kind")?.as_str()?.to_string(),
+        file: j.get("file")?.as_str()?.to_string(),
+        checksum: u64::from_str_radix(j.get("checksum")?.as_str()?, 16).ok()?,
+        bytes: j.get("bytes")?.as_f64().filter(|b| *b >= 0.0)? as u64,
+        last_used: j.get("last_used")?.as_f64().filter(|t| *t >= 0.0)? as u64,
+    })
+}
+
 pub fn tuning_to_json(res: &TuningResult) -> Json {
     // HashMap iteration order is process-random; emit kernels sorted so
     // the artifact bytes are canonical.
@@ -158,6 +199,25 @@ mod tests {
         let (_, a) = small_tuning();
         let (_, b) = small_tuning();
         assert_eq!(tuning_to_json(&a).to_compact(), tuning_to_json(&b).to_compact());
+    }
+
+    #[test]
+    fn manifest_entry_round_trips_and_skips_malformed() {
+        let e = ManifestEntry {
+            kind: "tuning".into(),
+            file: "tuning_00000000deadbeef.json".into(),
+            checksum: 0xdead_beef,
+            bytes: 42,
+            last_used: 7,
+        };
+        assert_eq!(manifest_entry_from_json(&manifest_entry_to_json(&e)), Some(e));
+        assert_eq!(manifest_entry_from_json(&json::parse("{}").unwrap()), None);
+        let bad_checksum =
+            r#"{"bytes":1,"checksum":"zz","file":"f","kind":"x","last_used":1}"#;
+        assert!(manifest_entry_from_json(&json::parse(bad_checksum).unwrap()).is_none());
+        let negative_tick =
+            r#"{"bytes":1,"checksum":"00000000000000aa","file":"f","kind":"x","last_used":-1}"#;
+        assert!(manifest_entry_from_json(&json::parse(negative_tick).unwrap()).is_none());
     }
 
     #[test]

@@ -22,7 +22,8 @@
 //!
 //! ```text
 //! <cache-dir>/
-//!   manifest.json            # version + {key -> kind, file, checksum}
+//!   manifest.json            # version + {key -> kind, file, checksum,
+//!                            #            bytes, last_used}
 //!   tuning_<key>.json        # one TuningResult (codec.rs)
 //!   store_<key>.jsonl        # merged ScheduleStore (canonical JSONL)
 //!   mcache_<key>.json        # MeasureCache snapshot (cache.rs format)
@@ -35,10 +36,30 @@
 //! [`ARTIFACT_FORMAT_VERSION`] is discarded wholesale (stale-version
 //! invalidation): version bumps accompany any change to the canonical
 //! serialization formats the checksums and keys are built from.
+//!
+//! ## Lifecycle
+//!
+//! Long-lived cache dirs grow without bound, so the store carries the
+//! metadata to cap them: every entry records its payload size and a
+//! monotonic `last_used` tick (bumped on verified loads and writes,
+//! durable across processes — see [`codec::ManifestEntry`]).
+//! [`ArtifactStore::gc`] evicts least-recently-used entries until the
+//! directory fits a byte budget, but **never** evicts an entry this
+//! process touched — the artifacts a live zoo or service was built
+//! from stay resident, so a warm restart after GC is still warm.
+//! [`ArtifactStore::merge_from`] unions another directory's manifest
+//! into this one: keys are content-addressed over every configuration
+//! input and artifacts are deterministic, so equal keys hold equal
+//! bytes (measurement caches, which legitimately differ in *coverage*,
+//! are unioned entry-wise) — merging dirs from different machines is
+//! safe by construction.
 
 pub mod codec;
 
-pub use codec::{tuning_from_json, tuning_to_json, TUNING_CODEC_VERSION};
+pub use codec::{
+    manifest_entry_from_json, manifest_entry_to_json, tuning_from_json, tuning_to_json,
+    ManifestEntry, TUNING_CODEC_VERSION,
+};
 
 use crate::autosched::TuningResult;
 use crate::coordinator::MeasureCache;
@@ -46,13 +67,14 @@ use crate::device::DeviceProfile;
 use crate::ir::workload::fnv1a;
 use crate::transfer::ScheduleStore;
 use crate::util::json::{self, Json};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 /// Version of the on-disk artifact layout. Bump whenever the manifest
 /// schema, file naming, key derivation, or any persisted canonical
 /// format changes; old directories then read as empty and are rebuilt.
-pub const ARTIFACT_FORMAT_VERSION: u64 = 1;
+/// v2: manifest entries carry `bytes` + `last_used` (GC metadata).
+pub const ARTIFACT_FORMAT_VERSION: u64 = 2;
 
 /// FNV-1a over length-prefixed parts: unambiguous concatenation, same
 /// canonical-bytes discipline as the measurement-cache keys.
@@ -104,11 +126,37 @@ pub struct ArtifactStats {
     pub writes: u64,
 }
 
-#[derive(Clone, Debug)]
-struct ManifestEntry {
-    kind: String,
-    file: String,
-    checksum: u64,
+/// What one [`ArtifactStore::gc`] pass did.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GcReport {
+    /// Manifest entries evicted (files removed).
+    pub evicted: usize,
+    pub evicted_bytes: u64,
+    /// Entries still resident after the pass.
+    pub kept: usize,
+    pub kept_bytes: u64,
+    /// Entries that were over budget but untouchable (live-pinned).
+    pub pinned: usize,
+    /// Unreferenced `tuning_*`/`store_*`/`mcache_*` files swept.
+    pub orphans_removed: usize,
+}
+
+/// What one [`ArtifactStore::merge_from`] pass did.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MergeReport {
+    /// Keys absent here and copied over verbatim.
+    pub added: usize,
+    /// Measurement-cache keys present on both sides whose entry sets
+    /// were unioned.
+    pub caches_unioned: usize,
+    /// Keys present on both sides with identical bytes (no-ops).
+    pub identical: usize,
+    /// Keys present on both sides with different bytes outside the
+    /// mcache kind — kept ours (deterministic artifacts should never
+    /// collide; a conflict means a corrupt source).
+    pub conflicts: usize,
+    /// Source entries whose payload failed its checksum (skipped).
+    pub rejected: usize,
 }
 
 /// The on-disk artifact store rooted at a `--cache-dir`.
@@ -116,6 +164,15 @@ struct ManifestEntry {
 pub struct ArtifactStore {
     root: PathBuf,
     entries: BTreeMap<u64, ManifestEntry>,
+    /// Next `last_used` tick; resumes past the largest persisted tick
+    /// so LRU order is durable across processes.
+    next_tick: u64,
+    /// Keys this process loaded or wrote — the live pin set
+    /// [`ArtifactStore::gc`] must never evict.
+    touched: BTreeSet<u64>,
+    /// Ticks changed since the manifest was last written (loads bump
+    /// ticks without rewriting; [`ArtifactStore::flush`] settles them).
+    dirty: bool,
     pub stats: ArtifactStats,
 }
 
@@ -127,7 +184,14 @@ impl ArtifactStore {
     pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<ArtifactStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        let mut store = ArtifactStore { root, entries: BTreeMap::new(), stats: ArtifactStats::default() };
+        let mut store = ArtifactStore {
+            root,
+            entries: BTreeMap::new(),
+            next_tick: 1,
+            touched: BTreeSet::new(),
+            dirty: false,
+            stats: ArtifactStats::default(),
+        };
         let manifest = store.manifest_path();
         if let Ok(text) = std::fs::read_to_string(&manifest) {
             if let Ok(j) = json::parse(text.trim_end()) {
@@ -135,24 +199,12 @@ impl ArtifactStore {
                 if version == ARTIFACT_FORMAT_VERSION {
                     if let Some(Json::Obj(map)) = j.get("entries") {
                         for (hex_key, e) in map {
-                            let (Ok(key), Some(kind), Some(file), Some(checksum)) = (
-                                u64::from_str_radix(hex_key, 16),
-                                e.get("kind").and_then(|v| v.as_str()),
-                                e.get("file").and_then(|v| v.as_str()),
-                                e.get("checksum")
-                                    .and_then(|v| v.as_str())
-                                    .and_then(|s| u64::from_str_radix(s, 16).ok()),
-                            ) else {
+                            let (Ok(key), Some(entry)) =
+                                (u64::from_str_radix(hex_key, 16), manifest_entry_from_json(e))
+                            else {
                                 continue; // skip malformed rows, keep the rest
                             };
-                            store.entries.insert(
-                                key,
-                                ManifestEntry {
-                                    kind: kind.to_string(),
-                                    file: file.to_string(),
-                                    checksum,
-                                },
-                            );
+                            store.entries.insert(key, entry);
                         }
                     }
                 }
@@ -161,6 +213,8 @@ impl ArtifactStore {
                 // current version and overwrites artifacts in place.
             }
         }
+        store.next_tick =
+            store.entries.values().map(|e| e.last_used).max().unwrap_or(0) + 1;
         Ok(store)
     }
 
@@ -176,24 +230,22 @@ impl ArtifactStore {
         self.entries.is_empty()
     }
 
+    /// Total payload bytes the manifest accounts for (what
+    /// [`ArtifactStore::gc`] budgets against; the manifest itself and
+    /// orphaned files are not counted).
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
     fn manifest_path(&self) -> PathBuf {
         self.root.join("manifest.json")
     }
 
-    fn write_manifest(&self) -> anyhow::Result<()> {
+    fn write_manifest(&mut self) -> anyhow::Result<()> {
         let entries: BTreeMap<String, Json> = self
             .entries
             .iter()
-            .map(|(k, e)| {
-                (
-                    format!("{k:016x}"),
-                    Json::obj(vec![
-                        ("kind", Json::str(&e.kind)),
-                        ("file", Json::str(&e.file)),
-                        ("checksum", Json::str(format!("{:016x}", e.checksum))),
-                    ]),
-                )
-            })
+            .map(|(k, e)| (format!("{k:016x}"), manifest_entry_to_json(e)))
             .collect();
         let j = Json::obj(vec![
             ("version", Json::num(ARTIFACT_FORMAT_VERSION as f64)),
@@ -202,12 +254,45 @@ impl ArtifactStore {
         let mut text = j.to_compact();
         text.push('\n');
         std::fs::write(self.manifest_path(), text)?;
+        self.dirty = false;
         Ok(())
+    }
+
+    /// Persist any pending `last_used` tick updates. Loads bump ticks
+    /// in memory only (a warm run should not rewrite the manifest per
+    /// artifact read); callers that care about durable LRU order call
+    /// this once at the end — the CLI does, after every persist phase.
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if self.dirty {
+            self.write_manifest()?;
+        }
+        Ok(())
+    }
+
+    /// Mark `key` used now: bump its LRU tick and pin it for this
+    /// process's lifetime.
+    fn touch(&mut self, key: u64) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_used = self.next_tick;
+            self.next_tick += 1;
+            self.dirty = true;
+        }
+        self.touched.insert(key);
+    }
+
+    /// Drop a rejected entry (corrupt payload / undecodable artifact)
+    /// so the next save repairs it in place.
+    fn forget(&mut self, key: u64) {
+        if self.entries.remove(&key).is_some() {
+            self.dirty = true;
+        }
     }
 
     /// Read one artifact's text, integrity-checked against the
     /// manifest. `None` = miss (absent, wrong kind, checksum mismatch,
-    /// or unreadable — the latter two also count as `rejected`).
+    /// or unreadable — the latter two also count as `rejected`). A
+    /// verified read refreshes the entry's LRU tick and pins it against
+    /// [`ArtifactStore::gc`] for this process's lifetime.
     fn read_checked(&mut self, key: u64, kind: &str) -> Option<String> {
         let (file, checksum) = match self.entries.get(&key) {
             Some(entry) if entry.kind == kind => (entry.file.clone(), entry.checksum),
@@ -220,11 +305,12 @@ impl ArtifactStore {
         match std::fs::read_to_string(&path) {
             Ok(text) if fnv1a(text.as_bytes()) == checksum => {
                 self.stats.hits += 1;
+                self.touch(key);
                 Some(text)
             }
             _ => {
                 // Corrupt or vanished: drop the entry so it re-saves.
-                self.entries.remove(&key);
+                self.forget(key);
                 self.stats.rejected += 1;
                 self.stats.misses += 1;
                 None
@@ -232,20 +318,39 @@ impl ArtifactStore {
         }
     }
 
+    /// Write one artifact's payload + in-memory manifest entry WITHOUT
+    /// rewriting the manifest (the caller batches the rewrite — see
+    /// [`ArtifactStore::merge_from`]). The entry is only marked dirty,
+    /// so a crash before the next manifest write leaves at worst an
+    /// orphaned file, never an unverifiable manifest row.
+    fn put_deferred(&mut self, key: u64, kind: &str, text: &str) -> anyhow::Result<()> {
+        let ext = if kind == "store" { "jsonl" } else { "json" };
+        let file = format!("{kind}_{key:016x}.{ext}");
+        std::fs::write(self.root.join(&file), text)?;
+        let last_used = self.next_tick;
+        self.next_tick += 1;
+        self.entries.insert(
+            key,
+            ManifestEntry {
+                kind: kind.to_string(),
+                file,
+                checksum: fnv1a(text.as_bytes()),
+                bytes: text.len() as u64,
+                last_used,
+            },
+        );
+        self.touched.insert(key);
+        self.dirty = true;
+        self.stats.writes += 1;
+        Ok(())
+    }
+
     /// Write one artifact + manifest entry. The payload is written
     /// before the manifest, so a torn write leaves at worst an orphaned
     /// file (never a manifest entry whose checksum cannot verify).
     fn put(&mut self, key: u64, kind: &str, text: &str) -> anyhow::Result<()> {
-        let ext = if kind == "store" { "jsonl" } else { "json" };
-        let file = format!("{kind}_{key:016x}.{ext}");
-        std::fs::write(self.root.join(&file), text)?;
-        self.entries.insert(
-            key,
-            ManifestEntry { kind: kind.to_string(), file, checksum: fnv1a(text.as_bytes()) },
-        );
-        self.write_manifest()?;
-        self.stats.writes += 1;
-        Ok(())
+        self.put_deferred(key, kind, text)?;
+        self.write_manifest()
     }
 
     // ---- typed artifacts -------------------------------------------------
@@ -257,7 +362,7 @@ impl ArtifactStore {
             Err(_) => {
                 // Decodes are part of integrity: an undecodable payload
                 // (e.g. older codec) is a rejection, not an error.
-                self.entries.remove(&key);
+                self.forget(key);
                 self.stats.rejected += 1;
                 self.stats.hits -= 1;
                 self.stats.misses += 1;
@@ -284,7 +389,7 @@ impl ArtifactStore {
         match ScheduleStore::from_jsonl(&text, "schedule-store artifact") {
             Ok(store) => Some(store),
             Err(_) => {
-                self.entries.remove(&key);
+                self.forget(key);
                 self.stats.rejected += 1;
                 self.stats.hits -= 1;
                 self.stats.misses += 1;
@@ -303,7 +408,7 @@ impl ArtifactStore {
         match json::parse(text.trim_end()).and_then(|j| MeasureCache::from_json(&j)) {
             Ok(cache) => Some(cache),
             Err(_) => {
-                self.entries.remove(&key);
+                self.forget(key);
                 self.stats.rejected += 1;
                 self.stats.hits -= 1;
                 self.stats.misses += 1;
@@ -316,6 +421,150 @@ impl ArtifactStore {
         let mut text = cache.to_json().to_compact();
         text.push('\n');
         self.put(Self::kind_scoped("mcache", key), "mcache", &text)
+    }
+
+    // ---- lifecycle -------------------------------------------------------
+
+    /// Shrink the directory to at most `budget_bytes` of artifact
+    /// payload: evict least-recently-used entries (manifest row + file)
+    /// first, then sweep files no manifest row references (orphans from
+    /// torn writes or evictions interrupted before the manifest
+    /// rewrite). Entries this process loaded or wrote are **pinned**
+    /// and never evicted — the artifacts behind a live zoo/service
+    /// survive any budget, so a GC'd cache dir still warm-starts the
+    /// exact configuration that was just running (the directory may
+    /// then exceed the budget; the report says so via `pinned`).
+    pub fn gc(&mut self, budget_bytes: u64) -> anyhow::Result<GcReport> {
+        let mut report = GcReport::default();
+        let mut victims: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .filter(|(k, _)| !self.touched.contains(*k))
+            .map(|(&k, e)| (e.last_used, k))
+            .collect();
+        victims.sort_unstable();
+        let mut total = self.total_bytes();
+        for (_, key) in victims {
+            if total <= budget_bytes {
+                break;
+            }
+            let entry = self.entries.remove(&key).expect("victim key is resident");
+            let _ = std::fs::remove_file(self.root.join(&entry.file));
+            total -= entry.bytes;
+            report.evicted += 1;
+            report.evicted_bytes += entry.bytes;
+        }
+        if total > budget_bytes {
+            report.pinned =
+                self.entries.iter().filter(|(k, _)| self.touched.contains(*k)).count();
+        }
+        report.kept = self.entries.len();
+        report.kept_bytes = total;
+
+        // Orphan sweep: artifact-shaped files the manifest no longer
+        // (or never did) reference are dead weight on the budget.
+        let referenced: BTreeSet<&str> =
+            self.entries.values().map(|e| e.file.as_str()).collect();
+        if let Ok(dir) = std::fs::read_dir(&self.root) {
+            for dirent in dir.flatten() {
+                let name = dirent.file_name();
+                let Some(name) = name.to_str() else { continue };
+                let artifact_shaped = name.starts_with("tuning_")
+                    || name.starts_with("store_")
+                    || name.starts_with("mcache_");
+                if artifact_shaped
+                    && !referenced.contains(name)
+                    && std::fs::remove_file(dirent.path()).is_ok()
+                {
+                    report.orphans_removed += 1;
+                }
+            }
+        }
+        self.write_manifest()?;
+        Ok(report)
+    }
+
+    /// Union another artifact directory into this one (multi-machine
+    /// merge). Safe by construction: keys are content-addressed over
+    /// every configuration input and artifact bytes are deterministic
+    /// in the key, so a key present on both sides names the same bytes
+    /// — except measurement caches, which can differ in *coverage* (two
+    /// machines warmed different pairs) and are therefore unioned
+    /// entry-wise (identical keys in a cache carry identical values, so
+    /// the union's *contents* are order-independent). Caveat: a
+    /// destination cache persisted with a `capacity` bound keeps that
+    /// bound — a union that overflows it evicts LRU entries exactly as
+    /// live inserts would, and *which* pairs survive then depends on
+    /// merge order. Serving caches are unbounded, so this only affects
+    /// deliberately bounded snapshots. Source payloads are checksum-
+    /// verified before anything is copied; a stale-versioned source
+    /// manifest reads as empty and merges nothing.
+    pub fn merge_from(&mut self, other_root: &Path) -> anyhow::Result<MergeReport> {
+        // A typo'd source path must be an error, not a silent 0-entry
+        // merge — `open` would create the directory and report success.
+        anyhow::ensure!(
+            other_root.join("manifest.json").is_file(),
+            "{} is not an artifact store (no manifest.json)",
+            other_root.display()
+        );
+        let other = ArtifactStore::open(other_root)?;
+        let mut report = MergeReport::default();
+        for (key, entry) in &other.entries {
+            let text = match std::fs::read_to_string(other.root.join(&entry.file)) {
+                Ok(text) if fnv1a(text.as_bytes()) == entry.checksum => text,
+                _ => {
+                    report.rejected += 1;
+                    continue;
+                }
+            };
+            match self.entries.get(key) {
+                None => {
+                    // Payloads land now; ONE manifest rewrite below
+                    // covers the whole merge (per-entry rewrites would
+                    // make a large merge quadratic in manifest bytes).
+                    self.put_deferred(*key, &entry.kind, &text)?;
+                    report.added += 1;
+                }
+                Some(mine) if mine.checksum == entry.checksum => report.identical += 1,
+                Some(mine) if mine.kind == "mcache" && entry.kind == "mcache" => {
+                    let mine_checksum = mine.checksum;
+                    let mine_text = std::fs::read_to_string(self.root.join(&mine.file))
+                        .unwrap_or_default();
+                    let mut merged = json::parse(mine_text.trim_end())
+                        .and_then(|j| MeasureCache::from_json(&j))
+                        .unwrap_or_default();
+                    // A checksum-valid but undecodable source cache is
+                    // skipped like any other bad source entry — never
+                    // abort a half-done merge over one rotten payload.
+                    let Ok(theirs) =
+                        json::parse(text.trim_end()).and_then(|j| MeasureCache::from_json(&j))
+                    else {
+                        report.rejected += 1;
+                        continue;
+                    };
+                    for (k, runtime) in theirs.entries_lru() {
+                        if merged.peek(k).is_none() {
+                            merged.insert(k, runtime);
+                        }
+                    }
+                    let mut merged_text = merged.to_json().to_compact();
+                    merged_text.push('\n');
+                    if fnv1a(merged_text.as_bytes()) == mine_checksum {
+                        // Union added nothing (e.g. a re-merge of the
+                        // same peer): skip the rewrite so repeated
+                        // merges neither churn disk nor distort the
+                        // destination's LRU order.
+                        report.identical += 1;
+                    } else {
+                        self.put_deferred(*key, "mcache", &merged_text)?;
+                        report.caches_unioned += 1;
+                    }
+                }
+                Some(_) => report.conflicts += 1,
+            }
+        }
+        self.write_manifest()?;
+        Ok(report)
     }
 }
 
@@ -417,7 +666,7 @@ mod tests {
 
         // Rewrite the manifest claiming a future format version.
         let manifest = std::fs::read_to_string(root.join("manifest.json")).unwrap();
-        std::fs::write(root.join("manifest.json"), manifest.replace("\"version\":1", "\"version\":999"))
+        std::fs::write(root.join("manifest.json"), manifest.replace("\"version\":2", "\"version\":999"))
             .unwrap();
         let store2 = ArtifactStore::open(&root).unwrap();
         assert!(store2.is_empty(), "stale version must invalidate all entries");

@@ -14,6 +14,9 @@
 //! repro show-schedule --model ResNet18 --kernel 6
 //! repro serve --listen 127.0.0.1:7461  # RPC server, streaming zoo build
 //! repro serve --requests FILE          # ScheduleService session replay
+//! repro call ADDR REQUEST              # thin client: one framed request
+//! repro admin ADDR stats|shutdown|republish MODEL
+//! repro cache gc|merge DIR...          # artifact-store lifecycle
 //! repro all                            # everything (one zoo per device)
 //! ```
 //!
@@ -45,7 +48,8 @@ use transfer_tuning::util::table::{fmt_duration, fmt_speedup, Table};
 #[derive(Clone, Debug)]
 struct Cli {
     command: String,
-    target: Option<String>, // positional after command (table/figure name)
+    target: Option<String>, // first positional (table/figure name, ADDR)
+    rest: Vec<String>,      // later positionals (client request, admin op, merge dirs)
     model: Option<String>,
     source: Option<String>,
     kernel: Option<usize>,
@@ -63,6 +67,9 @@ struct Cli {
     listen: Option<String>,
     /// Measurement-cache shards for the serving path.
     shards: usize,
+    /// Artifact-store byte budget: persist phases GC the `--cache-dir`
+    /// down to this size (live-pinned artifacts are never evicted).
+    cache_budget: Option<u64>,
     /// Host worker threads for every parallel fan-out (zoo model
     /// tuning, tuner candidate batches, measurement pool, session
     /// replay). 0 = TT_JOBS env, else auto. Wall-clock only: results
@@ -76,6 +83,7 @@ fn parse_args() -> Result<Cli> {
     let mut cli = Cli {
         command,
         target: None,
+        rest: Vec::new(),
         model: None,
         source: None,
         kernel: None,
@@ -88,6 +96,7 @@ fn parse_args() -> Result<Cli> {
         requests: None,
         listen: None,
         shards: 8,
+        cache_budget: None,
         jobs: 0,
     };
     while let Some(arg) = args.next() {
@@ -111,14 +120,73 @@ fn parse_args() -> Result<Cli> {
             "--requests" => cli.requests = Some(PathBuf::from(value("--requests")?)),
             "--listen" => cli.listen = Some(value("--listen")?),
             "--shards" => cli.shards = value("--shards")?.parse()?,
+            "--cache-budget" => cli.cache_budget = Some(value("--cache-budget")?.parse()?),
             "--jobs" => cli.jobs = value("--jobs")?.parse()?,
-            other if !other.starts_with("--") && cli.target.is_none() => {
-                cli.target = Some(other.to_string())
+            other if !other.starts_with("--") => {
+                if cli.target.is_none() {
+                    cli.target = Some(other.to_string());
+                } else {
+                    cli.rest.push(other.to_string());
+                }
             }
             other => bail!("unknown flag `{other}` (see `repro help`)"),
         }
     }
     Ok(cli)
+}
+
+/// SIGINT/SIGTERM latch for `serve --listen`: the handler only flips an
+/// atomic (async-signal-safe); the serve loop polls it and runs the
+/// same drain + persist teardown a `shutdown` RPC triggers, so the two
+/// exit paths leave byte-identical artifacts. Installed via the C
+/// library's `signal` directly — the crate is dependency-free and std
+/// already links libc.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn latch(signum: i32) {
+        if TRIGGERED.swap(true, Ordering::SeqCst) {
+            // Second signal: the serve loop only polls the latch
+            // between model landings, so a mid-tune Ctrl-C can take a
+            // while to honor — a repeat means the operator insists.
+            // Die NOW with the shell's 128+signal convention,
+            // explicitly forfeiting the persist teardown (`_exit` is
+            // async-signal-safe; nothing else here is allowed to be).
+            unsafe { _exit(128 + signum) }
+        }
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        fn _exit(status: i32) -> !;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, latch);
+            signal(SIGTERM, latch);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no signals to latch; the shutdown RPC (and
+/// process kill) remain the ways out.
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
 }
 
 fn emit(table: &Table, out_dir: &Path, slug: &str) -> Result<()> {
@@ -142,6 +210,28 @@ fn open_artifacts(cli: &Cli) -> Result<Option<ArtifactStore>> {
             Ok(Some(store))
         }
     }
+}
+
+/// Post-persist artifact hygiene: GC down to `--cache-budget` (when
+/// set) and settle pending LRU ticks. One helper, called by every
+/// persist phase (`with_zoo`, session replay, the serve teardown), so
+/// lifecycle behavior cannot drift between subcommands.
+fn finish_artifacts(cli: &Cli, artifacts: &mut ArtifactStore) -> Result<()> {
+    if let Some(budget) = cli.cache_budget {
+        let gc = artifacts.gc(budget)?;
+        eprintln!(
+            "[artifacts] gc to {budget} bytes: evicted {} ({} bytes), kept {} ({} bytes), {} orphans removed",
+            gc.evicted, gc.evicted_bytes, gc.kept, gc.kept_bytes, gc.orphans_removed
+        );
+        if gc.kept_bytes > budget {
+            eprintln!(
+                "[artifacts] warn: {} live-pinned artifacts keep the store over budget",
+                gc.pinned
+            );
+        }
+    }
+    artifacts.flush()?;
+    Ok(())
 }
 
 fn build_zoo_with(cli: &Cli, artifacts: Option<&mut ArtifactStore>) -> Zoo {
@@ -179,6 +269,7 @@ fn with_zoo(cli: &Cli, f: impl FnOnce(&Zoo) -> Result<()>) -> Result<()> {
     f(&zoo)?;
     if let Some(a) = artifacts.as_mut() {
         zoo.persist(a)?;
+        finish_artifacts(cli, a)?;
         eprintln!("[artifacts] persisted zoo store + measurement cache to {}", a.root().display());
     }
     Ok(())
@@ -556,9 +647,31 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
     if let Some(a) = artifacts.as_mut() {
         a.save_schedule_store(zoo_key, &service.store())?;
         a.save_measure_cache(zoo_key, &service.snapshot_cache())?;
+        finish_artifacts(cli, a)?;
         eprintln!("[artifacts] persisted session-warmed cache to {}", a.root().display());
     }
     Ok(())
+}
+
+/// What the serve loop's admin hook shares with its RPC workers: the
+/// zoo build accounting `stats` replies report. Updated by the main
+/// thread at every landing; read by any worker at any time.
+struct ServeState {
+    zoo: std::sync::Mutex<transfer_tuning::report::ZooBuildStats>,
+    complete: std::sync::atomic::AtomicBool,
+}
+
+/// What a landed republish reports back to its waiting RPC worker: the
+/// new epoch and where the tuning came from — or a typed RPC error.
+type RepublishReply = Result<(u64, &'static str), transfer_tuning::service::rpc::RpcError>;
+
+/// Commands the admin hook forwards to the serve loop's main thread —
+/// the only thread that owns the artifact store and may exit the
+/// process. `Republish` carries a reply channel: the RPC worker blocks
+/// until the main thread lands the new tuning (clients see the epoch
+/// their republish produced, not a fire-and-forget ack).
+enum ServeControl {
+    Republish(String, std::sync::mpsc::Sender<RepublishReply>),
 }
 
 /// `repro serve --listen ADDR`: the real RPC front end — a
@@ -572,11 +685,34 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
 /// from whatever sources exist at that moment — the overlap of tuning
 /// and serving the paper's economics argue for — instead of waiting for
 /// all 11 models.
+///
+/// The server then stays up as an *operable* service:
+///
+/// * `repro admin ADDR stats` reports epoch, sources, cache counters,
+///   and the build accounting at any time;
+/// * `repro admin ADDR republish MODEL` re-tunes (or re-loads) one
+///   model through the producer path and swaps it in at `epoch + 1`;
+/// * `repro admin ADDR shutdown` — or SIGINT/SIGTERM — drains
+///   connections and runs the teardown below.
+///
+/// **Persistence on any exit.** Whatever ends the serve loop (shutdown
+/// RPC, signal, zoo completion + shutdown), one teardown path persists
+/// the merged store and the *session-warmed* measurement cache to
+/// `--cache-dir` and applies `--cache-budget` GC — so the cache a live
+/// service accumulated survives, not just what the zoo build produced.
+/// The RPC and signal paths are byte-identical by construction (they
+/// are the same code); `rust/tests/serve_ops.rs` proves it.
 fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
-    use transfer_tuning::report::ZooProducer;
-    use transfer_tuning::service::rpc::{RpcDefaults, RpcServer};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Arc};
+    use transfer_tuning::report::{republish_model, ZooProducer};
+    use transfer_tuning::service::rpc::{
+        self as rpc, AdminRequest, RpcDefaults, RpcError, RpcServer,
+    };
     use transfer_tuning::service::ScheduleService;
+    use transfer_tuning::util::json::Json;
 
+    sig::install();
     let mut artifacts = open_artifacts(cli)?;
     let config = ExperimentConfig {
         trials: cli.trials,
@@ -586,8 +722,8 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     };
     // Seed the serving cache from the persisted zoo-level measurement
     // cache (if any) BEFORE serving: a warm --cache-dir keeps serving
-    // for free, and the save-on-completion below writes back a
-    // superset of what was loaded, never a clobbered subset.
+    // for free, and the save-on-exit below writes back a superset of
+    // what was loaded, never a clobbered subset.
     let zoo_names: Vec<String> = models::all_models().iter().map(|m| m.name.clone()).collect();
     let zoo_key = artifact::zoo_key(&zoo_names, &config.device, config.trials, config.seed);
     let warm_cache = artifacts
@@ -596,36 +732,311 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
         .unwrap_or_default();
     let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards);
     let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
-    let server = RpcServer::start(bind, service.clone(), defaults)?;
+
+    let state = Arc::new(ServeState {
+        zoo: std::sync::Mutex::new(transfer_tuning::report::ZooBuildStats::default()),
+        complete: std::sync::atomic::AtomicBool::new(false),
+    });
+    // Set by the shutdown RPC; polled together with the signal latch.
+    let stop_flag = Arc::new(AtomicBool::new(false));
+    // False until the streaming build completes: a republish that
+    // queued during the build would pin its pool worker in recv() for
+    // the rest of the build (at --jobs 1 that is the ONLY worker, and
+    // even the shutdown RPC would starve behind it) — so the hook
+    // refuses instead, and the operator retries once `stats` reports
+    // the zoo complete.
+    let republish_ready = Arc::new(AtomicBool::new(false));
+    let (ctl_tx, ctl_rx) = mpsc::channel::<ServeControl>();
+    let admin: rpc::AdminHook = {
+        let state = state.clone();
+        let stop_flag = stop_flag.clone();
+        let republish_ready = republish_ready.clone();
+        Arc::new(move |req, service| match req {
+            AdminRequest::Stats => {
+                let zoo = state.zoo.lock().expect("zoo stats lock").clone();
+                rpc::stats_json(service, Some((&zoo, state.complete.load(Ordering::SeqCst))))
+            }
+            AdminRequest::Shutdown => {
+                stop_flag.store(true, Ordering::SeqCst);
+                rpc::admin_ack_json("shutdown", vec![("draining", Json::Bool(true))])
+            }
+            AdminRequest::Republish { model } => {
+                if !republish_ready.load(Ordering::SeqCst) {
+                    return rpc::error_json(&RpcError::new(
+                        "admin_unavailable",
+                        "initial zoo build in progress — retry once `stats` reports \
+                         the zoo complete",
+                    ));
+                }
+                let (reply_tx, reply_rx) = mpsc::channel();
+                if ctl_tx.send(ServeControl::Republish(model.clone(), reply_tx)).is_err() {
+                    return rpc::error_json(&RpcError::new("internal", "server is stopping"));
+                }
+                match reply_rx.recv() {
+                    Ok(Ok((epoch, origin))) => rpc::admin_ack_json(
+                        "republish",
+                        vec![
+                            ("model", Json::str(model.as_str())),
+                            ("epoch", Json::num(epoch as f64)),
+                            ("origin", Json::str(origin)),
+                        ],
+                    ),
+                    Ok(Err(e)) => rpc::error_json(&e),
+                    Err(_) => rpc::error_json(&RpcError::new(
+                        "internal",
+                        "server stopped before the republish landed",
+                    )),
+                }
+            }
+        })
+    };
+
+    let server = RpcServer::start_with_admin(bind, service.clone(), defaults, admin)?;
     eprintln!(
         "[rpc] listening on {} (epoch 0; sources stream in as tunings land)",
         server.local_addr()
     );
 
-    let mut producer = ZooProducer::new(config, artifacts.as_mut());
+    let stop_requested = || stop_flag.load(Ordering::SeqCst) || sig::triggered();
+
+    // Phase 1: the streaming build. Stop requests are honored between
+    // landings; republish requests are refused (`republish_ready` is
+    // still false — the producer owns the artifact-store borrow, and a
+    // queued republish would pin a pool worker for the whole build).
+    let mut producer = ZooProducer::new(config.clone(), artifacts.as_mut());
     let total = producer.models().len();
     debug_assert_eq!(producer.zoo_key(), zoo_key, "seed/save keys must agree");
-    while let Some(epoch) = producer.publish_next(&service, &mut |line| eprintln!("  {line}")) {
-        eprintln!("[rpc] store epoch {epoch}: {epoch}/{total} sources live");
+    while !stop_requested() {
+        match producer.publish_next(&service, &mut |line| eprintln!("  {line}")) {
+            Some(epoch) => {
+                *state.zoo.lock().expect("zoo stats lock") = producer.stats.clone();
+                eprintln!("[rpc] store epoch {epoch}: {epoch}/{total} sources live");
+            }
+            None => break,
+        }
     }
+    let zoo_complete = producer.remaining() == 0;
     let stats = producer.stats.clone();
+    *state.zoo.lock().expect("zoo stats lock") = stats.clone();
+    state.complete.store(zoo_complete, Ordering::SeqCst);
     drop(producer);
-    eprintln!(
-        "[rpc] zoo complete: {} tuned / {} from artifacts ({} trials, {:.1}s tuning charged)",
-        stats.models_tuned,
-        stats.models_from_artifacts,
-        stats.trials_run,
-        stats.tuning_seconds_charged
-    );
+    if zoo_complete {
+        eprintln!(
+            "[rpc] zoo complete: {} tuned / {} from artifacts ({} trials, {:.1}s tuning charged)",
+            stats.models_tuned,
+            stats.models_from_artifacts,
+            stats.trials_run,
+            stats.tuning_seconds_charged
+        );
+    } else {
+        eprintln!(
+            "[rpc] build interrupted with {}/{total} sources live; persisting what landed",
+            service.live_sources().len()
+        );
+    }
+
+    // Phase 2: the operations loop — republishes land here, serialized
+    // on the main thread (epochs stay totally ordered), until a
+    // shutdown RPC or signal asks us down.
+    republish_ready.store(zoo_complete, Ordering::SeqCst);
+    if !stop_requested() {
+        eprintln!("[rpc] serving (repro admin {} stats|republish|shutdown)", server.local_addr());
+    }
+    while !stop_requested() {
+        match ctl_rx.recv_timeout(std::time::Duration::from_millis(100)) {
+            Ok(ServeControl::Republish(name, reply)) => {
+                let result = match models::by_name(&name) {
+                    None => Err(RpcError::new(
+                        "unknown_model",
+                        format!("unknown model `{name}` (see `repro models`)"),
+                    )),
+                    Some(graph) => {
+                        eprintln!("[rpc] republish {name}:");
+                        let (epoch, cost) = republish_model(
+                            graph,
+                            config.clone(),
+                            artifacts.as_mut(),
+                            &service,
+                            &mut |line| eprintln!("  {line}"),
+                        );
+                        let mut zoo = state.zoo.lock().expect("zoo stats lock");
+                        zoo.models_tuned += cost.models_tuned;
+                        zoo.models_from_artifacts += cost.models_from_artifacts;
+                        zoo.trials_run += cost.trials_run;
+                        zoo.tuning_seconds_charged += cost.tuning_seconds_charged;
+                        let origin =
+                            if cost.models_from_artifacts == 1 { "artifact" } else { "tuned" };
+                        eprintln!("[rpc] store epoch {epoch}: republished {name} ({origin})");
+                        Ok((epoch, origin))
+                    }
+                };
+                let _ = reply.send(result);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+
+    // Teardown — ONE path for every exit (shutdown RPC, SIGINT,
+    // SIGTERM): drop the control queue first (queued republishes error
+    // out instead of deadlocking their workers), drain the server, then
+    // persist the session-warmed state.
+    eprintln!("[rpc] shutting down: draining connections");
+    drop(ctl_rx);
+    server.shutdown();
     if let Some(a) = artifacts.as_mut() {
         a.save_schedule_store(zoo_key, &service.store())?;
         a.save_measure_cache(zoo_key, &service.snapshot_cache())?;
-        eprintln!("[artifacts] persisted zoo store + measurement cache to {}", a.root().display());
+        finish_artifacts(cli, a)?;
+        eprintln!(
+            "[artifacts] persisted zoo store + session-warmed measurement cache to {}",
+            a.root().display()
+        );
     }
-    eprintln!("[rpc] serving until killed (Ctrl-C)");
-    loop {
-        std::thread::park();
+    eprintln!("[rpc] shutdown complete");
+    Ok(())
+}
+
+/// One framed request/response round-trip against a live server — the
+/// thin client both `repro call` and `repro admin` stand on, so
+/// operators never hand-roll length prefixes.
+fn rpc_roundtrip(addr: &str, line: &str) -> Result<String> {
+    use std::io::Write as _;
+    use transfer_tuning::service::rpc;
+
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let frame = rpc::encode_frame(line).map_err(|e| anyhow::anyhow!("encoding request: {e}"))?;
+    stream.write_all(&frame).context("sending request frame")?;
+    rpc::read_frame(&mut stream).map_err(|e| anyhow::anyhow!("reading response frame: {e}"))
+}
+
+/// Print one response payload and mirror its `ok` field in the exit
+/// status (scripts branch on `repro admin`/`repro call` exit codes).
+fn emit_rpc_payload(payload: &str) -> Result<()> {
+    println!("{payload}");
+    let ok = transfer_tuning::util::json::parse(payload)
+        .ok()
+        .and_then(|j| j.get("ok").and_then(|v| v.as_bool()))
+        .unwrap_or(false);
+    anyhow::ensure!(ok, "server answered with an error (payload above)");
+    Ok(())
+}
+
+/// `repro call ADDR REQUEST`: frame one raw request payload (session or
+/// admin JSON — exactly what a `--requests` line holds), print the
+/// response payload on stdout.
+fn cmd_call(cli: &Cli) -> Result<()> {
+    let addr = cli.target.clone().context("usage: repro call ADDR REQUEST")?;
+    let request = cli.rest.first().context("usage: repro call ADDR REQUEST")?;
+    anyhow::ensure!(
+        cli.rest.len() == 1,
+        "unexpected argument `{}` — quote the request payload as ONE argument",
+        cli.rest[1]
+    );
+    emit_rpc_payload(&rpc_roundtrip(&addr, request)?)
+}
+
+/// `repro admin ADDR stats|shutdown|republish MODEL`: the operator
+/// verbs, encoded for you. `stats` reports serving + build state;
+/// `shutdown` asks the server to drain and persist; `republish` swaps a
+/// refreshed tuning into the live service at `epoch + 1`.
+fn cmd_admin(cli: &Cli) -> Result<()> {
+    use transfer_tuning::util::json::Json;
+
+    const USAGE: &str = "usage: repro admin ADDR stats|shutdown|republish MODEL";
+    let addr = cli.target.clone().context(USAGE)?;
+    let op = cli.rest.first().context(USAGE)?;
+    let expect_args = |n: usize| -> Result<()> {
+        anyhow::ensure!(
+            cli.rest.len() == n,
+            "unexpected argument `{}` after `{op}` ({USAGE})",
+            cli.rest[n]
+        );
+        Ok(())
+    };
+    let line = match op.as_str() {
+        "stats" | "shutdown" => {
+            expect_args(1)?;
+            Json::obj(vec![("op", Json::str(op.as_str()))]).to_compact()
+        }
+        "republish" => {
+            let model = cli.rest.get(1).context("usage: repro admin ADDR republish MODEL")?;
+            expect_args(2)?;
+            Json::obj(vec![("op", Json::str("republish")), ("model", Json::str(model.as_str()))])
+                .to_compact()
+        }
+        other => bail!("unknown admin op `{other}` ({USAGE})"),
+    };
+    emit_rpc_payload(&rpc_roundtrip(&addr, &line)?)
+}
+
+/// `repro cache gc|merge|stats`: offline artifact-store lifecycle.
+///
+/// * `repro cache gc --cache-dir DIR --cache-budget BYTES` — shrink a
+///   directory to the budget, least-recently-used artifacts first.
+/// * `repro cache merge SRC... --cache-dir DEST` — union other
+///   machines' artifact dirs into DEST (content-addressed keys make the
+///   union safe; measurement caches are merged entry-wise).
+/// * `repro cache stats --cache-dir DIR` — artifact count + bytes.
+fn cmd_cache(cli: &Cli) -> Result<()> {
+    let sub = cli.target.clone().unwrap_or_default();
+    let dir = cli
+        .cache_dir
+        .clone()
+        .context("`repro cache` needs --cache-dir DIR (the store to operate on)")?;
+    let mut store = ArtifactStore::open(&dir)
+        .with_context(|| format!("opening artifact store at {}", dir.display()))?;
+    if matches!(sub.as_str(), "gc" | "stats") && !cli.rest.is_empty() {
+        bail!(
+            "unexpected argument `{}` — `repro cache {sub}` takes flags only \
+             (--cache-dir, --cache-budget)",
+            cli.rest[0]
+        );
     }
+    match sub.as_str() {
+        "gc" => {
+            let budget = cli
+                .cache_budget
+                .context("usage: repro cache gc --cache-dir DIR --cache-budget BYTES")?;
+            let before = store.total_bytes();
+            let gc = store.gc(budget)?;
+            println!(
+                "[cache] gc {}: {} -> {} bytes (budget {budget}); evicted {} artifacts ({} bytes), {} orphaned files removed",
+                dir.display(),
+                before,
+                gc.kept_bytes,
+                gc.evicted,
+                gc.evicted_bytes,
+                gc.orphans_removed,
+            );
+        }
+        "merge" => {
+            anyhow::ensure!(
+                !cli.rest.is_empty(),
+                "usage: repro cache merge SRC_DIR... --cache-dir DEST"
+            );
+            for src in &cli.rest {
+                let m = store
+                    .merge_from(Path::new(src))
+                    .with_context(|| format!("merging {src}"))?;
+                println!(
+                    "[cache] merged {src}: {} added, {} caches unioned, {} identical, {} conflicts (kept ours), {} rejected",
+                    m.added, m.caches_unioned, m.identical, m.conflicts, m.rejected
+                );
+            }
+        }
+        "stats" => {
+            println!(
+                "[cache] {}: {} artifacts, {} bytes",
+                dir.display(),
+                store.len(),
+                store.total_bytes()
+            );
+        }
+        other => bail!("unknown cache subcommand `{other}` (gc|merge|stats)"),
+    }
+    Ok(())
 }
 
 /// `repro serve` (without `--requests`): a real serving loop over the
@@ -749,6 +1160,21 @@ COMMANDS
   serve [--source default|tuned] [--trials N]
                               serve the AOT CNN artifact: Poisson open loop,
                               latency percentiles (real PJRT execution)
+  call ADDR REQUEST           thin client: send one framed request payload
+                              (session or admin JSON) and print the response
+  admin ADDR stats            report epoch/sources/cache/build state
+  admin ADDR republish MODEL  re-tune (or re-load) MODEL and swap it into
+                              the live service at epoch+1
+  admin ADDR shutdown         drain connections, persist the warmed cache
+                              (SIGINT/SIGTERM run the same teardown)
+  cache gc --cache-dir D --cache-budget BYTES
+                              shrink an artifact dir to BYTES (LRU first;
+                              live-pinned artifacts never evicted)
+  cache merge SRC... --cache-dir DEST
+                              union artifact dirs from other machines into
+                              DEST (content-addressed keys; measurement
+                              caches merge entry-wise)
+  cache stats --cache-dir D   artifact count + total payload bytes
   all                         every table + figure (server zoo + edge zoo)
 
 FLAGS
@@ -766,6 +1192,11 @@ FLAGS
   --listen ADDR   TCP bind address for the `serve` RPC front end
                   (e.g. 127.0.0.1:7461; port 0 picks one)
   --shards N      measurement-cache shards for `serve` (default 8)
+  --cache-budget BYTES
+                  artifact-store size budget: every persist phase GCs the
+                  --cache-dir down to BYTES, evicting least-recently-used
+                  artifacts first but never one the running process loaded
+                  or wrote (a warm restart after GC stays warm)
   --jobs N        host worker threads for every parallel fan-out: up to
                   N models tune concurrently during zoo builds, tuner
                   candidate batches and measurement sweeps fan across N
@@ -777,6 +1208,16 @@ FLAGS
 
 fn main() -> Result<()> {
     let cli = parse_args()?;
+    // Only the client/lifecycle commands take positionals beyond the
+    // first; anywhere else a stray one is a typo (e.g. a flag value
+    // with its `--flag` forgotten) that must not be silently ignored.
+    if !cli.rest.is_empty() && !matches!(cli.command.as_str(), "call" | "admin" | "cache") {
+        bail!(
+            "unexpected argument `{}` for `repro {}` (see `repro help`)",
+            cli.rest[0],
+            cli.command
+        );
+    }
     // One knob for every fan-out in the process: zoo model workers,
     // tuner candidate batches, the measurement pool, session replay.
     // Deterministic — thread counts never change results.
@@ -792,6 +1233,9 @@ fn main() -> Result<()> {
         "tune" => cmd_tune(&cli),
         "transfer" => cmd_transfer(&cli),
         "serve" => cmd_serve(&cli),
+        "call" => cmd_call(&cli),
+        "admin" => cmd_admin(&cli),
+        "cache" => cmd_cache(&cli),
         "show-schedule" => cmd_show_schedule(&cli),
         "all" => cmd_all(&cli),
         "help" | "--help" | "-h" => {

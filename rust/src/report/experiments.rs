@@ -190,7 +190,12 @@ impl<'a> ZooProducer<'a> {
     /// keeps the whole knob for trial-level parallelism.
     fn pump(&mut self) {
         let slots = effective_jobs(self.config.jobs);
-        let inner_jobs = if slots > 1 { 1 } else { self.config.jobs };
+        // Pin the inner tuner to one thread only when model-level
+        // parallelism can actually use the cores: a single-model
+        // producer (`republish_model`, one-model zoos) keeps the whole
+        // knob for trial-level parallelism instead of tuning
+        // 1-threaded while every other core idles.
+        let inner_jobs = if slots > 1 && self.models.len() > 1 { 1 } else { self.config.jobs };
         while self.scheduled < self.models.len() && self.in_flight < slots {
             let index = self.scheduled;
             self.scheduled += 1;
@@ -342,6 +347,28 @@ impl<'a> ZooProducer<'a> {
     pub fn finish(self) -> (Vec<ModelGraph>, ZooBuildStats, Option<&'a mut ArtifactStore>) {
         (self.models, self.stats, self.artifacts)
     }
+}
+
+/// Re-tune (or re-load, when a matching artifact exists) one model and
+/// swap it into a live service at `epoch + 1` — the `republish` admin
+/// op. This *is* a one-model [`ZooProducer`] run, so tuning keys,
+/// artifact persistence, and warm-start accounting cannot drift from
+/// the build path; replies stay a pure function of (target, device,
+/// budget, seed, epoch) because a republish is just one more epoch.
+/// Returns the new epoch and what the republish cost (a warm republish
+/// is `models_from_artifacts == 1`, zero trials).
+pub fn republish_model(
+    graph: ModelGraph,
+    config: ExperimentConfig,
+    artifacts: Option<&mut ArtifactStore>,
+    service: &crate::service::ScheduleService,
+    progress: &mut impl FnMut(&str),
+) -> (u64, ZooBuildStats) {
+    let mut producer = ZooProducer::for_models(vec![graph], config, artifacts);
+    let epoch = producer
+        .publish_next(service, progress)
+        .expect("a one-model producer yields exactly one landing");
+    (epoch, producer.stats.clone())
 }
 
 impl Zoo {

@@ -7,4 +7,4 @@ pub mod experiments;
 pub mod figures;
 pub mod tables;
 
-pub use experiments::{ExperimentConfig, Zoo, ZooBuildStats, ZooProducer};
+pub use experiments::{republish_model, ExperimentConfig, Zoo, ZooBuildStats, ZooProducer};

@@ -328,6 +328,16 @@ impl ScheduleService {
         self.snapshot().sources.keys().cloned().collect()
     }
 
+    /// Record count of the current merged-store snapshot (admin stats).
+    pub fn store_records(&self) -> usize {
+        self.snapshot().merged.records.len()
+    }
+
+    /// Entries resident in the sharded measurement cache (admin stats).
+    pub fn cache_len(&self) -> usize {
+        self.inner.cache.len()
+    }
+
     /// Whether `name` currently resolves to a servable target (a
     /// published graph or a built-in zoo model) — the same lookup
     /// [`ScheduleService::open_session`] performs, exposed so the RPC

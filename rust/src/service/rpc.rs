@@ -9,10 +9,15 @@
 //! payload  := one UTF-8 JSON object, length bytes, no trailing newline
 //! ```
 //!
-//! Each request frame holds one session request (same schema as the
-//! `--requests` JSONL file: `{"model":..,"device":..,"budget_s":..,
-//! "seed":..}`); each response frame holds either
-//! `{"ok":true,"reply":{..}}` or `{"ok":false,"error":{"code":..,
+//! Each request frame holds one JSON object. A frame without an `op`
+//! field is a session request (same schema as the `--requests` JSONL
+//! file: `{"model":..,"device":..,"budget_s":..,"seed":..}`); a frame
+//! with an `op` field is an **admin request** — `{"op":"stats"}`,
+//! `{"op":"shutdown"}`, or `{"op":"republish","model":..}` — handled by
+//! the server's [`AdminHook`] (the serve loop wires shutdown/republish
+//! to its control thread; a bare [`RpcServer`] answers `stats` and
+//! rejects the rest with `admin_unavailable`). Each response frame
+//! holds either `{"ok":true,..}` or `{"ok":false,"error":{"code":..,
 //! "message":..}}`. A connection is a session loop: frames are
 //! answered in order until the client closes. Malformed *JSON* gets a
 //! structured `bad_json` error and the loop continues; malformed
@@ -24,21 +29,51 @@
 //! Replies carry the store `epoch` (see [`SessionReply::epoch`]): with
 //! a streaming zoo build publishing sources while the server runs, a
 //! reply is a pure function of (target, device, budget, seed, epoch).
+//!
+//! **Concurrency model.** Connections are served by a bounded worker
+//! pool sized by the global `--jobs`/`TT_JOBS` knob (the same knob as
+//! every other host fan-out — see `coordinator::jobs`), not by one
+//! thread per connection: excess connections queue at the acceptor and
+//! are served as workers free up, never dropped. A connection is a
+//! *session* and occupies its worker until the client closes, so
+//! long-lived idle clients at a tiny `--jobs` can starve the queue —
+//! operators should size `--jobs` for their expected concurrent
+//! sessions (the signal path to shutdown never queues).
 
 use super::{ScheduleService, SessionReply, SessionRequest};
+use crate::coordinator::CacheStats;
 use crate::device::DeviceProfile;
+use crate::report::ZooBuildStats;
 use crate::sched::serialize;
 use crate::util::json::{self, Json};
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Hard cap on one frame's payload, both directions. Replies are a few
 /// hundred KiB at worst (one schedule per target kernel); 16 MiB keeps
 /// a hostile length prefix from allocating the machine away.
 pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
+
+/// Version of the wire schema: the frame format plus the request,
+/// response, and admin JSON shapes. v1 = session requests only (PR 3);
+/// v2 = admin ops (`stats` / `shutdown` / `republish`). Bump this with
+/// **any** protocol change, and update README §Wire protocol,
+/// `rust/tests/rpc_codec.rs`, and `rust/tests/integration_rpc.rs` in
+/// the same commit — CI's `format-drift` job fails a change to this
+/// file that does not touch all three together.
+pub const WIRE_PROTOCOL_VERSION: u64 = 2;
+
+/// How long a reply write may stall before the connection is declared
+/// dead. Bounds the drain phase of a shutdown: a worker mid-write
+/// toward a client that stopped reading errors out instead of pinning
+/// the join forever (the reason PR 3 closed both stream halves; the
+/// timeout lets shutdown close only the read half and still terminate).
+pub const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Framing-layer failure. Everything above the byte stream (bad JSON,
 /// bad request fields) is reported in-band as an [`RpcError`] instead.
@@ -124,15 +159,17 @@ pub struct RpcDefaults {
 
 /// A structured in-band error (`{"ok":false,"error":{..}}`). Codes:
 ///
-/// | code              | meaning                                        |
-/// |-------------------|------------------------------------------------|
-/// | `bad_json`        | request payload is not valid JSON              |
-/// | `bad_request`     | missing/ill-typed request field                |
-/// | `unknown_device`  | `device` names no profile (server\|edge)       |
-/// | `unknown_model`   | `model` names no servable graph                |
-/// | `bad_frame`       | truncated or non-UTF-8 frame (connection ends) |
-/// | `oversized_frame` | length prefix above [`MAX_FRAME_LEN`] (ends)   |
-/// | `internal`        | session failed for another reason              |
+/// | code                | meaning                                        |
+/// |---------------------|------------------------------------------------|
+/// | `bad_json`          | request payload is not valid JSON              |
+/// | `bad_request`       | missing/ill-typed request field                |
+/// | `unknown_device`    | `device` names no profile (server\|edge)       |
+/// | `unknown_model`     | `model` names no servable graph                |
+/// | `unknown_op`        | `op` names no admin operation                  |
+/// | `admin_unavailable` | admin op has no operations loop, or not yet    |
+/// | `bad_frame`         | truncated or non-UTF-8 frame (connection ends) |
+/// | `oversized_frame`   | length prefix above [`MAX_FRAME_LEN`] (ends)   |
+/// | `internal`          | session or admin op failed for another reason  |
 #[derive(Clone, Debug, PartialEq)]
 pub struct RpcError {
     pub code: String,
@@ -149,10 +186,64 @@ fn bad_request(message: impl Into<String>) -> RpcError {
     RpcError::new("bad_request", message)
 }
 
-/// Parse one request payload into a [`SessionRequest`]. Pure, so the
-/// TCP loop and the `--requests` replay mode cannot drift.
+/// An admin operation, as carried by a request frame with an `op`
+/// field. These drive the *server*, not a session: `Stats` reports the
+/// serving state, `Shutdown` asks the operations loop to drain and
+/// persist, `Republish` re-tunes (or re-loads) one model and swaps it
+/// into the live service at `epoch + 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminRequest {
+    Stats,
+    Shutdown,
+    Republish { model: String },
+}
+
+/// Any decoded request frame: a tenant session or an admin op.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Session(SessionRequest),
+    Admin(AdminRequest),
+}
+
+/// Parse one request payload — session or admin. The `op` field
+/// dispatches: absent (or `"session"`) means a session request, so
+/// every pre-admin client payload keeps its exact meaning.
+pub fn parse_any_request(line: &str, defaults: &RpcDefaults) -> Result<Request, RpcError> {
+    let j = json::parse(line).map_err(|e| RpcError::new("bad_json", e.to_string()))?;
+    let op = match j.get("op") {
+        None => return Ok(Request::Session(session_from_json(&j, defaults)?)),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| bad_request("`op` must be a string"))?,
+    };
+    match op {
+        "session" => Ok(Request::Session(session_from_json(&j, defaults)?)),
+        "stats" => Ok(Request::Admin(AdminRequest::Stats)),
+        "shutdown" => Ok(Request::Admin(AdminRequest::Shutdown)),
+        "republish" => {
+            let model = match j.get("model") {
+                Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+                Some(_) => return Err(bad_request("`model` must be a non-empty string")),
+                None => return Err(bad_request("republish needs `model`")),
+            };
+            Ok(Request::Admin(AdminRequest::Republish { model }))
+        }
+        other => Err(RpcError::new(
+            "unknown_op",
+            format!("unknown op `{other}` (session|stats|shutdown|republish)"),
+        )),
+    }
+}
+
+/// Parse one *session* request payload. Pure, so the TCP loop and the
+/// `--requests` replay mode cannot drift (replay files carry sessions
+/// only; admin ops exist on live connections).
 pub fn parse_request(line: &str, defaults: &RpcDefaults) -> Result<SessionRequest, RpcError> {
     let j = json::parse(line).map_err(|e| RpcError::new("bad_json", e.to_string()))?;
+    session_from_json(&j, defaults)
+}
+
+fn session_from_json(j: &Json, defaults: &RpcDefaults) -> Result<SessionRequest, RpcError> {
     let model = match j.get("model") {
         Some(Json::Str(s)) if !s.is_empty() => s.clone(),
         Some(_) => return Err(bad_request("`model` must be a non-empty string")),
@@ -268,13 +359,86 @@ pub fn parse_response(line: &str) -> anyhow::Result<RpcResponse> {
     }
 }
 
-/// Serve one request payload end to end: parse, open the session,
-/// encode. Never fails — every failure becomes a structured error
-/// response.
-pub fn handle_request(service: &ScheduleService, defaults: &RpcDefaults, line: &str) -> Json {
-    match parse_request(line, defaults) {
+/// Encode the `{"ok":true,"stats":{..}}` response of an admin `stats`
+/// op. The `zoo` half (build accounting + completion flag) exists only
+/// when an operations loop is attached — a bare [`RpcServer`] reports
+/// the serving state alone.
+pub fn stats_json(service: &ScheduleService, zoo: Option<(&ZooBuildStats, bool)>) -> Json {
+    let cache: CacheStats = service.cache_stats();
+    let mut stats = vec![
+        ("protocol", Json::num(WIRE_PROTOCOL_VERSION as f64)),
+        ("epoch", Json::num(service.epoch() as f64)),
+        ("sources", Json::arr(service.live_sources().into_iter().map(Json::Str))),
+        ("store_records", Json::num(service.store_records() as f64)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("entries", Json::num(service.cache_len() as f64)),
+                ("hits", Json::num(cache.hits as f64)),
+                ("dedup_hits", Json::num(cache.dedup_hits as f64)),
+                ("misses", Json::num(cache.misses as f64)),
+                ("inserts", Json::num(cache.inserts as f64)),
+                ("evictions", Json::num(cache.evictions as f64)),
+                ("hit_rate", Json::num(cache.hit_rate())),
+            ]),
+        ),
+    ];
+    if let Some((z, complete)) = zoo {
+        stats.push((
+            "zoo",
+            Json::obj(vec![
+                ("models_tuned", Json::num(z.models_tuned as f64)),
+                ("models_from_artifacts", Json::num(z.models_from_artifacts as f64)),
+                ("trials_run", Json::num(z.trials_run as f64)),
+                ("tuning_seconds_charged", Json::num(z.tuning_seconds_charged)),
+                ("complete", Json::Bool(complete)),
+            ]),
+        ));
+    }
+    Json::obj(vec![("ok", Json::Bool(true)), ("stats", Json::obj(stats))])
+}
+
+/// Encode the `{"ok":true,"admin":{"op":..,..}}` acknowledgement of a
+/// state-changing admin op (`shutdown`, `republish`).
+pub fn admin_ack_json(op: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut admin = vec![("op", Json::str(op))];
+    admin.extend(fields);
+    Json::obj(vec![("ok", Json::Bool(true)), ("admin", Json::obj(admin))])
+}
+
+/// The server's admin dispatcher: every [`AdminRequest`] a connection
+/// decodes is answered by this hook. The serve loop installs one that
+/// forwards `shutdown`/`republish` to its control thread; anything
+/// running a bare [`RpcServer`] gets [`default_admin`].
+pub type AdminHook = Arc<dyn Fn(&AdminRequest, &ScheduleService) -> Json + Send + Sync>;
+
+/// The hook used when no operations loop is attached: `stats` is a pure
+/// function of the service and always answers; `shutdown`/`republish`
+/// need an owner for the process and artifact store, so they are
+/// refused with `admin_unavailable` rather than half-done.
+pub fn default_admin() -> AdminHook {
+    Arc::new(|req, service| match req {
+        AdminRequest::Stats => stats_json(service, None),
+        AdminRequest::Shutdown | AdminRequest::Republish { .. } => error_json(&RpcError::new(
+            "admin_unavailable",
+            "this server has no operations loop attached (stats only)",
+        )),
+    })
+}
+
+/// Serve one request payload end to end: parse, dispatch (session or
+/// admin), encode. Never fails — every failure becomes a structured
+/// error response.
+pub fn handle_request_with(
+    service: &ScheduleService,
+    defaults: &RpcDefaults,
+    admin: &AdminHook,
+    line: &str,
+) -> Json {
+    match parse_any_request(line, defaults) {
         Err(e) => error_json(&e),
-        Ok(req) => match service.open_session(&req) {
+        Ok(Request::Admin(req)) => admin(&req, service),
+        Ok(Request::Session(req)) => match service.open_session(&req) {
             Ok(reply) => response_json(&reply),
             Err(e) => {
                 // Classify by re-probing the service, not by sniffing
@@ -287,42 +451,108 @@ pub fn handle_request(service: &ScheduleService, defaults: &RpcDefaults, line: &
     }
 }
 
-/// Live-connection registry: worker id -> read-half handle, used to
-/// unblock readers on shutdown. Entries are removed when their worker
-/// exits, so a long-lived server does not leak one fd per connection.
+/// [`handle_request_with`] under [`default_admin`] — the oracle the
+/// wire tests compare against, and the `--requests` replay's sibling.
+pub fn handle_request(service: &ScheduleService, defaults: &RpcDefaults, line: &str) -> Json {
+    handle_request_with(service, defaults, &default_admin(), line)
+}
+
+/// Live-connection registry: connection id -> duplicated handle, used
+/// to unblock readers on shutdown. Entries are removed when their
+/// connection completes, so a long-lived server does not leak one fd
+/// per connection served.
 type ConnMap = Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>;
 
-/// The multi-threaded TCP server: an accept loop handing each
-/// connection to its own OS thread, all threads sharing one
-/// [`ScheduleService`] handle (sessions contend only on the sharded
-/// measurement cache). [`RpcServer::shutdown`] stops accepting,
-/// unblocks every connection's reader, and joins all workers.
+/// Accepted-but-unserved connections, waiting for a pool worker.
+struct ConnQueue {
+    queue: Mutex<VecDeque<(u64, TcpStream)>>,
+    ready: Condvar,
+}
+
+/// The multi-threaded TCP server: one accept thread feeding a bounded
+/// worker pool (sized by the global `--jobs`/`TT_JOBS` knob via
+/// [`effective_jobs`](crate::coordinator::effective_jobs)), all workers
+/// sharing one [`ScheduleService`] handle (sessions contend only on
+/// the sharded measurement cache). Connections beyond the pool size
+/// queue at the acceptor — served in arrival order, never dropped.
+/// [`RpcServer::shutdown`] stops accepting, drains in-flight replies,
+/// unblocks every connection's reader, and joins all threads.
 pub struct RpcServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     conns: ConnMap,
+    pending: Arc<ConnQueue>,
     accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl RpcServer {
     /// Bind `bind` (e.g. `"127.0.0.1:7461"`, port 0 for ephemeral) and
-    /// start serving `service` in background threads.
+    /// start serving `service` in background threads, with
+    /// [`default_admin`] answering admin ops.
     pub fn start(
         bind: &str,
         service: ScheduleService,
         defaults: RpcDefaults,
+    ) -> anyhow::Result<RpcServer> {
+        Self::start_with_admin(bind, service, defaults, default_admin())
+    }
+
+    /// [`RpcServer::start`] with an explicit [`AdminHook`] — how the
+    /// serve loop wires `shutdown` and `republish` to its control
+    /// thread.
+    pub fn start_with_admin(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        admin: AdminHook,
     ) -> anyhow::Result<RpcServer> {
         let listener = TcpListener::bind(bind)
             .map_err(|e| anyhow::anyhow!("binding RPC listener on {bind}: {e}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: ConnMap = Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let pending = Arc::new(ConnQueue {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        let n_workers = crate::coordinator::effective_jobs(0);
+        let mut workers = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let w_service = service.clone();
+            let w_defaults = defaults.clone();
+            let w_admin = admin.clone();
+            let w_stop = stop.clone();
+            let w_conns = conns.clone();
+            let w_pending = pending.clone();
+            let spawned = std::thread::Builder::new().name(format!("tt-rpc-{wi}")).spawn(
+                move || {
+                    worker_loop(&w_pending, &w_service, &w_defaults, &w_admin, &w_stop, &w_conns)
+                },
+            );
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // Unwind the workers already parked on the condvar;
+                    // returning the error with them still waiting would
+                    // leak one thread (plus a service handle) each.
+                    stop.store(true, Ordering::SeqCst);
+                    drop(pending.queue.lock().expect("conn queue"));
+                    pending.ready.notify_all();
+                    for worker in workers {
+                        let _ = worker.join();
+                    }
+                    return Err(anyhow::anyhow!("spawning RPC worker {wi}: {e}"));
+                }
+            }
+        }
         let accept = {
             let stop = stop.clone();
             let conns = conns.clone();
-            std::thread::spawn(move || accept_loop(listener, service, defaults, stop, conns))
+            let pending = pending.clone();
+            std::thread::spawn(move || accept_loop(listener, stop, conns, pending))
         };
-        Ok(RpcServer { addr, stop, conns, accept: Some(accept) })
+        Ok(RpcServer { addr, stop, conns, pending, accept: Some(accept), workers })
     }
 
     /// The bound address (resolves port 0).
@@ -330,17 +560,28 @@ impl RpcServer {
         self.addr
     }
 
-    /// Graceful shutdown: stop accepting, close every live connection,
-    /// join all threads. Both stream halves are shut down — closing
-    /// only the read half would leave a worker stuck in `write_all`
-    /// toward a client that stopped reading, and the join below would
-    /// never return.
+    /// Graceful shutdown: stop accepting, drain, join all threads.
+    /// Only the *read* half of each live connection is shut down, so a
+    /// reply already being computed or written still reaches its client
+    /// (the drain); a worker stuck writing toward a client that stopped
+    /// reading is bounded by [`WRITE_STALL_TIMEOUT`], so the joins
+    /// always terminate. Queued-but-unserved connections are closed
+    /// unanswered — accepting no new work is what shutdown means.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // Wake idle pool workers so they observe the stop flag. The
+        // empty critical section orders the store with each worker's
+        // check-then-wait: a worker that read stop == false while
+        // holding the queue lock is guaranteed to reach `wait` (and
+        // release the lock) before this notify fires — without it the
+        // notification could land in that window and be lost, leaving
+        // the worker parked forever and the joins below hung.
+        drop(self.pending.queue.lock().expect("conn queue"));
+        self.pending.ready.notify_all();
         // Unblock the accept loop with a throwaway connection (the flag
         // is already visible when it wakes). Wildcard binds (0.0.0.0)
         // may not be dialable as-is; fall back to loopback.
@@ -349,11 +590,18 @@ impl RpcServer {
                 TcpStream::connect((std::net::Ipv4Addr::LOCALHOST, self.addr.port()));
         }
         for conn in self.conns.lock().expect("conns lock").values() {
-            let _ = conn.shutdown(Shutdown::Both);
+            let _ = conn.shutdown(Shutdown::Read);
         }
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+        // Close (by drop) connections that were accepted but never
+        // reached a worker; their registry entries go with them.
+        self.pending.queue.lock().expect("conn queue").clear();
+        self.conns.lock().expect("conns lock").clear();
     }
 }
 
@@ -367,12 +615,10 @@ impl Drop for RpcServer {
 
 fn accept_loop(
     listener: TcpListener,
-    service: ScheduleService,
-    defaults: RpcDefaults,
     stop: Arc<AtomicBool>,
     conns: ConnMap,
+    pending: Arc<ConnQueue>,
 ) {
-    let mut workers: Vec<JoinHandle<()>> = Vec::new();
     let mut next_id: u64 = 0;
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -383,34 +629,54 @@ fn accept_loop(
             Err(_) => {
                 // Transient accept failure (e.g. fd pressure): back off
                 // instead of spinning the accept thread hot.
-                std::thread::sleep(std::time::Duration::from_millis(20));
+                std::thread::sleep(Duration::from_millis(20));
                 continue;
             }
         };
+        // Bound every reply write so a drain can always terminate.
+        let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
         let id = next_id;
         next_id += 1;
-        // Register the read-half BEFORE spawning: every worker must be
-        // unblockable at shutdown. If the handle cannot be duplicated
-        // (fd pressure), refuse the connection rather than spawn a
-        // reader that shutdown() could never wake.
+        // Register the handle BEFORE queueing: every connection must be
+        // unblockable at shutdown, whether a worker holds it yet or
+        // not. If the handle cannot be duplicated (fd pressure), refuse
+        // the connection rather than queue one shutdown() cannot wake.
         let Ok(handle) = stream.try_clone() else { continue };
         conns.lock().expect("conns lock").insert(id, handle);
-        let service = service.clone();
-        let defaults = defaults.clone();
-        let stop = stop.clone();
-        let conns = conns.clone();
-        workers.push(std::thread::spawn(move || {
-            connection_loop(stream, &service, &defaults, &stop);
-            // Drop this connection's registry entry so a long-lived
-            // server's fd usage tracks *live* connections only.
-            conns.lock().expect("conns lock").remove(&id);
-        }));
-        // Reap finished workers opportunistically so the handle list
-        // does not grow with total connections served.
-        workers.retain(|w| !w.is_finished());
+        pending.queue.lock().expect("conn queue").push_back((id, stream));
+        pending.ready.notify_one();
     }
-    for worker in workers {
-        let _ = worker.join();
+}
+
+/// One pool worker: serve queued connections to completion, one at a
+/// time, until shutdown. The queue is never abandoned mid-connection —
+/// a worker finishes (or is unblocked out of) its current session loop
+/// before it re-checks the stop flag.
+fn worker_loop(
+    pending: &ConnQueue,
+    service: &ScheduleService,
+    defaults: &RpcDefaults,
+    admin: &AdminHook,
+    stop: &AtomicBool,
+    conns: &ConnMap,
+) {
+    loop {
+        let (id, stream) = {
+            let mut queue = pending.queue.lock().expect("conn queue");
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(next) = queue.pop_front() {
+                    break next;
+                }
+                queue = pending.ready.wait(queue).expect("conn queue");
+            }
+        };
+        connection_loop(stream, service, defaults, admin, stop);
+        // Drop this connection's registry entry so a long-lived
+        // server's fd usage tracks *live* connections only.
+        conns.lock().expect("conns lock").remove(&id);
     }
 }
 
@@ -420,6 +686,7 @@ fn connection_loop(
     stream: TcpStream,
     service: &ScheduleService,
     defaults: &RpcDefaults,
+    admin: &AdminHook,
     stop: &AtomicBool,
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
@@ -431,7 +698,7 @@ fn connection_loop(
         }
         match read_frame(&mut reader) {
             Ok(line) => {
-                let response = handle_request(service, defaults, &line).to_compact();
+                let response = handle_request_with(service, defaults, admin, &line).to_compact();
                 match encode_frame(&response) {
                     Ok(buf) => {
                         if writer.write_all(&buf).is_err() {

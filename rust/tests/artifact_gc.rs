@@ -1,0 +1,274 @@
+//! Artifact lifecycle tests: the v2 manifest format (golden-pinned),
+//! durable LRU ticks, `--cache-budget` GC that never evicts what a live
+//! process references (so warm bit-identity survives a GC), and
+//! multi-machine `cache merge` (union of content-addressed manifests;
+//! measurement caches union entry-wise).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use transfer_tuning::artifact::ArtifactStore;
+use transfer_tuning::autosched::TuningResult;
+use transfer_tuning::coordinator::MeasureCache;
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::util::json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_artifact_gc_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn golden_manifest() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/artifact_manifest.json")
+}
+
+fn small_cache(keys: &[u64]) -> MeasureCache {
+    let mut cache = MeasureCache::new();
+    for &k in keys {
+        cache.insert(k, Some(k as f64 * 1e-4));
+    }
+    cache
+}
+
+/// A tuning artifact without running the tuner (empty per-kernel map —
+/// the codec round-trips it; merge only compares bytes).
+fn bare_tuning(name: &str) -> TuningResult {
+    TuningResult {
+        model: name.to_string(),
+        best: HashMap::new(),
+        search_time_s: 1.5,
+        trials_used: 4,
+        history: Vec::new(),
+    }
+}
+
+#[test]
+fn golden_manifest_v2_format_is_stable() {
+    let fixture = std::fs::read_to_string(golden_manifest()).unwrap();
+    let root = tmp_dir("golden");
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(root.join("manifest.json"), &fixture).unwrap();
+
+    let mut store = ArtifactStore::open(&root).unwrap();
+    assert_eq!(store.len(), 2, "fixture pins two entries");
+    assert_eq!(store.total_bytes(), 49, "bytes metadata drives the GC budget");
+
+    // Rewrite (a no-op GC rewrites the manifest): byte-identical to the
+    // fixture — keys, hex widths, field order, integer formatting.
+    let report = store.gc(u64::MAX).unwrap();
+    assert_eq!(report.evicted, 0);
+    assert_eq!(report.kept, 2);
+    let rewritten = std::fs::read_to_string(root.join("manifest.json")).unwrap();
+    assert_eq!(rewritten, fixture, "manifest v2 disk format drifted");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn lru_ticks_resume_across_processes() {
+    let fixture = std::fs::read_to_string(golden_manifest()).unwrap();
+    let root = tmp_dir("ticks");
+    std::fs::create_dir_all(&root).unwrap();
+    std::fs::write(root.join("manifest.json"), &fixture).unwrap();
+
+    // The fixture's max tick is 9; the next write must use tick 10 —
+    // LRU order is durable, not restarted per process.
+    let mut store = ArtifactStore::open(&root).unwrap();
+    store.save_measure_cache(0x5eed, &small_cache(&[1])).unwrap();
+    let manifest = json::parse(
+        std::fs::read_to_string(root.join("manifest.json")).unwrap().trim_end(),
+    )
+    .unwrap();
+    let ticks: Vec<u64> = match manifest.get("entries").unwrap() {
+        json::Json::Obj(map) => map
+            .values()
+            .map(|e| e.get("last_used").and_then(|v| v.as_f64()).unwrap() as u64)
+            .collect(),
+        other => panic!("entries must be an object, got {other:?}"),
+    };
+    assert!(ticks.contains(&10), "new write must tick past the persisted max (got {ticks:?})");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn gc_evicts_least_recently_used_unpinned_entries_first() {
+    let root = tmp_dir("lru");
+    let mut writer = ArtifactStore::open(&root).unwrap();
+    writer.save_measure_cache(111, &small_cache(&[1, 2])).unwrap(); // tick 1
+    writer.save_measure_cache(222, &small_cache(&[3, 4])).unwrap(); // tick 2
+    drop(writer);
+
+    // A fresh process loads only key 222: that entry is pinned (and its
+    // tick refreshed); 111 is old and untouched — the GC victim.
+    let mut store = ArtifactStore::open(&root).unwrap();
+    assert!(store.load_measure_cache(222).is_some());
+    let report = store.gc(1).unwrap();
+    assert_eq!(report.evicted, 1, "only the unpinned entry goes");
+    assert!(report.kept_bytes > 1, "the pinned entry stays even over budget");
+    assert_eq!(report.pinned, 1);
+    assert!(store.load_measure_cache(111).is_none(), "evicted entry must miss");
+    assert!(store.load_measure_cache(222).is_some(), "pinned entry must survive");
+
+    // The eviction is durable and the payload file is gone.
+    let mut reopened = ArtifactStore::open(&root).unwrap();
+    assert_eq!(reopened.len(), 1);
+    assert!(reopened.load_measure_cache(111).is_none());
+    let mcache_files = std::fs::read_dir(&root)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("mcache_")
+        })
+        .count();
+    assert_eq!(mcache_files, 1, "evicted payload file removed from disk");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn gc_sweeps_orphaned_artifact_files() {
+    let root = tmp_dir("orphans");
+    let mut store = ArtifactStore::open(&root).unwrap();
+    store.save_measure_cache(7, &small_cache(&[1])).unwrap();
+    // A torn write leaves a payload no manifest row references.
+    std::fs::write(root.join("tuning_00000000000000ff.json"), "{\"torn\":true}").unwrap();
+    std::fs::write(root.join("unrelated.txt"), "not an artifact").unwrap();
+    let report = store.gc(u64::MAX).unwrap();
+    assert_eq!(report.orphans_removed, 1, "artifact-shaped orphan swept");
+    assert!(!root.join("tuning_00000000000000ff.json").exists());
+    assert!(root.join("unrelated.txt").exists(), "non-artifact files are not ours to delete");
+    assert!(store.load_measure_cache(7).is_some(), "referenced artifacts untouched");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn gc_never_evicts_a_live_zoo_and_warm_bit_identity_holds() {
+    let root = tmp_dir("live");
+    let device = DeviceProfile::xeon_e5_2620();
+    let zoo_models = || {
+        let mut a = ModelGraph::new("GcA");
+        a.push(KernelBuilder::dense(256, 256, 256, &[]));
+        let mut b = ModelGraph::new("GcB");
+        b.push(KernelBuilder::dense(320, 320, 320, &[]));
+        vec![a, b]
+    };
+    let live_cfg =
+        ExperimentConfig { trials: 48, seed: 9, device: device.clone(), jobs: 0 };
+    let stale_cfg = ExperimentConfig { seed: 10, ..live_cfg.clone() };
+
+    // Cold-build and persist both configurations into one dir.
+    let mut artifacts = ArtifactStore::open(&root).unwrap();
+    let cold = Zoo::build_for_models(zoo_models(), live_cfg.clone(), Some(&mut artifacts), |_| {});
+    cold.persist(&mut artifacts).unwrap();
+    let cold_store_jsonl = cold.store.to_jsonl();
+    drop(cold);
+    let stale = Zoo::build_for_models(zoo_models(), stale_cfg, Some(&mut artifacts), |_| {});
+    stale.persist(&mut artifacts).unwrap();
+    drop(stale);
+    drop(artifacts);
+
+    // A new process warm-builds the live configuration (pinning its
+    // artifacts), then GCs with a hopeless budget: only the stale
+    // configuration's entries may go.
+    let mut artifacts = ArtifactStore::open(&root).unwrap();
+    let warm = Zoo::build_for_models(zoo_models(), live_cfg.clone(), Some(&mut artifacts), |_| {});
+    assert_eq!(warm.build_stats.models_tuned, 0, "sanity: warm build loads");
+    warm.persist(&mut artifacts).unwrap();
+    let report = artifacts.gc(1).unwrap();
+    assert!(report.evicted >= 1, "the stale configuration is evictable");
+    assert!(report.kept >= 4, "2 tunings + store + mcache stay pinned");
+    drop(warm);
+    drop(artifacts);
+
+    // After the GC, the live configuration still warm-starts: zero
+    // trials, zero charged tuning seconds, bit-identical store bytes.
+    let mut artifacts = ArtifactStore::open(&root).unwrap();
+    let again = Zoo::build_for_models(zoo_models(), live_cfg, Some(&mut artifacts), |_| {});
+    assert_eq!(again.build_stats.models_tuned, 0, "GC must not cost the live zoo its warmth");
+    assert_eq!(again.build_stats.trials_run, 0);
+    assert_eq!(again.build_stats.tuning_seconds_charged, 0.0);
+    assert_eq!(again.store.to_jsonl(), cold_store_jsonl, "warm store drifted after GC");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn merge_unions_manifests_and_measure_caches() {
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let dest_root = tmp_dir("merge_dest");
+    let src_root = tmp_dir("merge_src");
+    let tuning_key_a = transfer_tuning::artifact::tuning_key("MergeA", &xeon, 10, 1);
+    let tuning_key_b = transfer_tuning::artifact::tuning_key("MergeB", &xeon, 10, 1);
+    let zk = 0x200;
+
+    // Machine 1 tuned A and warmed pairs {1,2}; machine 2 tuned B and
+    // warmed pairs {2,3} under the SAME zoo key.
+    let mut dest = ArtifactStore::open(&dest_root).unwrap();
+    dest.save_tuning(tuning_key_a, &bare_tuning("MergeA")).unwrap();
+    dest.save_measure_cache(zk, &small_cache(&[1, 2])).unwrap();
+    let mut src = ArtifactStore::open(&src_root).unwrap();
+    src.save_tuning(tuning_key_b, &bare_tuning("MergeB")).unwrap();
+    src.save_measure_cache(zk, &small_cache(&[2, 3])).unwrap();
+    drop(src);
+
+    let report = dest.merge_from(&src_root).unwrap();
+    assert_eq!(report.added, 1, "B's tuning copied over");
+    assert_eq!(report.caches_unioned, 1, "shared zoo key unions");
+    assert_eq!(report.conflicts, 0);
+    assert_eq!(report.rejected, 0);
+
+    // The union holds every machine's coverage; values agree because
+    // measurements are content-derived (identical keys, identical f64s).
+    let merged = dest.load_measure_cache(zk).unwrap();
+    for k in [1u64, 2, 3] {
+        assert_eq!(merged.peek(k), Some(Some(k as f64 * 1e-4)), "pair {k} in the union");
+    }
+    assert!(dest.load_tuning(tuning_key_a).is_some());
+    assert!(dest.load_tuning(tuning_key_b).is_some());
+
+    // Merging the same source twice is a no-op on bytes (idempotent).
+    let mcache_file = |root: &std::path::Path| {
+        std::fs::read_dir(root)
+            .unwrap()
+            .map(|e| e.unwrap())
+            .find(|e| e.file_name().to_string_lossy().starts_with("mcache_"))
+            .map(|e| std::fs::read(e.path()).unwrap())
+            .unwrap()
+    };
+    let before = mcache_file(&dest_root);
+    let report2 = dest.merge_from(&src_root).unwrap();
+    assert_eq!(report2.added, 0);
+    assert_eq!(report2.caches_unioned, 0, "no-op union must not rewrite the cache");
+    assert_eq!(report2.identical, 2, "B's tuning AND the already-unioned cache are no-ops");
+    assert_eq!(mcache_file(&dest_root), before, "re-merge must not churn bytes");
+    std::fs::remove_dir_all(&dest_root).ok();
+    std::fs::remove_dir_all(&src_root).ok();
+}
+
+#[test]
+fn merge_rejects_corrupt_source_payloads() {
+    let dest_root = tmp_dir("reject_dest");
+    let src_root = tmp_dir("reject_src");
+    let mut src = ArtifactStore::open(&src_root).unwrap();
+    src.save_tuning(0xbad, &bare_tuning("Corrupt")).unwrap();
+    drop(src);
+    // Flip the payload after the manifest recorded its checksum.
+    let file = std::fs::read_dir(&src_root)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| p.file_name().unwrap().to_string_lossy().starts_with("tuning_"))
+        .unwrap();
+    std::fs::write(&file, "{\"not\":\"the artifact\"}").unwrap();
+
+    let mut dest = ArtifactStore::open(&dest_root).unwrap();
+    let report = dest.merge_from(&src_root).unwrap();
+    assert_eq!(report.rejected, 1, "corrupt source entry skipped");
+    assert_eq!(report.added, 0);
+    assert!(dest.is_empty(), "nothing corrupt crosses the merge");
+
+    // A typo'd source path is an error, not a silent 0-entry success —
+    // and it must not be created as a side effect.
+    let missing = tmp_dir("reject_missing");
+    assert!(dest.merge_from(&missing).is_err(), "missing source dir must error");
+    assert!(!missing.exists(), "merge must not create the missing source dir");
+    std::fs::remove_dir_all(&dest_root).ok();
+    std::fs::remove_dir_all(&src_root).ok();
+}

@@ -7,11 +7,14 @@
 
 use std::io::Write;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use transfer_tuning::autosched::{tune_model, TuneOptions};
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::ir::{KernelBuilder, ModelGraph};
 use transfer_tuning::service::rpc::{
-    encode_frame, handle_request, parse_response, read_frame, RpcDefaults, RpcResponse, RpcServer,
+    admin_ack_json, encode_frame, error_json, handle_request, parse_response, read_frame,
+    stats_json, AdminRequest, RpcDefaults, RpcError, RpcResponse, RpcServer,
 };
 use transfer_tuning::service::ScheduleService;
 use transfer_tuning::transfer::ScheduleStore;
@@ -197,6 +200,108 @@ fn shutdown_joins_and_stops_accepting() {
         }
     }
     drop(idle);
+}
+
+#[test]
+fn queued_connections_are_served_not_dropped() {
+    // The accept loop feeds a bounded worker pool (sized by
+    // --jobs/TT_JOBS); connections beyond the pool size queue and are
+    // served as workers free up. 24 one-shot clients must ALL get
+    // correct replies at any pool size — including a single worker,
+    // where they fully serialize through the queue.
+    let service = dense_service();
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let server = RpcServer::start("127.0.0.1:0", service, d).expect("bind");
+    let addr = server.local_addr();
+    std::thread::scope(|scope| {
+        for client in 0..24 {
+            let expected = &expected;
+            scope.spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                let got = roundtrip(&mut stream, line);
+                assert_eq!(&got, expected, "client {client}: queued connection lost a reply");
+                // One-shot: close so the worker can take the next
+                // queued connection (a connection is a session and
+                // occupies its worker until the client hangs up).
+            });
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn default_admin_answers_stats_and_refuses_mutations() {
+    let service = dense_service();
+    let server = RpcServer::start("127.0.0.1:0", service.clone(), defaults()).expect("bind");
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+
+    // stats: pure function of the service, answered without an ops loop
+    // — and byte-identical to calling the encoder directly.
+    let got = roundtrip(&mut stream, "{\"op\":\"stats\"}");
+    assert_eq!(got, stats_json(&service, None).to_compact());
+    let j = transfer_tuning::util::json::parse(&got).expect("stats decode");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let stats = j.get("stats").expect("stats body");
+    assert_eq!(stats.get("epoch").and_then(|v| v.as_f64()), Some(2.0));
+    assert_eq!(
+        stats.get("sources").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(2),
+        "both tuned sources are live"
+    );
+    assert!(stats.get("zoo").is_none(), "no ops loop => no build accounting");
+
+    // shutdown/republish need an operations loop that owns the process;
+    // a bare server refuses them in-band and keeps serving.
+    let code_of = |payload: &str| match parse_response(payload).expect("decodes") {
+        RpcResponse::Error(e) => e.code,
+        RpcResponse::Reply(_) => panic!("expected an error reply"),
+    };
+    assert_eq!(code_of(&roundtrip(&mut stream, "{\"op\":\"shutdown\"}")), "admin_unavailable");
+    assert_eq!(
+        code_of(&roundtrip(&mut stream, "{\"op\":\"republish\",\"model\":\"SrcA\"}")),
+        "admin_unavailable"
+    );
+    assert_eq!(code_of(&roundtrip(&mut stream, "{\"op\":\"reboot\"}")), "unknown_op");
+    // And the same connection still serves sessions afterwards.
+    match parse_response(&roundtrip(&mut stream, "{\"model\":\"TargetDense\"}")).unwrap() {
+        RpcResponse::Reply(_) => {}
+        RpcResponse::Error(e) => panic!("session after admin abuse failed: {e:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn custom_admin_hook_sees_ops_over_the_wire() {
+    // The serve loop's contract in miniature: a custom AdminHook
+    // receives decoded admin ops from live connections and its reply
+    // bytes go back on the wire verbatim.
+    let asked_down = Arc::new(AtomicBool::new(false));
+    let hook_flag = asked_down.clone();
+    let admin: transfer_tuning::service::rpc::AdminHook =
+        Arc::new(move |req, service| match req {
+            AdminRequest::Shutdown => {
+                hook_flag.store(true, Ordering::SeqCst);
+                admin_ack_json("shutdown", vec![])
+            }
+            AdminRequest::Stats => stats_json(service, None),
+            AdminRequest::Republish { model } => {
+                error_json(&RpcError::new("internal", format!("no republish for {model}")))
+            }
+        });
+    let server =
+        RpcServer::start_with_admin("127.0.0.1:0", dense_service(), defaults(), admin)
+            .expect("bind");
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let ack = roundtrip(&mut stream, "{\"op\":\"shutdown\"}");
+    assert_eq!(ack, "{\"admin\":{\"op\":\"shutdown\"},\"ok\":true}");
+    assert!(asked_down.load(Ordering::SeqCst), "hook observed the shutdown op");
+    // The ack reached the client BEFORE any teardown the hook's owner
+    // might start — exactly the ordering the serve loop relies on.
+    server.shutdown();
 }
 
 #[test]

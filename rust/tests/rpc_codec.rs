@@ -8,8 +8,9 @@
 use std::io::Cursor;
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::service::rpc::{
-    encode_frame, error_json, parse_request, parse_response, read_frame, FrameError,
-    MAX_FRAME_LEN, RpcDefaults, RpcError, RpcResponse,
+    admin_ack_json, encode_frame, error_json, parse_any_request, parse_request, parse_response,
+    read_frame, AdminRequest, FrameError, Request, RpcDefaults, RpcError, RpcResponse,
+    MAX_FRAME_LEN, WIRE_PROTOCOL_VERSION,
 };
 use transfer_tuning::util::rng::Rng;
 
@@ -153,6 +154,63 @@ fn bad_requests_map_to_structured_errors() {
     assert_eq!(code("{\"model\":\"A\",\"budget_s\":-1}"), "bad_request");
     assert_eq!(code("{\"model\":\"A\",\"seed\":1.5}"), "bad_request");
     assert_eq!(code("{\"model\":\"A\",\"seed\":-3}"), "bad_request");
+}
+
+#[test]
+fn admin_ops_parse_and_sessions_stay_sessions() {
+    // Wire schema v2: the `op` field dispatches admin ops.
+    assert_eq!(WIRE_PROTOCOL_VERSION, 2, "update the admin tests with the protocol");
+    let d = defaults();
+    let admin = |line: &str| match parse_any_request(line, &d).unwrap() {
+        Request::Admin(a) => a,
+        Request::Session(s) => panic!("expected admin request, got session {s:?}"),
+    };
+    assert_eq!(admin("{\"op\":\"stats\"}"), AdminRequest::Stats);
+    assert_eq!(admin("{\"op\":\"shutdown\"}"), AdminRequest::Shutdown);
+    assert_eq!(
+        admin("{\"op\":\"republish\",\"model\":\"ResNet18\"}"),
+        AdminRequest::Republish { model: "ResNet18".into() }
+    );
+
+    // No `op` (or op=session) is a session request — every pre-admin
+    // client payload keeps its exact meaning.
+    for line in ["{\"model\":\"ResNet18\"}", "{\"op\":\"session\",\"model\":\"ResNet18\"}"] {
+        match parse_any_request(line, &d).unwrap() {
+            Request::Session(req) => assert_eq!(req.model, "ResNet18"),
+            Request::Admin(a) => panic!("{line} must parse as a session, got {a:?}"),
+        }
+    }
+}
+
+#[test]
+fn bad_admin_ops_map_to_structured_errors() {
+    let d = defaults();
+    let code = |line: &str| parse_any_request(line, &d).unwrap_err().code;
+    assert_eq!(code("{\"op\":\"reboot\"}"), "unknown_op");
+    assert_eq!(code("{\"op\":42}"), "bad_request");
+    assert_eq!(code("{\"op\":\"republish\"}"), "bad_request"); // missing model
+    assert_eq!(code("{\"op\":\"republish\",\"model\":\"\"}"), "bad_request");
+    assert_eq!(code("{\"op\":\"republish\",\"model\":7}"), "bad_request");
+    assert_eq!(code("{\"op\":\"session\"}"), "bad_request"); // missing model
+    // Hostile admin payloads never panic (same contract as sessions).
+    let mut rng = Rng::new(0xAD317);
+    for _ in 0..100 {
+        let len = rng.usize(64) + 1;
+        let garbage: String =
+            (0..len).map(|_| char::from((rng.next_u64() % 94 + 32) as u8)).collect();
+        let _ = parse_any_request(&format!("{{\"op\":{garbage}"), &d);
+    }
+}
+
+#[test]
+fn admin_acks_are_ok_payloads_not_session_replies() {
+    use transfer_tuning::util::json::Json;
+    let ack = admin_ack_json("shutdown", vec![("draining", Json::Bool(true))]).to_compact();
+    // Canonical shape, pinned: sorted keys, `ok` for scripts, the op
+    // echoed back for humans.
+    assert_eq!(ack, "{\"admin\":{\"draining\":true,\"op\":\"shutdown\"},\"ok\":true}");
+    // A *session* decoder must not misread an ack (no `reply` field).
+    assert!(parse_response(&ack).is_err());
 }
 
 #[test]

@@ -1,0 +1,258 @@
+//! Operability tests against the real `repro` binary: a live
+//! `serve --listen` process driven over loopback with the thin client
+//! (`repro call` / `repro admin`), then shut down two ways — the
+//! `shutdown` RPC and SIGTERM — which must persist **byte-identical**
+//! artifact directories (same teardown code path, proven here at the
+//! file level). A warm restart from either directory re-tunes nothing
+//! and serves the warmed session for 0.0 charged device-seconds.
+//!
+//! Unix-only: the signal half is the point, and CI runs Linux.
+#![cfg(unix)]
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_repro");
+const TRIALS: &str = "16";
+const SEED: &str = "5";
+const SESSION: &str = "{\"model\":\"ResNet18\",\"budget_s\":0}";
+
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+
+/// A spawned server that is killed (not leaked) if a test panics.
+struct Server {
+    child: Option<Child>,
+    pub addr: String,
+    pub lines: Receiver<String>,
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Server {
+    fn spawn(cache_dir: &Path) -> Server {
+        let mut child = Command::new(BIN)
+            .args(["serve", "--listen", "127.0.0.1:0", "--trials", TRIALS, "--seed", SEED])
+            .args(["--shards", "2", "--cache-dir"])
+            .arg(cache_dir)
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn repro serve");
+        let stderr = child.stderr.take().expect("piped stderr");
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                if tx.send(line).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut server = Server { child: Some(child), addr: String::new(), lines: rx };
+        let listen = server.wait_for("listening on ", 120);
+        server.addr = listen
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .expect("address in listen line")
+            .to_string();
+        server
+    }
+
+    /// Wait until a stderr line contains `needle`, returning it.
+    fn wait_for(&self, needle: &str, timeout_s: u64) -> String {
+        let deadline = Instant::now() + Duration::from_secs(timeout_s);
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.lines.recv_timeout(left) {
+                Ok(line) if line.contains(needle) => return line,
+                Ok(_) => continue,
+                Err(RecvTimeoutError::Timeout) => panic!("timed out waiting for `{needle}`"),
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("server exited before printing `{needle}`")
+                }
+            }
+        }
+    }
+
+    fn pid(&self) -> i32 {
+        self.child.as_ref().expect("child running").id() as i32
+    }
+
+    /// Wait for the child to exit on its own and assert success.
+    fn wait_success(&mut self, timeout_s: u64) {
+        let mut child = self.child.take().expect("child running");
+        let deadline = Instant::now() + Duration::from_secs(timeout_s);
+        loop {
+            match child.try_wait().expect("try_wait") {
+                Some(status) => {
+                    assert!(status.success(), "server exited with {status}");
+                    return;
+                }
+                None if Instant::now() >= deadline => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    panic!("server did not exit within {timeout_s}s");
+                }
+                None => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+    }
+}
+
+/// Run the thin client; return (exit-ok, stdout).
+fn repro(args: &[&str]) -> (bool, String) {
+    let out = Command::new(BIN).args(args).output().expect("run repro");
+    (out.status.success(), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_serve_ops_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Every file in `dir`, name -> bytes.
+fn dir_snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    std::fs::read_dir(dir)
+        .expect("read cache dir")
+        .map(|e| {
+            let e = e.expect("dir entry");
+            let name = e.file_name().to_string_lossy().into_owned();
+            let bytes = std::fs::read(e.path()).expect("read artifact");
+            (name, bytes)
+        })
+        .collect()
+}
+
+/// Boot a server on `dir`, run the shared operator script (one session
+/// + stats), then stop it via the RPC or SIGTERM and wait for a clean
+/// exit. Both paths must leave identical bytes behind.
+fn serve_and_stop(dir: &Path, via_signal: bool) {
+    let mut server = Server::spawn(dir);
+    server.wait_for("zoo complete", 600);
+
+    let (ok, reply) = repro(&["call", &server.addr, SESSION]);
+    assert!(ok, "session call failed: {reply}");
+    assert!(reply.contains("\"ok\":true"), "unexpected session reply: {reply}");
+    assert!(reply.contains("\"epoch\":11"), "full zoo must be live: {reply}");
+
+    let (ok, stats) = repro(&["admin", &server.addr, "stats"]);
+    assert!(ok, "stats failed: {stats}");
+    assert!(stats.contains("\"complete\":true"), "zoo must report complete: {stats}");
+
+    if via_signal {
+        assert_eq!(unsafe { kill(server.pid(), 15) }, 0, "SIGTERM delivery");
+    } else {
+        let (ok, ack) = repro(&["admin", &server.addr, "shutdown"]);
+        assert!(ok, "shutdown RPC failed: {ack}");
+        assert!(ack.contains("\"draining\":true"), "unexpected ack: {ack}");
+    }
+    server.wait_success(120);
+}
+
+#[test]
+fn rpc_shutdown_and_sigterm_persist_byte_identical_state() {
+    let rpc_dir = tmp_dir("rpc");
+    let sig_dir = tmp_dir("sig");
+    serve_and_stop(&rpc_dir, false);
+    serve_and_stop(&sig_dir, true);
+
+    let rpc_files = dir_snapshot(&rpc_dir);
+    let sig_files = dir_snapshot(&sig_dir);
+    assert_eq!(
+        rpc_files.keys().collect::<Vec<_>>(),
+        sig_files.keys().collect::<Vec<_>>(),
+        "both exits must persist the same artifact set"
+    );
+    assert!(rpc_files.contains_key("manifest.json"));
+    assert!(rpc_files.keys().any(|f| f.starts_with("store_")), "merged store persisted");
+    assert!(rpc_files.keys().any(|f| f.starts_with("mcache_")), "warmed cache persisted");
+    for (name, bytes) in &rpc_files {
+        assert_eq!(
+            bytes,
+            &sig_files[name],
+            "{name}: SIGTERM persistence drifted from the shutdown RPC's"
+        );
+    }
+
+    // Warm restart from the signal-persisted dir: zero trials, zero
+    // charged device-seconds — the session pairs the first server
+    // measured are served from the persisted cache.
+    let mut warm = Server::spawn(&sig_dir);
+    warm.wait_for("zoo complete", 600);
+    let (ok, stats) = repro(&["admin", &warm.addr, "stats"]);
+    assert!(ok, "warm stats failed: {stats}");
+    assert!(stats.contains("\"models_tuned\":0"), "warm restart re-tuned: {stats}");
+    assert!(stats.contains("\"trials_run\":0"), "warm restart ran trials: {stats}");
+    let (ok, reply) = repro(&["call", &warm.addr, SESSION]);
+    assert!(ok, "warm session failed: {reply}");
+    assert!(
+        reply.contains("\"charged_search_time_s\":0,"),
+        "warm session must charge nothing: {reply}"
+    );
+    let (ok, _) = repro(&["admin", &warm.addr, "shutdown"]);
+    assert!(ok);
+    warm.wait_success(120);
+
+    std::fs::remove_dir_all(&rpc_dir).ok();
+    std::fs::remove_dir_all(&sig_dir).ok();
+}
+
+#[test]
+fn republish_bumps_epoch_and_changes_nothing_else() {
+    let dir = tmp_dir("republish");
+    let mut server = Server::spawn(&dir);
+    server.wait_for("zoo complete", 600);
+
+    // Serve the session twice and keep the WARM payload as the
+    // baseline: `charged_search_time_s` is 0 once the shared cache is
+    // warm, so warm-vs-warm is an exact byte comparison (the first
+    // reply legitimately differs — someone had to pay for the misses).
+    let (ok, cold) = repro(&["call", &server.addr, SESSION]);
+    assert!(ok, "session failed: {cold}");
+    let (ok, before) = repro(&["call", &server.addr, SESSION]);
+    assert!(ok, "warm session failed: {before}");
+    assert!(before.contains("\"epoch\":11"), "{before}");
+    assert!(before.contains("\"charged_search_time_s\":0,"), "baseline must be warm: {before}");
+
+    // Republish a model whose tuning artifact just landed: the producer
+    // path re-loads it and swaps it in at epoch 12.
+    let (ok, ack) = repro(&["admin", &server.addr, "republish", "ResNet50"]);
+    assert!(ok, "republish failed: {ack}");
+    assert!(ack.contains("\"epoch\":12"), "republish must land at epoch+1: {ack}");
+    assert!(ack.contains("\"origin\":\"artifact\""), "fresh artifact should re-load: {ack}");
+
+    // Same request again: identical reply except the epoch stamp —
+    // a republish of identical tunings changes no served record.
+    let (ok, after) = repro(&["call", &server.addr, SESSION]);
+    assert!(ok, "post-republish session failed: {after}");
+    assert_eq!(
+        after,
+        before.replace("\"epoch\":11", "\"epoch\":12"),
+        "republish changed something besides the epoch"
+    );
+
+    // Unknown models are typed errors, and the loop survives them.
+    let (ok, err) = repro(&["admin", &server.addr, "republish", "Zarniwoop"]);
+    assert!(!ok, "unknown model must fail the client");
+    assert!(err.contains("unknown_model"), "{err}");
+
+    let (ok, _) = repro(&["admin", &server.addr, "shutdown"]);
+    assert!(ok);
+    server.wait_success(120);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -11,7 +11,7 @@ use transfer_tuning::artifact::{self, ArtifactStore};
 use transfer_tuning::autosched::{tune_model, TuneOptions};
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::ir::{KernelBuilder, ModelGraph};
-use transfer_tuning::report::{ExperimentConfig, ZooProducer};
+use transfer_tuning::report::{republish_model, ExperimentConfig, ZooProducer};
 use transfer_tuning::service::rpc::{handle_request, RpcDefaults};
 use transfer_tuning::service::{ScheduleService, SessionRequest};
 use transfer_tuning::transfer::ScheduleStore;
@@ -136,6 +136,62 @@ fn sessions_stream_in_with_epoch_provenance() {
     for (late, early) in at3.choices.iter().zip(&at2.choices) {
         assert!(late.standalone_s <= early.standalone_s + 1e-12);
     }
+}
+
+#[test]
+fn republish_lands_at_epoch_plus_one_and_replies_differ_only_in_epoch() {
+    // Stream the full zoo in, take a reference reply, then republish
+    // one source: the service must answer at epoch+1 with the same
+    // records (the tuner is deterministic, so a refresh of unchanged
+    // inputs changes provenance, never content). Through the wire
+    // codec, the replies differ in the epoch stamp alone.
+    let service = ScheduleService::empty(4);
+    let mut producer = ZooProducer::for_models(zoo_models(), config(), None);
+    while producer.publish_next(&service, &mut |_| {}).is_some() {}
+    assert_eq!(service.epoch(), 3);
+    let before = wire_reply(&service, "{\"model\":\"StreamTarget\"}");
+
+    let (epoch, cost) = republish_model(
+        model("ModelA", 512),
+        config(),
+        None,
+        &service,
+        &mut |_| {},
+    );
+    assert_eq!(epoch, 4, "republish is one more epoch");
+    assert_eq!(cost.models_tuned, 1, "no artifact store here: a republish re-tunes");
+    assert_eq!(service.epoch(), 4);
+    assert_eq!(service.live_sources().len(), 3, "same source set, refreshed");
+
+    let after = wire_reply(&service, "{\"model\":\"StreamTarget\"}");
+    assert_eq!(
+        after,
+        before.replace("\"epoch\":3", "\"epoch\":4"),
+        "a republish of identical tunings may change only the epoch stamp"
+    );
+
+    // With an artifact store, the same republish re-loads instead.
+    let dir: PathBuf = std::env::temp_dir().join("tt_streaming_republish");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut artifacts = ArtifactStore::open(&dir).expect("open artifact dir");
+    let (_, warm_cost) = republish_model(
+        model("ModelA", 512),
+        config(),
+        Some(&mut artifacts),
+        &service,
+        &mut |_| {},
+    );
+    assert_eq!(warm_cost.models_tuned, 1, "first artifact-backed republish persists");
+    let (_, warm_cost2) = republish_model(
+        model("ModelA", 512),
+        config(),
+        Some(&mut artifacts),
+        &service,
+        &mut |_| {},
+    );
+    assert_eq!(warm_cost2.models_from_artifacts, 1, "second republish re-loads");
+    assert_eq!(warm_cost2.trials_run, 0);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
