@@ -25,7 +25,13 @@ fn main() {
     let device = DeviceProfile::xeon_e5_2620();
     let t0 = std::time::Instant::now();
     let zoo = Zoo::build(
-        ExperimentConfig { trials, seed: 0xA45, device: device.clone(), jobs: 0 },
+        ExperimentConfig {
+            trials,
+            seed: 0xA45,
+            device: device.clone(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |l| eprintln!("  {l}"),
     );
 

@@ -88,7 +88,7 @@ fn main() {
         &server,
         "ResNet50",
         seed,
-        &TransferOptions { cross_class: true },
+        &TransferOptions { cross_class: true, ..Default::default() },
     );
     let f_kernels = target.kernels_of_class("conv2d_bias_add_relu");
     let covered = |r: &transfer_tuning::transfer::TransferResult| {

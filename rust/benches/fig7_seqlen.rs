@@ -8,8 +8,13 @@ fn main() {
     let trials: usize =
         std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let t0 = std::time::Instant::now();
-    let config =
-        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620(), jobs: 0 };
+    let config = ExperimentConfig {
+        trials,
+        seed: 0xA45,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+        speculative_keep: 1.0,
+    };
     let table = figures::fig7(&config, |l| eprintln!("  {l}"));
     print!("{}", table.render());
     table.write_csv(std::path::Path::new("results"), "fig7").ok();

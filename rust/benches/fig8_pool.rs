@@ -8,7 +8,13 @@ fn main() {
         std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let t0 = std::time::Instant::now();
     let zoo = Zoo::build(
-        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620(), jobs: 0 },
+        ExperimentConfig {
+            trials,
+            seed: 0xA45,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |l| eprintln!("  {l}"),
     );
     let table = figures::fig8(&zoo);

@@ -30,6 +30,7 @@ fn build(trials: usize, jobs: usize, artifacts: Option<&mut ArtifactStore>) -> (
         seed: 0xA45,
         device: DeviceProfile::xeon_e5_2620(),
         jobs,
+        speculative_keep: 1.0,
     };
     let t0 = Instant::now();
     let zoo = Zoo::build_incremental(config, artifacts, |_| {});

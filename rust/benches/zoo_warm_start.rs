@@ -24,8 +24,13 @@ use transfer_tuning::util::table::Table;
 fn main() {
     let trials: usize =
         std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(150);
-    let config =
-        ExperimentConfig { trials, seed: 0xA45, device: DeviceProfile::xeon_e5_2620(), jobs: 0 };
+    let config = ExperimentConfig {
+        trials,
+        seed: 0xA45,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+        speculative_keep: 1.0,
+    };
     let dir = std::env::temp_dir().join("tt_bench_zoo_warm_start");
     let _ = std::fs::remove_dir_all(&dir);
 

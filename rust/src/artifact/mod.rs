@@ -87,32 +87,57 @@ fn keyed(parts: &[&[u8]]) -> u64 {
     fnv1a(&bytes)
 }
 
-/// Key of one model's tuning artifact.
-pub fn tuning_key(model: &str, device: &DeviceProfile, trials: usize, seed: u64) -> u64 {
-    keyed(&[
+/// Key of one model's tuning artifact. `keep` is the draft-then-verify
+/// keep fraction the tuning ran under; the exact path (`keep = 1.0`)
+/// appends nothing, so pre-existing artifacts keep their keys, while a
+/// pruned run keys separately and can never be served for an exact one.
+pub fn tuning_key(model: &str, device: &DeviceProfile, trials: usize, seed: u64, keep: f64) -> u64 {
+    let trials_b = (trials as u64).to_le_bytes();
+    let seed_b = seed.to_le_bytes();
+    let version_b = ARTIFACT_FORMAT_VERSION.to_le_bytes();
+    let keep_b = keep.to_bits().to_le_bytes();
+    let mut parts: Vec<&[u8]> = vec![
         b"tuning",
         model.as_bytes(),
         device.name.as_bytes(),
-        &(trials as u64).to_le_bytes(),
-        &seed.to_le_bytes(),
-        &ARTIFACT_FORMAT_VERSION.to_le_bytes(),
-    ])
+        &trials_b,
+        &seed_b,
+        &version_b,
+    ];
+    if keep.to_bits() != 1.0f64.to_bits() {
+        parts.push(&keep_b);
+    }
+    keyed(&parts)
 }
 
 /// Key of zoo-level artifacts (merged schedule store, measurement
 /// cache): the sorted model-name set plus the shared configuration.
-pub fn zoo_key(model_names: &[String], device: &DeviceProfile, trials: usize, seed: u64) -> u64 {
+pub fn zoo_key(
+    model_names: &[String],
+    device: &DeviceProfile,
+    trials: usize,
+    seed: u64,
+    keep: f64,
+) -> u64 {
     let mut names: Vec<&str> = model_names.iter().map(|s| s.as_str()).collect();
     names.sort_unstable();
     let joined = names.join("\u{1f}");
-    keyed(&[
+    let trials_b = (trials as u64).to_le_bytes();
+    let seed_b = seed.to_le_bytes();
+    let version_b = ARTIFACT_FORMAT_VERSION.to_le_bytes();
+    let keep_b = keep.to_bits().to_le_bytes();
+    let mut parts: Vec<&[u8]> = vec![
         b"zoo",
         joined.as_bytes(),
         device.name.as_bytes(),
-        &(trials as u64).to_le_bytes(),
-        &seed.to_le_bytes(),
-        &ARTIFACT_FORMAT_VERSION.to_le_bytes(),
-    ])
+        &trials_b,
+        &seed_b,
+        &version_b,
+    ];
+    if keep.to_bits() != 1.0f64.to_bits() {
+        parts.push(&keep_b);
+    }
+    keyed(&parts)
 }
 
 /// Load/save counters — the artifact-level analogue of `CacheStats`.
@@ -599,17 +624,23 @@ mod tests {
     fn keys_separate_every_configuration_axis() {
         let xeon = DeviceProfile::xeon_e5_2620();
         let edge = DeviceProfile::cortex_a72();
-        let base = tuning_key("ResNet18", &xeon, 2000, 7);
-        assert_eq!(base, tuning_key("ResNet18", &xeon, 2000, 7), "deterministic");
-        assert_ne!(base, tuning_key("ResNet50", &xeon, 2000, 7));
-        assert_ne!(base, tuning_key("ResNet18", &edge, 2000, 7));
-        assert_ne!(base, tuning_key("ResNet18", &xeon, 2001, 7));
-        assert_ne!(base, tuning_key("ResNet18", &xeon, 2000, 8));
+        let base = tuning_key("ResNet18", &xeon, 2000, 7, 1.0);
+        assert_eq!(base, tuning_key("ResNet18", &xeon, 2000, 7, 1.0), "deterministic");
+        assert_ne!(base, tuning_key("ResNet50", &xeon, 2000, 7, 1.0));
+        assert_ne!(base, tuning_key("ResNet18", &edge, 2000, 7, 1.0));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2001, 7, 1.0));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2000, 8, 1.0));
+        // A pruned run keys separately from the exact one, and keep
+        // fractions key separately from each other.
+        let pruned = tuning_key("ResNet18", &xeon, 2000, 7, 0.25);
+        assert_ne!(base, pruned);
+        assert_ne!(pruned, tuning_key("ResNet18", &xeon, 2000, 7, 0.5));
         // Zoo keys are order-independent in the model set.
-        let a = zoo_key(&["B".into(), "A".into()], &xeon, 100, 1);
-        let b = zoo_key(&["A".into(), "B".into()], &xeon, 100, 1);
+        let a = zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 1.0);
+        let b = zoo_key(&["A".into(), "B".into()], &xeon, 100, 1, 1.0);
         assert_eq!(a, b);
-        assert_ne!(a, zoo_key(&["A".into()], &xeon, 100, 1));
+        assert_ne!(a, zoo_key(&["A".into()], &xeon, 100, 1, 1.0));
+        assert_ne!(a, zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 0.25));
     }
 
     #[test]
@@ -617,7 +648,7 @@ mod tests {
         let root = tmp_root("roundtrip");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
 
         let mut store = ArtifactStore::open(&root).unwrap();
         assert!(store.load_tuning(key).is_none());
@@ -639,7 +670,7 @@ mod tests {
         let root = tmp_root("corrupt");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
         let mut store = ArtifactStore::open(&root).unwrap();
         store.save_tuning(key, &res).unwrap();
 
@@ -660,7 +691,7 @@ mod tests {
         let root = tmp_root("stale");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
         let mut store = ArtifactStore::open(&root).unwrap();
         store.save_tuning(key, &res).unwrap();
 
@@ -694,7 +725,7 @@ mod tests {
         mcache.insert(42, Some(1e-3));
         mcache.insert(43, None);
 
-        let zk = zoo_key(&[g.name.clone()], &xeon, 32, 0xA45);
+        let zk = zoo_key(&[g.name.clone()], &xeon, 32, 0xA45, 1.0);
         let mut store = ArtifactStore::open(&root).unwrap();
         // Both zoo-level artifacts live under the same zoo key (the
         // store derives kind-scoped manifest rows internally).

@@ -53,6 +53,16 @@ pub struct TuneOptions {
     /// stay serial, so results are bit-identical at any value (see
     /// `crate::coordinator::jobs`).
     pub jobs: usize,
+    /// Draft-then-verify keep fraction. With a trained cost model, each
+    /// measurement batch is first ranked by the model alone (features +
+    /// `CostModel::predict`, no simulator pass) and only the top
+    /// `speculative_keep` fraction of valid candidates reaches the
+    /// simulate/measure stage. 1.0 (the default) disables the draft
+    /// stage entirely and is byte-identical to the exact path. Values
+    /// in (0, 1) change which candidates are measured — and thus every
+    /// downstream RNG draw — so the keep fraction is part of every
+    /// artifact and measure-cache key (see `crate::artifact`).
+    pub speculative_keep: f64,
 }
 
 impl Default for TuneOptions {
@@ -67,6 +77,7 @@ impl Default for TuneOptions {
             train_window: 512,
             train_cost_s: 1.5,
             jobs: 0,
+            speculative_keep: 1.0,
         }
     }
 }
@@ -245,6 +256,15 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         })
     };
 
+    /// What the measurement stage decided for one batch slot: rejected
+    /// by the compiler, rejected by the draft scorer, or simulated and
+    /// ready for its (serial) measurement draw.
+    enum Prep {
+        Invalid,
+        Pruned,
+        Measured(f64, [f64; NUM_FEATURES]),
+    }
+
     let mut round_robin = 0usize;
     while trials_used < opts.trials {
         // ---- task selection (gradient allocation with warmup) ----------
@@ -355,22 +375,99 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         // jitter and every mutable update run in batch order — exactly
         // the RNG draws a serial loop makes, so the round is
         // bit-identical at any thread count.
+        //
+        // With `speculative_keep < 1.0` and a trained model, a draft
+        // stage fronts the verify stage: candidates are ranked by the
+        // model alone (features + predict, no simulate) and only the
+        // top keep-fraction reaches the simulator and the ledger.
+        // Pruned candidates still consume trial budget (they were
+        // proposed and stay in `measured`, never to be retried) but
+        // charge nothing and draw nothing — skipped draws shift every
+        // later seeded draw, which is why the keep fraction is part of
+        // every artifact and measure-cache key.
         let prev_best = if task.best_cost.is_finite() { task.best_cost } else { task.untuned_cost };
-        let prepared: Vec<Option<(f64, [f64; NUM_FEATURES])>> =
+        let speculative = opts.speculative_keep < 1.0 && task.model.is_trained();
+        let preps: Vec<Prep> = if !speculative {
+            // Exact path (keep = 1.0, or model not yet trained): every
+            // valid candidate is simulated — byte-identical to the
+            // pre-speculative pipeline.
             par_map_indexed(&batch, opts.jobs, |_, s| {
                 apply(s, kernel).ok().map(|nest| {
                     (simulate(kernel, &nest, profile).total_s, features(kernel, &nest, profile))
                 })
+            })
+            .into_iter()
+            .map(|p| match p {
+                None => Prep::Invalid,
+                Some((sim_s, feats)) => Prep::Measured(sim_s, feats),
+            })
+            .collect()
+        } else {
+            // Draft: apply + features + predict only (pure, parallel,
+            // index-ordered slots — no simulator pass).
+            let model = &task.model;
+            let drafts = par_map_indexed(&batch, opts.jobs, |_, s| {
+                apply(s, kernel).ok().map(|nest| {
+                    let feats = features(kernel, &nest, profile);
+                    let score = model.predict(&feats);
+                    (nest, feats, score)
+                })
             });
-        for (s, prep) in batch.into_iter().zip(prepared) {
+            // Rank valid drafts by (score desc, index asc — the
+            // deterministic tie-break) and keep the top fraction,
+            // always at least one when any candidate is valid.
+            let mut order: Vec<usize> =
+                (0..drafts.len()).filter(|&i| drafts[i].is_some()).collect();
+            let n_valid = order.len();
+            order.sort_by(|&a, &b| {
+                let sa = drafts[a].as_ref().expect("valid draft").2;
+                let sb = drafts[b].as_ref().expect("valid draft").2;
+                sb.partial_cmp(&sa).expect("finite draft scores").then(a.cmp(&b))
+            });
+            let n_keep = if n_valid == 0 {
+                0
+            } else {
+                ((opts.speculative_keep * n_valid as f64).ceil() as usize).clamp(1, n_valid)
+            };
+            let survivors: Vec<usize> = {
+                let mut kept: Vec<usize> = order.into_iter().take(n_keep).collect();
+                kept.sort_unstable();
+                kept
+            };
+            // Verify: the simulator pass, survivors only, reusing each
+            // draft's applied nest.
+            let nests: Vec<_> =
+                survivors.iter().map(|&i| drafts[i].as_ref().expect("valid draft")).collect();
+            let sims: Vec<f64> =
+                par_map_indexed(&nests, opts.jobs, |_, d| simulate(kernel, &d.0, profile).total_s);
+            let mut sim_of: HashMap<usize, f64> =
+                survivors.into_iter().zip(sims).collect();
+            drafts
+                .into_iter()
+                .enumerate()
+                .map(|(i, d)| match d {
+                    None => Prep::Invalid,
+                    Some((_nest, feats, _score)) => match sim_of.remove(&i) {
+                        Some(sim_s) => Prep::Measured(sim_s, feats),
+                        None => Prep::Pruned,
+                    },
+                })
+                .collect()
+        };
+        for (s, prep) in batch.into_iter().zip(preps) {
             trials_used += 1;
             match prep {
-                None => {
+                Prep::Invalid => {
                     // Invalid candidates still cost codegen time before
                     // the compiler rejects them.
                     ledger += 0.3 * profile.measure_overhead_s + profile.rpc_overhead_s * 0.3;
                 }
-                Some((sim_s, feats)) => {
+                Prep::Pruned => {
+                    // Draft-rejected: the trial is spent but the device
+                    // never runs it — no charge, no measurement draw,
+                    // no training sample.
+                }
+                Prep::Measured(sim_s, feats) => {
                     let cost = measure_from_sim(sim_s, profile, &mut task.rng);
                     ledger += profile.measure_overhead_s
                         + profile.rpc_overhead_s
@@ -518,6 +615,72 @@ mod tests {
                 "best schedules drifted at jobs={jobs}"
             );
         }
+    }
+
+    #[test]
+    fn speculative_keep_prunes_charges_but_spends_the_whole_budget() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let exact = tune_model(&g, &prof, &tiny_opts(64));
+        let spec = tune_model(
+            &g,
+            &prof,
+            &TuneOptions { speculative_keep: 0.25, ..tiny_opts(64) },
+        );
+        // Pruned candidates still consume trial budget...
+        assert_eq!(spec.trials_used, exact.trials_used);
+        // ...but never reach the device, so the charged ledger shrinks.
+        assert!(
+            spec.search_time_s < exact.search_time_s,
+            "draft stage never pruned: {} vs {}",
+            spec.search_time_s,
+            exact.search_time_s
+        );
+        // Quality parity: the draft scorer may reorder exploration but
+        // must not wreck the final schedule.
+        let e = exact.final_model_time(&g, &prof);
+        let s = spec.final_model_time(&g, &prof);
+        assert!(s <= e * 2.0, "speculative quality collapsed: {s} vs exact {e}");
+    }
+
+    #[test]
+    fn speculative_keep_bit_identical_at_any_job_count() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let spec_opts = |jobs| TuneOptions { speculative_keep: 0.5, jobs, ..tiny_opts(64) };
+        let reference = tune_model(&g, &prof, &spec_opts(1));
+        for jobs in [2, 8] {
+            let par = tune_model(&g, &prof, &spec_opts(jobs));
+            assert_eq!(
+                par.search_time_s.to_bits(),
+                reference.search_time_s.to_bits(),
+                "speculative ledger drifted at jobs={jobs}"
+            );
+            assert_eq!(par.trials_used, reference.trials_used);
+            assert_eq!(
+                par.final_model_time(&g, &prof).to_bits(),
+                reference.final_model_time(&g, &prof).to_bits(),
+                "speculative best schedules drifted at jobs={jobs}"
+            );
+        }
+    }
+
+    #[test]
+    fn speculative_keep_one_is_the_exact_path() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let exact = tune_model(&g, &prof, &tiny_opts(48));
+        let kept = tune_model(
+            &g,
+            &prof,
+            &TuneOptions { speculative_keep: 1.0, ..tiny_opts(48) },
+        );
+        assert_eq!(exact.search_time_s.to_bits(), kept.search_time_s.to_bits());
+        assert_eq!(exact.trials_used, kept.trials_used);
+        assert_eq!(
+            exact.final_model_time(&g, &prof).to_bits(),
+            kept.final_model_time(&g, &prof).to_bits()
+        );
     }
 
     #[test]

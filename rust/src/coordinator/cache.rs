@@ -95,6 +95,19 @@ pub fn pair_key(kernel: &Kernel, sched: &Schedule, seed: u64, profile: &DevicePr
     sweep_key(content_key(kernel, sched), seed, profile)
 }
 
+/// Fold a draft-then-verify keep fraction into a measurement seed, so a
+/// speculative sweep's cache entries can never collide with (or be
+/// served to) an exact sweep at the same seed. `keep = 1.0` — the exact
+/// path — returns the seed unchanged, keeping every legacy key and
+/// golden fixture byte-identical; any other keep value mixes its exact
+/// bit pattern in deterministically.
+pub fn speculative_seed(seed: u64, keep: f64) -> u64 {
+    if keep.to_bits() == 1.0f64.to_bits() {
+        return seed;
+    }
+    seed ^ keep.to_bits().rotate_left(17).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// Hit/miss/eviction counters. `hits` are lookups served from the map;
 /// `dedup_hits` are duplicates collapsed within a single batch by the
 /// executor before any measurement happened (same amortization, tracked
@@ -434,6 +447,17 @@ mod tests {
             pair_key(&a, &s, 1, &edge),
             "a runtime is a property of the device too"
         );
+    }
+
+    #[test]
+    fn speculative_seed_separates_keep_fractions() {
+        assert_eq!(speculative_seed(0xA45, 1.0), 0xA45, "keep=1.0 keeps legacy keys");
+        let quarter = speculative_seed(0xA45, 0.25);
+        let half = speculative_seed(0xA45, 0.5);
+        assert_ne!(quarter, 0xA45);
+        assert_ne!(half, 0xA45);
+        assert_ne!(quarter, half, "distinct keeps get distinct key spaces");
+        assert_eq!(quarter, speculative_seed(0xA45, 0.25), "deterministic");
     }
 
     #[test]

@@ -64,7 +64,22 @@ pub fn effective_jobs(requested: usize) -> usize {
     if env > 0 {
         return env;
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    match std::thread::available_parallelism() {
+        Ok(n) => n.get(),
+        Err(err) => {
+            // Logged once per process: results are identical at any
+            // width, so a mis-sized pool is otherwise invisible — only
+            // wall-clock (and CI timings) silently degrade.
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "[jobs] available_parallelism failed ({err}); assuming 4 workers \
+                     (set --jobs or TT_JOBS to size the pool explicitly)"
+                );
+            });
+            4
+        }
+    }
 }
 
 /// Deterministic indexed parallel map: applies `f` to every item on a
@@ -114,6 +129,22 @@ mod tests {
 
     #[test]
     fn resolution_always_positive() {
+        assert!(effective_jobs(0) >= 1);
+    }
+
+    #[test]
+    fn precedence_explicit_then_global_then_detected() {
+        // Explicit per-call request beats the process-global override...
+        set_global_jobs(3);
+        assert_eq!(effective_jobs(5), 5);
+        // ...the global override beats TT_JOBS and detection...
+        assert_eq!(effective_jobs(0), 3);
+        set_global_jobs(0);
+        // ...and with both unset, resolution falls through to TT_JOBS
+        // (OnceLock-latched at first use, so not assertable here) or
+        // detected parallelism — positive either way, even when
+        // `available_parallelism` fails and the logged 4-worker
+        // fallback kicks in.
         assert!(effective_jobs(0) >= 1);
     }
 

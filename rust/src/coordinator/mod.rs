@@ -19,8 +19,8 @@ pub mod pool;
 pub mod rpc;
 
 pub use cache::{
-    content_from_parts, content_key, pair_key, profile_key, sweep_key, CacheStats, MeasureCache,
-    Resolution,
+    content_from_parts, content_key, pair_key, profile_key, speculative_seed, sweep_key,
+    CacheStats, MeasureCache, Resolution,
 };
 pub use jobs::{effective_jobs, global_jobs, set_global_jobs};
 pub use ledger::Ledger;

@@ -75,6 +75,12 @@ struct Cli {
     /// replay). 0 = TT_JOBS env, else auto. Wall-clock only: results
     /// are bit-identical at any value.
     jobs: usize,
+    /// Draft-then-verify keep fraction in (0, 1]: each candidate batch
+    /// is ranked by the cost model and only the top fraction reaches
+    /// full simulation. 1.0 (default) = exact path, byte-identical to
+    /// builds without the flag. Unlike `--jobs` this changes results,
+    /// so it is part of every artifact and measurement-cache key.
+    speculative_keep: f64,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -98,6 +104,7 @@ fn parse_args() -> Result<Cli> {
         shards: 8,
         cache_budget: None,
         jobs: 0,
+        speculative_keep: 1.0,
     };
     while let Some(arg) = args.next() {
         let mut value = |name: &str| -> Result<String> {
@@ -122,6 +129,13 @@ fn parse_args() -> Result<Cli> {
             "--shards" => cli.shards = value("--shards")?.parse()?,
             "--cache-budget" => cli.cache_budget = Some(value("--cache-budget")?.parse()?),
             "--jobs" => cli.jobs = value("--jobs")?.parse()?,
+            "--speculative-keep" => {
+                let keep: f64 = value("--speculative-keep")?.parse()?;
+                if !(keep > 0.0 && keep <= 1.0) {
+                    bail!("--speculative-keep must be in (0, 1], got {keep}");
+                }
+                cli.speculative_keep = keep;
+            }
             other if !other.starts_with("--") => {
                 if cli.target.is_none() {
                     cli.target = Some(other.to_string());
@@ -248,6 +262,7 @@ fn build_zoo_with(cli: &Cli, artifacts: Option<&mut ArtifactStore>) -> Zoo {
             seed: cli.seed,
             device: cli.device.clone(),
             jobs: cli.jobs,
+            speculative_keep: cli.speculative_keep,
         },
         artifacts,
         |line| eprintln!("  {line}"),
@@ -356,6 +371,7 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
                 seed: cli.seed,
                 device: cli.device.clone(),
                 jobs: cli.jobs,
+                speculative_keep: cli.speculative_keep,
             };
             let t = figures::fig7(&config, |l| eprintln!("  {l}"));
             emit(&t, &cli.out, "fig7")?;
@@ -378,13 +394,19 @@ fn tune_cached(
     graph: &transfer_tuning::ir::ModelGraph,
     artifacts: &mut Option<ArtifactStore>,
 ) -> Result<transfer_tuning::autosched::TuningResult> {
-    let key = artifact::tuning_key(&graph.name, &cli.device, cli.trials, cli.seed);
+    let key =
+        artifact::tuning_key(&graph.name, &cli.device, cli.trials, cli.seed, cli.speculative_keep);
     if let Some(res) = artifacts.as_mut().and_then(|a| a.load_tuning(key)) {
         eprintln!("loaded {} from artifacts (0 trials run)", graph.name);
         return Ok(res);
     }
-    let opts =
-        TuneOptions { trials: cli.trials, seed: cli.seed, jobs: cli.jobs, ..Default::default() };
+    let opts = TuneOptions {
+        trials: cli.trials,
+        seed: cli.seed,
+        jobs: cli.jobs,
+        speculative_keep: cli.speculative_keep,
+        ..Default::default()
+    };
     eprintln!("tuning {} ({} unique kernels) ...", graph.name, graph.kernels.len());
     let res = tune_model(graph, &cli.device, &opts);
     if let Some(a) = artifacts.as_mut() {
@@ -476,6 +498,7 @@ fn cmd_show_schedule(cli: &Cli) -> Result<()> {
         trials: cli.trials.min(512),
         seed: cli.seed,
         jobs: cli.jobs,
+        speculative_keep: cli.speculative_keep,
         ..Default::default()
     };
     let mut solo = transfer_tuning::ir::ModelGraph::new("solo");
@@ -514,6 +537,7 @@ fn cmd_all(cli: &Cli) -> Result<()> {
         seed: cli.seed,
         device: cli.device.clone(),
         jobs: cli.jobs,
+        speculative_keep: cli.speculative_keep,
     };
     emit(&figures::fig7(&config, |l| eprintln!("  {l}")), &cli.out, "fig7")?;
 
@@ -563,7 +587,8 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
     let mut artifacts = open_artifacts(cli)?;
     let zoo = build_zoo_with(cli, artifacts.as_mut());
     let zoo_key = zoo.artifact_key();
-    let service = ScheduleService::from_zoo(zoo, cli.shards);
+    let service =
+        ScheduleService::from_zoo(zoo, cli.shards).with_speculative_keep(cli.speculative_keep);
 
     // Fan sessions across workers; replies land in request order.
     // Worker count follows the --jobs/TT_JOBS knob (host-parallelism
@@ -719,18 +744,26 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
         seed: cli.seed,
         device: cli.device.clone(),
         jobs: cli.jobs,
+        speculative_keep: cli.speculative_keep,
     };
     // Seed the serving cache from the persisted zoo-level measurement
     // cache (if any) BEFORE serving: a warm --cache-dir keeps serving
     // for free, and the save-on-exit below writes back a superset of
     // what was loaded, never a clobbered subset.
     let zoo_names: Vec<String> = models::all_models().iter().map(|m| m.name.clone()).collect();
-    let zoo_key = artifact::zoo_key(&zoo_names, &config.device, config.trials, config.seed);
+    let zoo_key = artifact::zoo_key(
+        &zoo_names,
+        &config.device,
+        config.trials,
+        config.seed,
+        config.effective_keep(),
+    );
     let warm_cache = artifacts
         .as_mut()
         .and_then(|a| a.load_measure_cache(zoo_key))
         .unwrap_or_default();
-    let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards);
+    let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards)
+        .with_speculative_keep(cli.speculative_keep);
     let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
 
     let state = Arc::new(ServeState {
@@ -1204,6 +1237,14 @@ FLAGS
                   workers. Purely a wall-clock knob — results are
                   bit-identical at any value. Default: TT_JOBS env var,
                   else all cores
+  --speculative-keep F
+                  draft-then-verify fraction in (0, 1]: each candidate
+                  batch is ranked by the cost model and only the top F
+                  reaches full simulation/measurement. 1.0 (default) is
+                  the exact path, byte-identical to runs without the
+                  flag. Unlike --jobs this changes results, so pruned
+                  runs live under their own artifact and measurement-
+                  cache keys
 ";
 
 fn main() -> Result<()> {

@@ -34,6 +34,27 @@ pub struct ExperimentConfig {
     /// (`rust/tests/property_parallel.rs`), which is why it is
     /// deliberately NOT part of any artifact key.
     pub jobs: usize,
+    /// Draft-then-verify keep fraction (`--speculative-keep`): each
+    /// tuning round's candidate batch is ranked by the cost model and
+    /// only the top fraction reaches full simulation; transfer sweeps
+    /// prune span-wise the same way. 1.0 (the default) is the exact
+    /// path. Unlike `jobs`, this *does* change results, so it is part
+    /// of every artifact and measurement-cache key (pruned runs miss an
+    /// exact cache instead of colliding with it).
+    pub speculative_keep: f64,
+}
+
+impl ExperimentConfig {
+    /// The keep fraction with the exact path normalized to exactly 1.0
+    /// (values above 1.0 cannot prune, so they must share the exact
+    /// path's keys bit-for-bit).
+    pub fn effective_keep(&self) -> f64 {
+        if self.speculative_keep < 1.0 {
+            self.speculative_keep
+        } else {
+            1.0
+        }
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -43,6 +64,7 @@ impl Default for ExperimentConfig {
             seed: 0xA45,
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
+            speculative_keep: 1.0,
         }
     }
 }
@@ -204,6 +226,7 @@ impl<'a> ZooProducer<'a> {
                 &self.config.device,
                 self.config.trials,
                 self.config.seed,
+                self.config.effective_keep(),
             );
             if let Some(res) = self.artifacts.as_deref_mut().and_then(|a| a.load_tuning(key)) {
                 self.ready.insert(index, (res, TuneOrigin::Artifact));
@@ -215,6 +238,7 @@ impl<'a> ZooProducer<'a> {
                 trials: self.config.trials,
                 seed: self.config.seed,
                 jobs: inner_jobs,
+                speculative_keep: self.config.effective_keep(),
                 ..Default::default()
             };
             let tx = self
@@ -258,6 +282,7 @@ impl<'a> ZooProducer<'a> {
             &self.config.device,
             self.config.trials,
             self.config.seed,
+            self.config.effective_keep(),
         )
     }
 
@@ -308,7 +333,13 @@ impl<'a> ZooProducer<'a> {
                 self.stats.trials_run += res.trials_used;
                 self.stats.tuning_seconds_charged += res.search_time_s;
                 let cfg = &self.config;
-                let key = artifact::tuning_key(&m.name, &cfg.device, cfg.trials, cfg.seed);
+                let key = artifact::tuning_key(
+                    &m.name,
+                    &cfg.device,
+                    cfg.trials,
+                    cfg.seed,
+                    cfg.effective_keep(),
+                );
                 if let Some(a) = self.artifacts.as_deref_mut() {
                     if let Err(e) = a.save_tuning(key, &res) {
                         progress(&format!("warn: could not persist tuning of {}: {e}", m.name));
@@ -441,6 +472,7 @@ impl Zoo {
             &self.config.device,
             self.config.trials,
             self.config.seed,
+            self.config.effective_keep(),
         )
     }
 
@@ -480,7 +512,10 @@ impl Zoo {
             &self.config.device,
             &src,
             self.config.seed,
-            &TransferOptions::default(),
+            &TransferOptions {
+                speculative_keep: self.config.effective_keep(),
+                ..Default::default()
+            },
             &mut self.cache.borrow_mut(),
         ))
     }
@@ -505,7 +540,10 @@ impl Zoo {
             &self.config.device,
             "mixed",
             self.config.seed,
-            &TransferOptions::default(),
+            &TransferOptions {
+                speculative_keep: self.config.effective_keep(),
+                ..Default::default()
+            },
             &mut self.cache.borrow_mut(),
         )
     }

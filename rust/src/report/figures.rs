@@ -256,6 +256,7 @@ mod tests {
                 seed: 11,
                 device: DeviceProfile::xeon_e5_2620(),
                 jobs: 0,
+                speculative_keep: 1.0,
             },
             |_| {},
         )

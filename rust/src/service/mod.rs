@@ -49,17 +49,18 @@ pub mod shard;
 pub use shard::{measure_pairs_sharded, ShardedMeasureCache};
 
 use crate::autosched::TuningResult;
-use crate::coordinator::{CacheStats, Ledger, MeasureCache};
+use crate::coordinator::{speculative_seed, CacheStats, Ledger, MeasureCache};
 use crate::device::{model_time, DeviceProfile};
-use crate::ir::ModelGraph;
+use crate::ir::{Kernel, ModelGraph};
 use crate::report::Zoo;
 use crate::sched::Schedule;
-use crate::transfer::engine::assemble_transfer_result;
+use crate::transfer::engine::{assemble_transfer_result, speculative_sweep};
 use crate::transfer::{
     rank_tuning_models_indexed, ScheduleStore, SourceClassIndex, StoreView, SweepPlan,
     TransferOptions, TransferResult,
 };
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// One tenant's request.
@@ -216,6 +217,13 @@ impl Snapshot {
 struct Inner {
     snapshot: RwLock<Arc<Snapshot>>,
     cache: ShardedMeasureCache,
+    /// Draft-then-verify keep fraction for every session sweep, stored
+    /// as f64 bits (1.0 = exact path). Server-level configuration — not
+    /// part of the wire protocol; replies stay a pure function of
+    /// (target, device, budget, seed, epoch) under the server's
+    /// configured keep, and pruned sweeps live in their own cache key
+    /// space (see [`crate::coordinator::cache::speculative_seed`]).
+    speculative_keep: AtomicU64,
 }
 
 /// A shareable handle to the serving state (cheap to clone; all clones
@@ -233,6 +241,7 @@ impl ScheduleService {
             inner: Arc::new(Inner {
                 snapshot: RwLock::new(Arc::new(Snapshot::from_store(store, models))),
                 cache: ShardedMeasureCache::new(shards),
+                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
             }),
         }
     }
@@ -252,6 +261,7 @@ impl ScheduleService {
             inner: Arc::new(Inner {
                 snapshot: RwLock::new(Arc::new(Snapshot::empty())),
                 cache: ShardedMeasureCache::from_cache(cache, shards),
+                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
             }),
         }
     }
@@ -265,8 +275,23 @@ impl ScheduleService {
             inner: Arc::new(Inner {
                 snapshot: RwLock::new(Arc::new(Snapshot::from_store(zoo.store, zoo.models))),
                 cache,
+                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
             }),
         }
+    }
+
+    /// Configure the draft-then-verify keep fraction for every sweep
+    /// this service (and its clones — the setting lives in the shared
+    /// inner state) runs. Values ≥ 1.0 select the exact path; set at
+    /// startup, before serving, so replies stay deterministic.
+    pub fn with_speculative_keep(self, keep: f64) -> ScheduleService {
+        let keep = if keep < 1.0 { keep } else { 1.0 };
+        self.inner.speculative_keep.store(keep.to_bits(), Ordering::Relaxed);
+        self
+    }
+
+    fn speculative_keep(&self) -> f64 {
+        f64::from_bits(self.inner.speculative_keep.load(Ordering::Relaxed))
     }
 
     fn snapshot(&self) -> Arc<Snapshot> {
@@ -374,16 +399,31 @@ impl ScheduleService {
         seed: u64,
     ) -> TransferResult {
         let mut ledger = Ledger::new();
+        let keep = self.speculative_keep();
+        // Pruned sweeps key their measurements into a keep-specific
+        // space: a speculative run misses a warm exact cache rather
+        // than colliding with it.
+        let seed = speculative_seed(seed, keep);
         let plan = SweepPlan::build_view(target, view, &TransferOptions::default());
-        let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
-        let candidates = measure_pairs_sharded(
-            &candidate_jobs,
-            &candidate_contents,
-            device,
-            seed,
-            &self.inner.cache,
-            &mut ledger,
-        );
+        let (plan, candidates) = if keep >= 1.0 {
+            let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
+            let candidates = measure_pairs_sharded(
+                &candidate_jobs,
+                &candidate_contents,
+                device,
+                seed,
+                &self.inner.cache,
+                &mut ledger,
+            );
+            (plan, candidates)
+        } else {
+            let cache = &self.inner.cache;
+            let ledger = &mut ledger;
+            let mut exec = |jobs: &[(&Kernel, &Schedule)], contents: &[u64]| {
+                measure_pairs_sharded(jobs, contents, device, seed, cache, ledger)
+            };
+            speculative_sweep(target, &plan, device, keep, &mut exec)
+        };
         let (default_jobs, default_contents) = plan.default_jobs(target);
         let defaults = measure_pairs_sharded(
             &default_jobs,
@@ -547,6 +587,27 @@ mod tests {
         assert!(c.source_model.is_some(), "dense schedules must transfer");
         assert!(reply.predicted_speedup() > 1.0);
         assert!(reply.standalone_search_time_s > 0.0);
+    }
+
+    #[test]
+    fn speculative_sessions_are_deterministic_and_key_separated() {
+        let svc = dense_service();
+        let exact = svc.open_session(&request(None)).unwrap();
+        assert!(exact.charged_search_time_s > 0.0, "cold exact session must charge");
+        // The keep setting lives in the shared inner state, so this
+        // clone flips the whole service into speculative mode; from
+        // here on sweeps key into the keep-specific cache space.
+        let spec = svc.clone().with_speculative_keep(0.5);
+        let a = spec.open_session(&request(None)).unwrap();
+        assert!(
+            a.charged_search_time_s > 0.0,
+            "pruned sweeps must miss the exact run's cache entries, not collide"
+        );
+        let b = spec.open_session(&request(None)).unwrap();
+        assert_eq!(b.charged_search_time_s, 0.0, "same-keep rerun is fully warm");
+        assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits());
+        assert_eq!(a.standalone_search_time_s.to_bits(), b.standalone_search_time_s.to_bits());
+        assert!(a.tuned_model_s <= a.untuned_model_s);
     }
 
     #[test]

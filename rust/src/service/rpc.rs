@@ -75,6 +75,15 @@ pub const WIRE_PROTOCOL_VERSION: u64 = 2;
 /// timeout lets shutdown close only the read half and still terminate).
 pub const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// How long a connection may sit idle (no request frame arriving)
+/// before the server reclaims its pool worker. A client that connects
+/// and then goes silent would otherwise pin a blocking read forever —
+/// and the pool serves one connection per worker, so at `--jobs 1` a
+/// single hung client starves every other connection. A timed-out read
+/// is treated as a clean connection end: the stream closes with no
+/// error frame, and the client is free to reconnect.
+pub const READ_STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Framing-layer failure. Everything above the byte stream (bad JSON,
 /// bad request fields) is reported in-band as an [`RpcError`] instead.
 #[derive(Debug)]
@@ -498,6 +507,18 @@ impl RpcServer {
         Self::start_with_admin(bind, service, defaults, default_admin())
     }
 
+    /// [`RpcServer::start`] with an explicit idle-read timeout in place
+    /// of [`READ_STALL_TIMEOUT`] — lets tests exercise the hung-client
+    /// path in milliseconds instead of seconds.
+    pub fn start_with_timeouts(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        read_timeout: Duration,
+    ) -> anyhow::Result<RpcServer> {
+        Self::start_inner(bind, service, defaults, default_admin(), read_timeout)
+    }
+
     /// [`RpcServer::start`] with an explicit [`AdminHook`] — how the
     /// serve loop wires `shutdown` and `republish` to its control
     /// thread.
@@ -506,6 +527,16 @@ impl RpcServer {
         service: ScheduleService,
         defaults: RpcDefaults,
         admin: AdminHook,
+    ) -> anyhow::Result<RpcServer> {
+        Self::start_inner(bind, service, defaults, admin, READ_STALL_TIMEOUT)
+    }
+
+    fn start_inner(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        admin: AdminHook,
+        read_timeout: Duration,
     ) -> anyhow::Result<RpcServer> {
         let listener = TcpListener::bind(bind)
             .map_err(|e| anyhow::anyhow!("binding RPC listener on {bind}: {e}"))?;
@@ -550,7 +581,7 @@ impl RpcServer {
             let stop = stop.clone();
             let conns = conns.clone();
             let pending = pending.clone();
-            std::thread::spawn(move || accept_loop(listener, stop, conns, pending))
+            std::thread::spawn(move || accept_loop(listener, stop, conns, pending, read_timeout))
         };
         Ok(RpcServer { addr, stop, conns, pending, accept: Some(accept), workers })
     }
@@ -618,6 +649,7 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     conns: ConnMap,
     pending: Arc<ConnQueue>,
+    read_timeout: Duration,
 ) {
     let mut next_id: u64 = 0;
     for stream in listener.incoming() {
@@ -633,8 +665,10 @@ fn accept_loop(
                 continue;
             }
         };
-        // Bound every reply write so a drain can always terminate.
+        // Bound every reply write so a drain can always terminate, and
+        // every idle read so a silent client cannot pin a pool worker.
         let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+        let _ = stream.set_read_timeout(Some(read_timeout));
         let id = next_id;
         next_id += 1;
         // Register the handle BEFORE queueing: every connection must be
@@ -708,6 +742,9 @@ fn connection_loop(
                     Err(_) => break,
                 }
             }
+            // Io covers the idle-read timeout (WouldBlock/TimedOut from
+            // a client that connected and went silent): both are a
+            // clean connection end, closed without an error frame.
             Err(FrameError::Closed) | Err(FrameError::Io(_)) => break,
             Err(e) => {
                 // Framing violation: best-effort structured error, then

@@ -22,21 +22,41 @@
 //! the end-to-end times (Fig 5a/6a/8a).
 
 use super::store::{ScheduleStore, StoreView};
+use crate::autosched::{features, CostModel, GbdtParams, NUM_FEATURES};
+use crate::coordinator::jobs::par_map_indexed;
 use crate::coordinator::{
-    content_from_parts, content_key, measure_pairs_cached_precomputed, CachedBatch, Ledger,
-    MeasureCache,
+    content_from_parts, content_key, measure_pairs_cached_precomputed, speculative_seed,
+    CachedBatch, Ledger, MeasureCache,
 };
 use crate::device::{model_time, untuned_model_time, DeviceProfile};
 use crate::ir::{Kernel, ModelGraph};
-use crate::sched::{adapt_cross_class, serialize, Schedule};
+use crate::sched::{adapt_cross_class, apply, serialize, Schedule};
 use std::collections::HashSet;
 
 /// Engine options. The defaults reproduce the paper's implementation;
 /// `cross_class` enables the §4.2 future-work extension (adapting
-/// schedules between classes that share an anchor, e.g. E→F).
-#[derive(Clone, Debug, Default)]
+/// schedules between classes that share an anchor, e.g. E→F);
+/// `speculative_keep` fronts the sweep with a draft-then-verify stage
+/// (see [`speculative_sweep`]).
+#[derive(Clone, Debug)]
 pub struct TransferOptions {
     pub cross_class: bool,
+    /// Draft-then-verify keep fraction. Values in (0, 1) rank each
+    /// kernel's candidate span with a cost model trained on the sweep's
+    /// own measurements so far (features + predict only — no simulator
+    /// pass) and measure only the top fraction; 1.0 (the default)
+    /// disables the draft stage and is byte-identical to the exact
+    /// path. Because pruning changes which pairs are measured and
+    /// charged, the keep fraction is folded into the measure-cache key
+    /// space (see [`crate::coordinator::cache::speculative_seed`]) and
+    /// into artifact keys.
+    pub speculative_keep: f64,
+}
+
+impl Default for TransferOptions {
+    fn default() -> Self {
+        TransferOptions { cross_class: false, speculative_keep: 1.0 }
+    }
 }
 
 /// One candidate evaluation: a store record's schedule (possibly
@@ -265,7 +285,114 @@ pub fn transfer_tune_with(
     seed: u64,
     options: &TransferOptions,
 ) -> TransferResult {
-    transfer_tune_cached(target, store, profile, source_label, seed, options, &mut MeasureCache::new())
+    transfer_tune_cached(
+        target,
+        store,
+        profile,
+        source_label,
+        seed,
+        options,
+        &mut MeasureCache::new(),
+    )
+}
+
+/// Minimum measured samples before the draft model is trusted; spans
+/// processed before the threshold is reached are measured in full
+/// (mirroring the tuner, whose first round always runs exact).
+const DRAFT_MIN_SAMPLES: usize = 8;
+
+/// Draft-then-verify front end for a sweep: walk the plan's kernel
+/// spans in order, rank each span's candidates with a GBDT cost model
+/// trained on the sweep's own measured outcomes so far (features +
+/// predict — no simulator pass), and hand only the top `keep` fraction
+/// of valid candidates to `exec` — the flat cached executor or the
+/// service layer's sharded one, so there is ONE pruning implementation
+/// for both pipelines. Apply-fail candidates are pruned for free: the
+/// draft stage already proved they cannot compile, so they are dropped
+/// without a compile-fail charge. Returns the pruned plan (surviving
+/// jobs in original order, spans recomputed) plus the concatenated
+/// measured batch aligned with it.
+///
+/// Determinism: ranking is pure (memoized content keys, index-ordered
+/// `par_map_indexed` slots, ties broken by span index), training data
+/// accumulates in span order, and `exec` runs span by span in kernel
+/// order — the result is a pure function of (plan, profile, keep,
+/// exec's seed), independent of thread count.
+pub(crate) fn speculative_sweep<F>(
+    target: &ModelGraph,
+    plan: &SweepPlan,
+    profile: &DeviceProfile,
+    keep: f64,
+    exec: &mut F,
+) -> (SweepPlan, CachedBatch)
+where
+    F: FnMut(&[(&Kernel, &Schedule)], &[u64]) -> CachedBatch,
+{
+    let mut pruned = SweepPlan {
+        jobs: Vec::new(),
+        spans: Vec::with_capacity(plan.spans.len()),
+        defaults: plan.defaults.clone(),
+    };
+    let mut combined = CachedBatch { outcomes: Vec::new(), keys: Vec::new() };
+    let mut xs: Vec<[f64; NUM_FEATURES]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let gbdt = GbdtParams::default();
+
+    for (ki, span) in plan.spans.iter().enumerate() {
+        let kernel = &target.kernels[ki];
+        let span_jobs = &plan.jobs[span.clone()];
+        // Pure phase (parallel, index-ordered slots): apply + features
+        // for every candidate — the feature vector drives the draft
+        // score now and becomes the training sample if measured.
+        let feats: Vec<Option<[f64; NUM_FEATURES]>> = par_map_indexed(span_jobs, 0, |_, j| {
+            apply(&j.schedule, kernel).ok().map(|nest| features(kernel, &nest, profile))
+        });
+        let survivors: Vec<usize> = if xs.len() < DRAFT_MIN_SAMPLES {
+            // Warmup: no trustworthy model yet — measure the span in
+            // full, exactly like the exact path.
+            (0..span_jobs.len()).collect()
+        } else {
+            let model = CostModel::train(&xs, &ys, &gbdt);
+            let scores: Vec<Option<f64>> =
+                feats.iter().map(|f| f.as_ref().map(|x| model.predict(x))).collect();
+            let mut order: Vec<usize> =
+                (0..scores.len()).filter(|&i| scores[i].is_some()).collect();
+            let n_valid = order.len();
+            order.sort_by(|&a, &b| {
+                let sa = scores[a].expect("valid draft");
+                let sb = scores[b].expect("valid draft");
+                sb.partial_cmp(&sa).expect("finite draft scores").then(a.cmp(&b))
+            });
+            let n_keep = if n_valid == 0 {
+                0
+            } else {
+                ((keep * n_valid as f64).ceil() as usize).clamp(1, n_valid)
+            };
+            let mut kept: Vec<usize> = order.into_iter().take(n_keep).collect();
+            kept.sort_unstable();
+            kept
+        };
+
+        let jobs: Vec<(&Kernel, &Schedule)> =
+            survivors.iter().map(|&i| (kernel, &span_jobs[i].schedule)).collect();
+        let contents: Vec<u64> = survivors.iter().map(|&i| span_jobs[i].content).collect();
+        let batch = exec(&jobs, &contents);
+
+        // Accumulate training data from this span's measured survivors.
+        for (&si, outcome) in survivors.iter().zip(&batch.outcomes) {
+            if let (Some(t), Some(x)) = (outcome.runtime(), feats[si].as_ref()) {
+                xs.push(*x);
+                ys.push(-(t.max(1e-12)).ln());
+            }
+        }
+
+        let start = pruned.jobs.len();
+        pruned.jobs.extend(survivors.iter().map(|&i| span_jobs[i].clone()));
+        pruned.spans.push(start..pruned.jobs.len());
+        combined.outcomes.extend(batch.outcomes);
+        combined.keys.extend(batch.keys);
+    }
+    (pruned, combined)
 }
 
 /// Transfer-tune through a caller-owned [`MeasureCache`].
@@ -286,19 +413,34 @@ pub fn transfer_tune_cached(
 ) -> TransferResult {
     let mut ledger = Ledger::new();
     let plan = SweepPlan::build(target, store, options);
+    // Keep-fraction key separation: a pruned run's cache entries live
+    // in their own seed space, so it can never collide with (or be
+    // served from) an exact run at the same seed. keep=1.0 leaves the
+    // seed — and thus every legacy key — untouched.
+    let keep = if options.speculative_keep < 1.0 { options.speculative_keep } else { 1.0 };
+    let seed = speculative_seed(seed, keep);
 
-    // Dispatch the candidate sweep and the untuned baselines through the
-    // cached executor: dedup first, then parallel measurement of unique
-    // misses, ledger charged per miss (sequential device semantics).
-    let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
-    let candidates = measure_pairs_cached_precomputed(
-        &candidate_jobs,
-        &candidate_contents,
-        profile,
-        seed,
-        cache,
-        &mut ledger,
-    );
+    let (plan, candidates) = if keep >= 1.0 {
+        // Exact path: dispatch the whole candidate sweep through the
+        // cached executor at once — dedup first, parallel measurement
+        // of unique misses, ledger charged per miss (sequential device
+        // semantics).
+        let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
+        let candidates = measure_pairs_cached_precomputed(
+            &candidate_jobs,
+            &candidate_contents,
+            profile,
+            seed,
+            cache,
+            &mut ledger,
+        );
+        (plan, candidates)
+    } else {
+        let mut exec = |jobs: &[(&Kernel, &Schedule)], contents: &[u64]| {
+            measure_pairs_cached_precomputed(jobs, contents, profile, seed, cache, &mut ledger)
+        };
+        speculative_sweep(target, &plan, profile, keep, &mut exec)
+    };
 
     let (default_jobs, default_contents) = plan.default_jobs(target);
     let defaults_batch = measure_pairs_cached_precomputed(
@@ -310,7 +452,15 @@ pub fn transfer_tune_cached(
         &mut ledger,
     );
 
-    assemble_transfer_result(target, &plan, candidates, defaults_batch, ledger, profile, source_label)
+    assemble_transfer_result(
+        target,
+        &plan,
+        candidates,
+        defaults_batch,
+        ledger,
+        profile,
+        source_label,
+    )
 }
 
 /// Assemble a [`TransferResult`] from the measured candidate/default
@@ -578,6 +728,73 @@ mod tests {
         assert_eq!(warm.amortized_saved_s(), warm.standalone_search_time_s());
     }
 
+    /// Grow `store` to `n` content-distinct records per original record
+    /// (different unroll budgets keep them applicable but distinct), so
+    /// a span is big enough for the draft stage to leave warmup.
+    fn widen_store(store: &ScheduleStore, copies: usize) -> ScheduleStore {
+        let mut grown = store.clone();
+        for c in 1..copies {
+            let mut extra = store.clone();
+            for r in &mut extra.records {
+                let mut s = r.schedule.clone();
+                for _ in 0..c {
+                    s.unroll_max = s.unroll_max.wrapping_add(3);
+                }
+                r.set_schedule(s);
+            }
+            grown.merge(&extra);
+        }
+        grown
+    }
+
+    #[test]
+    fn speculative_transfer_prunes_pairs_and_stays_deterministic() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let wide = widen_store(&store, 8); // 16 records -> 16-candidate spans
+        let exact = transfer_tune(&tgt, &wide, &prof, "mixed", 3);
+        let opts = TransferOptions { speculative_keep: 0.25, ..Default::default() };
+        let a = transfer_tune_with(&tgt, &wide, &prof, "mixed", 3, &opts);
+        let b = transfer_tune_with(&tgt, &wide, &prof, "mixed", 3, &opts);
+        assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits(), "keep is deterministic");
+        assert_eq!(a.ledger.seconds.to_bits(), b.ledger.seconds.to_bits());
+        // The first span warms the model up in full; later spans prune,
+        // so the pruned pair matrix is a strict subset.
+        assert!(
+            a.pairs_evaluated() < exact.pairs_evaluated(),
+            "draft stage never pruned: {} vs {}",
+            a.pairs_evaluated(),
+            exact.pairs_evaluated()
+        );
+        assert!(a.standalone_search_time_s() < exact.standalone_search_time_s());
+        // Selection still never loses to the untuned default.
+        for s in &a.sweeps {
+            assert!(s.chosen_s <= s.untuned_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn speculative_runs_use_a_separate_cache_key_space() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let mut cache = crate::coordinator::MeasureCache::new();
+        let exact = transfer_tune_cached(
+            &tgt, &store, &prof, "Source", 3, &TransferOptions::default(), &mut cache,
+        );
+        assert!(exact.ledger.seconds > 0.0);
+        // Same seed, pruned keep: must MISS the exact run's entries.
+        let opts = TransferOptions { speculative_keep: 0.5, ..Default::default() };
+        let spec = transfer_tune_cached(&tgt, &store, &prof, "Source", 3, &opts, &mut cache);
+        assert!(
+            spec.ledger.seconds > 0.0,
+            "pruned run must miss, never collide with exact-path entries"
+        );
+        // Same keep again: fully warm, bit-identical reply.
+        let warm = transfer_tune_cached(&tgt, &store, &prof, "Source", 3, &opts, &mut cache);
+        assert_eq!(warm.ledger.seconds, 0.0, "same-keep rerun is fully warm");
+        assert_eq!(warm.tuned_model_s.to_bits(), spec.tuned_model_s.to_bits());
+    }
+
     #[test]
     fn invalid_pairs_show_up_when_factors_exceed_extents() {
         let prof = DeviceProfile::xeon_e5_2620();
@@ -620,7 +837,7 @@ mod cross_class_tests {
             &prof,
             "ResNet50",
             5,
-            &TransferOptions { cross_class: true },
+            &TransferOptions { cross_class: true, ..Default::default() },
         );
         // Class-F kernels get candidates only in cross-class mode.
         let f = tgt.kernels_of_class("conv2d_bias_add_relu");
@@ -660,7 +877,7 @@ mod cross_class_tests {
             &prof,
             "DenseSrc",
             5,
-            &TransferOptions { cross_class: true },
+            &TransferOptions { cross_class: true, ..Default::default() },
         );
         assert!(cross.sweeps[0].outcomes.is_empty(), "dense must not adapt onto conv");
     }

@@ -16,7 +16,13 @@ fn tmp_dir(tag: &str) -> PathBuf {
 }
 
 fn config() -> ExperimentConfig {
-    ExperimentConfig { trials: 100, seed: 21, device: DeviceProfile::xeon_e5_2620(), jobs: 0 }
+    ExperimentConfig {
+        trials: 100,
+        seed: 21,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+        speculative_keep: 1.0,
+    }
 }
 
 /// The report surface used for the bit-identity comparison: tables and
@@ -92,7 +98,8 @@ fn incremental_rebuild_tunes_only_the_missing_model() {
     drop(artifacts);
 
     // Corrupt exactly one model's tuning artifact on disk.
-    let key = artifact::tuning_key("ResNet18", &cfg.device, cfg.trials, cfg.seed);
+    let key =
+        artifact::tuning_key("ResNet18", &cfg.device, cfg.trials, cfg.seed, cfg.effective_keep());
     let file = dir.join(format!("tuning_{key:016x}.json"));
     assert!(file.exists(), "per-model tuning artifact file layout changed?");
     std::fs::write(&file, "garbage").unwrap();
@@ -123,6 +130,7 @@ fn artifact_keys_isolate_configurations() {
         seed: 3,
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
+        speculative_keep: 1.0,
     };
     let zoo = Zoo::build_incremental(base.clone(), Some(&mut artifacts), |_| {});
     assert_eq!(zoo.build_stats.models_tuned, 11);

@@ -234,6 +234,48 @@ fn queued_connections_are_served_not_dropped() {
 }
 
 #[test]
+fn hung_client_is_timed_out_and_frees_its_pool_worker() {
+    // A client that connects and never sends a frame used to pin its
+    // pool worker in a blocking read forever (only writes had a
+    // timeout) — at --jobs 1 that is the whole pool. With the idle-read
+    // timeout the server closes the connection cleanly and the worker
+    // moves on to queued connections.
+    let service = dense_service();
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let server = RpcServer::start_with_timeouts(
+        "127.0.0.1:0",
+        service,
+        d,
+        std::time::Duration::from_millis(200),
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+
+    // The hung client: connects, sends nothing. The server must hang
+    // up on it (no error frame — a timeout is a clean connection end).
+    let mut hung = TcpStream::connect(addr).expect("connect");
+    match read_frame(&mut hung) {
+        Err(_) => {}
+        Ok(frame) => panic!("hung client must get no frame, got {frame}"),
+    }
+
+    // With the hung connection reclaimed, fresh clients are served
+    // correct replies — even if the timed-out one occupied a worker
+    // first (the regression this guards: these would starve forever).
+    for client in 0..3 {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let got = roundtrip(&mut stream, line);
+        assert_eq!(got, expected, "client {client} starved behind a hung connection");
+    }
+    drop(hung);
+    server.shutdown();
+}
+
+#[test]
 fn default_admin_answers_stats_and_refuses_mutations() {
     let service = dense_service();
     let server = RpcServer::start("127.0.0.1:0", service.clone(), defaults()).expect("bind");

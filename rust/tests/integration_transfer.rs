@@ -48,7 +48,10 @@ fn heuristic_pairs_match_paper_for_bert_family() {
     // BERT and MobileBERT must pick each other (Table 2, M9/M10): class Q
     // is ~98% of their time and only they have it.
     let device = DeviceProfile::xeon_e5_2620();
-    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 5, device, jobs: 0 }, |_| {});
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 120, seed: 5, device, ..Default::default() },
+        |_| {},
+    );
     let bert = &zoo.models[zoo.model_index("BERT").unwrap()];
     let mbert = &zoo.models[zoo.model_index("MobileBERT").unwrap()];
     assert_eq!(zoo.choices(bert)[0].0, "MobileBERT");
@@ -58,7 +61,10 @@ fn heuristic_pairs_match_paper_for_bert_family() {
 #[test]
 fn efficientnets_choose_each_other() {
     let device = DeviceProfile::xeon_e5_2620();
-    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 6, device, jobs: 0 }, |_| {});
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 120, seed: 6, device, ..Default::default() },
+        |_| {},
+    );
     let b0 = &zoo.models[zoo.model_index("EfficientNetB0").unwrap()];
     let b4 = &zoo.models[zoo.model_index("EfficientNetB4").unwrap()];
     assert_eq!(zoo.choices(b0)[0].0, "EfficientNetB4");
@@ -70,7 +76,10 @@ fn bert_transfer_dominates_cnn_transfers() {
     // Fig 5's strongest effect: the dense-dominated transformers gain far
     // more from transfer-tuning than the CNNs.
     let device = DeviceProfile::xeon_e5_2620();
-    let zoo = Zoo::build(ExperimentConfig { trials: 400, seed: 7, device, jobs: 0 }, |_| {});
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 400, seed: 7, device, ..Default::default() },
+        |_| {},
+    );
     let bert = &zoo.models[zoo.model_index("BERT").unwrap()];
     let resnet50 = &zoo.models[zoo.model_index("ResNet50").unwrap()];
     let bert_tt = zoo.transfer(bert, None).unwrap();
@@ -88,7 +97,10 @@ fn transfer_is_far_cheaper_than_ansor() {
     // Table 4's search-time column: TT needs a small fraction of the
     // tuning budget's search time.
     let device = DeviceProfile::xeon_e5_2620();
-    let zoo = Zoo::build(ExperimentConfig { trials: 400, seed: 8, device, jobs: 0 }, |_| {});
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 400, seed: 8, device, ..Default::default() },
+        |_| {},
+    );
     for (mi, m) in zoo.models.iter().enumerate() {
         let Some(tt) = zoo.transfer(m, None) else { continue };
         // Standalone cost: the comparison must not get a free pass from
@@ -113,7 +125,7 @@ fn proportions_consistent_with_untuned_time() {
 fn ranking_is_deterministic_and_complete() {
     let device = DeviceProfile::xeon_e5_2620();
     let zoo = Zoo::build(
-        ExperimentConfig { trials: 120, seed: 9, device: device.clone(), jobs: 0 },
+        ExperimentConfig { trials: 120, seed: 9, device: device.clone(), ..Default::default() },
         |_| {},
     );
     for m in &zoo.models {
@@ -127,7 +139,10 @@ fn ranking_is_deterministic_and_complete() {
 #[test]
 fn report_tables_are_well_formed() {
     let device = DeviceProfile::xeon_e5_2620();
-    let zoo = Zoo::build(ExperimentConfig { trials: 120, seed: 10, device, jobs: 0 }, |_| {});
+    let zoo = Zoo::build(
+        ExperimentConfig { trials: 120, seed: 10, device, ..Default::default() },
+        |_| {},
+    );
 
     let t1 = tables::table1();
     assert_eq!(t1.rows.len(), 18);
@@ -159,11 +174,23 @@ fn edge_zoo_search_times_exceed_server() {
     // so the same trial budget costs more search time.
     let trials = 150;
     let server = Zoo::build(
-        ExperimentConfig { trials, seed: 12, device: DeviceProfile::xeon_e5_2620(), jobs: 0 },
+        ExperimentConfig {
+            trials,
+            seed: 12,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |_| {},
     );
     let edge = Zoo::build(
-        ExperimentConfig { trials, seed: 12, device: DeviceProfile::cortex_a72(), jobs: 0 },
+        ExperimentConfig {
+            trials,
+            seed: 12,
+            device: DeviceProfile::cortex_a72(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |_| {},
     );
     let mut edge_higher = 0;

@@ -79,6 +79,46 @@ fn prop_tune_model_bit_identical_across_jobs() {
     }
 }
 
+#[test]
+fn prop_speculative_tune_bit_identical_across_jobs() {
+    // The draft-then-verify path (`speculative_keep < 1.0`) obeys the
+    // same contract as the exact path: results are a pure function of
+    // (seed, keep), never of thread count.
+    let prof = DeviceProfile::xeon_e5_2620();
+    let g = mixed_model();
+    let spec_opts = |jobs| TuneOptions { speculative_keep: 0.5, ..opts(jobs) };
+    let reference = tune_model(&g, &prof, &spec_opts(1));
+    for jobs in JOBS {
+        let t = tune_model(&g, &prof, &spec_opts(jobs));
+        assert_eq!(t.trials_used, reference.trials_used, "jobs={jobs}");
+        assert_eq!(
+            t.search_time_s.to_bits(),
+            reference.search_time_s.to_bits(),
+            "jobs={jobs}: charged ledger drifted under pruning"
+        );
+        assert_eq!(t.best.len(), reference.best.len(), "jobs={jobs}");
+        for (k, best) in &reference.best {
+            let other = t.best.get(k).expect("same kernels tuned");
+            assert_eq!(other.schedule, best.schedule, "jobs={jobs}: kernel {k} schedule");
+            assert_eq!(
+                other.cost_s.to_bits(),
+                best.cost_s.to_bits(),
+                "jobs={jobs}: kernel {k} cost"
+            );
+        }
+    }
+    // Pruned slots skip measurement, so the charged ledger can only
+    // shrink relative to the exact run at the same budget.
+    let exact = tune_model(&g, &prof, &opts(1));
+    assert_eq!(reference.trials_used, exact.trials_used, "pruning must not refund trials");
+    assert!(
+        reference.search_time_s <= exact.search_time_s,
+        "speculative ledger {} exceeds exact {}",
+        reference.search_time_s,
+        exact.search_time_s
+    );
+}
+
 fn zoo_models() -> Vec<ModelGraph> {
     vec![
         dense_model("ParSrcA", 512),
@@ -87,7 +127,7 @@ fn zoo_models() -> Vec<ModelGraph> {
     ]
 }
 
-fn build_zoo(jobs: usize, artifacts: Option<&mut ArtifactStore>) -> Zoo {
+fn build_zoo_keep(jobs: usize, keep: f64, artifacts: Option<&mut ArtifactStore>) -> Zoo {
     Zoo::build_for_models(
         zoo_models(),
         ExperimentConfig {
@@ -95,10 +135,15 @@ fn build_zoo(jobs: usize, artifacts: Option<&mut ArtifactStore>) -> Zoo {
             seed: 29,
             device: DeviceProfile::xeon_e5_2620(),
             jobs,
+            speculative_keep: keep,
         },
         artifacts,
         |_| {},
     )
+}
+
+fn build_zoo(jobs: usize, artifacts: Option<&mut ArtifactStore>) -> Zoo {
+    build_zoo_keep(jobs, 1.0, artifacts)
 }
 
 #[test]
@@ -122,6 +167,39 @@ fn prop_zoo_build_bit_identical_across_jobs() {
             assert_eq!(a.to_bits(), b.to_bits(), "jobs={jobs}: untuned baselines");
         }
     }
+}
+
+#[test]
+fn prop_speculative_zoo_build_bit_identical_across_jobs() {
+    let reference = build_zoo_keep(1, 0.5, None);
+    let ref_jsonl = reference.store.to_jsonl();
+    for jobs in JOBS {
+        let zoo = build_zoo_keep(jobs, 0.5, None);
+        assert_eq!(zoo.build_stats, reference.build_stats, "jobs={jobs}: ZooBuildStats");
+        assert_eq!(
+            zoo.build_stats.tuning_seconds_charged.to_bits(),
+            reference.build_stats.tuning_seconds_charged.to_bits(),
+            "jobs={jobs}: charged f64 total under pruning"
+        );
+        assert_eq!(zoo.store.to_jsonl(), ref_jsonl, "jobs={jobs}: store bytes under pruning");
+    }
+}
+
+#[test]
+fn prop_keep_one_is_byte_identical_to_the_default_exact_path() {
+    // `--speculative-keep 1.0` (and anything the config normalizes to
+    // 1.0) must reproduce the pre-speculation exact path byte for
+    // byte: same store bytes, same charged ledger bits.
+    let exact = build_zoo(1, None);
+    let pinned = build_zoo_keep(1, 1.0, None);
+    let clamped = build_zoo_keep(1, 7.5, None);
+    assert_eq!(pinned.store.to_jsonl(), exact.store.to_jsonl(), "keep=1.0 drifted from exact");
+    assert_eq!(clamped.store.to_jsonl(), exact.store.to_jsonl(), "keep>1.0 must normalize");
+    assert_eq!(
+        pinned.build_stats.tuning_seconds_charged.to_bits(),
+        exact.build_stats.tuning_seconds_charged.to_bits(),
+        "keep=1.0 charged ledger drifted"
+    );
 }
 
 #[test]
@@ -205,6 +283,40 @@ fn prop_open_session_bit_identical_across_global_jobs() {
 }
 
 #[test]
+fn prop_speculative_sessions_bit_identical_across_global_jobs() {
+    // A pruned session (keep=0.5) is still a pure function of
+    // (seed, keep): cold replies agree bit-for-bit at any thread
+    // count, and the warm replay is free.
+    let mut reference: Option<(u64, u64, u64)> = None;
+    for jobs in JOBS {
+        set_global_jobs(jobs);
+        let (service, req) = session_service();
+        let service = service.with_speculative_keep(0.5);
+        let cold = service.open_session(&req).expect("cold speculative session");
+        let warm = service.open_session(&req).expect("warm speculative session");
+        assert_eq!(warm.charged_search_time_s, 0.0, "jobs={jobs}: warm replay is free");
+        assert_eq!(
+            warm.tuned_model_s.to_bits(),
+            cold.tuned_model_s.to_bits(),
+            "jobs={jobs}: warm speculative reply drifted"
+        );
+        let bits = (
+            cold.tuned_model_s.to_bits(),
+            cold.standalone_search_time_s.to_bits(),
+            cold.charged_search_time_s.to_bits(),
+        );
+        match reference {
+            None => reference = Some(bits),
+            Some(expected) => assert_eq!(
+                bits, expected,
+                "jobs={jobs}: speculative (tuned, standalone, charged) bits drifted"
+            ),
+        }
+    }
+    set_global_jobs(0);
+}
+
+#[test]
 fn prop_streaming_replies_bit_identical_across_jobs() {
     // A streaming build at any jobs setting answers with the same
     // epoch-stamped, byte-identical wire replies.
@@ -216,7 +328,13 @@ fn prop_streaming_replies_bit_identical_across_jobs() {
         let service = ScheduleService::empty(2);
         let mut producer = ZooProducer::for_models(
             zoo_models(),
-            ExperimentConfig { trials: 96, seed: 29, device: prof.clone(), jobs },
+            ExperimentConfig {
+                trials: 96,
+                seed: 29,
+                device: prof.clone(),
+                jobs,
+                speculative_keep: 1.0,
+            },
             None,
         );
         let mut epochs = Vec::new();

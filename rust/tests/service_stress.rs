@@ -53,7 +53,13 @@ fn assert_replies_equal(a: &SessionReply, b: &SessionReply, ctx: &str) {
 #[test]
 fn concurrent_sessions_match_single_threaded_replies() {
     let zoo = Zoo::build(
-        ExperimentConfig { trials: 120, seed: 21, device: DeviceProfile::xeon_e5_2620(), jobs: 0 },
+        ExperimentConfig {
+            trials: 120,
+            seed: 21,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |_| {},
     );
     // Two service instances over identical tuned state: a fresh
@@ -98,7 +104,13 @@ fn concurrent_sessions_match_single_threaded_replies() {
 #[test]
 fn budget_monotonicity_and_seed_isolation() {
     let zoo = Zoo::build(
-        ExperimentConfig { trials: 120, seed: 5, device: DeviceProfile::xeon_e5_2620(), jobs: 0 },
+        ExperimentConfig {
+            trials: 120,
+            seed: 5,
+            device: DeviceProfile::xeon_e5_2620(),
+            jobs: 0,
+            speculative_keep: 1.0,
+        },
         |_| {},
     );
     let service = ScheduleService::from_zoo(zoo, 4);

@@ -32,7 +32,13 @@ fn zoo_models() -> Vec<ModelGraph> {
 }
 
 fn config() -> ExperimentConfig {
-    ExperimentConfig { trials: TRIALS, seed: SEED, device: DeviceProfile::xeon_e5_2620(), jobs: 0 }
+    ExperimentConfig {
+        trials: TRIALS,
+        seed: SEED,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+        speculative_keep: 1.0,
+    }
 }
 
 fn request() -> SessionRequest {
@@ -204,7 +210,7 @@ fn producer_persists_each_artifact_as_it_lands() {
     let service = ScheduleService::empty(2);
     let mut producer = ZooProducer::for_models(zoo_models(), cfg, Some(&mut artifacts));
 
-    let key_of = |name: &str| artifact::tuning_key(name, &device, TRIALS, SEED);
+    let key_of = |name: &str| artifact::tuning_key(name, &device, TRIALS, SEED, 1.0);
 
     // After the first two publishes, Target and A are durable but B —
     // still unlanded — is not: persistence streams too.
