@@ -17,11 +17,14 @@
 #
 # It also guards the WIRE protocol (PR 3 invariant): rust/src/service/
 # rpc.rs holds the frame format, the request/response/admin schemas,
-# and WIRE_PROTOCOL_VERSION. Any change to that file must, in the same
-# range, update README.md (the documented schemas) AND both protocol
-# test files (rust/tests/rpc_codec.rs, rust/tests/integration_rpc.rs)
-# — or carry a `Wire-Drift: none` trailer for edits that demonstrably
-# leave the bytes on the wire unchanged.
+# and WIRE_PROTOCOL_VERSION, and rust/src/service/reactor.rs owns the
+# byte movement those schemas ride on (framing accumulation, violation
+# replies, close semantics). Any change to either file must, in the
+# same range, update README.md (the documented schemas) AND both
+# protocol test files (rust/tests/rpc_codec.rs,
+# rust/tests/integration_rpc.rs) — or carry a `Wire-Drift: none`
+# trailer for edits that demonstrably leave the bytes on the wire
+# unchanged.
 #
 # Escape hatch: edits that demonstrably do not change persisted bytes
 # (comments, non-format helpers living in the same file) may carry a
@@ -47,9 +50,18 @@ CHANGED="$(git diff --name-only "$BASE" HEAD)"
 
 # ---- wire-protocol drift ---------------------------------------------------
 
-WIRE_FILE="rust/src/service/rpc.rs"
-if printf '%s\n' "$CHANGED" | grep -qx "$WIRE_FILE"; then
-  echo "format-drift: wire-protocol file touched: $WIRE_FILE"
+WIRE_FILES="
+rust/src/service/rpc.rs
+rust/src/service/reactor.rs
+"
+wire_touched=""
+for f in $WIRE_FILES; do
+  if printf '%s\n' "$CHANGED" | grep -qx "$f"; then
+    wire_touched="$wire_touched $f"
+  fi
+done
+if [ -n "$wire_touched" ]; then
+  echo "format-drift: wire-protocol files touched:$wire_touched"
   if git log --format=%B "$BASE..HEAD" | grep -qiE '^Wire-Drift:[[:space:]]*none[[:space:]]*$'; then
     echo "format-drift: OK — 'Wire-Drift: none' trailer present (no on-wire bytes change)"
   else
@@ -59,7 +71,7 @@ if printf '%s\n' "$CHANGED" | grep -qx "$WIRE_FILE"; then
     done
     if [ -n "$missing" ]; then
       echo "format-drift: FAIL"
-      echo "  $WIRE_FILE changed without updating:$missing"
+      echo "  wire files changed ($wire_touched) without updating:$missing"
       echo "  Protocol changes must update README §Wire protocol and BOTH"
       echo "  RPC test files in the same change (and bump"
       echo "  WIRE_PROTOCOL_VERSION when the schema moves), or — only if"

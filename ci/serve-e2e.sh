@@ -3,9 +3,11 @@
 # process over loopback with the thin client, end to end:
 #
 #   1. cold run — stream the zoo in, open a session (`repro call`),
-#      inspect it (`repro admin stats`), refresh one source
-#      (`repro admin republish` must land at epoch+1 and change only
-#      the epoch stamp of an identical session), then `shutdown`;
+#      inspect it (`repro admin stats`, incl. the v3 server gauges),
+#      refresh one source (`repro admin republish` must land at
+#      epoch+1 and change only the epoch stamp of an identical
+#      session), refresh the whole zoo (`republish --all` must land 11
+#      consecutive epochs), then `shutdown`;
 #   2. warm restart — same `--cache-dir`: the rebuilt server must
 #      report 0 models tuned / 0 trials / 0.0 tuning seconds charged,
 #      and the replayed session must charge 0.0 device-seconds (served
@@ -89,6 +91,12 @@ expect_in '"charged_search_time_s":0,' "$BASE_REPLY" "second identical session r
 STATS="$("$BIN" admin "$ADDR" stats)" || fail "stats errored"
 expect_in '"complete":true' "$STATS" "stats must report a complete zoo"
 expect_in '"models_tuned":11' "$STATS" "cold run tunes all 11 models"
+# Wire schema v3: live server gauges (exactly our one admin connection,
+# an empty queue) and per-source record counts.
+expect_in '"protocol":3' "$STATS" "stats must report wire protocol v3"
+expect_in '"server":{"connections":1,"queue_depth":0}' "$STATS" \
+  "stats must report the live connection/queue gauges"
+expect_in '"source_records":{' "$STATS" "stats must report per-source record counts"
 
 REPUB="$("$BIN" admin "$ADDR" republish ResNet50)" || fail "republish errored"
 expect_in '"ok":true' "$REPUB" "republish must succeed"
@@ -99,6 +107,20 @@ POST_REPLY="$("$BIN" call "$ADDR" "$SESSION")" || fail "post-republish session e
 EXPECT_POST="$(printf '%s' "$BASE_REPLY" | sed 's/"epoch":11/"epoch":12/')"
 [ "$POST_REPLY" = "$EXPECT_POST" ] \
   || fail "republish changed more than the epoch stamp of an identical session"
+
+# republish --all: every zoo model refreshed serially at consecutive
+# epochs 13..23 (11 models, fresh artifacts, zero re-tuning), and an
+# identical session afterwards differs only in its epoch stamp.
+REPUB_ALL="$("$BIN" admin "$ADDR" republish --all)" || fail "republish --all errored"
+expect_in '"ok":true' "$REPUB_ALL" "republish --all must succeed"
+expect_in '"all":true' "$REPUB_ALL" "republish --all ack must echo the all form"
+expect_in '"first_epoch":13' "$REPUB_ALL" "serial run must start at epoch 13"
+expect_in '"epoch":23' "$REPUB_ALL" "11 consecutive epochs must end at 23"
+expect_in '"models":11' "$REPUB_ALL" "republish --all must cover all 11 models"
+POST_ALL="$("$BIN" call "$ADDR" "$SESSION")" || fail "post-republish-all session errored"
+EXPECT_ALL="$(printf '%s' "$BASE_REPLY" | sed 's/"epoch":11/"epoch":23/')"
+[ "$POST_ALL" = "$EXPECT_ALL" ] \
+  || fail "republish --all changed more than the epoch stamp of an identical session"
 
 "$BIN" admin "$ADDR" shutdown | grep -q '"ok":true' || fail "shutdown RPC refused"
 wait "$SERVER_PID" || fail "server exited non-zero after shutdown RPC"

@@ -31,8 +31,10 @@
 //!   integrity-checked files under a `--cache-dir`, so tuned state
 //!   survives the process and warm runs re-tune nothing.
 //! * [`service`] — multi-tenant serving: one shared zoo behind an
-//!   `Arc`, a sharded measurement cache, and a deterministic session
-//!   API (`open_session`) answering concurrent schedule requests.
+//!   `Arc`, a sharded measurement cache, a deterministic session API
+//!   (`open_session`) answering concurrent schedule requests, and the
+//!   event-driven RPC front end (epoll reactor + timer wheel) that
+//!   serves thousands of connections from one event-loop thread.
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas/JAX
 //!   artifacts (the *real* hot path; Python is never on it).
 //! * [`report`] — regenerates every table and figure of the paper.

@@ -15,7 +15,7 @@
 //! repro serve --listen 127.0.0.1:7461  # RPC server, streaming zoo build
 //! repro serve --requests FILE          # ScheduleService session replay
 //! repro call ADDR REQUEST              # thin client: one framed request
-//! repro admin ADDR stats|shutdown|republish MODEL
+//! repro admin ADDR stats|shutdown|republish MODEL|republish --all
 //! repro cache gc|merge DIR...          # artifact-store lifecycle
 //! repro all                            # everything (one zoo per device)
 //! ```
@@ -81,6 +81,15 @@ struct Cli {
     /// builds without the flag. Unlike `--jobs` this changes results,
     /// so it is part of every artifact and measurement-cache key.
     speculative_keep: f64,
+    /// Reactor connection cap for `serve --listen`. 0 = server default
+    /// (see `rpc::DEFAULT_MAX_CONNS`); at the cap the listener pauses
+    /// and further connects wait in the kernel backlog.
+    max_conns: usize,
+    /// Idle-connection deadline in seconds for `serve --listen`. 0 =
+    /// server default (see `rpc::READ_STALL_TIMEOUT`).
+    idle_timeout_s: u64,
+    /// `repro admin ADDR republish --all`: republish every zoo model.
+    all: bool,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -105,6 +114,9 @@ fn parse_args() -> Result<Cli> {
         cache_budget: None,
         jobs: 0,
         speculative_keep: 1.0,
+        max_conns: 0,
+        idle_timeout_s: 0,
+        all: false,
     };
     while let Some(arg) = args.next() {
         let mut value = |name: &str| -> Result<String> {
@@ -136,6 +148,21 @@ fn parse_args() -> Result<Cli> {
                 }
                 cli.speculative_keep = keep;
             }
+            "--max-conns" => {
+                let n: usize = value("--max-conns")?.parse()?;
+                if n == 0 {
+                    bail!("--max-conns must be >= 1");
+                }
+                cli.max_conns = n;
+            }
+            "--idle-timeout" => {
+                let secs: u64 = value("--idle-timeout")?.parse()?;
+                if secs == 0 {
+                    bail!("--idle-timeout must be >= 1 (seconds)");
+                }
+                cli.idle_timeout_s = secs;
+            }
+            "--all" => cli.all = true,
             other if !other.starts_with("--") => {
                 if cli.target.is_none() {
                     cli.target = Some(other.to_string());
@@ -690,13 +717,20 @@ struct ServeState {
 /// new epoch and where the tuning came from — or a typed RPC error.
 type RepublishReply = Result<(u64, &'static str), transfer_tuning::service::rpc::RpcError>;
 
+/// What a landed `republish --all` reports back: the first and last
+/// epochs of the serial run (consecutive by construction — the ops
+/// loop is the only publisher) and how many models it covered.
+type RepublishAllReply = Result<(u64, u64, usize), transfer_tuning::service::rpc::RpcError>;
+
 /// Commands the admin hook forwards to the serve loop's main thread —
 /// the only thread that owns the artifact store and may exit the
-/// process. `Republish` carries a reply channel: the RPC worker blocks
-/// until the main thread lands the new tuning (clients see the epoch
-/// their republish produced, not a fire-and-forget ack).
+/// process. `Republish`/`RepublishAll` carry a reply channel: the RPC
+/// worker blocks until the main thread lands the new tuning(s)
+/// (clients see the epochs their republish produced, not a
+/// fire-and-forget ack).
 enum ServeControl {
     Republish(String, std::sync::mpsc::Sender<RepublishReply>),
+    RepublishAll(std::sync::mpsc::Sender<RepublishAllReply>),
 }
 
 /// `repro serve --listen ADDR`: the real RPC front end — a
@@ -773,21 +807,39 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     // Set by the shutdown RPC; polled together with the signal latch.
     let stop_flag = Arc::new(AtomicBool::new(false));
     // False until the streaming build completes: a republish that
-    // queued during the build would pin its pool worker in recv() for
-    // the rest of the build (at --jobs 1 that is the ONLY worker, and
-    // even the shutdown RPC would starve behind it) — so the hook
-    // refuses instead, and the operator retries once `stats` reports
-    // the zoo complete.
+    // queued during the build would park an RPC worker in recv() for
+    // the rest of the build (the producer owns the artifact-store
+    // borrow until then) — so the hook refuses instead, and the
+    // operator retries once `stats` reports the zoo complete.
     let republish_ready = Arc::new(AtomicBool::new(false));
     let (ctl_tx, ctl_rx) = mpsc::channel::<ServeControl>();
+    // Created before the server so the admin hook can close over the
+    // same gauges instance the reactor updates.
+    let gauges = Arc::new(rpc::ServerGauges::default());
     let admin: rpc::AdminHook = {
         let state = state.clone();
         let stop_flag = stop_flag.clone();
         let republish_ready = republish_ready.clone();
+        let gauges = gauges.clone();
+        let refuse_during_build = || {
+            rpc::error_json(&RpcError::new(
+                "admin_unavailable",
+                "initial zoo build in progress — retry once `stats` reports \
+                 the zoo complete",
+            ))
+        };
         Arc::new(move |req, service| match req {
             AdminRequest::Stats => {
                 let zoo = state.zoo.lock().expect("zoo stats lock").clone();
-                rpc::stats_json(service, Some((&zoo, state.complete.load(Ordering::SeqCst))))
+                let server = (
+                    gauges.connections.load(Ordering::Relaxed),
+                    gauges.queue_depth.load(Ordering::Relaxed),
+                );
+                rpc::stats_json(
+                    service,
+                    Some((&zoo, state.complete.load(Ordering::SeqCst))),
+                    Some(server),
+                )
             }
             AdminRequest::Shutdown => {
                 stop_flag.store(true, Ordering::SeqCst);
@@ -795,11 +847,7 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
             }
             AdminRequest::Republish { model } => {
                 if !republish_ready.load(Ordering::SeqCst) {
-                    return rpc::error_json(&RpcError::new(
-                        "admin_unavailable",
-                        "initial zoo build in progress — retry once `stats` reports \
-                         the zoo complete",
-                    ));
+                    return refuse_during_build();
                 }
                 let (reply_tx, reply_rx) = mpsc::channel();
                 if ctl_tx.send(ServeControl::Republish(model.clone(), reply_tx)).is_err() {
@@ -821,10 +869,49 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
                     )),
                 }
             }
+            AdminRequest::RepublishAll => {
+                if !republish_ready.load(Ordering::SeqCst) {
+                    return refuse_during_build();
+                }
+                let (reply_tx, reply_rx) = mpsc::channel();
+                if ctl_tx.send(ServeControl::RepublishAll(reply_tx)).is_err() {
+                    return rpc::error_json(&RpcError::new("internal", "server is stopping"));
+                }
+                match reply_rx.recv() {
+                    Ok(Ok((first_epoch, epoch, count))) => rpc::admin_ack_json(
+                        "republish",
+                        vec![
+                            ("all", Json::Bool(true)),
+                            ("first_epoch", Json::num(first_epoch as f64)),
+                            ("epoch", Json::num(epoch as f64)),
+                            ("models", Json::num(count as f64)),
+                        ],
+                    ),
+                    Ok(Err(e)) => rpc::error_json(&e),
+                    Err(_) => rpc::error_json(&RpcError::new(
+                        "internal",
+                        "server stopped before the republish landed",
+                    )),
+                }
+            }
         })
     };
 
-    let server = RpcServer::start_with_admin(bind, service.clone(), defaults, admin)?;
+    let mut server_config = rpc::ServerConfig::default();
+    if cli.max_conns > 0 {
+        server_config.max_conns = cli.max_conns;
+    }
+    if cli.idle_timeout_s > 0 {
+        server_config.idle_timeout = std::time::Duration::from_secs(cli.idle_timeout_s);
+    }
+    let server = RpcServer::start_with_config(
+        bind,
+        service.clone(),
+        defaults,
+        admin,
+        server_config,
+        gauges,
+    )?;
     eprintln!(
         "[rpc] listening on {} (epoch 0; sources stream in as tunings land)",
         server.local_addr()
@@ -835,7 +922,7 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     // Phase 1: the streaming build. Stop requests are honored between
     // landings; republish requests are refused (`republish_ready` is
     // still false — the producer owns the artifact-store borrow, and a
-    // queued republish would pin a pool worker for the whole build).
+    // queued republish would park an RPC worker for the whole build).
     let mut producer = ZooProducer::new(config.clone(), artifacts.as_mut());
     let total = producer.models().len();
     debug_assert_eq!(producer.zoo_key(), zoo_key, "seed/save keys must agree");
@@ -905,6 +992,43 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
                 };
                 let _ = reply.send(result);
             }
+            Ok(ServeControl::RepublishAll(reply)) => {
+                // Serial on purpose: the ops loop is the only
+                // publisher, so the run lands at strictly consecutive
+                // epochs [first_epoch, epoch] and `stats` observers see
+                // a totally ordered refresh.
+                let zoo_models = models::all_models();
+                eprintln!("[rpc] republish --all: {} models", zoo_models.len());
+                let mut first_epoch = 0u64;
+                let mut last_epoch = 0u64;
+                let mut count = 0usize;
+                for graph in zoo_models {
+                    let name = graph.name.clone();
+                    let (epoch, cost) = republish_model(
+                        graph,
+                        config.clone(),
+                        artifacts.as_mut(),
+                        &service,
+                        &mut |line| eprintln!("  {line}"),
+                    );
+                    {
+                        let mut zoo = state.zoo.lock().expect("zoo stats lock");
+                        zoo.models_tuned += cost.models_tuned;
+                        zoo.models_from_artifacts += cost.models_from_artifacts;
+                        zoo.trials_run += cost.trials_run;
+                        zoo.tuning_seconds_charged += cost.tuning_seconds_charged;
+                    }
+                    let origin =
+                        if cost.models_from_artifacts == 1 { "artifact" } else { "tuned" };
+                    eprintln!("[rpc] store epoch {epoch}: republished {name} ({origin})");
+                    if count == 0 {
+                        first_epoch = epoch;
+                    }
+                    last_epoch = epoch;
+                    count += 1;
+                }
+                let _ = reply.send(Ok((first_epoch, last_epoch, count)));
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
@@ -970,14 +1094,15 @@ fn cmd_call(cli: &Cli) -> Result<()> {
     emit_rpc_payload(&rpc_roundtrip(&addr, request)?)
 }
 
-/// `repro admin ADDR stats|shutdown|republish MODEL`: the operator
-/// verbs, encoded for you. `stats` reports serving + build state;
-/// `shutdown` asks the server to drain and persist; `republish` swaps a
-/// refreshed tuning into the live service at `epoch + 1`.
+/// `repro admin ADDR stats|shutdown|republish MODEL|republish --all`:
+/// the operator verbs, encoded for you. `stats` reports serving + build
+/// state; `shutdown` asks the server to drain and persist; `republish`
+/// swaps a refreshed tuning into the live service at `epoch + 1`
+/// (`--all` walks the whole zoo at consecutive epochs).
 fn cmd_admin(cli: &Cli) -> Result<()> {
     use transfer_tuning::util::json::Json;
 
-    const USAGE: &str = "usage: repro admin ADDR stats|shutdown|republish MODEL";
+    const USAGE: &str = "usage: repro admin ADDR stats|shutdown|republish MODEL|republish --all";
     let addr = cli.target.clone().context(USAGE)?;
     let op = cli.rest.first().context(USAGE)?;
     let expect_args = |n: usize| -> Result<()> {
@@ -993,8 +1118,16 @@ fn cmd_admin(cli: &Cli) -> Result<()> {
             expect_args(1)?;
             Json::obj(vec![("op", Json::str(op.as_str()))]).to_compact()
         }
+        "republish" if cli.all => {
+            expect_args(1)?;
+            Json::obj(vec![("op", Json::str("republish")), ("all", Json::Bool(true))])
+                .to_compact()
+        }
         "republish" => {
-            let model = cli.rest.get(1).context("usage: repro admin ADDR republish MODEL")?;
+            let model = cli
+                .rest
+                .get(1)
+                .context("usage: repro admin ADDR republish MODEL (or republish --all)")?;
             expect_args(2)?;
             Json::obj(vec![("op", Json::str("republish")), ("model", Json::str(model.as_str()))])
                 .to_compact()
@@ -1198,6 +1331,8 @@ COMMANDS
   admin ADDR stats            report epoch/sources/cache/build state
   admin ADDR republish MODEL  re-tune (or re-load) MODEL and swap it into
                               the live service at epoch+1
+  admin ADDR republish --all  republish every zoo model serially, landing
+                              at consecutive epochs
   admin ADDR shutdown         drain connections, persist the warmed cache
                               (SIGINT/SIGTERM run the same teardown)
   cache gc --cache-dir D --cache-budget BYTES
@@ -1224,6 +1359,12 @@ FLAGS
   --requests FILE session-request JSONL for `serve`
   --listen ADDR   TCP bind address for the `serve` RPC front end
                   (e.g. 127.0.0.1:7461; port 0 picks one)
+  --max-conns N   cap on concurrently open RPC connections for `serve
+                  --listen` (default 16384); at the cap the listener
+                  pauses and the kernel backlog queues new connects
+  --idle-timeout SECS
+                  reap RPC connections with no in-flight traffic after
+                  SECS of silence (default 30)
   --shards N      measurement-cache shards for `serve` (default 8)
   --cache-budget BYTES
                   artifact-store size budget: every persist phase GCs the

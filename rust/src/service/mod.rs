@@ -43,8 +43,10 @@
 //! Proofs live in `rust/tests/service_stress.rs` and
 //! `rust/tests/streaming_service.rs`.
 
+pub mod reactor;
 pub mod rpc;
 pub mod shard;
+pub mod timer;
 
 pub use shard::{measure_pairs_sharded, ShardedMeasureCache};
 
@@ -356,6 +358,17 @@ impl ScheduleService {
     /// Record count of the current merged-store snapshot (admin stats).
     pub fn store_records(&self) -> usize {
         self.snapshot().merged.records.len()
+    }
+
+    /// Per-source record counts of the current snapshot, sorted by
+    /// source name (admin stats). Cheap: reads the pre-split per-model
+    /// sub-stores, no merging.
+    pub fn source_record_counts(&self) -> Vec<(String, usize)> {
+        self.snapshot()
+            .sources
+            .iter()
+            .map(|(name, store)| (name.clone(), store.records.len()))
+            .collect()
     }
 
     /// Entries resident in the sharded measurement cache (admin stats).

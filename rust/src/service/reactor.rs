@@ -1,0 +1,1128 @@
+//! Readiness-driven connection reactor: thousands of idle connections
+//! on one thread.
+//!
+//! PR 3–6 served RPC connections from a bounded worker pool — one
+//! *thread* per live connection, so concurrency was capped at `--jobs`
+//! and a silent client pinned a worker for `READ_STALL_TIMEOUT`. This
+//! module inverts that: all sockets are nonblocking and registered with
+//! one readiness poller (raw `epoll(7)` FFI on Linux, same
+//! no-dependency `extern "C"` discipline as the `signal` shim in
+//! `main.rs`; a portable busy-poll fallback elsewhere), and a single
+//! **event-loop thread** owns every connection:
+//!
+//! * it accepts (until `max_conns`), reads, and accumulates partial
+//!   frames per connection — a slowloris client dripping one byte per
+//!   write costs a buffer, not a thread;
+//! * complete, decoded frames become jobs on a queue drained by
+//!   `jobs`-many **worker threads**, which only ever run the supplied
+//!   [`Handler`] on a full payload — they never touch a socket;
+//! * replies come back to the event loop (over a loopback wakeup
+//!   socket) and are written through the connection's outbound buffer,
+//!   so a client that stops reading stalls its buffer, not a worker;
+//! * idle, read-stall, and write-stall deadlines live in a hashed
+//!   [`TimerWheel`] — arming is O(1), and the loop harvests expiries
+//!   once per tick.
+//!
+//! The reactor knows framing (`u32_be` length prefix, a length cap, a
+//! UTF-8 requirement) but no JSON: payload semantics live entirely in
+//! the [`Handler`], and framing-violation replies are produced by the
+//! caller's [`ViolationHook`] so the wire error shapes stay owned by
+//! `service::rpc`. Per-connection ordering is strict: replies are
+//! written in request order, and a violation's error frame (or a clean
+//! close) is sequenced *after* every earlier request's reply via a
+//! close sentinel in the connection's work queue.
+//!
+//! Thread accounting (the bench-enforced invariant): one event loop +
+//! `jobs` workers, regardless of connection count — a server under
+//! 10 000 idle connections runs `jobs + 1` threads.
+
+use crate::service::timer::{TimerWheel, TICK_MS};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serve one complete request payload, returning the reply payload.
+/// Runs on a worker thread; must never panic on hostile input.
+pub type Handler = Arc<dyn Fn(&str) -> String + Send + Sync>;
+
+/// Produce the reply payload for a framing violation (sent best-effort
+/// before the connection closes). Keeps wire error shapes out of the
+/// reactor.
+pub type ViolationHook = Arc<dyn Fn(&FrameViolation) -> String + Send + Sync>;
+
+/// A framing-layer violation, reported to the [`ViolationHook`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FrameViolation {
+    /// Declared payload length exceeds the configured cap.
+    Oversized(u32),
+    /// Stream ended inside a header or payload.
+    Truncated,
+    /// Payload bytes are not UTF-8.
+    Utf8,
+}
+
+/// Reactor tuning knobs. The caller resolves every default (the
+/// reactor imposes none), so `service::rpc` remains the single owner
+/// of wire-facing constants.
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Worker threads executing the [`Handler`]; 0 means the global
+    /// `--jobs` knob via [`effective_jobs`](crate::coordinator::effective_jobs).
+    pub jobs: usize,
+    /// Live-connection cap: at the cap the listener pauses (connections
+    /// queue in the kernel backlog) and resumes when a slot frees.
+    pub max_conns: usize,
+    /// Close a connection with no in-flight work and no partial frame
+    /// after this long without a byte.
+    pub idle_timeout: Duration,
+    /// Close a connection stuck mid-frame (slowloris) after this long
+    /// without progress.
+    pub read_stall: Duration,
+    /// Close a connection whose outbound buffer makes no progress (a
+    /// client that stopped reading) after this long.
+    pub write_stall: Duration,
+    /// Frame payload cap, both directions.
+    pub max_frame_len: u32,
+}
+
+/// Live serving gauges, exported for the `stats` admin op: updated by
+/// the event loop (connections) and the job queue (queue depth).
+#[derive(Debug, Default)]
+pub struct ServerGauges {
+    /// Connections currently registered with the reactor.
+    pub connections: AtomicUsize,
+    /// Decoded requests queued for a worker (excludes in-execution).
+    pub queue_depth: AtomicUsize,
+}
+
+/// Stop reading a connection once this many decoded requests are
+/// already queued on it (level-triggered: reads resume as replies
+/// drain). Bounds per-connection memory under a blasting client.
+const PENDING_PAUSE: usize = 32;
+/// Hard parse bound per connection (> [`PENDING_PAUSE`] so one read's
+/// residue still parses after the pause engages).
+const PENDING_LIMIT: usize = 64;
+
+const TOK_LISTENER: u64 = 0;
+const TOK_WAKE: u64 = 1;
+const TOK_FIRST_CONN: u64 = 2;
+
+fn dur_ms(d: Duration) -> u64 {
+    (d.as_millis() as u64).max(1)
+}
+
+#[cfg(unix)]
+fn sock_fd<T: std::os::unix::io::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn sock_fd<T>(_s: &T) -> i32 {
+    -1
+}
+
+/// One readiness report from the poller.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    token: u64,
+    readable: bool,
+    writable: bool,
+    err: bool,
+}
+
+/// Linux backend: raw `epoll(7)` via `extern "C"`, no crates. Level-
+/// triggered on purpose — combined with per-connection interest flags
+/// it needs no readiness bookkeeping beyond what the kernel holds.
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::Event;
+
+    // glibc packs epoll_event on x86_64 only; mirroring that layout is
+    // what makes the raw calls ABI-correct on both x86_64 and aarch64.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+
+    pub struct Poller {
+        epfd: i32,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> std::io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 256] })
+        }
+
+        fn ctl(&mut self, op: i32, fd: i32, token: u64, r: bool, w: bool) -> std::io::Result<()> {
+            let events = if r { EPOLLIN } else { 0 } | if w { EPOLLOUT } else { 0 };
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&mut self, fd: i32, token: u64, r: bool, w: bool) -> std::io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, r, w)
+        }
+
+        pub fn modify(&mut self, fd: i32, token: u64, r: bool, w: bool) -> std::io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, r, w)
+        }
+
+        pub fn remove(&mut self, fd: i32, token: u64) -> std::io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, token, false, false)
+        }
+
+        pub fn wait(&mut self, timeout_ms: u64, out: &mut Vec<Event>) {
+            let timeout = timeout_ms.min(i32::MAX as u64) as i32;
+            let cap = self.buf.len() as i32;
+            let n = unsafe { epoll_wait(self.epfd, self.buf.as_mut_ptr(), cap, timeout) };
+            if n < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.kind() != std::io::ErrorKind::Interrupted {
+                    // Persistent failure: pace the loop instead of
+                    // spinning hot on a broken epoll fd.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                return;
+            }
+            for ev in self.buf.iter().take(n as usize).copied() {
+                // Copy packed fields by value — never by reference.
+                let events = ev.events;
+                let data = ev.data;
+                out.push(Event {
+                    token: data,
+                    readable: events & EPOLLIN != 0,
+                    writable: events & EPOLLOUT != 0,
+                    err: events & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+/// Portable fallback backend: a paced busy-poll that reports every
+/// registered interest as ready each tick. Spurious readiness is
+/// harmless against nonblocking sockets (reads/writes just return
+/// `WouldBlock`); the cost is a ~2 ms poll cadence instead of a true
+/// kernel wait — correct everywhere, efficient only on Linux.
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use super::Event;
+    use std::collections::HashMap;
+
+    pub struct Poller {
+        interests: HashMap<u64, (bool, bool)>,
+    }
+
+    impl Poller {
+        pub fn new() -> std::io::Result<Poller> {
+            Ok(Poller { interests: HashMap::new() })
+        }
+
+        pub fn add(&mut self, _fd: i32, token: u64, r: bool, w: bool) -> std::io::Result<()> {
+            self.interests.insert(token, (r, w));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, _fd: i32, token: u64, r: bool, w: bool) -> std::io::Result<()> {
+            self.interests.insert(token, (r, w));
+            Ok(())
+        }
+
+        pub fn remove(&mut self, _fd: i32, token: u64) -> std::io::Result<()> {
+            self.interests.remove(&token);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout_ms: u64, out: &mut Vec<Event>) {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 2)));
+            for (&token, &(r, w)) in &self.interests {
+                if r || w {
+                    out.push(Event { token, readable: r, writable: w, err: false });
+                }
+            }
+        }
+    }
+}
+
+use sys::Poller;
+
+/// Per-connection work item. `Close` is a *sentinel*: it sequences the
+/// end of a connection (optionally with a final error frame) after
+/// every earlier request's reply, preserving the pool server's strict
+/// reply-then-error ordering under asynchronous workers.
+enum Work {
+    Request(String),
+    Close(Option<String>),
+}
+
+/// Which deadline a connection is currently under. `Busy` = none (work
+/// is in flight; progress is the worker's to make).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum DeadKind {
+    Idle,
+    ReadStall,
+    WriteStall,
+    Busy,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Accumulated unparsed inbound bytes (at most one partial frame
+    /// plus parse-paused residue).
+    buf_in: Vec<u8>,
+    /// Encoded outbound frames not yet accepted by the kernel.
+    buf_out: Vec<u8>,
+    /// Flushed prefix of `buf_out` (compacted on full flush).
+    out_pos: usize,
+    /// Decoded requests (and at most one trailing close sentinel)
+    /// awaiting dispatch, in arrival order.
+    pending: VecDeque<Work>,
+    /// One request is with a worker; replies stay ordered because a
+    /// connection never has two.
+    in_flight: bool,
+    /// No further bytes will be read (EOF, violation, or drain).
+    read_closed: bool,
+    /// Close once `buf_out` is fully flushed.
+    closing: bool,
+    /// Currently registered poller interest (avoids redundant `ctl`s).
+    int_r: bool,
+    int_w: bool,
+    deadline: Option<u64>,
+    kind: DeadKind,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf_in: Vec::new(),
+            buf_out: Vec::new(),
+            out_pos: 0,
+            pending: VecDeque::new(),
+            in_flight: false,
+            read_closed: false,
+            closing: false,
+            int_r: true,
+            int_w: false,
+            deadline: None,
+            kind: DeadKind::Idle,
+        }
+    }
+
+    fn has_unflushed(&self) -> bool {
+        self.out_pos < self.buf_out.len()
+    }
+
+    fn unflushed_len(&self) -> usize {
+        self.buf_out.len() - self.out_pos
+    }
+}
+
+/// Append one framed payload to an outbound buffer. `false` when the
+/// payload exceeds the frame cap (caller closes, mirroring the pool
+/// server's `encode_frame` failure path).
+fn append_frame(buf: &mut Vec<u8>, payload: &str, max_frame_len: u32) -> bool {
+    if payload.len() as u64 > max_frame_len as u64 {
+        return false;
+    }
+    buf.reserve(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload.as_bytes());
+    true
+}
+
+/// Flush as much of `buf_out` as the kernel will take. `Ok(bytes)` on
+/// progress-or-block, `Err(())` on a dead peer.
+fn flush_conn(conn: &mut Conn) -> Result<usize, ()> {
+    let mut wrote = 0usize;
+    loop {
+        if conn.out_pos >= conn.buf_out.len() {
+            conn.buf_out.clear();
+            conn.out_pos = 0;
+            break;
+        }
+        match (&conn.stream).write(&conn.buf_out[conn.out_pos..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => {
+                conn.out_pos += n;
+                wrote += n;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+    // Compact a large flushed prefix so a long-lived slow reader does
+    // not pin the high-water mark forever.
+    if conn.out_pos >= 64 * 1024 && conn.has_unflushed() {
+        conn.buf_out.drain(..conn.out_pos);
+        conn.out_pos = 0;
+    }
+    Ok(wrote)
+}
+
+struct JobState {
+    queue: VecDeque<(u64, String)>,
+    closed: bool,
+}
+
+/// Complete-requests queue between the event loop and the workers.
+struct JobQueue {
+    state: Mutex<JobState>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            state: Mutex::new(JobState { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().expect("job queue").closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// State shared between the public handle, the workers, and the event
+/// loop.
+struct Shared {
+    stop: AtomicBool,
+    gauges: Arc<ServerGauges>,
+    /// Write end of the loopback wakeup channel (nonblocking; one byte
+    /// per nudge, coalesced by the event loop's drain).
+    wake_tx: TcpStream,
+    /// Completed (connection token, reply payload) pairs awaiting the
+    /// event loop.
+    done: Mutex<Vec<(u64, String)>>,
+}
+
+impl Shared {
+    fn wake(&self) {
+        // `WouldBlock` means bytes are already pending — the loop will
+        // wake regardless, so every error here is ignorable.
+        let _ = (&self.wake_tx).write(&[1u8]);
+    }
+}
+
+/// A loopback socket pair standing in for `pipe(2)`: std-only, works
+/// under both poller backends. The accept is verified against the
+/// connector's local address so a stray connect to the ephemeral
+/// listener cannot become our wakeup channel.
+fn wake_pair() -> anyhow::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind((std::net::Ipv4Addr::LOCALHOST, 0))
+        .map_err(|e| anyhow::anyhow!("binding wakeup listener: {e}"))?;
+    let addr = listener.local_addr()?;
+    let tx = TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("wakeup connect: {e}"))?;
+    let local = tx.local_addr()?;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let (rx, peer) = listener.accept().map_err(|e| anyhow::anyhow!("wakeup accept: {e}"))?;
+        if peer == local {
+            tx.set_nonblocking(true)?;
+            rx.set_nonblocking(true)?;
+            return Ok((tx, rx));
+        }
+        if Instant::now() > deadline {
+            anyhow::bail!("wakeup channel: could not pair loopback sockets");
+        }
+        // A stray connection raced our pair: drop it and re-accept.
+        drop(rx);
+    }
+}
+
+fn worker_loop(shared: &Shared, jobs: &JobQueue, handler: &Handler) {
+    loop {
+        let job = {
+            let mut st = jobs.state.lock().expect("job queue");
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    shared.gauges.queue_depth.store(st.queue.len(), Ordering::Relaxed);
+                    break Some(j);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = jobs.ready.wait(st).expect("job queue");
+            }
+        };
+        let Some((token, payload)) = job else { return };
+        let reply = handler(&payload);
+        shared.done.lock().expect("done list").push((token, reply));
+        shared.wake();
+    }
+}
+
+/// The readiness-driven server core. Public API mirrors what
+/// [`RpcServer`](crate::service::rpc::RpcServer) needs: start, address,
+/// gauges, graceful shutdown.
+pub struct Reactor {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    evloop: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Bind `bind` and start the event loop plus worker threads.
+    pub fn start(
+        bind: &str,
+        handler: Handler,
+        violation: ViolationHook,
+        cfg: ReactorConfig,
+        gauges: Arc<ServerGauges>,
+    ) -> anyhow::Result<Reactor> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| anyhow::anyhow!("binding RPC listener on {bind}: {e}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let (wake_tx, wake_rx) = wake_pair()?;
+        let mut poller = Poller::new().map_err(|e| anyhow::anyhow!("creating poller: {e}"))?;
+        poller
+            .add(sock_fd(&listener), TOK_LISTENER, true, false)
+            .map_err(|e| anyhow::anyhow!("registering listener: {e}"))?;
+        poller
+            .add(sock_fd(&wake_rx), TOK_WAKE, true, false)
+            .map_err(|e| anyhow::anyhow!("registering wakeup socket: {e}"))?;
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            gauges,
+            wake_tx,
+            done: Mutex::new(Vec::new()),
+        });
+        let jobs = Arc::new(JobQueue::new());
+        let n_workers =
+            if cfg.jobs == 0 { crate::coordinator::effective_jobs(0) } else { cfg.jobs };
+        let mut workers = Vec::with_capacity(n_workers);
+        for wi in 0..n_workers {
+            let w_shared = shared.clone();
+            let w_jobs = jobs.clone();
+            let w_handler = handler.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("tt-rpc-{wi}"))
+                .spawn(move || worker_loop(&w_shared, &w_jobs, &w_handler));
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    jobs.close();
+                    for worker in workers {
+                        let _ = worker.join();
+                    }
+                    return Err(anyhow::anyhow!("spawning RPC worker {wi}: {e}"));
+                }
+            }
+        }
+        let ev = EvLoop {
+            listener: Some(listener),
+            poller,
+            wake_rx,
+            conns: HashMap::new(),
+            wheel: TimerWheel::new(),
+            t0: Instant::now(),
+            next_token: TOK_FIRST_CONN,
+            shared: shared.clone(),
+            jobs: jobs.clone(),
+            cfg,
+            violation,
+            live_jobs: 0,
+            draining: false,
+            listener_paused: false,
+        };
+        let spawned =
+            std::thread::Builder::new().name("tt-rpc-evloop".to_string()).spawn(move || ev.run());
+        let evloop = match spawned {
+            Ok(handle) => handle,
+            Err(e) => {
+                jobs.close();
+                for worker in workers {
+                    let _ = worker.join();
+                }
+                return Err(anyhow::anyhow!("spawning RPC event loop: {e}"));
+            }
+        };
+        Ok(Reactor { addr, shared, evloop: Some(evloop), workers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The live serving gauges (shared with whoever answers `stats`).
+    pub fn gauges(&self) -> Arc<ServerGauges> {
+        self.shared.gauges.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, discard unread/undecoded
+    /// input, flush every in-flight reply (bounded by the write-stall
+    /// deadline), then join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        if let Some(handle) = self.evloop.take() {
+            let _ = handle.join();
+        }
+        // The event loop closes the job queue on exit, so the worker
+        // joins below always terminate.
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        if self.evloop.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+/// The event-loop state, owned by its thread.
+struct EvLoop {
+    listener: Option<TcpListener>,
+    poller: Poller,
+    wake_rx: TcpStream,
+    conns: HashMap<u64, Conn>,
+    wheel: TimerWheel,
+    t0: Instant,
+    next_token: u64,
+    shared: Arc<Shared>,
+    jobs: Arc<JobQueue>,
+    cfg: ReactorConfig,
+    violation: ViolationHook,
+    /// Jobs submitted but not yet drained from `done` (drain exit gate).
+    live_jobs: usize,
+    draining: bool,
+    listener_paused: bool,
+}
+
+impl EvLoop {
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut fired: Vec<u64> = Vec::new();
+        loop {
+            if !self.draining && self.shared.stop.load(Ordering::SeqCst) {
+                self.begin_drain();
+            }
+            if self.draining && self.conns.is_empty() && self.live_jobs == 0 {
+                break;
+            }
+            // Idle server: nothing is deadline-bound, sleep long. Any
+            // live connection: wake at timer granularity so deadlines
+            // fire on time.
+            let timeout = if self.conns.is_empty() && !self.draining { 500 } else { TICK_MS };
+            events.clear();
+            self.poller.wait(timeout, &mut events);
+            for ev in &events {
+                match ev.token {
+                    TOK_LISTENER => self.on_accept(),
+                    TOK_WAKE => self.drain_wake(),
+                    tok => self.on_conn_event(tok, *ev),
+                }
+            }
+            self.drain_done();
+            let now = self.now_ms();
+            fired.clear();
+            self.wheel.advance(now, &mut fired);
+            for &tok in &fired {
+                // Lazy cancellation: the wheel may report stale or
+                // re-armed entries; the connection's own deadline is
+                // authoritative.
+                let due = self.conns.get(&tok).and_then(|c| c.deadline);
+                if let Some(d) = due {
+                    if d <= now {
+                        // Deadlines close silently: a timed-out
+                        // connection is a clean end, no error frame
+                        // (same contract as the pool server's
+                        // read/write timeouts).
+                        self.close_conn(tok);
+                    }
+                }
+            }
+        }
+        self.jobs.close();
+    }
+
+    fn on_accept(&mut self) {
+        loop {
+            if self.draining || self.listener_paused {
+                return;
+            }
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let tok = self.next_token;
+                    self.next_token += 1;
+                    let fd = sock_fd(&stream);
+                    if self.poller.add(fd, tok, true, false).is_err() {
+                        // Refuse (close by drop) rather than hold a
+                        // connection the loop cannot observe.
+                        continue;
+                    }
+                    let now = self.now_ms();
+                    let mut conn = Conn::new(stream);
+                    conn.deadline = Some(now + dur_ms(self.cfg.idle_timeout));
+                    conn.kind = DeadKind::Idle;
+                    self.wheel.schedule(tok, now + dur_ms(self.cfg.idle_timeout));
+                    self.conns.insert(tok, conn);
+                    self.shared.gauges.connections.store(self.conns.len(), Ordering::Relaxed);
+                    if self.conns.len() >= self.cfg.max_conns {
+                        self.set_listener_interest(false);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn set_listener_interest(&mut self, on: bool) {
+        if let Some(listener) = &self.listener {
+            let fd = sock_fd(listener);
+            let _ = self.poller.modify(fd, TOK_LISTENER, on, false);
+        }
+        self.listener_paused = !on;
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn on_conn_event(&mut self, tok: u64, ev: Event) {
+        if !self.conns.contains_key(&tok) {
+            return;
+        }
+        let mut progress = false;
+        if ev.readable {
+            progress = self.on_readable(tok);
+        }
+        if ev.err && !ev.readable {
+            // Error/hangup with nothing left to read: the peer is gone.
+            self.close_conn(tok);
+            return;
+        }
+        if (ev.readable || ev.writable) && self.conns.contains_key(&tok) {
+            self.advance_conn(tok, progress);
+        }
+    }
+
+    /// Read what the kernel has (bounded per event), parse complete
+    /// frames into the work queue. Returns whether any bytes arrived.
+    fn on_readable(&mut self, tok: u64) -> bool {
+        let mut progress = false;
+        // None = still open; Some(true) = EOF; Some(false) = I/O error
+        // (both end reads; only a mid-frame EOF earns an error frame).
+        let mut end: Option<bool> = None;
+        {
+            let Some(conn) = self.conns.get_mut(&tok) else { return false };
+            let mut chunk = [0u8; 16 * 1024];
+            let mut rounds = 0;
+            loop {
+                if !conn.read_closed && conn.pending.len() >= PENDING_LIMIT {
+                    break;
+                }
+                if rounds >= 8 {
+                    break;
+                }
+                rounds += 1;
+                match (&conn.stream).read(&mut chunk) {
+                    Ok(0) => {
+                        end = Some(true);
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        // After a violation/drain the stream is dead to
+                        // us: drain-and-discard so level-triggered
+                        // readiness cannot spin.
+                        if !conn.read_closed {
+                            conn.buf_in.extend_from_slice(&chunk[..n]);
+                        }
+                        if n < chunk.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        end = Some(false);
+                        break;
+                    }
+                }
+            }
+        }
+        self.parse_frames(tok);
+        if let Some(eof) = end {
+            self.mark_read_end(tok, eof);
+            progress = true;
+        }
+        progress
+    }
+
+    /// Split `buf_in` into complete frames. A framing violation queues
+    /// a close sentinel (with the hook's error payload) and stops
+    /// reading — the stream cannot be resynchronized.
+    fn parse_frames(&mut self, tok: u64) {
+        let max_frame_len = self.cfg.max_frame_len;
+        let violation = self.violation.clone();
+        let draining = self.draining;
+        let Some(conn) = self.conns.get_mut(&tok) else { return };
+        loop {
+            if conn.read_closed || conn.pending.len() >= PENDING_LIMIT {
+                break;
+            }
+            if conn.buf_in.len() < 4 {
+                break;
+            }
+            let len =
+                u32::from_be_bytes([conn.buf_in[0], conn.buf_in[1], conn.buf_in[2], conn.buf_in[3]]);
+            if len > max_frame_len {
+                let err = if draining {
+                    None
+                } else {
+                    Some(violation(&FrameViolation::Oversized(len)))
+                };
+                conn.pending.push_back(Work::Close(err));
+                conn.read_closed = true;
+                conn.buf_in.clear();
+                break;
+            }
+            let total = 4 + len as usize;
+            if conn.buf_in.len() < total {
+                break;
+            }
+            match std::str::from_utf8(&conn.buf_in[4..total]) {
+                Ok(payload) => {
+                    conn.pending.push_back(Work::Request(payload.to_string()));
+                    conn.buf_in.drain(..total);
+                }
+                Err(_) => {
+                    let err =
+                        if draining { None } else { Some(violation(&FrameViolation::Utf8)) };
+                    conn.pending.push_back(Work::Close(err));
+                    conn.read_closed = true;
+                    conn.buf_in.clear();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Reads are over (EOF or I/O error). A mid-frame EOF is a
+    /// truncation violation; anything else is a clean end. Either way
+    /// a close sentinel sequences the end after every queued request.
+    fn mark_read_end(&mut self, tok: u64, eof: bool) {
+        let violation = self.violation.clone();
+        let draining = self.draining;
+        let Some(conn) = self.conns.get_mut(&tok) else { return };
+        if conn.read_closed {
+            return;
+        }
+        conn.read_closed = true;
+        let err = if eof && !conn.buf_in.is_empty() && !draining {
+            Some(violation(&FrameViolation::Truncated))
+        } else {
+            None
+        };
+        conn.buf_in.clear();
+        conn.pending.push_back(Work::Close(err));
+    }
+
+    /// Dispatch the connection's next work item (one request in flight
+    /// at a time), then flush, re-deadline, and re-register interest.
+    fn advance_conn(&mut self, tok: u64, progress: bool) {
+        let mut progress = progress;
+        loop {
+            let submit = {
+                let Some(conn) = self.conns.get_mut(&tok) else { return };
+                if conn.in_flight || conn.closing {
+                    None
+                } else {
+                    match conn.pending.pop_front() {
+                        None => None,
+                        Some(Work::Request(payload)) => {
+                            conn.in_flight = true;
+                            Some(payload)
+                        }
+                        Some(Work::Close(err)) => {
+                            if let Some(payload) = err {
+                                // Best-effort error frame before close;
+                                // an over-cap payload just closes.
+                                let _ = append_frame(
+                                    &mut conn.buf_out,
+                                    &payload,
+                                    self.cfg.max_frame_len,
+                                );
+                            }
+                            conn.closing = true;
+                            progress = true;
+                            None
+                        }
+                    }
+                }
+            };
+            match submit {
+                Some(payload) => {
+                    self.submit(tok, payload);
+                    progress = true;
+                    break;
+                }
+                None => break,
+            }
+        }
+        self.finish_conn_io(tok, progress);
+    }
+
+    fn submit(&mut self, tok: u64, payload: String) {
+        self.live_jobs += 1;
+        let mut st = self.jobs.state.lock().expect("job queue");
+        st.queue.push_back((tok, payload));
+        self.shared.gauges.queue_depth.store(st.queue.len(), Ordering::Relaxed);
+        drop(st);
+        self.jobs.ready.notify_one();
+    }
+
+    /// Flush, close-if-drained, recompute the deadline, and update
+    /// poller interest for one connection.
+    fn finish_conn_io(&mut self, tok: u64, progress: bool) {
+        let now = self.now_ms();
+        let max_out = self.cfg.max_frame_len as usize;
+        let idle = dur_ms(self.cfg.idle_timeout);
+        let read_stall = dur_ms(self.cfg.read_stall);
+        let write_stall = dur_ms(self.cfg.write_stall);
+        let mut remove = false;
+        let mut schedule: Option<u64> = None;
+        let mut modify: Option<(i32, bool, bool)> = None;
+        {
+            let Some(conn) = self.conns.get_mut(&tok) else { return };
+            let mut progress = progress;
+            match flush_conn(conn) {
+                Err(()) => remove = true,
+                Ok(wrote) => {
+                    progress = progress || wrote > 0;
+                    if conn.closing && !conn.has_unflushed() {
+                        remove = true;
+                    } else {
+                        let kind = if conn.has_unflushed() {
+                            DeadKind::WriteStall
+                        } else if conn.in_flight || !conn.pending.is_empty() {
+                            DeadKind::Busy
+                        } else if !conn.buf_in.is_empty() {
+                            DeadKind::ReadStall
+                        } else {
+                            DeadKind::Idle
+                        };
+                        // Refresh the deadline only on a kind change or
+                        // real progress: a spurious readiness report
+                        // (fallback poller, stray event) must not keep
+                        // a stalled connection alive.
+                        if kind != conn.kind || progress {
+                            conn.kind = kind;
+                            conn.deadline = match kind {
+                                DeadKind::Busy => None,
+                                DeadKind::Idle => Some(now + idle),
+                                DeadKind::ReadStall => Some(now + read_stall),
+                                DeadKind::WriteStall => Some(now + write_stall),
+                            };
+                            schedule = conn.deadline;
+                        }
+                        let want_r = !conn.read_closed
+                            && !conn.closing
+                            && conn.pending.len() < PENDING_PAUSE
+                            && conn.unflushed_len() <= max_out;
+                        let want_w = conn.has_unflushed();
+                        if want_r != conn.int_r || want_w != conn.int_w {
+                            conn.int_r = want_r;
+                            conn.int_w = want_w;
+                            modify = Some((sock_fd(&conn.stream), want_r, want_w));
+                        }
+                    }
+                }
+            }
+        }
+        if remove {
+            self.close_conn(tok);
+            return;
+        }
+        if let Some(due) = schedule {
+            self.wheel.schedule(tok, due);
+        }
+        if let Some((fd, r, w)) = modify {
+            let _ = self.poller.modify(fd, tok, r, w);
+        }
+    }
+
+    /// Hand completed replies back to their connections.
+    fn drain_done(&mut self) {
+        let done: Vec<(u64, String)> = {
+            let mut d = self.shared.done.lock().expect("done list");
+            std::mem::take(&mut *d)
+        };
+        for (tok, reply) in done {
+            self.live_jobs -= 1;
+            let exists = match self.conns.get_mut(&tok) {
+                None => false, // connection died while its job ran
+                Some(conn) => {
+                    conn.in_flight = false;
+                    if !append_frame(&mut conn.buf_out, &reply, self.cfg.max_frame_len) {
+                        conn.closing = true;
+                    }
+                    true
+                }
+            };
+            if exists {
+                self.advance_conn(tok, true);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, tok: u64) {
+        if let Some(conn) = self.conns.remove(&tok) {
+            let fd = sock_fd(&conn.stream);
+            let _ = self.poller.remove(fd, tok);
+            // Dropping the stream closes the socket.
+        }
+        self.shared.gauges.connections.store(self.conns.len(), Ordering::Relaxed);
+        if self.listener_paused && !self.draining && self.conns.len() < self.cfg.max_conns {
+            self.set_listener_interest(true);
+        }
+    }
+
+    /// Enter drain: stop accepting, drop queued-but-unstarted work
+    /// (their connections close unanswered — accepting no new work is
+    /// what shutdown means), discard all unread input, and keep only
+    /// connections with an in-flight request or unflushed reply bytes,
+    /// each bounded by the write-stall deadline.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        if let Some(listener) = self.listener.take() {
+            let _ = self.poller.remove(sock_fd(&listener), TOK_LISTENER);
+        }
+        let cleared: Vec<u64> = {
+            let mut st = self.jobs.state.lock().expect("job queue");
+            let toks = st.queue.drain(..).map(|(t, _)| t).collect();
+            self.shared.gauges.queue_depth.store(0, Ordering::Relaxed);
+            toks
+        };
+        for tok in cleared {
+            self.live_jobs -= 1;
+            if let Some(conn) = self.conns.get_mut(&tok) {
+                conn.in_flight = false;
+            }
+            self.close_conn(tok);
+        }
+        let now = self.now_ms();
+        let write_stall = dur_ms(self.cfg.write_stall);
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            let (remove, schedule, modify) = {
+                let Some(conn) = self.conns.get_mut(&tok) else { continue };
+                conn.buf_in.clear();
+                conn.pending.clear();
+                conn.read_closed = true;
+                if conn.in_flight {
+                    // Flush the reply when it lands, then close.
+                    conn.pending.push_back(Work::Close(None));
+                    conn.kind = DeadKind::Busy;
+                    conn.deadline = None;
+                    let want_w = conn.has_unflushed();
+                    let m = interest_delta(conn, false, want_w);
+                    (false, None, m)
+                } else if conn.has_unflushed() {
+                    conn.closing = true;
+                    conn.kind = DeadKind::WriteStall;
+                    conn.deadline = Some(now + write_stall);
+                    let m = interest_delta(conn, false, true);
+                    (false, conn.deadline, m)
+                } else {
+                    (true, None, None)
+                }
+            };
+            if remove {
+                self.close_conn(tok);
+                continue;
+            }
+            if let Some(due) = schedule {
+                self.wheel.schedule(tok, due);
+            }
+            if let Some((fd, r, w)) = modify {
+                let _ = self.poller.modify(fd, tok, r, w);
+            }
+        }
+    }
+}
+
+/// Compute (and record) an interest change for `conn`, returning the
+/// `modify` call to make, if any.
+fn interest_delta(conn: &mut Conn, want_r: bool, want_w: bool) -> Option<(i32, bool, bool)> {
+    if want_r == conn.int_r && want_w == conn.int_w {
+        return None;
+    }
+    conn.int_r = want_r;
+    conn.int_w = want_w;
+    Some((sock_fd(&conn.stream), want_r, want_w))
+}

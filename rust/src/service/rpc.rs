@@ -30,29 +30,33 @@
 //! a streaming zoo build publishing sources while the server runs, a
 //! reply is a pure function of (target, device, budget, seed, epoch).
 //!
-//! **Concurrency model.** Connections are served by a bounded worker
-//! pool sized by the global `--jobs`/`TT_JOBS` knob (the same knob as
-//! every other host fan-out — see `coordinator::jobs`), not by one
-//! thread per connection: excess connections queue at the acceptor and
-//! are served as workers free up, never dropped. A connection is a
-//! *session* and occupies its worker until the client closes, so
-//! long-lived idle clients at a tiny `--jobs` can starve the queue —
-//! operators should size `--jobs` for their expected concurrent
-//! sessions (the signal path to shutdown never queues).
+//! **Concurrency model.** Connections are owned by a readiness-driven
+//! reactor (see [`crate::service::reactor`]): one event-loop thread
+//! holds every socket nonblocking behind an epoll instance, reads and
+//! accumulates partial frames, and enforces idle/read-stall/write-stall
+//! deadlines from a timer wheel. Only *complete decoded* requests reach
+//! the worker pool sized by the global `--jobs`/`TT_JOBS` knob (the
+//! same knob as every other host fan-out — see `coordinator::jobs`),
+//! so a connection costs a thread only while one of its requests is
+//! executing: thousands of idle sessions cost buffers, not threads,
+//! and a hung or hostile client cannot pin a worker. Per-connection
+//! semantics are unchanged from the pool server — frames are answered
+//! strictly in order, one request of a connection in flight at a time.
 
+use super::reactor::{self, FrameViolation, Reactor, ReactorConfig};
 use super::{ScheduleService, SessionReply, SessionRequest};
 use crate::coordinator::CacheStats;
 use crate::device::DeviceProfile;
 use crate::report::ZooBuildStats;
 use crate::sched::serialize;
 use crate::util::json::{self, Json};
-use std::collections::VecDeque;
-use std::io::{Read, Write};
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::io::Read;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Duration;
+
+pub use super::reactor::ServerGauges;
 
 /// Hard cap on one frame's payload, both directions. Replies are a few
 /// hundred KiB at worst (one schedule per target kernel); 16 MiB keeps
@@ -61,28 +65,37 @@ pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
 
 /// Version of the wire schema: the frame format plus the request,
 /// response, and admin JSON shapes. v1 = session requests only (PR 3);
-/// v2 = admin ops (`stats` / `shutdown` / `republish`). Bump this with
-/// **any** protocol change, and update README §Wire protocol,
+/// v2 = admin ops (`stats` / `shutdown` / `republish`); v3 = the
+/// `stats` reply gains `source_records` + `server` gauges and
+/// `republish` accepts `"all":true`. Bump this with **any** protocol
+/// change, and update README §Wire protocol,
 /// `rust/tests/rpc_codec.rs`, and `rust/tests/integration_rpc.rs` in
 /// the same commit — CI's `format-drift` job fails a change to this
 /// file that does not touch all three together.
-pub const WIRE_PROTOCOL_VERSION: u64 = 2;
+pub const WIRE_PROTOCOL_VERSION: u64 = 3;
 
-/// How long a reply write may stall before the connection is declared
-/// dead. Bounds the drain phase of a shutdown: a worker mid-write
-/// toward a client that stopped reading errors out instead of pinning
-/// the join forever (the reason PR 3 closed both stream halves; the
-/// timeout lets shutdown close only the read half and still terminate).
+/// How long a connection's outbound buffer may make no progress (a
+/// client that stopped reading its replies) before the connection is
+/// declared dead. Bounds the drain phase of a shutdown: every
+/// unflushed reply either reaches its client or its connection is
+/// evicted within this window, so teardown always terminates.
 pub const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// How long a connection may sit idle (no request frame arriving)
-/// before the server reclaims its pool worker. A client that connects
-/// and then goes silent would otherwise pin a blocking read forever —
-/// and the pool serves one connection per worker, so at `--jobs 1` a
-/// single hung client starves every other connection. A timed-out read
-/// is treated as a clean connection end: the stream closes with no
-/// error frame, and the client is free to reconnect.
+/// Default for two reactor deadlines: how long a connection may sit
+/// **idle** (no request frame arriving; `--idle-timeout` overrides)
+/// and how long it may sit **mid-frame** without a byte of progress (a
+/// slowloris drip). Under the pool server either case pinned a worker
+/// for this long; under the reactor it only holds a buffer — the
+/// deadline now bounds resource tenure, not worker starvation. A
+/// timed-out connection is treated as a clean end: the stream closes
+/// with no error frame, and the client is free to reconnect.
 pub const READ_STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default cap on simultaneously-registered connections
+/// (`--max-conns` overrides). At the cap the listener pauses — further
+/// connects wait in the kernel backlog until a slot frees — so fd
+/// exhaustion degrades into queueing, never into accept-loop errors.
+pub const DEFAULT_MAX_CONNS: usize = 16384;
 
 /// Framing-layer failure. Everything above the byte stream (bad JSON,
 /// bad request fields) is reported in-band as an [`RpcError`] instead.
@@ -199,12 +212,15 @@ fn bad_request(message: impl Into<String>) -> RpcError {
 /// field. These drive the *server*, not a session: `Stats` reports the
 /// serving state, `Shutdown` asks the operations loop to drain and
 /// persist, `Republish` re-tunes (or re-loads) one model and swaps it
-/// into the live service at `epoch + 1`.
+/// into the live service at `epoch + 1`, and `RepublishAll`
+/// (`{"op":"republish","all":true}`) does that for every zoo model
+/// serially at consecutive epochs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum AdminRequest {
     Stats,
     Shutdown,
     Republish { model: String },
+    RepublishAll,
 }
 
 /// Any decoded request frame: a tenant session or an admin op.
@@ -230,12 +246,24 @@ pub fn parse_any_request(line: &str, defaults: &RpcDefaults) -> Result<Request, 
         "stats" => Ok(Request::Admin(AdminRequest::Stats)),
         "shutdown" => Ok(Request::Admin(AdminRequest::Shutdown)),
         "republish" => {
-            let model = match j.get("model") {
-                Some(Json::Str(s)) if !s.is_empty() => s.clone(),
-                Some(_) => return Err(bad_request("`model` must be a non-empty string")),
-                None => return Err(bad_request("republish needs `model`")),
+            let all = match j.get("all") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => return Err(bad_request("`all` must be a boolean")),
             };
-            Ok(Request::Admin(AdminRequest::Republish { model }))
+            let model = match j.get("model") {
+                Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
+                Some(_) => return Err(bad_request("`model` must be a non-empty string")),
+                None => None,
+            };
+            match (all, model) {
+                (true, Some(_)) => {
+                    Err(bad_request("republish takes `model` or `all:true`, not both"))
+                }
+                (true, None) => Ok(Request::Admin(AdminRequest::RepublishAll)),
+                (false, Some(model)) => Ok(Request::Admin(AdminRequest::Republish { model })),
+                (false, None) => Err(bad_request("republish needs `model`")),
+            }
         }
         other => Err(RpcError::new(
             "unknown_op",
@@ -371,14 +399,30 @@ pub fn parse_response(line: &str) -> anyhow::Result<RpcResponse> {
 /// Encode the `{"ok":true,"stats":{..}}` response of an admin `stats`
 /// op. The `zoo` half (build accounting + completion flag) exists only
 /// when an operations loop is attached — a bare [`RpcServer`] reports
-/// the serving state alone.
-pub fn stats_json(service: &ScheduleService, zoo: Option<(&ZooBuildStats, bool)>) -> Json {
+/// the serving state alone. The `server` half — live `(connections,
+/// queue_depth)` gauges — exists when the answering hook has a handle
+/// on the reactor's [`ServerGauges`]; it is plain numbers here so the
+/// encoding stays a pure, testable function.
+pub fn stats_json(
+    service: &ScheduleService,
+    zoo: Option<(&ZooBuildStats, bool)>,
+    server: Option<(usize, usize)>,
+) -> Json {
     let cache: CacheStats = service.cache_stats();
+    let source_records = service
+        .source_record_counts()
+        .into_iter()
+        .map(|(name, count)| (name, Json::num(count as f64)))
+        .collect::<Vec<_>>();
     let mut stats = vec![
         ("protocol", Json::num(WIRE_PROTOCOL_VERSION as f64)),
         ("epoch", Json::num(service.epoch() as f64)),
         ("sources", Json::arr(service.live_sources().into_iter().map(Json::Str))),
         ("store_records", Json::num(service.store_records() as f64)),
+        (
+            "source_records",
+            Json::obj(source_records.iter().map(|(n, c)| (n.as_str(), c.clone())).collect()),
+        ),
         (
             "cache",
             Json::obj(vec![
@@ -392,6 +436,15 @@ pub fn stats_json(service: &ScheduleService, zoo: Option<(&ZooBuildStats, bool)>
             ]),
         ),
     ];
+    if let Some((connections, queue_depth)) = server {
+        stats.push((
+            "server",
+            Json::obj(vec![
+                ("connections", Json::num(connections as f64)),
+                ("queue_depth", Json::num(queue_depth as f64)),
+            ]),
+        ));
+    }
     if let Some((z, complete)) = zoo {
         stats.push((
             "zoo",
@@ -427,8 +480,31 @@ pub type AdminHook = Arc<dyn Fn(&AdminRequest, &ScheduleService) -> Json + Send 
 /// refused with `admin_unavailable` rather than half-done.
 pub fn default_admin() -> AdminHook {
     Arc::new(|req, service| match req {
-        AdminRequest::Stats => stats_json(service, None),
-        AdminRequest::Shutdown | AdminRequest::Republish { .. } => error_json(&RpcError::new(
+        AdminRequest::Stats => stats_json(service, None, None),
+        AdminRequest::Shutdown
+        | AdminRequest::Republish { .. }
+        | AdminRequest::RepublishAll => error_json(&RpcError::new(
+            "admin_unavailable",
+            "this server has no operations loop attached (stats only)",
+        )),
+    })
+}
+
+/// [`default_admin`] plus live server gauges in the `stats` reply —
+/// what a bare [`RpcServer`] installs so its own reactor's connection
+/// count and queue depth are visible over the wire.
+pub fn default_admin_with_gauges(gauges: Arc<ServerGauges>) -> AdminHook {
+    Arc::new(move |req, service| match req {
+        AdminRequest::Stats => {
+            let server = (
+                gauges.connections.load(Ordering::Relaxed),
+                gauges.queue_depth.load(Ordering::Relaxed),
+            );
+            stats_json(service, None, Some(server))
+        }
+        AdminRequest::Shutdown
+        | AdminRequest::Republish { .. }
+        | AdminRequest::RepublishAll => error_json(&RpcError::new(
             "admin_unavailable",
             "this server has no operations loop attached (stats only)",
         )),
@@ -466,69 +542,109 @@ pub fn handle_request(service: &ScheduleService, defaults: &RpcDefaults, line: &
     handle_request_with(service, defaults, &default_admin(), line)
 }
 
-/// Live-connection registry: connection id -> duplicated handle, used
-/// to unblock readers on shutdown. Entries are removed when their
-/// connection completes, so a long-lived server does not leak one fd
-/// per connection served.
-type ConnMap = Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>;
-
-/// Accepted-but-unserved connections, waiting for a pool worker.
-struct ConnQueue {
-    queue: Mutex<VecDeque<(u64, TcpStream)>>,
-    ready: Condvar,
+/// Server-level knobs surfaced to `main.rs` (`--max-conns`,
+/// `--idle-timeout`) and to tests (millisecond stall deadlines). The
+/// frame cap is not a knob: [`MAX_FRAME_LEN`] is part of the wire
+/// contract.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Live-connection cap; the listener pauses at the cap.
+    pub max_conns: usize,
+    /// Idle deadline (connected, no request in flight, no bytes).
+    pub idle_timeout: Duration,
+    /// Mid-frame progress deadline (slowloris bound).
+    pub read_stall: Duration,
+    /// Outbound-progress deadline (client stopped reading).
+    pub write_stall: Duration,
 }
 
-/// The multi-threaded TCP server: one accept thread feeding a bounded
-/// worker pool (sized by the global `--jobs`/`TT_JOBS` knob via
-/// [`effective_jobs`](crate::coordinator::effective_jobs)), all workers
-/// sharing one [`ScheduleService`] handle (sessions contend only on
-/// the sharded measurement cache). Connections beyond the pool size
-/// queue at the acceptor — served in arrival order, never dropped.
-/// [`RpcServer::shutdown`] stops accepting, drains in-flight replies,
-/// unblocks every connection's reader, and joins all threads.
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: DEFAULT_MAX_CONNS,
+            idle_timeout: READ_STALL_TIMEOUT,
+            read_stall: READ_STALL_TIMEOUT,
+            write_stall: WRITE_STALL_TIMEOUT,
+        }
+    }
+}
+
+/// The TCP server: a thin wire-protocol binding over the readiness
+/// [`Reactor`]. One event-loop thread owns every connection; a worker
+/// pool sized by the global `--jobs`/`TT_JOBS` knob (via
+/// [`effective_jobs`](crate::coordinator::effective_jobs)) executes
+/// complete decoded requests, all workers sharing one
+/// [`ScheduleService`] handle (sessions contend only on the sharded
+/// measurement cache). Connections beyond `max_conns` wait in the
+/// kernel backlog — served in arrival order, never dropped.
+/// [`RpcServer::shutdown`] stops accepting, flushes in-flight replies
+/// (bounded by [`WRITE_STALL_TIMEOUT`]), and joins all threads.
 pub struct RpcServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    conns: ConnMap,
-    pending: Arc<ConnQueue>,
-    accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    inner: Reactor,
 }
 
 impl RpcServer {
     /// Bind `bind` (e.g. `"127.0.0.1:7461"`, port 0 for ephemeral) and
     /// start serving `service` in background threads, with
-    /// [`default_admin`] answering admin ops.
+    /// [`default_admin_with_gauges`] answering admin ops (so `stats`
+    /// reports this server's own connection/queue gauges).
     pub fn start(
         bind: &str,
         service: ScheduleService,
         defaults: RpcDefaults,
     ) -> anyhow::Result<RpcServer> {
-        Self::start_with_admin(bind, service, defaults, default_admin())
+        let gauges = Arc::new(ServerGauges::default());
+        let admin = default_admin_with_gauges(gauges.clone());
+        Self::start_inner(bind, service, defaults, admin, ServerConfig::default(), gauges)
     }
 
-    /// [`RpcServer::start`] with an explicit idle-read timeout in place
-    /// of [`READ_STALL_TIMEOUT`] — lets tests exercise the hung-client
-    /// path in milliseconds instead of seconds.
+    /// [`RpcServer::start`] with an explicit idle/read-stall deadline
+    /// in place of [`READ_STALL_TIMEOUT`] — lets tests exercise the
+    /// hung-client paths in milliseconds instead of seconds. (The pool
+    /// server's single read timeout governed both the idle wait and
+    /// mid-frame stalls, so this knob sets both deadlines.)
     pub fn start_with_timeouts(
         bind: &str,
         service: ScheduleService,
         defaults: RpcDefaults,
         read_timeout: Duration,
     ) -> anyhow::Result<RpcServer> {
-        Self::start_inner(bind, service, defaults, default_admin(), read_timeout)
+        let gauges = Arc::new(ServerGauges::default());
+        let admin = default_admin_with_gauges(gauges.clone());
+        let config = ServerConfig {
+            idle_timeout: read_timeout,
+            read_stall: read_timeout,
+            ..ServerConfig::default()
+        };
+        Self::start_inner(bind, service, defaults, admin, config, gauges)
     }
 
     /// [`RpcServer::start`] with an explicit [`AdminHook`] — how the
     /// serve loop wires `shutdown` and `republish` to its control
-    /// thread.
+    /// thread. The hook owns `stats` entirely, so no gauges are
+    /// implied; use [`RpcServer::start_with_config`] to thread them.
     pub fn start_with_admin(
         bind: &str,
         service: ScheduleService,
         defaults: RpcDefaults,
         admin: AdminHook,
     ) -> anyhow::Result<RpcServer> {
-        Self::start_inner(bind, service, defaults, admin, READ_STALL_TIMEOUT)
+        let gauges = Arc::new(ServerGauges::default());
+        Self::start_inner(bind, service, defaults, admin, ServerConfig::default(), gauges)
+    }
+
+    /// Fully-explicit start: admin hook, server knobs, and the gauges
+    /// instance the hook reads (pass a clone of the same `Arc` so the
+    /// `stats` it serves reflects this server's reactor).
+    pub fn start_with_config(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        admin: AdminHook,
+        config: ServerConfig,
+        gauges: Arc<ServerGauges>,
+    ) -> anyhow::Result<RpcServer> {
+        Self::start_inner(bind, service, defaults, admin, config, gauges)
     }
 
     fn start_inner(
@@ -536,232 +652,55 @@ impl RpcServer {
         service: ScheduleService,
         defaults: RpcDefaults,
         admin: AdminHook,
-        read_timeout: Duration,
+        config: ServerConfig,
+        gauges: Arc<ServerGauges>,
     ) -> anyhow::Result<RpcServer> {
-        let listener = TcpListener::bind(bind)
-            .map_err(|e| anyhow::anyhow!("binding RPC listener on {bind}: {e}"))?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns: ConnMap = Arc::new(Mutex::new(std::collections::HashMap::new()));
-        let pending = Arc::new(ConnQueue {
-            queue: Mutex::new(VecDeque::new()),
-            ready: Condvar::new(),
+        // The reactor owns bytes and deadlines; this closure is the
+        // entire request plane — a pure (payload -> reply) function,
+        // exactly the oracle `handle_request_with` is.
+        let handler: reactor::Handler = Arc::new(move |line: &str| {
+            handle_request_with(&service, &defaults, &admin, line).to_compact()
         });
-        let n_workers = crate::coordinator::effective_jobs(0);
-        let mut workers = Vec::with_capacity(n_workers);
-        for wi in 0..n_workers {
-            let w_service = service.clone();
-            let w_defaults = defaults.clone();
-            let w_admin = admin.clone();
-            let w_stop = stop.clone();
-            let w_conns = conns.clone();
-            let w_pending = pending.clone();
-            let spawned = std::thread::Builder::new().name(format!("tt-rpc-{wi}")).spawn(
-                move || {
-                    worker_loop(&w_pending, &w_service, &w_defaults, &w_admin, &w_stop, &w_conns)
-                },
-            );
-            match spawned {
-                Ok(handle) => workers.push(handle),
-                Err(e) => {
-                    // Unwind the workers already parked on the condvar;
-                    // returning the error with them still waiting would
-                    // leak one thread (plus a service handle) each.
-                    stop.store(true, Ordering::SeqCst);
-                    drop(pending.queue.lock().expect("conn queue"));
-                    pending.ready.notify_all();
-                    for worker in workers {
-                        let _ = worker.join();
-                    }
-                    return Err(anyhow::anyhow!("spawning RPC worker {wi}: {e}"));
-                }
-            }
-        }
-        let accept = {
-            let stop = stop.clone();
-            let conns = conns.clone();
-            let pending = pending.clone();
-            std::thread::spawn(move || accept_loop(listener, stop, conns, pending, read_timeout))
+        // Framing-violation replies stay owned by this module so the
+        // reactor stays JSON-free and the wire shapes cannot fork.
+        let violation: reactor::ViolationHook = Arc::new(|v: &FrameViolation| {
+            let (code, err) = match v {
+                FrameViolation::Oversized(n) => ("oversized_frame", FrameError::Oversized(*n)),
+                FrameViolation::Truncated => ("bad_frame", FrameError::Truncated),
+                FrameViolation::Utf8 => ("bad_frame", FrameError::Utf8),
+            };
+            error_json(&RpcError::new(code, err.to_string())).to_compact()
+        });
+        let rcfg = ReactorConfig {
+            jobs: 0, // resolve via the global --jobs/TT_JOBS knob
+            max_conns: config.max_conns.max(1),
+            idle_timeout: config.idle_timeout,
+            read_stall: config.read_stall,
+            write_stall: config.write_stall,
+            max_frame_len: MAX_FRAME_LEN,
         };
-        Ok(RpcServer { addr, stop, conns, pending, accept: Some(accept), workers })
+        let inner = Reactor::start(bind, handler, violation, rcfg, gauges)?;
+        Ok(RpcServer { inner })
     }
 
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
-        self.addr
+        self.inner.local_addr()
     }
 
-    /// Graceful shutdown: stop accepting, drain, join all threads.
-    /// Only the *read* half of each live connection is shut down, so a
-    /// reply already being computed or written still reaches its client
-    /// (the drain); a worker stuck writing toward a client that stopped
-    /// reading is bounded by [`WRITE_STALL_TIMEOUT`], so the joins
-    /// always terminate. Queued-but-unserved connections are closed
-    /// unanswered — accepting no new work is what shutdown means.
-    pub fn shutdown(mut self) {
-        self.stop_and_join();
+    /// The live serving gauges (connection count, queue depth).
+    pub fn gauges(&self) -> Arc<ServerGauges> {
+        self.inner.gauges()
     }
 
-    fn stop_and_join(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Wake idle pool workers so they observe the stop flag. The
-        // empty critical section orders the store with each worker's
-        // check-then-wait: a worker that read stop == false while
-        // holding the queue lock is guaranteed to reach `wait` (and
-        // release the lock) before this notify fires — without it the
-        // notification could land in that window and be lost, leaving
-        // the worker parked forever and the joins below hung.
-        drop(self.pending.queue.lock().expect("conn queue"));
-        self.pending.ready.notify_all();
-        // Unblock the accept loop with a throwaway connection (the flag
-        // is already visible when it wakes). Wildcard binds (0.0.0.0)
-        // may not be dialable as-is; fall back to loopback.
-        if TcpStream::connect(self.addr).is_err() {
-            let _ =
-                TcpStream::connect((std::net::Ipv4Addr::LOCALHOST, self.addr.port()));
-        }
-        for conn in self.conns.lock().expect("conns lock").values() {
-            let _ = conn.shutdown(Shutdown::Read);
-        }
-        if let Some(handle) = self.accept.take() {
-            let _ = handle.join();
-        }
-        for worker in self.workers.drain(..) {
-            let _ = worker.join();
-        }
-        // Close (by drop) connections that were accepted but never
-        // reached a worker; their registry entries go with them.
-        self.pending.queue.lock().expect("conn queue").clear();
-        self.conns.lock().expect("conns lock").clear();
+    /// Graceful shutdown: stop accepting, discard undecoded input,
+    /// flush every in-flight reply — a reply already being computed or
+    /// written still reaches its client, bounded by
+    /// [`WRITE_STALL_TIMEOUT`] so the joins always terminate — and
+    /// join all threads. Queued-but-unstarted requests are dropped and
+    /// their connections closed unanswered — accepting no new work is
+    /// what shutdown means.
+    pub fn shutdown(self) {
+        self.inner.shutdown();
     }
-}
-
-impl Drop for RpcServer {
-    fn drop(&mut self) {
-        if self.accept.is_some() {
-            self.stop_and_join();
-        }
-    }
-}
-
-fn accept_loop(
-    listener: TcpListener,
-    stop: Arc<AtomicBool>,
-    conns: ConnMap,
-    pending: Arc<ConnQueue>,
-    read_timeout: Duration,
-) {
-    let mut next_id: u64 = 0;
-    for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => {
-                // Transient accept failure (e.g. fd pressure): back off
-                // instead of spinning the accept thread hot.
-                std::thread::sleep(Duration::from_millis(20));
-                continue;
-            }
-        };
-        // Bound every reply write so a drain can always terminate, and
-        // every idle read so a silent client cannot pin a pool worker.
-        let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
-        let _ = stream.set_read_timeout(Some(read_timeout));
-        let id = next_id;
-        next_id += 1;
-        // Register the handle BEFORE queueing: every connection must be
-        // unblockable at shutdown, whether a worker holds it yet or
-        // not. If the handle cannot be duplicated (fd pressure), refuse
-        // the connection rather than queue one shutdown() cannot wake.
-        let Ok(handle) = stream.try_clone() else { continue };
-        conns.lock().expect("conns lock").insert(id, handle);
-        pending.queue.lock().expect("conn queue").push_back((id, stream));
-        pending.ready.notify_one();
-    }
-}
-
-/// One pool worker: serve queued connections to completion, one at a
-/// time, until shutdown. The queue is never abandoned mid-connection —
-/// a worker finishes (or is unblocked out of) its current session loop
-/// before it re-checks the stop flag.
-fn worker_loop(
-    pending: &ConnQueue,
-    service: &ScheduleService,
-    defaults: &RpcDefaults,
-    admin: &AdminHook,
-    stop: &AtomicBool,
-    conns: &ConnMap,
-) {
-    loop {
-        let (id, stream) = {
-            let mut queue = pending.queue.lock().expect("conn queue");
-            loop {
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(next) = queue.pop_front() {
-                    break next;
-                }
-                queue = pending.ready.wait(queue).expect("conn queue");
-            }
-        };
-        connection_loop(stream, service, defaults, admin, stop);
-        // Drop this connection's registry entry so a long-lived
-        // server's fd usage tracks *live* connections only.
-        conns.lock().expect("conns lock").remove(&id);
-    }
-}
-
-/// One connection's session loop: answer frames in order until the
-/// client closes, the framing breaks, or the server shuts down.
-fn connection_loop(
-    stream: TcpStream,
-    service: &ScheduleService,
-    defaults: &RpcDefaults,
-    admin: &AdminHook,
-    stop: &AtomicBool,
-) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = std::io::BufReader::new(read_half);
-    let mut writer = stream;
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        match read_frame(&mut reader) {
-            Ok(line) => {
-                let response = handle_request_with(service, defaults, admin, &line).to_compact();
-                match encode_frame(&response) {
-                    Ok(buf) => {
-                        if writer.write_all(&buf).is_err() {
-                            break;
-                        }
-                    }
-                    Err(_) => break,
-                }
-            }
-            // Io covers the idle-read timeout (WouldBlock/TimedOut from
-            // a client that connected and went silent): both are a
-            // clean connection end, closed without an error frame.
-            Err(FrameError::Closed) | Err(FrameError::Io(_)) => break,
-            Err(e) => {
-                // Framing violation: best-effort structured error, then
-                // close (the stream cannot be resynchronized).
-                if !stop.load(Ordering::SeqCst) {
-                    let code = match e {
-                        FrameError::Oversized(_) => "oversized_frame",
-                        _ => "bad_frame",
-                    };
-                    let response = error_json(&RpcError::new(code, e.to_string())).to_compact();
-                    if let Ok(buf) = encode_frame(&response) {
-                        let _ = writer.write_all(&buf);
-                    }
-                }
-                break;
-            }
-        }
-    }
-    let _ = writer.shutdown(Shutdown::Both);
 }

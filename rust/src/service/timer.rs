@@ -1,0 +1,122 @@
+//! A hashed timer wheel for connection deadlines.
+//!
+//! The reactor (see [`crate::service::reactor`]) tracks one deadline per
+//! connection — idle reap, read-stall, or write-stall — and needs two
+//! operations to be cheap: (re)arming a deadline every time a connection
+//! makes progress, and harvesting the set of expired connections once per
+//! event-loop tick. A binary heap makes the second cheap but the first
+//! O(log n) with tombstones; a hashed wheel makes both O(1) amortised at
+//! the cost of bounded timer resolution, which is exactly the right trade
+//! for coarse 30-second network deadlines.
+//!
+//! Design points:
+//!
+//! - Time is ticks, not instants. The caller converts `Instant`s to a
+//!   monotonically nondecreasing millisecond counter and the wheel divides
+//!   by [`TICK_MS`]. Scheduling rounds the due time *up* to the next tick
+//!   and harvesting rounds the current time *down*, so a deadline never
+//!   fires early — late by at most one tick granularity is fine for
+//!   deadlines measured in seconds, early would break e.g. the write-stall
+//!   test's timing assumptions.
+//! - Cancellation is lazy. Re-arming a token does not remove the old slot
+//!   entry; each entry carries the `due_tick` it was scheduled for, and
+//!   harvest yields a token only if the entry is not stale. The caller
+//!   additionally re-checks its own authoritative per-connection deadline
+//!   before acting, so even a token harvested from a stale-but-matching
+//!   tick is at worst a spurious wakeup, never a wrong close.
+//! - Slot count is a power of two so the slot index is a mask, and the
+//!   wheel handles due times further than one rotation away by re-queueing
+//!   (an entry found before its due tick is pushed back into its slot and
+//!   revisited a rotation later).
+
+/// Milliseconds per wheel tick. Deadlines fire at most this much late.
+pub const TICK_MS: u64 = 20;
+
+/// Number of slots; one rotation covers `SLOTS * TICK_MS` ≈ 10.2 s.
+const SLOTS: usize = 512;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    token: u64,
+    due_tick: u64,
+}
+
+/// Hashed timer wheel over opaque `u64` tokens.
+#[derive(Debug)]
+pub struct TimerWheel {
+    slots: Vec<Vec<Entry>>,
+    /// The next tick `advance` will harvest; everything strictly below it
+    /// has already been harvested.
+    cursor: u64,
+}
+
+impl TimerWheel {
+    pub fn new() -> Self {
+        TimerWheel {
+            slots: (0..SLOTS).map(|_| Vec::new()).collect(),
+            cursor: 0,
+        }
+    }
+
+    /// Arm (or re-arm) `token` to fire at `due_ms` (absolute, same clock
+    /// as `advance`). Earlier entries for the same token become stale and
+    /// are skipped at harvest time.
+    pub fn schedule(&mut self, token: u64, due_ms: u64) {
+        // Round up: never fire before the requested time.
+        let mut due_tick = due_ms.div_ceil(TICK_MS);
+        // A due time in the harvested past would land in a slot the cursor
+        // has moved beyond and sleep a whole rotation; clamp it forward.
+        if due_tick < self.cursor {
+            due_tick = self.cursor;
+        }
+        let slot = (due_tick as usize) & (SLOTS - 1);
+        self.slots[slot].push(Entry { token, due_tick });
+    }
+
+    /// Harvest every entry due at or before `now_ms`, appending its token
+    /// to `out`. Tokens may repeat and may be stale (re-armed later);
+    /// callers must re-check their own authoritative deadline.
+    pub fn advance(&mut self, now_ms: u64, out: &mut Vec<u64>) {
+        // Round down: a tick only counts as reached once fully elapsed.
+        let now_tick = now_ms / TICK_MS;
+        if now_tick < self.cursor {
+            return;
+        }
+        // Sweep at most one full rotation; slots repeat beyond that and a
+        // second pass over the same slot would find only re-queued future
+        // entries again.
+        let span = (now_tick - self.cursor + 1).min(SLOTS as u64);
+        for step in 0..span {
+            let tick = self.cursor + step;
+            let slot = (tick as usize) & (SLOTS - 1);
+            let mut i = 0;
+            while i < self.slots[slot].len() {
+                let e = self.slots[slot][i];
+                if e.due_tick <= now_tick {
+                    out.push(e.token);
+                    self.slots[slot].swap_remove(i);
+                } else {
+                    // Future rotation: leave in place, revisit later.
+                    i += 1;
+                }
+            }
+        }
+        self.cursor = now_tick + 1;
+    }
+
+    /// Total live entries (including stale ones awaiting lazy removal).
+    /// Test/diagnostic aid.
+    pub fn len(&self) -> usize {
+        self.slots.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for TimerWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -6,15 +6,17 @@
 //! not wedge the server, and shutdown must join cleanly.
 
 use std::io::Write;
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 use transfer_tuning::autosched::{tune_model, TuneOptions};
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::ir::{KernelBuilder, ModelGraph};
 use transfer_tuning::service::rpc::{
-    admin_ack_json, encode_frame, error_json, handle_request, parse_response, read_frame,
-    stats_json, AdminRequest, RpcDefaults, RpcError, RpcResponse, RpcServer,
+    admin_ack_json, default_admin, encode_frame, error_json, handle_request, parse_response,
+    read_frame, stats_json, AdminRequest, FrameError, RpcDefaults, RpcError, RpcResponse,
+    RpcServer, ServerConfig, ServerGauges,
 };
 use transfer_tuning::service::ScheduleService;
 use transfer_tuning::transfer::ScheduleStore;
@@ -234,12 +236,12 @@ fn queued_connections_are_served_not_dropped() {
 }
 
 #[test]
-fn hung_client_is_timed_out_and_frees_its_pool_worker() {
-    // A client that connects and never sends a frame used to pin its
+fn hung_client_is_timed_out_and_does_not_block_other_clients() {
+    // A client that connects and never sends a frame used to pin a
     // pool worker in a blocking read forever (only writes had a
-    // timeout) — at --jobs 1 that is the whole pool. With the idle-read
-    // timeout the server closes the connection cleanly and the worker
-    // moves on to queued connections.
+    // timeout) — at --jobs 1 that was the whole pool. Under the
+    // reactor it never touches a worker at all; the idle deadline
+    // closes the connection cleanly and other clients are unaffected.
     let service = dense_service();
     let d = defaults();
     let line = "{\"model\":\"TargetDense\"}";
@@ -281,10 +283,13 @@ fn default_admin_answers_stats_and_refuses_mutations() {
     let server = RpcServer::start("127.0.0.1:0", service.clone(), defaults()).expect("bind");
     let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
 
-    // stats: pure function of the service, answered without an ops loop
-    // — and byte-identical to calling the encoder directly.
+    // stats: pure function of the service plus the live server gauges
+    // — and byte-identical to calling the encoder directly. Exactly one
+    // connection (ours) is registered, and the queue is empty by the
+    // time our request executes (a job leaves the queue before its
+    // handler runs), so the gauge tuple is deterministic.
     let got = roundtrip(&mut stream, "{\"op\":\"stats\"}");
-    assert_eq!(got, stats_json(&service, None).to_compact());
+    assert_eq!(got, stats_json(&service, None, Some((1, 0))).to_compact());
     let j = transfer_tuning::util::json::parse(&got).expect("stats decode");
     assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
     let stats = j.get("stats").expect("stats body");
@@ -295,6 +300,16 @@ fn default_admin_answers_stats_and_refuses_mutations() {
         "both tuned sources are live"
     );
     assert!(stats.get("zoo").is_none(), "no ops loop => no build accounting");
+    let server_stats = stats.get("server").expect("live server gauges");
+    assert_eq!(server_stats.get("connections").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(server_stats.get("queue_depth").and_then(|v| v.as_f64()), Some(0.0));
+    let records = stats.get("source_records").expect("per-source record counts");
+    for src in ["SrcA", "SrcB"] {
+        assert!(
+            records.get(src).and_then(|v| v.as_f64()).is_some_and(|n| n >= 1.0),
+            "{src} must report its record count"
+        );
+    }
 
     // shutdown/republish need an operations loop that owns the process;
     // a bare server refuses them in-band and keeps serving.
@@ -305,6 +320,10 @@ fn default_admin_answers_stats_and_refuses_mutations() {
     assert_eq!(code_of(&roundtrip(&mut stream, "{\"op\":\"shutdown\"}")), "admin_unavailable");
     assert_eq!(
         code_of(&roundtrip(&mut stream, "{\"op\":\"republish\",\"model\":\"SrcA\"}")),
+        "admin_unavailable"
+    );
+    assert_eq!(
+        code_of(&roundtrip(&mut stream, "{\"op\":\"republish\",\"all\":true}")),
         "admin_unavailable"
     );
     assert_eq!(code_of(&roundtrip(&mut stream, "{\"op\":\"reboot\"}")), "unknown_op");
@@ -329,9 +348,12 @@ fn custom_admin_hook_sees_ops_over_the_wire() {
                 hook_flag.store(true, Ordering::SeqCst);
                 admin_ack_json("shutdown", vec![])
             }
-            AdminRequest::Stats => stats_json(service, None),
+            AdminRequest::Stats => stats_json(service, None, None),
             AdminRequest::Republish { model } => {
                 error_json(&RpcError::new("internal", format!("no republish for {model}")))
+            }
+            AdminRequest::RepublishAll => {
+                error_json(&RpcError::new("internal", "no republish --all here"))
             }
         });
     let server =
@@ -363,6 +385,302 @@ fn requests_against_an_empty_service_answer_with_epoch_zero() {
             assert!((speedup - 1.0).abs() < 0.05, "untuned fallback, speedup ~1 (got {speedup})");
         }
         RpcResponse::Error(e) => panic!("empty service must still answer: {e:?}"),
+    }
+    server.shutdown();
+}
+
+/// Poll `cond` until it holds or a generous deadline passes — the
+/// hostile-client tests observe evictions through the server gauges
+/// instead of sleeping for fixed intervals.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// A minimal thread-per-connection reference server: blocking sockets,
+/// one thread per client, the same codec and the same
+/// [`handle_request`] oracle — the architecture the reactor replaced.
+/// It exists so the equivalence test below can prove the reactor
+/// changed *how* bytes are moved and nothing about *which* bytes.
+fn reference_pool_server(service: ScheduleService, d: RpcDefaults) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind reference server");
+    let addr = listener.local_addr().expect("reference addr");
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { break };
+            let service = service.clone();
+            let d = d.clone();
+            std::thread::spawn(move || loop {
+                match read_frame(&mut stream) {
+                    Ok(line) => {
+                        let reply = handle_request(&service, &d, &line).to_compact();
+                        let frame = encode_frame(&reply).expect("reply encodable");
+                        if stream.write_all(&frame).is_err() {
+                            break;
+                        }
+                    }
+                    Err(FrameError::Closed) => break,
+                    Err(
+                        e @ (FrameError::Oversized(_) | FrameError::Truncated | FrameError::Utf8),
+                    ) => {
+                        let code = match e {
+                            FrameError::Oversized(_) => "oversized_frame",
+                            _ => "bad_frame",
+                        };
+                        let payload =
+                            error_json(&RpcError::new(code, e.to_string())).to_compact();
+                        let _ = stream.write_all(&encode_frame(&payload).expect("encodable"));
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn reactor_replies_are_byte_identical_to_a_reference_pool_server() {
+    // The tentpole's contract: swapping thread-per-connection for the
+    // readiness reactor changes no wire byte. Same shared service, same
+    // requests, two servers — every reply must compare equal.
+    let service = dense_service();
+    let d = defaults();
+    let sessions = [
+        "{\"model\":\"TargetDense\"}",
+        "{\"model\":\"TargetDense\",\"budget_s\":0}",
+        "{\"model\":\"TargetDense\",\"seed\":23}",
+    ];
+    // Warm the shared cache so session replies are warmth-independent
+    // (charged_search_time_s is deterministically 0 on both servers).
+    for line in &sessions {
+        handle_request(&service, &d, line);
+    }
+
+    let pool_addr = reference_pool_server(service.clone(), d.clone());
+    // Plain `default_admin` on the reactor side too: the reference
+    // server's oracle answers `stats` from the gauge-free encoder, so
+    // the reactor must as well for the bytes to be comparable.
+    let server =
+        RpcServer::start_with_admin("127.0.0.1:0", service, d, default_admin()).expect("bind");
+
+    let mut reactor_conn = TcpStream::connect(server.local_addr()).expect("connect reactor");
+    let mut pool_conn = TcpStream::connect(pool_addr).expect("connect reference");
+    // Sessions first, in-band errors next, `stats` last (sessions bump
+    // the shared cache counters `stats` reports; nothing mutates
+    // between the two stats calls, so they compare equal).
+    let battery = [
+        sessions[0],
+        sessions[1],
+        sessions[2],
+        "this is not json",
+        "{\"no_model\":1}",
+        "{\"model\":\"Zarniwoop\"}",
+        "{\"model\":\"TargetDense\",\"device\":\"tpu\"}",
+        "{\"op\":\"reboot\"}",
+        "{\"op\":\"shutdown\"}",
+        "{\"op\":\"republish\",\"model\":\"SrcA\"}",
+        "{\"op\":\"republish\",\"all\":true}",
+        "{\"op\":\"republish\",\"all\":7}",
+        "{\"op\":\"republish\",\"all\":true,\"model\":\"SrcA\"}",
+        "{\"op\":\"republish\"}",
+        "{\"op\":\"stats\"}",
+    ];
+    for line in battery {
+        let got = roundtrip(&mut reactor_conn, line);
+        let reference = roundtrip(&mut pool_conn, line);
+        assert_eq!(got, reference, "wire divergence on request {line}");
+    }
+
+    // Framing violations produce the same error frame on both servers.
+    // One fresh connection pair per violation (violations close them).
+    let oversized = u32::MAX.to_be_bytes();
+    let violations: [&[u8]; 3] = [
+        &oversized,                // oversized length prefix
+        &[0, 0, 0, 2, 0xFF, 0xFE], // 2-byte payload, not UTF-8
+        &[0, 0, 0, 8, b'{', b'}'], // dies mid-payload
+    ];
+    for bytes in violations {
+        let mut a = TcpStream::connect(server.local_addr()).expect("connect reactor");
+        let mut b = TcpStream::connect(pool_addr).expect("connect reference");
+        for s in [&a, &b] {
+            let mut s = s;
+            s.write_all(bytes).expect("send hostile bytes");
+            s.shutdown(Shutdown::Write).expect("half-close");
+        }
+        let got = read_frame(&mut a).expect("reactor error frame");
+        let reference = read_frame(&mut b).expect("reference error frame");
+        assert_eq!(got, reference, "violation frames diverge for {bytes:?}");
+        assert!(read_frame(&mut a).is_err(), "violation must close the connection");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn slowloris_mid_frame_stall_is_evicted_and_pins_no_worker() {
+    // A client that sends a frame header and a few payload bytes, then
+    // stalls. Under the pool server this pinned a worker in a blocking
+    // read for the whole read timeout; under the reactor it holds only
+    // a buffer — live clients are served instantly while the slowloris
+    // sits, and the read-stall deadline evicts it with no error frame.
+    let service = dense_service();
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let config = ServerConfig {
+        read_stall: Duration::from_millis(200),
+        idle_timeout: Duration::from_secs(60), // isolate the mid-frame path
+        ..ServerConfig::default()
+    };
+    let server = RpcServer::start_with_config(
+        "127.0.0.1:0",
+        service,
+        d,
+        default_admin(),
+        config,
+        Arc::new(ServerGauges::default()),
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    let gauges = server.gauges();
+
+    let mut slow = TcpStream::connect(addr).expect("connect");
+    slow.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+    slow.write_all(&[0, 0, 0, 100, b'{', b'"']).expect("drip a partial frame");
+    wait_until("slowloris registered", || gauges.connections.load(Ordering::SeqCst) == 1);
+
+    // While the slowloris stalls mid-frame, a fresh client is served —
+    // the stall consumed zero workers.
+    let mut fresh = TcpStream::connect(addr).expect("connect");
+    assert_eq!(roundtrip(&mut fresh, line), expected, "live client starved by a slowloris");
+    drop(fresh);
+
+    // The stall deadline fires: connection evicted, silently (a timeout
+    // is a clean end — no error frame precedes the close).
+    match read_frame(&mut slow) {
+        Err(_) => {}
+        Ok(frame) => panic!("slowloris must get no frame, got {frame}"),
+    }
+    wait_until("slowloris evicted", || gauges.connections.load(Ordering::SeqCst) == 0);
+    server.shutdown();
+}
+
+#[test]
+fn client_that_never_reads_its_replies_is_evicted_by_the_write_stall() {
+    // The inverse hostile client: pipelines requests forever and never
+    // reads a reply. Outbound bytes pile up in the connection's write
+    // buffer once the kernel stops accepting them; when the buffer
+    // makes no progress for `write_stall`, the reactor evicts the
+    // connection instead of holding its memory hostage.
+    let service = dense_service();
+    let d = defaults();
+    let session = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, session); // warm the shared cache
+    let expected = handle_request(&service, &d, session).to_compact();
+
+    let config = ServerConfig {
+        write_stall: Duration::from_millis(300),
+        idle_timeout: Duration::from_secs(60),
+        read_stall: Duration::from_secs(60),
+        ..ServerConfig::default()
+    };
+    let server = RpcServer::start_with_config(
+        "127.0.0.1:0",
+        service,
+        d,
+        default_admin(),
+        config,
+        Arc::new(ServerGauges::default()),
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    let gauges = server.gauges();
+
+    // A model name nothing resolves: the unknown_model reply echoes it,
+    // so each ~8 KiB request yields an ~8 KiB reply without touching
+    // the tuning path. 2500 pipelined requests ask for ~20 MiB of
+    // replies — far beyond what the kernel will buffer toward a
+    // receiver that never reads.
+    let big_name = "Z".repeat(8 * 1024);
+    let hostile_line = format!("{{\"model\":\"{big_name}\"}}");
+    let frame = encode_frame(&hostile_line).expect("encodable");
+    let mut hostile = TcpStream::connect(addr).expect("connect");
+    for _ in 0..2500 {
+        // If eviction lands mid-write the remaining sends fail — that
+        // is the success path arriving early, not a test failure.
+        if hostile.write_all(&frame).is_err() {
+            break;
+        }
+    }
+    wait_until("write-stalled client evicted", || {
+        gauges.connections.load(Ordering::SeqCst) == 0
+    });
+
+    // The eviction freed everything: a fresh client gets a correct
+    // reply immediately.
+    let mut fresh = TcpStream::connect(addr).expect("connect");
+    assert_eq!(roundtrip(&mut fresh, session), expected, "server unhealthy after write stall");
+    drop(fresh);
+    drop(hostile);
+    server.shutdown();
+}
+
+#[test]
+fn idle_connections_are_reaped_and_the_gauges_track_them() {
+    // Satellite + tentpole in one: many idle connections cost no
+    // worker and are visible in the live connection gauge; once the
+    // idle deadline passes they are reaped silently.
+    let service = dense_service();
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let config = ServerConfig {
+        idle_timeout: Duration::from_millis(250),
+        read_stall: Duration::from_secs(60),
+        ..ServerConfig::default()
+    };
+    let server = RpcServer::start_with_config(
+        "127.0.0.1:0",
+        service,
+        d,
+        default_admin(),
+        config,
+        Arc::new(ServerGauges::default()),
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    let gauges = server.gauges();
+
+    let idlers: Vec<TcpStream> = (0..16)
+        .map(|i| {
+            let s = TcpStream::connect(addr).unwrap_or_else(|e| panic!("idler {i}: {e}"));
+            s.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+            s
+        })
+        .collect();
+    wait_until("all idlers registered", || gauges.connections.load(Ordering::SeqCst) == 16);
+
+    // Idle connections pin nothing: an active client is served at once.
+    let mut fresh = TcpStream::connect(addr).expect("connect");
+    assert_eq!(roundtrip(&mut fresh, line), expected, "active client starved by idlers");
+    drop(fresh);
+
+    // The reap: every idler is closed cleanly (EOF, no error frame)
+    // and the gauge returns to zero.
+    wait_until("idlers reaped", || gauges.connections.load(Ordering::SeqCst) == 0);
+    for mut s in idlers {
+        match read_frame(&mut s) {
+            Err(_) => {}
+            Ok(frame) => panic!("idler must get no frame, got {frame}"),
+        }
     }
     server.shutdown();
 }

@@ -158,8 +158,9 @@ fn bad_requests_map_to_structured_errors() {
 
 #[test]
 fn admin_ops_parse_and_sessions_stay_sessions() {
-    // Wire schema v2: the `op` field dispatches admin ops.
-    assert_eq!(WIRE_PROTOCOL_VERSION, 2, "update the admin tests with the protocol");
+    // Wire schema v3: the `op` field dispatches admin ops; `republish`
+    // additionally accepts `"all":true` in place of `model`.
+    assert_eq!(WIRE_PROTOCOL_VERSION, 3, "update the admin tests with the protocol");
     let d = defaults();
     let admin = |line: &str| match parse_any_request(line, &d).unwrap() {
         Request::Admin(a) => a,
@@ -170,6 +171,12 @@ fn admin_ops_parse_and_sessions_stay_sessions() {
     assert_eq!(
         admin("{\"op\":\"republish\",\"model\":\"ResNet18\"}"),
         AdminRequest::Republish { model: "ResNet18".into() }
+    );
+    assert_eq!(admin("{\"op\":\"republish\",\"all\":true}"), AdminRequest::RepublishAll);
+    // `"all":false` means "not the all form": it needs a model.
+    assert_eq!(
+        parse_any_request("{\"op\":\"republish\",\"all\":false}", &d).unwrap_err().code,
+        "bad_request"
     );
 
     // No `op` (or op=session) is a session request — every pre-admin
@@ -191,6 +198,10 @@ fn bad_admin_ops_map_to_structured_errors() {
     assert_eq!(code("{\"op\":\"republish\"}"), "bad_request"); // missing model
     assert_eq!(code("{\"op\":\"republish\",\"model\":\"\"}"), "bad_request");
     assert_eq!(code("{\"op\":\"republish\",\"model\":7}"), "bad_request");
+    assert_eq!(code("{\"op\":\"republish\",\"all\":7}"), "bad_request"); // non-bool all
+    assert_eq!(code("{\"op\":\"republish\",\"all\":\"yes\"}"), "bad_request");
+    // `all` and `model` are mutually exclusive forms.
+    assert_eq!(code("{\"op\":\"republish\",\"all\":true,\"model\":\"ResNet18\"}"), "bad_request");
     assert_eq!(code("{\"op\":\"session\"}"), "bad_request"); // missing model
     // Hostile admin payloads never panic (same contract as sessions).
     let mut rng = Rng::new(0xAD317);
@@ -211,6 +222,24 @@ fn admin_acks_are_ok_payloads_not_session_replies() {
     assert_eq!(ack, "{\"admin\":{\"draining\":true,\"op\":\"shutdown\"},\"ok\":true}");
     // A *session* decoder must not misread an ack (no `reply` field).
     assert!(parse_response(&ack).is_err());
+
+    // The `republish --all` ack shape, pinned: the epoch range the
+    // serial run landed at, plus the model count.
+    let ack = admin_ack_json(
+        "republish",
+        vec![
+            ("all", Json::Bool(true)),
+            ("first_epoch", Json::num(3.0)),
+            ("epoch", Json::num(13.0)),
+            ("models", Json::num(11.0)),
+        ],
+    )
+    .to_compact();
+    assert_eq!(
+        ack,
+        "{\"admin\":{\"all\":true,\"epoch\":13,\"first_epoch\":3,\"models\":11,\
+         \"op\":\"republish\"},\"ok\":true}"
+    );
 }
 
 #[test]

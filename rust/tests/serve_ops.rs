@@ -153,6 +153,16 @@ fn serve_and_stop(dir: &Path, via_signal: bool) {
     let (ok, stats) = repro(&["admin", &server.addr, "stats"]);
     assert!(ok, "stats failed: {stats}");
     assert!(stats.contains("\"complete\":true"), "zoo must report complete: {stats}");
+    // v3 stats: the live gauges see exactly the stats client's own
+    // connection and an empty queue, plus per-source record counts.
+    assert!(
+        stats.contains("\"server\":{\"connections\":1,\"queue_depth\":0}"),
+        "stats must carry the server gauges: {stats}"
+    );
+    assert!(
+        stats.contains("\"source_records\":{"),
+        "stats must carry per-source record counts: {stats}"
+    );
 
     if via_signal {
         assert_eq!(unsafe { kill(server.pid(), 15) }, 0, "SIGTERM delivery");
@@ -250,6 +260,23 @@ fn republish_bumps_epoch_and_changes_nothing_else() {
     let (ok, err) = repro(&["admin", &server.addr, "republish", "Zarniwoop"]);
     assert!(!ok, "unknown model must fail the client");
     assert!(err.contains("unknown_model"), "{err}");
+
+    // republish --all: every zoo model serially at consecutive epochs
+    // (13..23 from here — 11 models after the single republish above),
+    // and the served session again differs only in its epoch stamp.
+    let (ok, ack) = repro(&["admin", &server.addr, "republish", "--all"]);
+    assert!(ok, "republish --all failed: {ack}");
+    assert!(ack.contains("\"all\":true"), "ack must echo the all form: {ack}");
+    assert!(ack.contains("\"first_epoch\":13"), "serial run must start at 13: {ack}");
+    assert!(ack.contains("\"epoch\":23"), "11 consecutive epochs must end at 23: {ack}");
+    assert!(ack.contains("\"models\":11"), "must cover all 11 models: {ack}");
+    let (ok, after_all) = repro(&["call", &server.addr, SESSION]);
+    assert!(ok, "post-republish-all session failed: {after_all}");
+    assert_eq!(
+        after_all,
+        before.replace("\"epoch\":11", "\"epoch\":23"),
+        "republish --all changed something besides the epoch"
+    );
 
     let (ok, _) = repro(&["admin", &server.addr, "shutdown"]);
     assert!(ok);
