@@ -31,6 +31,7 @@ fn main() {
             device: device.clone(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |l| eprintln!("  {l}"),
     );

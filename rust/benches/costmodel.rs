@@ -1,0 +1,267 @@
+//! Bench: learned cost prior vs the static (from-scratch) model on a
+//! warm measure cache — the PR-8 payoff claim, gated.
+//!
+//! A small dense zoo is built cold, its pooled transfers warm the
+//! shared measure cache, and `Zoo::refit_cost_model` fits the learned
+//! prior from that cache (the training pipeline under test: content-
+//! sorted folds, threshold-bucketed corpus). A held-out dense target is
+//! then tuned twice at the same budget and seed: once from scratch
+//! (static) and once seeded with the fitted prior (learned). Gates:
+//!
+//!   1. Rank quality on the warm cache: the fitted prior's Spearman
+//!      rank correlation over the cache's (features, target) pairs must
+//!      beat the static model's — which is 0.0 by construction (an
+//!      untrained model predicts a constant and cannot rank anything).
+//!      On the tuning trajectory, the primed run must rank at least as
+//!      many rounds as the static run (`HistoryPoint::rank_corr`): the
+//!      prior carries a model into round one, while the static model
+//!      spends its warmup rounds untrained.
+//!   2. Quality parity (the PR-6 gates, reused): the learned run's
+//!      best-schedule costs stay within x2.0 per kernel and x1.25
+//!      geomean of the static run's. The prior steers the search; it
+//!      must never wreck it.
+//!   3. Determinism: re-fitting on the same cache is hash-stable, and
+//!      the primed tune is bit-identical when repeated.
+//!
+//! Emits `results/BENCH_costmodel.json` — `{trials, pairs, prior_hash,
+//! cache_rank_corr_{static,learned}, traj_rank_corr_{static,learned},
+//! quality_ratio, static_wall_s, learned_wall_s}` — as the
+//! perf-trajectory artifact (uploaded per commit by the CI bench-smoke
+//! job, which fails if any gate trips).
+
+use std::path::Path;
+use std::time::Instant;
+use transfer_tuning::autosched::{
+    tune_model, CostModel, CostModelKind, TrainingPair, TuneOptions, TuningResult,
+};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
+use transfer_tuning::report::{ExperimentConfig, Zoo};
+use transfer_tuning::util::json::Json;
+use transfer_tuning::util::stats::spearman;
+use transfer_tuning::util::table::Table;
+
+fn dense_fat(name: &str, dims: &[u64]) -> ModelGraph {
+    let mut g = ModelGraph::new(name);
+    for &d in dims {
+        g.push(KernelBuilder::dense(d, d, d, &[]));
+    }
+    g
+}
+
+/// Build the learned prior the product way: cold zoo, pooled transfers
+/// warm the cache, `refit_cost_model` fits from it. Returns the fitted
+/// prior and the warm cache's full training corpus (for evaluation).
+fn fit_prior(trials: usize, prof: &DeviceProfile) -> (CostModel, Vec<TrainingPair>) {
+    let zoo = Zoo::build_for_models(
+        vec![
+            dense_fat("PriorSrcA", &[256, 320, 384, 448, 512]),
+            dense_fat("PriorSrcB", &[576, 640, 704, 768, 832]),
+            dense_fat("PriorSrcC", &[896, 960, 1024, 1088, 1152]),
+        ],
+        ExperimentConfig {
+            trials,
+            seed: 0xA47,
+            device: prof.clone(),
+            jobs: 1,
+            cost_model: CostModelKind::Learned,
+            ..Default::default()
+        },
+        None,
+        |_| {},
+    );
+    for m in &zoo.models {
+        zoo.transfer_pooled(m);
+    }
+    let pairs = zoo.training_pairs();
+    assert!(
+        zoo.refit_cost_model(),
+        "warm cache ({} pairs) must cross a refit threshold and train the prior",
+        pairs.len()
+    );
+    // Re-fitting on the same cache is hash-stable: the fit is a pure
+    // function of cache contents, so "changed" must report false.
+    assert!(!zoo.refit_cost_model(), "re-fit on an unchanged cache must be hash-stable");
+    let prior = zoo.cost_model.borrow().clone();
+    (prior, pairs)
+}
+
+/// Spearman rank correlation of a model's predictions over a corpus,
+/// with the tuner's own convention: a constant predictor (every
+/// untrained model) has no rank information and scores 0.0.
+fn corpus_rank_corr(model: &CostModel, pairs: &[TrainingPair]) -> f64 {
+    let preds: Vec<f64> = pairs.iter().map(|p| model.predict(&p.x)).collect();
+    // A constant predictor induces no order at all — `spearman` would
+    // rank the ties by enumeration order, crediting the corpus layout,
+    // not the model.
+    if preds.windows(2).all(|w| w[0] == w[1]) {
+        return 0.0;
+    }
+    let ys: Vec<f64> = pairs.iter().map(|p| p.y).collect();
+    let r = spearman(&preds, &ys);
+    if r.is_finite() {
+        r
+    } else {
+        0.0
+    }
+}
+
+fn tune_target(target: &ModelGraph, prof: &DeviceProfile, prior: CostModel) -> (TuningResult, f64) {
+    let opts = TuneOptions {
+        trials: 384,
+        batch_size: 16,
+        population: 32,
+        generations: 2,
+        seed: 0xA48,
+        jobs: 1,
+        prior,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let res = tune_model(target, prof, &opts);
+    (res, t0.elapsed().as_secs_f64())
+}
+
+fn mean_rank_corr(res: &TuningResult) -> f64 {
+    if res.history.is_empty() {
+        return 0.0;
+    }
+    res.history.iter().map(|h| h.rank_corr).sum::<f64>() / res.history.len() as f64
+}
+
+fn main() {
+    let trials: usize =
+        std::env::var("TT_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(150);
+    let prof = DeviceProfile::xeon_e5_2620();
+
+    // ---- fit the prior from a warm cache -------------------------------
+    let (prior, pairs) = fit_prior(trials, &prof);
+    let prior_hash = prior.content_hash();
+    assert_ne!(prior_hash, 0, "fitted prior must have a nonzero identity");
+
+    // ---- gate 1a: rank quality on the warm cache -----------------------
+    // The fitted prior must rank the cache's measurements; the static
+    // (untrained) model predicts a constant and scores exactly 0.0.
+    let static_cache_corr = corpus_rank_corr(&CostModel::default(), &pairs);
+    let learned_cache_corr = corpus_rank_corr(&prior, &pairs);
+    assert_eq!(static_cache_corr, 0.0, "an untrained model cannot rank anything");
+    assert!(
+        learned_cache_corr > static_cache_corr,
+        "learned rank corr on the warm cache ({learned_cache_corr:.3}) must beat \
+         static ({static_cache_corr:.3})"
+    );
+
+    // Held-out target: same transfer class (dense) at dims the corpus
+    // never tuned — the prior must generalize, not memorize.
+    let target = dense_fat("CostModelTarget", &[300, 700, 1100]);
+
+    // ---- static vs learned at the same budget and seed -----------------
+    let (static_res, static_wall) = tune_target(&target, &prof, CostModel::default());
+    let (learned_res, learned_wall) = tune_target(&target, &prof, prior.clone());
+
+    let static_corr = mean_rank_corr(&static_res);
+    let learned_corr = mean_rank_corr(&learned_res);
+
+    let mut table = Table::new(
+        "Warm-cache cost prior vs static (same budget, same seed)",
+        &["Regime", "Mean rank corr", "Host s", "Trials", "Charged device s"],
+    );
+    for (label, res, corr, wall) in [
+        ("static", &static_res, static_corr, static_wall),
+        ("learned", &learned_res, learned_corr, learned_wall),
+    ] {
+        table.row(vec![
+            label.into(),
+            format!("{corr:.3}"),
+            format!("{wall:.2}"),
+            res.trials_used.to_string(),
+            format!("{:.1}", res.search_time_s),
+        ]);
+    }
+
+    // ---- gate 1b: rank coverage on the trajectory ----------------------
+    // The from-scratch run has no trained model in round one (its
+    // diagnostic is exactly 0.0); the primed run carries one from the
+    // start, so it must rank at least as many rounds. The per-round
+    // values themselves are diagnostics (recorded in the JSON below),
+    // not gates — both runs retrain on their own measurements after
+    // every round, so their later trajectories legitimately diverge.
+    assert_eq!(
+        static_res.history[0].rank_corr, 0.0,
+        "from-scratch run has no trained model in round one"
+    );
+    let ranked = |res: &TuningResult| res.history.iter().filter(|h| h.rank_corr != 0.0).count();
+    assert!(
+        ranked(&learned_res) >= ranked(&static_res),
+        "primed run ranked fewer rounds ({}) than from-scratch ({})",
+        ranked(&learned_res),
+        ranked(&static_res)
+    );
+
+    // ---- gate 2: quality parity (the PR-6 gates, learned vs static) ----
+    let mut log_ratio_sum = 0.0f64;
+    let mut kernels = 0usize;
+    for (k, static_best) in &static_res.best {
+        let learned_best = learned_res.best.get(k).expect("primed run tuned the same kernels");
+        let ratio = learned_best.cost_s / static_best.cost_s.max(1e-12);
+        assert!(
+            ratio <= 2.0,
+            "kernel {k}: learned best {:.3e}s vs static {:.3e}s (x{ratio:.2})",
+            learned_best.cost_s,
+            static_best.cost_s,
+        );
+        log_ratio_sum += ratio.max(1e-12).ln();
+        kernels += 1;
+    }
+    assert!(kernels > 0, "target tune produced no kernels");
+    let quality_ratio = (log_ratio_sum / kernels as f64).exp();
+    assert!(
+        quality_ratio <= 1.25,
+        "geomean learned/static cost ratio x{quality_ratio:.3} exceeds the x1.25 parity gate"
+    );
+
+    // ---- gate 3: determinism -------------------------------------------
+    // Identical budget + seed + prior => bit-identical primed tune.
+    let (learned_again, _) = tune_target(&target, &prof, prior);
+    assert_eq!(learned_again.trials_used, learned_res.trials_used);
+    assert_eq!(
+        learned_again.search_time_s.to_bits(),
+        learned_res.search_time_s.to_bits(),
+        "repeated primed tune must charge an identical ledger"
+    );
+    for (k, best) in &learned_res.best {
+        let again = learned_again.best.get(k).expect("same kernels");
+        assert_eq!(again.schedule, best.schedule, "kernel {k}: primed tune must be deterministic");
+        assert_eq!(again.cost_s.to_bits(), best.cost_s.to_bits(), "kernel {k}");
+    }
+
+    print!("{}", table.render());
+    println!(
+        "[bench costmodel] prior {prior_hash:016x} from {} pairs; warm-cache rank corr \
+         static {static_cache_corr:.3} -> learned {learned_cache_corr:.3}, trajectory mean \
+         {static_corr:.3} -> {learned_corr:.3}, geomean quality x{quality_ratio:.3} over \
+         {kernels} kernels",
+        pairs.len(),
+    );
+
+    // The perf-trajectory artifact: one JSON object per run.
+    let report = Json::obj(vec![
+        ("bench", Json::str("costmodel")),
+        ("trials", Json::num(trials as f64)),
+        ("pairs", Json::num(pairs.len() as f64)),
+        ("prior_hash", Json::str(format!("{prior_hash:016x}"))),
+        ("cache_rank_corr_static", Json::num(static_cache_corr)),
+        ("cache_rank_corr_learned", Json::num(learned_cache_corr)),
+        ("traj_rank_corr_static", Json::num(static_corr)),
+        ("traj_rank_corr_learned", Json::num(learned_corr)),
+        ("quality_ratio", Json::num(quality_ratio)),
+        ("static_wall_s", Json::num(static_wall)),
+        ("learned_wall_s", Json::num(learned_wall)),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    let out = Path::new("results").join("BENCH_costmodel.json");
+    let mut text = report.to_compact();
+    text.push('\n');
+    std::fs::write(&out, text).expect("write BENCH_costmodel.json");
+    println!("[bench costmodel] wrote {}", out.display());
+}

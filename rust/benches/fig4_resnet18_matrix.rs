@@ -15,6 +15,7 @@ fn main() {
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |l| eprintln!("  {l}"),
     );

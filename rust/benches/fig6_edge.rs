@@ -15,6 +15,7 @@ fn main() {
             device: DeviceProfile::cortex_a72(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |l| eprintln!("  {l}"),
     );

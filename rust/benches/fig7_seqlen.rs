@@ -14,6 +14,7 @@ fn main() {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     };
     let table = figures::fig7(&config, |l| eprintln!("  {l}"));
     print!("{}", table.render());

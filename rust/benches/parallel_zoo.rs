@@ -31,6 +31,7 @@ fn build(trials: usize, jobs: usize, artifacts: Option<&mut ArtifactStore>) -> (
         device: DeviceProfile::xeon_e5_2620(),
         jobs,
         speculative_keep: 1.0,
+        ..Default::default()
     };
     let t0 = Instant::now();
     let zoo = Zoo::build_incremental(config, artifacts, |_| {});

@@ -32,6 +32,7 @@ fn build(trials: usize, keep: f64) -> (Zoo, f64) {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 1,
         speculative_keep: keep,
+        ..Default::default()
     };
     let t0 = Instant::now();
     let zoo = Zoo::build_incremental(config, None, |_| {});

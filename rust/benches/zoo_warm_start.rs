@@ -30,6 +30,7 @@ fn main() {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     };
     let dir = std::env::temp_dir().join("tt_bench_zoo_warm_start");
     let _ = std::fs::remove_dir_all(&dir);

@@ -123,6 +123,9 @@ pub fn tuning_from_json(j: &Json) -> anyhow::Result<TuningResult> {
                 .req("model_time_s")?
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("history[{i}]: bad model_time_s"))?,
+            // Diagnostic-only field, deliberately not persisted (the
+            // codec schema is unchanged); loads see 0.0.
+            rank_corr: 0.0,
         });
     }
     Ok(TuningResult {

@@ -27,6 +27,7 @@
 //!   tuning_<key>.json        # one TuningResult (codec.rs)
 //!   store_<key>.jsonl        # merged ScheduleStore (canonical JSONL)
 //!   mcache_<key>.json        # MeasureCache snapshot (cache.rs format)
+//!   costmodel_<key>.json     # fitted CostModel (costmodel.rs format)
 //! ```
 //!
 //! Loads are integrity-checked: the manifest records the FNV-1a
@@ -61,7 +62,7 @@ pub use codec::{
     ManifestEntry, TUNING_CODEC_VERSION,
 };
 
-use crate::autosched::TuningResult;
+use crate::autosched::{CostModel, TuningResult};
 use crate::coordinator::MeasureCache;
 use crate::device::DeviceProfile;
 use crate::ir::workload::fnv1a;
@@ -91,11 +92,24 @@ fn keyed(parts: &[&[u8]]) -> u64 {
 /// keep fraction the tuning ran under; the exact path (`keep = 1.0`)
 /// appends nothing, so pre-existing artifacts keep their keys, while a
 /// pruned run keys separately and can never be served for an exact one.
-pub fn tuning_key(model: &str, device: &DeviceProfile, trials: usize, seed: u64, keep: f64) -> u64 {
+/// `model_hash` is the [`CostModel::content_hash`] of the learned prior
+/// the tuning was scored by, under the same conditional-append rule:
+/// the untrained/static prior (hash 0) appends nothing, so legacy keys
+/// stay byte-identical, while a run guided by a fitted prior keys
+/// separately and a *retrained* prior misses rather than collides.
+pub fn tuning_key(
+    model: &str,
+    device: &DeviceProfile,
+    trials: usize,
+    seed: u64,
+    keep: f64,
+    model_hash: u64,
+) -> u64 {
     let trials_b = (trials as u64).to_le_bytes();
     let seed_b = seed.to_le_bytes();
     let version_b = ARTIFACT_FORMAT_VERSION.to_le_bytes();
     let keep_b = keep.to_bits().to_le_bytes();
+    let hash_b = model_hash.to_le_bytes();
     let mut parts: Vec<&[u8]> = vec![
         b"tuning",
         model.as_bytes(),
@@ -107,17 +121,24 @@ pub fn tuning_key(model: &str, device: &DeviceProfile, trials: usize, seed: u64,
     if keep.to_bits() != 1.0f64.to_bits() {
         parts.push(&keep_b);
     }
+    if model_hash != 0 {
+        parts.push(b"costmodel");
+        parts.push(&hash_b);
+    }
     keyed(&parts)
 }
 
 /// Key of zoo-level artifacts (merged schedule store, measurement
 /// cache): the sorted model-name set plus the shared configuration.
+/// `keep` and `model_hash` follow the same conditional-append rule as
+/// [`tuning_key`] (1.0 / 0 append nothing).
 pub fn zoo_key(
     model_names: &[String],
     device: &DeviceProfile,
     trials: usize,
     seed: u64,
     keep: f64,
+    model_hash: u64,
 ) -> u64 {
     let mut names: Vec<&str> = model_names.iter().map(|s| s.as_str()).collect();
     names.sort_unstable();
@@ -126,6 +147,7 @@ pub fn zoo_key(
     let seed_b = seed.to_le_bytes();
     let version_b = ARTIFACT_FORMAT_VERSION.to_le_bytes();
     let keep_b = keep.to_bits().to_le_bytes();
+    let hash_b = model_hash.to_le_bytes();
     let mut parts: Vec<&[u8]> = vec![
         b"zoo",
         joined.as_bytes(),
@@ -136,6 +158,10 @@ pub fn zoo_key(
     ];
     if keep.to_bits() != 1.0f64.to_bits() {
         parts.push(&keep_b);
+    }
+    if model_hash != 0 {
+        parts.push(b"costmodel");
+        parts.push(&hash_b);
     }
     keyed(&parts)
 }
@@ -162,7 +188,8 @@ pub struct GcReport {
     pub kept_bytes: u64,
     /// Entries that were over budget but untouchable (live-pinned).
     pub pinned: usize,
-    /// Unreferenced `tuning_*`/`store_*`/`mcache_*` files swept.
+    /// Unreferenced `tuning_*`/`store_*`/`mcache_*`/`costmodel_*` files
+    /// swept.
     pub orphans_removed: usize,
 }
 
@@ -448,6 +475,32 @@ impl ArtifactStore {
         self.put(Self::kind_scoped("mcache", key), "mcache", &text)
     }
 
+    /// Load a fitted cost model saved under a zoo's *base* key (the key
+    /// computed with `model_hash = 0`) — the model cannot be keyed by
+    /// its own hash, so it lives beside the cache it was fitted from.
+    /// An untrained model is never persisted, so a successful load is
+    /// always a trained prior.
+    pub fn load_cost_model(&mut self, key: u64) -> Option<CostModel> {
+        let key = Self::kind_scoped("costmodel", key);
+        let text = self.read_checked(key, "costmodel")?;
+        match json::parse(text.trim_end()).and_then(|j| CostModel::from_json(&j)) {
+            Ok(model) if model.is_trained() => Some(model),
+            _ => {
+                self.forget(key);
+                self.stats.rejected += 1;
+                self.stats.hits -= 1;
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn save_cost_model(&mut self, key: u64, model: &CostModel) -> anyhow::Result<()> {
+        let mut text = model.to_json().to_compact();
+        text.push('\n');
+        self.put(Self::kind_scoped("costmodel", key), "costmodel", &text)
+    }
+
     // ---- lifecycle -------------------------------------------------------
 
     /// Shrink the directory to at most `budget_bytes` of artifact
@@ -496,7 +549,8 @@ impl ArtifactStore {
                 let Some(name) = name.to_str() else { continue };
                 let artifact_shaped = name.starts_with("tuning_")
                     || name.starts_with("store_")
-                    || name.starts_with("mcache_");
+                    || name.starts_with("mcache_")
+                    || name.starts_with("costmodel_");
                 if artifact_shaped
                     && !referenced.contains(name)
                     && std::fs::remove_file(dirent.path()).is_ok()
@@ -624,23 +678,30 @@ mod tests {
     fn keys_separate_every_configuration_axis() {
         let xeon = DeviceProfile::xeon_e5_2620();
         let edge = DeviceProfile::cortex_a72();
-        let base = tuning_key("ResNet18", &xeon, 2000, 7, 1.0);
-        assert_eq!(base, tuning_key("ResNet18", &xeon, 2000, 7, 1.0), "deterministic");
-        assert_ne!(base, tuning_key("ResNet50", &xeon, 2000, 7, 1.0));
-        assert_ne!(base, tuning_key("ResNet18", &edge, 2000, 7, 1.0));
-        assert_ne!(base, tuning_key("ResNet18", &xeon, 2001, 7, 1.0));
-        assert_ne!(base, tuning_key("ResNet18", &xeon, 2000, 8, 1.0));
+        let base = tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0);
+        assert_eq!(base, tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0), "deterministic");
+        assert_ne!(base, tuning_key("ResNet50", &xeon, 2000, 7, 1.0, 0));
+        assert_ne!(base, tuning_key("ResNet18", &edge, 2000, 7, 1.0, 0));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2001, 7, 1.0, 0));
+        assert_ne!(base, tuning_key("ResNet18", &xeon, 2000, 8, 1.0, 0));
         // A pruned run keys separately from the exact one, and keep
         // fractions key separately from each other.
-        let pruned = tuning_key("ResNet18", &xeon, 2000, 7, 0.25);
+        let pruned = tuning_key("ResNet18", &xeon, 2000, 7, 0.25, 0);
         assert_ne!(base, pruned);
-        assert_ne!(pruned, tuning_key("ResNet18", &xeon, 2000, 7, 0.5));
+        assert_ne!(pruned, tuning_key("ResNet18", &xeon, 2000, 7, 0.5, 0));
+        // A learned prior keys separately; distinct fits key apart; and
+        // the keep/model ingredients are independent axes.
+        let primed = tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0xDEAD_BEEF);
+        assert_ne!(base, primed);
+        assert_ne!(primed, tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0xFEED_FACE));
+        assert_ne!(primed, tuning_key("ResNet18", &xeon, 2000, 7, 0.25, 0xDEAD_BEEF));
         // Zoo keys are order-independent in the model set.
-        let a = zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 1.0);
-        let b = zoo_key(&["A".into(), "B".into()], &xeon, 100, 1, 1.0);
+        let a = zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 1.0, 0);
+        let b = zoo_key(&["A".into(), "B".into()], &xeon, 100, 1, 1.0, 0);
         assert_eq!(a, b);
-        assert_ne!(a, zoo_key(&["A".into()], &xeon, 100, 1, 1.0));
-        assert_ne!(a, zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 0.25));
+        assert_ne!(a, zoo_key(&["A".into()], &xeon, 100, 1, 1.0, 0));
+        assert_ne!(a, zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 0.25, 0));
+        assert_ne!(a, zoo_key(&["B".into(), "A".into()], &xeon, 100, 1, 1.0, 0xDEAD_BEEF));
     }
 
     #[test]
@@ -648,7 +709,7 @@ mod tests {
         let root = tmp_root("roundtrip");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0, 0);
 
         let mut store = ArtifactStore::open(&root).unwrap();
         assert!(store.load_tuning(key).is_none());
@@ -670,7 +731,7 @@ mod tests {
         let root = tmp_root("corrupt");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0, 0);
         let mut store = ArtifactStore::open(&root).unwrap();
         store.save_tuning(key, &res).unwrap();
 
@@ -691,7 +752,7 @@ mod tests {
         let root = tmp_root("stale");
         let xeon = DeviceProfile::xeon_e5_2620();
         let (g, res) = small_tuning();
-        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0);
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0, 0);
         let mut store = ArtifactStore::open(&root).unwrap();
         store.save_tuning(key, &res).unwrap();
 
@@ -725,7 +786,7 @@ mod tests {
         mcache.insert(42, Some(1e-3));
         mcache.insert(43, None);
 
-        let zk = zoo_key(&[g.name.clone()], &xeon, 32, 0xA45, 1.0);
+        let zk = zoo_key(&[g.name.clone()], &xeon, 32, 0xA45, 1.0, 0);
         let mut store = ArtifactStore::open(&root).unwrap();
         // Both zoo-level artifacts live under the same zoo key (the
         // store derives kind-scoped manifest rows internally).

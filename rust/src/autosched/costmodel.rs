@@ -8,6 +8,13 @@
 //! *ranking* fidelity (Spearman), which the tests check.
 
 use super::features::NUM_FEATURES;
+use crate::ir::workload::fnv1a;
+use crate::util::json::Json;
+
+/// Version stamp carried by every serialized model; readers reject
+/// other versions (the artifact store treats that as a miss + re-fit,
+/// never a crash).
+pub const COSTMODEL_CODEC_VERSION: u64 = 1;
 
 #[derive(Clone, Debug)]
 struct Node {
@@ -125,6 +132,111 @@ impl CostModel {
             y += self.lr * t.predict(x);
         }
         y
+    }
+
+    // ---- persistence & identity ------------------------------------------
+    //
+    // Trees and their nodes are private, so the canonical byte form of a
+    // fitted model lives here, next to the structures it encodes.
+
+    /// Canonical JSON form. Every float goes through [`Json::num`],
+    /// which round-trips `f64` bit-exactly, so save → load → save is a
+    /// fixed point and [`Self::content_hash`] is stable across
+    /// processes. Leaves encode their split feature as `-1` (a JSON
+    /// number cannot carry `usize::MAX` losslessly).
+    pub fn to_json(&self) -> Json {
+        let trees = self.trees.iter().map(|t| {
+            Json::arr(t.nodes.iter().map(|n| {
+                let feat = if n.feature == usize::MAX { -1.0 } else { n.feature as f64 };
+                Json::arr([
+                    Json::num(feat),
+                    Json::num(n.threshold),
+                    Json::num(n.left as f64),
+                    Json::num(n.right as f64),
+                    Json::num(n.value),
+                ])
+            }))
+        });
+        Json::obj(vec![
+            ("base", Json::num(self.base)),
+            ("lr", Json::num(self.lr)),
+            ("samples", Json::num(self.n_trained_samples as f64)),
+            ("trees", Json::arr(trees)),
+            ("version", Json::num(COSTMODEL_CODEC_VERSION as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CostModel> {
+        let version = j.req("version")?.as_f64().unwrap_or(0.0) as u64;
+        anyhow::ensure!(
+            version == COSTMODEL_CODEC_VERSION,
+            "unsupported cost-model version {version}"
+        );
+        let base = j.req("base")?.as_f64().ok_or_else(|| anyhow::anyhow!("bad base"))?;
+        let lr = j.req("lr")?.as_f64().ok_or_else(|| anyhow::anyhow!("bad lr"))?;
+        let samples = j
+            .req("samples")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bad samples count"))?;
+        let mut trees = Vec::new();
+        for (ti, tj) in j.req("trees")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let nodes_j = tj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("tree {ti}: expected node array"))?;
+            let mut nodes = Vec::with_capacity(nodes_j.len());
+            for (ni, nj) in nodes_j.iter().enumerate() {
+                let f = nj
+                    .as_arr()
+                    .filter(|a| a.len() == 5)
+                    .and_then(|a| {
+                        let vals: Vec<f64> = a.iter().filter_map(|v| v.as_f64()).collect();
+                        (vals.len() == 5).then_some(vals)
+                    })
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("tree {ti} node {ni}: expected 5 numbers")
+                    })?;
+                let feature = if f[0] < 0.0 { usize::MAX } else { f[0] as usize };
+                let (left, right) = (f[2] as usize, f[3] as usize);
+                if feature != usize::MAX {
+                    // Children were pushed after their parent during the
+                    // build, so forward-only indices are the termination
+                    // guarantee for `Tree::predict` — reject anything
+                    // else rather than risk an infinite walk on corrupt
+                    // input.
+                    anyhow::ensure!(
+                        feature < NUM_FEATURES
+                            && left > ni
+                            && right > ni
+                            && left < nodes_j.len()
+                            && right < nodes_j.len(),
+                        "tree {ti} node {ni}: malformed split"
+                    );
+                }
+                nodes.push(Node { feature, threshold: f[1], left, right, value: f[4] });
+            }
+            anyhow::ensure!(!nodes.is_empty(), "tree {ti}: empty");
+            trees.push(Tree { nodes });
+        }
+        Ok(CostModel { trees, base, lr, n_trained_samples: samples })
+    }
+
+    /// Stable identity of a fitted model: FNV-1a over the canonical
+    /// serialized form. The untrained model is defined to hash to `0`,
+    /// the "append nothing" sentinel of
+    /// [`crate::coordinator::cache::estimator_seed`] and the artifact
+    /// key builders — so a default model leaves every legacy key
+    /// byte-identical, and any two differently-fitted models (different
+    /// trees, base, or sample count) hash apart.
+    pub fn content_hash(&self) -> u64 {
+        if !self.is_trained() {
+            return 0;
+        }
+        let h = fnv1a(self.to_json().to_compact().as_bytes());
+        if h == 0 {
+            1 // keep "0 = untrained" unambiguous even if FNV lands on 0
+        } else {
+            h
+        }
     }
 }
 
@@ -277,6 +389,43 @@ mod tests {
         let ys = vec![7.0; 50];
         let m = CostModel::train(&xs, &ys, &GbdtParams::default());
         assert!((m.predict(&[25.0; NUM_FEATURES]) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serialization_roundtrips_bit_exactly_and_hash_is_stable() {
+        let (xs, ys) = synth(200, 5);
+        let model = CostModel::train(&xs, &ys, &GbdtParams::default());
+        let text = model.to_json().to_compact();
+        let back = CostModel::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_trained_samples, model.n_trained_samples);
+        for x in xs.iter().take(32) {
+            assert_eq!(model.predict(x).to_bits(), back.predict(x).to_bits());
+        }
+        assert_eq!(back.to_json().to_compact(), text, "save→load→save is a fixed point");
+        assert_eq!(back.content_hash(), model.content_hash());
+        assert_ne!(model.content_hash(), 0, "fitted models hash nonzero");
+    }
+
+    #[test]
+    fn untrained_model_hashes_to_zero_and_fits_differ() {
+        assert_eq!(CostModel::default().content_hash(), 0);
+        let (xs, ys) = synth(150, 7);
+        let a = CostModel::train(&xs, &ys, &GbdtParams::default());
+        let (xs2, ys2) = synth(150, 8);
+        let b = CostModel::train(&xs2, &ys2, &GbdtParams::default());
+        assert_ne!(a.content_hash(), b.content_hash(), "different fits, different identity");
+    }
+
+    #[test]
+    fn malformed_models_are_rejected() {
+        let parse = |s: &str| CostModel::from_json(&crate::util::json::parse(s).unwrap());
+        assert!(parse(r#"{"base":0,"lr":0.3,"samples":1,"trees":[],"version":9}"#).is_err());
+        // A split pointing backwards would loop predict forever.
+        assert!(parse(
+            r#"{"base":0,"lr":0.3,"samples":1,"trees":[[[0,1.0,0,0,0.0]]],"version":1}"#
+        )
+        .is_err());
+        assert!(parse(r#"{"base":0,"lr":0.3,"samples":1,"trees":[[]],"version":1}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Learned cost estimation over the measurement cache.
+//!
+//! "Learning to Optimize Tensor Programs" (Chen et al.) showed that a
+//! cost model trained on *real measurements* is what closes the gap
+//! between search-free ranking and full auto-tuning. The repo already
+//! accumulates exactly that training set for free: every sweep deposits
+//! content-addressed (features, runtime) pairs into the `MeasureCache`.
+//! This module turns those pairs into a fitted [`CostModel`] under a
+//! strict determinism contract:
+//!
+//! * **Fixed fold order** — training pairs are sorted by content key
+//!   and deduplicated before fitting, so the fit is independent of
+//!   cache iteration order, insertion order, and `--jobs`.
+//! * **Threshold-bucketed refits** — the fit consumes exactly the first
+//!   `REFIT_THRESHOLDS[k]` pairs for the largest threshold the pair
+//!   count reaches. Two caches in the same bucket produce bit-identical
+//!   models, so warming a cache within a bucket never silently changes
+//!   keys; refits happen at deterministic cache sizes, never wall-clock.
+//! * **Identity = content hash** — a fitted model's
+//!   [`CostModel::content_hash`] enters `artifact::tuning_key`/
+//!   `zoo_key` and the sweep seed (`coordinator::estimator_seed`) the
+//!   same way `speculative_keep` does; the untrained model hashes to 0
+//!   and appends nothing, keeping legacy keys byte-stable.
+
+use super::costmodel::{CostModel, GbdtParams};
+use super::features::NUM_FEATURES;
+
+/// Measured-pair counts at which the model is (re)fit. Below the first
+/// threshold the model stays untrained (a handful of samples would
+/// overfit and destabilize keys on every insert); between thresholds
+/// the fit is frozen at the last one crossed.
+pub const REFIT_THRESHOLDS: [usize; 5] = [64, 256, 1024, 4096, 16384];
+
+/// The largest refit threshold `n_pairs` has reached, or `None` when
+/// the corpus is still too small to train on.
+pub fn refit_threshold(n_pairs: usize) -> Option<usize> {
+    REFIT_THRESHOLDS.iter().rev().find(|&&t| n_pairs >= t).copied()
+}
+
+/// Which estimator a run scores candidates with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CostModelKind {
+    /// The per-task model trained from scratch within each tuning run
+    /// (and the draft model re-fit per span during speculative sweeps).
+    /// Artifact keys carry no model ingredient.
+    #[default]
+    Static,
+    /// A GBDT prior fitted from the measure cache, shipped as a
+    /// versioned artifact and keyed into everything it influences.
+    Learned,
+}
+
+impl CostModelKind {
+    pub fn parse(s: &str) -> Option<CostModelKind> {
+        match s {
+            "static" => Some(CostModelKind::Static),
+            "learned" => Some(CostModelKind::Learned),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CostModelKind::Static => "static",
+            CostModelKind::Learned => "learned",
+        }
+    }
+}
+
+/// What every consumer of a cost estimate needs — the tuner's round
+/// scoring, the speculative draft stage, and served sessions all rank
+/// through this trait, so static and learned models are
+/// interchangeable.
+pub trait CostEstimator {
+    /// Predicted log-throughput (higher = better schedule).
+    fn predict(&self, x: &[f64; NUM_FEATURES]) -> f64;
+    /// Whether predictions carry any information (an unfitted estimator
+    /// predicts a constant and callers fall back to exploration).
+    fn is_fitted(&self) -> bool;
+    /// Stable identity for key derivation; 0 iff unfitted.
+    fn content_hash(&self) -> u64;
+}
+
+impl CostEstimator for CostModel {
+    fn predict(&self, x: &[f64; NUM_FEATURES]) -> f64 {
+        CostModel::predict(self, x)
+    }
+
+    fn is_fitted(&self) -> bool {
+        self.is_trained()
+    }
+
+    fn content_hash(&self) -> u64 {
+        CostModel::content_hash(self)
+    }
+}
+
+/// One training example exported from the cache: the pair's content key
+/// (the dedup/sort identity), its feature vector, and the target
+/// `-ln(runtime)` (log-throughput, so higher = better — the same target
+/// the in-run tuner fits).
+#[derive(Clone, Debug)]
+pub struct TrainingPair {
+    pub content: u64,
+    pub x: [f64; NUM_FEATURES],
+    pub y: f64,
+}
+
+/// The log-throughput training target for a measured runtime.
+pub fn training_target(runtime_s: f64) -> f64 {
+    -(runtime_s.max(1e-12)).ln()
+}
+
+/// Deterministic fit: sort by content key, collapse duplicates (first
+/// occurrence wins — they are identical measurements anyway), truncate
+/// to the refit threshold bucket, and train. Returns the untrained
+/// model below the first threshold.
+pub fn fit_pairs(pairs: &[TrainingPair]) -> CostModel {
+    let mut sorted: Vec<&TrainingPair> = pairs.iter().collect();
+    sorted.sort_by_key(|p| p.content);
+    sorted.dedup_by_key(|p| p.content);
+    let Some(take) = refit_threshold(sorted.len()) else {
+        return CostModel::default();
+    };
+    sorted.truncate(take);
+    let xs: Vec<[f64; NUM_FEATURES]> = sorted.iter().map(|p| p.x).collect();
+    let ys: Vec<f64> = sorted.iter().map(|p| p.y).collect();
+    CostModel::train(&xs, &ys, &GbdtParams::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth_pairs(n: usize, seed: u64) -> Vec<TrainingPair> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut x = [0.0; NUM_FEATURES];
+                for v in x.iter_mut() {
+                    *v = rng.f64() * 10.0;
+                }
+                let y = 2.0 * x[3] - x[7] + rng.normal() * 0.1;
+                TrainingPair { content: (i as u64).wrapping_mul(0x9E37_79B9) ^ seed, x, y }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn refit_thresholds_bucket_correctly() {
+        assert_eq!(refit_threshold(0), None);
+        assert_eq!(refit_threshold(63), None);
+        assert_eq!(refit_threshold(64), Some(64));
+        assert_eq!(refit_threshold(255), Some(64));
+        assert_eq!(refit_threshold(256), Some(256));
+        assert_eq!(refit_threshold(100_000), Some(16384));
+    }
+
+    #[test]
+    fn fit_is_order_independent_and_bucket_frozen() {
+        let pairs = synth_pairs(300, 11);
+        let mut shuffled = pairs.clone();
+        shuffled.reverse();
+        let a = fit_pairs(&pairs);
+        let b = fit_pairs(&shuffled);
+        assert_eq!(a.content_hash(), b.content_hash(), "fold order is fixed by content key");
+        assert_ne!(a.content_hash(), 0);
+
+        // Growing within a bucket must not change the model: the fit
+        // consumes the smallest 256 content keys either way.
+        let mut by_key = pairs.clone();
+        by_key.sort_by_key(|p| p.content);
+        let at_256 = fit_pairs(&by_key[..256]);
+        let at_300 = fit_pairs(&by_key);
+        assert_eq!(at_256.content_hash(), at_300.content_hash(), "frozen within a bucket");
+    }
+
+    #[test]
+    fn below_first_threshold_stays_untrained() {
+        let pairs = synth_pairs(63, 3);
+        let m = fit_pairs(&pairs);
+        assert!(!m.is_trained());
+        assert_eq!(m.content_hash(), 0);
+    }
+
+    #[test]
+    fn duplicates_collapse_before_thresholding() {
+        // 64 unique pairs duplicated 3x: still one bucket of 64.
+        let base = synth_pairs(64, 9);
+        let mut tripled = base.clone();
+        tripled.extend(base.iter().cloned());
+        tripled.extend(base.iter().cloned());
+        assert_eq!(fit_pairs(&tripled).content_hash(), fit_pairs(&base).content_hash());
+    }
+
+    #[test]
+    fn kind_parses_and_prints() {
+        assert_eq!(CostModelKind::parse("static"), Some(CostModelKind::Static));
+        assert_eq!(CostModelKind::parse("learned"), Some(CostModelKind::Learned));
+        assert_eq!(CostModelKind::parse("xgboost"), None);
+        assert_eq!(CostModelKind::Learned.as_str(), "learned");
+        assert_eq!(CostModelKind::default(), CostModelKind::Static);
+    }
+}

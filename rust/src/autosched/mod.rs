@@ -10,10 +10,15 @@
 
 pub mod costmodel;
 pub mod features;
+pub mod learned;
 pub mod sketch;
 pub mod tuner;
 
-pub use costmodel::{CostModel, GbdtParams};
+pub use costmodel::{CostModel, GbdtParams, COSTMODEL_CODEC_VERSION};
 pub use features::{features, NUM_FEATURES};
+pub use learned::{
+    fit_pairs, refit_threshold, training_target, CostEstimator, CostModelKind, TrainingPair,
+    REFIT_THRESHOLDS,
+};
 pub use sketch::{crossover, mutate, random_schedule, sketch_shape};
 pub use tuner::{tune_model, HistoryPoint, KernelBest, TuneOptions, TuningResult};

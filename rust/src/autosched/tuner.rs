@@ -26,6 +26,7 @@ use crate::device::{measure_from_sim, model_time, simulate, untuned_kernel_times
 use crate::ir::{Kernel, ModelGraph};
 use crate::sched::{apply, serialize, Schedule};
 use crate::util::rng::Rng;
+use crate::util::stats::spearman;
 use std::collections::{HashMap, HashSet};
 
 #[derive(Clone, Debug)]
@@ -63,6 +64,15 @@ pub struct TuneOptions {
     /// downstream RNG draw — so the keep fraction is part of every
     /// artifact and measure-cache key (see `crate::artifact`).
     pub speculative_keep: f64,
+    /// Learned prior seeding every task's cost model. The untrained
+    /// default reproduces the historical from-scratch behavior exactly;
+    /// a trained prior makes even the first rounds model-guided (no
+    /// random-score warmup) and changes every downstream seeded draw,
+    /// which is why its content hash is folded into tuning artifact
+    /// keys (see [`crate::artifact::tuning_key`]). Each task still
+    /// retrains on its own measurements after every round — the prior
+    /// is a starting point, not a frozen scorer.
+    pub prior: CostModel,
 }
 
 impl Default for TuneOptions {
@@ -78,6 +88,7 @@ impl Default for TuneOptions {
             train_cost_s: 1.5,
             jobs: 0,
             speculative_keep: 1.0,
+            prior: CostModel::default(),
         }
     }
 }
@@ -98,6 +109,13 @@ pub struct HistoryPoint {
     /// End-to-end model time using the best schedules found so far
     /// (untuned default for not-yet-tuned kernels).
     pub model_time_s: f64,
+    /// Spearman rank correlation between the round's pre-measurement
+    /// model predictions and its measured log-throughputs — how well
+    /// the cost model (prior or retrained) actually ranked this batch.
+    /// 0.0 when the round had no trained model or fewer than two
+    /// measured candidates. Diagnostic only: NOT persisted by the
+    /// artifact codec (round-trips as 0.0) and not part of any key.
+    pub rank_corr: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -231,7 +249,7 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
             ys: Vec::new(),
             measured: HashSet::new(),
             top: Vec::new(),
-            model: CostModel::default(),
+            model: opts.prior.clone(),
             best_cost: f64::INFINITY,
             untuned_cost: untuned[i] / graph.use_count(i).max(1) as f64,
             slope: 1.0,
@@ -386,6 +404,12 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         // later seeded draw, which is why the keep fraction is part of
         // every artifact and measure-cache key.
         let prev_best = if task.best_cost.is_finite() { task.best_cost } else { task.untuned_cost };
+        // Per-round model diagnostics: the round's pre-measurement
+        // predictions vs its measured log-throughputs (rank_corr in the
+        // history point). Read-only — no draws, no ledger, no key
+        // impact.
+        let mut round_preds: Vec<f64> = Vec::new();
+        let mut round_meas: Vec<f64> = Vec::new();
         let speculative = opts.speculative_keep < 1.0 && task.model.is_trained();
         let preps: Vec<Prep> = if !speculative {
             // Exact path (keep = 1.0, or model not yet trained): every
@@ -472,6 +496,10 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
                     ledger += profile.measure_overhead_s
                         + profile.rpc_overhead_s
                         + profile.measure_repeats as f64 * cost;
+                    if task.model.is_trained() {
+                        round_preds.push(task.model.predict(&feats));
+                        round_meas.push(-(cost.max(1e-12)).ln());
+                    }
                     task.xs.push(feats);
                     task.ys.push(-(cost.max(1e-12)).ln());
                     if cost < task.best_cost {
@@ -493,10 +521,17 @@ pub fn tune_model(graph: &ModelGraph, profile: &DeviceProfile, opts: &TuneOption
         let rel_gain = ((prev_best - new_best) / prev_best).max(0.0);
         task.slope = 0.5 * task.slope + 0.5 * rel_gain;
 
+        let rank_corr = if round_preds.len() >= 2 {
+            let r = spearman(&round_preds, &round_meas);
+            if r.is_finite() { r } else { 0.0 }
+        } else {
+            0.0
+        };
         history.push(HistoryPoint {
             trials: trials_used,
             search_time_s: ledger,
             model_time_s: model_time_now(&tasks),
+            rank_corr,
         });
     }
 
@@ -681,6 +716,72 @@ mod tests {
             exact.final_model_time(&g, &prof).to_bits(),
             kept.final_model_time(&g, &prof).to_bits()
         );
+    }
+
+    /// A genuinely informative prior: fit on simulated timings of the
+    /// kernel's own random schedules, so its predictions vary across
+    /// the candidates the tuner proposes.
+    fn synth_prior(kernel: &Kernel, prof: &DeviceProfile) -> CostModel {
+        let mut rng = Rng::new(99);
+        let mut xs: Vec<[f64; NUM_FEATURES]> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        while xs.len() < 64 {
+            let s = random_schedule(kernel, &mut rng);
+            if let Ok(nest) = apply(&s, kernel) {
+                xs.push(features(kernel, &nest, prof));
+                ys.push(-(simulate(kernel, &nest, prof).total_s.max(1e-12)).ln());
+            }
+        }
+        let m = CostModel::train(&xs, &ys, &GbdtParams::default());
+        assert!(m.is_trained());
+        m
+    }
+
+    #[test]
+    fn trained_prior_changes_the_trajectory_deterministically() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let prior = synth_prior(&g.kernels[0], &prof);
+        let a = tune_model(&g, &prof, &TuneOptions { prior: prior.clone(), ..tiny_opts(48) });
+        let b = tune_model(&g, &prof, &TuneOptions { prior: prior.clone(), ..tiny_opts(48) });
+        assert_eq!(a.search_time_s.to_bits(), b.search_time_s.to_bits());
+        assert_eq!(
+            a.final_model_time(&g, &prof).to_bits(),
+            b.final_model_time(&g, &prof).to_bits()
+        );
+        // The prior replaces the untrained model's random exploration
+        // scores from round one, so the whole trajectory moves — which
+        // is exactly why a trained prior re-keys tuning artifacts.
+        let plain = tune_model(&g, &prof, &tiny_opts(48));
+        assert_ne!(a.search_time_s.to_bits(), plain.search_time_s.to_bits());
+        // An untrained prior IS the default path, byte-for-byte.
+        let inert = tune_model(
+            &g,
+            &prof,
+            &TuneOptions { prior: CostModel::default(), ..tiny_opts(48) },
+        );
+        assert_eq!(inert.search_time_s.to_bits(), plain.search_time_s.to_bits());
+    }
+
+    #[test]
+    fn history_tracks_rank_correlation_once_the_model_trains() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let g = gemm_graph();
+        let res = tune_model(&g, &prof, &tiny_opts(96));
+        // Round one runs under the untrained model: no correlation.
+        assert_eq!(res.history[0].rank_corr, 0.0);
+        assert!(res.history.iter().all(|h| h.rank_corr.abs() <= 1.0 + 1e-9));
+        assert!(
+            res.history.iter().any(|h| h.rank_corr != 0.0),
+            "no round ever recorded a model-vs-measurement correlation"
+        );
+        // With a trained prior, even round one is scored by a model.
+        let primed = tune_model(
+            &g,
+            &prof,
+            &TuneOptions { prior: synth_prior(&g.kernels[0], &prof), ..tiny_opts(96) },
+        );
+        assert_ne!(primed.history[0].rank_corr, 0.0);
     }
 
     #[test]

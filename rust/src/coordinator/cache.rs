@@ -108,6 +108,21 @@ pub fn speculative_seed(seed: u64, keep: f64) -> u64 {
     seed ^ keep.to_bits().rotate_left(17).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
+/// Fold a trained cost model's content hash into a measurement seed, so
+/// sweeps drafted by a learned prior live in their own cache key space
+/// (a retrained model misses warm entries instead of being served
+/// drafts ranked by a different model). `model_hash = 0` — the
+/// untrained/static estimator, whose hash is defined as zero — returns
+/// the seed unchanged, keeping every legacy key and golden fixture
+/// byte-identical. Composes with [`speculative_seed`]: the keep
+/// fraction and the model hash are independent key ingredients.
+pub fn estimator_seed(seed: u64, model_hash: u64) -> u64 {
+    if model_hash == 0 {
+        return seed;
+    }
+    seed ^ model_hash.rotate_left(23).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// Hit/miss/eviction counters. `hits` are lookups served from the map;
 /// `dedup_hits` are duplicates collapsed within a single batch by the
 /// executor before any measurement happened (same amortization, tracked
@@ -458,6 +473,21 @@ mod tests {
         assert_ne!(half, 0xA45);
         assert_ne!(quarter, half, "distinct keeps get distinct key spaces");
         assert_eq!(quarter, speculative_seed(0xA45, 0.25), "deterministic");
+    }
+
+    #[test]
+    fn estimator_seed_separates_trained_models() {
+        assert_eq!(estimator_seed(0xA45, 0), 0xA45, "untrained model keeps legacy keys");
+        let a = estimator_seed(0xA45, 0xDEAD_BEEF);
+        let b = estimator_seed(0xA45, 0xFEED_FACE);
+        assert_ne!(a, 0xA45);
+        assert_ne!(b, 0xA45);
+        assert_ne!(a, b, "distinct models get distinct key spaces");
+        assert_eq!(a, estimator_seed(0xA45, 0xDEAD_BEEF), "deterministic");
+        // Independent of the speculative-keep ingredient.
+        let keep = speculative_seed(0xA45, 0.25);
+        assert_ne!(estimator_seed(keep, 0xDEAD_BEEF), keep);
+        assert_ne!(estimator_seed(keep, 0xDEAD_BEEF), a);
     }
 
     #[test]

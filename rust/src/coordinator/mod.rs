@@ -19,14 +19,14 @@ pub mod pool;
 pub mod rpc;
 
 pub use cache::{
-    content_from_parts, content_key, pair_key, profile_key, speculative_seed, sweep_key,
-    CacheStats, MeasureCache, Resolution,
+    content_from_parts, content_key, estimator_seed, pair_key, profile_key, speculative_seed,
+    sweep_key, CacheStats, MeasureCache, Resolution,
 };
 pub use jobs::{effective_jobs, global_jobs, set_global_jobs};
 pub use ledger::Ledger;
 pub use metrics::{LatencyHistogram, SweepMetrics};
 pub use pool::{
-    measure_pairs, measure_pairs_cached, measure_pairs_cached_precomputed, CachedBatch,
-    PairOutcome,
+    measure_pairs, measure_pairs_cached, measure_pairs_cached_generic,
+    measure_pairs_cached_precomputed, CacheOps, CachedBatch, PairOutcome,
 };
 pub use rpc::RemoteSession;

@@ -134,9 +134,60 @@ pub fn measure_pairs_cached_precomputed(
     cache: &mut MeasureCache,
     ledger: &mut Ledger,
 ) -> CachedBatch {
-    // KEEP IN SYNC with `crate::service::shard::measure_pairs_sharded`,
-    // the per-shard-locked copy of this pipeline; a semantic change
-    // here must land there too.
+    measure_pairs_cached_generic(jobs, contents, profile, seed, cache, ledger)
+}
+
+/// The three cache operations the batched measure pipeline needs. The
+/// flat `&mut MeasureCache` executor and the service layer's sharded
+/// executor (`crate::service::shard`) differ only in how these are
+/// acquired (direct mutable access vs a per-key shard lock), so both
+/// implement this trait and share one pipeline body —
+/// [`measure_pairs_cached_generic`].
+pub trait CacheOps {
+    /// Count a batch-local duplicate of `key` (the stat lives with the
+    /// entry's shard, hence the key parameter).
+    fn record_dedup_hit(&mut self, key: u64);
+    /// Look up `key`, re-validating hit-invalid entries via `validate`
+    /// (see [`MeasureCache::resolve_with`]).
+    fn resolve(
+        &mut self,
+        key: u64,
+        validate: impl FnOnce() -> Result<(), ApplyError>,
+    ) -> Resolution<ApplyError>;
+    /// Record a fresh measurement (or compile failure) under `key`.
+    fn insert_outcome(&mut self, key: u64, runtime: Option<f64>);
+}
+
+impl CacheOps for MeasureCache {
+    fn record_dedup_hit(&mut self, _key: u64) {
+        self.stats.dedup_hits += 1;
+    }
+
+    fn resolve(
+        &mut self,
+        key: u64,
+        validate: impl FnOnce() -> Result<(), ApplyError>,
+    ) -> Resolution<ApplyError> {
+        self.resolve_with(key, validate)
+    }
+
+    fn insert_outcome(&mut self, key: u64, runtime: Option<f64>) {
+        self.insert(key, runtime);
+    }
+}
+
+/// The one dedup/resolve/measure/charge pipeline behind both cached
+/// executors, parameterized over [`CacheOps`]. Measurement happens
+/// outside every cache operation, so a locking impl only holds a lock
+/// for the short resolve/insert critical sections.
+pub fn measure_pairs_cached_generic<C: CacheOps>(
+    jobs: &[(&Kernel, &Schedule)],
+    contents: &[u64],
+    profile: &DeviceProfile,
+    seed: u64,
+    cache: &mut C,
+    ledger: &mut Ledger,
+) -> CachedBatch {
     assert_eq!(jobs.len(), contents.len());
 
     /// Where job `i`'s outcome comes from.
@@ -163,13 +214,13 @@ pub fn measure_pairs_cached_precomputed(
     let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
     for (ji, &key) in keys.iter().enumerate() {
         if let Some(&si) = slot_of_key.get(&key) {
-            cache.stats.dedup_hits += 1;
+            cache.record_dedup_hit(key);
             let dup = slots[si].clone();
             slots.push(dup);
             continue;
         }
         let (kernel, sched) = jobs[ji];
-        let slot = match cache.resolve_with(key, || apply(sched, kernel).map(|_| ())) {
+        let slot = match cache.resolve(key, || apply(sched, kernel).map(|_| ())) {
             Resolution::Hit(t) => Slot::Hit(t),
             Resolution::HitInvalid(e) => Slot::HitInvalid(e),
             Resolution::Corrupt | Resolution::Miss => {
@@ -192,7 +243,7 @@ pub fn measure_pairs_cached_precomputed(
             Some(t) => ledger.charge_measure(profile, t),
             None => ledger.charge_compile_fail(profile),
         }
-        cache.insert(*key, outcome.runtime());
+        cache.insert_outcome(*key, outcome.runtime());
     }
 
     let outcomes: Vec<PairOutcome> = slots

@@ -37,7 +37,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use transfer_tuning::artifact::{self, ArtifactStore};
-use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::autosched::{tune_model, CostModelKind, TuneOptions};
 use transfer_tuning::device::{untuned_model_time, DeviceProfile};
 use transfer_tuning::models;
 use transfer_tuning::report::{figures, tables, ExperimentConfig, Zoo};
@@ -81,6 +81,12 @@ struct Cli {
     /// builds without the flag. Unlike `--jobs` this changes results,
     /// so it is part of every artifact and measurement-cache key.
     speculative_keep: f64,
+    /// Which cost estimator scores candidates: `static` (default —
+    /// per-run models trained from scratch, no key ingredient) or
+    /// `learned` (a GBDT prior fitted from the measure cache, persisted
+    /// as a versioned artifact whose content hash keys everything it
+    /// influences).
+    cost_model: CostModelKind,
     /// Reactor connection cap for `serve --listen`. 0 = server default
     /// (see `rpc::DEFAULT_MAX_CONNS`); at the cap the listener pauses
     /// and further connects wait in the kernel backlog.
@@ -88,6 +94,12 @@ struct Cli {
     /// Idle-connection deadline in seconds for `serve --listen`. 0 =
     /// server default (see `rpc::READ_STALL_TIMEOUT`).
     idle_timeout_s: u64,
+    /// Mid-frame progress deadline in seconds for `serve --listen`
+    /// (slowloris bound). 0 = server default.
+    read_stall_s: u64,
+    /// Outbound-progress deadline in seconds for `serve --listen`
+    /// (client stopped reading its replies). 0 = server default.
+    write_stall_s: u64,
     /// `repro admin ADDR republish --all`: republish every zoo model.
     all: bool,
 }
@@ -114,8 +126,11 @@ fn parse_args() -> Result<Cli> {
         cache_budget: None,
         jobs: 0,
         speculative_keep: 1.0,
+        cost_model: CostModelKind::Static,
         max_conns: 0,
         idle_timeout_s: 0,
+        read_stall_s: 0,
+        write_stall_s: 0,
         all: false,
     };
     while let Some(arg) = args.next() {
@@ -148,6 +163,11 @@ fn parse_args() -> Result<Cli> {
                 }
                 cli.speculative_keep = keep;
             }
+            "--cost-model" => {
+                let name = value("--cost-model")?;
+                cli.cost_model = CostModelKind::parse(&name)
+                    .with_context(|| format!("unknown cost model `{name}` (static|learned)"))?;
+            }
             "--max-conns" => {
                 let n: usize = value("--max-conns")?.parse()?;
                 if n == 0 {
@@ -161,6 +181,20 @@ fn parse_args() -> Result<Cli> {
                     bail!("--idle-timeout must be >= 1 (seconds)");
                 }
                 cli.idle_timeout_s = secs;
+            }
+            "--read-stall" => {
+                let secs: u64 = value("--read-stall")?.parse()?;
+                if secs == 0 {
+                    bail!("--read-stall must be >= 1 (seconds)");
+                }
+                cli.read_stall_s = secs;
+            }
+            "--write-stall" => {
+                let secs: u64 = value("--write-stall")?.parse()?;
+                if secs == 0 {
+                    bail!("--write-stall must be >= 1 (seconds)");
+                }
+                cli.write_stall_s = secs;
             }
             "--all" => cli.all = true,
             other if !other.starts_with("--") => {
@@ -290,6 +324,7 @@ fn build_zoo_with(cli: &Cli, artifacts: Option<&mut ArtifactStore>) -> Zoo {
             device: cli.device.clone(),
             jobs: cli.jobs,
             speculative_keep: cli.speculative_keep,
+            cost_model: cli.cost_model,
         },
         artifacts,
         |line| eprintln!("  {line}"),
@@ -399,6 +434,7 @@ fn cmd_figure(cli: &Cli) -> Result<()> {
                 device: cli.device.clone(),
                 jobs: cli.jobs,
                 speculative_keep: cli.speculative_keep,
+                cost_model: cli.cost_model,
             };
             let t = figures::fig7(&config, |l| eprintln!("  {l}"));
             emit(&t, &cli.out, "fig7")?;
@@ -421,8 +457,16 @@ fn tune_cached(
     graph: &transfer_tuning::ir::ModelGraph,
     artifacts: &mut Option<ArtifactStore>,
 ) -> Result<transfer_tuning::autosched::TuningResult> {
-    let key =
-        artifact::tuning_key(&graph.name, &cli.device, cli.trials, cli.seed, cli.speculative_keep);
+    // Standalone tunes run under no learned prior (hash 0): they are
+    // the base artifacts zoo builds share.
+    let key = artifact::tuning_key(
+        &graph.name,
+        &cli.device,
+        cli.trials,
+        cli.seed,
+        cli.speculative_keep,
+        0,
+    );
     if let Some(res) = artifacts.as_mut().and_then(|a| a.load_tuning(key)) {
         eprintln!("loaded {} from artifacts (0 trials run)", graph.name);
         return Ok(res);
@@ -565,6 +609,7 @@ fn cmd_all(cli: &Cli) -> Result<()> {
         device: cli.device.clone(),
         jobs: cli.jobs,
         speculative_keep: cli.speculative_keep,
+        cost_model: cli.cost_model,
     };
     emit(&figures::fig7(&config, |l| eprintln!("  {l}")), &cli.out, "fig7")?;
 
@@ -779,11 +824,15 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
         device: cli.device.clone(),
         jobs: cli.jobs,
         speculative_keep: cli.speculative_keep,
+        cost_model: cli.cost_model,
     };
     // Seed the serving cache from the persisted zoo-level measurement
     // cache (if any) BEFORE serving: a warm --cache-dir keeps serving
     // for free, and the save-on-exit below writes back a superset of
-    // what was loaded, never a clobbered subset.
+    // what was loaded, never a clobbered subset. Zoo-level artifacts
+    // (store, cache, cost model) all live under the BASE key
+    // (model_hash 0) — the build itself always runs under the
+    // untrained prior, so the key cannot depend on its own output.
     let zoo_names: Vec<String> = models::all_models().iter().map(|m| m.name.clone()).collect();
     let zoo_key = artifact::zoo_key(
         &zoo_names,
@@ -791,13 +840,31 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
         config.trials,
         config.seed,
         config.effective_keep(),
+        0,
     );
     let warm_cache = artifacts
         .as_mut()
         .and_then(|a| a.load_measure_cache(zoo_key))
         .unwrap_or_default();
+    // Under --cost-model learned, adopt the persisted fitted prior (if
+    // one exists) with zero re-training: served sessions draft through
+    // it, and its content hash re-keys their speculative sweeps.
+    let cost_prior = match cli.cost_model {
+        CostModelKind::Learned => artifacts
+            .as_mut()
+            .and_then(|a| a.load_cost_model(zoo_key))
+            .unwrap_or_default(),
+        CostModelKind::Static => transfer_tuning::autosched::CostModel::default(),
+    };
+    if cost_prior.is_trained() {
+        eprintln!(
+            "[rpc] learned cost prior loaded (hash {:016x}, 0 re-training)",
+            cost_prior.content_hash()
+        );
+    }
     let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards)
-        .with_speculative_keep(cli.speculative_keep);
+        .with_speculative_keep(cli.speculative_keep)
+        .with_cost_model(cost_prior);
     let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
 
     let state = Arc::new(ServeState {
@@ -831,14 +898,10 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
         Arc::new(move |req, service| match req {
             AdminRequest::Stats => {
                 let zoo = state.zoo.lock().expect("zoo stats lock").clone();
-                let server = (
-                    gauges.connections.load(Ordering::Relaxed),
-                    gauges.queue_depth.load(Ordering::Relaxed),
-                );
                 rpc::stats_json(
                     service,
                     Some((&zoo, state.complete.load(Ordering::SeqCst))),
-                    Some(server),
+                    Some(rpc::ServerStats::snapshot(&gauges)),
                 )
             }
             AdminRequest::Shutdown => {
@@ -903,6 +966,12 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     }
     if cli.idle_timeout_s > 0 {
         server_config.idle_timeout = std::time::Duration::from_secs(cli.idle_timeout_s);
+    }
+    if cli.read_stall_s > 0 {
+        server_config.read_stall = std::time::Duration::from_secs(cli.read_stall_s);
+    }
+    if cli.write_stall_s > 0 {
+        server_config.write_stall = std::time::Duration::from_secs(cli.write_stall_s);
     }
     let server = RpcServer::start_with_config(
         bind,
@@ -972,9 +1041,13 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
                     )),
                     Some(graph) => {
                         eprintln!("[rpc] republish {name}:");
+                        // The service's live prior feeds forward into the
+                        // republish: a trained model re-keys (and re-tunes)
+                        // the refreshed tuning; untrained = legacy keys.
                         let (epoch, cost) = republish_model(
                             graph,
                             config.clone(),
+                            service.cost_model().as_ref().clone(),
                             artifacts.as_mut(),
                             &service,
                             &mut |line| eprintln!("  {line}"),
@@ -1007,6 +1080,7 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
                     let (epoch, cost) = republish_model(
                         graph,
                         config.clone(),
+                        service.cost_model().as_ref().clone(),
                         artifacts.as_mut(),
                         &service,
                         &mut |line| eprintln!("  {line}"),
@@ -1365,6 +1439,14 @@ FLAGS
   --idle-timeout SECS
                   reap RPC connections with no in-flight traffic after
                   SECS of silence (default 30)
+  --read-stall SECS
+                  evict RPC connections stalled mid-frame (a slowloris
+                  drip) after SECS without a byte of progress
+                  (default 30)
+  --write-stall SECS
+                  evict RPC connections whose outbound buffer makes no
+                  progress (client stopped reading replies) for SECS
+                  (default 30)
   --shards N      measurement-cache shards for `serve` (default 8)
   --cache-budget BYTES
                   artifact-store size budget: every persist phase GCs the
@@ -1386,6 +1468,14 @@ FLAGS
                   flag. Unlike --jobs this changes results, so pruned
                   runs live under their own artifact and measurement-
                   cache keys
+  --cost-model static|learned
+                  candidate estimator. static (default): per-run models
+                  trained from scratch, no key ingredient. learned: a
+                  GBDT prior fitted deterministically from the measure
+                  cache at fixed size thresholds, persisted as a
+                  versioned artifact; once trained, its content hash
+                  keys every tuning/sweep it influences (untrained it
+                  appends nothing, so default runs keep legacy keys)
 ";
 
 fn main() -> Result<()> {

@@ -6,17 +6,21 @@
 //! seed) and shared. All results are deterministic in the seed.
 
 use crate::artifact::{self, ArtifactStore};
-use crate::autosched::{tune_model, TuneOptions, TuningResult};
-use crate::coordinator::jobs::effective_jobs;
-use crate::coordinator::{CacheStats, MeasureCache};
+use crate::autosched::{
+    features, fit_pairs, training_target, tune_model, CostModel, CostModelKind, TrainingPair,
+    TuneOptions, TuningResult,
+};
+use crate::coordinator::jobs::{effective_jobs, par_map_indexed};
+use crate::coordinator::{content_from_parts, speculative_seed, sweep_key, CacheStats, MeasureCache};
 use crate::device::{untuned_model_time, DeviceProfile};
 use crate::ir::ModelGraph;
 use crate::models;
+use crate::sched::apply;
 use crate::transfer::{
     rank_tuning_models, transfer_tune_cached, ScheduleStore, TransferOptions, TransferResult,
 };
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 
 #[derive(Clone, Debug)]
@@ -42,6 +46,16 @@ pub struct ExperimentConfig {
     /// of every artifact and measurement-cache key (pruned runs miss an
     /// exact cache instead of colliding with it).
     pub speculative_keep: f64,
+    /// Which cost estimator scores candidates (`--cost-model`).
+    /// `Static` (the default) is the historical behavior: every tuning
+    /// run and draft stage trains its own throwaway model. `Learned`
+    /// fits a persistent GBDT prior from the zoo's measurement cache at
+    /// deterministic size thresholds (see `crate::autosched::learned`);
+    /// once trained, the prior's content hash joins `speculative_keep`
+    /// in every artifact and cache key it influences. Until the prior
+    /// trains (and always at the default keep for sweeps), a `Learned`
+    /// run is byte-identical to `Static`.
+    pub cost_model: CostModelKind,
 }
 
 impl ExperimentConfig {
@@ -65,6 +79,7 @@ impl Default for ExperimentConfig {
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
             speculative_keep: 1.0,
+            cost_model: CostModelKind::Static,
         }
     }
 }
@@ -86,6 +101,13 @@ pub struct Zoo {
     pub untuned_s: Vec<f64>,
     pub store: ScheduleStore,
     pub cache: RefCell<MeasureCache>,
+    /// The learned cost prior ([`ExperimentConfig::cost_model`]).
+    /// Untrained for `Static` zoos and for `Learned` zoos whose cache
+    /// has not yet crossed the first refit threshold; loaded from the
+    /// artifact store on warm starts (zero re-training) and otherwise
+    /// fit from the rehydrated cache at build time. Re-fit on demand via
+    /// [`Zoo::refit_cost_model`] after sweeps warm the cache further.
+    pub cost_model: RefCell<CostModel>,
     /// What this build cost (the warm-start proof inspects it).
     pub build_stats: ZooBuildStats,
 }
@@ -164,6 +186,13 @@ pub struct ZooProducer<'a> {
     models: Vec<ModelGraph>,
     next: usize,
     artifacts: Option<&'a mut ArtifactStore>,
+    /// Learned prior handed to every tuning this producer launches (and
+    /// folded into its tuning keys when trained). Zoo builds always run
+    /// with the untrained default — the prior is fit *from* the build's
+    /// own measurements, so feeding it back in would invalidate warm
+    /// starts — but [`republish_model`] re-tunes single models under a
+    /// zoo's fitted prior via [`ZooProducer::with_prior`].
+    prior: CostModel,
     /// Cost accounting so far (exactly [`Zoo::build_stats`]'s semantics;
     /// a fully warm producer finishes with 0 trials / 0.0 charged).
     pub stats: ZooBuildStats,
@@ -193,12 +222,22 @@ impl<'a> ZooProducer<'a> {
             models,
             next: 0,
             artifacts,
+            prior: CostModel::default(),
             stats: ZooBuildStats::default(),
             scheduled: 0,
             in_flight: 0,
             ready: HashMap::new(),
             fanout: Fanout::new(),
         }
+    }
+
+    /// Tune under a learned prior: the model seeds every launched
+    /// tuner's cost model, and (when trained) its content hash becomes
+    /// part of each tuning key, so primed tunings never collide with
+    /// from-scratch ones.
+    pub fn with_prior(mut self, prior: CostModel) -> Self {
+        self.prior = prior;
+        self
     }
 
     /// Keep the model-level lookahead full: schedule models in index
@@ -227,6 +266,7 @@ impl<'a> ZooProducer<'a> {
                 self.config.trials,
                 self.config.seed,
                 self.config.effective_keep(),
+                self.prior.content_hash(),
             );
             if let Some(res) = self.artifacts.as_deref_mut().and_then(|a| a.load_tuning(key)) {
                 self.ready.insert(index, (res, TuneOrigin::Artifact));
@@ -239,6 +279,7 @@ impl<'a> ZooProducer<'a> {
                 seed: self.config.seed,
                 jobs: inner_jobs,
                 speculative_keep: self.config.effective_keep(),
+                prior: self.prior.clone(),
                 ..Default::default()
             };
             let tx = self
@@ -275,7 +316,10 @@ impl<'a> ZooProducer<'a> {
 
     /// Key under which this producer's zoo-level artifacts (merged
     /// store, measurement cache) live — same derivation as
-    /// [`Zoo::artifact_key`].
+    /// [`Zoo::artifact_key`]. Always the *base* (model-hash-0) key:
+    /// builds run under the untrained prior, and the fitted cost model
+    /// itself is stored under this key so a warm start can find it
+    /// before any model exists in memory.
     pub fn zoo_key(&self) -> u64 {
         artifact::zoo_key(
             &self.models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
@@ -283,6 +327,7 @@ impl<'a> ZooProducer<'a> {
             self.config.trials,
             self.config.seed,
             self.config.effective_keep(),
+            0,
         )
     }
 
@@ -339,6 +384,7 @@ impl<'a> ZooProducer<'a> {
                     cfg.trials,
                     cfg.seed,
                     cfg.effective_keep(),
+                    self.prior.content_hash(),
                 );
                 if let Some(a) = self.artifacts.as_deref_mut() {
                     if let Err(e) = a.save_tuning(key, &res) {
@@ -388,14 +434,20 @@ impl<'a> ZooProducer<'a> {
 /// budget, seed, epoch) because a republish is just one more epoch.
 /// Returns the new epoch and what the republish cost (a warm republish
 /// is `models_from_artifacts == 1`, zero trials).
+///
+/// `prior` is the learned cost model the re-tune runs under (pass the
+/// serving zoo's fitted prior, or the untrained default for the legacy
+/// from-scratch path); a trained prior re-keys the tuning artifact, so
+/// primed re-tunes are cached separately from from-scratch ones.
 pub fn republish_model(
     graph: ModelGraph,
     config: ExperimentConfig,
+    prior: CostModel,
     artifacts: Option<&mut ArtifactStore>,
     service: &crate::service::ScheduleService,
     progress: &mut impl FnMut(&str),
 ) -> (u64, ZooBuildStats) {
-    let mut producer = ZooProducer::for_models(vec![graph], config, artifacts);
+    let mut producer = ZooProducer::for_models(vec![graph], config, artifacts).with_prior(prior);
     let epoch = producer
         .publish_next(service, progress)
         .expect("a one-model producer yields exactly one landing");
@@ -461,11 +513,110 @@ impl Zoo {
             .as_deref_mut()
             .and_then(|a| a.load_measure_cache(zoo_key))
             .unwrap_or_default();
-        Zoo { config, models, tunings, untuned_s, store, cache: RefCell::new(cache), build_stats }
+        // Learned runs: prefer the persisted model (warm start, zero
+        // re-training); otherwise fit from whatever the rehydrated
+        // cache holds — a cold build has an empty cache and stays
+        // untrained until sweeps feed it (see `refit_cost_model`).
+        let cost_model = if config.cost_model == CostModelKind::Learned {
+            artifacts
+                .as_deref_mut()
+                .and_then(|a| a.load_cost_model(zoo_key))
+                .unwrap_or_default()
+        } else {
+            CostModel::default()
+        };
+        let zoo = Zoo {
+            config,
+            models,
+            tunings,
+            untuned_s,
+            store,
+            cache: RefCell::new(cache),
+            cost_model: RefCell::new(cost_model),
+            build_stats,
+        };
+        if zoo.config.cost_model == CostModelKind::Learned
+            && !zoo.cost_model.borrow().is_trained()
+        {
+            zoo.refit_cost_model();
+        }
+        zoo
     }
 
-    /// Key under which this zoo's merged store + measurement cache are
-    /// persisted.
+    /// Export the measurement cache's (features, runtime) pairs as a
+    /// training set for the learned prior: every same-class
+    /// (kernel, store record) combination across the zoo's models whose
+    /// measurement is resident in the cache, identified by content key.
+    ///
+    /// Pairs are read from the *base* estimator seed space — the one
+    /// untrained-prior sweeps and every exact-path (keep = 1.0) sweep
+    /// deposit into — so the corpus keeps growing as long as exact
+    /// sweeps run, and two caches with the same entries yield the same
+    /// corpus regardless of how (or in what order, or at what `--jobs`)
+    /// they were warmed. The feature pass is pure and parallel;
+    /// `fit_pairs` re-sorts by content key, so nothing here depends on
+    /// enumeration order.
+    pub fn training_pairs(&self) -> Vec<TrainingPair> {
+        let fit_seed = speculative_seed(self.config.seed, self.config.effective_keep());
+        let cache = self.cache.borrow();
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut found = Vec::new();
+        for m in &self.models {
+            for kernel in &m.kernels {
+                let sig = kernel.class_signature();
+                for r in &self.store.records {
+                    if r.class_sig != sig {
+                        continue;
+                    }
+                    let content = content_from_parts(kernel.workload_id, r.schedule_hash());
+                    if !seen.insert(content) {
+                        continue;
+                    }
+                    let key = sweep_key(content, fit_seed, &self.config.device);
+                    if let Some(Some(t)) = cache.peek(key) {
+                        found.push((kernel, &r.schedule, content, t));
+                    }
+                }
+            }
+        }
+        let feats = par_map_indexed(&found, self.config.jobs, |_, job| {
+            apply(job.1, job.0).ok().map(|nest| features(job.0, &nest, &self.config.device))
+        });
+        found
+            .iter()
+            .zip(feats)
+            .filter_map(|(&(_, _, content, t), x)| {
+                x.map(|x| TrainingPair { content, x, y: training_target(t) })
+            })
+            .collect()
+    }
+
+    /// Fit (or re-fit) the learned prior from the current cache
+    /// contents. No-op for `Static` zoos, and never downgrades a
+    /// trained model to untrained (the fit only replaces the prior once
+    /// the corpus crosses a refit threshold — see
+    /// `crate::autosched::learned::REFIT_THRESHOLDS`). Returns whether
+    /// the prior's content hash changed — i.e. whether downstream keys
+    /// move.
+    pub fn refit_cost_model(&self) -> bool {
+        if self.config.cost_model != CostModelKind::Learned {
+            return false;
+        }
+        let fitted = fit_pairs(&self.training_pairs());
+        if !fitted.is_trained() {
+            return false;
+        }
+        let changed = fitted.content_hash() != self.cost_model.borrow().content_hash();
+        *self.cost_model.borrow_mut() = fitted;
+        changed
+    }
+
+    /// Key under which this zoo's merged store + measurement cache —
+    /// and, for `Learned` runs, the fitted cost model — are persisted.
+    /// Always the base (model-hash-0) key: the zoo build itself runs
+    /// under the untrained prior (the model is fit *after* the build,
+    /// from its measurements), so keying the zoo by its own output
+    /// would chicken-and-egg every warm start.
     pub fn artifact_key(&self) -> u64 {
         artifact::zoo_key(
             &self.models.iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
@@ -473,6 +624,7 @@ impl Zoo {
             self.config.trials,
             self.config.seed,
             self.config.effective_keep(),
+            0,
         )
     }
 
@@ -485,6 +637,10 @@ impl Zoo {
         let key = self.artifact_key();
         artifacts.save_schedule_store(key, &self.store)?;
         artifacts.save_measure_cache(key, &self.cache.borrow())?;
+        let model = self.cost_model.borrow();
+        if self.config.cost_model == CostModelKind::Learned && model.is_trained() {
+            artifacts.save_cost_model(key, &model)?;
+        }
         Ok(())
     }
 
@@ -514,6 +670,7 @@ impl Zoo {
             self.config.seed,
             &TransferOptions {
                 speculative_keep: self.config.effective_keep(),
+                cost_prior: self.cost_model.borrow().clone(),
                 ..Default::default()
             },
             &mut self.cache.borrow_mut(),
@@ -542,6 +699,7 @@ impl Zoo {
             self.config.seed,
             &TransferOptions {
                 speculative_keep: self.config.effective_keep(),
+                cost_prior: self.cost_model.borrow().clone(),
                 ..Default::default()
             },
             &mut self.cache.borrow_mut(),
@@ -641,5 +799,44 @@ mod tests {
         let stats = zoo.cache_stats();
         assert!(stats.hits + stats.dedup_hits > 0);
         assert!(stats.hit_rate() > 0.5, "hit rate {}", stats.hit_rate());
+    }
+
+    #[test]
+    fn learned_prior_fits_deterministically_and_is_inert_at_exact_keep() {
+        let zoo = Zoo::build(
+            ExperimentConfig {
+                trials: 120,
+                seed: 11,
+                device: DeviceProfile::xeon_e5_2620(),
+                cost_model: CostModelKind::Learned,
+                ..Default::default()
+            },
+            |_| {},
+        );
+        // Cold build: empty cache, nothing to fit yet.
+        assert!(!zoo.cost_model.borrow().is_trained());
+        assert!(!zoo.refit_cost_model(), "no corpus, no fit");
+
+        // Warm the cache with pooled sweeps; the full 11-model pool
+        // crosses the first refit threshold comfortably.
+        let first = zoo.transfer_pooled(&zoo.models[0]);
+        for m in zoo.models.iter().skip(1).take(3) {
+            zoo.transfer_pooled(m);
+        }
+        let pairs = zoo.training_pairs();
+        assert!(pairs.len() >= 64, "corpus too small: {}", pairs.len());
+
+        assert!(zoo.refit_cost_model(), "first fit must change the prior");
+        let hash = zoo.cost_model.borrow().content_hash();
+        assert_ne!(hash, 0);
+        // Same cache, second fit: idempotent (threshold-bucketed).
+        assert!(!zoo.refit_cost_model());
+        assert_eq!(zoo.cost_model.borrow().content_hash(), hash);
+
+        // At the default (exact) keep the trained prior is inert: the
+        // re-sweep is served entirely from cache, bit-identical.
+        let again = zoo.transfer_pooled(&zoo.models[0]);
+        assert_eq!(again.tuned_model_s.to_bits(), first.tuned_model_s.to_bits());
+        assert_eq!(again.search_time_s(), 0.0, "trained prior must not re-key exact sweeps");
     }
 }

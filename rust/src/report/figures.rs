@@ -257,6 +257,7 @@ mod tests {
                 device: DeviceProfile::xeon_e5_2620(),
                 jobs: 0,
                 speculative_keep: 1.0,
+                ..Default::default()
             },
             |_| {},
         )

@@ -50,8 +50,8 @@ pub mod timer;
 
 pub use shard::{measure_pairs_sharded, ShardedMeasureCache};
 
-use crate::autosched::TuningResult;
-use crate::coordinator::{speculative_seed, CacheStats, Ledger, MeasureCache};
+use crate::autosched::{CostModel, TuningResult};
+use crate::coordinator::{estimator_seed, speculative_seed, CacheStats, Ledger, MeasureCache};
 use crate::device::{model_time, DeviceProfile};
 use crate::ir::{Kernel, ModelGraph};
 use crate::report::Zoo;
@@ -226,6 +226,15 @@ struct Inner {
     /// configured keep, and pruned sweeps live in their own cache key
     /// space (see [`crate::coordinator::cache::speculative_seed`]).
     speculative_keep: AtomicU64,
+    /// Learned cost prior for session sweeps' draft stage (untrained by
+    /// default = the legacy per-sweep draft model). Like the keep
+    /// fraction this is server-level configuration, not wire protocol;
+    /// a trained prior's content hash keys speculative sweeps into
+    /// their own cache space (see
+    /// [`crate::coordinator::cache::estimator_seed`]) and is inert at
+    /// keep = 1.0. `Arc`-swapped so a live republish can refresh it
+    /// without tearing in-flight sessions.
+    cost_prior: RwLock<Arc<CostModel>>,
 }
 
 /// A shareable handle to the serving state (cheap to clone; all clones
@@ -244,6 +253,7 @@ impl ScheduleService {
                 snapshot: RwLock::new(Arc::new(Snapshot::from_store(store, models))),
                 cache: ShardedMeasureCache::new(shards),
                 speculative_keep: AtomicU64::new(1.0f64.to_bits()),
+                cost_prior: RwLock::new(Arc::new(CostModel::default())),
             }),
         }
     }
@@ -264,20 +274,24 @@ impl ScheduleService {
                 snapshot: RwLock::new(Arc::new(Snapshot::empty())),
                 cache: ShardedMeasureCache::from_cache(cache, shards),
                 speculative_keep: AtomicU64::new(1.0f64.to_bits()),
+                cost_prior: RwLock::new(Arc::new(CostModel::default())),
             }),
         }
     }
 
     /// Promote a built zoo into a service: the zoo's store and models
-    /// move in, and its (possibly artifact-warmed) measurement cache is
-    /// redistributed across `shards`.
+    /// move in, its (possibly artifact-warmed) measurement cache is
+    /// redistributed across `shards`, and its learned cost prior (if
+    /// any — untrained for `Static` zoos) comes along.
     pub fn from_zoo(zoo: Zoo, shards: usize) -> ScheduleService {
         let cache = ShardedMeasureCache::from_cache(&zoo.cache.borrow(), shards);
+        let prior = zoo.cost_model.into_inner();
         ScheduleService {
             inner: Arc::new(Inner {
                 snapshot: RwLock::new(Arc::new(Snapshot::from_store(zoo.store, zoo.models))),
                 cache,
                 speculative_keep: AtomicU64::new(1.0f64.to_bits()),
+                cost_prior: RwLock::new(Arc::new(prior)),
             }),
         }
     }
@@ -294,6 +308,25 @@ impl ScheduleService {
 
     fn speculative_keep(&self) -> f64 {
         f64::from_bits(self.inner.speculative_keep.load(Ordering::Relaxed))
+    }
+
+    /// Install a learned cost prior for session sweeps (builder form —
+    /// set at startup alongside [`ScheduleService::with_speculative_keep`]).
+    pub fn with_cost_model(self, model: CostModel) -> ScheduleService {
+        self.set_cost_model(model);
+        self
+    }
+
+    /// Swap the learned cost prior on a live service (the republish
+    /// path: a re-fit model takes effect for sessions opened from now
+    /// on; in-flight sessions keep the `Arc` they already read).
+    pub fn set_cost_model(&self, model: CostModel) {
+        *self.inner.cost_prior.write().expect("cost prior lock poisoned") = Arc::new(model);
+    }
+
+    /// The current learned prior (untrained unless one was installed).
+    pub fn cost_model(&self) -> Arc<CostModel> {
+        self.inner.cost_prior.read().expect("cost prior lock poisoned").clone()
     }
 
     fn snapshot(&self) -> Arc<Snapshot> {
@@ -415,8 +448,13 @@ impl ScheduleService {
         let keep = self.speculative_keep();
         // Pruned sweeps key their measurements into a keep-specific
         // space: a speculative run misses a warm exact cache rather
-        // than colliding with it.
-        let seed = speculative_seed(seed, keep);
+        // than colliding with it. A trained prior re-ranks the draft
+        // stage, so its content hash gets its own fold — but only when
+        // the draft stage runs; at keep = 1.0 the prior is inert and
+        // every legacy key survives.
+        let prior = self.cost_model();
+        let model_hash = if keep < 1.0 { prior.content_hash() } else { 0 };
+        let seed = estimator_seed(speculative_seed(seed, keep), model_hash);
         let plan = SweepPlan::build_view(target, view, &TransferOptions::default());
         let (plan, candidates) = if keep >= 1.0 {
             let (candidate_jobs, candidate_contents) = plan.candidate_jobs(target);
@@ -435,7 +473,7 @@ impl ScheduleService {
             let mut exec = |jobs: &[(&Kernel, &Schedule)], contents: &[u64]| {
                 measure_pairs_sharded(jobs, contents, device, seed, cache, ledger)
             };
-            speculative_sweep(target, &plan, device, keep, &mut exec)
+            speculative_sweep(target, &plan, device, keep, &prior, &mut exec)
         };
         let (default_jobs, default_contents) = plan.default_jobs(target);
         let defaults = measure_pairs_sharded(
@@ -621,6 +659,53 @@ mod tests {
         assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits());
         assert_eq!(a.standalone_search_time_s.to_bits(), b.standalone_search_time_s.to_bits());
         assert!(a.tuned_model_s <= a.untuned_model_s);
+    }
+
+    /// Any trained model will do: key separation depends only on the
+    /// content hash being nonzero.
+    fn test_prior() -> CostModel {
+        use crate::autosched::{GbdtParams, NUM_FEATURES};
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<[f64; NUM_FEATURES]> = (0..64)
+            .map(|_| {
+                let mut x = [0.0; NUM_FEATURES];
+                for v in x.iter_mut() {
+                    *v = rng.f64() * 4.0;
+                }
+                x
+            })
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[1] - x[4]).collect();
+        let m = CostModel::train(&xs, &ys, &GbdtParams::default());
+        assert!(m.is_trained());
+        m
+    }
+
+    #[test]
+    fn trained_prior_rekeys_speculative_sessions_and_is_inert_when_exact() {
+        // Exact path: installing a trained prior changes nothing — the
+        // second session is served entirely from the first one's cache.
+        let svc = dense_service();
+        let before = svc.open_session(&request(None)).unwrap();
+        let svc = svc.with_cost_model(test_prior());
+        let after = svc.open_session(&request(None)).unwrap();
+        assert_eq!(after.tuned_model_s.to_bits(), before.tuned_model_s.to_bits());
+        assert_eq!(after.charged_search_time_s, 0.0, "prior must be inert at keep=1.0");
+
+        // Speculative path: the trained prior folds into the cache key
+        // space, so primed sweeps miss untrained-prior entries.
+        let svc = dense_service().with_speculative_keep(0.5);
+        let plain = svc.open_session(&request(None)).unwrap();
+        assert!(plain.charged_search_time_s > 0.0);
+        let svc = svc.with_cost_model(test_prior());
+        let primed = svc.open_session(&request(None)).unwrap();
+        assert!(
+            primed.charged_search_time_s > 0.0,
+            "primed sweeps must not be served from untrained-prior entries"
+        );
+        let again = svc.open_session(&request(None)).unwrap();
+        assert_eq!(again.charged_search_time_s, 0.0, "same-prior rerun is fully warm");
+        assert_eq!(again.tuned_model_s.to_bits(), primed.tuned_model_s.to_bits());
     }
 
     #[test]

@@ -97,6 +97,17 @@ pub struct ServerGauges {
     pub connections: AtomicUsize,
     /// Decoded requests queued for a worker (excludes in-execution).
     pub queue_depth: AtomicUsize,
+    /// Connections closed by the idle deadline (no in-flight work, no
+    /// partial frame, no byte for `idle_timeout`). Monotonic counters —
+    /// drain-path closes are deliberate shutdowns, not evictions, and
+    /// are never counted here.
+    pub evicted_idle: AtomicUsize,
+    /// Connections closed mid-frame by the read-stall deadline
+    /// (slowloris).
+    pub evicted_read_stall: AtomicUsize,
+    /// Connections closed by the write-stall deadline (a client that
+    /// stopped reading its replies).
+    pub evicted_write_stall: AtomicUsize,
 }
 
 /// Stop reading a connection once this many decoded requests are
@@ -679,13 +690,23 @@ impl EvLoop {
                 // Lazy cancellation: the wheel may report stale or
                 // re-armed entries; the connection's own deadline is
                 // authoritative.
-                let due = self.conns.get(&tok).and_then(|c| c.deadline);
-                if let Some(d) = due {
+                let due = self.conns.get(&tok).map(|c| (c.deadline, c.kind));
+                if let Some((Some(d), kind)) = due {
                     if d <= now {
                         // Deadlines close silently: a timed-out
                         // connection is a clean end, no error frame
                         // (same contract as the pool server's
-                        // read/write timeouts).
+                        // read/write timeouts). Count the eviction by
+                        // the deadline kind that fired (`Busy`
+                        // connections carry no deadline, so only the
+                        // three timeout kinds can land here).
+                        let counter = match kind {
+                            DeadKind::Idle => &self.shared.gauges.evicted_idle,
+                            DeadKind::ReadStall => &self.shared.gauges.evicted_read_stall,
+                            DeadKind::WriteStall => &self.shared.gauges.evicted_write_stall,
+                            DeadKind::Busy => unreachable!("Busy connections have no deadline"),
+                        };
+                        counter.fetch_add(1, Ordering::Relaxed);
                         self.close_conn(tok);
                     }
                 }

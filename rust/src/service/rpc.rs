@@ -67,12 +67,14 @@ pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
 /// response, and admin JSON shapes. v1 = session requests only (PR 3);
 /// v2 = admin ops (`stats` / `shutdown` / `republish`); v3 = the
 /// `stats` reply gains `source_records` + `server` gauges and
-/// `republish` accepts `"all":true`. Bump this with **any** protocol
-/// change, and update README §Wire protocol,
-/// `rust/tests/rpc_codec.rs`, and `rust/tests/integration_rpc.rs` in
-/// the same commit — CI's `format-drift` job fails a change to this
-/// file that does not touch all three together.
-pub const WIRE_PROTOCOL_VERSION: u64 = 3;
+/// `republish` accepts `"all":true`; v4 = the `server` block gains
+/// per-kind eviction counters (`evicted_idle` / `evicted_read_stall` /
+/// `evicted_write_stall`). Bump this with **any** protocol change, and
+/// update README §Wire protocol, `rust/tests/rpc_codec.rs`, and
+/// `rust/tests/integration_rpc.rs` in the same commit — CI's
+/// `format-drift` job fails a change to this file that does not touch
+/// all three together.
+pub const WIRE_PROTOCOL_VERSION: u64 = 4;
 
 /// How long a connection's outbound buffer may make no progress (a
 /// client that stopped reading its replies) before the connection is
@@ -396,17 +398,43 @@ pub fn parse_response(line: &str) -> anyhow::Result<RpcResponse> {
     }
 }
 
+/// A point-in-time snapshot of the reactor gauges for the `server:{}`
+/// block of the `stats` reply: live connections, worker queue depth,
+/// and the cumulative per-kind eviction counts (wire v4). Plain
+/// numbers — the encoding below stays a pure, testable function.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub connections: usize,
+    pub queue_depth: usize,
+    pub evicted_idle: usize,
+    pub evicted_read_stall: usize,
+    pub evicted_write_stall: usize,
+}
+
+impl ServerStats {
+    /// Snapshot the live gauges (relaxed loads — each field is
+    /// individually coherent, the set is advisory).
+    pub fn snapshot(gauges: &ServerGauges) -> ServerStats {
+        ServerStats {
+            connections: gauges.connections.load(Ordering::Relaxed),
+            queue_depth: gauges.queue_depth.load(Ordering::Relaxed),
+            evicted_idle: gauges.evicted_idle.load(Ordering::Relaxed),
+            evicted_read_stall: gauges.evicted_read_stall.load(Ordering::Relaxed),
+            evicted_write_stall: gauges.evicted_write_stall.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Encode the `{"ok":true,"stats":{..}}` response of an admin `stats`
 /// op. The `zoo` half (build accounting + completion flag) exists only
 /// when an operations loop is attached — a bare [`RpcServer`] reports
-/// the serving state alone. The `server` half — live `(connections,
-/// queue_depth)` gauges — exists when the answering hook has a handle
-/// on the reactor's [`ServerGauges`]; it is plain numbers here so the
-/// encoding stays a pure, testable function.
+/// the serving state alone. The `server` half — a [`ServerStats`]
+/// gauge snapshot — exists when the answering hook has a handle on the
+/// reactor's [`ServerGauges`].
 pub fn stats_json(
     service: &ScheduleService,
     zoo: Option<(&ZooBuildStats, bool)>,
-    server: Option<(usize, usize)>,
+    server: Option<ServerStats>,
 ) -> Json {
     let cache: CacheStats = service.cache_stats();
     let source_records = service
@@ -436,12 +464,15 @@ pub fn stats_json(
             ]),
         ),
     ];
-    if let Some((connections, queue_depth)) = server {
+    if let Some(s) = server {
         stats.push((
             "server",
             Json::obj(vec![
-                ("connections", Json::num(connections as f64)),
-                ("queue_depth", Json::num(queue_depth as f64)),
+                ("connections", Json::num(s.connections as f64)),
+                ("queue_depth", Json::num(s.queue_depth as f64)),
+                ("evicted_idle", Json::num(s.evicted_idle as f64)),
+                ("evicted_read_stall", Json::num(s.evicted_read_stall as f64)),
+                ("evicted_write_stall", Json::num(s.evicted_write_stall as f64)),
             ]),
         ));
     }
@@ -495,13 +526,7 @@ pub fn default_admin() -> AdminHook {
 /// count and queue depth are visible over the wire.
 pub fn default_admin_with_gauges(gauges: Arc<ServerGauges>) -> AdminHook {
     Arc::new(move |req, service| match req {
-        AdminRequest::Stats => {
-            let server = (
-                gauges.connections.load(Ordering::Relaxed),
-                gauges.queue_depth.load(Ordering::Relaxed),
-            );
-            stats_json(service, None, Some(server))
-        }
+        AdminRequest::Stats => stats_json(service, None, Some(ServerStats::snapshot(&gauges))),
         AdminRequest::Shutdown
         | AdminRequest::Republish { .. }
         | AdminRequest::RepublishAll => error_json(&RpcError::new(

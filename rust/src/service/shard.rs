@@ -17,13 +17,12 @@
 //! vary with interleaving, which is why reported numbers always use the
 //! order-independent cold ledger (see `transfer::engine`).
 
-use crate::coordinator::cache::{sweep_key, CacheStats, MeasureCache, Resolution};
-use crate::coordinator::pool::{measure_with_noise, noise_seed, CachedBatch, PairOutcome};
+use crate::coordinator::cache::{CacheStats, MeasureCache, Resolution};
+use crate::coordinator::pool::{measure_pairs_cached_generic, CacheOps, CachedBatch};
 use crate::coordinator::Ledger;
 use crate::device::DeviceProfile;
 use crate::ir::Kernel;
-use crate::sched::{apply, ApplyError, Schedule};
-use std::collections::HashMap;
+use crate::sched::{ApplyError, Schedule};
 use std::sync::Mutex;
 
 /// A [`MeasureCache`] split across `n` independently locked shards.
@@ -106,14 +105,39 @@ impl ShardedMeasureCache {
     }
 }
 
+/// [`CacheOps`] over a shared sharded cache: every operation takes one
+/// short per-key shard lock, so concurrent tenants interleave freely
+/// while running the exact same pipeline body as the flat executor.
+/// Implemented on `&ShardedMeasureCache` because the pipeline wants
+/// `&mut C` but shard locks make interior mutation safe behind `&`.
+impl CacheOps for &ShardedMeasureCache {
+    fn record_dedup_hit(&mut self, key: u64) {
+        self.shard(key).lock().unwrap().stats.dedup_hits += 1;
+    }
+
+    fn resolve(
+        &mut self,
+        key: u64,
+        validate: impl FnOnce() -> Result<(), ApplyError>,
+    ) -> Resolution<ApplyError> {
+        // One short per-key critical section; measurement happens
+        // outside every lock.
+        self.shard(key).lock().unwrap().resolve_with(key, validate)
+    }
+
+    fn insert_outcome(&mut self, key: u64, runtime: Option<f64>) {
+        self.shard(key).lock().unwrap().insert(key, runtime);
+    }
+}
+
 /// The sharded counterpart of
 /// [`measure_pairs_cached_precomputed`](crate::coordinator::measure_pairs_cached_precomputed):
-/// same dedup-then-resolve-then-measure pipeline and the same
-/// transparency invariant, but each resolution locks only the key's
-/// shard, so concurrent tenants interleave freely. The ledger charges
-/// this caller's unique misses (sequential device semantics per
-/// tenant); racing tenants may both pay for the same pair once — an
-/// honest account of what each tenant's device ran.
+/// the same generic pipeline body and the same transparency invariant,
+/// but each resolution locks only the key's shard, so concurrent
+/// tenants interleave freely. The ledger charges this caller's unique
+/// misses (sequential device semantics per tenant); racing tenants may
+/// both pay for the same pair once — an honest account of what each
+/// tenant's device ran.
 pub fn measure_pairs_sharded(
     jobs: &[(&Kernel, &Schedule)],
     contents: &[u64],
@@ -122,76 +146,8 @@ pub fn measure_pairs_sharded(
     cache: &ShardedMeasureCache,
     ledger: &mut Ledger,
 ) -> CachedBatch {
-    // KEEP IN SYNC with `pool::measure_pairs_cached_precomputed`: same
-    // dedup/resolve/measure/charge pipeline, differing only in cache
-    // acquisition (per-key shard lock vs `&mut`). Both copies are held
-    // to the transparency invariant by `sharded_matches_unsharded...`
-    // below and the property tests; a semantic change to either
-    // pipeline must land in both.
-    assert_eq!(jobs.len(), contents.len());
-
-    /// Where job `i`'s outcome comes from (mirrors the flat executor).
-    #[derive(Clone)]
-    enum Slot {
-        Hit(f64),
-        HitInvalid(ApplyError),
-        Miss(usize),
-    }
-
-    let keys: Vec<u64> = contents.iter().map(|&c| sweep_key(c, seed, profile)).collect();
-
-    let mut slot_of_key: HashMap<u64, usize> = HashMap::new();
-    let mut unique_jobs: Vec<(&Kernel, &Schedule)> = Vec::new();
-    let mut unique_keys: Vec<u64> = Vec::new();
-    let mut unique_noise: Vec<u64> = Vec::new();
-    let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
-    for (ji, &key) in keys.iter().enumerate() {
-        if let Some(&si) = slot_of_key.get(&key) {
-            cache.shard(key).lock().unwrap().stats.dedup_hits += 1;
-            let dup = slots[si].clone();
-            slots.push(dup);
-            continue;
-        }
-        let (kernel, sched) = jobs[ji];
-        let resolution = {
-            // One short per-key critical section; measurement happens
-            // outside every lock.
-            let mut shard = cache.shard(key).lock().unwrap();
-            shard.resolve_with(key, || apply(sched, kernel).map(|_| ()))
-        };
-        let slot = match resolution {
-            Resolution::Hit(t) => Slot::Hit(t),
-            Resolution::HitInvalid(e) => Slot::HitInvalid(e),
-            Resolution::Corrupt | Resolution::Miss => {
-                let u = unique_jobs.len();
-                unique_jobs.push(jobs[ji]);
-                unique_keys.push(key);
-                unique_noise.push(noise_seed(seed, contents[ji]));
-                Slot::Miss(u)
-            }
-        };
-        slot_of_key.insert(key, slots.len());
-        slots.push(slot);
-    }
-
-    let measured = measure_with_noise(&unique_jobs, profile, &unique_noise);
-    for (key, outcome) in unique_keys.iter().zip(&measured) {
-        match outcome.runtime() {
-            Some(t) => ledger.charge_measure(profile, t),
-            None => ledger.charge_compile_fail(profile),
-        }
-        cache.shard(*key).lock().unwrap().insert(*key, outcome.runtime());
-    }
-
-    let outcomes: Vec<PairOutcome> = slots
-        .into_iter()
-        .map(|slot| match slot {
-            Slot::Miss(u) => measured[u].clone(),
-            Slot::Hit(t) => PairOutcome::Measured(t),
-            Slot::HitInvalid(e) => PairOutcome::Invalid(e),
-        })
-        .collect();
-    CachedBatch { outcomes, keys }
+    let mut cache = cache;
+    measure_pairs_cached_generic(jobs, contents, profile, seed, &mut cache, ledger)
 }
 
 #[cfg(test)]
@@ -252,6 +208,49 @@ mod tests {
         assert_eq!(back.len(), 64);
         for key in 0..64u64 {
             assert_eq!(back.peek(key), flat.peek(key));
+        }
+    }
+
+    #[test]
+    fn flat_and_sharded_pipelines_agree_pairwise() {
+        // Both entry points are thin wrappers over the same generic
+        // body; this pins the API-level contract directly — outcome,
+        // key, ledger, and stats parity on identical inputs, cold and
+        // warm, including an invalid pair and a duplicate.
+        use crate::coordinator::measure_pairs_cached_precomputed;
+        let prof = DeviceProfile::xeon_e5_2620();
+        let k1 = KernelBuilder::dense(256, 256, 256, &[]);
+        let k2 = KernelBuilder::dense(8, 8, 8, &[]);
+        let s1 = Schedule::untuned_default(&k1);
+        let mut bad = Schedule::untuned_default(&k1);
+        bad.spatial[1] = crate::sched::AxisTiling::of(&[64]); // 64 > 8 on k2
+        let pairs: Vec<(&Kernel, &Schedule)> =
+            vec![(&k1, &s1), (&k2, &bad), (&k1, &s1), (&k2, &bad)];
+        let (jobs, contents) = jobs_and_contents(&pairs);
+
+        let mut flat = MeasureCache::new();
+        let sharded = ShardedMeasureCache::new(4);
+        for round in 0..2 {
+            let mut flat_ledger = Ledger::new();
+            let mut shard_ledger = Ledger::new();
+            let a = measure_pairs_cached_precomputed(
+                &jobs,
+                &contents,
+                &prof,
+                7,
+                &mut flat,
+                &mut flat_ledger,
+            );
+            let b =
+                measure_pairs_sharded(&jobs, &contents, &prof, 7, &sharded, &mut shard_ledger);
+            assert_eq!(a.keys, b.keys, "round {round}: key streams diverge");
+            for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+                assert_eq!(x.runtime(), y.runtime(), "round {round}, job {i}");
+            }
+            assert_eq!(flat_ledger.seconds.to_bits(), shard_ledger.seconds.to_bits());
+            assert_eq!(flat_ledger.measurements, shard_ledger.measurements);
+            assert_eq!(flat_ledger.compile_failures, shard_ledger.compile_failures);
+            assert_eq!(flat.stats, sharded.stats(), "round {round}: stats diverge");
         }
     }
 

@@ -25,8 +25,8 @@ use super::store::{ScheduleStore, StoreView};
 use crate::autosched::{features, CostModel, GbdtParams, NUM_FEATURES};
 use crate::coordinator::jobs::par_map_indexed;
 use crate::coordinator::{
-    content_from_parts, content_key, measure_pairs_cached_precomputed, speculative_seed,
-    CachedBatch, Ledger, MeasureCache,
+    content_from_parts, content_key, estimator_seed, measure_pairs_cached_precomputed,
+    speculative_seed, CachedBatch, Ledger, MeasureCache,
 };
 use crate::device::{model_time, untuned_model_time, DeviceProfile};
 use crate::ir::{Kernel, ModelGraph};
@@ -51,11 +51,26 @@ pub struct TransferOptions {
     /// space (see [`crate::coordinator::cache::speculative_seed`]) and
     /// into artifact keys.
     pub speculative_keep: f64,
+    /// Learned prior for the draft stage. When trained, it replaces the
+    /// sweep's per-span warmup-and-refit model: every span is ranked by
+    /// the prior from the first candidate on (no warmup spans measured
+    /// in full). Because that changes which pairs are measured, a
+    /// trained prior's [`CostModel::content_hash`] is folded into the
+    /// measure-cache seed (see
+    /// [`crate::coordinator::cache::estimator_seed`]) and into artifact
+    /// keys. The default (untrained) prior changes nothing: the sweep
+    /// trains its own draft model exactly as before and every legacy
+    /// key survives byte-for-byte.
+    pub cost_prior: CostModel,
 }
 
 impl Default for TransferOptions {
     fn default() -> Self {
-        TransferOptions { cross_class: false, speculative_keep: 1.0 }
+        TransferOptions {
+            cross_class: false,
+            speculative_keep: 1.0,
+            cost_prior: CostModel::default(),
+        }
     }
 }
 
@@ -303,26 +318,30 @@ const DRAFT_MIN_SAMPLES: usize = 8;
 
 /// Draft-then-verify front end for a sweep: walk the plan's kernel
 /// spans in order, rank each span's candidates with a GBDT cost model
-/// trained on the sweep's own measured outcomes so far (features +
-/// predict — no simulator pass), and hand only the top `keep` fraction
-/// of valid candidates to `exec` — the flat cached executor or the
-/// service layer's sharded one, so there is ONE pruning implementation
-/// for both pipelines. Apply-fail candidates are pruned for free: the
-/// draft stage already proved they cannot compile, so they are dropped
-/// without a compile-fail charge. Returns the pruned plan (surviving
-/// jobs in original order, spans recomputed) plus the concatenated
-/// measured batch aligned with it.
+/// (features + predict — no simulator pass), and hand only the top
+/// `keep` fraction of valid candidates to `exec` — the flat cached
+/// executor or the service layer's sharded one, so there is ONE pruning
+/// implementation for both pipelines. The ranking model is either the
+/// caller's trained `prior` (the learned cost model, used for every
+/// span from the first candidate on) or, when the prior is untrained, a
+/// model re-fit per span from the sweep's own measured outcomes so far
+/// — the original draft behavior, byte-for-byte. Apply-fail candidates
+/// are pruned for free: the draft stage already proved they cannot
+/// compile, so they are dropped without a compile-fail charge. Returns
+/// the pruned plan (surviving jobs in original order, spans recomputed)
+/// plus the concatenated measured batch aligned with it.
 ///
 /// Determinism: ranking is pure (memoized content keys, index-ordered
 /// `par_map_indexed` slots, ties broken by span index), training data
 /// accumulates in span order, and `exec` runs span by span in kernel
 /// order — the result is a pure function of (plan, profile, keep,
-/// exec's seed), independent of thread count.
+/// prior, exec's seed), independent of thread count.
 pub(crate) fn speculative_sweep<F>(
     target: &ModelGraph,
     plan: &SweepPlan,
     profile: &DeviceProfile,
     keep: f64,
+    prior: &CostModel,
     exec: &mut F,
 ) -> (SweepPlan, CachedBatch)
 where
@@ -347,12 +366,20 @@ where
         let feats: Vec<Option<[f64; NUM_FEATURES]>> = par_map_indexed(span_jobs, 0, |_, j| {
             apply(&j.schedule, kernel).ok().map(|nest| features(kernel, &nest, profile))
         });
-        let survivors: Vec<usize> = if xs.len() < DRAFT_MIN_SAMPLES {
+        let survivors: Vec<usize> = if !prior.is_trained() && xs.len() < DRAFT_MIN_SAMPLES {
             // Warmup: no trustworthy model yet — measure the span in
-            // full, exactly like the exact path.
+            // full, exactly like the exact path. A trained prior skips
+            // warmup entirely: it already carries a whole cache's worth
+            // of measurements.
             (0..span_jobs.len()).collect()
         } else {
-            let model = CostModel::train(&xs, &ys, &gbdt);
+            let span_model;
+            let model: &CostModel = if prior.is_trained() {
+                prior
+            } else {
+                span_model = CostModel::train(&xs, &ys, &gbdt);
+                &span_model
+            };
             let scores: Vec<Option<f64>> =
                 feats.iter().map(|f| f.as_ref().map(|x| model.predict(x))).collect();
             let mut order: Vec<usize> =
@@ -378,11 +405,15 @@ where
         let contents: Vec<u64> = survivors.iter().map(|&i| span_jobs[i].content).collect();
         let batch = exec(&jobs, &contents);
 
-        // Accumulate training data from this span's measured survivors.
-        for (&si, outcome) in survivors.iter().zip(&batch.outcomes) {
-            if let (Some(t), Some(x)) = (outcome.runtime(), feats[si].as_ref()) {
-                xs.push(*x);
-                ys.push(-(t.max(1e-12)).ln());
+        // Accumulate training data from this span's measured survivors
+        // (only when the sweep trains its own draft model — a trained
+        // prior is frozen for the whole sweep).
+        if !prior.is_trained() {
+            for (&si, outcome) in survivors.iter().zip(&batch.outcomes) {
+                if let (Some(t), Some(x)) = (outcome.runtime(), feats[si].as_ref()) {
+                    xs.push(*x);
+                    ys.push(-(t.max(1e-12)).ln());
+                }
             }
         }
 
@@ -416,9 +447,14 @@ pub fn transfer_tune_cached(
     // Keep-fraction key separation: a pruned run's cache entries live
     // in their own seed space, so it can never collide with (or be
     // served from) an exact run at the same seed. keep=1.0 leaves the
-    // seed — and thus every legacy key — untouched.
+    // seed — and thus every legacy key — untouched. Likewise a trained
+    // learned prior changes which pairs the draft stage measures, so
+    // its content hash gets its own seed fold — but only when the draft
+    // stage actually runs (keep < 1.0); at keep=1.0 the prior is inert
+    // and the seed (and every legacy key) is untouched.
     let keep = if options.speculative_keep < 1.0 { options.speculative_keep } else { 1.0 };
-    let seed = speculative_seed(seed, keep);
+    let model_hash = if keep < 1.0 { options.cost_prior.content_hash() } else { 0 };
+    let seed = estimator_seed(speculative_seed(seed, keep), model_hash);
 
     let (plan, candidates) = if keep >= 1.0 {
         // Exact path: dispatch the whole candidate sweep through the
@@ -439,7 +475,7 @@ pub fn transfer_tune_cached(
         let mut exec = |jobs: &[(&Kernel, &Schedule)], contents: &[u64]| {
             measure_pairs_cached_precomputed(jobs, contents, profile, seed, cache, &mut ledger)
         };
-        speculative_sweep(target, &plan, profile, keep, &mut exec)
+        speculative_sweep(target, &plan, profile, keep, &options.cost_prior, &mut exec)
     };
 
     let (default_jobs, default_contents) = plan.default_jobs(target);
@@ -793,6 +829,80 @@ mod tests {
         let warm = transfer_tune_cached(&tgt, &store, &prof, "Source", 3, &opts, &mut cache);
         assert_eq!(warm.ledger.seconds, 0.0, "same-keep rerun is fully warm");
         assert_eq!(warm.tuned_model_s.to_bits(), spec.tuned_model_s.to_bits());
+    }
+
+    /// A trained prior fit on synthetic pairs — the invariants under
+    /// test are keying and determinism, not prediction quality.
+    fn synth_prior(seed: u64) -> CostModel {
+        use crate::autosched::{fit_pairs, TrainingPair};
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let pairs: Vec<TrainingPair> = (0..96)
+            .map(|i| {
+                let mut x = [0.0; NUM_FEATURES];
+                for v in x.iter_mut() {
+                    *v = rng.f64() * 8.0;
+                }
+                TrainingPair {
+                    content: (i as u64).wrapping_mul(0x9E37_79B9) ^ seed,
+                    y: x[2] - 0.5 * x[9],
+                    x,
+                }
+            })
+            .collect();
+        let m = fit_pairs(&pairs);
+        assert!(m.is_trained());
+        m
+    }
+
+    #[test]
+    fn trained_prior_is_deterministic_keyed_and_inert_at_keep_one() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let (_, tgt, store) = dense_setup();
+        let wide = widen_store(&store, 8);
+        let prior = synth_prior(41);
+
+        // keep=1.0: the prior is inert — byte-identical to the exact
+        // path, same cache entries.
+        let exact = transfer_tune(&tgt, &wide, &prof, "mixed", 3);
+        let inert = transfer_tune_with(
+            &tgt,
+            &wide,
+            &prof,
+            "mixed",
+            3,
+            &TransferOptions { cost_prior: prior.clone(), ..Default::default() },
+        );
+        assert_eq!(inert.tuned_model_s.to_bits(), exact.tuned_model_s.to_bits());
+        assert_eq!(inert.ledger.seconds.to_bits(), exact.ledger.seconds.to_bits());
+
+        // keep<1.0: deterministic, and keyed apart from the untrained-
+        // prior draft run at the same seed and keep.
+        let opts = TransferOptions {
+            speculative_keep: 0.25,
+            cost_prior: prior.clone(),
+            ..Default::default()
+        };
+        let a = transfer_tune_with(&tgt, &wide, &prof, "mixed", 3, &opts);
+        let b = transfer_tune_with(&tgt, &wide, &prof, "mixed", 3, &opts);
+        assert_eq!(a.tuned_model_s.to_bits(), b.tuned_model_s.to_bits());
+        assert_eq!(a.ledger.seconds.to_bits(), b.ledger.seconds.to_bits());
+        // The prior skips warmup, so even the first span is pruned.
+        assert!(a.pairs_evaluated() < exact.pairs_evaluated());
+
+        let mut cache = crate::coordinator::MeasureCache::new();
+        let primed = transfer_tune_cached(&tgt, &wide, &prof, "mixed", 3, &opts, &mut cache);
+        assert!(primed.ledger.seconds > 0.0);
+        let plain_draft = TransferOptions { speculative_keep: 0.25, ..Default::default() };
+        let crossed =
+            transfer_tune_cached(&tgt, &wide, &prof, "mixed", 3, &plain_draft, &mut cache);
+        assert!(
+            crossed.ledger.seconds > 0.0,
+            "trained-prior entries must never serve an untrained-prior run"
+        );
+        // Same prior again: fully warm.
+        let warm = transfer_tune_cached(&tgt, &wide, &prof, "mixed", 3, &opts, &mut cache);
+        assert_eq!(warm.ledger.seconds, 0.0);
+        assert_eq!(warm.tuned_model_s.to_bits(), primed.tuned_model_s.to_bits());
     }
 
     #[test]

@@ -157,6 +157,7 @@ fn gc_never_evicts_a_live_zoo_and_warm_bit_identity_holds() {
         device: device.clone(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     };
     let stale_cfg = ExperimentConfig { seed: 10, ..live_cfg.clone() };
 
@@ -200,8 +201,8 @@ fn merge_unions_manifests_and_measure_caches() {
     let xeon = DeviceProfile::xeon_e5_2620();
     let dest_root = tmp_dir("merge_dest");
     let src_root = tmp_dir("merge_src");
-    let tuning_key_a = transfer_tuning::artifact::tuning_key("MergeA", &xeon, 10, 1, 1.0);
-    let tuning_key_b = transfer_tuning::artifact::tuning_key("MergeB", &xeon, 10, 1, 1.0);
+    let tuning_key_a = transfer_tuning::artifact::tuning_key("MergeA", &xeon, 10, 1, 1.0, 0);
+    let tuning_key_b = transfer_tuning::artifact::tuning_key("MergeB", &xeon, 10, 1, 1.0, 0);
     let zk = 0x200;
 
     // Machine 1 tuned A and warmed pairs {1,2}; machine 2 tuned B and

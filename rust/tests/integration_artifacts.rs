@@ -22,6 +22,7 @@ fn config() -> ExperimentConfig {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     }
 }
 
@@ -99,7 +100,7 @@ fn incremental_rebuild_tunes_only_the_missing_model() {
 
     // Corrupt exactly one model's tuning artifact on disk.
     let key =
-        artifact::tuning_key("ResNet18", &cfg.device, cfg.trials, cfg.seed, cfg.effective_keep());
+        artifact::tuning_key("ResNet18", &cfg.device, cfg.trials, cfg.seed, cfg.effective_keep(), 0);
     let file = dir.join(format!("tuning_{key:016x}.json"));
     assert!(file.exists(), "per-model tuning artifact file layout changed?");
     std::fs::write(&file, "garbage").unwrap();
@@ -131,6 +132,7 @@ fn artifact_keys_isolate_configurations() {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     };
     let zoo = Zoo::build_incremental(base.clone(), Some(&mut artifacts), |_| {});
     assert_eq!(zoo.build_stats.models_tuned, 11);

@@ -16,7 +16,7 @@ use transfer_tuning::ir::{KernelBuilder, ModelGraph};
 use transfer_tuning::service::rpc::{
     admin_ack_json, default_admin, encode_frame, error_json, handle_request, parse_response,
     read_frame, stats_json, AdminRequest, FrameError, RpcDefaults, RpcError, RpcResponse,
-    RpcServer, ServerConfig, ServerGauges,
+    RpcServer, ServerConfig, ServerGauges, ServerStats,
 };
 use transfer_tuning::service::ScheduleService;
 use transfer_tuning::transfer::ScheduleStore;
@@ -289,7 +289,8 @@ fn default_admin_answers_stats_and_refuses_mutations() {
     // time our request executes (a job leaves the queue before its
     // handler runs), so the gauge tuple is deterministic.
     let got = roundtrip(&mut stream, "{\"op\":\"stats\"}");
-    assert_eq!(got, stats_json(&service, None, Some((1, 0))).to_compact());
+    let snapshot = ServerStats { connections: 1, ..ServerStats::default() };
+    assert_eq!(got, stats_json(&service, None, Some(snapshot)).to_compact());
     let j = transfer_tuning::util::json::parse(&got).expect("stats decode");
     assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
     let stats = j.get("stats").expect("stats body");
@@ -303,6 +304,15 @@ fn default_admin_answers_stats_and_refuses_mutations() {
     let server_stats = stats.get("server").expect("live server gauges");
     assert_eq!(server_stats.get("connections").and_then(|v| v.as_f64()), Some(1.0));
     assert_eq!(server_stats.get("queue_depth").and_then(|v| v.as_f64()), Some(0.0));
+    // Wire v4: eviction counters are present and zero on a healthy
+    // server (nothing has timed out).
+    for kind in ["evicted_idle", "evicted_read_stall", "evicted_write_stall"] {
+        assert_eq!(
+            server_stats.get(kind).and_then(|v| v.as_f64()),
+            Some(0.0),
+            "{kind} on a healthy server"
+        );
+    }
     let records = stats.get("source_records").expect("per-source record counts");
     for src in ["SrcA", "SrcB"] {
         assert!(
@@ -568,6 +578,12 @@ fn slowloris_mid_frame_stall_is_evicted_and_pins_no_worker() {
         Ok(frame) => panic!("slowloris must get no frame, got {frame}"),
     }
     wait_until("slowloris evicted", || gauges.connections.load(Ordering::SeqCst) == 0);
+    // The eviction is attributed to the right kind: one read-stall, no
+    // idle or write-stall reaps (the fresh client closed itself — an
+    // EOF, which is never counted as an eviction).
+    assert_eq!(gauges.evicted_read_stall.load(Ordering::SeqCst), 1, "read-stall eviction");
+    assert_eq!(gauges.evicted_idle.load(Ordering::SeqCst), 0);
+    assert_eq!(gauges.evicted_write_stall.load(Ordering::SeqCst), 0);
     server.shutdown();
 }
 
@@ -621,6 +637,10 @@ fn client_that_never_reads_its_replies_is_evicted_by_the_write_stall() {
     wait_until("write-stalled client evicted", || {
         gauges.connections.load(Ordering::SeqCst) == 0
     });
+    // Attributed to the right kind: the only eviction is a write stall.
+    assert_eq!(gauges.evicted_write_stall.load(Ordering::SeqCst), 1, "write-stall eviction");
+    assert_eq!(gauges.evicted_idle.load(Ordering::SeqCst), 0);
+    assert_eq!(gauges.evicted_read_stall.load(Ordering::SeqCst), 0);
 
     // The eviction freed everything: a fresh client gets a correct
     // reply immediately.
@@ -674,8 +694,13 @@ fn idle_connections_are_reaped_and_the_gauges_track_them() {
     drop(fresh);
 
     // The reap: every idler is closed cleanly (EOF, no error frame)
-    // and the gauge returns to zero.
+    // and the gauge returns to zero. All 16 reaps are attributed to the
+    // idle deadline; the active client hung up on its own (EOF — never
+    // counted), and no read/write stall ever fired.
     wait_until("idlers reaped", || gauges.connections.load(Ordering::SeqCst) == 0);
+    assert_eq!(gauges.evicted_idle.load(Ordering::SeqCst), 16, "idle evictions counted");
+    assert_eq!(gauges.evicted_read_stall.load(Ordering::SeqCst), 0);
+    assert_eq!(gauges.evicted_write_stall.load(Ordering::SeqCst), 0);
     for mut s in idlers {
         match read_frame(&mut s) {
             Err(_) => {}

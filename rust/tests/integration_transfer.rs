@@ -180,6 +180,7 @@ fn edge_zoo_search_times_exceed_server() {
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |_| {},
     );
@@ -190,6 +191,7 @@ fn edge_zoo_search_times_exceed_server() {
             device: DeviceProfile::cortex_a72(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |_| {},
     );

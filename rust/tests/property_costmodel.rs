@@ -1,0 +1,122 @@
+//! Property suite for the learned cost model as a *key ingredient*
+//! (PR 8): a fitted model's content hash enters `artifact::tuning_key`
+//! / `zoo_key` and the estimator seed exactly the way
+//! `speculative_keep` does — distinct fits produce distinct keys,
+//! while the untrained model hashes to 0 and appends nothing, keeping
+//! every legacy key byte-stable. Also pins the model codec: persisted
+//! bytes are canonical and a round trip is bit-exact, so the artifact
+//! store's warm-start invariant extends to the cost model.
+
+use transfer_tuning::artifact::{tuning_key, zoo_key};
+use transfer_tuning::autosched::{
+    fit_pairs, training_target, CostModel, TrainingPair, NUM_FEATURES,
+};
+use transfer_tuning::coordinator::estimator_seed;
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::util::json;
+use transfer_tuning::util::rng::Rng;
+
+/// Synthetic but learnable corpus: the target correlates with the
+/// features, so the GBDT always finds structure to split on and two
+/// seeds give genuinely different fits.
+fn synth_pairs(seed: u64, n: usize) -> Vec<TrainingPair> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut x = [0.0f64; NUM_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.f64();
+            }
+            let runtime_s = 1e-3 * (1.0 + 2.0 * x[0] + x[1]);
+            TrainingPair { content: seed << 32 | i as u64, x, y: training_target(runtime_s) }
+        })
+        .collect()
+}
+
+fn fitted(seed: u64) -> CostModel {
+    let m = fit_pairs(&synth_pairs(seed, 96));
+    assert!(m.is_trained(), "96 pairs cross the first refit threshold");
+    m
+}
+
+#[test]
+fn prop_model_hash_is_an_artifact_key_ingredient() {
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let a = fitted(1);
+    let b = fitted(2);
+    assert_ne!(a.content_hash(), 0, "trained model has a nonzero identity");
+    assert_ne!(a.content_hash(), b.content_hash(), "distinct fits, distinct identities");
+
+    // Tuning keys: the trained hash re-keys; two priors never collide.
+    let base = tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0);
+    let ka = tuning_key("ResNet18", &xeon, 2000, 7, 1.0, a.content_hash());
+    let kb = tuning_key("ResNet18", &xeon, 2000, 7, 1.0, b.content_hash());
+    assert_ne!(ka, base, "a trained prior must not alias the base artifact");
+    assert_ne!(ka, kb, "different priors must not alias each other");
+
+    // The untrained prior hashes to 0 — the explicit-0 legacy key,
+    // byte-for-byte, so default runs reproduce pre-PR artifacts.
+    let untrained = CostModel::default();
+    assert_eq!(untrained.content_hash(), 0);
+    assert_eq!(tuning_key("ResNet18", &xeon, 2000, 7, 1.0, untrained.content_hash()), base);
+
+    // Zoo keys carry the same ingredient with the same identity rule.
+    let names = vec!["A".to_string(), "B".to_string()];
+    let zoo_base = zoo_key(&names, &xeon, 100, 1, 1.0, 0);
+    assert_ne!(zoo_key(&names, &xeon, 100, 1, 1.0, a.content_hash()), zoo_base);
+    assert_eq!(zoo_key(&names, &xeon, 100, 1, 1.0, untrained.content_hash()), zoo_base);
+
+    // And the estimator seed: sweeps under a trained prior live in
+    // their own cache-key space; the untrained prior is the identity.
+    assert_eq!(estimator_seed(0xA45, untrained.content_hash()), 0xA45);
+    assert_ne!(estimator_seed(0xA45, a.content_hash()), 0xA45);
+    assert_ne!(
+        estimator_seed(0xA45, a.content_hash()),
+        estimator_seed(0xA45, b.content_hash())
+    );
+}
+
+#[test]
+fn prop_costmodel_codec_round_trips_bit_exactly() {
+    let m = fitted(3);
+    let text = m.to_json().to_compact();
+    let back = CostModel::from_json(&json::parse(&text).expect("parses")).expect("decodes");
+    assert_eq!(back.to_json().to_compact(), text, "serialization is canonical");
+    assert_eq!(back.content_hash(), m.content_hash(), "identity survives persistence");
+    assert!(back.is_trained());
+    // The quantity consumers rank by is bit-identical after a round
+    // trip — the warm-start invariant, extended to the cost model.
+    for p in synth_pairs(11, 16) {
+        assert_eq!(back.predict(&p.x).to_bits(), m.predict(&p.x).to_bits());
+    }
+    // The untrained model round-trips to untrained (hash 0), never to
+    // something that would start re-keying artifacts.
+    let untrained = CostModel::default();
+    let utext = untrained.to_json().to_compact();
+    let uback = CostModel::from_json(&json::parse(&utext).expect("parses")).expect("decodes");
+    assert!(!uback.is_trained());
+    assert_eq!(uback.content_hash(), 0);
+}
+
+#[test]
+fn prop_fit_identity_is_stable_across_processes_worth_of_noise() {
+    // Same corpus, any arrival order, chunked or whole: one identity.
+    // This is what lets re-fits at a threshold be compared by hash
+    // alone (refit_cost_model reports "changed" iff the bytes moved).
+    let pairs = synth_pairs(5, 300);
+    let reference = fit_pairs(&pairs);
+    assert!(reference.is_trained());
+    let mut reversed = pairs.clone();
+    reversed.reverse();
+    let mut interleaved: Vec<TrainingPair> = Vec::with_capacity(pairs.len());
+    interleaved.extend(pairs.iter().skip(1).step_by(2).cloned());
+    interleaved.extend(pairs.iter().step_by(2).cloned());
+    for (label, arrangement) in [("reversed", reversed), ("interleaved", interleaved)] {
+        let m = fit_pairs(&arrangement);
+        assert_eq!(
+            m.to_json().to_compact(),
+            reference.to_json().to_compact(),
+            "{label}: fold order is content-sorted, not arrival-sorted"
+        );
+    }
+}

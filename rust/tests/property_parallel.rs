@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 use transfer_tuning::artifact::ArtifactStore;
-use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::autosched::{tune_model, CostModelKind, TuneOptions};
 use transfer_tuning::coordinator::set_global_jobs;
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::ir::{KernelBuilder, ModelGraph, OpKind};
@@ -136,6 +136,7 @@ fn build_zoo_keep(jobs: usize, keep: f64, artifacts: Option<&mut ArtifactStore>)
             device: DeviceProfile::xeon_e5_2620(),
             jobs,
             speculative_keep: keep,
+            ..Default::default()
         },
         artifacts,
         |_| {},
@@ -334,6 +335,7 @@ fn prop_streaming_replies_bit_identical_across_jobs() {
                 device: prof.clone(),
                 jobs,
                 speculative_keep: 1.0,
+                ..Default::default()
             },
             None,
         );
@@ -352,5 +354,63 @@ fn prop_streaming_replies_bit_identical_across_jobs() {
                 "jobs={jobs}: epoch-stamped streaming reply drifted"
             ),
         }
+    }
+}
+
+#[test]
+fn prop_learned_cost_model_fit_bit_identical_across_jobs() {
+    // The learned fit reads the measure cache through the same
+    // `--jobs` fan-out as everything else (the feature pass is
+    // parallel), so it falls under the ISSUE-4 invariant too: the
+    // fitted model is a pure function of the cache contents, never of
+    // thread count. Single-kernel models keep the store too thin to
+    // cross the first refit threshold (one best record per kernel), so
+    // this test uses fatter models — five distinct-dim dense kernels
+    // each, all sharing the dense transfer class — whose pooled
+    // transfers measure well over 64 distinct contents.
+    fn fat_model(name: &str, dims: [u64; 5]) -> ModelGraph {
+        let mut g = ModelGraph::new(name);
+        for d in dims {
+            g.push(KernelBuilder::dense(d, d, d, &[]));
+        }
+        g
+    }
+    let fit_at = |jobs: usize| {
+        let zoo = Zoo::build_for_models(
+            vec![
+                fat_model("FitSrcA", [256, 320, 384, 448, 512]),
+                fat_model("FitSrcB", [576, 640, 704, 768, 832]),
+                fat_model("FitSrcC", [896, 960, 1024, 1088, 1152]),
+            ],
+            ExperimentConfig {
+                trials: 96,
+                seed: 31,
+                device: DeviceProfile::xeon_e5_2620(),
+                jobs,
+                cost_model: CostModelKind::Learned,
+                ..Default::default()
+            },
+            None,
+            |_| {},
+        );
+        // Cold build: no persisted artifacts, empty cache, untrained
+        // prior. Warm the fit corpus with the pooled transfers.
+        assert!(!zoo.cost_model.borrow().is_trained(), "jobs={jobs}: cold build stays untrained");
+        for m in &zoo.models {
+            zoo.transfer_pooled(m);
+        }
+        assert!(
+            zoo.refit_cost_model(),
+            "jobs={jobs}: warm cache must cross a refit threshold"
+        );
+        let model = zoo.cost_model.borrow();
+        (model.content_hash(), model.to_json().to_compact())
+    };
+    let (ref_hash, ref_bytes) = fit_at(1);
+    assert_ne!(ref_hash, 0, "fitted model has a nonzero identity");
+    for jobs in [2usize, 8] {
+        let (hash, bytes) = fit_at(jobs);
+        assert_eq!(hash, ref_hash, "jobs={jobs}: fitted model identity drifted");
+        assert_eq!(bytes, ref_bytes, "jobs={jobs}: fitted model bytes drifted");
     }
 }

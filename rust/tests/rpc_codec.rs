@@ -158,9 +158,11 @@ fn bad_requests_map_to_structured_errors() {
 
 #[test]
 fn admin_ops_parse_and_sessions_stay_sessions() {
-    // Wire schema v3: the `op` field dispatches admin ops; `republish`
-    // additionally accepts `"all":true` in place of `model`.
-    assert_eq!(WIRE_PROTOCOL_VERSION, 3, "update the admin tests with the protocol");
+    // Wire schema v4: the `op` field dispatches admin ops; `republish`
+    // additionally accepts `"all":true` in place of `model`; the v4
+    // `stats` reply's `server:{}` block carries per-kind eviction
+    // counters (exercised in `integration_rpc.rs`).
+    assert_eq!(WIRE_PROTOCOL_VERSION, 4, "update the admin tests with the protocol");
     let d = defaults();
     let admin = |line: &str| match parse_any_request(line, &d).unwrap() {
         Request::Admin(a) => a,

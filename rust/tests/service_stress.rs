@@ -59,6 +59,7 @@ fn concurrent_sessions_match_single_threaded_replies() {
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |_| {},
     );
@@ -110,6 +111,7 @@ fn budget_monotonicity_and_seed_isolation() {
             device: DeviceProfile::xeon_e5_2620(),
             jobs: 0,
             speculative_keep: 1.0,
+            ..Default::default()
         },
         |_| {},
     );

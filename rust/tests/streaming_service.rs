@@ -8,7 +8,7 @@
 
 use std::path::PathBuf;
 use transfer_tuning::artifact::{self, ArtifactStore};
-use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::autosched::{tune_model, CostModel, TuneOptions};
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::ir::{KernelBuilder, ModelGraph};
 use transfer_tuning::report::{republish_model, ExperimentConfig, ZooProducer};
@@ -38,6 +38,7 @@ fn config() -> ExperimentConfig {
         device: DeviceProfile::xeon_e5_2620(),
         jobs: 0,
         speculative_keep: 1.0,
+        ..Default::default()
     }
 }
 
@@ -160,6 +161,7 @@ fn republish_lands_at_epoch_plus_one_and_replies_differ_only_in_epoch() {
     let (epoch, cost) = republish_model(
         model("ModelA", 512),
         config(),
+        CostModel::default(),
         None,
         &service,
         &mut |_| {},
@@ -183,6 +185,7 @@ fn republish_lands_at_epoch_plus_one_and_replies_differ_only_in_epoch() {
     let (_, warm_cost) = republish_model(
         model("ModelA", 512),
         config(),
+        CostModel::default(),
         Some(&mut artifacts),
         &service,
         &mut |_| {},
@@ -191,6 +194,7 @@ fn republish_lands_at_epoch_plus_one_and_replies_differ_only_in_epoch() {
     let (_, warm_cost2) = republish_model(
         model("ModelA", 512),
         config(),
+        CostModel::default(),
         Some(&mut artifacts),
         &service,
         &mut |_| {},
@@ -210,7 +214,7 @@ fn producer_persists_each_artifact_as_it_lands() {
     let service = ScheduleService::empty(2);
     let mut producer = ZooProducer::for_models(zoo_models(), cfg, Some(&mut artifacts));
 
-    let key_of = |name: &str| artifact::tuning_key(name, &device, TRIALS, SEED, 1.0);
+    let key_of = |name: &str| artifact::tuning_key(name, &device, TRIALS, SEED, 1.0, 0);
 
     // After the first two publishes, Target and A are durable but B —
     // still unlanded — is not: persistence streams too.
