@@ -3,7 +3,7 @@
 # process over loopback with the thin client, end to end:
 #
 #   1. cold run — stream the zoo in, open a session (`repro call`),
-#      inspect it (`repro admin stats`, incl. the v4 server gauges),
+#      inspect it (`repro admin stats`, incl. the v5 server gauges),
 #      refresh one source (`repro admin republish` must land at
 #      epoch+1 and change only the epoch stamp of an identical
 #      session), refresh the whole zoo (`republish --all` must land 11
@@ -91,12 +91,13 @@ expect_in '"charged_search_time_s":0,' "$BASE_REPLY" "second identical session r
 STATS="$("$BIN" admin "$ADDR" stats)" || fail "stats errored"
 expect_in '"complete":true' "$STATS" "stats must report a complete zoo"
 expect_in '"models_tuned":11' "$STATS" "cold run tunes all 11 models"
-# Wire schema v4: live server gauges (exactly our one admin connection,
-# an empty queue, zero evictions on a healthy server) and per-source
-# record counts.
-expect_in '"protocol":4' "$STATS" "stats must report wire protocol v4"
-expect_in '"server":{"connections":1,"queue_depth":0,"evicted_idle":0,"evicted_read_stall":0,"evicted_write_stall":0}' "$STATS" \
-  "stats must report the live connection/queue/eviction gauges"
+# Wire schema v5: live server gauges (exactly our one admin connection,
+# an empty queue, zero evictions, zero shed requests, and zero
+# quarantined crash residue on a healthy server) and per-source record
+# counts.
+expect_in '"protocol":5' "$STATS" "stats must report wire protocol v5"
+expect_in '"server":{"connections":1,"queue_depth":0,"evicted_idle":0,"evicted_read_stall":0,"evicted_write_stall":0,"shed_total":0,"quarantined":0}' "$STATS" \
+  "stats must report the live connection/queue/eviction/shed gauges"
 expect_in '"source_records":{' "$STATS" "stats must report per-source record counts"
 
 REPUB="$("$BIN" admin "$ADDR" republish ResNet50)" || fail "republish errored"

@@ -8,6 +8,15 @@
 //! schedule through the canonical serializer, so a load returns a
 //! result whose downstream numbers are **bit-identical** to the run
 //! that produced it — the warm-start invariant of `crate::artifact`.
+//!
+//! Crash safety lives one layer down, in `ArtifactStore::write_atomic`
+//! (temp + fsync + rename, manifest last): the codec's canonical bytes
+//! are untouched by it, which is why the golden manifest fixture — and
+//! [`ARTIFACT_FORMAT_VERSION`](super::ARTIFACT_FORMAT_VERSION) — did
+//! not move when the store became crash-safe. Faults injected on the
+//! write path (`io.write`, `persist.rename`) can tear a *temp* file,
+//! never a committed one, so a decoded artifact is always a fully
+//! committed artifact.
 
 use crate::autosched::{HistoryPoint, KernelBest, TuningResult};
 use crate::sched::serialize;

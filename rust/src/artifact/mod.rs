@@ -38,6 +38,21 @@
 //! invalidation): version bumps accompany any change to the canonical
 //! serialization formats the checksums and keys are built from.
 //!
+//! ## Crash safety
+//!
+//! Every persisted file — payloads *and* the manifest — is written as
+//! write-temp (`.tmp.<name>`) + fsync + atomic rename, with the
+//! manifest rename as the commit point of any batch. A crash at any
+//! moment therefore leaves one of exactly three disk states: the old
+//! committed state (torn temp beside it), new payloads the manifest
+//! does not reference yet (half-committed), or the new committed state.
+//! [`ArtifactStore::open`] runs a recovery pass that moves orphaned
+//! temps and half-committed payloads into `<cache-dir>/quarantine/`
+//! (counted in [`ArtifactStats::quarantined`], surfaced by
+//! `repro cache stats`), so a post-crash directory always reloads as
+//! warm-or-cold — never as an error. This extends the stale-version
+//! invariant ("old directories read as cold") to torn state.
+//!
 //! ## Lifecycle
 //!
 //! Long-lived cache dirs grow without bound, so the store carries the
@@ -175,6 +190,11 @@ pub struct ArtifactStats {
     /// mismatch, unreadable file, undecodable payload).
     pub rejected: u64,
     pub writes: u64,
+    /// Files the open-time recovery pass moved into `quarantine/`
+    /// (orphaned `.tmp.*` temps + payloads no manifest row references —
+    /// the residue of a crash between a payload write and its manifest
+    /// commit).
+    pub quarantined: u64,
 }
 
 /// What one [`ArtifactStore::gc`] pass did.
@@ -207,7 +227,9 @@ pub struct MergeReport {
     /// mcache kind — kept ours (deterministic artifacts should never
     /// collide; a conflict means a corrupt source).
     pub conflicts: usize,
-    /// Source entries whose payload failed its checksum (skipped).
+    /// Source entries skipped without aborting the merge: missing or
+    /// checksum-failing source payloads, undecodable source caches, and
+    /// entries whose destination copy could not be written.
     pub rejected: usize,
 }
 
@@ -267,7 +289,48 @@ impl ArtifactStore {
         }
         store.next_tick =
             store.entries.values().map(|e| e.last_used).max().unwrap_or(0) + 1;
+        store.recover();
         Ok(store)
+    }
+
+    /// Post-crash recovery: move orphaned write-temps (`.tmp.*`) and
+    /// half-committed payloads (artifact-shaped files no manifest row
+    /// references — written, but the manifest rename never committed
+    /// them) into `quarantine/`. Best-effort by design: recovery must
+    /// never turn a reopen into an error, so unmovable files are simply
+    /// left for the next pass (or `gc`'s orphan sweep).
+    fn recover(&mut self) {
+        let referenced: BTreeSet<&str> =
+            self.entries.values().map(|e| e.file.as_str()).collect();
+        let mut pending: Vec<String> = Vec::new();
+        if let Ok(dir) = std::fs::read_dir(&self.root) {
+            for dirent in dir.flatten() {
+                let name = dirent.file_name();
+                let Some(name) = name.to_str() else { continue };
+                let torn_temp = name.starts_with(".tmp.");
+                let half_committed = !torn_temp
+                    && (name.starts_with("tuning_")
+                        || name.starts_with("store_")
+                        || name.starts_with("mcache_")
+                        || name.starts_with("costmodel_"))
+                    && !referenced.contains(name);
+                if torn_temp || half_committed {
+                    pending.push(name.to_string());
+                }
+            }
+        }
+        if pending.is_empty() {
+            return; // clean open: no quarantine dir, no extra syscalls
+        }
+        let quarantine = self.root.join("quarantine");
+        if std::fs::create_dir_all(&quarantine).is_err() {
+            return;
+        }
+        for name in pending {
+            if std::fs::rename(self.root.join(&name), quarantine.join(&name)).is_ok() {
+                self.stats.quarantined += 1;
+            }
+        }
     }
 
     pub fn root(&self) -> &Path {
@@ -293,6 +356,40 @@ impl ArtifactStore {
         self.root.join("manifest.json")
     }
 
+    /// Crash-safe file write: temp (`.tmp.<name>`) + fsync + atomic
+    /// rename. A crash (or injected fault) at any point leaves either
+    /// the old committed file or the new one — never a torn final file.
+    /// Fault sites: `io.write` tears the temp mid-file; `persist.rename`
+    /// leaves a fully-synced temp that never commits. Both are exactly
+    /// the states [`ArtifactStore::recover`] quarantines.
+    fn write_atomic(&self, name: &str, text: &str) -> std::io::Result<()> {
+        use std::io::Write as _;
+        let tmp = self.root.join(format!(".tmp.{name}"));
+        if crate::faults::should_fail("io.write") {
+            // Torn write: half the payload lands in the temp, the
+            // final file is untouched.
+            let _ = std::fs::write(&tmp, &text.as_bytes()[..text.len() / 2]);
+            return Err(crate::faults::io_error("io.write"));
+        }
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            f.sync_all()?;
+        }
+        if crate::faults::should_fail("persist.rename") {
+            return Err(crate::faults::io_error("persist.rename"));
+        }
+        std::fs::rename(&tmp, self.root.join(name))?;
+        // Durability of the rename itself needs the directory synced;
+        // best-effort — a lost rename is indistinguishable from a crash
+        // a moment earlier, which recovery already handles.
+        #[cfg(unix)]
+        if let Ok(dir) = std::fs::File::open(&self.root) {
+            let _ = dir.sync_all();
+        }
+        Ok(())
+    }
+
     fn write_manifest(&mut self) -> anyhow::Result<()> {
         let entries: BTreeMap<String, Json> = self
             .entries
@@ -305,7 +402,10 @@ impl ArtifactStore {
         ]);
         let mut text = j.to_compact();
         text.push('\n');
-        std::fs::write(self.manifest_path(), text)?;
+        // The manifest rename is the commit point: payloads written
+        // before this either become referenced now or stay orphans a
+        // future open quarantines.
+        self.write_atomic("manifest.json", &text)?;
         self.dirty = false;
         Ok(())
     }
@@ -378,7 +478,7 @@ impl ArtifactStore {
     fn put_deferred(&mut self, key: u64, kind: &str, text: &str) -> anyhow::Result<()> {
         let ext = if kind == "store" { "jsonl" } else { "json" };
         let file = format!("{kind}_{key:016x}.{ext}");
-        std::fs::write(self.root.join(&file), text)?;
+        self.write_atomic(&file, text)?;
         let last_used = self.next_tick;
         self.next_tick += 1;
         self.entries.insert(
@@ -601,8 +701,14 @@ impl ArtifactStore {
                     // Payloads land now; ONE manifest rewrite below
                     // covers the whole merge (per-entry rewrites would
                     // make a large merge quadratic in manifest bytes).
-                    self.put_deferred(*key, &entry.kind, &text)?;
-                    report.added += 1;
+                    // A copy that fails to land (full disk, injected
+                    // fault) is skip-and-count, never an abort that
+                    // strands a half-done merge.
+                    if self.put_deferred(*key, &entry.kind, &text).is_ok() {
+                        report.added += 1;
+                    } else {
+                        report.rejected += 1;
+                    }
                 }
                 Some(mine) if mine.checksum == entry.checksum => report.identical += 1,
                 Some(mine) if mine.kind == "mcache" && entry.kind == "mcache" => {
@@ -634,9 +740,10 @@ impl ArtifactStore {
                         // merges neither churn disk nor distort the
                         // destination's LRU order.
                         report.identical += 1;
-                    } else {
-                        self.put_deferred(*key, "mcache", &merged_text)?;
+                    } else if self.put_deferred(*key, "mcache", &merged_text).is_ok() {
                         report.caches_unioned += 1;
+                    } else {
+                        report.rejected += 1;
                     }
                 }
                 Some(_) => report.conflicts += 1,
@@ -806,5 +913,62 @@ mod tests {
         // Kind confusion is a miss, not a wrong payload.
         assert!(store2.load_tuning(zk).is_none());
         std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn reopen_quarantines_torn_temps_and_half_committed_payloads() {
+        let root = tmp_root("quarantine");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let key = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0, 0);
+        let mut store = ArtifactStore::open(&root).unwrap();
+        store.save_tuning(key, &res).unwrap();
+
+        // Simulate a crash's residue by hand: a torn write-temp and a
+        // payload the manifest never committed.
+        std::fs::write(root.join(".tmp.manifest.json"), "{\"version\":2,\"entr").unwrap();
+        std::fs::write(root.join("tuning_00000000deadbeef.json"), "{}\n").unwrap();
+
+        let mut store2 = ArtifactStore::open(&root).unwrap();
+        assert_eq!(store2.stats.quarantined, 2, "both crash residues quarantined");
+        assert!(root.join("quarantine/.tmp.manifest.json").is_file());
+        assert!(root.join("quarantine/tuning_00000000deadbeef.json").is_file());
+        assert!(!root.join(".tmp.manifest.json").exists());
+        // The committed entry is untouched: the reopen is warm.
+        assert!(store2.load_tuning(key).is_some(), "committed state survives recovery");
+
+        // A clean directory quarantines nothing and creates no dir.
+        let fresh = tmp_root("quarantine_clean");
+        let clean = ArtifactStore::open(&fresh).unwrap();
+        assert_eq!(clean.stats.quarantined, 0);
+        assert!(!fresh.join("quarantine").exists());
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::remove_dir_all(&fresh).ok();
+    }
+
+    #[test]
+    fn merge_skips_missing_source_payload_without_aborting() {
+        let src = tmp_root("merge_missing_src");
+        let dst = tmp_root("merge_missing_dst");
+        let xeon = DeviceProfile::xeon_e5_2620();
+        let (g, res) = small_tuning();
+        let k1 = tuning_key(&g.name, &xeon, 32, 0xA45, 1.0, 0);
+        let k2 = tuning_key(&g.name, &xeon, 32, 0xA46, 1.0, 0);
+        let mut source = ArtifactStore::open(&src).unwrap();
+        source.save_tuning(k1, &res).unwrap();
+        source.save_tuning(k2, &res).unwrap();
+        // One committed payload vanishes (partial copy, disk loss). The
+        // open-time recovery pass does not touch referenced entries, so
+        // the manifest still names it.
+        std::fs::remove_file(src.join(format!("tuning_{k1:016x}.json"))).unwrap();
+
+        let mut dest = ArtifactStore::open(&dst).unwrap();
+        let report = dest.merge_from(&src).unwrap();
+        assert_eq!(report.rejected, 1, "missing payload is skip-and-count");
+        assert_eq!(report.added, 1, "the healthy sibling still merges");
+        assert!(dest.load_tuning(k2).is_some());
+        assert!(dest.load_tuning(k1).is_none());
+        std::fs::remove_dir_all(&src).ok();
+        std::fs::remove_dir_all(&dst).ok();
     }
 }

@@ -16,6 +16,9 @@ pub struct Ledger {
     pub seconds: f64,
     pub measurements: usize,
     pub compile_failures: usize,
+    /// Measurements lost to runner/device failure (injected or real):
+    /// the device time was spent but no runtime came back.
+    pub measure_failures: usize,
     pub train_rounds: usize,
 }
 
@@ -38,6 +41,17 @@ impl Ledger {
         self.compile_failures += 1;
     }
 
+    /// Charge a measurement that was *lost* (crashed runner, dropped
+    /// RPC, injected fault): the overhead was paid and `penalty_s`
+    /// models the wasted device occupancy, but no runtime came back —
+    /// so the pair stays uncached and is re-measured on the next sweep.
+    /// This is how Ansor's measurer accounts for timeouts/crashes:
+    /// routine outcomes that cost time, not errors that stop tuning.
+    pub fn charge_measure_failure(&mut self, profile: &DeviceProfile, penalty_s: f64) {
+        self.seconds += profile.measure_overhead_s + profile.rpc_overhead_s + penalty_s;
+        self.measure_failures += 1;
+    }
+
     /// Charge a cost-model training round.
     pub fn charge_train(&mut self, seconds: f64) {
         self.seconds += seconds;
@@ -48,6 +62,7 @@ impl Ledger {
         self.seconds += other.seconds;
         self.measurements += other.measurements;
         self.compile_failures += other.compile_failures;
+        self.measure_failures += other.measure_failures;
         self.train_rounds += other.train_rounds;
     }
 }
@@ -68,6 +83,20 @@ mod tests {
         assert_eq!(l.compile_failures, 1);
         let expect = 2.0 * prof.measure_overhead_s + 3.0 * 0.03 + 0.3 * prof.measure_overhead_s + 1.5;
         assert!((l.seconds - expect).abs() < 1e-9, "{} vs {expect}", l.seconds);
+    }
+
+    #[test]
+    fn lost_measurement_charges_penalty_without_a_runtime() {
+        let prof = DeviceProfile::xeon_e5_2620();
+        let mut l = Ledger::new();
+        l.charge_measure_failure(&prof, 2.5);
+        assert_eq!(l.measure_failures, 1);
+        assert_eq!(l.measurements, 0, "a lost measurement is not a measurement");
+        let expect = prof.measure_overhead_s + prof.rpc_overhead_s + 2.5;
+        assert!((l.seconds - expect).abs() < 1e-12);
+        let mut m = Ledger::new();
+        m.merge(&l);
+        assert_eq!(m.measure_failures, 1);
     }
 
     #[test]

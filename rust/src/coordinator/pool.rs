@@ -25,13 +25,22 @@ pub enum PairOutcome {
     Measured(f64),
     /// The schedule could not be applied (Fig 4's `-1` entries).
     Invalid(ApplyError),
+    /// The measurement was *lost* — crashed runner, dropped RPC, or an
+    /// injected `measure.pair` fault. Carries the penalty
+    /// device-seconds the ledger was charged for the wasted attempt.
+    /// Unlike [`PairOutcome::Invalid`] (a durable property of the pair,
+    /// cached), a lost measurement is transient and is **never**
+    /// cached: the next sweep re-measures the pair, so one flaky runner
+    /// can't poison warm state. Ansor's measurer treats build/run
+    /// failures the same way — routine outcomes, not fatal errors.
+    Failed(f64),
 }
 
 impl PairOutcome {
     pub fn runtime(&self) -> Option<f64> {
         match self {
             PairOutcome::Measured(t) => Some(*t),
-            PairOutcome::Invalid(_) => None,
+            PairOutcome::Invalid(_) | PairOutcome::Failed(_) => None,
         }
     }
 }
@@ -201,6 +210,9 @@ pub fn measure_pairs_cached_generic<C: CacheOps>(
         HitInvalid(ApplyError),
         /// Index into the unique-miss list.
         Miss(usize),
+        /// Measurement lost to an injected `measure.pair` fault; the
+        /// penalty was charged, nothing was cached.
+        Failed(f64),
     }
 
     let keys: Vec<u64> = contents.iter().map(|&c| sweep_key(c, seed, profile)).collect();
@@ -224,11 +236,24 @@ pub fn measure_pairs_cached_generic<C: CacheOps>(
             Resolution::Hit(t) => Slot::Hit(t),
             Resolution::HitInvalid(e) => Slot::HitInvalid(e),
             Resolution::Corrupt | Resolution::Miss => {
-                let u = unique_jobs.len();
-                unique_jobs.push(jobs[ji]);
-                unique_keys.push(key);
-                unique_noise.push(noise_seed(seed, contents[ji]));
-                Slot::Miss(u)
+                // Fault injection happens only where a real measurement
+                // would: warm pairs never re-measure, so they can never
+                // "fail" — a fault changes when work happens, not what
+                // completed work contains. The draw is keyed by the
+                // pair's content (like its noise), so the same pair is
+                // lost at any parallelism or batch order, the penalty
+                // is charged once per unique pair, and the key is NOT
+                // inserted — the next sweep re-measures it.
+                if let Some(penalty) = crate::faults::measure_failure(contents[ji]) {
+                    ledger.charge_measure_failure(profile, penalty);
+                    Slot::Failed(penalty)
+                } else {
+                    let u = unique_jobs.len();
+                    unique_jobs.push(jobs[ji]);
+                    unique_keys.push(key);
+                    unique_noise.push(noise_seed(seed, contents[ji]));
+                    Slot::Miss(u)
+                }
             }
         };
         slot_of_key.insert(key, slots.len());
@@ -252,6 +277,7 @@ pub fn measure_pairs_cached_generic<C: CacheOps>(
             Slot::Miss(u) => measured[u].clone(),
             Slot::Hit(t) => PairOutcome::Measured(t),
             Slot::HitInvalid(e) => PairOutcome::Invalid(e),
+            Slot::Failed(p) => PairOutcome::Failed(p),
         })
         .collect();
     CachedBatch { outcomes, keys }

@@ -1,0 +1,394 @@
+//! Deterministic fault injection.
+//!
+//! Robustness work is only testable if failure is reproducible, so this
+//! module treats faults the way the rest of the crate treats measurement
+//! noise: every injected failure is drawn from a seeded stream and a
+//! faulty run is bit-replayable. A [`FaultPlan`] is parsed from
+//! `--fault-plan SPEC` (or the `TT_FAULTS` env var) and installed
+//! process-wide; instrumented sites then ask [`should_fail`] /
+//! [`measure_failure`] / [`sleep_site`] at the moment the real operation
+//! would happen.
+//!
+//! The plan is an operational/testing knob only: it changes *when* work
+//! happens (a write errors, a connection drops, a measurement is lost),
+//! never *what* a completed artifact contains — so the spec string is
+//! deliberately **never** an artifact-key ingredient.
+//!
+//! # Grammar
+//!
+//! ```text
+//! SPEC    := RULE (';' RULE)*
+//! RULE    := SITE ':' OPT (',' OPT)*
+//! OPT     := 'after=N'            fire on every op past the Nth
+//!          | 'nth=N'              fire on exactly the Nth op (1-based)
+//!          | 'prob=P[@seed=S]'    fire with probability P, seeded draw
+//!          | 'seed=S'             seed for prob draws (default 0)
+//!          | 'delay=MS'           sleep instead of failing (latency fault)
+//!          | 'penalty=SECS'       device-seconds charged per lost measurement
+//! ```
+//!
+//! Example: `io.write:after=3;rpc.accept:prob=0.05@seed=7;persist.rename:nth=2`
+//!
+//! # Sites
+//!
+//! | site             | effect when fired                                      |
+//! |------------------|--------------------------------------------------------|
+//! | `io.write`       | artifact payload/manifest temp write torn mid-file     |
+//! | `persist.rename` | temp file written + synced, commit rename never happens|
+//! | `rpc.accept`     | accepted connection dropped before registration        |
+//! | `rpc.read`       | connection read errors (peer torn away)                |
+//! | `rpc.write`      | connection write errors (reply lost mid-flush)         |
+//! | `measure.pair`   | one pair's measurement lost (`PairOutcome::Failed`)    |
+//! | `rpc.handler`    | handler latency (use `delay=MS`; makes overload        |
+//! |                  | deterministic in tests)                                |
+//!
+//! Counter-triggered sites (`after`/`nth`) count ops in arrival order;
+//! `measure.pair` is content-keyed instead (like `pool::noise_seed`), so
+//! the same pair fails no matter how a sweep is scheduled across workers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// When a rule fires, relative to the site's op counter or a seeded draw.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Trigger {
+    /// Fire on every op with 1-based index strictly greater than `n`.
+    After(u64),
+    /// Fire on exactly the `n`th op (1-based).
+    Nth(u64),
+    /// Fire with probability `p` per op, from the rule's seeded stream.
+    Prob(f64),
+}
+
+/// One `site:trigger` clause of a fault plan.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub site: String,
+    pub trigger: Trigger,
+    /// Seed for `Prob` draws; decorrelated from measurement noise.
+    pub seed: u64,
+    /// If set, the site sleeps this long instead of failing.
+    pub delay_ms: Option<u64>,
+    /// Device-seconds charged for a lost measurement (`measure.pair`).
+    pub penalty_s: f64,
+}
+
+/// A parsed, installable fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse the `--fault-plan` grammar. Errors name the offending clause.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (site, opts) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause `{clause}` is missing `site:`"))?;
+            let site = site.trim();
+            if site.is_empty() {
+                return Err(format!("fault clause `{clause}` has an empty site"));
+            }
+            let mut trigger = None;
+            let mut seed = 0u64;
+            let mut delay_ms = None;
+            let mut penalty_s = 1.0f64;
+            for opt in opts.split(',').map(str::trim).filter(|o| !o.is_empty()) {
+                // `prob=0.05@seed=7` attaches the seed to the draw inline.
+                let (opt, inline_seed) = match opt.split_once('@') {
+                    Some((head, tail)) => (head.trim(), Some(tail.trim())),
+                    None => (opt, None),
+                };
+                if let Some(extra) = inline_seed {
+                    let v = extra
+                        .strip_prefix("seed=")
+                        .ok_or_else(|| format!("expected `@seed=N` in `{clause}`"))?;
+                    seed = parse_num(v, clause)?;
+                }
+                let (key, val) = opt
+                    .split_once('=')
+                    .ok_or_else(|| format!("fault option `{opt}` in `{clause}` is not k=v"))?;
+                match key.trim() {
+                    "after" => trigger = Some(Trigger::After(parse_num(val, clause)?)),
+                    "nth" => trigger = Some(Trigger::Nth(parse_num(val, clause)?)),
+                    "prob" => {
+                        let p: f64 = val
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad probability `{val}` in `{clause}`"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!("probability `{val}` outside [0,1] in `{clause}`"));
+                        }
+                        trigger = Some(Trigger::Prob(p));
+                    }
+                    "seed" => seed = parse_num(val, clause)?,
+                    "delay" => delay_ms = Some(parse_num(val, clause)?),
+                    "penalty" => {
+                        let p: f64 = val
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad penalty `{val}` in `{clause}`"))?;
+                        if !(p.is_finite() && p >= 0.0) {
+                            return Err(format!("penalty `{val}` must be >= 0 in `{clause}`"));
+                        }
+                        penalty_s = p;
+                    }
+                    other => return Err(format!("unknown fault option `{other}` in `{clause}`")),
+                }
+            }
+            let trigger = trigger
+                .ok_or_else(|| format!("fault clause `{clause}` needs after=/nth=/prob="))?;
+            rules.push(FaultRule { site: site.to_string(), trigger, seed, delay_ms, penalty_s });
+        }
+        if rules.is_empty() {
+            return Err("empty fault plan".to_string());
+        }
+        Ok(FaultPlan { rules })
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(val: &str, clause: &str) -> Result<T, String> {
+    val.trim().parse().map_err(|_| format!("bad number `{val}` in `{clause}`"))
+}
+
+struct Active {
+    plan: FaultPlan,
+    /// Per-site op counters; ordered triggers count arrival order.
+    counters: Mutex<HashMap<String, u64>>,
+}
+
+/// Fast-path flag so un-faulted runs pay one relaxed atomic load per site.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<Active>> = Mutex::new(None);
+
+/// Install a plan process-wide (replacing any previous one).
+pub fn install(plan: FaultPlan) {
+    let mut guard = ACTIVE.lock().unwrap();
+    *guard = Some(Active { plan, counters: Mutex::new(HashMap::new()) });
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Parse + install in one step (the `--fault-plan` / `TT_FAULTS` path).
+pub fn install_spec(spec: &str) -> Result<(), String> {
+    install(FaultPlan::parse(spec)?);
+    Ok(())
+}
+
+/// Remove the active plan (tests use this to scope injection).
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut guard = ACTIVE.lock().unwrap();
+    *guard = None;
+}
+
+/// True if any plan is installed.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// splitmix64 finalizer: decorrelates (seed, site, index) into a draw.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn u01(z: u64) -> f64 {
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+fn site_hash(site: &str) -> u64 {
+    // FNV-1a, same construction as the artifact keys.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in site.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn rule_fires(rule: &FaultRule, site: &str, n: u64) -> bool {
+    match rule.trigger {
+        Trigger::After(k) => n > k,
+        Trigger::Nth(k) => n == k,
+        Trigger::Prob(p) => u01(mix64(rule.seed ^ site_hash(site) ^ n)) < p,
+    }
+}
+
+/// Evaluate fail-action rules for `site`, advancing its op counter.
+/// Returns true when this operation should fail. Sites that are not
+/// named by the active plan still count ops, so `nth=` schedules stay
+/// stable when a plan adds or removes sibling clauses.
+pub fn should_fail(site: &str) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let guard = ACTIVE.lock().unwrap();
+    let Some(active) = guard.as_ref() else { return false };
+    let mut counters = active.counters.lock().unwrap();
+    let n = counters.entry(site.to_string()).or_insert(0);
+    *n += 1;
+    let n = *n;
+    active
+        .plan
+        .rules
+        .iter()
+        .any(|r| r.site == site && r.delay_ms.is_none() && rule_fires(r, site, n))
+}
+
+/// Content-keyed failure for `measure.pair`: the draw is derived from the
+/// pair's content key (like `pool::noise_seed`), so the same pair is lost
+/// regardless of worker scheduling or batch order. Returns the penalty in
+/// device-seconds when the measurement should be lost.
+pub fn measure_failure(content: u64) -> Option<f64> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let guard = ACTIVE.lock().unwrap();
+    let active = guard.as_ref()?;
+    for rule in active.plan.rules.iter().filter(|r| r.site == "measure.pair") {
+        let fires = match rule.trigger {
+            // Ordered triggers fall back to the shared counter path.
+            Trigger::After(_) | Trigger::Nth(_) => {
+                let mut counters = active.counters.lock().unwrap();
+                let n = counters.entry("measure.pair".to_string()).or_insert(0);
+                *n += 1;
+                rule_fires(rule, "measure.pair", *n)
+            }
+            Trigger::Prob(p) => u01(mix64(rule.seed ^ content)) < p,
+        };
+        if fires {
+            return Some(rule.penalty_s);
+        }
+    }
+    None
+}
+
+/// Sleep if the plan schedules a latency fault for `site` on this op.
+/// Used by the RPC handler so overload tests are deterministic.
+pub fn sleep_site(site: &str) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let ms = {
+        let guard = ACTIVE.lock().unwrap();
+        let Some(active) = guard.as_ref() else { return };
+        let mut counters = active.counters.lock().unwrap();
+        let n = counters.entry(site.to_string()).or_insert(0);
+        *n += 1;
+        let n = *n;
+        active
+            .plan
+            .rules
+            .iter()
+            .find(|r| r.site == site && r.delay_ms.is_some() && rule_fires(r, site, n))
+            .and_then(|r| r.delay_ms)
+    };
+    if let Some(ms) = ms {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// The `io::Error` injected sites return, tagged with the site name so
+/// logs show the failure was scheduled, not environmental.
+pub fn io_error(site: &str) -> std::io::Error {
+    std::io::Error::other(format!("injected fault at {site}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_issue_example() {
+        let plan =
+            FaultPlan::parse("io.write:after=3;rpc.accept:prob=0.05@seed=7;persist.rename:nth=2")
+                .unwrap();
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.rules[0].trigger, Trigger::After(3));
+        assert_eq!(plan.rules[1].trigger, Trigger::Prob(0.05));
+        assert_eq!(plan.rules[1].seed, 7);
+        assert_eq!(plan.rules[2].trigger, Trigger::Nth(2));
+    }
+
+    #[test]
+    fn parses_delay_and_penalty() {
+        let spec = "rpc.handler:prob=1,delay=250;measure.pair:prob=0.5,penalty=2.5";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.rules[0].delay_ms, Some(250));
+        assert_eq!(plan.rules[1].penalty_s, 2.5);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "io.write",
+            "io.write:nth=x",
+            "io.write:prob=1.5",
+            ":nth=1",
+            "io.write:frequency=2",
+            "measure.pair:prob=0.1,penalty=-1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn triggers_fire_at_the_documented_indices() {
+        let nth = FaultRule {
+            site: "s".into(),
+            trigger: Trigger::Nth(2),
+            seed: 0,
+            delay_ms: None,
+            penalty_s: 1.0,
+        };
+        assert!(!rule_fires(&nth, "s", 1));
+        assert!(rule_fires(&nth, "s", 2));
+        assert!(!rule_fires(&nth, "s", 3));
+        let after = FaultRule { trigger: Trigger::After(2), ..nth.clone() };
+        assert!(!rule_fires(&after, "s", 2));
+        assert!(rule_fires(&after, "s", 3));
+        assert!(rule_fires(&after, "s", 100));
+    }
+
+    #[test]
+    fn prob_draws_are_seeded_and_replayable() {
+        let rule = FaultRule {
+            site: "s".into(),
+            trigger: Trigger::Prob(0.3),
+            seed: 42,
+            delay_ms: None,
+            penalty_s: 1.0,
+        };
+        let a: Vec<bool> = (1..200).map(|n| rule_fires(&rule, "s", n)).collect();
+        let b: Vec<bool> = (1..200).map(|n| rule_fires(&rule, "s", n)).collect();
+        assert_eq!(a, b, "same seed, same schedule");
+        let fired = a.iter().filter(|x| **x).count();
+        assert!((20..100).contains(&fired), "p=0.3 over 199 draws fired {fired}");
+        let other = FaultRule { seed: 43, ..rule };
+        let c: Vec<bool> = (1..200).map(|n| rule_fires(&other, "s", n)).collect();
+        assert_ne!(a, c, "different seeds draw different schedules");
+    }
+
+    // NOTE: install()/clear() are process-global, and the lib unit-test
+    // binary runs tests in parallel threads — so no lib test installs a
+    // plan. The install paths (and the injected artifact/pool/reactor
+    // behavior) are exercised in `rust/tests/crashsafety.rs`, which owns
+    // its own process and serializes plan changes behind a mutex.
+    #[test]
+    fn content_keyed_draw_is_position_independent() {
+        let p = 0.5;
+        let seed = 9u64;
+        let draw = |content: u64| u01(mix64(seed ^ content)) < p;
+        let a: Vec<bool> = (0..64u64).map(|c| draw(c * 7919)).collect();
+        let b: Vec<bool> = (0..64u64).rev().map(|c| draw(c * 7919)).collect();
+        assert_eq!(a, b.into_iter().rev().collect::<Vec<_>>(), "depends only on content");
+        assert!(a.iter().any(|x| *x) && a.iter().any(|x| !*x));
+        assert_eq!(measure_failure(1), None, "no plan installed, nothing injected");
+    }
+}

@@ -30,6 +30,10 @@
 //!   merged schedule store, and the measurement cache as durable,
 //!   integrity-checked files under a `--cache-dir`, so tuned state
 //!   survives the process and warm runs re-tune nothing.
+//! * [`faults`] — deterministic fault injection: a seeded `FaultPlan`
+//!   (`--fault-plan` / `TT_FAULTS`) drives injected write/rename/accept/
+//!   read/measure failures so crash-safety and degradation are testable
+//!   and bit-replayable, without ever entering artifact keys.
 //! * [`service`] — multi-tenant serving: one shared zoo behind an
 //!   `Arc`, a sharded measurement cache, a deterministic session API
 //!   (`open_session`) answering concurrent schedule requests, and the
@@ -43,6 +47,7 @@ pub mod artifact;
 pub mod autosched;
 pub mod coordinator;
 pub mod device;
+pub mod faults;
 pub mod ir;
 pub mod models;
 pub mod report;

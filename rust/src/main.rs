@@ -100,6 +100,18 @@ struct Cli {
     /// Outbound-progress deadline in seconds for `serve --listen`
     /// (client stopped reading its replies). 0 = server default.
     write_stall_s: u64,
+    /// Worker-queue bound for `serve --listen`: a request landing on a
+    /// full queue is answered with the typed v5 `overloaded` error
+    /// (load shedding). 0 = unbounded (the default).
+    max_queue: usize,
+    /// `repro call`/`repro admin`: retry transient failures (connect
+    /// refused, timeout, `overloaded`) up to N times with deterministic
+    /// jittered exponential backoff. 0 (default) = one attempt.
+    retries: usize,
+    /// Deterministic fault-injection plan (`--fault-plan` / TT_FAULTS):
+    /// a test/ops tool, never an artifact-key ingredient — see
+    /// `transfer_tuning::faults` for the grammar.
+    fault_plan: Option<String>,
     /// `repro admin ADDR republish --all`: republish every zoo model.
     all: bool,
 }
@@ -131,6 +143,9 @@ fn parse_args() -> Result<Cli> {
         idle_timeout_s: 0,
         read_stall_s: 0,
         write_stall_s: 0,
+        max_queue: 0,
+        retries: 0,
+        fault_plan: None,
         all: false,
     };
     while let Some(arg) = args.next() {
@@ -196,6 +211,9 @@ fn parse_args() -> Result<Cli> {
                 }
                 cli.write_stall_s = secs;
             }
+            "--max-queue" => cli.max_queue = value("--max-queue")?.parse()?,
+            "--retries" => cli.retries = value("--retries")?.parse()?,
+            "--fault-plan" => cli.fault_plan = Some(value("--fault-plan")?),
             "--all" => cli.all = true,
             other if !other.starts_with("--") => {
                 if cli.target.is_none() {
@@ -806,6 +824,13 @@ enum ServeControl {
 /// service accumulated survives, not just what the zoo build produced.
 /// The RPC and signal paths are byte-identical by construction (they
 /// are the same code); `rust/tests/serve_ops.rs` proves it.
+///
+/// **Resume after a crash.** A restart on the same `--cache-dir`
+/// resumes an interrupted build: the store's open-time recovery pass
+/// quarantines crash residue (reported in `stats` as
+/// `server.quarantined`), committed tunings load warm at 0 trials, and
+/// only the models the store does not cover are tuned — the artifact
+/// store is the checkpoint (see `ZooProducer`'s resume notes).
 fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::sync::{mpsc, Arc};
@@ -973,6 +998,22 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     if cli.write_stall_s > 0 {
         server_config.write_stall = std::time::Duration::from_secs(cli.write_stall_s);
     }
+    server_config.max_queue = cli.max_queue;
+    // Export what the store's recovery pass quarantined on open: the
+    // reactor never touches this gauge, but `stats` reports crash
+    // residue alongside the serving counters — one place to look.
+    if let Some(a) = artifacts.as_ref() {
+        gauges
+            .quarantined
+            .store(a.stats.quarantined as usize, Ordering::SeqCst);
+        if a.stats.quarantined > 0 {
+            eprintln!(
+                "[artifacts] recovery quarantined {} crash-residue file(s) into {}",
+                a.stats.quarantined,
+                a.root().join("quarantine").display()
+            );
+        }
+    }
     let server = RpcServer::start_with_config(
         bind,
         service.clone(),
@@ -1130,7 +1171,9 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
 
 /// One framed request/response round-trip against a live server — the
 /// thin client both `repro call` and `repro admin` stand on, so
-/// operators never hand-roll length prefixes.
+/// operators never hand-roll length prefixes. I/O failures keep their
+/// `std::io::Error` in the anyhow chain so the retry layer can
+/// classify them without sniffing message strings.
 fn rpc_roundtrip(addr: &str, line: &str) -> Result<String> {
     use std::io::Write as _;
     use transfer_tuning::service::rpc;
@@ -1139,7 +1182,85 @@ fn rpc_roundtrip(addr: &str, line: &str) -> Result<String> {
         .with_context(|| format!("connecting to {addr}"))?;
     let frame = rpc::encode_frame(line).map_err(|e| anyhow::anyhow!("encoding request: {e}"))?;
     stream.write_all(&frame).context("sending request frame")?;
-    rpc::read_frame(&mut stream).map_err(|e| anyhow::anyhow!("reading response frame: {e}"))
+    rpc::read_frame(&mut stream).map_err(|e| match e {
+        rpc::FrameError::Io(io) => anyhow::Error::new(io).context("reading response frame"),
+        other => anyhow::anyhow!("reading response frame: {other}"),
+    })
+}
+
+/// Is a failed round-trip transient by the retry contract? Only
+/// connect-refused (server restarting or not yet bound) and timeouts
+/// qualify — a bad address, a framing violation, or any in-band
+/// application error is deterministic and must not be retried.
+fn transient_io(e: &anyhow::Error) -> bool {
+    e.chain().any(|cause| {
+        cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::ConnectionRefused
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            )
+        })
+    })
+}
+
+/// If `payload` is the v5 `overloaded` error, its `retry_after_ms`
+/// hint (defaulted when absent); `None` for every other payload —
+/// success or not, no other in-band error is retryable.
+fn overloaded_hint_ms(payload: &str) -> Option<u64> {
+    let j = transfer_tuning::util::json::parse(payload).ok()?;
+    let err = j.get("error")?;
+    if err.get("code")?.as_str()? != "overloaded" {
+        return None;
+    }
+    Some(
+        err.get("retry_after_ms")
+            .and_then(|v| v.as_f64())
+            .filter(|ms| ms.is_finite() && *ms >= 0.0)
+            .map(|ms| ms as u64)
+            .unwrap_or(transfer_tuning::service::rpc::OVERLOADED_RETRY_AFTER_MS),
+    )
+}
+
+/// [`rpc_roundtrip`] under the `--retries` contract: up to `retries`
+/// re-attempts after a transient failure — connect refused, timeout,
+/// or a typed `overloaded` reply — with exponential backoff seeded by
+/// the request bytes and the attempt index, so two runs of the same
+/// command sleep identically (deterministic jitter, same discipline as
+/// every other noise source in the tree). The base delay honors the
+/// server's `retry_after_ms` hint when one was sent.
+fn rpc_roundtrip_retrying(addr: &str, line: &str, retries: usize) -> Result<String> {
+    use transfer_tuning::util::rng::Rng;
+
+    // FNV-1a over the request line: the jitter seed is content-derived,
+    // never wall-clock.
+    let mut seed: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in line.bytes() {
+        seed ^= b as u64;
+        seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    for attempt in 0..=retries {
+        let (reason, base_ms) = match rpc_roundtrip(addr, line) {
+            Ok(payload) => match overloaded_hint_ms(&payload) {
+                Some(hint) if attempt < retries => ("server overloaded".to_string(), hint),
+                _ => return Ok(payload),
+            },
+            Err(e) if transient_io(&e) && attempt < retries => (format!("{e:#}"), 50),
+            Err(e) => return Err(e),
+        };
+        let backoff_ms = base_ms.saturating_mul(1u64 << attempt.min(5)).min(2_000);
+        let jitter_ms = Rng::new(seed ^ attempt as u64).range(0, (backoff_ms / 4 + 1) as usize);
+        let delay = std::time::Duration::from_millis(backoff_ms + jitter_ms as u64);
+        eprintln!(
+            "[client] attempt {}/{} failed ({reason}); retrying in {}ms",
+            attempt + 1,
+            retries + 1,
+            delay.as_millis()
+        );
+        std::thread::sleep(delay);
+    }
+    unreachable!("the final attempt returns above")
 }
 
 /// Print one response payload and mirror its `ok` field in the exit
@@ -1165,7 +1286,7 @@ fn cmd_call(cli: &Cli) -> Result<()> {
         "unexpected argument `{}` — quote the request payload as ONE argument",
         cli.rest[1]
     );
-    emit_rpc_payload(&rpc_roundtrip(&addr, request)?)
+    emit_rpc_payload(&rpc_roundtrip_retrying(&addr, request, cli.retries)?)
 }
 
 /// `repro admin ADDR stats|shutdown|republish MODEL|republish --all`:
@@ -1208,7 +1329,7 @@ fn cmd_admin(cli: &Cli) -> Result<()> {
         }
         other => bail!("unknown admin op `{other}` ({USAGE})"),
     };
-    emit_rpc_payload(&rpc_roundtrip(&addr, &line)?)
+    emit_rpc_payload(&rpc_roundtrip_retrying(&addr, &line, cli.retries)?)
 }
 
 /// `repro cache gc|merge|stats`: offline artifact-store lifecycle.
@@ -1273,6 +1394,20 @@ fn cmd_cache(cli: &Cli) -> Result<()> {
                 store.len(),
                 store.total_bytes()
             );
+            // Crash residue: what THIS open's recovery pass moved into
+            // quarantine/, plus whatever earlier passes left there for
+            // inspection (quarantined files are never deleted by us).
+            let held = std::fs::read_dir(dir.join("quarantine"))
+                .map(|d| d.count())
+                .unwrap_or(0);
+            if store.stats.quarantined > 0 || held > 0 {
+                println!(
+                    "[cache] quarantine: {} file(s) moved on this open, {} held in {}",
+                    store.stats.quarantined,
+                    held,
+                    dir.join("quarantine").display()
+                );
+            }
         }
         other => bail!("unknown cache subcommand `{other}` (gc|merge|stats)"),
     }
@@ -1447,6 +1582,28 @@ FLAGS
                   evict RPC connections whose outbound buffer makes no
                   progress (client stopped reading replies) for SECS
                   (default 30)
+  --max-queue N   worker-queue bound for `serve --listen`: a request
+                  landing when N decoded requests are already waiting
+                  is answered at once with the typed `overloaded`
+                  error (with a retry_after_ms hint) instead of
+                  queueing — the connection stays healthy. 0 (default)
+                  = unbounded
+  --retries N     `call`/`admin` only: retry transient failures —
+                  connect refused, timeout, `overloaded` — up to N
+                  times with deterministic jittered exponential
+                  backoff (honoring the server's retry_after_ms hint).
+                  In-band application errors are never retried.
+                  Default 0 (one attempt)
+  --fault-plan SPEC
+                  deterministic fault injection for crash-safety and
+                  degradation testing (also: TT_FAULTS env var), e.g.
+                  'io.write:after=3;rpc.accept:prob=0.05@seed=7;
+                  persist.rename:nth=2'. Sites: io.write,
+                  persist.rename, rpc.accept, rpc.read, rpc.write,
+                  rpc.handler (delay-only), measure.pair. A test/ops
+                  tool: the plan NEVER enters artifact keys — a run
+                  under faults writes the same bytes as a clean run,
+                  it just fails at the chosen points
   --shards N      measurement-cache shards for `serve` (default 8)
   --cache-budget BYTES
                   artifact-store size budget: every persist phase GCs the
@@ -1494,6 +1651,16 @@ fn main() -> Result<()> {
     // tuner candidate batches, the measurement pool, session replay.
     // Deterministic — thread counts never change results.
     transfer_tuning::coordinator::set_global_jobs(cli.jobs);
+    // Deterministic fault injection (test/ops tool). The plan is
+    // process state, NEVER an artifact-key ingredient: a run under
+    // faults writes the same bytes as a clean one — it just fails at
+    // the chosen points. `--fault-plan` beats the TT_FAULTS env var.
+    let fault_spec = cli.fault_plan.clone().or_else(|| std::env::var("TT_FAULTS").ok());
+    if let Some(spec) = fault_spec.filter(|s| !s.trim().is_empty()) {
+        transfer_tuning::faults::install_spec(&spec)
+            .map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?;
+        eprintln!("[faults] plan active: {spec}");
+    }
     match cli.command.as_str() {
         "models" => cmd_models(),
         "devices" => cmd_devices(),

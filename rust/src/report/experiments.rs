@@ -181,6 +181,15 @@ impl Drop for Fanout {
 /// lines, epoch numbering — everything downstream of [`ZooProducer::step`]
 /// is therefore byte-identical to a serial build; the knob buys
 /// wall-clock only.
+///
+/// **Resume after a crash.** Because every landed tuning is persisted
+/// (crash-safely — see `crate::artifact`) *before* the next model
+/// lands, a producer restarted over the same store is automatically a
+/// resume: models whose artifacts committed load warm
+/// (`models_from_artifacts`, 0 trials) and only the interrupted
+/// remainder is tuned. No checkpoint file, no resume flag — the
+/// artifact store *is* the checkpoint, and its open-time recovery pass
+/// guarantees a kill mid-write can only cost the one uncommitted model.
 pub struct ZooProducer<'a> {
     config: ExperimentConfig,
     models: Vec<ModelGraph>,

@@ -42,6 +42,17 @@
 //! the reply of a service built statically over the same *e* sources.
 //! Proofs live in `rust/tests/service_stress.rs` and
 //! `rust/tests/streaming_service.rs`.
+//!
+//! **Graceful degradation.** Under overload the server sheds rather
+//! than stalls: `--max-queue` bounds the decoded-request queue, and a
+//! request landing on the full queue is answered immediately with the
+//! typed v5 `overloaded` error (carrying a `retry_after_ms` hint) while
+//! the connection stays healthy — see [`rpc::overloaded_json`] and the
+//! reactor's `ShedHook`. After a crash, `serve` restarted on the same
+//! `--cache-dir` reloads every committed artifact (torn temp files are
+//! quarantined, never loaded — see `crate::artifact`) and the streaming
+//! build resumes tuning only the models the store does not already
+//! cover: recovered models are republished at 0 trials.
 
 pub mod reactor;
 pub mod rpc;

@@ -16,6 +16,11 @@
 //! * complete, decoded frames become jobs on a queue drained by
 //!   `jobs`-many **worker threads**, which only ever run the supplied
 //!   [`Handler`] on a full payload — they never touch a socket;
+//! * the queue is bounded by `max_queue` (0 = unbounded): a request
+//!   landing on a full queue is answered at once with the caller's
+//!   [`ShedHook`] reply (the v5 `overloaded` frame) instead of waiting,
+//!   so an overloaded server degrades to fast typed refusals rather
+//!   than unbounded latency;
 //! * replies come back to the event loop (over a loopback wakeup
 //!   socket) and are written through the connection's outbound buffer,
 //!   so a client that stops reading stalls its buffer, not a worker;
@@ -54,6 +59,13 @@ pub type Handler = Arc<dyn Fn(&str) -> String + Send + Sync>;
 /// reactor.
 pub type ViolationHook = Arc<dyn Fn(&FrameViolation) -> String + Send + Sync>;
 
+/// Produce the reply payload for a request shed by the `max_queue`
+/// bound (given the observed queue depth). Like [`ViolationHook`], this
+/// keeps the wire error shape (`overloaded` + `retry_after_ms`) owned
+/// by `service::rpc`; the reactor only knows that a shed request gets a
+/// typed reply instead of a queue slot.
+pub type ShedHook = Arc<dyn Fn(usize) -> String + Send + Sync>;
+
 /// A framing-layer violation, reported to the [`ViolationHook`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FrameViolation {
@@ -87,6 +99,12 @@ pub struct ReactorConfig {
     pub write_stall: Duration,
     /// Frame payload cap, both directions.
     pub max_frame_len: u32,
+    /// Load-shed bound: a decoded request arriving while this many jobs
+    /// are already queued (not yet picked up by a worker) is answered
+    /// with the [`ShedHook`]'s typed reply instead of queueing — the
+    /// connection stays open and healthy. 0 = unbounded (the pre-v5
+    /// behavior).
+    pub max_queue: usize,
 }
 
 /// Live serving gauges, exported for the `stats` admin op: updated by
@@ -108,6 +126,14 @@ pub struct ServerGauges {
     /// Connections closed by the write-stall deadline (a client that
     /// stopped reading its replies).
     pub evicted_write_stall: AtomicUsize,
+    /// Requests answered with the typed `overloaded` reply because the
+    /// job queue was at `max_queue` (monotonic).
+    pub shed_total: AtomicUsize,
+    /// Files the artifact store's open-time recovery pass quarantined
+    /// (crash residue). Set once by the serving process after it opens
+    /// its `--cache-dir`; the reactor itself never writes it — it lives
+    /// here so the `stats` admin op exports one coherent server block.
+    pub quarantined: AtomicUsize,
 }
 
 /// Stop reading a connection once this many decoded requests are
@@ -385,6 +411,11 @@ fn append_frame(buf: &mut Vec<u8>, payload: &str, max_frame_len: u32) -> bool {
 /// Flush as much of `buf_out` as the kernel will take. `Ok(bytes)` on
 /// progress-or-block, `Err(())` on a dead peer.
 fn flush_conn(conn: &mut Conn) -> Result<usize, ()> {
+    // Injected write fault: the reply is lost mid-flush and the
+    // connection is treated as dead, like a peer that closed on us.
+    if conn.has_unflushed() && crate::faults::should_fail("rpc.write") {
+        return Err(());
+    }
     let mut wrote = 0usize;
     loop {
         if conn.out_pos >= conn.buf_out.len() {
@@ -522,6 +553,7 @@ impl Reactor {
         bind: &str,
         handler: Handler,
         violation: ViolationHook,
+        shed: ShedHook,
         cfg: ReactorConfig,
         gauges: Arc<ServerGauges>,
     ) -> anyhow::Result<Reactor> {
@@ -577,6 +609,7 @@ impl Reactor {
             jobs: jobs.clone(),
             cfg,
             violation,
+            shed,
             live_jobs: 0,
             draining: false,
             listener_paused: false,
@@ -648,6 +681,7 @@ struct EvLoop {
     jobs: Arc<JobQueue>,
     cfg: ReactorConfig,
     violation: ViolationHook,
+    shed: ShedHook,
     /// Jobs submitted but not yet drained from `done` (drain exit gate).
     live_jobs: usize,
     draining: bool,
@@ -726,6 +760,12 @@ impl EvLoop {
                     if stream.set_nonblocking(true).is_err() {
                         continue;
                     }
+                    // Injected accept fault: the connection is dropped
+                    // before registration, exactly like a peer that
+                    // vanished between accept(2) and first byte.
+                    if crate::faults::should_fail("rpc.accept") {
+                        continue;
+                    }
                     let tok = self.next_token;
                     self.next_token += 1;
                     let fd = sock_fd(&stream);
@@ -798,6 +838,12 @@ impl EvLoop {
         // None = still open; Some(true) = EOF; Some(false) = I/O error
         // (both end reads; only a mid-frame EOF earns an error frame).
         let mut end: Option<bool> = None;
+        // Injected read fault: surfaces as an I/O error on the stream
+        // (connection torn away mid-read) — ends reads, closes cleanly.
+        if crate::faults::should_fail("rpc.read") {
+            self.mark_read_end(tok, false);
+            return true;
+        }
         {
             let Some(conn) = self.conns.get_mut(&tok) else { return false };
             let mut chunk = [0u8; 16 * 1024];
@@ -915,19 +961,38 @@ impl EvLoop {
 
     /// Dispatch the connection's next work item (one request in flight
     /// at a time), then flush, re-deadline, and re-register interest.
+    /// Requests arriving while the job queue sits at `max_queue` are
+    /// **shed**: answered immediately with the [`ShedHook`]'s typed
+    /// reply (in request order, like any other reply) and never
+    /// queued — the connection stays open, so a well-behaved client
+    /// backs off and retries instead of reconnecting.
     fn advance_conn(&mut self, tok: u64, progress: bool) {
+        enum Next {
+            Submit(String),
+            Shed,
+            Done,
+        }
         let mut progress = progress;
         loop {
-            let submit = {
+            // Queue depth is sampled per dispatch, outside the conns
+            // borrow; workers draining concurrently only make the
+            // sample conservative (we shed at the observed depth).
+            let depth = self.jobs.state.lock().expect("job queue").queue.len();
+            let queue_full = self.cfg.max_queue != 0 && depth >= self.cfg.max_queue;
+            let next = {
                 let Some(conn) = self.conns.get_mut(&tok) else { return };
                 if conn.in_flight || conn.closing {
-                    None
+                    Next::Done
                 } else {
                     match conn.pending.pop_front() {
-                        None => None,
+                        None => Next::Done,
                         Some(Work::Request(payload)) => {
-                            conn.in_flight = true;
-                            Some(payload)
+                            if queue_full {
+                                Next::Shed
+                            } else {
+                                conn.in_flight = true;
+                                Next::Submit(payload)
+                            }
                         }
                         Some(Work::Close(err)) => {
                             if let Some(payload) = err {
@@ -941,18 +1006,29 @@ impl EvLoop {
                             }
                             conn.closing = true;
                             progress = true;
-                            None
+                            Next::Done
                         }
                     }
                 }
             };
-            match submit {
-                Some(payload) => {
+            match next {
+                Next::Submit(payload) => {
                     self.submit(tok, payload);
                     progress = true;
                     break;
                 }
-                None => break,
+                Next::Shed => {
+                    let payload = (self.shed)(depth);
+                    self.shared.gauges.shed_total.fetch_add(1, Ordering::Relaxed);
+                    let Some(conn) = self.conns.get_mut(&tok) else { return };
+                    if !append_frame(&mut conn.buf_out, &payload, self.cfg.max_frame_len) {
+                        conn.closing = true;
+                    }
+                    progress = true;
+                    // Keep draining: later pending requests shed too
+                    // (or submit, if a worker freed a slot meanwhile).
+                }
+                Next::Done => break,
             }
         }
         self.finish_conn_io(tok, progress);

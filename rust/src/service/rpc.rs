@@ -43,7 +43,7 @@
 //! semantics are unchanged from the pool server — frames are answered
 //! strictly in order, one request of a connection in flight at a time.
 
-use super::reactor::{self, FrameViolation, Reactor, ReactorConfig};
+use super::reactor::{self, FrameViolation, Reactor, ReactorConfig, ShedHook};
 use super::{ScheduleService, SessionReply, SessionRequest};
 use crate::coordinator::CacheStats;
 use crate::device::DeviceProfile;
@@ -69,12 +69,16 @@ pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
 /// `stats` reply gains `source_records` + `server` gauges and
 /// `republish` accepts `"all":true`; v4 = the `server` block gains
 /// per-kind eviction counters (`evicted_idle` / `evicted_read_stall` /
-/// `evicted_write_stall`). Bump this with **any** protocol change, and
+/// `evicted_write_stall`); v5 = load shedding — the `overloaded`
+/// error code (carrying a `retry_after_ms` hint inside the `error`
+/// object) answers requests landing on a full worker queue
+/// (`--max-queue`), and the `server` block gains `shed_total` and
+/// `quarantined`. Bump this with **any** protocol change, and
 /// update README §Wire protocol, `rust/tests/rpc_codec.rs`, and
 /// `rust/tests/integration_rpc.rs` in the same commit — CI's
 /// `format-drift` job fails a change to this file that does not touch
 /// all three together.
-pub const WIRE_PROTOCOL_VERSION: u64 = 4;
+pub const WIRE_PROTOCOL_VERSION: u64 = 5;
 
 /// How long a connection's outbound buffer may make no progress (a
 /// client that stopped reading its replies) before the connection is
@@ -193,7 +197,13 @@ pub struct RpcDefaults {
 /// | `admin_unavailable` | admin op has no operations loop, or not yet    |
 /// | `bad_frame`         | truncated or non-UTF-8 frame (connection ends) |
 /// | `oversized_frame`   | length prefix above [`MAX_FRAME_LEN`] (ends)   |
+/// | `overloaded`        | worker queue full (`--max-queue`); retry later |
 /// | `internal`          | session or admin op failed for another reason  |
+///
+/// `overloaded` is the one error whose object carries an extra field:
+/// `retry_after_ms`, a client backoff hint (see [`overloaded_json`]).
+/// It is transient by contract — `repro call --retries` retries it,
+/// and only it, among in-band errors.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RpcError {
     pub code: String,
@@ -374,6 +384,36 @@ pub fn error_json(err: &RpcError) -> Json {
     ])
 }
 
+/// Default `retry_after_ms` hint inside an `overloaded` error: long
+/// enough for a worker to drain one typical request, short enough that
+/// a shed client re-arrives while the burst is still the live story.
+pub const OVERLOADED_RETRY_AFTER_MS: u64 = 250;
+
+/// Encode the v5 `overloaded` response: a structured error whose
+/// `error` object carries a `retry_after_ms` backoff hint on top of
+/// the usual `code`/`message`. Sent by the reactor's shed hook when a
+/// request frame lands on a full worker queue (`--max-queue`), *before*
+/// the request is parsed — shedding must cost no work. `depth` is the
+/// observed queue depth, echoed in the message for operators.
+pub fn overloaded_json(depth: usize) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::str("overloaded")),
+                (
+                    "message",
+                    Json::str(format!(
+                        "server overloaded: worker queue full ({depth} queued); retry later"
+                    )),
+                ),
+                ("retry_after_ms", Json::num(OVERLOADED_RETRY_AFTER_MS as f64)),
+            ]),
+        ),
+    ])
+}
+
 /// A decoded response payload (client side).
 #[derive(Debug)]
 pub enum RpcResponse {
@@ -400,8 +440,10 @@ pub fn parse_response(line: &str) -> anyhow::Result<RpcResponse> {
 
 /// A point-in-time snapshot of the reactor gauges for the `server:{}`
 /// block of the `stats` reply: live connections, worker queue depth,
-/// and the cumulative per-kind eviction counts (wire v4). Plain
-/// numbers — the encoding below stays a pure, testable function.
+/// the cumulative per-kind eviction counts (wire v4), the cumulative
+/// shed count, and the artifact-store quarantine count from the last
+/// recovery pass (wire v5). Plain numbers — the encoding below stays
+/// a pure, testable function.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerStats {
     pub connections: usize,
@@ -409,6 +451,11 @@ pub struct ServerStats {
     pub evicted_idle: usize,
     pub evicted_read_stall: usize,
     pub evicted_write_stall: usize,
+    /// Requests answered with `overloaded` instead of being queued.
+    pub shed_total: usize,
+    /// Torn/half-committed artifacts moved to `quarantine/` when the
+    /// serve loop opened its `--cache-dir` (0 when no store attached).
+    pub quarantined: usize,
 }
 
 impl ServerStats {
@@ -421,6 +468,8 @@ impl ServerStats {
             evicted_idle: gauges.evicted_idle.load(Ordering::Relaxed),
             evicted_read_stall: gauges.evicted_read_stall.load(Ordering::Relaxed),
             evicted_write_stall: gauges.evicted_write_stall.load(Ordering::Relaxed),
+            shed_total: gauges.shed_total.load(Ordering::Relaxed),
+            quarantined: gauges.quarantined.load(Ordering::Relaxed),
         }
     }
 }
@@ -473,6 +522,8 @@ pub fn stats_json(
                 ("evicted_idle", Json::num(s.evicted_idle as f64)),
                 ("evicted_read_stall", Json::num(s.evicted_read_stall as f64)),
                 ("evicted_write_stall", Json::num(s.evicted_write_stall as f64)),
+                ("shed_total", Json::num(s.shed_total as f64)),
+                ("quarantined", Json::num(s.quarantined as f64)),
             ]),
         ));
     }
@@ -581,6 +632,11 @@ pub struct ServerConfig {
     pub read_stall: Duration,
     /// Outbound-progress deadline (client stopped reading).
     pub write_stall: Duration,
+    /// Worker-queue bound (`--max-queue`): a request frame landing when
+    /// this many decoded requests are already waiting is answered at
+    /// once with the v5 `overloaded` error instead of queueing. 0 (the
+    /// default) disables shedding — pre-v5 behavior.
+    pub max_queue: usize,
 }
 
 impl Default for ServerConfig {
@@ -590,6 +646,7 @@ impl Default for ServerConfig {
             idle_timeout: READ_STALL_TIMEOUT,
             read_stall: READ_STALL_TIMEOUT,
             write_stall: WRITE_STALL_TIMEOUT,
+            max_queue: 0,
         }
     }
 }
@@ -682,8 +739,11 @@ impl RpcServer {
     ) -> anyhow::Result<RpcServer> {
         // The reactor owns bytes and deadlines; this closure is the
         // entire request plane — a pure (payload -> reply) function,
-        // exactly the oracle `handle_request_with` is.
+        // exactly the oracle `handle_request_with` is. The fault site
+        // lets tests slow the plane down deterministically (a stand-in
+        // for an expensive session) without touching real tuning knobs.
         let handler: reactor::Handler = Arc::new(move |line: &str| {
+            crate::faults::sleep_site("rpc.handler");
             handle_request_with(&service, &defaults, &admin, line).to_compact()
         });
         // Framing-violation replies stay owned by this module so the
@@ -696,6 +756,10 @@ impl RpcServer {
             };
             error_json(&RpcError::new(code, err.to_string())).to_compact()
         });
+        // Shedding is answered by the event loop itself, so the frame
+        // stays owned by this module: the reactor only ever sends what
+        // this hook hands it.
+        let shed: ShedHook = Arc::new(|depth: usize| overloaded_json(depth).to_compact());
         let rcfg = ReactorConfig {
             jobs: 0, // resolve via the global --jobs/TT_JOBS knob
             max_conns: config.max_conns.max(1),
@@ -703,8 +767,9 @@ impl RpcServer {
             read_stall: config.read_stall,
             write_stall: config.write_stall,
             max_frame_len: MAX_FRAME_LEN,
+            max_queue: config.max_queue,
         };
-        let inner = Reactor::start(bind, handler, violation, rcfg, gauges)?;
+        let inner = Reactor::start(bind, handler, violation, shed, rcfg, gauges)?;
         Ok(RpcServer { inner })
     }
 

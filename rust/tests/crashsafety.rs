@@ -1,0 +1,410 @@
+//! Crash-safety battery (the PR-9 acceptance proof): an exhaustive
+//! fault schedule over the persist path, with the invariant that every
+//! resulting directory reopens **warm or cold, never broken** — a
+//! committed artifact reloads bit-identically, an uncommitted one is
+//! simply re-computed, and crash residue is quarantined, counted, and
+//! out of the way. Also covers the `measure.pair` injection contract
+//! (typed `PairOutcome::Failed`, penalty charged, cache never
+//! poisoned), producer resume over a recovered store (committed models
+//! land at 0 trials, only the remainder re-tunes), and the rule that a
+//! fault plan is *never* an artifact-key ingredient.
+//!
+//! Fault plans are process-global, so every test here serializes behind
+//! one file-local mutex and scopes its plan with a drop guard — this
+//! integration binary is the only place in the tree that installs a
+//! plan (the lib unit tests deliberately never do; see
+//! `src/faults/mod.rs`).
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use transfer_tuning::artifact::{self, ArtifactStore};
+use transfer_tuning::autosched::{tune_model, TuneOptions, TuningResult};
+use transfer_tuning::coordinator::{
+    measure_pairs_cached, Ledger, MeasureCache, PairOutcome,
+};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::faults;
+use transfer_tuning::ir::{Kernel, KernelBuilder, ModelGraph};
+use transfer_tuning::report::{ExperimentConfig, ZooProducer};
+use transfer_tuning::sched::Schedule;
+
+const TRIALS: usize = 48;
+const SEED: u64 = 0xA45;
+
+/// Serialize tests that install a process-global fault plan. A panicked
+/// holder poisons the mutex; recover the guard anyway — the plan guard
+/// below has already cleared the global state on unwind.
+fn fault_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Installs a plan on construction, clears it on drop (panic-safe, so
+/// one test's plan can never leak into the next).
+struct PlanScope;
+
+impl PlanScope {
+    fn install(spec: &str) -> PlanScope {
+        faults::install_spec(spec).expect("test fault spec must parse");
+        PlanScope
+    }
+}
+
+impl Drop for PlanScope {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_crashsafety_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_model(name: &str, dim: u64) -> ModelGraph {
+    let mut g = ModelGraph::new(name);
+    g.push(KernelBuilder::dense(dim, dim, dim, &[]));
+    g
+}
+
+fn small_tuning() -> (ModelGraph, TuningResult) {
+    let g = small_model("CrashModel", 256);
+    let prof = DeviceProfile::xeon_e5_2620();
+    let opts = TuneOptions { trials: TRIALS, seed: SEED, ..Default::default() };
+    let res = tune_model(&g, &prof, &opts);
+    (g, res)
+}
+
+/// Bit-level equality of two tuning results (the "rebuilt numbers are
+/// bit-identical" half of the acceptance invariant).
+fn assert_tuning_identical(back: &TuningResult, reference: &TuningResult, what: &str) {
+    assert_eq!(
+        back.search_time_s.to_bits(),
+        reference.search_time_s.to_bits(),
+        "{what}: search_time_s must be bit-identical"
+    );
+    assert_eq!(back.trials_used, reference.trials_used, "{what}: trials_used");
+    assert_eq!(back.best.len(), reference.best.len(), "{what}: kernel count");
+    for (k, b) in &reference.best {
+        let a = back.best.get(k).unwrap_or_else(|| panic!("{what}: kernel {k} missing"));
+        assert_eq!(a.schedule, b.schedule, "{what}: schedule of kernel {k}");
+        assert_eq!(
+            a.cost_s.to_bits(),
+            b.cost_s.to_bits(),
+            "{what}: cost of kernel {k} must be bit-identical"
+        );
+    }
+}
+
+/// THE tentpole proof. `save_tuning` is exactly two crash-safe writes
+/// (payload, then the manifest as commit point), each with two kill
+/// sites: `io.write` (temp torn mid-file) and `persist.rename` (temp
+/// synced, commit rename lost). Kill every one of those points in turn
+/// — plus one schedule index past the end, the clean run — and every
+/// resulting directory must reopen warm or cold: committed state
+/// reloads bit-identically, uncommitted state is a miss that a re-save
+/// repairs in place, and the crash residue is quarantined with exact
+/// counts.
+#[test]
+fn every_kill_point_on_the_persist_path_reloads_warm_or_cold() {
+    let _serial = fault_lock();
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let (g, reference) = small_tuning();
+    let key = artifact::tuning_key(&g.name, &xeon, TRIALS, SEED, 1.0, 0);
+
+    for site in ["io.write", "persist.rename"] {
+        for nth in 1..=3u64 {
+            let label = format!("{site}:nth={nth}");
+            let root = tmp_root(&format!("kill_{}_{nth}", site.replace('.', "_")));
+
+            let mut store = ArtifactStore::open(&root).expect("fresh open");
+            let scope = PlanScope::install(&label);
+            let saved = store.save_tuning(key, &reference);
+            drop(scope);
+            drop(store);
+
+            // Write ops 1 and 2 are the payload and the manifest; index
+            // 3 never fires, so that iteration is the clean commit.
+            let committed = nth >= 3;
+            assert_eq!(saved.is_ok(), committed, "{label}: save outcome");
+
+            let mut reopened = ArtifactStore::open(&root).expect("reopen must never fail");
+            let expected_quarantined = match nth {
+                // Payload temp (torn or never renamed) is the only residue.
+                1 => 1,
+                // Payload committed but unreferenced (the manifest never
+                // named it) + the manifest's own dead temp.
+                2 => 2,
+                _ => 0,
+            };
+            assert_eq!(
+                reopened.stats.quarantined, expected_quarantined,
+                "{label}: quarantine count"
+            );
+            if expected_quarantined > 0 {
+                assert!(root.join("quarantine").is_dir(), "{label}: quarantine dir exists");
+            }
+            assert!(
+                !root.join(format!(".tmp.tuning_{key:016x}.json")).exists()
+                    && !root.join(".tmp.manifest.json").exists(),
+                "{label}: no write-temp survives recovery"
+            );
+
+            match reopened.load_tuning(key) {
+                Some(back) => {
+                    assert!(committed, "{label}: only a committed artifact may reload");
+                    assert_tuning_identical(&back, &reference, &label);
+                }
+                None => {
+                    assert!(!committed, "{label}: committed artifact must not be lost");
+                    // Cold is recoverable: the re-save repairs in place
+                    // and reloads bit-identically.
+                    reopened.save_tuning(key, &reference).expect("repair save");
+                    let back = reopened.load_tuning(key).expect("repaired artifact loads");
+                    assert_tuning_identical(&back, &reference, &label);
+                }
+            }
+            std::fs::remove_dir_all(&root).ok();
+        }
+    }
+}
+
+/// A crash while persisting artifact B must never disturb committed
+/// artifact A — recovery quarantines only the residue, and the next
+/// clean save of B leaves a fully warm store.
+#[test]
+fn committed_state_survives_a_mid_write_crash() {
+    let _serial = fault_lock();
+    let root = tmp_root("survives");
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let (g, reference) = small_tuning();
+    let k1 = artifact::tuning_key(&g.name, &xeon, TRIALS, SEED, 1.0, 0);
+    let k2 = artifact::tuning_key(&g.name, &xeon, TRIALS, SEED + 1, 1.0, 0);
+
+    let mut store = ArtifactStore::open(&root).expect("open");
+    store.save_tuning(k1, &reference).expect("clean save of A");
+
+    // B's payload is fully synced but its commit rename is lost.
+    let scope = PlanScope::install("persist.rename:nth=1");
+    assert!(store.save_tuning(k2, &reference).is_err(), "injected crash");
+    drop(scope);
+    drop(store);
+
+    let mut reopened = ArtifactStore::open(&root).expect("reopen");
+    assert_eq!(reopened.stats.quarantined, 1, "only B's dead temp is residue");
+    let back = reopened.load_tuning(k1).expect("A stays warm through B's crash");
+    assert_tuning_identical(&back, &reference, "A after B's crash");
+    assert!(reopened.load_tuning(k2).is_none(), "B is a cold miss, not an error");
+
+    reopened.save_tuning(k2, &reference).expect("clean retry of B");
+    drop(reopened);
+    let mut healed = ArtifactStore::open(&root).expect("reopen healed");
+    assert_eq!(healed.stats.quarantined, 0, "a healed directory is clean");
+    assert!(healed.load_tuning(k1).is_some() && healed.load_tuning(k2).is_some());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+fn sweep_jobs(kernel: &Kernel, n: usize) -> Vec<Schedule> {
+    (0..n)
+        .map(|i| {
+            let mut s = Schedule::untuned_default(kernel);
+            s.unroll_max += 8 * i as u64;
+            s
+        })
+        .collect()
+}
+
+/// `measure.pair` injection contract: a lost measurement becomes a
+/// typed [`PairOutcome::Failed`] carrying the plan's penalty, the
+/// ledger is charged for the wasted attempt, and — the invariant that
+/// matters — nothing is cached, so the next sweep re-measures exactly
+/// the lost pairs and lands bit-identical to a never-faulted run.
+#[test]
+fn lost_measurements_charge_penalty_and_never_poison_the_cache() {
+    let _serial = fault_lock();
+    let prof = DeviceProfile::xeon_e5_2620();
+    let kernel = KernelBuilder::dense(256, 256, 256, &[]);
+    let schedules = sweep_jobs(&kernel, 8);
+    let jobs: Vec<(&Kernel, &Schedule)> = schedules.iter().map(|s| (&kernel, s)).collect();
+
+    // Never-faulted reference sweep.
+    let mut ref_cache = MeasureCache::new();
+    let mut ref_ledger = Ledger::new();
+    let reference = measure_pairs_cached(&jobs, &prof, SEED, &mut ref_cache, &mut ref_ledger);
+    assert!(reference.iter().all(|o| o.runtime().is_some()), "reference sweep is clean");
+
+    // Lose the first measurement (counter-triggered: deterministic no
+    // matter how the draw seeds hash).
+    let mut cache = MeasureCache::new();
+    let mut ledger = Ledger::new();
+    let scope = PlanScope::install("measure.pair:nth=1,penalty=2.5");
+    let faulted = measure_pairs_cached(&jobs, &prof, SEED, &mut cache, &mut ledger);
+    drop(scope);
+
+    match faulted[0] {
+        PairOutcome::Failed(penalty) => {
+            assert_eq!(penalty.to_bits(), 2.5f64.to_bits(), "penalty from the plan")
+        }
+        ref other => panic!("first pair should be lost, got {other:?}"),
+    }
+    assert_eq!(ledger.measure_failures, 1, "the loss is charged, typed, counted");
+    for (i, (f, r)) in faulted.iter().zip(&reference).enumerate().skip(1) {
+        assert_eq!(
+            f.runtime().map(f64::to_bits),
+            r.runtime().map(f64::to_bits),
+            "unaffected pair {i} measures exactly as a clean run"
+        );
+    }
+
+    // The poisoning check: with the plan gone, the same cache serves a
+    // sweep bit-identical to the reference, re-measuring ONLY the lost
+    // pair — a Failed outcome never became a cache entry.
+    let mut replay_ledger = Ledger::new();
+    let replayed = measure_pairs_cached(&jobs, &prof, SEED, &mut cache, &mut replay_ledger);
+    assert_eq!(replay_ledger.measurements, 1, "only the lost pair re-measures");
+    assert_eq!(replay_ledger.measure_failures, 0);
+    for (i, (w, r)) in replayed.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            w.runtime().map(f64::to_bits),
+            r.runtime().map(f64::to_bits),
+            "pair {i} after recovery is bit-identical to the clean run"
+        );
+    }
+}
+
+/// Probabilistic loss is content-keyed and seeded, so an identical plan
+/// replays an identical failure pattern — bit-for-bit, run after run.
+#[test]
+fn probabilistic_measurement_loss_is_bit_replayable() {
+    let _serial = fault_lock();
+    let prof = DeviceProfile::xeon_e5_2620();
+    let kernel = KernelBuilder::dense(256, 256, 256, &[]);
+    let schedules = sweep_jobs(&kernel, 12);
+    let jobs: Vec<(&Kernel, &Schedule)> = schedules.iter().map(|s| (&kernel, s)).collect();
+
+    let run = || {
+        let scope = PlanScope::install("measure.pair:prob=0.5@seed=9,penalty=1.5");
+        let mut cache = MeasureCache::new();
+        let mut ledger = Ledger::new();
+        let out = measure_pairs_cached(&jobs, &prof, SEED, &mut cache, &mut ledger);
+        drop(scope);
+        (out, ledger.measure_failures)
+    };
+    let (a, failures_a) = run();
+    let (b, failures_b) = run();
+    assert_eq!(failures_a, failures_b, "same plan, same number of losses");
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            (PairOutcome::Failed(p), PairOutcome::Failed(q)) => {
+                assert_eq!(p.to_bits(), q.to_bits(), "pair {i}: same penalty")
+            }
+            _ => assert_eq!(
+                x.runtime().map(f64::to_bits),
+                y.runtime().map(f64::to_bits),
+                "pair {i}: identical outcome across replays"
+            ),
+        }
+    }
+}
+
+/// Serve-restart resume, producer edition: a build killed mid-persist
+/// leaves a store whose committed models reload at **0 trials** while
+/// only the interrupted remainder re-tunes — and every rebuilt number
+/// is bit-identical to an uninterrupted build. No checkpoint file; the
+/// artifact store is the checkpoint.
+#[test]
+fn interrupted_build_resumes_only_missing_models_at_zero_trials() {
+    let _serial = fault_lock();
+    let config = ExperimentConfig {
+        trials: TRIALS,
+        seed: SEED,
+        device: DeviceProfile::xeon_e5_2620(),
+        jobs: 0,
+        speculative_keep: 1.0,
+        ..Default::default()
+    };
+    let models = vec![small_model("ResumeA", 256), small_model("ResumeB", 320)];
+    fn run_build(
+        models: &[ModelGraph],
+        config: &ExperimentConfig,
+        store: Option<&mut ArtifactStore>,
+    ) -> Vec<TuningResult> {
+        let mut producer = ZooProducer::for_models(models.to_vec(), config.clone(), store);
+        let mut out = Vec::new();
+        while let Some((_, res, _)) = producer.step(&mut |_| {}) {
+            out.push(res);
+        }
+        out
+    }
+
+    // Uninterrupted reference build (no store; pure tuning).
+    let reference = run_build(&models, &config, None);
+    assert_eq!(reference.len(), 2);
+
+    // Interrupted build: model A commits (write ops 1+2), model B's
+    // payload write (op 3) tears — the kill point of a crash landing B.
+    let root = tmp_root("resume");
+    let mut store = ArtifactStore::open(&root).expect("open");
+    let scope = PlanScope::install("io.write:nth=3");
+    let crashed = run_build(&models, &config, Some(&mut store));
+    drop(scope);
+    drop(store);
+    // The producer still returned both tunings (persistence failure is
+    // a warning, not a lost result) — but only A is durable.
+    assert_eq!(crashed.len(), 2);
+
+    // "Restart": reopen quarantines B's torn temp, then a fresh
+    // producer resumes — A from the store at zero cost, B re-tuned.
+    let mut recovered = ArtifactStore::open(&root).expect("recovery reopen");
+    assert_eq!(recovered.stats.quarantined, 1, "B's torn temp is quarantined");
+    let mut resumed = ZooProducer::for_models(models.clone(), config.clone(), Some(&mut recovered));
+    let mut rebuilt = Vec::new();
+    while let Some((_, res, _)) = resumed.step(&mut |_| {}) {
+        rebuilt.push(res);
+    }
+    assert_eq!(resumed.stats.models_from_artifacts, 1, "A resumes from the store");
+    assert_eq!(resumed.stats.models_tuned, 1, "only the interrupted model re-tunes");
+    assert_eq!(
+        resumed.stats.trials_run, reference[1].trials_used,
+        "resume charges exactly the missing model's trials"
+    );
+    for (i, (r, refr)) in rebuilt.iter().zip(&reference).enumerate() {
+        assert_tuning_identical(r, refr, &format!("resumed model {i}"));
+    }
+
+    // A second restart is fully warm: zero trials, zero residue.
+    drop(resumed);
+    drop(recovered);
+    let mut warm_store = ArtifactStore::open(&root).expect("warm reopen");
+    assert_eq!(warm_store.stats.quarantined, 0);
+    let mut warm = ZooProducer::for_models(models.clone(), config.clone(), Some(&mut warm_store));
+    while warm.step(&mut |_| {}).is_some() {}
+    assert_eq!(warm.stats.models_from_artifacts, 2, "fully warm restart");
+    assert_eq!(warm.stats.trials_run, 0);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The spec string is an operational knob, never a key ingredient: the
+/// same configuration derives the same artifact keys whether or not a
+/// fault plan is installed (so faulty runs warm the same cache slots a
+/// clean run would).
+#[test]
+fn fault_plan_never_enters_artifact_keys() {
+    let _serial = fault_lock();
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let names = vec!["ResNet18".to_string(), "BERT".to_string()];
+    let tk = artifact::tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0);
+    let zk = artifact::zoo_key(&names, &xeon, 2000, 7, 1.0, 0);
+
+    let scope = PlanScope::install(
+        "io.write:after=3;rpc.accept:prob=0.05@seed=7;persist.rename:nth=2;\
+         measure.pair:prob=0.9@seed=1,penalty=9.0",
+    );
+    assert!(faults::active());
+    assert_eq!(tk, artifact::tuning_key("ResNet18", &xeon, 2000, 7, 1.0, 0));
+    assert_eq!(zk, artifact::zoo_key(&names, &xeon, 2000, 7, 1.0, 0));
+    drop(scope);
+    assert!(!faults::active(), "the guard scopes the plan");
+}

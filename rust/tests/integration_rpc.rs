@@ -304,9 +304,12 @@ fn default_admin_answers_stats_and_refuses_mutations() {
     let server_stats = stats.get("server").expect("live server gauges");
     assert_eq!(server_stats.get("connections").and_then(|v| v.as_f64()), Some(1.0));
     assert_eq!(server_stats.get("queue_depth").and_then(|v| v.as_f64()), Some(0.0));
-    // Wire v4: eviction counters are present and zero on a healthy
-    // server (nothing has timed out).
-    for kind in ["evicted_idle", "evicted_read_stall", "evicted_write_stall"] {
+    // Wire v4/v5: eviction counters, shed_total, and quarantined are
+    // present and zero on a healthy server (nothing timed out, nothing
+    // shed, no crash residue).
+    for kind in
+        ["evicted_idle", "evicted_read_stall", "evicted_write_stall", "shed_total", "quarantined"]
+    {
         assert_eq!(
             server_stats.get(kind).and_then(|v| v.as_f64()),
             Some(0.0),
@@ -708,4 +711,84 @@ fn idle_connections_are_reaped_and_the_gauges_track_them() {
         }
     }
     server.shutdown();
+}
+
+#[test]
+fn full_queue_sheds_with_typed_overloaded_replies_and_stays_live() {
+    // Wire v5 graceful degradation, tested at the reactor layer so the
+    // handler can be made deterministically slow without touching
+    // global state: one worker, `max_queue: 1`, a handler that holds
+    // its job for a while. Flooding more requests than (1 in flight +
+    // 1 queued) MUST shed the rest with the typed `overloaded` frame —
+    // connections stay open and healthy, nothing blocks, and the
+    // server drains back to fully serving.
+    use transfer_tuning::service::reactor::{Reactor, ReactorConfig};
+    use transfer_tuning::service::rpc::{overloaded_json, OVERLOADED_RETRY_AFTER_MS};
+
+    let handler: transfer_tuning::service::reactor::Handler = Arc::new(|line: &str| {
+        std::thread::sleep(Duration::from_millis(250));
+        format!("served:{line}")
+    });
+    let violation: transfer_tuning::service::reactor::ViolationHook =
+        Arc::new(|_| String::from("violation"));
+    let shed: transfer_tuning::service::reactor::ShedHook =
+        Arc::new(|depth| overloaded_json(depth).to_compact());
+    let cfg = ReactorConfig {
+        jobs: 1,
+        max_conns: 64,
+        idle_timeout: Duration::from_secs(60),
+        read_stall: Duration::from_secs(60),
+        write_stall: Duration::from_secs(60),
+        max_frame_len: 1 << 20,
+        max_queue: 1,
+    };
+    let gauges = Arc::new(ServerGauges::default());
+    let reactor =
+        Reactor::start("127.0.0.1:0", handler, violation, shed, cfg, gauges.clone())
+            .expect("bind");
+    let addr = reactor.local_addr();
+
+    // 8 one-shot clients, one request each, all at once. Capacity while
+    // the first job sleeps is 1 executing + 1 queued; the rest are
+    // answered immediately with `overloaded`.
+    let replies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                scope.spawn(move || {
+                    let mut stream = TcpStream::connect(addr)
+                        .unwrap_or_else(|e| panic!("client {i}: {e}"));
+                    roundtrip(&mut stream, &format!("req-{i}"))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let served = replies.iter().filter(|r| r.starts_with("served:")).count();
+    let shed_replies: Vec<&String> = replies.iter().filter(|r| !r.starts_with("served:")).collect();
+    assert!(served >= 1, "at least the in-flight request is served");
+    assert!(!shed_replies.is_empty(), "8 requests into capacity 2 must shed some");
+    for reply in &shed_replies {
+        // Every shed reply is the full typed v5 frame, hint included.
+        match parse_response(reply).expect("shed reply decodes") {
+            RpcResponse::Error(e) => assert_eq!(e.code, "overloaded", "typed shed reply"),
+            RpcResponse::Reply(_) => panic!("shed reply must be an error: {reply}"),
+        }
+        let j = transfer_tuning::util::json::parse(reply).expect("json");
+        let hint =
+            j.get("error").unwrap().get("retry_after_ms").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(hint as u64, OVERLOADED_RETRY_AFTER_MS, "backoff hint travels with the error");
+    }
+    assert_eq!(
+        gauges.shed_total.load(Ordering::SeqCst),
+        shed_replies.len(),
+        "every shed reply is counted, nothing else is"
+    );
+
+    // Degradation is graceful: once the burst drains, the same server
+    // serves a fresh request normally — shedding never wedged it.
+    wait_until("queue drained", || gauges.queue_depth.load(Ordering::SeqCst) == 0);
+    let mut fresh = TcpStream::connect(addr).expect("connect after burst");
+    assert_eq!(roundtrip(&mut fresh, "after"), "served:after", "server fully live after shedding");
+    drop(fresh);
+    reactor.shutdown();
 }

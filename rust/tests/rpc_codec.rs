@@ -8,9 +8,9 @@
 use std::io::Cursor;
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::service::rpc::{
-    admin_ack_json, encode_frame, error_json, parse_any_request, parse_request, parse_response,
-    read_frame, AdminRequest, FrameError, Request, RpcDefaults, RpcError, RpcResponse,
-    MAX_FRAME_LEN, WIRE_PROTOCOL_VERSION,
+    admin_ack_json, encode_frame, error_json, overloaded_json, parse_any_request, parse_request,
+    parse_response, read_frame, AdminRequest, FrameError, Request, RpcDefaults, RpcError,
+    RpcResponse, ServerStats, MAX_FRAME_LEN, OVERLOADED_RETRY_AFTER_MS, WIRE_PROTOCOL_VERSION,
 };
 use transfer_tuning::util::rng::Rng;
 
@@ -158,11 +158,13 @@ fn bad_requests_map_to_structured_errors() {
 
 #[test]
 fn admin_ops_parse_and_sessions_stay_sessions() {
-    // Wire schema v4: the `op` field dispatches admin ops; `republish`
-    // additionally accepts `"all":true` in place of `model`; the v4
+    // Wire schema v5: the `op` field dispatches admin ops; `republish`
+    // additionally accepts `"all":true` in place of `model`; the
     // `stats` reply's `server:{}` block carries per-kind eviction
-    // counters (exercised in `integration_rpc.rs`).
-    assert_eq!(WIRE_PROTOCOL_VERSION, 4, "update the admin tests with the protocol");
+    // counters (v4) plus `shed_total` and `quarantined` (v5), and the
+    // `overloaded` error answers requests shed by `--max-queue`
+    // (exercised in `integration_rpc.rs`).
+    assert_eq!(WIRE_PROTOCOL_VERSION, 5, "update the admin tests with the protocol");
     let d = defaults();
     let admin = |line: &str| match parse_any_request(line, &d).unwrap() {
         Request::Admin(a) => a,
@@ -254,4 +256,48 @@ fn error_responses_round_trip() {
     }
     assert!(parse_response("{\"neither\":true}").is_err());
     assert!(parse_response("garbage").is_err());
+}
+
+#[test]
+fn overloaded_frame_shape_is_pinned_and_client_decodable() {
+    // The v5 shed reply, byte-pinned: a structured error whose object
+    // carries the `retry_after_ms` backoff hint alongside code/message.
+    let encoded = overloaded_json(3).to_compact();
+    assert_eq!(
+        encoded,
+        format!(
+            "{{\"error\":{{\"code\":\"overloaded\",\"message\":\"server overloaded: \
+             worker queue full (3 queued); retry later\",\"retry_after_ms\":{OVERLOADED_RETRY_AFTER_MS}}},\
+             \"ok\":false}}"
+        )
+    );
+    // A pre-v5 client's decoder still reads it as a plain typed error —
+    // the extra field is ignored, not a parse failure.
+    match parse_response(&encoded).unwrap() {
+        RpcResponse::Error(e) => {
+            assert_eq!(e.code, "overloaded");
+            assert!(e.message.contains("3 queued"));
+        }
+        other => panic!("expected error response, got {other:?}"),
+    }
+    // A v5 client reads the hint straight off the payload.
+    let j = transfer_tuning::util::json::parse(&encoded).unwrap();
+    let hint = j.get("error").unwrap().get("retry_after_ms").unwrap().as_f64().unwrap();
+    assert_eq!(hint as u64, OVERLOADED_RETRY_AFTER_MS);
+}
+
+#[test]
+fn server_stats_block_carries_v5_gauges() {
+    use std::sync::atomic::Ordering;
+    use transfer_tuning::service::rpc::ServerGauges;
+    // Snapshot picks up the two v5 gauges, and Default keeps them 0 —
+    // a fault-free server reports shed_total:0, quarantined:0.
+    let gauges = ServerGauges::default();
+    gauges.shed_total.store(4, Ordering::SeqCst);
+    gauges.quarantined.store(2, Ordering::SeqCst);
+    let snap = ServerStats::snapshot(&gauges);
+    assert_eq!(snap.shed_total, 4);
+    assert_eq!(snap.quarantined, 2);
+    assert_eq!(ServerStats::default().shed_total, 0);
+    assert_eq!(ServerStats::default().quarantined, 0);
 }
