@@ -17,10 +17,12 @@
 #
 # It also guards the WIRE protocol (PR 3 invariant): rust/src/service/
 # rpc.rs holds the frame format, the request/response/admin schemas,
-# and WIRE_PROTOCOL_VERSION, and rust/src/service/reactor.rs owns the
+# and WIRE_PROTOCOL_VERSION, rust/src/service/reactor.rs owns the
 # byte movement those schemas ride on (framing accumulation, violation
-# replies, close semantics). Any change to either file must, in the
-# same range, update README.md (the documented schemas) AND both
+# replies, close semantics), and rust/src/service/fleet.rs emits wire
+# frames of its own (the stats.fleet block, fleet admin acks, the
+# fleet_unavailable error). Any change to any of these files must, in
+# the same range, update README.md (the documented schemas) AND both
 # protocol test files (rust/tests/rpc_codec.rs,
 # rust/tests/integration_rpc.rs) — or carry a `Wire-Drift: none`
 # trailer for edits that demonstrably leave the bytes on the wire
@@ -53,6 +55,7 @@ CHANGED="$(git diff --name-only "$BASE" HEAD)"
 WIRE_FILES="
 rust/src/service/rpc.rs
 rust/src/service/reactor.rs
+rust/src/service/fleet.rs
 "
 wire_touched=""
 for f in $WIRE_FILES; do

@@ -117,7 +117,7 @@ esac
 [ -n "$RETRY_REPLY" ] || fail "retrying client produced no reply"
 
 STATS="$("$BIN" admin "$ADDR" stats --retries 10)" || fail "stats errored"
-expect_in '"protocol":5' "$STATS" "stats must report wire protocol v5"
+expect_in '"protocol":6' "$STATS" "stats must report wire protocol v6"
 SHED_TOTAL="$(printf '%s' "$STATS" | sed -n 's/.*"shed_total":\([0-9]*\).*/\1/p')"
 [ -n "$SHED_TOTAL" ] || fail "stats carries no shed_total gauge: $STATS"
 [ "$SHED_TOTAL" -ge "$SHED" ] || fail "shed_total=$SHED_TOTAL < observed sheds=$SHED"

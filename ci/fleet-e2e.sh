@@ -1,0 +1,185 @@
+#!/usr/bin/env bash
+# fleet-e2e (CI job `fleet-e2e`): drive a REAL fleet over loopback —
+# two `repro serve` backends plus a `repro fleet` router — end to end:
+#
+#   1. both backends stream the zoo in (same --trials/--seed, so their
+#      stores are deterministically identical), the router consistent-
+#      hash-routes a session to exactly one of them, and the routed
+#      reply is byte-identical to what the backend serves directly;
+#   2. kill -9 the primary mid-run: the router marks it down, rehashes
+#      the key to the surviving replica, and the (warm) reply bytes do
+#      not change — killing one of N changes which instance answers,
+#      never the answer;
+#   3. `repro fleet sync` converges the two cache dirs and republishes
+#      the survivor: the post-sync session differs from the pre-kill
+#      baseline only in its epoch stamp;
+#   4. clean drain: wire `shutdown` stops the router (ack + exit 0),
+#      then the surviving backend.
+#
+# Everything goes through the public operator surface — no test
+# harness, no library calls.
+#
+# Usage: ci/fleet-e2e.sh  (expects target/release/repro to exist;
+# TT_TRIALS tunes the budget, default 16)
+set -euo pipefail
+
+BIN="${BIN:-target/release/repro}"
+TRIALS="${TT_TRIALS:-16}"
+SEED=5
+WORK="$(mktemp -d)"
+PID_A=""
+PID_B=""
+ROUTER_PID=""
+
+cleanup() {
+  for pid in "$PID_A" "$PID_B" "$ROUTER_PID"; do
+    if [ -n "$pid" ] && kill -0 "$pid" 2>/dev/null; then
+      kill -9 "$pid" 2>/dev/null || true
+    fi
+  done
+}
+trap cleanup EXIT
+
+fail() {
+  echo "fleet-e2e: FAIL — $1"
+  for log in "$WORK"/a.log "$WORK"/b.log "$WORK"/router.log; do
+    echo "---- $log ----"
+    cat "$log" 2>/dev/null || true
+  done
+  exit 1
+}
+
+# expect_in "needle" "haystack" "what"
+expect_in() {
+  case "$2" in
+    *"$1"*) ;;
+    *) fail "$3 (missing \`$1\` in: $2)" ;;
+  esac
+}
+
+# start_backend LOG CACHE -> sets STARTED_PID, STARTED_ADDR
+start_backend() {
+  local log="$1" cache="$2"
+  : >"$log"
+  "$BIN" serve --listen 127.0.0.1:0 --trials "$TRIALS" --seed "$SEED" \
+    --shards 2 --cache-dir "$cache" 2>"$log" &
+  STARTED_PID=$!
+  STARTED_ADDR=""
+  for _ in $(seq 1 150); do
+    STARTED_ADDR="$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$log" | head -n1)"
+    [ -n "$STARTED_ADDR" ] && break
+    kill -0 "$STARTED_PID" 2>/dev/null || fail "backend died before binding ($log)"
+    sleep 0.2
+  done
+  [ -n "$STARTED_ADDR" ] || fail "no listen line within 30s ($log)"
+}
+
+wait_zoo() {
+  local log="$1" pid="$2"
+  for _ in $(seq 1 1500); do
+    grep -q "zoo complete" "$log" && return 0
+    kill -0 "$pid" 2>/dev/null || fail "backend died mid-build ($log)"
+    sleep 0.2
+  done
+  fail "zoo never completed ($log)"
+}
+
+echo "== fleet bring-up (trials=$TRIALS) =="
+# Both zoos build concurrently; identical (--trials, --seed) means the
+# stores — and therefore warm session replies — are deterministically
+# identical across the two instances.
+start_backend "$WORK/a.log" "$WORK/cache-a"
+PID_A=$STARTED_PID; ADDR_A=$STARTED_ADDR
+start_backend "$WORK/b.log" "$WORK/cache-b"
+PID_B=$STARTED_PID; ADDR_B=$STARTED_ADDR
+wait_zoo "$WORK/a.log" "$PID_A"
+wait_zoo "$WORK/b.log" "$PID_B"
+echo "backends at $ADDR_A and $ADDR_B"
+
+: >"$WORK/router.log"
+"$BIN" fleet --listen 127.0.0.1:0 --instance "$ADDR_A" --instance "$ADDR_B" \
+  2>"$WORK/router.log" &
+ROUTER_PID=$!
+ROUTER=""
+for _ in $(seq 1 150); do
+  ROUTER="$(sed -n 's/.*routing on \([0-9.:]*\) across.*/\1/p' "$WORK/router.log" | head -n1)"
+  [ -n "$ROUTER" ] && break
+  kill -0 "$ROUTER_PID" 2>/dev/null || fail "router died before binding"
+  sleep 0.2
+done
+[ -n "$ROUTER" ] || fail "router never bound"
+echo "router at $ROUTER"
+
+SESSION='{"model":"ResNet18","budget_s":0}'
+
+echo "== routed session =="
+COLD_REPLY="$("$BIN" call "$ROUTER" "$SESSION")" || fail "routed session errored"
+expect_in '"ok":true' "$COLD_REPLY" "routed session must succeed"
+expect_in '"epoch":11' "$COLD_REPLY" "full 11-model zoo must be live behind the router"
+# Warm baseline: charged 0, and byte-identical whichever replica ever
+# answers (the fleet determinism invariant under test).
+BASE_REPLY="$("$BIN" call "$ROUTER" "$SESSION")" || fail "warm routed session errored"
+expect_in '"charged_search_time_s":0,' "$BASE_REPLY" "second identical session rides the cache"
+
+STATS="$("$BIN" admin "$ROUTER" stats)" || fail "router stats errored"
+expect_in '"protocol":6' "$STATS" "router stats must report wire protocol v6"
+expect_in '"fleet":{"instances":[' "$STATS" "router stats must carry the fleet block"
+expect_in '"unavailable_total":0' "$STATS" "no fleet_unavailable replies yet"
+# Both sessions shared one routing key, so exactly one instance took
+# both forwards; the other took none. The ring told us which without
+# asking — the gauges just confirm it.
+case "$STATS" in
+  *"\"addr\":\"$ADDR_A\",\"up\":true,\"routed\":0"*) PRIMARY="$ADDR_B"; PRIMARY_PID=$PID_B; SURVIVOR="$ADDR_A"; SURVIVOR_PID=$PID_A ;;
+  *"\"addr\":\"$ADDR_B\",\"up\":true,\"routed\":0"*) PRIMARY="$ADDR_A"; PRIMARY_PID=$PID_A; SURVIVOR="$ADDR_B"; SURVIVOR_PID=$PID_B ;;
+  *) fail "stats must show one idle replica (got: $STATS)" ;;
+esac
+echo "primary is $PRIMARY, survivor is $SURVIVOR"
+
+# The routed bytes are the primary's bytes, untouched.
+DIRECT_REPLY="$("$BIN" call "$PRIMARY" "$SESSION")" || fail "direct primary call errored"
+[ "$DIRECT_REPLY" = "$BASE_REPLY" ] || fail "router altered the primary's reply bytes"
+
+echo "== kill the primary mid-run =="
+kill -9 "$PRIMARY_PID"
+if [ "$PRIMARY_PID" = "$PID_A" ]; then PID_A=""; else PID_B=""; fi
+# First post-kill call warms the survivor's session cache; the second
+# is the byte-identity check: warm-vs-warm, identical stores — the
+# rehash changed the answering instance and nothing else.
+"$BIN" call "$ROUTER" "$SESSION" >/dev/null || fail "post-kill session errored"
+POST_KILL="$("$BIN" call "$ROUTER" "$SESSION")" || fail "post-kill warm session errored"
+[ "$POST_KILL" = "$BASE_REPLY" ] \
+  || fail "killing the primary changed reply bytes, not just the answering instance"
+STATS="$("$BIN" admin "$ROUTER" stats)" || fail "post-kill stats errored"
+expect_in "\"addr\":\"$PRIMARY\",\"up\":false" "$STATS" "dead primary must be marked down"
+expect_in '"unavailable_total":0' "$STATS" "one live replica means no fleet_unavailable"
+
+echo "== fleet sync + republish the survivor =="
+SYNC_OUT="$("$BIN" fleet sync "$WORK/cache-a" "$WORK/cache-b" --instance "$SURVIVOR")" \
+  || fail "fleet sync errored"
+expect_in '[fleet] sync: 2 stores converged over 2 ordered pairs' "$SYNC_OUT" \
+  "sync must report pairwise convergence"
+expect_in '0 conflicts, 0 rejected' "$SYNC_OUT" "identical zoos can never conflict"
+expect_in '"ok":true' "$SYNC_OUT" "post-sync republish --all must succeed"
+expect_in '"models":11' "$SYNC_OUT" "republish --all must cover all 11 models"
+expect_in '"first_epoch":12' "$SYNC_OUT" "serial republish must start at epoch 12"
+expect_in '"epoch":22' "$SYNC_OUT" "11 consecutive epochs must end at 22"
+
+# Post-sync convergence: the routed session differs from the pre-kill
+# baseline only in its epoch stamp.
+POST_SYNC="$("$BIN" call "$ROUTER" "$SESSION")" || fail "post-sync session errored"
+EXPECT_SYNC="$(printf '%s' "$BASE_REPLY" | sed 's/"epoch":11/"epoch":22/')"
+[ "$POST_SYNC" = "$EXPECT_SYNC" ] \
+  || fail "sync + republish changed more than the epoch stamp of an identical session"
+
+echo "== clean drain =="
+ACK="$("$BIN" admin "$ROUTER" shutdown)" || fail "router shutdown RPC errored"
+expect_in '"fleet":true' "$ACK" "router must ack shutdown with the fleet marker"
+wait "$ROUTER_PID" || fail "router exited non-zero after shutdown RPC"
+ROUTER_PID=""
+grep -q "shutdown complete" "$WORK/router.log" || fail "router did not drain cleanly"
+
+"$BIN" admin "$SURVIVOR" shutdown | grep -q '"ok":true' || fail "survivor shutdown refused"
+wait "$SURVIVOR_PID" || fail "survivor exited non-zero after shutdown RPC"
+if [ "$SURVIVOR_PID" = "${PID_A:-}" ]; then PID_A=""; else PID_B=""; fi
+
+echo "fleet-e2e: OK"

@@ -95,7 +95,7 @@ expect_in '"models_tuned":11' "$STATS" "cold run tunes all 11 models"
 # an empty queue, zero evictions, zero shed requests, and zero
 # quarantined crash residue on a healthy server) and per-source record
 # counts.
-expect_in '"protocol":5' "$STATS" "stats must report wire protocol v5"
+expect_in '"protocol":6' "$STATS" "stats must report wire protocol v6"
 expect_in '"server":{"connections":1,"queue_depth":0,"evicted_idle":0,"evicted_read_stall":0,"evicted_write_stall":0,"shed_total":0,"quarantined":0}' "$STATS" \
   "stats must report the live connection/queue/eviction/shed gauges"
 expect_in '"source_records":{' "$STATS" "stats must report per-source record counts"

@@ -116,7 +116,12 @@ fn main() {
         idle_timeout: Duration::from_secs(600),
         ..ServerConfig::default()
     };
-    let server = RpcServer::start_with_config("127.0.0.1:0", service, d, admin, config, gauges)
+    let server = RpcServer::builder()
+        .defaults(d)
+        .admin(admin)
+        .config(config)
+        .gauges(gauges)
+        .start("127.0.0.1:0", service)
         .expect("bind");
     let addr = server.local_addr();
     let gauges = server.gauges();

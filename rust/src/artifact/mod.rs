@@ -754,6 +754,62 @@ impl ArtifactStore {
     }
 }
 
+/// What one [`sync_stores`] pass did: the [`MergeReport`] totals summed
+/// over every ordered (destination, source) pair, plus the pass shape.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SyncReport {
+    /// Store directories visited (each flushed once).
+    pub stores: usize,
+    /// Ordered pairs merged (`stores * (stores - 1)`).
+    pub pairs: usize,
+    pub added: usize,
+    pub caches_unioned: usize,
+    pub identical: usize,
+    pub conflicts: usize,
+    pub rejected: usize,
+}
+
+/// Converge a fleet's artifact directories to their union: every store
+/// [`ArtifactStore::merge_from`]s every *other* directory, in index
+/// order. Because each destination is flushed before it is read as a
+/// source, one pass suffices — store 0 absorbs all peers and becomes
+/// the union, and every later store absorbs store 0. This is the
+/// `repro fleet sync` primitive: after it, every instance restarted (or
+/// `republish --all`ed) over its own `--cache-dir` serves the same
+/// artifact set, so epoch-stamped replies agree across the fleet.
+///
+/// Merging is crash-safe and skip-and-count per entry (see
+/// [`ArtifactStore::merge_from`]); a missing or typo'd directory is an
+/// error before anything is touched.
+pub fn sync_stores(roots: &[PathBuf]) -> anyhow::Result<SyncReport> {
+    anyhow::ensure!(roots.len() >= 2, "fleet sync needs at least two cache dirs");
+    for root in roots {
+        anyhow::ensure!(
+            root.join("manifest.json").is_file(),
+            "{} is not an artifact store (no manifest.json)",
+            root.display()
+        );
+    }
+    let mut report = SyncReport { stores: roots.len(), ..SyncReport::default() };
+    for (i, dst_root) in roots.iter().enumerate() {
+        let mut dst = ArtifactStore::open(dst_root)?;
+        for (j, src_root) in roots.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let m = dst.merge_from(src_root)?;
+            report.pairs += 1;
+            report.added += m.added;
+            report.caches_unioned += m.caches_unioned;
+            report.identical += m.identical;
+            report.conflicts += m.conflicts;
+            report.rejected += m.rejected;
+        }
+        dst.flush()?;
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

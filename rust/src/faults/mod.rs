@@ -36,8 +36,11 @@
 //! | `io.write`       | artifact payload/manifest temp write torn mid-file     |
 //! | `persist.rename` | temp file written + synced, commit rename never happens|
 //! | `rpc.accept`     | accepted connection dropped before registration        |
-//! | `rpc.read`       | connection read errors (peer torn away)                |
-//! | `rpc.write`      | connection write errors (reply lost mid-flush)         |
+//! | `rpc.read`       | connection read errors (peer torn away) — fires on     |
+//! |                  | the server, the thin client, and the fleet router's    |
+//! |                  | forwarding link (a flaky backend link is rehearsable)  |
+//! | `rpc.write`      | connection write errors (reply lost mid-flush) — same  |
+//! |                  | three vantage points as `rpc.read`                     |
 //! | `measure.pair`   | one pair's measurement lost (`PairOutcome::Failed`)    |
 //! | `rpc.handler`    | handler latency (use `delay=MS`; makes overload        |
 //! |                  | deterministic in tests)                                |

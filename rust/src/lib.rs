@@ -36,9 +36,11 @@
 //!   and bit-replayable, without ever entering artifact keys.
 //! * [`service`] — multi-tenant serving: one shared zoo behind an
 //!   `Arc`, a sharded measurement cache, a deterministic session API
-//!   (`open_session`) answering concurrent schedule requests, and the
+//!   (`open_session`) answering concurrent schedule requests, the
 //!   event-driven RPC front end (epoll reactor + timer wheel) that
-//!   serves thousands of connections from one event-loop thread.
+//!   serves thousands of connections from one event-loop thread, and
+//!   the fleet router (`service::fleet`) that consistent-hash-routes
+//!   sessions over multiple serve instances as a transparent proxy.
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas/JAX
 //!   artifacts (the *real* hot path; Python is never on it).
 //! * [`report`] — regenerates every table and figure of the paper.

@@ -114,6 +114,9 @@ struct Cli {
     fault_plan: Option<String>,
     /// `repro admin ADDR republish --all`: republish every zoo model.
     all: bool,
+    /// `repro fleet`: backend serve addresses, one `--instance` flag
+    /// each. The router hashes them as a *set* — order never matters.
+    instances: Vec<String>,
 }
 
 fn parse_args() -> Result<Cli> {
@@ -147,6 +150,7 @@ fn parse_args() -> Result<Cli> {
         retries: 0,
         fault_plan: None,
         all: false,
+        instances: Vec::new(),
     };
     while let Some(arg) = args.next() {
         let mut value = |name: &str| -> Result<String> {
@@ -215,6 +219,7 @@ fn parse_args() -> Result<Cli> {
             "--retries" => cli.retries = value("--retries")?.parse()?,
             "--fault-plan" => cli.fault_plan = Some(value("--fault-plan")?),
             "--all" => cli.all = true,
+            "--instance" => cli.instances.push(value("--instance")?),
             other if !other.starts_with("--") => {
                 if cli.target.is_none() {
                     cli.target = Some(other.to_string());
@@ -654,7 +659,7 @@ fn cmd_all(cli: &Cli) -> Result<()> {
 /// warmed is persisted back.
 fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
     use transfer_tuning::service::rpc::{parse_request, RpcDefaults};
-    use transfer_tuning::service::{ScheduleService, SessionReply, SessionRequest};
+    use transfer_tuning::service::{ServiceOptions, SessionReply, SessionRequest};
 
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading request file {}", path.display()))?;
@@ -677,8 +682,8 @@ fn cmd_serve_requests(cli: &Cli, path: &Path) -> Result<()> {
     let mut artifacts = open_artifacts(cli)?;
     let zoo = build_zoo_with(cli, artifacts.as_mut());
     let zoo_key = zoo.artifact_key();
-    let service =
-        ScheduleService::from_zoo(zoo, cli.shards).with_speculative_keep(cli.speculative_keep);
+    let service = ServiceOptions { speculative_keep: Some(cli.speculative_keep), cost_model: None }
+        .service_from_zoo(zoo, cli.shards);
 
     // Fan sessions across workers; replies land in request order.
     // Worker count follows the --jobs/TT_JOBS knob (host-parallelism
@@ -838,7 +843,7 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
     use transfer_tuning::service::rpc::{
         self as rpc, AdminRequest, RpcDefaults, RpcError, RpcServer,
     };
-    use transfer_tuning::service::ScheduleService;
+    use transfer_tuning::service::ServiceOptions;
     use transfer_tuning::util::json::Json;
 
     sig::install();
@@ -887,9 +892,11 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
             cost_prior.content_hash()
         );
     }
-    let service = ScheduleService::empty_with_cache(&warm_cache, cli.shards)
-        .with_speculative_keep(cli.speculative_keep)
-        .with_cost_model(cost_prior);
+    let options = ServiceOptions {
+        speculative_keep: Some(cli.speculative_keep),
+        cost_model: Some(cost_prior),
+    };
+    let service = options.service_with_cache(&warm_cache, cli.shards);
     let defaults = RpcDefaults { device: cli.device.clone(), seed: cli.seed };
 
     let state = Arc::new(ServeState {
@@ -1014,14 +1021,12 @@ fn cmd_serve_rpc(cli: &Cli, bind: &str) -> Result<()> {
             );
         }
     }
-    let server = RpcServer::start_with_config(
-        bind,
-        service.clone(),
-        defaults,
-        admin,
-        server_config,
-        gauges,
-    )?;
+    let server = RpcServer::builder()
+        .defaults(defaults)
+        .config(server_config)
+        .admin(admin)
+        .gauges(gauges)
+        .start(bind, service.clone())?;
     eprintln!(
         "[rpc] listening on {} (epoch 0; sources stream in as tunings land)",
         server.local_addr()
@@ -1180,8 +1185,20 @@ fn rpc_roundtrip(addr: &str, line: &str) -> Result<String> {
 
     let mut stream = std::net::TcpStream::connect(addr)
         .with_context(|| format!("connecting to {addr}"))?;
+    // Client-half fault sites (the server's reactor has its own): a
+    // `--fault-plan` here rehearses a flaky client→server link. Injected
+    // errors are ErrorKind::Other — NOT transient by the retry contract
+    // — so a faulted run fails deterministically instead of retrying.
+    if transfer_tuning::faults::should_fail("rpc.write") {
+        return Err(anyhow::Error::new(transfer_tuning::faults::io_error("rpc.write")))
+            .context("sending request frame");
+    }
     let frame = rpc::encode_frame(line).map_err(|e| anyhow::anyhow!("encoding request: {e}"))?;
     stream.write_all(&frame).context("sending request frame")?;
+    if transfer_tuning::faults::should_fail("rpc.read") {
+        return Err(anyhow::Error::new(transfer_tuning::faults::io_error("rpc.read")))
+            .context("reading response frame");
+    }
     rpc::read_frame(&mut stream).map_err(|e| match e {
         rpc::FrameError::Io(io) => anyhow::Error::new(io).context("reading response frame"),
         other => anyhow::anyhow!("reading response frame: {other}"),
@@ -1205,13 +1222,15 @@ fn transient_io(e: &anyhow::Error) -> bool {
     })
 }
 
-/// If `payload` is the v5 `overloaded` error, its `retry_after_ms`
-/// hint (defaulted when absent); `None` for every other payload —
-/// success or not, no other in-band error is retryable.
+/// If `payload` is a retryable in-band refusal — the `overloaded`
+/// error, or a fleet router's `fleet_unavailable` (wire v6) — its
+/// `retry_after_ms` hint (defaulted when absent); `None` for every
+/// other payload. Both codes mean the request never reached a worker;
+/// no other in-band error is retryable.
 fn overloaded_hint_ms(payload: &str) -> Option<u64> {
     let j = transfer_tuning::util::json::parse(payload).ok()?;
     let err = j.get("error")?;
-    if err.get("code")?.as_str()? != "overloaded" {
+    if !matches!(err.get("code")?.as_str()?, "overloaded" | "fleet_unavailable") {
         return None;
     }
     Some(
@@ -1330,6 +1349,97 @@ fn cmd_admin(cli: &Cli) -> Result<()> {
         other => bail!("unknown admin op `{other}` ({USAGE})"),
     };
     emit_rpc_payload(&rpc_roundtrip_retrying(&addr, &line, cli.retries)?)
+}
+
+/// `repro fleet`: consistent-hash routing over multiple serve
+/// instances, plus the sync verb that converges their artifact state.
+///
+/// * `repro fleet --listen ADDR --instance ADDR...` — run the router: a
+///   transparent proxy that hashes each session's `(model, device)`
+///   pair onto a ring of the instances and forwards frames verbatim
+///   (see `transfer_tuning::service::fleet`). `overloaded` replies
+///   redirect to the next replica; connect/forward failures rehash to
+///   the successor and probe the downed instance on seeded backoff.
+/// * `repro fleet sync DIR... [--instance ADDR...]` — converge the
+///   instances' `--cache-dir`s to their union (all-ordered-pairs
+///   `merge_from`), then ask each `--instance` to `republish --all` so
+///   the reconciled artifacts go live at consecutive epochs.
+fn cmd_fleet(cli: &Cli) -> Result<()> {
+    use transfer_tuning::service::fleet::{FleetConfig, FleetRouter};
+    use transfer_tuning::util::json::Json;
+
+    if cli.target.as_deref() == Some("sync") {
+        anyhow::ensure!(
+            cli.rest.len() >= 2,
+            "usage: repro fleet sync DIR DIR... [--instance ADDR...]"
+        );
+        let roots: Vec<PathBuf> = cli.rest.iter().map(PathBuf::from).collect();
+        let report = transfer_tuning::artifact::sync_stores(&roots)?;
+        println!(
+            "[fleet] sync: {} stores converged over {} ordered pairs ({} added, {} caches \
+             unioned, {} identical, {} conflicts, {} rejected)",
+            report.stores,
+            report.pairs,
+            report.added,
+            report.caches_unioned,
+            report.identical,
+            report.conflicts,
+            report.rejected,
+        );
+        let republish = Json::obj(vec![("op", Json::str("republish")), ("all", Json::Bool(true))])
+            .to_compact();
+        for addr in &cli.instances {
+            let payload = rpc_roundtrip_retrying(addr, &republish, cli.retries)
+                .with_context(|| format!("republish --all on {addr}"))?;
+            println!("[fleet] {addr}: {payload}");
+        }
+        return Ok(());
+    }
+    anyhow::ensure!(
+        cli.target.is_none(),
+        "unknown fleet verb `{}` (usage: repro fleet --listen ADDR --instance ADDR... \
+         | repro fleet sync DIR DIR...)",
+        cli.target.as_deref().unwrap_or_default()
+    );
+    let bind = cli
+        .listen
+        .as_deref()
+        .context("usage: repro fleet --listen ADDR --instance ADDR...")?;
+    anyhow::ensure!(
+        !cli.instances.is_empty(),
+        "repro fleet needs at least one --instance ADDR backend"
+    );
+
+    sig::install();
+    let mut config = FleetConfig::default();
+    if cli.max_conns > 0 {
+        config.server.max_conns = cli.max_conns;
+    }
+    if cli.idle_timeout_s > 0 {
+        config.server.idle_timeout = std::time::Duration::from_secs(cli.idle_timeout_s);
+    }
+    if cli.read_stall_s > 0 {
+        config.server.read_stall = std::time::Duration::from_secs(cli.read_stall_s);
+    }
+    if cli.write_stall_s > 0 {
+        config.server.write_stall = std::time::Duration::from_secs(cli.write_stall_s);
+    }
+    config.server.max_queue = cli.max_queue;
+    let router = FleetRouter::start(bind, &cli.instances, config)?;
+    eprintln!(
+        "[fleet] routing on {} across {} instance(s): {}",
+        router.local_addr(),
+        router.ring().len(),
+        router.ring().instances().join(", ")
+    );
+    while !sig::triggered() && !router.stop_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    eprintln!("[fleet] shutting down: draining connections");
+    eprintln!("[fleet] final stats: {}", router.stats().to_compact());
+    router.shutdown();
+    eprintln!("[fleet] shutdown complete");
+    Ok(())
 }
 
 /// `repro cache gc|merge|stats`: offline artifact-store lifecycle.
@@ -1544,6 +1654,21 @@ COMMANDS
                               at consecutive epochs
   admin ADDR shutdown         drain connections, persist the warmed cache
                               (SIGINT/SIGTERM run the same teardown)
+  fleet --listen ADDR --instance ADDR...
+                              consistent-hash router over N serve
+                              instances: sessions hash by (model, device)
+                              onto a virtual-node ring and are forwarded
+                              verbatim (replies byte-identical to a direct
+                              backend call); `overloaded` redirects to the
+                              next replica, a dead instance rehashes to
+                              its successor (seeded backoff probes);
+                              `admin ADDR stats` on the router reports the
+                              wire-v6 `fleet` block
+  fleet sync DIR... [--instance ADDR...]
+                              converge instance cache-dirs to their union
+                              (pairwise merge_from), then `republish
+                              --all` on each --instance so the reconciled
+                              artifacts go live
   cache gc --cache-dir D --cache-budget BYTES
                               shrink an artifact dir to BYTES (LRU first;
                               live-pinned artifacts never evicted)
@@ -1588,9 +1713,13 @@ FLAGS
                   error (with a retry_after_ms hint) instead of
                   queueing — the connection stays healthy. 0 (default)
                   = unbounded
+  --instance ADDR `fleet` only (repeatable): a backend serve instance.
+                  The router hashes the instance SET — flag order and
+                  duplicates never change placement
   --retries N     `call`/`admin` only: retry transient failures —
-                  connect refused, timeout, `overloaded` — up to N
-                  times with deterministic jittered exponential
+                  connect refused, timeout, `overloaded`,
+                  `fleet_unavailable` — up to N times with
+                  deterministic jittered exponential
                   backoff (honoring the server's retry_after_ms hint).
                   In-band application errors are never retried.
                   Default 0 (one attempt)
@@ -1640,7 +1769,9 @@ fn main() -> Result<()> {
     // Only the client/lifecycle commands take positionals beyond the
     // first; anywhere else a stray one is a typo (e.g. a flag value
     // with its `--flag` forgotten) that must not be silently ignored.
-    if !cli.rest.is_empty() && !matches!(cli.command.as_str(), "call" | "admin" | "cache") {
+    if !cli.rest.is_empty()
+        && !matches!(cli.command.as_str(), "call" | "admin" | "cache" | "fleet")
+    {
         bail!(
             "unexpected argument `{}` for `repro {}` (see `repro help`)",
             cli.rest[0],
@@ -1674,6 +1805,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&cli),
         "call" => cmd_call(&cli),
         "admin" => cmd_admin(&cli),
+        "fleet" => cmd_fleet(&cli),
         "cache" => cmd_cache(&cli),
         "show-schedule" => cmd_show_schedule(&cli),
         "all" => cmd_all(&cli),

@@ -1,0 +1,661 @@
+//! Fleet serving: a consistent-hash router over N backend serve
+//! instances (`repro fleet --listen ADDR --instance ADDR...`).
+//!
+//! The paper's value proposition is amortization — schedules tuned once
+//! are reused across models (Transfer-Tuning §1) — so a production
+//! deployment serves one shared zoo to many tenants. PR 7's reactor
+//! made a *single* instance scale to thousands of connections; this
+//! module is the layer above it: a router process that spreads the
+//! session keyspace across a fleet of those instances and keeps the
+//! end-to-end determinism invariant intact.
+//!
+//! **Placement.** Requests are routed by their `(model, device)` pair —
+//! the two request fields that select which schedules a session sweeps.
+//! The pair is hashed onto a [`HashRing`] of [`VNODES_PER_INSTANCE`]
+//! FNV-derived virtual nodes per instance. The ring is built over the
+//! *sorted, deduplicated* instance list, so placement is a pure
+//! function of the instance *set*: reordering `--instance` flags (or
+//! restarting the router) never moves a key.
+//!
+//! **Transparency.** The router is a v5+ proxy: a forwarded reply is
+//! returned to the client byte-for-byte as the backend produced it
+//! (both sides speak [`rpc::encode_frame`] framing). Combined with the
+//! service determinism invariant — replies are pure in (target, device,
+//! budget, seed, epoch) — a routed session is bit-identical to the same
+//! request against a single instance over the union of the fleet's
+//! sources at the same epoch. `rust/tests/fleet.rs` pins this.
+//!
+//! **Failure handling.** Two signals demote an instance, both
+//! deterministic in what the client observes:
+//!
+//! * A typed `overloaded` reply is a *redirect*: the router tries the
+//!   key's next ring successor. Only if every candidate is shedding
+//!   does the client see the (last) `overloaded` reply — the backoff
+//!   hint then reflects a genuinely saturated fleet.
+//! * A connect/forward I/O failure marks the instance *down*: the
+//!   request rehashes to the successor (deterministically — the ring
+//!   order for a key is fixed), and the instance is probed again only
+//!   after a seeded exponential backoff ([`PROBE_BASE_MS`], jitter
+//!   derived from FNV of the address, no wall-clock randomness). When
+//!   every candidate is down the client gets the v6 `fleet_unavailable`
+//!   error.
+//!
+//! **Convergence.** The router moves bytes, never artifacts. Epoch
+//! reconciliation across the fleet is driven out-of-band by
+//! `repro fleet sync`, which pairwise [`ArtifactStore::merge_from`]s
+//! the instances' cache dirs (see [`crate::artifact::sync_stores`]) and
+//! then issues `republish --all` per instance — after which every
+//! instance answers epoch-stamped-identical sessions.
+//!
+//! [`ArtifactStore::merge_from`]: crate::artifact::ArtifactStore::merge_from
+
+use super::reactor::{self, Reactor, ReactorConfig, ServerGauges, ShedHook};
+use super::rpc::{
+    self, admin_ack_json, error_json, overloaded_json, RpcError, ServerStats, MAX_FRAME_LEN,
+    WIRE_PROTOCOL_VERSION,
+};
+use crate::ir::workload::fnv1a;
+use crate::util::json::{self, Json};
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per instance on the ring. Enough that the keyspace
+/// split stays near-uniform for small fleets (the deployment target is
+/// 2–16 instances), small enough that ring construction and successor
+/// walks are trivially cheap.
+pub const VNODES_PER_INSTANCE: usize = 64;
+
+/// First-retry delay after an instance is marked down. Doubles per
+/// consecutive failure (capped at [`PROBE_MAX_MS`]), plus a
+/// deterministic jitter seeded from the instance address — probes
+/// de-synchronize across routers without any wall-clock randomness.
+pub const PROBE_BASE_MS: u64 = 500;
+
+/// Ceiling on the down-instance probe backoff.
+pub const PROBE_MAX_MS: u64 = 8_000;
+
+/// The routing key of a request payload: the `(model, device)` pair
+/// that selects which schedules a session sweeps, joined on a unit
+/// separator (neither field may contain control characters, so the
+/// pairing is injective). A missing field keys as the empty string —
+/// requests the backends will reject still route deterministically.
+/// A payload that is not JSON keys as itself: any backend answers it
+/// with the same `bad_json` error, so transparency holds regardless.
+pub fn routing_key(payload: &str) -> String {
+    match json::parse(payload) {
+        Ok(j) => {
+            let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("");
+            let device = j.get("device").and_then(|v| v.as_str()).unwrap_or("");
+            format!("{model}\u{1f}{device}")
+        }
+        Err(_) => payload.to_string(),
+    }
+}
+
+/// A consistent-hash ring over an instance set. Construction sorts and
+/// dedups the addresses, so two rings over the same *set* of instances
+/// are identical regardless of the order the `--instance` flags came
+/// in — the placement stability the fleet determinism test pins.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    instances: Vec<String>,
+    /// `(point_hash, instance_index)`, sorted. The index tiebreak makes
+    /// the walk order total even under (astronomically unlikely) hash
+    /// collisions.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    pub fn new(instances: &[String]) -> HashRing {
+        let mut instances: Vec<String> = instances.to_vec();
+        instances.sort();
+        instances.dedup();
+        let mut points = Vec::with_capacity(instances.len() * VNODES_PER_INSTANCE);
+        for (idx, inst) in instances.iter().enumerate() {
+            for vnode in 0..VNODES_PER_INSTANCE {
+                points.push((fnv1a(format!("{inst}#{vnode}").as_bytes()), idx));
+            }
+        }
+        points.sort_unstable();
+        HashRing { instances, points }
+    }
+
+    /// The sorted, deduplicated instance addresses (ring order).
+    pub fn instances(&self) -> &[String] {
+        &self.instances
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Total virtual-node points on the ring.
+    pub fn points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Every instance index that can serve `key`, in deterministic
+    /// failover order: the clockwise successor walk from the key's hash,
+    /// keeping the first occurrence of each instance. The first element
+    /// is the key's primary; killing it promotes exactly the second —
+    /// rehash is a pop, never a reshuffle.
+    pub fn candidates(&self, key: &str) -> Vec<usize> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let h = fnv1a(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.instances.len()];
+        let mut order = Vec::with_capacity(self.instances.len());
+        for i in 0..self.points.len() {
+            let (_, idx) = self.points[(start + i) % self.points.len()];
+            if !seen[idx] {
+                seen[idx] = true;
+                order.push(idx);
+                if order.len() == self.instances.len() {
+                    break;
+                }
+            }
+        }
+        order
+    }
+
+    /// The key's primary instance index.
+    pub fn primary(&self, key: &str) -> Option<usize> {
+        self.candidates(key).first().copied()
+    }
+}
+
+/// Forwarding-side knobs (the listening side reuses
+/// [`rpc::ServerConfig`]).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Backend connect deadline; expiry (or refusal) marks the instance
+    /// down.
+    pub connect_timeout: Duration,
+    /// Per-forward read/write deadline on the backend socket.
+    pub forward_timeout: Duration,
+    /// Listening-side knobs, identical semantics to a backend server's.
+    pub server: rpc::ServerConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            connect_timeout: Duration::from_millis(1_000),
+            forward_timeout: Duration::from_secs(60),
+            server: rpc::ServerConfig::default(),
+        }
+    }
+}
+
+/// Per-instance routing/health state (one [`Mutex`]'d vector, indexed
+/// like [`HashRing::instances`]).
+#[derive(Clone, Debug)]
+struct Health {
+    up: bool,
+    /// Consecutive forward failures (resets on success; drives the
+    /// probe backoff exponent).
+    consecutive_failures: u32,
+    /// When a down instance may next be probed (None while up).
+    next_probe_at: Option<Instant>,
+    /// Cumulative replies forwarded from this instance.
+    routed: u64,
+    /// Cumulative `overloaded` redirects away from this instance.
+    redirects: u64,
+    /// Cumulative down transitions + failed probes.
+    down_marks: u64,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health {
+            up: true,
+            consecutive_failures: 0,
+            next_probe_at: None,
+            routed: 0,
+            redirects: 0,
+            down_marks: 0,
+        }
+    }
+}
+
+/// A point-in-time copy of one instance's gauges, for the `fleet`
+/// stats block (pure data so [`fleet_stats_json`] stays testable).
+#[derive(Clone, Debug)]
+pub struct InstanceStats {
+    pub addr: String,
+    pub up: bool,
+    pub routed: u64,
+    pub redirects: u64,
+    pub down_marks: u64,
+}
+
+/// Encode the router's `stats` reply (wire v6): the fleet's ring shape
+/// and per-instance routing/health gauges, plus the router's own
+/// reactor gauges in the usual `server` block. A router serves no
+/// sessions itself, so the backend blocks (`epoch`, `sources`, `cache`,
+/// ...) are absent — `fleet` is the discriminator.
+pub fn fleet_stats_json(
+    instances: &[InstanceStats],
+    ring_points: usize,
+    unavailable_total: u64,
+    server: ServerStats,
+) -> Json {
+    let rows = instances.iter().map(|i| {
+        Json::obj(vec![
+            ("addr", Json::str(i.addr.as_str())),
+            ("up", Json::Bool(i.up)),
+            ("routed", Json::num(i.routed as f64)),
+            ("redirects", Json::num(i.redirects as f64)),
+            ("down_marks", Json::num(i.down_marks as f64)),
+        ])
+    });
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("protocol", Json::num(WIRE_PROTOCOL_VERSION as f64)),
+                (
+                    "fleet",
+                    Json::obj(vec![
+                        ("instances", Json::arr(rows)),
+                        ("ring_points", Json::num(ring_points as f64)),
+                        ("unavailable_total", Json::num(unavailable_total as f64)),
+                    ]),
+                ),
+                (
+                    "server",
+                    Json::obj(vec![
+                        ("connections", Json::num(server.connections as f64)),
+                        ("queue_depth", Json::num(server.queue_depth as f64)),
+                        ("evicted_idle", Json::num(server.evicted_idle as f64)),
+                        ("evicted_read_stall", Json::num(server.evicted_read_stall as f64)),
+                        ("evicted_write_stall", Json::num(server.evicted_write_stall as f64)),
+                        ("shed_total", Json::num(server.shed_total as f64)),
+                        ("quarantined", Json::num(server.quarantined as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
+}
+
+struct FleetState {
+    ring: HashRing,
+    health: Mutex<Vec<Health>>,
+    config: FleetConfig,
+    stop: AtomicBool,
+    /// Requests answered with `fleet_unavailable` (every candidate
+    /// down).
+    unavailable_total: AtomicUsize,
+}
+
+impl FleetState {
+    /// Whether a forward to instance `idx` may be attempted now: always
+    /// while up; while down, only once the probe deadline has passed
+    /// (the attempt *is* the probe).
+    fn attempt_allowed(&self, idx: usize, now: Instant) -> bool {
+        let health = self.health.lock().expect("fleet health");
+        let h = &health[idx];
+        h.up || h.next_probe_at.map_or(true, |at| at <= now)
+    }
+
+    fn note_success(&self, idx: usize) {
+        let mut health = self.health.lock().expect("fleet health");
+        let h = &mut health[idx];
+        h.up = true;
+        h.consecutive_failures = 0;
+        h.next_probe_at = None;
+        h.routed += 1;
+    }
+
+    fn note_redirect(&self, idx: usize) {
+        self.health.lock().expect("fleet health")[idx].redirects += 1;
+    }
+
+    fn note_failure(&self, idx: usize, now: Instant) {
+        let mut health = self.health.lock().expect("fleet health");
+        let h = &mut health[idx];
+        h.up = false;
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        h.down_marks += 1;
+        let backoff =
+            (PROBE_BASE_MS << (h.consecutive_failures - 1).min(4)).min(PROBE_MAX_MS);
+        // Deterministic de-synchronization: seeded from the address and
+        // the failure count, never from the wall clock.
+        let seed = fnv1a(self.ring.instances()[idx].as_bytes())
+            ^ u64::from(h.consecutive_failures);
+        let jitter = seed % (backoff / 4 + 1);
+        h.next_probe_at = Some(now + Duration::from_millis(backoff + jitter));
+    }
+
+    fn instance_stats(&self) -> Vec<InstanceStats> {
+        let health = self.health.lock().expect("fleet health");
+        self.ring
+            .instances()
+            .iter()
+            .zip(health.iter())
+            .map(|(addr, h)| InstanceStats {
+                addr: addr.clone(),
+                up: h.up,
+                routed: h.routed,
+                redirects: h.redirects,
+                down_marks: h.down_marks,
+            })
+            .collect()
+    }
+}
+
+/// One frame round-trip to a backend: connect, send, read the reply
+/// payload. Any failure is an `io::Error` — the caller's signal to mark
+/// the instance down and rehash. The `rpc.write`/`rpc.read` fault sites
+/// fire on the *client* half here (the backend's reactor has its own),
+/// so a fleet smoke test can rehearse a flaky backend link
+/// deterministically with `--fault-plan`.
+fn forward(addr: &str, payload: &str, config: &FleetConfig) -> std::io::Result<String> {
+    let sock: SocketAddr = addr
+        .parse()
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, format!("{e}")))?;
+    let mut stream = TcpStream::connect_timeout(&sock, config.connect_timeout)?;
+    stream.set_read_timeout(Some(config.forward_timeout))?;
+    stream.set_write_timeout(Some(config.forward_timeout))?;
+    let _ = stream.set_nodelay(true);
+    if crate::faults::should_fail("rpc.write") {
+        return Err(crate::faults::io_error("rpc.write"));
+    }
+    crate::faults::sleep_site("rpc.write");
+    let frame = rpc::encode_frame(payload)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    stream.write_all(&frame)?;
+    if crate::faults::should_fail("rpc.read") {
+        return Err(crate::faults::io_error("rpc.read"));
+    }
+    crate::faults::sleep_site("rpc.read");
+    match rpc::read_frame(&mut stream) {
+        Ok(reply) => Ok(reply),
+        Err(rpc::FrameError::Io(e)) => Err(e),
+        Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+    }
+}
+
+/// Whether a backend reply is the typed `overloaded` error (the
+/// redirect signal — never forwarded while another replica can answer).
+fn is_overloaded(reply: &str) -> bool {
+    let Ok(j) = json::parse(reply) else {
+        return false;
+    };
+    let code = j.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+    code == Some("overloaded")
+}
+
+/// Route one request payload: admin intercept, then the candidate walk.
+/// Returns the reply payload (forwarded verbatim, or a router-local
+/// frame for `stats`/`shutdown`/terminal failures).
+fn route(state: &Arc<FleetState>, payload: &str) -> String {
+    crate::faults::sleep_site("rpc.handler");
+    // Admin ops address the *router*: `stats` reports the fleet block,
+    // `shutdown` drains this process. State-changing backend ops are
+    // refused — artifact state must converge via `fleet sync`, not via
+    // a republish that lands on whichever replica a key hashes to.
+    if let Ok(j) = json::parse(payload) {
+        if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
+            match op {
+                "session" => {}
+                "stats" => {
+                    return fleet_stats_json(
+                        &state.instance_stats(),
+                        state.ring.points(),
+                        state.unavailable_total.load(Ordering::Relaxed) as u64,
+                        ServerStats::default(),
+                    )
+                    .to_compact();
+                }
+                "shutdown" => {
+                    state.stop.store(true, Ordering::SeqCst);
+                    return admin_ack_json("shutdown", vec![("fleet", Json::Bool(true))])
+                        .to_compact();
+                }
+                other => {
+                    return error_json(&RpcError::new(
+                        "unknown_op",
+                        format!(
+                            "fleet router forwards sessions only; run `{other}` against a \
+                             backend instance, or `repro fleet sync` to reconcile the fleet"
+                        ),
+                    ))
+                    .to_compact();
+                }
+            }
+        }
+    }
+    let key = routing_key(payload);
+    let candidates = state.ring.candidates(&key);
+    let mut last_overloaded: Option<String> = None;
+    for idx in candidates {
+        let now = Instant::now();
+        if !state.attempt_allowed(idx, now) {
+            continue;
+        }
+        match forward(&state.ring.instances()[idx], payload, &state.config) {
+            Ok(reply) => {
+                if is_overloaded(&reply) {
+                    state.note_redirect(idx);
+                    last_overloaded = Some(reply);
+                    continue;
+                }
+                state.note_success(idx);
+                // Byte-identity: the backend's payload, untouched.
+                return reply;
+            }
+            Err(_) => {
+                state.note_failure(idx, Instant::now());
+                continue;
+            }
+        }
+    }
+    if let Some(reply) = last_overloaded {
+        // Every live replica is shedding: surface the (adaptive) hint.
+        return reply;
+    }
+    state.unavailable_total.fetch_add(1, Ordering::Relaxed);
+    error_json(&RpcError::new(
+        "fleet_unavailable",
+        format!(
+            "every replica for this routing key is down ({} instances)",
+            state.ring.len()
+        ),
+    ))
+    .to_compact()
+}
+
+/// The fleet router process: a [`Reactor`] whose handler forwards
+/// frames to ring-selected backends. Construction mirrors
+/// [`rpc::RpcServer`]; `repro fleet` drives one of these.
+pub struct FleetRouter {
+    inner: Reactor,
+    state: Arc<FleetState>,
+}
+
+impl FleetRouter {
+    /// Bind `listen` and start routing across `instances`.
+    pub fn start(
+        listen: &str,
+        instances: &[String],
+        config: FleetConfig,
+    ) -> anyhow::Result<FleetRouter> {
+        anyhow::ensure!(!instances.is_empty(), "fleet needs at least one --instance");
+        let ring = HashRing::new(instances);
+        let state = Arc::new(FleetState {
+            health: Mutex::new(vec![Health::new(); ring.len()]),
+            ring,
+            config: config.clone(),
+            stop: AtomicBool::new(false),
+            unavailable_total: AtomicUsize::new(0),
+        });
+        let handler: reactor::Handler = Arc::new({
+            let state = state.clone();
+            move |line: &str| route(&state, line)
+        });
+        // The router's own shed path stays on the fixed cold-start hint:
+        // its handler does network I/O, so its drain rate measures
+        // backend latency, not local capacity.
+        let shed: ShedHook = Arc::new(|depth: usize| overloaded_json(depth).to_compact());
+        let rcfg = ReactorConfig {
+            jobs: 0,
+            max_conns: config.server.max_conns.max(1),
+            idle_timeout: config.server.idle_timeout,
+            read_stall: config.server.read_stall,
+            write_stall: config.server.write_stall,
+            max_frame_len: MAX_FRAME_LEN,
+            max_queue: config.server.max_queue,
+        };
+        let gauges = Arc::new(ServerGauges::default());
+        let inner = Reactor::start(listen, handler, rpc::violation_hook(), shed, rcfg, gauges)?;
+        Ok(FleetRouter { inner, state })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr()
+    }
+
+    pub fn gauges(&self) -> Arc<ServerGauges> {
+        self.inner.gauges()
+    }
+
+    /// The ring this router placed its instances on.
+    pub fn ring(&self) -> &HashRing {
+        &self.state.ring
+    }
+
+    /// Whether a wire `shutdown` op has been received (the serve loop
+    /// polls this next to its signal latch).
+    pub fn stop_requested(&self) -> bool {
+        self.state.stop.load(Ordering::SeqCst)
+    }
+
+    /// A point-in-time `stats` reply, as the wire would carry it — with
+    /// the router's live reactor gauges in the `server` block (the
+    /// in-band handler reports a default block instead: it runs *on* a
+    /// worker, where a coherent snapshot of its own queue is a lie).
+    pub fn stats(&self) -> Json {
+        fleet_stats_json(
+            &self.state.instance_stats(),
+            self.state.ring.points(),
+            self.state.unavailable_total.load(Ordering::Relaxed) as u64,
+            ServerStats::snapshot(&self.gauges()),
+        )
+    }
+
+    /// Drain connections and stop the reactor (graceful; idempotent at
+    /// the process level).
+    pub fn shutdown(self) {
+        self.inner.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect()
+    }
+
+    #[test]
+    fn ring_is_stable_under_reordering_and_dedup() {
+        let mut shuffled = addrs(5);
+        shuffled.reverse();
+        shuffled.push("127.0.0.1:9002".to_string()); // duplicate
+        let a = HashRing::new(&addrs(5));
+        let b = HashRing::new(&shuffled);
+        assert_eq!(a.instances(), b.instances());
+        for key in ["ResNet-50\u{1f}server", "BERT-base\u{1f}edge", "x\u{1f}"] {
+            assert_eq!(a.candidates(key), b.candidates(key));
+        }
+    }
+
+    #[test]
+    fn candidates_cover_every_instance_and_removal_promotes_successor() {
+        let ring = HashRing::new(&addrs(4));
+        let key = "MobileNetV2\u{1f}server";
+        let order = ring.candidates(key);
+        assert_eq!(order.len(), 4, "walk must reach every instance");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        // Removing the primary from the instance *set* leaves the
+        // surviving relative order intact: the successor is promoted,
+        // nothing else moves (the consistent-hash property the
+        // instance-kill rehash relies on).
+        let survivors: Vec<String> = ring
+            .instances()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != order[0])
+            .map(|(_, a)| a.clone())
+            .collect();
+        let reduced = HashRing::new(&survivors);
+        let reduced_order: Vec<&str> =
+            reduced.candidates(key).iter().map(|&i| reduced.instances()[i].as_str()).collect();
+        let expected: Vec<&str> =
+            order[1..].iter().map(|&i| ring.instances()[i].as_str()).collect();
+        assert_eq!(reduced_order, expected);
+    }
+
+    #[test]
+    fn keyspace_split_is_roughly_uniform() {
+        let ring = HashRing::new(&addrs(4));
+        let mut counts = [0usize; 4];
+        for i in 0..1000 {
+            counts[ring.primary(&format!("model-{i}\u{1f}server")).unwrap()] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 100, "4-way split of 1000 keys left a near-empty shard: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn routing_key_is_total_and_separates_fields() {
+        assert_eq!(routing_key(r#"{"model":"a","device":"edge"}"#), "a\u{1f}edge");
+        assert_eq!(routing_key(r#"{"model":"a"}"#), "a\u{1f}");
+        assert_ne!(
+            routing_key(r#"{"model":"ab","device":"c"}"#),
+            routing_key(r#"{"model":"a","device":"bc"}"#)
+        );
+        assert_eq!(routing_key("not json"), "not json");
+    }
+
+    #[test]
+    fn fleet_stats_shape_is_pinned() {
+        let stats = fleet_stats_json(
+            &[InstanceStats {
+                addr: "127.0.0.1:9000".into(),
+                up: true,
+                routed: 3,
+                redirects: 1,
+                down_marks: 0,
+            }],
+            64,
+            2,
+            ServerStats::default(),
+        );
+        assert_eq!(
+            stats.to_compact(),
+            "{\"ok\":true,\"stats\":{\"protocol\":6,\"fleet\":{\"instances\":[\
+             {\"addr\":\"127.0.0.1:9000\",\"up\":true,\"routed\":3,\"redirects\":1,\
+             \"down_marks\":0}],\"ring_points\":64,\"unavailable_total\":2},\
+             \"server\":{\"connections\":0,\"queue_depth\":0,\"evicted_idle\":0,\
+             \"evicted_read_stall\":0,\"evicted_write_stall\":0,\"shed_total\":0,\
+             \"quarantined\":0}}}"
+        );
+    }
+}

@@ -54,6 +54,7 @@
 //! build resumes tuning only the models the store does not already
 //! cover: recovered models are republished at 0 trials.
 
+pub mod fleet;
 pub mod reactor;
 pub mod rpc;
 pub mod shard;
@@ -73,7 +74,6 @@ use crate::transfer::{
     TransferOptions, TransferResult,
 };
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// One tenant's request.
@@ -230,99 +230,154 @@ impl Snapshot {
 struct Inner {
     snapshot: RwLock<Arc<Snapshot>>,
     cache: ShardedMeasureCache,
-    /// Draft-then-verify keep fraction for every session sweep, stored
-    /// as f64 bits (1.0 = exact path). Server-level configuration — not
-    /// part of the wire protocol; replies stay a pure function of
-    /// (target, device, budget, seed, epoch) under the server's
-    /// configured keep, and pruned sweeps live in their own cache key
-    /// space (see [`crate::coordinator::cache::speculative_seed`]).
-    speculative_keep: AtomicU64,
     /// Learned cost prior for session sweeps' draft stage (untrained by
-    /// default = the legacy per-sweep draft model). Like the keep
-    /// fraction this is server-level configuration, not wire protocol;
-    /// a trained prior's content hash keys speculative sweeps into
-    /// their own cache space (see
+    /// default = the legacy per-sweep draft model). Server-level
+    /// configuration, not wire protocol; a trained prior's content hash
+    /// keys speculative sweeps into their own cache space (see
     /// [`crate::coordinator::cache::estimator_seed`]) and is inert at
     /// keep = 1.0. `Arc`-swapped so a live republish can refresh it
     /// without tearing in-flight sessions.
     cost_prior: RwLock<Arc<CostModel>>,
 }
 
-/// A shareable handle to the serving state (cheap to clone; all clones
-/// serve the same snapshot and sharded cache).
-#[derive(Clone)]
-pub struct ScheduleService {
-    inner: Arc<Inner>,
+/// Construction-time configuration for a [`ScheduleService`]: the PR 10
+/// redesign that replaced the post-hoc
+/// `with_speculative_keep`/`with_cost_model` chain. Both knobs are
+/// consumed in one place, so `serve` and `fleet` build their service in
+/// a single expression:
+///
+/// ```ignore
+/// let service = ServiceOptions { speculative_keep: 0.5, cost_model: Some(prior) }
+///     .service_from_zoo(zoo, shards);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ServiceOptions {
+    /// Draft-then-verify keep fraction for every sweep run through
+    /// handles built from these options. `None` (and any value ≥ 1.0)
+    /// selects the exact path. Not part of the wire protocol; replies
+    /// stay a pure function of (target, device, budget, seed, epoch)
+    /// under the configured keep, and pruned sweeps live in their own
+    /// cache key space (see
+    /// [`crate::coordinator::cache::speculative_seed`]).
+    pub speculative_keep: Option<f64>,
+    /// Learned cost prior installed at construction (`None` keeps the
+    /// untrained default — except in
+    /// [`ServiceOptions::service_from_zoo`], where the zoo's own prior
+    /// applies).
+    pub cost_model: Option<CostModel>,
 }
 
-impl ScheduleService {
-    /// Build a service from a schedule store + the model graphs it can
-    /// serve, with a fresh cache split into `shards`.
-    pub fn new(store: ScheduleStore, models: Vec<ModelGraph>, shards: usize) -> ScheduleService {
+impl ServiceOptions {
+    fn keep(&self) -> f64 {
+        match self.speculative_keep {
+            Some(k) if k < 1.0 => k,
+            _ => 1.0,
+        }
+    }
+
+    fn build(self, snapshot: Snapshot, cache: ShardedMeasureCache) -> ScheduleService {
+        let keep = self.keep();
+        let prior = self.cost_model.unwrap_or_default();
         ScheduleService {
             inner: Arc::new(Inner {
-                snapshot: RwLock::new(Arc::new(Snapshot::from_store(store, models))),
-                cache: ShardedMeasureCache::new(shards),
-                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
-                cost_prior: RwLock::new(Arc::new(CostModel::default())),
+                snapshot: RwLock::new(Arc::new(snapshot)),
+                cache,
+                cost_prior: RwLock::new(Arc::new(prior)),
             }),
+            speculative_keep: keep,
         }
+    }
+
+    /// Build a service from a schedule store + the model graphs it can
+    /// serve, with a fresh cache split into `shards`.
+    pub fn service(
+        self,
+        store: ScheduleStore,
+        models: Vec<ModelGraph>,
+        shards: usize,
+    ) -> ScheduleService {
+        self.build(Snapshot::from_store(store, models), ShardedMeasureCache::new(shards))
     }
 
     /// An empty service (epoch 0, no sources): the starting point of a
     /// streaming build — [`ScheduleService::publish_model`] feeds it.
-    pub fn empty(shards: usize) -> ScheduleService {
-        Self::empty_with_cache(&MeasureCache::new(), shards)
+    pub fn empty_service(self, shards: usize) -> ScheduleService {
+        self.service_with_cache(&MeasureCache::new(), shards)
     }
 
-    /// [`ScheduleService::empty`], but with the sharded cache seeded
-    /// from a flat snapshot (e.g. the measurement cache persisted under
-    /// the zoo's artifact key) — a warm `--cache-dir` keeps paying off
-    /// across streaming-serve restarts.
-    pub fn empty_with_cache(cache: &MeasureCache, shards: usize) -> ScheduleService {
-        ScheduleService {
-            inner: Arc::new(Inner {
-                snapshot: RwLock::new(Arc::new(Snapshot::empty())),
-                cache: ShardedMeasureCache::from_cache(cache, shards),
-                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
-                cost_prior: RwLock::new(Arc::new(CostModel::default())),
-            }),
-        }
+    /// [`ServiceOptions::empty_service`], but with the sharded cache
+    /// seeded from a flat snapshot (e.g. the measurement cache persisted
+    /// under the zoo's artifact key) — a warm `--cache-dir` keeps paying
+    /// off across streaming-serve restarts.
+    pub fn service_with_cache(self, cache: &MeasureCache, shards: usize) -> ScheduleService {
+        self.build(Snapshot::empty(), ShardedMeasureCache::from_cache(cache, shards))
     }
 
     /// Promote a built zoo into a service: the zoo's store and models
     /// move in, its (possibly artifact-warmed) measurement cache is
     /// redistributed across `shards`, and its learned cost prior (if
-    /// any — untrained for `Static` zoos) comes along.
-    pub fn from_zoo(zoo: Zoo, shards: usize) -> ScheduleService {
+    /// any — untrained for `Static` zoos) comes along unless
+    /// [`ServiceOptions::cost_model`] overrides it.
+    pub fn service_from_zoo(mut self, zoo: Zoo, shards: usize) -> ScheduleService {
         let cache = ShardedMeasureCache::from_cache(&zoo.cache.borrow(), shards);
-        let prior = zoo.cost_model.into_inner();
-        ScheduleService {
-            inner: Arc::new(Inner {
-                snapshot: RwLock::new(Arc::new(Snapshot::from_store(zoo.store, zoo.models))),
-                cache,
-                speculative_keep: AtomicU64::new(1.0f64.to_bits()),
-                cost_prior: RwLock::new(Arc::new(prior)),
-            }),
-        }
+        let prior = self.cost_model.take().unwrap_or_else(|| zoo.cost_model.into_inner());
+        self.cost_model = Some(prior);
+        self.build(Snapshot::from_store(zoo.store, zoo.models), cache)
+    }
+}
+
+/// A shareable handle to the serving state (cheap to clone; all clones
+/// serve the same snapshot and sharded cache — the keep fraction alone
+/// is per-handle, fixed at construction).
+#[derive(Clone)]
+pub struct ScheduleService {
+    inner: Arc<Inner>,
+    /// Draft-then-verify keep fraction for sweeps run through this
+    /// handle (1.0 = exact path). A plain field since PR 10 — set by
+    /// [`ServiceOptions`] at construction, never mutated.
+    speculative_keep: f64,
+}
+
+impl ScheduleService {
+    /// Build a service from a schedule store + the model graphs it can
+    /// serve, with a fresh cache split into `shards`. Shorthand for
+    /// [`ServiceOptions::service`] with default options.
+    pub fn new(store: ScheduleStore, models: Vec<ModelGraph>, shards: usize) -> ScheduleService {
+        ServiceOptions::default().service(store, models, shards)
     }
 
-    /// Configure the draft-then-verify keep fraction for every sweep
-    /// this service (and its clones — the setting lives in the shared
-    /// inner state) runs. Values ≥ 1.0 select the exact path; set at
-    /// startup, before serving, so replies stay deterministic.
-    pub fn with_speculative_keep(self, keep: f64) -> ScheduleService {
-        let keep = if keep < 1.0 { keep } else { 1.0 };
-        self.inner.speculative_keep.store(keep.to_bits(), Ordering::Relaxed);
+    /// An empty service (epoch 0, no sources): the starting point of a
+    /// streaming build — [`ScheduleService::publish_model`] feeds it.
+    pub fn empty(shards: usize) -> ScheduleService {
+        ServiceOptions::default().empty_service(shards)
+    }
+
+    /// [`ScheduleService::empty`] with a warm cache. Shorthand for
+    /// [`ServiceOptions::service_with_cache`] with default options.
+    pub fn empty_with_cache(cache: &MeasureCache, shards: usize) -> ScheduleService {
+        ServiceOptions::default().service_with_cache(cache, shards)
+    }
+
+    /// Promote a built zoo into a service. Shorthand for
+    /// [`ServiceOptions::service_from_zoo`] with default options.
+    pub fn from_zoo(zoo: Zoo, shards: usize) -> ScheduleService {
+        ServiceOptions::default().service_from_zoo(zoo, shards)
+    }
+
+    /// Configure the draft-then-verify keep fraction for sweeps run
+    /// through the returned handle. Values ≥ 1.0 select the exact path.
+    #[deprecated(note = "pass ServiceOptions { speculative_keep, .. } at construction")]
+    pub fn with_speculative_keep(mut self, keep: f64) -> ScheduleService {
+        self.speculative_keep = if keep < 1.0 { keep } else { 1.0 };
         self
     }
 
     fn speculative_keep(&self) -> f64 {
-        f64::from_bits(self.inner.speculative_keep.load(Ordering::Relaxed))
+        self.speculative_keep
     }
 
-    /// Install a learned cost prior for session sweeps (builder form —
-    /// set at startup alongside [`ScheduleService::with_speculative_keep`]).
+    /// Install a learned cost prior for session sweeps (builder form).
+    #[deprecated(note = "pass ServiceOptions { cost_model, .. } at construction")]
     pub fn with_cost_model(self, model: CostModel) -> ScheduleService {
         self.set_cost_model(model);
         self
@@ -652,13 +707,14 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // wrapper coverage: the with_* chain must keep working
     fn speculative_sessions_are_deterministic_and_key_separated() {
         let svc = dense_service();
         let exact = svc.open_session(&request(None)).unwrap();
         assert!(exact.charged_search_time_s > 0.0, "cold exact session must charge");
-        // The keep setting lives in the shared inner state, so this
-        // clone flips the whole service into speculative mode; from
-        // here on sweeps key into the keep-specific cache space.
+        // The keep is per-handle (the snapshot and cache stay shared),
+        // so this clone alone runs speculative sweeps, keyed into the
+        // keep-specific cache space.
         let spec = svc.clone().with_speculative_keep(0.5);
         let a = spec.open_session(&request(None)).unwrap();
         assert!(
@@ -693,6 +749,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // wrapper coverage: the with_* chain must keep working
     fn trained_prior_rekeys_speculative_sessions_and_is_inert_when_exact() {
         // Exact path: installing a trained prior changes nothing — the
         // second session is served entirely from the first one's cache.

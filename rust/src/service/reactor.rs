@@ -45,7 +45,7 @@ use crate::service::timer::{TimerWheel, TICK_MS};
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -134,6 +134,14 @@ pub struct ServerGauges {
     /// its `--cache-dir`; the reactor itself never writes it — it lives
     /// here so the `stats` admin op exports one coherent server block.
     pub quarantined: AtomicUsize,
+    /// Requests completed by a worker (monotonic). Together with
+    /// [`busy_micros`](ServerGauges::busy_micros) this is the measured
+    /// drain rate the adaptive `retry_after_ms` hint (wire v6) divides
+    /// the queue depth by.
+    pub jobs_done: AtomicUsize,
+    /// Total microseconds workers spent executing the [`Handler`]
+    /// (monotonic; wall time per job, summed across workers).
+    pub busy_micros: AtomicU64,
 }
 
 /// Stop reading a connection once this many decoded requests are
@@ -531,7 +539,15 @@ fn worker_loop(shared: &Shared, jobs: &JobQueue, handler: &Handler) {
             }
         };
         let Some((token, payload)) = job else { return };
+        let started = Instant::now();
         let reply = handler(&payload);
+        // Drain-rate gauges (wire v6): the adaptive retry hint reads
+        // these to estimate how long the current queue takes to clear.
+        shared
+            .gauges
+            .busy_micros
+            .fetch_add(started.elapsed().as_micros() as u64, Ordering::Relaxed);
+        shared.gauges.jobs_done.fetch_add(1, Ordering::Relaxed);
         shared.done.lock().expect("done list").push((token, reply));
         shared.wake();
     }

@@ -73,12 +73,20 @@ pub const MAX_FRAME_LEN: u32 = 16 * 1024 * 1024;
 /// error code (carrying a `retry_after_ms` hint inside the `error`
 /// object) answers requests landing on a full worker queue
 /// (`--max-queue`), and the `server` block gains `shed_total` and
-/// `quarantined`. Bump this with **any** protocol change, and
-/// update README §Wire protocol, `rust/tests/rpc_codec.rs`, and
-/// `rust/tests/integration_rpc.rs` in the same commit — CI's
-/// `format-drift` job fails a change to this file that does not touch
-/// all three together.
-pub const WIRE_PROTOCOL_VERSION: u64 = 5;
+/// `quarantined`; v6 = fleet serving — a `repro fleet` router's
+/// `stats` reply carries a `fleet` block (ring placement + per-
+/// instance routing/health gauges, see
+/// [`fleet_stats_json`](super::fleet::fleet_stats_json)), the
+/// `fleet_unavailable` error code answers a session whose every
+/// replica is down, and a live server's `retry_after_ms` hint is
+/// adaptive — derived from the measured worker drain rate, never
+/// below the fixed [`OVERLOADED_RETRY_AFTER_MS`] floor (see
+/// [`adaptive_retry_after_ms`]). Bump this with **any** protocol
+/// change, and update README §Wire protocol,
+/// `rust/tests/rpc_codec.rs`, and `rust/tests/integration_rpc.rs` in
+/// the same commit — CI's `format-drift` job fails a change to this
+/// file that does not touch all three together.
+pub const WIRE_PROTOCOL_VERSION: u64 = 6;
 
 /// How long a connection's outbound buffer may make no progress (a
 /// client that stopped reading its replies) before the connection is
@@ -198,12 +206,15 @@ pub struct RpcDefaults {
 /// | `bad_frame`         | truncated or non-UTF-8 frame (connection ends) |
 /// | `oversized_frame`   | length prefix above [`MAX_FRAME_LEN`] (ends)   |
 /// | `overloaded`        | worker queue full (`--max-queue`); retry later |
+/// | `fleet_unavailable` | fleet router: every replica for the key is down|
 /// | `internal`          | session or admin op failed for another reason  |
 ///
 /// `overloaded` is the one error whose object carries an extra field:
 /// `retry_after_ms`, a client backoff hint (see [`overloaded_json`]).
 /// It is transient by contract — `repro call --retries` retries it,
-/// and only it, among in-band errors.
+/// and only it, among in-band errors. `fleet_unavailable` (wire v6) is
+/// sent only by a `repro fleet` router, after connect/forward failures
+/// marked every candidate instance for the request's routing key down.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RpcError {
     pub code: String,
@@ -387,15 +398,57 @@ pub fn error_json(err: &RpcError) -> Json {
 /// Default `retry_after_ms` hint inside an `overloaded` error: long
 /// enough for a worker to drain one typical request, short enough that
 /// a shed client re-arrives while the burst is still the live story.
+/// Since wire v6 this is the **cold-start floor** of the adaptive hint
+/// (see [`adaptive_retry_after_ms`]): a live server that has finished
+/// at least one request scales the hint with its measured drain rate,
+/// but never hints below this.
 pub const OVERLOADED_RETRY_AFTER_MS: u64 = 250;
 
-/// Encode the v5 `overloaded` response: a structured error whose
-/// `error` object carries a `retry_after_ms` backoff hint on top of
-/// the usual `code`/`message`. Sent by the reactor's shed hook when a
-/// request frame lands on a full worker queue (`--max-queue`), *before*
-/// the request is parsed — shedding must cost no work. `depth` is the
-/// observed queue depth, echoed in the message for operators.
+/// Ceiling on the adaptive `retry_after_ms` hint: even a deeply backed
+/// up queue should re-attract its shed clients within a human-scale
+/// wait, and an absurd hint (one garbage-long request skewing the mean)
+/// must not park them forever.
+pub const MAX_RETRY_AFTER_MS: u64 = 10_000;
+
+/// The adaptive v6 `retry_after_ms` hint: estimated time for the
+/// current queue to drain, from the measured mean per-request service
+/// time (`busy_micros / jobs_done`, the reactor's cumulative worker
+/// gauges) spread across `workers` threads. Pure in its inputs so the
+/// wire tests can pin it. Falls back to the fixed
+/// [`OVERLOADED_RETRY_AFTER_MS`] floor before the first request
+/// completes (cold start), and is clamped to
+/// [[`OVERLOADED_RETRY_AFTER_MS`], [`MAX_RETRY_AFTER_MS`]] — routers
+/// back off proportionally to real load, inside sane bounds.
+pub fn adaptive_retry_after_ms(
+    depth: usize,
+    jobs_done: u64,
+    busy_micros: u64,
+    workers: usize,
+) -> u64 {
+    if jobs_done == 0 {
+        return OVERLOADED_RETRY_AFTER_MS;
+    }
+    let mean_ms = busy_micros / jobs_done / 1_000;
+    let drain_ms = mean_ms.saturating_mul(depth.max(1) as u64) / workers.max(1) as u64;
+    drain_ms.clamp(OVERLOADED_RETRY_AFTER_MS, MAX_RETRY_AFTER_MS)
+}
+
+/// Encode the v5 `overloaded` response with the fixed
+/// [`OVERLOADED_RETRY_AFTER_MS`] hint — the cold-start shape, and what
+/// a raw [`Reactor`] shed hook without gauges emits. [`RpcServer`]
+/// installs [`overloaded_json_with_hint`] fed by
+/// [`adaptive_retry_after_ms`] instead.
 pub fn overloaded_json(depth: usize) -> Json {
+    overloaded_json_with_hint(depth, OVERLOADED_RETRY_AFTER_MS)
+}
+
+/// Encode the `overloaded` response: a structured error whose `error`
+/// object carries a `retry_after_ms` backoff hint on top of the usual
+/// `code`/`message`. Sent by the reactor's shed hook when a request
+/// frame lands on a full worker queue (`--max-queue`), *before* the
+/// request is parsed — shedding must cost no work. `depth` is the
+/// observed queue depth, echoed in the message for operators.
+pub fn overloaded_json_with_hint(depth: usize, retry_after_ms: u64) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         (
@@ -408,7 +461,7 @@ pub fn overloaded_json(depth: usize) -> Json {
                         "server overloaded: worker queue full ({depth} queued); retry later"
                     )),
                 ),
-                ("retry_after_ms", Json::num(OVERLOADED_RETRY_AFTER_MS as f64)),
+                ("retry_after_ms", Json::num(retry_after_ms as f64)),
             ]),
         ),
     ])
@@ -665,78 +718,121 @@ pub struct RpcServer {
     inner: Reactor,
 }
 
-impl RpcServer {
+/// Configures and starts an [`RpcServer`]: the one construction path
+/// (obtained via [`RpcServer::builder`]) that PR 10 collapsed the
+/// accumulated `start_with_timeouts` / `start_with_admin` /
+/// `start_with_config` constructors into. Every knob has the same
+/// default the old `start` applied, so
+/// `RpcServer::builder().start(bind, service)` is the minimal form;
+/// chain setters for the rest:
+///
+/// ```ignore
+/// let server = RpcServer::builder()
+///     .defaults(defaults)
+///     .max_conns(1024)
+///     .idle_timeout(Duration::from_secs(10))
+///     .admin(hook)
+///     .gauges(gauges)
+///     .start("127.0.0.1:0", service)?;
+/// ```
+#[derive(Clone)]
+pub struct ServerBuilder {
+    config: ServerConfig,
+    defaults: Option<RpcDefaults>,
+    admin: Option<AdminHook>,
+    gauges: Option<Arc<ServerGauges>>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> ServerBuilder {
+        RpcServer::builder()
+    }
+}
+
+impl ServerBuilder {
+    /// Server-side defaults for optional request fields. When not set:
+    /// the CLI defaults (server device, seed `0xA45`).
+    pub fn defaults(mut self, defaults: RpcDefaults) -> ServerBuilder {
+        self.defaults = Some(defaults);
+        self
+    }
+
+    /// Live-connection cap (see [`DEFAULT_MAX_CONNS`]); clamped to 1.
+    pub fn max_conns(mut self, max_conns: usize) -> ServerBuilder {
+        self.config.max_conns = max_conns;
+        self
+    }
+
+    /// Idle-connection deadline (see [`READ_STALL_TIMEOUT`]).
+    pub fn idle_timeout(mut self, d: Duration) -> ServerBuilder {
+        self.config.idle_timeout = d;
+        self
+    }
+
+    /// Mid-frame progress deadline (slowloris bound).
+    pub fn read_stall(mut self, d: Duration) -> ServerBuilder {
+        self.config.read_stall = d;
+        self
+    }
+
+    /// Outbound-progress deadline (client stopped reading).
+    pub fn write_stall(mut self, d: Duration) -> ServerBuilder {
+        self.config.write_stall = d;
+        self
+    }
+
+    /// One knob for both read-side deadlines (`idle_timeout` +
+    /// `read_stall`) — what the deprecated `start_with_timeouts`
+    /// offered, kept because tests exercising hung-client paths want
+    /// both in milliseconds.
+    pub fn timeouts(mut self, read_timeout: Duration) -> ServerBuilder {
+        self.config.idle_timeout = read_timeout;
+        self.config.read_stall = read_timeout;
+        self
+    }
+
+    /// Worker-queue bound (`--max-queue`); 0 disables shedding.
+    pub fn max_queue(mut self, max_queue: usize) -> ServerBuilder {
+        self.config.max_queue = max_queue;
+        self
+    }
+
+    /// Replace the whole [`ServerConfig`] at once (the `main.rs` path,
+    /// which assembles one from CLI flags). Individual setters applied
+    /// after this call still override their field.
+    pub fn config(mut self, config: ServerConfig) -> ServerBuilder {
+        self.config = config;
+        self
+    }
+
+    /// Install an explicit [`AdminHook`] — how the serve loop wires
+    /// `shutdown` and `republish` to its control thread. The hook owns
+    /// `stats` entirely; pass [`ServerBuilder::gauges`] a clone of the
+    /// `Arc` the hook reads so its `stats` reflect this server's
+    /// reactor. When not set: [`default_admin_with_gauges`] over this
+    /// server's own gauges.
+    pub fn admin(mut self, admin: AdminHook) -> ServerBuilder {
+        self.admin = Some(admin);
+        self
+    }
+
+    /// The gauges instance the reactor updates (and the admin hook
+    /// should read). When not set, a fresh instance is created.
+    pub fn gauges(mut self, gauges: Arc<ServerGauges>) -> ServerBuilder {
+        self.gauges = Some(gauges);
+        self
+    }
+
     /// Bind `bind` (e.g. `"127.0.0.1:7461"`, port 0 for ephemeral) and
-    /// start serving `service` in background threads, with
-    /// [`default_admin_with_gauges`] answering admin ops (so `stats`
-    /// reports this server's own connection/queue gauges).
-    pub fn start(
-        bind: &str,
-        service: ScheduleService,
-        defaults: RpcDefaults,
-    ) -> anyhow::Result<RpcServer> {
-        let gauges = Arc::new(ServerGauges::default());
-        let admin = default_admin_with_gauges(gauges.clone());
-        Self::start_inner(bind, service, defaults, admin, ServerConfig::default(), gauges)
-    }
-
-    /// [`RpcServer::start`] with an explicit idle/read-stall deadline
-    /// in place of [`READ_STALL_TIMEOUT`] — lets tests exercise the
-    /// hung-client paths in milliseconds instead of seconds. (The pool
-    /// server's single read timeout governed both the idle wait and
-    /// mid-frame stalls, so this knob sets both deadlines.)
-    pub fn start_with_timeouts(
-        bind: &str,
-        service: ScheduleService,
-        defaults: RpcDefaults,
-        read_timeout: Duration,
-    ) -> anyhow::Result<RpcServer> {
-        let gauges = Arc::new(ServerGauges::default());
-        let admin = default_admin_with_gauges(gauges.clone());
-        let config = ServerConfig {
-            idle_timeout: read_timeout,
-            read_stall: read_timeout,
-            ..ServerConfig::default()
-        };
-        Self::start_inner(bind, service, defaults, admin, config, gauges)
-    }
-
-    /// [`RpcServer::start`] with an explicit [`AdminHook`] — how the
-    /// serve loop wires `shutdown` and `republish` to its control
-    /// thread. The hook owns `stats` entirely, so no gauges are
-    /// implied; use [`RpcServer::start_with_config`] to thread them.
-    pub fn start_with_admin(
-        bind: &str,
-        service: ScheduleService,
-        defaults: RpcDefaults,
-        admin: AdminHook,
-    ) -> anyhow::Result<RpcServer> {
-        let gauges = Arc::new(ServerGauges::default());
-        Self::start_inner(bind, service, defaults, admin, ServerConfig::default(), gauges)
-    }
-
-    /// Fully-explicit start: admin hook, server knobs, and the gauges
-    /// instance the hook reads (pass a clone of the same `Arc` so the
-    /// `stats` it serves reflects this server's reactor).
-    pub fn start_with_config(
-        bind: &str,
-        service: ScheduleService,
-        defaults: RpcDefaults,
-        admin: AdminHook,
-        config: ServerConfig,
-        gauges: Arc<ServerGauges>,
-    ) -> anyhow::Result<RpcServer> {
-        Self::start_inner(bind, service, defaults, admin, config, gauges)
-    }
-
-    fn start_inner(
-        bind: &str,
-        service: ScheduleService,
-        defaults: RpcDefaults,
-        admin: AdminHook,
-        config: ServerConfig,
-        gauges: Arc<ServerGauges>,
-    ) -> anyhow::Result<RpcServer> {
+    /// start serving `service` in background threads.
+    pub fn start(self, bind: &str, service: ScheduleService) -> anyhow::Result<RpcServer> {
+        let ServerBuilder { config, defaults, admin, gauges } = self;
+        let defaults = defaults.unwrap_or_else(|| RpcDefaults {
+            device: DeviceProfile::xeon_e5_2620(),
+            seed: 0xA45,
+        });
+        let gauges = gauges.unwrap_or_default();
+        let admin = admin.unwrap_or_else(|| default_admin_with_gauges(gauges.clone()));
         // The reactor owns bytes and deadlines; this closure is the
         // entire request plane — a pure (payload -> reply) function,
         // exactly the oracle `handle_request_with` is. The fault site
@@ -746,20 +842,22 @@ impl RpcServer {
             crate::faults::sleep_site("rpc.handler");
             handle_request_with(&service, &defaults, &admin, line).to_compact()
         });
-        // Framing-violation replies stay owned by this module so the
-        // reactor stays JSON-free and the wire shapes cannot fork.
-        let violation: reactor::ViolationHook = Arc::new(|v: &FrameViolation| {
-            let (code, err) = match v {
-                FrameViolation::Oversized(n) => ("oversized_frame", FrameError::Oversized(*n)),
-                FrameViolation::Truncated => ("bad_frame", FrameError::Truncated),
-                FrameViolation::Utf8 => ("bad_frame", FrameError::Utf8),
-            };
-            error_json(&RpcError::new(code, err.to_string())).to_compact()
-        });
         // Shedding is answered by the event loop itself, so the frame
         // stays owned by this module: the reactor only ever sends what
-        // this hook hands it.
-        let shed: ShedHook = Arc::new(|depth: usize| overloaded_json(depth).to_compact());
+        // this hook hands it. The hint is adaptive (v6): estimated
+        // drain time of the observed queue depth from the live
+        // jobs_done/busy_micros gauges, floored at the fixed v5 hint.
+        // Resolved the same way the reactor resolves its pool size
+        // (jobs: 0 below), so the estimate divides by the real worker
+        // count.
+        let workers = crate::coordinator::effective_jobs(0).max(1);
+        let shed_gauges = gauges.clone();
+        let shed: ShedHook = Arc::new(move |depth: usize| {
+            let jobs_done = shed_gauges.jobs_done.load(Ordering::Relaxed) as u64;
+            let busy_micros = shed_gauges.busy_micros.load(Ordering::Relaxed);
+            let hint = adaptive_retry_after_ms(depth, jobs_done, busy_micros, workers);
+            overloaded_json_with_hint(depth, hint).to_compact()
+        });
         let rcfg = ReactorConfig {
             jobs: 0, // resolve via the global --jobs/TT_JOBS knob
             max_conns: config.max_conns.max(1),
@@ -769,8 +867,92 @@ impl RpcServer {
             max_frame_len: MAX_FRAME_LEN,
             max_queue: config.max_queue,
         };
-        let inner = Reactor::start(bind, handler, violation, shed, rcfg, gauges)?;
+        let inner = Reactor::start(bind, handler, violation_hook(), shed, rcfg, gauges)?;
         Ok(RpcServer { inner })
+    }
+}
+
+/// Framing-violation replies stay owned by this module so the reactor
+/// stays JSON-free and the wire shapes cannot fork — shared by
+/// [`RpcServer`] and the [`fleet`](super::fleet) router (both speak
+/// the same frames, so both must answer violations identically).
+pub fn violation_hook() -> reactor::ViolationHook {
+    Arc::new(|v: &FrameViolation| {
+        let (code, err) = match v {
+            FrameViolation::Oversized(n) => ("oversized_frame", FrameError::Oversized(*n)),
+            FrameViolation::Truncated => ("bad_frame", FrameError::Truncated),
+            FrameViolation::Utf8 => ("bad_frame", FrameError::Utf8),
+        };
+        error_json(&RpcError::new(code, err.to_string())).to_compact()
+    })
+}
+
+impl RpcServer {
+    /// The construction path: every knob, with the defaults
+    /// [`RpcServer::start`] applies. See [`ServerBuilder`].
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder {
+            config: ServerConfig::default(),
+            defaults: None,
+            admin: None,
+            gauges: None,
+        }
+    }
+
+    /// Bind `bind` (e.g. `"127.0.0.1:7461"`, port 0 for ephemeral) and
+    /// start serving `service` in background threads, with
+    /// [`default_admin_with_gauges`] answering admin ops (so `stats`
+    /// reports this server's own connection/queue gauges). Shorthand
+    /// for `RpcServer::builder().defaults(defaults).start(bind,
+    /// service)`.
+    pub fn start(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+    ) -> anyhow::Result<RpcServer> {
+        Self::builder().defaults(defaults).start(bind, service)
+    }
+
+    /// [`RpcServer::start`] with an explicit idle/read-stall deadline
+    /// in place of [`READ_STALL_TIMEOUT`].
+    #[deprecated(note = "use RpcServer::builder().timeouts(..).start(..)")]
+    pub fn start_with_timeouts(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        read_timeout: Duration,
+    ) -> anyhow::Result<RpcServer> {
+        Self::builder().defaults(defaults).timeouts(read_timeout).start(bind, service)
+    }
+
+    /// [`RpcServer::start`] with an explicit [`AdminHook`].
+    #[deprecated(note = "use RpcServer::builder().admin(..).start(..)")]
+    pub fn start_with_admin(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        admin: AdminHook,
+    ) -> anyhow::Result<RpcServer> {
+        Self::builder().defaults(defaults).admin(admin).start(bind, service)
+    }
+
+    /// Fully-explicit start: admin hook, server knobs, and the gauges
+    /// instance the hook reads.
+    #[deprecated(note = "use RpcServer::builder().config(..).admin(..).gauges(..).start(..)")]
+    pub fn start_with_config(
+        bind: &str,
+        service: ScheduleService,
+        defaults: RpcDefaults,
+        admin: AdminHook,
+        config: ServerConfig,
+        gauges: Arc<ServerGauges>,
+    ) -> anyhow::Result<RpcServer> {
+        Self::builder()
+            .defaults(defaults)
+            .config(config)
+            .admin(admin)
+            .gauges(gauges)
+            .start(bind, service)
     }
 
     /// The bound address (resolves port 0).

@@ -250,6 +250,55 @@ fn merge_unions_manifests_and_measure_caches() {
 }
 
 #[test]
+fn sync_stores_converges_every_dir_to_the_union() {
+    let xeon = DeviceProfile::xeon_e5_2620();
+    let roots: Vec<PathBuf> = (0..3).map(|i| tmp_dir(&format!("sync_{i}"))).collect();
+    let zk = 0x300;
+    // Three machines, disjoint tunings, overlapping cache coverage.
+    for (i, root) in roots.iter().enumerate() {
+        let mut store = ArtifactStore::open(root).unwrap();
+        let key =
+            transfer_tuning::artifact::tuning_key(&format!("Sync{i}"), &xeon, 10, 1, 1.0, 0);
+        store.save_tuning(key, &bare_tuning(&format!("Sync{i}"))).unwrap();
+        store.save_measure_cache(zk, &small_cache(&[i as u64 + 1, 10])).unwrap();
+    }
+
+    let report = transfer_tuning::artifact::sync_stores(&roots).unwrap();
+    assert_eq!(report.stores, 3);
+    assert_eq!(report.pairs, 6, "every ordered pair merges");
+    assert_eq!(report.conflicts, 0);
+    assert_eq!(report.rejected, 0);
+
+    // One pass converges: every dir holds all three tunings and the
+    // cache union {1,2,3,10}.
+    for root in &roots {
+        let mut store = ArtifactStore::open(root).unwrap();
+        assert_eq!(store.len(), 4, "3 tunings + 1 cache in {}", root.display());
+        let cache = store.load_measure_cache(zk).unwrap();
+        for k in [1u64, 2, 3, 10] {
+            assert_eq!(cache.peek(k), Some(Some(k as f64 * 1e-4)));
+        }
+    }
+
+    // A second pass is a pure no-op (idempotent convergence).
+    let again = transfer_tuning::artifact::sync_stores(&roots).unwrap();
+    assert_eq!(again.added, 0);
+    assert_eq!(again.caches_unioned, 0);
+    assert_eq!(again.identical, 24, "4 entries x 6 ordered pairs, all settled");
+
+    // Too few dirs, or a non-store dir, is an error before any writes.
+    assert!(transfer_tuning::artifact::sync_stores(&roots[..1]).is_err());
+    let missing = tmp_dir("sync_missing");
+    let mut bad = roots.clone();
+    bad.push(missing.clone());
+    assert!(transfer_tuning::artifact::sync_stores(&bad).is_err());
+    assert!(!missing.exists(), "sync must not create the missing dir");
+    for root in &roots {
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+#[test]
 fn merge_rejects_corrupt_source_payloads() {
     let dest_root = tmp_dir("reject_dest");
     let src_root = tmp_dir("reject_src");

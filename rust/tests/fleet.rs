@@ -1,0 +1,467 @@
+//! Fleet integration tests: a real `FleetRouter` over real backend
+//! `RpcServer`s on loopback. The contract under test is the fleet
+//! determinism invariant — a routed session reply is bit-identical to
+//! what a single-instance service over the union of the instances'
+//! sources produces at the same epoch; killing one of N backends
+//! changes only *which* instance answers, never the reply bytes — plus
+//! the `overloaded` redirect path and `sync_stores` convergence.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+use transfer_tuning::artifact::{sync_stores, ArtifactStore};
+use transfer_tuning::autosched::{tune_model, TuneOptions};
+use transfer_tuning::device::DeviceProfile;
+use transfer_tuning::ir::{KernelBuilder, ModelGraph};
+use transfer_tuning::service::fleet::{routing_key, FleetConfig, FleetRouter, HashRing};
+use transfer_tuning::service::rpc::{
+    encode_frame, handle_request, overloaded_json, read_frame, RpcDefaults, RpcServer,
+    ServerGauges,
+};
+use transfer_tuning::service::ScheduleService;
+use transfer_tuning::transfer::ScheduleStore;
+use transfer_tuning::util::json;
+
+fn defaults() -> RpcDefaults {
+    RpcDefaults { device: DeviceProfile::xeon_e5_2620(), seed: 9 }
+}
+
+fn src_graph(name: &str, n: u64) -> ModelGraph {
+    let mut g = ModelGraph::new(name);
+    g.push(KernelBuilder::dense(n, n, n, &[]));
+    g
+}
+
+fn tune_opts() -> TuneOptions {
+    TuneOptions { trials: 96, batch_size: 16, population: 32, generations: 2, ..Default::default() }
+}
+
+/// Two tuned sources plus an untuned target — the same shape
+/// `integration_rpc.rs` uses, so replies carry real transferred
+/// schedules (epoch 2, two live sources).
+fn dense_service() -> ScheduleService {
+    let prof = DeviceProfile::xeon_e5_2620();
+    let opts = tune_opts();
+    let mut store = ScheduleStore::new();
+    let mut models = Vec::new();
+    for (name, n) in [("SrcA", 512u64), ("SrcB", 1024u64)] {
+        let g = src_graph(name, n);
+        let res = tune_model(&g, &prof, &opts);
+        store.add_tuning(&g, &res);
+        models.push(g);
+    }
+    models.push(src_graph("TargetDense", 768));
+    ScheduleService::new(store, models, 4)
+}
+
+/// Send one frame, read one frame.
+fn roundtrip(stream: &mut TcpStream, line: &str) -> String {
+    stream.write_all(&encode_frame(line).expect("encodable")).expect("send");
+    read_frame(stream).expect("response frame")
+}
+
+/// One-shot request against `addr` on a fresh connection.
+fn ask(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    roundtrip(&mut stream, line)
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The `fleet.instances` row for `addr` out of a wire `stats` reply.
+fn instance_row(stats_payload: &str, addr: &str) -> json::Json {
+    let j = json::parse(stats_payload).expect("stats decodes");
+    let rows = j
+        .get("stats")
+        .and_then(|s| s.get("fleet"))
+        .and_then(|f| f.get("instances"))
+        .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+        .expect("fleet instance rows");
+    rows.into_iter()
+        .find(|row| row.get("addr").and_then(|a| a.as_str()) == Some(addr))
+        .unwrap_or_else(|| panic!("no fleet row for {addr}"))
+}
+
+fn row_num(row: &json::Json, field: &str) -> u64 {
+    row.get(field).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("row field {field}")) as u64
+}
+
+#[test]
+fn routed_replies_are_bit_identical_and_a_kill_rehashes_deterministically() {
+    // Three backends over the SAME store (clones share the snapshot and
+    // the measure cache), so every instance already serves the union of
+    // sources — the invariant reduces to: the router adds nothing and
+    // loses nothing, whichever replica a key lands on, dead or alive.
+    let service = dense_service();
+    let d = defaults();
+    let battery = [
+        "{\"model\":\"TargetDense\"}",
+        "{\"model\":\"TargetDense\",\"seed\":23}",
+        "{\"model\":\"SrcA\"}",
+        "{\"model\":\"SrcB\"}",
+        "this is not json",
+        "{\"no_model\":1}",
+        "{\"model\":\"Zarniwoop\"}",
+        "{\"model\":\"TargetDense\",\"device\":\"tpu\"}",
+        "{\"op\":\"session\",\"model\":\"SrcA\"}",
+    ];
+    // The oracle: warm direct-call bytes (run twice; warm replies are
+    // warmth-independent, charged_search_time_s deterministically 0).
+    for line in &battery {
+        handle_request(&service, &d, line);
+    }
+    let expected: Vec<String> =
+        battery.iter().map(|line| handle_request(&service, &d, line).to_compact()).collect();
+
+    let mut backends: Vec<Option<RpcServer>> = (0..3)
+        .map(|_| {
+            Some(
+                RpcServer::builder()
+                    .defaults(d.clone())
+                    .start("127.0.0.1:0", service.clone())
+                    .expect("bind backend"),
+            )
+        })
+        .collect();
+    let addrs: Vec<String> = backends
+        .iter()
+        .map(|s| s.as_ref().expect("live backend").local_addr().to_string())
+        .collect();
+    let router = FleetRouter::start("127.0.0.1:0", &addrs, FleetConfig::default())
+        .expect("bind router");
+
+    // Byte-identity across the whole battery: sessions, in-band errors,
+    // non-JSON — the router is a transparent proxy for all of them.
+    for (line, want) in battery.iter().zip(&expected) {
+        let got = ask(router.local_addr(), line);
+        assert_eq!(&got, want, "routed reply diverged for {line}");
+    }
+    // Every forward landed on the instance the ring names as primary:
+    // per-instance `routed` counters must match a local replay of the
+    // placement (distinct routing keys in the battery, one per key —
+    // repeated keys route to the same place).
+    let stats = ask(router.local_addr(), "{\"op\":\"stats\"}");
+    for (idx, addr) in router.ring().instances().iter().enumerate() {
+        let want = battery
+            .iter()
+            .filter(|line| router.ring().primary(&routing_key(line)) == Some(idx))
+            .count() as u64;
+        let row = instance_row(&stats, addr);
+        assert_eq!(row_num(&row, "routed"), want, "placement drifted for {addr}");
+        assert_eq!(row.get("up").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(row_num(&row, "down_marks"), 0);
+    }
+
+    // Kill the primary for the first session key. The ring promises the
+    // rehash is a pop, never a reshuffle: the reply must now come from
+    // the key's *second* candidate, and the bytes must not change.
+    let line = battery[0];
+    let candidates = router.ring().candidates(&routing_key(line));
+    let primary_addr = router.ring().instances()[candidates[0]].clone();
+    let successor_addr = router.ring().instances()[candidates[1]].clone();
+    let victim = addrs.iter().position(|a| *a == primary_addr).expect("primary is a backend");
+    backends[victim].take().expect("primary still live").shutdown();
+
+    let before = instance_row(&ask(router.local_addr(), "{\"op\":\"stats\"}"), &successor_addr);
+    let got = ask(router.local_addr(), line);
+    assert_eq!(got, expected[0], "kill changed reply bytes, not just the answering instance");
+    let stats = ask(router.local_addr(), "{\"op\":\"stats\"}");
+    let dead = instance_row(&stats, &primary_addr);
+    assert_eq!(dead.get("up").and_then(|v| v.as_bool()), Some(false), "victim marked down");
+    assert_eq!(row_num(&dead, "down_marks"), 1, "exactly one down transition");
+    let after = instance_row(&stats, &successor_addr);
+    assert_eq!(
+        row_num(&after, "routed"),
+        row_num(&before, "routed") + 1,
+        "the successor (and only the successor) absorbed the key"
+    );
+
+    // A second request keeps the same bytes whether the probe backoff
+    // suppresses the corpse entirely or a probe fires and fails — the
+    // instance stays down either way, and the successor keeps the key.
+    let got = ask(router.local_addr(), line);
+    assert_eq!(got, expected[0]);
+    let dead = instance_row(&ask(router.local_addr(), "{\"op\":\"stats\"}"), &primary_addr);
+    assert_eq!(
+        dead.get("up").and_then(|v| v.as_bool()),
+        Some(false),
+        "a failed probe (if any) keeps the instance down"
+    );
+
+    router.shutdown();
+    for server in backends.into_iter().flatten() {
+        server.shutdown();
+    }
+}
+
+#[test]
+fn overloaded_primary_redirects_to_a_live_replica() {
+    // One backend is a raw reactor rigged to shed (1 worker, queue of
+    // 1, a handler that sleeps), the other a real server over an empty
+    // service. The shedder must be the key's primary for the redirect
+    // to be observable, and ring placement hashes the (ephemeral)
+    // addresses — so re-draw the real backend's port until the ring
+    // cooperates. Each draw flips a fair-ish coin; 64 misses in a row
+    // is a p ~ 2^-64 event, not a flake.
+    use transfer_tuning::service::reactor::{
+        Handler, Reactor, ReactorConfig, ShedHook, ViolationHook,
+    };
+
+    let line = "{\"model\":\"ResNet18\"}";
+    let key = routing_key(line);
+    let service = ScheduleService::empty(2);
+    let d = defaults();
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let handler: Handler = Arc::new(|_line: &str| {
+        std::thread::sleep(Duration::from_millis(1_200));
+        String::from("slow")
+    });
+    let violation: ViolationHook = Arc::new(|_| String::from("violation"));
+    let shed: ShedHook = Arc::new(|depth| overloaded_json(depth).to_compact());
+    let cfg = ReactorConfig {
+        jobs: 1,
+        max_conns: 64,
+        idle_timeout: Duration::from_secs(60),
+        read_stall: Duration::from_secs(60),
+        write_stall: Duration::from_secs(60),
+        max_frame_len: 1 << 20,
+        max_queue: 1,
+    };
+    let shed_gauges = Arc::new(ServerGauges::default());
+    let shedder = Reactor::start("127.0.0.1:0", handler, violation, shed, cfg, shed_gauges.clone())
+        .expect("bind shedder");
+    let shed_addr = shedder.local_addr().to_string();
+
+    let mut drawn = None;
+    for _ in 0..64 {
+        let server = RpcServer::builder()
+            .defaults(d.clone())
+            .start("127.0.0.1:0", service.clone())
+            .expect("bind backend");
+        let ring = HashRing::new(&[shed_addr.clone(), server.local_addr().to_string()]);
+        let shed_idx =
+            ring.instances().iter().position(|a| *a == shed_addr).expect("shedder on ring");
+        if ring.primary(&key) == Some(shed_idx) {
+            drawn = Some(server);
+            break;
+        }
+        server.shutdown();
+    }
+    let backend = drawn.expect("a port draw placing the shedder primary (p ~ 1 - 2^-64)");
+    let backend_addr = backend.local_addr().to_string();
+    let router = FleetRouter::start(
+        "127.0.0.1:0",
+        &[shed_addr.clone(), backend_addr.clone()],
+        FleetConfig::default(),
+    )
+    .expect("bind router");
+
+    // Fill the shedder directly: one request in flight, one queued —
+    // the staggered start keeps the second from racing the dequeue of
+    // the first (which would shed the filler instead of our request).
+    let fillers: Vec<std::thread::JoinHandle<String>> = (0..2)
+        .map(|i| {
+            let addr = shedder.local_addr();
+            let handle = std::thread::spawn(move || ask(addr, &format!("filler-{i}")));
+            std::thread::sleep(Duration::from_millis(200));
+            handle
+        })
+        .collect();
+    wait_until("shedder queue full", || shed_gauges.queue_depth.load(Ordering::SeqCst) == 1);
+
+    // The routed request hits the (full) primary, is shed with the
+    // typed `overloaded` frame, and the router redirects to the live
+    // replica — the client sees a valid session reply, bit-equal to
+    // the direct-call oracle, and never the overloaded frame.
+    let got = ask(router.local_addr(), line);
+    assert_eq!(got, expected, "redirected reply must be the backend oracle bytes");
+    assert!(
+        shed_gauges.shed_total.load(Ordering::SeqCst) >= 1,
+        "the primary really shed the routed request"
+    );
+    let stats = ask(router.local_addr(), "{\"op\":\"stats\"}");
+    let shed_row = instance_row(&stats, &shed_addr);
+    assert_eq!(row_num(&shed_row, "redirects"), 1, "redirect accounted to the shedding instance");
+    assert_eq!(
+        shed_row.get("up").and_then(|v| v.as_bool()),
+        Some(true),
+        "overloaded is backpressure, not death — no down mark"
+    );
+    assert_eq!(row_num(&shed_row, "down_marks"), 0);
+    let backend_row = instance_row(&stats, &backend_addr);
+    assert_eq!(row_num(&backend_row, "routed"), 1, "the replica served the redirected key");
+
+    for filler in fillers {
+        let _ = filler.join().expect("filler thread");
+    }
+    router.shutdown();
+    backend.shutdown();
+    shedder.shutdown();
+}
+
+#[test]
+fn router_intercepts_admin_ops_and_refuses_backend_mutations() {
+    let service = ScheduleService::empty(2);
+    let backend = RpcServer::builder()
+        .defaults(defaults())
+        .start("127.0.0.1:0", service)
+        .expect("bind backend");
+    let router = FleetRouter::start(
+        "127.0.0.1:0",
+        &[backend.local_addr().to_string()],
+        FleetConfig::default(),
+    )
+    .expect("bind router");
+
+    // `stats` answers from the router itself: the v6 `fleet` block is
+    // the discriminator, and no backend fields leak in.
+    let stats = ask(router.local_addr(), "{\"op\":\"stats\"}");
+    let j = json::parse(&stats).expect("stats decodes");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let body = j.get("stats").expect("stats body");
+    assert_eq!(body.get("protocol").and_then(|v| v.as_f64()), Some(6.0));
+    assert!(body.get("fleet").is_some(), "fleet block present");
+    assert!(body.get("epoch").is_none(), "no backend session fields on a router");
+
+    // Mutating admin ops are refused with a pointer at `fleet sync` —
+    // a republish that lands on one replica would fork the fleet.
+    let refused = ask(router.local_addr(), "{\"op\":\"republish\",\"all\":true}");
+    let j = json::parse(&refused).expect("refusal decodes");
+    assert_eq!(
+        j.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str()),
+        Some("unknown_op")
+    );
+    assert!(refused.contains("fleet sync"), "refusal names the reconcile verb");
+
+    // `shutdown` acks on the wire and latches the router's stop flag.
+    let ack = ask(router.local_addr(), "{\"op\":\"shutdown\"}");
+    assert_eq!(ack, "{\"admin\":{\"fleet\":true,\"op\":\"shutdown\"},\"ok\":true}");
+    assert!(router.stop_requested(), "wire shutdown latches the drain flag");
+
+    router.shutdown();
+    backend.shutdown();
+}
+
+const KEY_A: u64 = 0xF1EE7A;
+const KEY_B: u64 = 0xF1EE7B;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt_fleet_sync_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Build an instance's service from whatever tunings its artifact dir
+/// holds — fixed key order, so identical dirs yield byte-identical
+/// stores (and identical epochs).
+fn service_from_dir(root: &Path) -> ScheduleService {
+    let mut art = ArtifactStore::open(root).expect("open artifact dir");
+    let mut store = ScheduleStore::new();
+    let mut models = Vec::new();
+    for (key, name, n) in [(KEY_A, "SrcA", 512u64), (KEY_B, "SrcB", 1024u64)] {
+        let g = src_graph(name, n);
+        if let Some(res) = art.load_tuning(key) {
+            store.add_tuning(&g, &res);
+        }
+        models.push(g);
+    }
+    models.push(src_graph("TargetDense", 768));
+    ScheduleService::new(store, models, 4)
+}
+
+#[test]
+fn sync_converges_divergent_instances_to_routed_bit_identity() {
+    // Two instances that tuned different sources: before a sync their
+    // replies genuinely diverge; after `sync_stores` both serve the
+    // union, and a router over the rebuilt backends returns bytes
+    // bit-identical to a single-instance service over that union — the
+    // fleet determinism invariant, end to end.
+    let prof = DeviceProfile::xeon_e5_2620();
+    let opts = tune_opts();
+    let res_a = tune_model(&src_graph("SrcA", 512), &prof, &opts);
+    let res_b = tune_model(&src_graph("SrcB", 1024), &prof, &opts);
+
+    let dirs = [tmp_dir("a"), tmp_dir("b")];
+    {
+        let mut store = ArtifactStore::open(&dirs[0]).expect("open a");
+        store.save_tuning(KEY_A, &res_a).expect("save SrcA");
+        store.flush().expect("flush a");
+        let mut store = ArtifactStore::open(&dirs[1]).expect("open b");
+        store.save_tuning(KEY_B, &res_b).expect("save SrcB");
+        store.flush().expect("flush b");
+    }
+
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    // Pre-sync: one source each, and the sources *differ* — so the
+    // TargetDense replies differ too. This is the fork `fleet sync`
+    // exists to heal (and why the router refuses per-replica
+    // republish).
+    let s1 = service_from_dir(&dirs[0]);
+    let s2 = service_from_dir(&dirs[1]);
+    handle_request(&s1, &d, line);
+    handle_request(&s2, &d, line);
+    let pre1 = handle_request(&s1, &d, line).to_compact();
+    let pre2 = handle_request(&s2, &d, line).to_compact();
+    assert_ne!(pre1, pre2, "divergent stores must be observable pre-sync");
+
+    let report = sync_stores(&dirs).expect("sync");
+    assert_eq!(report.stores, 2);
+    assert_eq!(report.pairs, 2);
+    assert_eq!(report.conflicts, 0, "disjoint keys can never conflict");
+    assert_eq!(report.rejected, 0);
+
+    // Post-sync: every dir holds the union, so rebuilt instances agree
+    // with each other AND with a service built straight from the union
+    // of tuning results — same sources, same epoch, same bytes.
+    let mut union_store = ScheduleStore::new();
+    let a_graph = src_graph("SrcA", 512);
+    let b_graph = src_graph("SrcB", 1024);
+    union_store.add_tuning(&a_graph, &res_a);
+    union_store.add_tuning(&b_graph, &res_b);
+    let union_service = ScheduleService::new(
+        union_store,
+        vec![a_graph, b_graph, src_graph("TargetDense", 768)],
+        4,
+    );
+    handle_request(&union_service, &d, line);
+    let want = handle_request(&union_service, &d, line).to_compact();
+
+    let s1 = service_from_dir(&dirs[0]);
+    let s2 = service_from_dir(&dirs[1]);
+    handle_request(&s1, &d, line);
+    handle_request(&s2, &d, line);
+    assert_eq!(handle_request(&s1, &d, line).to_compact(), want, "instance a joined the union");
+    assert_eq!(handle_request(&s2, &d, line).to_compact(), want, "instance b joined the union");
+
+    // And over the wire: whichever synced backend the ring picks, the
+    // routed bytes are the union service's bytes.
+    let b1 = RpcServer::builder().defaults(d.clone()).start("127.0.0.1:0", s1).expect("bind");
+    let b2 = RpcServer::builder().defaults(d.clone()).start("127.0.0.1:0", s2).expect("bind");
+    let router = FleetRouter::start(
+        "127.0.0.1:0",
+        &[b1.local_addr().to_string(), b2.local_addr().to_string()],
+        FleetConfig::default(),
+    )
+    .expect("bind router");
+    let got = ask(router.local_addr(), line);
+    assert_eq!(got, want, "routed post-sync reply diverged from the union oracle");
+
+    router.shutdown();
+    b1.shutdown();
+    b2.shutdown();
+    for dir in &dirs {
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

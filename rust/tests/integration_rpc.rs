@@ -248,13 +248,11 @@ fn hung_client_is_timed_out_and_does_not_block_other_clients() {
     handle_request(&service, &d, line); // warm the shared cache
     let expected = handle_request(&service, &d, line).to_compact();
 
-    let server = RpcServer::start_with_timeouts(
-        "127.0.0.1:0",
-        service,
-        d,
-        std::time::Duration::from_millis(200),
-    )
-    .expect("bind");
+    let server = RpcServer::builder()
+        .defaults(d)
+        .timeouts(std::time::Duration::from_millis(200))
+        .start("127.0.0.1:0", service)
+        .expect("bind");
     let addr = server.local_addr();
 
     // The hung client: connects, sends nothing. The server must hang
@@ -369,9 +367,11 @@ fn custom_admin_hook_sees_ops_over_the_wire() {
                 error_json(&RpcError::new("internal", "no republish --all here"))
             }
         });
-    let server =
-        RpcServer::start_with_admin("127.0.0.1:0", dense_service(), defaults(), admin)
-            .expect("bind");
+    let server = RpcServer::builder()
+        .defaults(defaults())
+        .admin(admin)
+        .start("127.0.0.1:0", dense_service())
+        .expect("bind");
     let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
     let ack = roundtrip(&mut stream, "{\"op\":\"shutdown\"}");
     assert_eq!(ack, "{\"admin\":{\"op\":\"shutdown\"},\"ok\":true}");
@@ -478,8 +478,11 @@ fn reactor_replies_are_byte_identical_to_a_reference_pool_server() {
     // Plain `default_admin` on the reactor side too: the reference
     // server's oracle answers `stats` from the gauge-free encoder, so
     // the reactor must as well for the bytes to be comparable.
-    let server =
-        RpcServer::start_with_admin("127.0.0.1:0", service, d, default_admin()).expect("bind");
+    let server = RpcServer::builder()
+        .defaults(d)
+        .admin(default_admin())
+        .start("127.0.0.1:0", service)
+        .expect("bind");
 
     let mut reactor_conn = TcpStream::connect(server.local_addr()).expect("connect reactor");
     let mut pool_conn = TcpStream::connect(pool_addr).expect("connect reference");
@@ -551,15 +554,12 @@ fn slowloris_mid_frame_stall_is_evicted_and_pins_no_worker() {
         idle_timeout: Duration::from_secs(60), // isolate the mid-frame path
         ..ServerConfig::default()
     };
-    let server = RpcServer::start_with_config(
-        "127.0.0.1:0",
-        service,
-        d,
-        default_admin(),
-        config,
-        Arc::new(ServerGauges::default()),
-    )
-    .expect("bind");
+    let server = RpcServer::builder()
+        .defaults(d)
+        .admin(default_admin())
+        .config(config)
+        .start("127.0.0.1:0", service)
+        .expect("bind");
     let addr = server.local_addr();
     let gauges = server.gauges();
 
@@ -609,15 +609,12 @@ fn client_that_never_reads_its_replies_is_evicted_by_the_write_stall() {
         read_stall: Duration::from_secs(60),
         ..ServerConfig::default()
     };
-    let server = RpcServer::start_with_config(
-        "127.0.0.1:0",
-        service,
-        d,
-        default_admin(),
-        config,
-        Arc::new(ServerGauges::default()),
-    )
-    .expect("bind");
+    let server = RpcServer::builder()
+        .defaults(d)
+        .admin(default_admin())
+        .config(config)
+        .start("127.0.0.1:0", service)
+        .expect("bind");
     let addr = server.local_addr();
     let gauges = server.gauges();
 
@@ -670,15 +667,12 @@ fn idle_connections_are_reaped_and_the_gauges_track_them() {
         read_stall: Duration::from_secs(60),
         ..ServerConfig::default()
     };
-    let server = RpcServer::start_with_config(
-        "127.0.0.1:0",
-        service,
-        d,
-        default_admin(),
-        config,
-        Arc::new(ServerGauges::default()),
-    )
-    .expect("bind");
+    let server = RpcServer::builder()
+        .defaults(d)
+        .admin(default_admin())
+        .config(config)
+        .start("127.0.0.1:0", service)
+        .expect("bind");
     let addr = server.local_addr();
     let gauges = server.gauges();
 
@@ -791,4 +785,47 @@ fn full_queue_sheds_with_typed_overloaded_replies_and_stays_live() {
     assert_eq!(roundtrip(&mut fresh, "after"), "served:after", "server fully live after shedding");
     drop(fresh);
     reactor.shutdown();
+}
+
+#[test]
+#[allow(deprecated)] // wrapper coverage: the pre-builder constructors must keep working verbatim
+fn deprecated_constructors_are_thin_builder_wrappers() {
+    // The three legacy constructors are one-line delegations to
+    // `RpcServer::builder()`. They stay deprecated-but-working so
+    // downstream callers migrate on their own schedule; this test is
+    // the only in-repo caller left, and it pins that each wrapper
+    // still produces a server whose replies match the oracle.
+    let service = dense_service();
+    let d = defaults();
+    let line = "{\"model\":\"TargetDense\"}";
+    handle_request(&service, &d, line); // warm the shared cache
+    let expected = handle_request(&service, &d, line).to_compact();
+
+    let with_timeouts = RpcServer::start_with_timeouts(
+        "127.0.0.1:0",
+        service.clone(),
+        d.clone(),
+        Duration::from_secs(30),
+    )
+    .expect("bind");
+    let with_admin =
+        RpcServer::start_with_admin("127.0.0.1:0", service.clone(), d.clone(), default_admin())
+            .expect("bind");
+    let with_config = RpcServer::start_with_config(
+        "127.0.0.1:0",
+        service,
+        d,
+        default_admin(),
+        ServerConfig::default(),
+        Arc::new(ServerGauges::default()),
+    )
+    .expect("bind");
+
+    for server in [&with_timeouts, &with_admin, &with_config] {
+        let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+        assert_eq!(roundtrip(&mut stream, line), expected, "wrapper serves oracle bytes");
+    }
+    with_timeouts.shutdown();
+    with_admin.shutdown();
+    with_config.shutdown();
 }

@@ -1,0 +1,112 @@
+//! Property pins for the fleet router's *public* placement surface
+//! (`service::fleet`): the consistent-hash ring and the routing key.
+//!
+//! The live-router behaviors (transparent forwarding, redirect, rehash
+//! under a real kill) live in `rust/tests/fleet.rs`; this file pins the
+//! pure placement math those tests lean on, through the public API, so
+//! a ring refactor that silently changes placement fails here first.
+
+use transfer_tuning::service::fleet::{routing_key, HashRing, VNODES_PER_INSTANCE};
+
+fn addrs(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("10.0.0.{i}:9{i:03}")).collect()
+}
+
+fn keys() -> Vec<String> {
+    let mut ks = Vec::new();
+    for m in 0..24 {
+        for d in ["", "xeon-e5-2620", "cortex-a72"] {
+            ks.push(format!("Model{m}\u{1f}{d}"));
+        }
+    }
+    ks
+}
+
+#[test]
+fn ring_placement_is_instance_order_independent() {
+    let mut shuffled = addrs(7);
+    // A deterministic scramble (plus a duplicate): the ring must sort
+    // and dedup, so the --instance flag order can never move a key.
+    shuffled.reverse();
+    shuffled.swap(1, 5);
+    shuffled.push(shuffled[3].clone());
+    let a = HashRing::new(&addrs(7));
+    let b = HashRing::new(&shuffled);
+    assert_eq!(a.instances(), b.instances(), "ring order is the sorted set");
+    assert_eq!(a.len(), 7);
+    assert_eq!(a.points(), 7 * VNODES_PER_INSTANCE, "duplicates add no points");
+    assert_eq!(b.points(), a.points());
+    for k in keys() {
+        assert_eq!(a.candidates(&k), b.candidates(&k), "placement moved for key {k:?}");
+    }
+}
+
+#[test]
+fn candidates_walk_every_instance_exactly_once() {
+    let ring = HashRing::new(&addrs(5));
+    for k in keys() {
+        let mut order = ring.candidates(&k);
+        assert_eq!(order.first().copied(), ring.primary(&k));
+        order.sort_unstable();
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "failover order is a permutation");
+    }
+}
+
+#[test]
+fn removing_an_instance_pops_it_from_every_failover_order() {
+    // The consistent-hashing contract the kill test rides: rebuilding
+    // the ring without instance X yields, for every key, the old
+    // failover order with X deleted — a pop, never a reshuffle.
+    let all = addrs(6);
+    let full = HashRing::new(&all);
+    for gone in 0..all.len() {
+        let rest: Vec<String> = all.iter().filter(|a| a.as_str() != all[gone]).cloned().collect();
+        let reduced = HashRing::new(&rest);
+        for k in keys() {
+            let expect: Vec<&str> = full
+                .candidates(&k)
+                .into_iter()
+                .map(|i| full.instances()[i].as_str())
+                .filter(|a| *a != all[gone])
+                .collect();
+            let got: Vec<&str> = reduced
+                .candidates(&k)
+                .into_iter()
+                .map(|i| reduced.instances()[i].as_str())
+                .collect();
+            assert_eq!(got, expect, "removing {} reshuffled key {k:?}", all[gone]);
+        }
+    }
+}
+
+#[test]
+fn empty_ring_routes_nothing() {
+    let ring = HashRing::new(&[]);
+    assert!(ring.is_empty());
+    assert_eq!(ring.points(), 0);
+    assert_eq!(ring.candidates("anything"), Vec::<usize>::new());
+    assert_eq!(ring.primary("anything"), None);
+}
+
+#[test]
+fn routing_key_depends_only_on_model_and_device() {
+    // Same (model, device) ⇒ same key, whatever else rides in the
+    // payload — budget/seed must never move a session between homes.
+    let a = routing_key(r#"{"model":"ResNet18","budget_s":0}"#);
+    let b = routing_key(r#"{"model":"ResNet18","budget_s":120,"seed":7}"#);
+    assert_eq!(a, b);
+    assert_eq!(a, "ResNet18\u{1f}");
+    assert_eq!(
+        routing_key(r#"{"model":"BERT","device":"cortex-a72"}"#),
+        "BERT\u{1f}cortex-a72"
+    );
+    // Injective across the pair: the unit separator keeps (ab, c)
+    // distinct from (a, bc).
+    assert_ne!(
+        routing_key(r#"{"model":"ab","device":"c"}"#),
+        routing_key(r#"{"model":"a","device":"bc"}"#)
+    );
+    // Non-JSON keys as itself: still deterministic, any backend
+    // answers it with the same bad_json error.
+    assert_eq!(routing_key("not json"), "not json");
+}

@@ -292,6 +292,7 @@ fn prop_speculative_sessions_bit_identical_across_global_jobs() {
     for jobs in JOBS {
         set_global_jobs(jobs);
         let (service, req) = session_service();
+        #[allow(deprecated)] // wrapper coverage: with_speculative_keep must match ServiceOptions
         let service = service.with_speculative_keep(0.5);
         let cold = service.open_session(&req).expect("cold speculative session");
         let warm = service.open_session(&req).expect("warm speculative session");

@@ -8,9 +8,10 @@
 use std::io::Cursor;
 use transfer_tuning::device::DeviceProfile;
 use transfer_tuning::service::rpc::{
-    admin_ack_json, encode_frame, error_json, overloaded_json, parse_any_request, parse_request,
-    parse_response, read_frame, AdminRequest, FrameError, Request, RpcDefaults, RpcError,
-    RpcResponse, ServerStats, MAX_FRAME_LEN, OVERLOADED_RETRY_AFTER_MS, WIRE_PROTOCOL_VERSION,
+    adaptive_retry_after_ms, admin_ack_json, encode_frame, error_json, overloaded_json,
+    overloaded_json_with_hint, parse_any_request, parse_request, parse_response, read_frame,
+    AdminRequest, FrameError, Request, RpcDefaults, RpcError, RpcResponse, ServerStats,
+    MAX_FRAME_LEN, MAX_RETRY_AFTER_MS, OVERLOADED_RETRY_AFTER_MS, WIRE_PROTOCOL_VERSION,
 };
 use transfer_tuning::util::rng::Rng;
 
@@ -158,13 +159,16 @@ fn bad_requests_map_to_structured_errors() {
 
 #[test]
 fn admin_ops_parse_and_sessions_stay_sessions() {
-    // Wire schema v5: the `op` field dispatches admin ops; `republish`
+    // Wire schema v6: the `op` field dispatches admin ops; `republish`
     // additionally accepts `"all":true` in place of `model`; the
     // `stats` reply's `server:{}` block carries per-kind eviction
-    // counters (v4) plus `shed_total` and `quarantined` (v5), and the
+    // counters (v4) plus `shed_total` and `quarantined` (v5), the
     // `overloaded` error answers requests shed by `--max-queue`
-    // (exercised in `integration_rpc.rs`).
-    assert_eq!(WIRE_PROTOCOL_VERSION, 5, "update the admin tests with the protocol");
+    // (exercised in `integration_rpc.rs`), and v6 adds the fleet
+    // router: a `fleet:{}` stats block, the `fleet_unavailable` error
+    // code, and an adaptive `retry_after_ms` hint (pinned below and in
+    // `service/fleet.rs`).
+    assert_eq!(WIRE_PROTOCOL_VERSION, 6, "update the admin tests with the protocol");
     let d = defaults();
     let admin = |line: &str| match parse_any_request(line, &d).unwrap() {
         Request::Admin(a) => a,
@@ -284,6 +288,60 @@ fn overloaded_frame_shape_is_pinned_and_client_decodable() {
     let j = transfer_tuning::util::json::parse(&encoded).unwrap();
     let hint = j.get("error").unwrap().get("retry_after_ms").unwrap().as_f64().unwrap();
     assert_eq!(hint as u64, OVERLOADED_RETRY_AFTER_MS);
+}
+
+#[test]
+fn adaptive_retry_hint_is_deterministic_and_clamped() {
+    // Wire v6: `retry_after_ms` is computed from the measured drain
+    // rate — mean handler time (busy_micros / jobs_done) times the
+    // queue depth, divided across the workers — clamped to the fixed
+    // v5 hint as floor and MAX_RETRY_AFTER_MS as ceiling. Pure
+    // integer math on gauge snapshots: same inputs, same hint, on
+    // every server and on every platform.
+    // Cold start: no completed jobs yet, no drain rate to measure —
+    // the hint degrades to the fixed v5 constant, whatever the depth.
+    assert_eq!(adaptive_retry_after_ms(0, 0, 0, 4), OVERLOADED_RETRY_AFTER_MS);
+    assert_eq!(adaptive_retry_after_ms(10_000, 0, 999_999, 1), OVERLOADED_RETRY_AFTER_MS);
+    // Warm math: 100 jobs in 50s of busy time = 500ms mean; a queue of
+    // 8 across 2 workers drains in 4 mean handler times = 2000ms.
+    assert_eq!(adaptive_retry_after_ms(8, 100, 50_000_000, 2), 2_000);
+    // Fast handlers floor at the v5 constant (drain beats 250ms)...
+    assert_eq!(adaptive_retry_after_ms(1, 1_000, 1_000_000, 4), OVERLOADED_RETRY_AFTER_MS);
+    // ...and pathological queues cap at the ceiling, so a client never
+    // gets told to go away for more than 10s.
+    assert_eq!(adaptive_retry_after_ms(1_000_000, 1, 5_000_000, 1), MAX_RETRY_AFTER_MS);
+    // Zero workers never divides by zero (degenerate config, not UB).
+    assert_eq!(adaptive_retry_after_ms(4, 10, 10_000_000, 0), 4_000);
+
+    // The hinted frame is the v5 overloaded frame with the hint
+    // substituted — byte-pinned, and `overloaded_json` itself still
+    // emits the fixed constant (pre-v6 pins stay valid verbatim).
+    let hinted = overloaded_json_with_hint(3, 1_234).to_compact();
+    assert_eq!(
+        hinted,
+        "{\"error\":{\"code\":\"overloaded\",\"message\":\"server overloaded: \
+         worker queue full (3 queued); retry later\",\"retry_after_ms\":1234},\"ok\":false}"
+    );
+    assert_eq!(
+        overloaded_json(3).to_compact(),
+        overloaded_json_with_hint(3, OVERLOADED_RETRY_AFTER_MS).to_compact(),
+        "the fixed-hint frame is the adaptive frame at the floor"
+    );
+}
+
+#[test]
+fn fleet_unavailable_error_round_trips_like_any_typed_error() {
+    // Wire v6: the router's every-replica-down reply is an ordinary
+    // typed error — old clients decode it with no special casing.
+    let err = RpcError::new("fleet_unavailable", "all 3 instances down or overloaded");
+    let encoded = error_json(&err).to_compact();
+    match parse_response(&encoded).unwrap() {
+        RpcResponse::Error(back) => {
+            assert_eq!(back.code, "fleet_unavailable");
+            assert_eq!(back, err);
+        }
+        other => panic!("expected error response, got {other:?}"),
+    }
 }
 
 #[test]
